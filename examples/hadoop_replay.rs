@@ -1,0 +1,58 @@
+//! Replay the Facebook Hadoop 2010 workload (paper §7.8, Fig. 12).
+//!
+//! Uses the real SWIM TSV when `traces/FB-2010_samples_24_times_1hr_0.tsv`
+//! is present, otherwise the synthetic stand-in matched to the published
+//! statistics (24 443 jobs, mean 76.1 GiB, max 85.2 TiB — DESIGN.md §4).
+//! Service speed is normalized for load 0.9 exactly as in the paper,
+//! then MST is reported against the exact-information SRPT optimum for
+//! a sweep of error levels.
+//!
+//! ```sh
+//! cargo run --release --example hadoop_replay
+//! ```
+
+use psbs::figures::{exact_copy, run_mst};
+use psbs::workload::traces;
+
+fn main() {
+    let path = "traces/FB-2010_samples_24_times_1hr_0.tsv";
+    let recs = match traces::load_file(path, "swim") {
+        Ok(r) if !r.is_empty() => {
+            println!("replaying real trace {path} ({} jobs)", r.len());
+            r
+        }
+        _ => {
+            let r = traces::synth_trace(&traces::FACEBOOK, 42);
+            println!(
+                "real trace not found; using the synthetic stand-in ({} jobs, mean {:.1} GiB)",
+                r.len(),
+                r.iter().map(|x| x.bytes).sum::<f64>() / r.len() as f64 / traces::GIB
+            );
+            r
+        }
+    };
+
+    // Job size CCDF tail span (Fig. 11's headline feature).
+    let ccdf = traces::ccdf(&recs, 20);
+    let (max_over_mean, _) = ccdf.last().unwrap();
+    println!("size tail spans {:.1} decades above the mean\n", max_over_mean.log10());
+
+    println!(
+        "{:<6} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "sigma", "psbs", "fspe", "srpte", "ps", "las"
+    );
+    for sigma in [0.125, 0.25, 0.5, 1.0, 2.0, 4.0] {
+        let jobs = traces::to_jobs(&recs, 0.9, sigma, 7);
+        let opt = run_mst("srpt", &exact_copy(&jobs));
+        let row: Vec<f64> = ["psbs", "fspe", "srpte", "ps", "las"]
+            .iter()
+            .map(|p| run_mst(p, &jobs) / opt)
+            .collect();
+        println!(
+            "{:<6} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            sigma, row[0], row[1], row[2], row[3], row[4]
+        );
+    }
+    println!("\n(values are MST / optimal; the paper's Fig. 12 shape: PSBS stays");
+    println!(" near 1 and below PS for sigma < 2, SRPTE/FSPE degrade with error)");
+}

@@ -1,0 +1,74 @@
+//! The "practical" deployment shape (paper §8): PSBS running *online*
+//! inside a leader thread, fed by concurrent clients over channels,
+//! measuring real wall-clock latency and throughput.
+//!
+//! Three client threads submit jobs with noisy size estimates and
+//! different weights; the service schedules them with PSBS over a
+//! simulated machine and reports per-class latency.
+//!
+//! ```sh
+//! cargo run --release --example online_service
+//! ```
+
+use psbs::coordinator::{Service, ServiceConfig};
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let speed = 50_000.0; // service units per second
+    let svc = Arc::new(Service::start(ServiceConfig { policy: "psbs".into(), speed }));
+
+    // Three tenants: weights 4 (interactive), 2 (batch), 1 (background).
+    let tenants = [("interactive", 4.0, 60), ("batch", 2.0, 60), ("background", 1.0, 60)];
+    let mut handles = Vec::new();
+    for (ti, &(name, weight, njobs)) in tenants.iter().enumerate() {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = psbs::util::rng::Rng::new(100 + ti as u64);
+            let sizes = Weibull::with_mean(0.5, speed * 0.01); // ~10 ms mean
+            let err = LogNormal::error_model(0.5);
+            let mut rxs = Vec::new();
+            for _ in 0..njobs {
+                let size = sizes.sample(&mut rng).max(1.0);
+                let est = (size * err.sample(&mut rng)).max(1.0);
+                rxs.push(svc.submit(size, est, weight));
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let mut lat = Vec::new();
+            let mut slow = Vec::new();
+            for rx in rxs {
+                let info = rx.recv_timeout(Duration::from_secs(60)).expect("completion");
+                lat.push(info.latency.as_secs_f64() * 1e3);
+                slow.push(info.slowdown);
+            }
+            (name, weight, lat, slow)
+        }));
+    }
+
+    println!(
+        "{:<14} {:>7} {:>12} {:>12} {:>12}",
+        "tenant", "weight", "mean ms", "p99 ms", "mean slowdn"
+    );
+    for h in handles {
+        let (name, weight, lat, slow) = h.join().unwrap();
+        println!(
+            "{:<14} {:>7} {:>12.2} {:>12.2} {:>12.2}",
+            name,
+            weight,
+            psbs::stats::mean(&lat),
+            psbs::stats::quantile(&lat, 0.99),
+            psbs::stats::mean(&slow),
+        );
+    }
+
+    let svc = Arc::try_unwrap(svc).ok().expect("all clients joined");
+    let stats = svc.shutdown();
+    println!(
+        "\nservice: {} jobs completed in {:.2} s  ({:.1} jobs/s, mean latency {:.2} ms)",
+        stats.completed,
+        stats.wall_s,
+        stats.throughput(),
+        stats.mean_latency_s * 1e3
+    );
+}

@@ -1,0 +1,7 @@
+"""Build-time Python for the PSBS reproduction.
+
+This package exists only on the compile path: :mod:`compile.aot` lowers
+the Layer-2 JAX graphs (which call the Layer-1 Pallas kernels) to HLO
+text artifacts that the rust coordinator loads via PJRT.  Nothing here
+is imported at runtime.
+"""

@@ -1,0 +1,84 @@
+"""AOT-lower the Layer-2 graphs to HLO text for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces:
+    artifacts/workload.hlo.txt    (workload_graph)
+    artifacts/analytics.hlo.txt   (analytics_graph)
+    artifacts/manifest.txt        (batch size + shapes, parsed by rust)
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import binning, ecdf
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_workload(batch: int) -> str:
+    lowered = jax.jit(model.workload_graph).lower(*model.workload_specs(batch))
+    return to_hlo_text(lowered)
+
+
+def lower_analytics(batch: int) -> str:
+    lowered = jax.jit(model.analytics_graph).lower(*model.analytics_specs(batch))
+    return to_hlo_text(lowered)
+
+
+def write_manifest(path: str, batch: int) -> None:
+    """Key=value manifest the rust runtime parses at load time."""
+    lines = [
+        f"batch={batch}",
+        f"num_params={model.NUM_PARAMS}",
+        f"num_bins={binning.NUM_BINS}",
+        f"num_thresholds={ecdf.NUM_THRESHOLDS}",
+        "workload=workload.hlo.txt",
+        "analytics=analytics.hlo.txt",
+    ]
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="directory for the HLO artifacts")
+    parser.add_argument("--batch", type=int, default=model.BATCH,
+                        help="AOT batch size (jobs per execution)")
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in (
+        ("workload.hlo.txt", lower_workload(args.batch)),
+        ("analytics.hlo.txt", lower_analytics(args.batch)),
+    ):
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+    write_manifest(os.path.join(args.out_dir, "manifest.txt"), args.batch)
+    print(f"wrote manifest to {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the PSBS evaluation pipeline.
+
+Every kernel here is lowered with ``interpret=True``: the rust runtime
+executes the resulting HLO on the CPU PJRT client, which cannot run
+Mosaic custom-calls.  Real-TPU considerations (VMEM tiling, MXU-shaped
+one-hot matmuls) are documented per kernel and in DESIGN.md
+§Hardware-Adaptation.
+
+Kernels:
+  - :mod:`weibull`    — inverse-CDF Weibull sampling (job sizes, gaps)
+  - :mod:`lognormal`  — Box-Muller + log-normal error multiplier
+  - :mod:`binning`    — fused slowdown + equal-count class aggregation
+  - :mod:`ecdf`       — slowdown ECDF threshold counts
+  - :mod:`ref`        — pure-jnp oracle used by the pytest/hypothesis suite
+"""
+
+from . import binning, ecdf, lognormal, ref, weibull  # noqa: F401
+
+__all__ = ["binning", "ecdf", "lognormal", "ref", "weibull"]

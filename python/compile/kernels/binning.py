@@ -1,0 +1,113 @@
+"""Fused slowdown + conditional-slowdown class aggregation kernel.
+
+Fig. 7 of the paper plots *mean conditional slowdown*: jobs are sorted
+by size and binned into equal-count classes; the figure shows, per
+class, mean slowdown (sojourn / size).  Over a full sweep this is the
+evaluation pipeline's hot loop — hundreds of runs x 10^4..10^5 jobs.
+
+The rust coordinator assigns each job its class index (equal-count
+binning needs a global sort, which rust does once per run); the kernel
+then fuses, per tile of jobs:
+
+    slowdown_j = sojourn_j / size_j            (masked)
+    sums[c]   += sum_j slowdown_j * [idx_j == c]
+    counts[c] += sum_j mask_j     * [idx_j == c]
+
+**TPU mapping** (DESIGN.md §Hardware-Adaptation): on a GPU this
+segmented reduction would be scatter-adds in shared memory; TPUs have
+no efficient hot-path scatter, so the kernel materializes the per-tile
+one-hot membership matrix ``(BLOCK x NUM_BINS)`` and reduces it with a
+``(1 x BLOCK) . (BLOCK x NUM_BINS)`` product — MXU-shaped work with
+``NUM_BINS = 128`` matching the lane width.  The two 128-wide
+accumulators live in the output block, which is grid-invariant (index
+map pins it to block 0), so it stays resident in VMEM across all grid
+steps.  Per-step VMEM: 4 input tiles + one-hot (BLOCK*128*4 B = 512 KiB)
++ 2 accumulators — ~0.6 MiB, comfortably double-bufferable.
+
+Out-of-range indices (the rust side tags padded jobs with
+``idx = NUM_BINS``) fall outside the iota range and contribute nothing.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Binning materializes a (BLOCK x NUM_BINS) one-hot per step; keep the
+# tile at 1024 x 128 x 4 B = 512 KiB so step working set stays L2-cache
+# resident on CPU (and ~0.6 MiB VMEM on TPU) — larger tiles measured
+# slower (EXPERIMENTS.md §Perf).
+BLOCK = 1024
+
+# Number of size classes. The paper uses 100; we allocate 128 (one MXU
+# lane tile) and the rust side uses the first 100, keeping the rest 0.
+NUM_BINS = 128
+
+# Guard against division by zero for padded entries (size 0).
+TINY = 1e-30
+
+
+def _binning_kernel(soj_ref, size_ref, mask_ref, idx_ref,
+                    slow_ref, sums_ref, counts_ref):
+    step = pl.program_id(0)
+    mask = mask_ref[...]
+    size = jnp.maximum(size_ref[...], TINY)
+    slow = soj_ref[...] / size * mask
+    slow_ref[...] = slow
+
+    # (BLOCK x NUM_BINS) one-hot membership, masked.
+    classes = jax.lax.iota(jnp.int32, NUM_BINS)
+    onehot = jnp.where(idx_ref[...][:, None] == classes[None, :],
+                       mask[:, None], 0.0)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    # Segmented reduction as an MXU-shaped vector-matrix product.
+    sums_ref[...] += jnp.dot(slow, onehot,
+                             preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def slowdown_bins(sojourns, sizes, mask, bin_idx, *, block=BLOCK):
+    """Per-job slowdowns plus per-class slowdown sums and counts.
+
+    Args:
+      sojourns: f32[N] per-job sojourn times.
+      sizes:    f32[N] per-job true sizes.
+      mask:     f32[N] 1.0 for valid jobs, 0.0 for padding.
+      bin_idx:  i32[N] size-class index in [0, NUM_BINS); padded jobs
+                use NUM_BINS (contributes to nothing).
+      block:    jobs per grid step; N % block == 0.
+
+    Returns:
+      (slowdowns f32[N], bin_sums f32[NUM_BINS], bin_counts f32[NUM_BINS]).
+    """
+    n = sojourns.shape[0]
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    return pl.pallas_call(
+        _binning_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((NUM_BINS,), lambda i: (0,)),
+            pl.BlockSpec((NUM_BINS,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), sojourns.dtype),
+            jax.ShapeDtypeStruct((NUM_BINS,), jnp.float32),
+            jax.ShapeDtypeStruct((NUM_BINS,), jnp.float32),
+        ],
+        interpret=True,
+    )(sojourns, sizes, mask, bin_idx)

@@ -1,0 +1,75 @@
+"""Slowdown ECDF threshold counts as a Pallas kernel.
+
+Figs. 4 and 8 of the paper plot the empirical CDF of per-job slowdown
+(including a zoom on the worst 10%).  The kernel counts, for a fixed
+grid of K thresholds, how many valid jobs have ``slowdown <= t_k``:
+
+    counts[k] = sum_j mask_j * [slow_j <= t_k]
+
+computed per tile as a masked ``(1 x BLOCK) . (BLOCK x K)`` reduction
+over the comparison matrix — the same MXU-friendly recast of a
+histogram as the binning kernel (no scatter on TPU).  ``K = 128``
+matches the lane width; the threshold vector and the accumulator are
+grid-invariant blocks resident in VMEM.
+
+The thresholds are a runtime input: the rust side passes a log-spaced
+grid (Fig. 8 spans slowdown 1 .. >100) and can re-execute the same
+artifact with any other grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Same tile-size reasoning as binning.py: (BLOCK x K) comparison matrix
+# per step, kept at 512 KiB.
+BLOCK = 1024
+
+# Number of ECDF thresholds (one lane tile).
+NUM_THRESHOLDS = 128
+
+
+def _ecdf_kernel(slow_ref, mask_ref, thr_ref, counts_ref):
+    step = pl.program_id(0)
+    cmp = (slow_ref[...][:, None] <= thr_ref[...][None, :]).astype(jnp.float32)
+
+    @pl.when(step == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    counts_ref[...] += jnp.dot(mask_ref[...], cmp,
+                               preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ecdf_counts(slowdowns, mask, thresholds, *, block=BLOCK):
+    """Count valid jobs with slowdown <= each threshold.
+
+    Args:
+      slowdowns:  f32[N] per-job slowdowns (0 for padding; masked out).
+      mask:       f32[N] validity mask.
+      thresholds: f32[NUM_THRESHOLDS] ECDF evaluation points.
+      block:      jobs per grid step; N % block == 0.
+
+    Returns:
+      f32[NUM_THRESHOLDS] counts.
+    """
+    n = slowdowns.shape[0]
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    if thresholds.shape != (NUM_THRESHOLDS,):
+        raise ValueError(f"thresholds must be ({NUM_THRESHOLDS},)")
+    return pl.pallas_call(
+        _ecdf_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((NUM_THRESHOLDS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((NUM_THRESHOLDS,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((NUM_THRESHOLDS,), jnp.float32),
+        interpret=True,
+    )(slowdowns, mask, thresholds)

@@ -1,0 +1,63 @@
+"""Inverse-CDF Pareto sampling as a Pallas kernel (paper Fig. 10).
+
+The paper's §7.7 "Pareto Job Size Distribution" experiments use
+Pareto(x_m, alpha) with alpha in {1, 2}.  Same AOT strategy as the
+Weibull kernel: uniforms come from the rust coordinator, distribution
+parameters arrive at runtime, and the transform
+
+    s = x_m / (1 - u) ** (1 / alpha)
+
+runs inside the compiled artifact.  Parameter-slot reuse (see
+model.PARAMS_LAYOUT): ``params[0]`` is alpha, ``params[1]`` is x_m —
+the same slots the Weibull kernel reads as (shape, scale), selected by
+``params[3]`` in :func:`compile.model.workload_graph`.
+
+TPU notes: elementwise VPU work, identical tiling to the Weibull
+kernel — ``(BLOCK,)`` chunks, 8 KiB VMEM per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .weibull import BLOCK, EPS
+
+
+def _pareto_kernel(u_ref, params_ref, out_ref):
+    """One grid step: out = xm * (1 - u) ** (-1/alpha)."""
+    alpha = params_ref[0]
+    xm = params_ref[1]
+    u = jnp.clip(u_ref[...], EPS, 1.0 - EPS)
+    # (1-u)^(-1/alpha) = exp(-log1p(-u)/alpha); log1p(-u) < 0.
+    out_ref[...] = xm * jnp.exp(-jnp.log1p(-u) / alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pareto_icdf(u, params, *, block=BLOCK):
+    """Map uniforms ``u`` to Pareto(alpha, x_m) samples.
+
+    Args:
+      u: f32[N] uniforms in (0, 1); N must be a multiple of ``block``.
+      params: f32[PARAMS] runtime parameters; ``params[0]`` = alpha,
+        ``params[1]`` = x_m.
+      block: element block per grid step.
+
+    Returns:
+      f32[N] samples (>= x_m).
+    """
+    n = u.shape[0]
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    return pl.pallas_call(
+        _pareto_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(params.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), u.dtype),
+        interpret=True,
+    )(u, params)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for every Pallas kernel.
+
+These are the ground-truth implementations the pytest/hypothesis suite
+compares the kernels against (``assert_allclose``).  They use plain
+vectorized jnp ops — no pallas, no tiling — so any agreement between a
+kernel and its oracle validates the kernel's block decomposition and
+accumulation logic, not just the math.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from .binning import NUM_BINS, TINY
+from .ecdf import NUM_THRESHOLDS
+from .weibull import EPS
+
+TWO_PI = 2.0 * math.pi
+
+
+def weibull_icdf(u, params):
+    """Oracle for :func:`kernels.weibull.weibull_icdf`."""
+    shape, scale = params[0], params[1]
+    u = jnp.clip(u, EPS, 1.0 - EPS)
+    return scale * jnp.exp(jnp.log(-jnp.log1p(-u)) / shape)
+
+
+def pareto_icdf(u, params):
+    """Oracle for :func:`kernels.pareto.pareto_icdf`."""
+    alpha, xm = params[0], params[1]
+    u = jnp.clip(u, EPS, 1.0 - EPS)
+    return xm * jnp.exp(-jnp.log1p(-u) / alpha)
+
+
+def lognormal_mult(u1, u2, params):
+    """Oracle for :func:`kernels.lognormal.lognormal_mult`."""
+    sigma = params[2]
+    u1 = jnp.clip(u1, EPS, 1.0 - EPS)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(TWO_PI * u2)
+    return jnp.exp(sigma * z)
+
+
+def slowdown_bins(sojourns, sizes, mask, bin_idx):
+    """Oracle for :func:`kernels.binning.slowdown_bins`."""
+    slow = sojourns / jnp.maximum(sizes, TINY) * mask
+    classes = jnp.arange(NUM_BINS, dtype=bin_idx.dtype)
+    onehot = jnp.where(bin_idx[:, None] == classes[None, :],
+                       mask[:, None], 0.0)
+    sums = jnp.einsum("n,nc->c", slow, onehot)
+    counts = jnp.sum(onehot, axis=0)
+    return slow, sums, counts
+
+
+def ecdf_counts(slowdowns, mask, thresholds):
+    """Oracle for :func:`kernels.ecdf.ecdf_counts`."""
+    assert thresholds.shape == (NUM_THRESHOLDS,)
+    cmp = (slowdowns[:, None] <= thresholds[None, :]).astype(jnp.float32)
+    return jnp.einsum("n,nk->k", mask, cmp)

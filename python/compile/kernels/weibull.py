@@ -1,0 +1,75 @@
+"""Inverse-CDF Weibull sampling as a Pallas kernel.
+
+The synthetic workloads of the paper (Table 1) draw job sizes and
+inter-arrival gaps from Weibull distributions whose ``shape`` parameter
+interpolates between heavy-tailed (shape < 1), exponential (shape = 1)
+and light-tailed (shape > 1) regimes.  The rust coordinator supplies a
+vector of uniforms ``u ~ U(0,1)`` (from its own deterministic xoshiro
+stream) and the distribution parameters at *runtime*; the transform
+
+    s = scale * (-log(1 - u)) ** (1 / shape)
+
+runs inside the AOT-compiled artifact, so one compiled module covers
+the whole Table-1 parameter sweep.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): the transform is purely
+elementwise, so the kernel is VPU work tiled in ``(BLOCK,)`` chunks
+(``BLOCK`` a multiple of 8*128 = 1024 for lane alignment).  Per-step
+VMEM footprint is 2 * BLOCK * 4 B  (in + out) — 8 KiB at the default
+block, leaving the full VMEM budget for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default element block: 8 sublanes * 128 lanes.
+BLOCK = 4096
+
+# Uniforms are clamped into [EPS, 1 - EPS_HI] so that log(1-u) is finite
+# and nonzero; EPS_HI is one f32 ulp below 1.
+EPS = 1e-7
+
+
+def _weibull_kernel(u_ref, params_ref, out_ref):
+    """One grid step: out = scale * (-log1p(-u)) ** (1/shape)."""
+    shape = params_ref[0]
+    scale = params_ref[1]
+    u = jnp.clip(u_ref[...], EPS, 1.0 - EPS)
+    # (-log(1-u))^(1/k) computed in log-space for numerical range:
+    # exp(log(-log1p(-u)) / k).  -log1p(-u) > 0 after clamping.
+    neg_log = -jnp.log1p(-u)
+    out_ref[...] = scale * jnp.exp(jnp.log(neg_log) / shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def weibull_icdf(u, params, *, block=BLOCK):
+    """Map uniforms ``u`` to Weibull(shape, scale) samples.
+
+    Args:
+      u: f32[N] uniforms in (0, 1); N must be a multiple of ``block``
+        (the rust caller pads to the AOT batch).
+      params: f32[PARAMS] runtime parameter vector; ``params[0]`` is the
+        Weibull shape, ``params[1]`` the scale.  Extra slots are shared
+        with the other workload kernels (see model.PARAMS_LAYOUT).
+      block: element block per grid step.
+
+    Returns:
+      f32[N] samples.
+    """
+    n = u.shape[0]
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    return pl.pallas_call(
+        _weibull_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(params.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), u.dtype),
+        interpret=True,
+    )(u, params)

@@ -1,0 +1,117 @@
+"""Layer-2 JAX graphs for the PSBS evaluation pipeline.
+
+Two jitted computations, AOT-lowered once by :mod:`compile.aot` to HLO
+text and executed from the rust coordinator through the PJRT C API:
+
+* :func:`workload_graph` — synthetic-workload synthesis: Weibull
+  inverse-CDF samples (job sizes *or* inter-arrival gaps, depending on
+  the parameter vector) plus log-normal size-estimation-error
+  multipliers (paper §6.3, Table 1).
+* :func:`analytics_graph` — the metric pipeline over one batch of
+  completed jobs: per-job slowdown, mean-conditional-slowdown class
+  aggregation (Fig. 7) and slowdown-ECDF threshold counts (Figs. 4, 8),
+  plus the sojourn-time sum/count for MST.
+
+Both graphs call the Layer-1 Pallas kernels so that the kernels lower
+into the same HLO module.  Shapes are fixed at AOT time (``BATCH``);
+the rust side chunks and masks larger job populations and aggregates
+the per-chunk partials (all outputs here are linear in the mask, so
+chunk aggregation is exact).
+
+PARAMS_LAYOUT documents the runtime parameter vector shared by the
+workload kernels:
+
+    params[0] = weibull shape / pareto alpha (Table 1 `shape`, Fig. 10)
+    params[1] = weibull scale / pareto x_m   (rust precomputes
+                                      1/Gamma(1+1/shape) for unit mean,
+                                      or the load-matched arrival scale)
+    params[2] = sigma                (log-normal error parameter)
+    params[3] = size distribution    (0 = Weibull, 1 = Pareto — Fig. 10)
+"""
+
+import jax.numpy as jnp
+
+from .kernels import binning, ecdf, lognormal, pareto, weibull
+
+# AOT batch: one chunk of jobs per execution.
+BATCH = 32768
+
+# Runtime parameter vector length (see PARAMS_LAYOUT in the docstring).
+NUM_PARAMS = 4
+
+PARAMS_LAYOUT = ("shape_or_alpha", "scale_or_xm", "sigma", "dist_select")
+
+
+def workload_graph(u_size, u_a, u_b, params):
+    """Synthesize one batch of Weibull samples + error multipliers.
+
+    Args:
+      u_size: f32[BATCH] uniforms driving the Weibull inverse CDF.
+      u_a:    f32[BATCH] uniforms (Box-Muller radius).
+      u_b:    f32[BATCH] uniforms (Box-Muller angle).
+      params: f32[NUM_PARAMS] runtime parameters (PARAMS_LAYOUT).
+
+    Returns:
+      (samples f32[BATCH], err_mult f32[BATCH]) — job sizes (or gaps)
+      and the multiplicative estimation errors exp(sigma * z).
+
+    ``params[3]`` selects the size distribution (0 = Weibull for the
+    Table-1 sweeps, 1 = Pareto for Fig. 10).  ``lax.cond`` keeps the
+    artifact monolithic (one compiled module for every experiment)
+    while executing only the selected transform at runtime — XLA lowers
+    it to a conditional, not a compute-both-and-select
+    (EXPERIMENTS.md §Perf records the L2 iteration).
+    """
+    import jax.lax as lax
+
+    samples = lax.cond(
+        params[3] > 0.5,
+        lambda u: pareto.pareto_icdf(u, params),
+        lambda u: weibull.weibull_icdf(u, params),
+        u_size,
+    )
+    err_mult = lognormal.lognormal_mult(u_a, u_b, params)
+    return samples, err_mult
+
+
+def analytics_graph(sizes, sojourns, mask, bin_idx, thresholds):
+    """Metric pipeline over one batch of completed jobs.
+
+    Args:
+      sizes:      f32[BATCH] true job sizes (0 padding).
+      sojourns:   f32[BATCH] per-job sojourn times.
+      mask:       f32[BATCH] 1.0 valid / 0.0 padding.
+      bin_idx:    i32[BATCH] equal-count size-class index
+                  (binning.NUM_BINS for padding).
+      thresholds: f32[ecdf.NUM_THRESHOLDS] slowdown ECDF grid.
+
+    Returns:
+      (slowdowns f32[BATCH],
+       bin_sums f32[NUM_BINS], bin_counts f32[NUM_BINS],
+       ecdf_counts f32[NUM_THRESHOLDS],
+       sojourn_sum f32[1], count f32[1])
+    """
+    slow, bin_sums, bin_counts = binning.slowdown_bins(
+        sojourns, sizes, mask, bin_idx)
+    counts = ecdf.ecdf_counts(slow, mask, thresholds)
+    sojourn_sum = jnp.sum(sojourns * mask, keepdims=True)
+    count = jnp.sum(mask, keepdims=True)
+    return slow, bin_sums, bin_counts, counts, sojourn_sum, count
+
+
+def workload_specs(batch=BATCH):
+    """ShapeDtypeStructs matching :func:`workload_graph`."""
+    import jax
+
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    return (f32(batch), f32(batch), f32(batch), f32(NUM_PARAMS))
+
+
+def analytics_specs(batch=BATCH):
+    """ShapeDtypeStructs matching :func:`analytics_graph`."""
+    import jax
+
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+    return (f32(batch), f32(batch), f32(batch), i32(batch),
+            f32(ecdf.NUM_THRESHOLDS))

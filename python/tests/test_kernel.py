@@ -1,0 +1,208 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""Pallas kernels vs the pure-jnp oracle (`compile.kernels.ref`).
+
+Hypothesis sweeps block sizes, array lengths and parameter ranges; every
+kernel must match its oracle to f32 tolerance.  Agreement here validates
+the kernels' block decomposition and cross-grid accumulation, not just
+the elementwise math.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binning, ecdf, lognormal, pareto, ref, weibull
+
+# Kernel blocks under test: lane-aligned and the production default.
+BLOCKS = st.sampled_from([128, 256, 1024])
+# Number of blocks in the array (exercises grid accumulation).
+NBLOCKS = st.integers(min_value=1, max_value=5)
+
+HYPO = dict(max_examples=25, deadline=None)
+
+
+def _uniforms(rng, n):
+    return jnp.asarray(rng.random(n), jnp.float32)
+
+
+def _params(shape=0.25, scale=1.0, sigma=0.5):
+    return jnp.asarray([shape, scale, sigma, 0.0], jnp.float32)
+
+
+# ---------------------------------------------------------------- weibull
+
+@settings(**HYPO)
+@given(block=BLOCKS, nblocks=NBLOCKS,
+       shape=st.floats(0.125, 4.0), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**32 - 1))
+def test_weibull_matches_ref(block, nblocks, shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    u = _uniforms(rng, block * nblocks)
+    params = _params(shape=shape, scale=scale)
+    got = weibull.weibull_icdf(u, params, block=block)
+    want = ref.weibull_icdf(u, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=0)
+
+
+def test_weibull_rejects_ragged():
+    with pytest.raises(ValueError):
+        weibull.weibull_icdf(jnp.zeros(100, jnp.float32), _params(), block=128)
+
+
+def test_weibull_exponential_mean():
+    # shape=1, scale=1 is Exp(1): sample mean ~= 1.
+    rng = np.random.default_rng(7)
+    u = _uniforms(rng, 1 << 16)
+    s = weibull.weibull_icdf(u, _params(shape=1.0, scale=1.0))
+    assert abs(float(jnp.mean(s)) - 1.0) < 0.02
+
+
+def test_weibull_extreme_uniforms_finite():
+    # u == 0 and u == 1 must clamp, not produce inf/nan.
+    u = jnp.asarray([0.0, 1.0, 0.5, np.nextafter(1.0, 0.0)], jnp.float32)
+    u = jnp.tile(u, 32)  # one 128-block
+    s = weibull.weibull_icdf(u, _params(shape=0.125), block=128)
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+# ----------------------------------------------------------------- pareto
+
+@settings(**HYPO)
+@given(block=BLOCKS, nblocks=NBLOCKS,
+       alpha=st.floats(0.5, 4.0), xm=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**32 - 1))
+def test_pareto_matches_ref(block, nblocks, alpha, xm, seed):
+    rng = np.random.default_rng(seed)
+    u = _uniforms(rng, block * nblocks)
+    params = _params(shape=alpha, scale=xm)
+    got = pareto.pareto_icdf(u, params, block=block)
+    want = ref.pareto_icdf(u, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=0)
+
+
+def test_pareto_samples_above_xm():
+    rng = np.random.default_rng(13)
+    u = _uniforms(rng, 1024)
+    s = pareto.pareto_icdf(u, _params(shape=2.0, scale=0.5), block=1024)
+    assert bool(jnp.all(s >= 0.5 * (1 - 1e-6)))
+
+
+def test_pareto_unit_mean_alpha2():
+    # Pareto(xm = 0.5, alpha = 2) has mean alpha*xm/(alpha-1) = 1.
+    rng = np.random.default_rng(17)
+    u = _uniforms(rng, 1 << 17)
+    s = pareto.pareto_icdf(u, _params(shape=2.0, scale=0.5), block=1024)
+    assert abs(float(jnp.mean(s)) - 1.0) < 0.05
+
+
+def test_pareto_rejects_ragged():
+    with pytest.raises(ValueError):
+        pareto.pareto_icdf(jnp.zeros(100, jnp.float32), _params(), block=128)
+
+
+# -------------------------------------------------------------- lognormal
+
+@settings(**HYPO)
+@given(block=BLOCKS, nblocks=NBLOCKS, sigma=st.floats(0.0, 4.0),
+       seed=st.integers(0, 2**32 - 1))
+def test_lognormal_matches_ref(block, nblocks, sigma, seed):
+    rng = np.random.default_rng(seed)
+    n = block * nblocks
+    u1, u2 = _uniforms(rng, n), _uniforms(rng, n)
+    params = _params(sigma=sigma)
+    got = lognormal.lognormal_mult(u1, u2, params, block=block)
+    want = ref.lognormal_mult(u1, u2, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=0)
+
+
+def test_lognormal_sigma_zero_is_one():
+    rng = np.random.default_rng(3)
+    u1, u2 = _uniforms(rng, 256), _uniforms(rng, 256)
+    m = lognormal.lognormal_mult(u1, u2, _params(sigma=0.0), block=128)
+    np.testing.assert_allclose(m, jnp.ones(256), rtol=0)
+
+
+def test_lognormal_median_near_one():
+    # LogNormal(0, sigma) has median 1 for any sigma (paper §6.3:
+    # under- and over-estimation equally likely).
+    rng = np.random.default_rng(11)
+    n = 1 << 16
+    u1, u2 = _uniforms(rng, n), _uniforms(rng, n)
+    m = lognormal.lognormal_mult(u1, u2, _params(sigma=2.0))
+    med = float(jnp.median(m))
+    assert 0.95 < med < 1.05
+
+
+# ---------------------------------------------------------------- binning
+
+def _jobs(rng, n):
+    sizes = jnp.asarray(rng.random(n).astype(np.float32) * 10 + 1e-3)
+    soj = sizes * jnp.asarray(1.0 + 20 * rng.random(n), jnp.float32)
+    mask = jnp.asarray((rng.random(n) > 0.15).astype(np.float32))
+    # Includes the out-of-range padding index NUM_BINS.
+    idx = jnp.asarray(rng.integers(0, binning.NUM_BINS + 1, n), jnp.int32)
+    return sizes, soj, mask, idx
+
+
+@settings(**HYPO)
+@given(block=BLOCKS, nblocks=NBLOCKS, seed=st.integers(0, 2**32 - 1))
+def test_binning_matches_ref(block, nblocks, seed):
+    rng = np.random.default_rng(seed)
+    sizes, soj, mask, idx = _jobs(rng, block * nblocks)
+    slow, sums, counts = binning.slowdown_bins(soj, sizes, mask, idx,
+                                               block=block)
+    slow_r, sums_r, counts_r = ref.slowdown_bins(soj, sizes, mask, idx)
+    np.testing.assert_allclose(slow, slow_r, rtol=1e-5)
+    np.testing.assert_allclose(sums, sums_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(counts, counts_r, rtol=0)
+
+
+def test_binning_counts_are_exact_and_conserved():
+    rng = np.random.default_rng(5)
+    sizes, soj, mask, idx = _jobs(rng, 2048)
+    # All in-range so every valid job lands in exactly one class.
+    idx = jnp.asarray(rng.integers(0, binning.NUM_BINS, 2048), jnp.int32)
+    _, _, counts = binning.slowdown_bins(soj, sizes, mask, idx, block=256)
+    assert float(jnp.sum(counts)) == float(jnp.sum(mask))
+
+
+def test_binning_padding_contributes_nothing():
+    n = 512
+    sizes = jnp.zeros(n, jnp.float32)  # padding: size 0
+    soj = jnp.ones(n, jnp.float32) * 1e6
+    mask = jnp.zeros(n, jnp.float32)
+    idx = jnp.full((n,), binning.NUM_BINS, jnp.int32)
+    slow, sums, counts = binning.slowdown_bins(soj, sizes, mask, idx,
+                                               block=128)
+    assert float(jnp.sum(jnp.abs(slow))) == 0.0
+    assert float(jnp.sum(sums)) == 0.0 and float(jnp.sum(counts)) == 0.0
+
+
+# ------------------------------------------------------------------- ecdf
+
+@settings(**HYPO)
+@given(block=BLOCKS, nblocks=NBLOCKS, seed=st.integers(0, 2**32 - 1))
+def test_ecdf_matches_ref(block, nblocks, seed):
+    rng = np.random.default_rng(seed)
+    n = block * nblocks
+    slow = jnp.asarray(1.0 + 200 * rng.random(n), jnp.float32)
+    mask = jnp.asarray((rng.random(n) > 0.2).astype(np.float32))
+    thr = jnp.asarray(np.logspace(0, math.log10(300), ecdf.NUM_THRESHOLDS),
+                      jnp.float32)
+    got = ecdf.ecdf_counts(slow, mask, thr, block=block)
+    want = ref.ecdf_counts(slow, mask, thr)
+    np.testing.assert_allclose(got, want, rtol=0)
+
+
+def test_ecdf_monotone_and_saturates():
+    rng = np.random.default_rng(9)
+    slow = jnp.asarray(1.0 + 10 * rng.random(1024), jnp.float32)
+    mask = jnp.ones(1024, jnp.float32)
+    thr = jnp.asarray(np.linspace(0.0, 100.0, ecdf.NUM_THRESHOLDS),
+                      jnp.float32)
+    counts = np.asarray(ecdf.ecdf_counts(slow, mask, thr, block=256))
+    assert (np.diff(counts) >= 0).all()
+    assert counts[-1] == 1024.0  # all slowdowns <= 100

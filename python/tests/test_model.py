@@ -1,0 +1,92 @@
+"""Layer-2 graph shape/semantics tests + AOT text emission checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import binning, ecdf, ref
+
+
+def _thr():
+    return jnp.asarray(np.logspace(0, 3, ecdf.NUM_THRESHOLDS), jnp.float32)
+
+
+def test_workload_graph_shapes_and_semantics():
+    rng = np.random.default_rng(0)
+    n = model.BATCH
+    u = [jnp.asarray(rng.random(n), jnp.float32) for _ in range(3)]
+    params = jnp.asarray([1.0, 2.0, 0.5, 0.0], jnp.float32)
+    samples, mult = model.workload_graph(*u, params)
+    assert samples.shape == (n,) and mult.shape == (n,)
+    np.testing.assert_allclose(samples, ref.weibull_icdf(u[0], params),
+                               rtol=1e-5)
+    np.testing.assert_allclose(mult, ref.lognormal_mult(u[1], u[2], params),
+                               rtol=1e-5)
+
+
+def test_workload_graph_pareto_selector():
+    """params[3] = 1 switches the size distribution to Pareto."""
+    rng = np.random.default_rng(2)
+    n = 4096
+    u = [jnp.asarray(rng.random(n), jnp.float32) for _ in range(3)]
+    params = jnp.asarray([2.0, 0.5, 0.5, 1.0], jnp.float32)
+    samples, _ = model.workload_graph(*u, params)
+    np.testing.assert_allclose(samples, ref.pareto_icdf(u[0], params),
+                               rtol=1e-5)
+    # Pareto samples are bounded below by x_m; Weibull(2, .5) is not.
+    assert float(jnp.min(samples)) >= 0.5 * (1 - 1e-6)
+
+
+def test_analytics_graph_mst_and_chunk_linearity():
+    """Splitting a population into chunks must aggregate exactly."""
+    rng = np.random.default_rng(1)
+    n = model.BATCH
+    sizes = jnp.asarray(rng.random(n).astype(np.float32) + 0.01)
+    soj = sizes * 3.0
+    mask = jnp.asarray((rng.random(n) > 0.5).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, binning.NUM_BINS, n), jnp.int32)
+    thr = _thr()
+
+    full = model.analytics_graph(sizes, soj, mask, idx, thr)
+
+    # Same population, but masked as two disjoint halves.
+    m1 = mask * jnp.asarray(([1.0, 0.0] * (n // 2)), jnp.float32)
+    m2 = mask - m1
+    h1 = model.analytics_graph(sizes, soj, m1, idx, thr)
+    h2 = model.analytics_graph(sizes, soj, m2, idx, thr)
+    for k in (1, 2, 3, 4, 5):  # all aggregate outputs are mask-linear
+        np.testing.assert_allclose(np.asarray(h1[k]) + np.asarray(h2[k]),
+                                   np.asarray(full[k]), rtol=1e-4, atol=1e-3)
+
+    # MST from the aggregates equals the masked mean.
+    mst = float(full[4][0] / full[5][0])
+    want = float(jnp.sum(soj * mask) / jnp.sum(mask))
+    assert abs(mst - want) < 1e-4 * want
+
+
+def test_aot_emits_parseable_hlo_text():
+    batch = 4096  # one elementwise block: keep the test fast
+    for text, name in ((aot.lower_workload(batch), "workload_graph"),
+                       (aot.lower_analytics(batch), "analytics_graph")):
+        assert text.startswith("HloModule")
+        assert name in text.splitlines()[0]
+        assert "ENTRY" in text
+        assert f"f32[{batch}]" in text
+
+
+def test_manifest_roundtrip(tmp_path):
+    p = tmp_path / "manifest.txt"
+    aot.write_manifest(str(p), 4096)
+    kv = dict(line.split("=", 1) for line in p.read_text().splitlines())
+    assert kv["batch"] == "4096"
+    assert int(kv["num_bins"]) == binning.NUM_BINS
+    assert int(kv["num_thresholds"]) == ecdf.NUM_THRESHOLDS
+    assert kv["workload"] == "workload.hlo.txt"
+
+
+def test_specs_match_graph_signature():
+    lowered = jax.jit(model.workload_graph).lower(*model.workload_specs(4096))
+    assert lowered is not None
+    lowered = jax.jit(model.analytics_graph).lower(*model.analytics_specs(4096))
+    assert lowered is not None

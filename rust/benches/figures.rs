@@ -1,0 +1,22 @@
+//! One bench per paper table/figure: times a reduced-scale regeneration
+//! of each figure so regressions in any part of the pipeline (workload
+//! synthesis, scheduler, metrics) surface as figure-level slowdowns.
+//! `psbs sweep` produces the full-scale CSVs; this harness is the
+//! regression guard.
+
+use psbs::figures::{self, Ctx};
+use psbs::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    // Reduced scale: 1 rep x 500 jobs keeps every figure fast; the
+    // pure-rust analytics fallback avoids timing PJRT compilation here
+    // (runtime.rs benches the artifacts directly).
+    for fig in figures::ALL_FIGS {
+        b.bench(&format!("figure/fig{fig}"), move || {
+            let ctx = Ctx { reps: 1, njobs: 500, seed: 7, runtime: None, ..Default::default() };
+            let tables = figures::by_number(&ctx, fig).unwrap();
+            std::hint::black_box(tables.len());
+        });
+    }
+}

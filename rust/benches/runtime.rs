@@ -1,0 +1,78 @@
+//! PJRT artifact execution cost: per-batch latency and per-job
+//! throughput of the compiled workload and analytics graphs.  These are
+//! the L2/L1 hot paths; EXPERIMENTS.md §Perf tracks them before/after
+//! kernel changes.  Skipped (with a notice) when artifacts are absent.
+
+use psbs::metrics;
+use psbs::runtime::Runtime;
+use psbs::util::bench::Bench;
+use psbs::util::rng::Rng;
+
+fn main() {
+    let Some(rt) = Runtime::try_default() else {
+        eprintln!("artifacts/ not found — run `make artifacts`; runtime bench skipped");
+        return;
+    };
+    let b = &mut Bench::new();
+    let batch = rt.manifest.batch;
+    println!("# AOT batch = {batch}");
+
+    // Workload graph: uniforms -> Weibull samples + error multipliers.
+    let mut rng = Rng::new(1);
+    let u1: Vec<f32> = (0..batch).map(|_| rng.u01() as f32).collect();
+    let u2: Vec<f32> = (0..batch).map(|_| rng.u01() as f32).collect();
+    let u3: Vec<f32> = (0..batch).map(|_| rng.u01() as f32).collect();
+    let params = [0.25f32, 1.0 / 24.0, 0.5, 0.0];
+    {
+        let rt = &rt;
+        let (u1, u2, u3) = (u1.clone(), u2.clone(), u3.clone());
+        b.bench_items("runtime/workload_batch", Some(batch as u64), move || {
+            let out = rt.gen_batch(&u1, &u2, &u3, &params).unwrap();
+            std::hint::black_box(out.0.len());
+        });
+    }
+
+    // Analytics graph over one batch.
+    let sizes: Vec<f64> = (0..batch).map(|i| 0.01 + (i % 97) as f64 * 0.1).collect();
+    let sojourns: Vec<f64> = sizes.iter().map(|s| s * 3.0).collect();
+    let idx: Vec<i32> = (0..batch).map(|i| (i % rt.manifest.num_bins) as i32).collect();
+    let thr = metrics::log_thresholds(rt.manifest.num_thresholds, 3.0);
+    {
+        let rt = &rt;
+        let (sizes, sojourns, idx, thr) =
+            (sizes.clone(), sojourns.clone(), idx.clone(), thr.clone());
+        b.bench_items("runtime/analytics_batch", Some(batch as u64), move || {
+            let out = rt.analyze(&sizes, &sojourns, &idx, &thr).unwrap();
+            std::hint::black_box(out.count);
+        });
+    }
+
+    // Pure-rust fallback for the same aggregation, for the L2-vs-L3
+    // comparison recorded in EXPERIMENTS.md §Perf.
+    {
+        let jobs: Vec<psbs::sim::Job> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| psbs::sim::Job::exact(i as u32, 0.0, s))
+            .collect();
+        let slow: Vec<f64> = sojourns.iter().zip(&sizes).map(|(so, si)| so / si).collect();
+        let thr = thr.clone();
+        b.bench_items("runtime/rust_fallback_equiv", Some(batch as u64), move || {
+            let c = metrics::conditional_slowdown(&jobs, &slow, metrics::COND_BINS);
+            let e = metrics::slowdown_ecdf(&slow, &thr);
+            std::hint::black_box((c.len(), e.len()));
+        });
+    }
+
+    // End-to-end generation throughput (chunked, includes uniform
+    // generation on the rust side).
+    {
+        let rt = &rt;
+        let n = batch * 2;
+        b.bench_items("runtime/gen_weibull_lognormal_2batches", Some(n as u64), move || {
+            let mut rng = Rng::new(9);
+            let out = rt.gen_weibull_lognormal(&mut rng, n, 0.25, 1.0 / 24.0, 0.5).unwrap();
+            std::hint::black_box(out.0.len());
+        });
+    }
+}

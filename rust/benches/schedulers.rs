@@ -1,0 +1,42 @@
+//! End-to-end simulator throughput per discipline (paper §A.1: their
+//! Python simulator runs 10k jobs in ~0.5 s; DESIGN.md §Perf targets
+//! <5 ms for PS-class policies here).
+
+use psbs::sched;
+use psbs::sim;
+use psbs::util::bench::Bench;
+use psbs::workload::{self, SynthConfig};
+
+fn main() {
+    let mut b = Bench::new();
+
+    let cfg = SynthConfig::default().with_njobs(10_000);
+    let jobs = workload::synthesize(&cfg, 42);
+    for policy in sched::ALL_POLICIES {
+        // fsp-naive is O(n^2)-ish on 10k jobs; bench it at this size
+        // anyway — it IS the comparison the paper's §5.2.2 makes.
+        let jobs = jobs.clone();
+        b.bench_items(&format!("sim/10k_default/{policy}"), Some(jobs.len() as u64), move || {
+            let mut s = sched::by_name(policy).unwrap();
+            let r = sim::run(s.as_mut(), &jobs);
+            std::hint::black_box(r.events);
+        });
+    }
+
+    // Scaling: PSBS at increasing n (the O(log n) claim end to end).
+    for njobs in [1_000usize, 10_000, 100_000] {
+        let cfg = SynthConfig::default().with_njobs(njobs);
+        let jobs = workload::synthesize(&cfg, 43);
+        b.bench_items(&format!("sim/psbs/n{njobs}"), Some(njobs as u64), move || {
+            let mut s = sched::by_name("psbs").unwrap();
+            let r = sim::run(s.as_mut(), &jobs);
+            std::hint::black_box(r.events);
+        });
+    }
+
+    // Workload synthesis itself.
+    b.bench_items("workload/synthesize_10k", Some(10_000), || {
+        let cfg = SynthConfig::default().with_njobs(10_000);
+        std::hint::black_box(workload::synthesize(&cfg, 7).len());
+    });
+}

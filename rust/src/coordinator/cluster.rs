@@ -1,0 +1,230 @@
+//! Multi-server deployment: a dispatcher routing jobs to `k`
+//! independent single-server schedulers.
+//!
+//! The paper's §8 pitch is that PSBS can "guide the design of
+//! schedulers in real, complex systems"; real systems (web farms,
+//! Hadoop as in HFSP [15]) are multi-server with immediate dispatch.
+//! This module composes the single-server disciplines into that shape:
+//! each of `k` servers runs its own scheduler instance at unit rate;
+//! an arriving job is routed once (no migration) by a [`Dispatch`]
+//! policy.  The composite implements [`Scheduler`] itself, so the same
+//! engine, metrics and figure harness apply unchanged.
+//!
+//! Dispatch policies:
+//! * [`Dispatch::RoundRobin`] — the size-oblivious baseline;
+//! * [`Dispatch::LeastWork`] — route to the server with the least
+//!   outstanding *estimated* work (the size-based policy; with wrong
+//!   estimates it inherits exactly the error-sensitivity questions the
+//!   paper studies, now at the routing layer too);
+//! * [`Dispatch::Random`] — seeded uniform (the mean-field reference).
+
+use crate::sched;
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Routing policy for new arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    RoundRobin,
+    LeastWork,
+    Random,
+}
+
+/// `k` single-server schedulers behind one dispatcher.
+pub struct Cluster {
+    servers: Vec<Box<dyn Scheduler>>,
+    dispatch: Dispatch,
+    /// Outstanding estimated work per server (LeastWork bookkeeping).
+    est_backlog: Vec<f64>,
+    /// job id -> (server, estimate) for completion-time bookkeeping.
+    placement: HashMap<u32, (usize, f64)>,
+    rr_next: usize,
+    rng: Rng,
+}
+
+impl Cluster {
+    /// Build `k` servers each running `policy` (any `sched::by_name`).
+    pub fn new(policy: &str, k: usize, dispatch: Dispatch, seed: u64) -> Option<Cluster> {
+        assert!(k >= 1);
+        let servers: Option<Vec<_>> = (0..k).map(|_| sched::by_name(policy)).collect();
+        Some(Cluster {
+            servers: servers?,
+            dispatch,
+            est_backlog: vec![0.0; k],
+            placement: HashMap::new(),
+            rr_next: 0,
+            rng: Rng::new(seed ^ 0xC105_7E2),
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.servers.len()
+    }
+
+    fn pick(&mut self) -> usize {
+        match self.dispatch {
+            Dispatch::RoundRobin => {
+                let s = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.servers.len();
+                s
+            }
+            Dispatch::Random => self.rng.below(self.servers.len() as u64) as usize,
+            Dispatch::LeastWork => {
+                let mut best = 0;
+                for (i, &w) in self.est_backlog.iter().enumerate() {
+                    if w < self.est_backlog[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+impl Scheduler for Cluster {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn on_arrival(&mut self, now: f64, job: &Job) {
+        let s = self.pick();
+        self.est_backlog[s] += job.est;
+        self.placement.insert(job.id, (s, job.est));
+        self.servers[s].on_arrival(now, job);
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        self.servers
+            .iter()
+            .filter_map(|s| s.next_event(now))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        // Servers are independent; each advances through its own
+        // internal events up to t (a composite step may cross several
+        // per-server events, which the engine cannot see individually).
+        for s in self.servers.iter_mut() {
+            let mut local_now = now;
+            loop {
+                match s.next_event(local_now) {
+                    Some(ev) if ev < t => {
+                        s.advance(local_now, ev.max(local_now), done);
+                        local_now = ev.max(local_now);
+                    }
+                    _ => break,
+                }
+            }
+            s.advance(local_now, t, done);
+        }
+        for c in done.iter() {
+            if let Some((srv, est)) = self.placement.remove(&c.id) {
+                self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
+            }
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.servers.iter().map(|s| s.active()).sum()
+    }
+
+    fn cancel(&mut self, now: f64, id: u32) -> bool {
+        let Some(&(srv, est)) = self.placement.get(&id) else { return false };
+        if self.servers[srv].cancel(now, id) {
+            self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
+            self.placement.remove(&id);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+    use crate::workload::SynthConfig;
+
+    #[test]
+    fn single_server_cluster_equals_plain_scheduler() {
+        let cfg = SynthConfig::default().with_njobs(500);
+        let jobs = crate::workload::synthesize(&cfg, 3);
+        for dispatch in [Dispatch::RoundRobin, Dispatch::LeastWork, Dispatch::Random] {
+            let mut c = Cluster::new("psbs", 1, dispatch, 0).unwrap();
+            let a = run(&mut c, &jobs).completion;
+            let mut s = sched::by_name("psbs").unwrap();
+            let b = run(s.as_mut(), &jobs).completion;
+            assert_eq!(a, b, "k=1 must be transparent ({dispatch:?})");
+        }
+    }
+
+    #[test]
+    fn all_jobs_complete_on_k_servers() {
+        let cfg = SynthConfig::default().with_njobs(2_000);
+        let jobs = crate::workload::synthesize(&cfg, 4);
+        for k in [2, 4, 8] {
+            let mut c = Cluster::new("psbs", k, Dispatch::LeastWork, 1).unwrap();
+            let r = run(&mut c, &jobs);
+            assert!(r.completion.iter().all(|x| x.is_finite()), "k={k}");
+            assert_eq!(c.active(), 0);
+        }
+    }
+
+    #[test]
+    fn more_servers_never_hurt_mst_much() {
+        // With load 0.9 against ONE unit server, k servers are heavily
+        // under-loaded: MST must drop toward the mean size.
+        let cfg = SynthConfig::default().with_njobs(3_000);
+        let jobs = crate::workload::synthesize(&cfg, 5);
+        let mst = |k| {
+            let mut c = Cluster::new("psbs", k, Dispatch::LeastWork, 2).unwrap();
+            run(&mut c, &jobs).mst(&jobs)
+        };
+        let m1 = mst(1);
+        let m4 = mst(4);
+        assert!(m4 < m1, "k=4 ({m4}) should beat k=1 ({m1})");
+    }
+
+    #[test]
+    fn least_work_beats_round_robin_on_skew() {
+        // Heavy-tailed sizes + 4 servers at high per-server load:
+        // size-aware routing balances elephants, round-robin collides
+        // them. Scale arrivals so per-server load stays high.
+        let cfg = SynthConfig::default().with_njobs(4_000).with_load(3.6); // ~0.9 per server
+        let jobs = crate::workload::synthesize(&cfg, 6);
+        let mst = |d| {
+            let mut c = Cluster::new("psbs", 4, d, 3).unwrap();
+            run(&mut c, &jobs).mst(&jobs)
+        };
+        let lw = mst(Dispatch::LeastWork);
+        let rr = mst(Dispatch::RoundRobin);
+        assert!(lw < rr, "least-work {lw} should beat round-robin {rr}");
+    }
+
+    #[test]
+    fn cluster_cancellation_updates_backlog() {
+        let mut c = Cluster::new("psbs", 2, Dispatch::LeastWork, 4).unwrap();
+        c.on_arrival(0.0, &Job::exact(0, 0.0, 100.0)); // -> server 0
+        c.on_arrival(0.0, &Job::exact(1, 0.0, 1.0)); // -> server 1 (least work)
+        assert_eq!(c.active(), 2);
+        assert!(c.cancel(0.0, 0));
+        assert_eq!(c.active(), 1);
+        // Next big job routes to the now-empty server 0.
+        c.on_arrival(0.0, &Job::exact(2, 0.0, 50.0));
+        assert!(c.est_backlog[0] >= 50.0 - 1e-9);
+    }
+
+    #[test]
+    fn dispatch_is_deterministic_per_seed() {
+        let cfg = SynthConfig::default().with_njobs(300);
+        let jobs = crate::workload::synthesize(&cfg, 8);
+        let run_once = || {
+            let mut c = Cluster::new("psbs", 3, Dispatch::Random, 42).unwrap();
+            run(&mut c, &jobs).completion
+        };
+        assert_eq!(run_once(), run_once());
+    }
+}

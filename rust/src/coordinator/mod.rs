@@ -1,0 +1,21 @@
+//! The online scheduling **service** — PSBS deployed as a coordinator.
+//!
+//! The paper's closing argument (§8) is that PSBS is *practical*: an
+//! O(log n) discipline a real system can run online.  This module is
+//! that deployment shape: a leader thread owns the scheduler and a
+//! simulated machine of configurable speed; clients submit jobs (with
+//! size estimates and weights) over a channel and receive completion
+//! notifications.  Time is real (wall-clock scaled by `speed`), so the
+//! service measures actual end-to-end latencies — used by
+//! `examples/online_service.rs` to report throughput/latency.
+//!
+//! Offline environment note: tokio is unavailable, so the topology is
+//! std::thread + mpsc (DESIGN.md §4); the service is I/O-light and the
+//! leader loop is identical in shape to an async reactor — wait until
+//! (next internal event | submission), advance, notify.
+
+pub mod cluster;
+pub mod service;
+
+pub use cluster::{Cluster, Dispatch};
+pub use service::{CompletionInfo, Service, ServiceConfig, ServiceStats};

@@ -1,0 +1,279 @@
+//! Leader thread + submission/notification channels.
+
+use crate::sched;
+use crate::sim::{Completion, Job, Scheduler};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Scheduling discipline (any name accepted by `sched::by_name`).
+    pub policy: String,
+    /// Machine speed: service units per wall-clock second.
+    pub speed: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { policy: "psbs".to_string(), speed: 1000.0 }
+    }
+}
+
+/// Completion notification delivered to the submitting client.
+#[derive(Debug, Clone)]
+pub struct CompletionInfo {
+    pub job_id: u32,
+    /// True size (service units).
+    pub size: f64,
+    /// Wall-clock end-to-end latency (submit -> completion notification).
+    pub latency: Duration,
+    /// Slowdown in service-time units: latency / (size / speed).
+    pub slowdown: f64,
+}
+
+/// Aggregate statistics returned by [`Service::shutdown`].
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub completed: u64,
+    pub mean_latency_s: f64,
+    /// Streaming (P²) latency percentiles — no per-job retention.
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_slowdown: f64,
+    pub max_slowdown: f64,
+    pub wall_s: f64,
+}
+
+impl ServiceStats {
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+enum Msg {
+    Submit { size: f64, est: f64, weight: f64, done_tx: Sender<CompletionInfo> },
+    /// Kill a pending job; `ack` receives whether it was still pending.
+    Kill { id: u32, ack: Sender<bool> },
+    Shutdown,
+}
+
+/// Handle to a running scheduling service.
+pub struct Service {
+    tx: Sender<Msg>,
+    join: JoinHandle<ServiceStats>,
+}
+
+impl Service {
+    /// Start the leader thread.
+    pub fn start(cfg: ServiceConfig) -> Service {
+        let (tx, rx) = channel();
+        let join = std::thread::Builder::new()
+            .name("psbs-leader".into())
+            .spawn(move || leader_loop(cfg, rx))
+            .expect("spawn leader");
+        Service { tx, join }
+    }
+
+    /// Submit a job; the returned channel yields its completion.
+    pub fn submit(&self, size: f64, est: f64, weight: f64) -> Receiver<CompletionInfo> {
+        let (done_tx, done_rx) = channel();
+        self.tx
+            .send(Msg::Submit { size, est, weight, done_tx })
+            .expect("leader thread alive");
+        done_rx
+    }
+
+    /// Kill a submitted job.  Returns `true` if it was still pending
+    /// (its completion channel will never fire); `false` if it had
+    /// already completed or the policy does not support cancellation.
+    /// Job ids are assigned in submission order starting from 0.
+    pub fn kill(&self, id: u32) -> bool {
+        let (ack_tx, ack_rx) = channel();
+        if self.tx.send(Msg::Kill { id, ack: ack_tx }).is_err() {
+            return false;
+        }
+        ack_rx.recv().unwrap_or(false)
+    }
+
+    /// Drain remaining work, stop the leader, return statistics.
+    pub fn shutdown(self) -> ServiceStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.join.join().expect("leader thread panicked")
+    }
+}
+
+struct Pending {
+    done_tx: Sender<CompletionInfo>,
+    submitted: Instant,
+    size: f64,
+}
+
+fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
+    let mut sched = sched::by_name(&cfg.policy)
+        .unwrap_or_else(|| panic!("unknown policy {}", cfg.policy));
+    let t0 = Instant::now();
+    let speed = cfg.speed;
+    let sim_now = |t0: Instant| t0.elapsed().as_secs_f64() * speed;
+
+    let mut pending: HashMap<u32, Pending> = HashMap::new();
+    let mut next_id: u32 = 0;
+    let mut last_sim = 0.0_f64;
+    let mut done_buf: Vec<Completion> = Vec::new();
+    let mut stats = ServiceStats::default();
+    let mut lat_sum = 0.0_f64;
+    let mut slow_sum = 0.0_f64;
+    let mut p50 = crate::stats::P2Quantile::new(0.5);
+    let mut p99 = crate::stats::P2Quantile::new(0.99);
+    let mut draining = false;
+
+    loop {
+        // Advance the scheduler through every internal event up to the
+        // current wall-clock instant.
+        let now = sim_now(t0);
+        advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
+        for c in done_buf.drain(..) {
+            if let Some(p) = pending.remove(&c.id) {
+                let latency = p.submitted.elapsed();
+                let service_time = p.size / speed;
+                let info = CompletionInfo {
+                    job_id: c.id,
+                    size: p.size,
+                    latency,
+                    slowdown: latency.as_secs_f64() / service_time.max(1e-12),
+                };
+                stats.completed += 1;
+                lat_sum += latency.as_secs_f64();
+                p50.observe(latency.as_secs_f64());
+                p99.observe(latency.as_secs_f64());
+                slow_sum += info.slowdown;
+                stats.max_slowdown = stats.max_slowdown.max(info.slowdown);
+                let _ = p.done_tx.send(info);
+            }
+        }
+
+        if draining && sched.active() == 0 {
+            break;
+        }
+
+        // Sleep until the next internal event (or forever if idle).
+        let timeout = match sched.next_event(last_sim) {
+            Some(ev) => {
+                let wall = (ev - last_sim).max(0.0) / speed;
+                Duration::from_secs_f64(wall.min(0.050)) // re-check >= 20 Hz
+            }
+            None => Duration::from_millis(50),
+        };
+        if draining {
+            std::thread::sleep(timeout.min(Duration::from_millis(1)));
+            continue;
+        }
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Submit { size, est, weight, done_tx }) => {
+                let now = sim_now(t0);
+                advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
+                let id = next_id;
+                next_id += 1;
+                let job = Job { id, arrival: now, size, est, weight };
+                pending.insert(id, Pending { done_tx, submitted: Instant::now(), size });
+                sched.on_arrival(now, &job);
+            }
+            Ok(Msg::Kill { id, ack }) => {
+                let now = sim_now(t0);
+                advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
+                let killed = pending.contains_key(&id) && sched.cancel(last_sim, id);
+                if killed {
+                    pending.remove(&id);
+                }
+                let _ = ack.send(killed);
+            }
+            Ok(Msg::Shutdown) => draining = true,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => draining = true,
+        }
+    }
+
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    if stats.completed > 0 {
+        stats.mean_latency_s = lat_sum / stats.completed as f64;
+        stats.mean_slowdown = slow_sum / stats.completed as f64;
+        stats.p50_latency_s = p50.value();
+        stats.p99_latency_s = p99.value();
+    }
+    stats
+}
+
+/// Advance the scheduler from `*last` to `target`, stopping at every
+/// internal event on the way (the scheduler contract forbids jumping
+/// past `next_event`).
+fn advance_through(
+    sched: &mut dyn Scheduler,
+    last: &mut f64,
+    target: f64,
+    done: &mut Vec<Completion>,
+) {
+    let target = target.max(*last);
+    loop {
+        match sched.next_event(*last) {
+            Some(ev) if ev <= target => {
+                sched.advance(*last, ev.max(*last), done);
+                *last = ev.max(*last);
+            }
+            _ => break,
+        }
+    }
+    sched.advance(*last, target, done);
+    *last = target;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_and_completes_jobs() {
+        let svc = Service::start(ServiceConfig { policy: "psbs".into(), speed: 10_000.0 });
+        // 20 jobs of 10 units each: ~1ms apiece at this speed.
+        let rxs: Vec<_> = (0..20).map(|_| svc.submit(10.0, 10.0, 1.0)).collect();
+        let mut got = 0;
+        for rx in rxs {
+            let info = rx.recv_timeout(Duration::from_secs(5)).expect("completion");
+            assert_eq!(info.size, 10.0);
+            got += 1;
+        }
+        assert_eq!(got, 20);
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed, 20);
+        assert!(stats.mean_latency_s > 0.0);
+    }
+
+    #[test]
+    fn weighted_job_finishes_before_equal_light_job() {
+        // Submit two identical long jobs, one weight 8: under PSBS the
+        // heavy one must complete first.
+        let svc = Service::start(ServiceConfig { policy: "psbs".into(), speed: 2_000.0 });
+        let light = svc.submit(100.0, 100.0, 1.0);
+        let heavy = svc.submit(100.0, 100.0, 8.0);
+        let l = light.recv_timeout(Duration::from_secs(5)).unwrap();
+        let h = heavy.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(h.latency <= l.latency, "heavy {:?} vs light {:?}", h.latency, l.latency);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn every_policy_runs_in_the_service() {
+        for policy in crate::sched::ALL_POLICIES {
+            let svc = Service::start(ServiceConfig {
+                policy: policy.to_string(),
+                speed: 50_000.0,
+            });
+            let rx = svc.submit(5.0, 5.0, 1.0);
+            rx.recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|e| panic!("policy {policy}: {e}"));
+            let stats = svc.shutdown();
+            assert_eq!(stats.completed, 1, "policy {policy}");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Job-size estimation (paper §2.2).
+//!
+//! PSBS takes *one* estimate per job and never re-estimates; this
+//! module supplies the estimators a deployment would plug in front of
+//! it, mirroring the approaches the paper surveys:
+//!
+//! * [`OracleEstimator`] — exact sizes (the no-error baseline);
+//! * [`LogNormalNoise`] — the paper's synthetic error model (Eq. 1):
+//!   `s_hat = s · LogN(0, σ²)`;
+//! * [`SamplingEstimator`] — HFSP-style [15]: run a fraction of the
+//!   job, extrapolate from the observed rate (sampling noise shrinks
+//!   with the sampled fraction);
+//! * [`ProxyEstimator`] — web-server-style [16]: a correlated proxy
+//!   (e.g. file size) with multiplicative bias and dispersion;
+//! * [`ClassEstimator`] — semi-clairvoyant [10, 11]: only the size
+//!   class ⌊log₂ s⌋ is known, the estimate is the class midpoint.
+//!
+//! [`measure`] evaluates any estimator *a posteriori* (§2.2: "estimation
+//! error can always be evaluated a posteriori") — log-error moments and
+//! the size↔estimate correlation the paper uses to report σ quality.
+
+use crate::sim::Job;
+use crate::util::rng::Rng;
+use crate::workload::dists::{Dist, LogNormal};
+
+/// A job-size estimator: maps true size -> estimate (possibly random).
+pub trait Estimator {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+    /// Produce an estimate for a job of true size `size`.
+    fn estimate(&self, size: f64, rng: &mut Rng) -> f64;
+}
+
+/// Exact information (σ = 0).
+#[derive(Debug, Default)]
+pub struct OracleEstimator;
+
+impl Estimator for OracleEstimator {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+    fn estimate(&self, size: f64, _rng: &mut Rng) -> f64 {
+        size
+    }
+}
+
+/// The paper's Eq. 1 error model: `s_hat = s · X`, `X ~ LogN(0, σ²)`.
+#[derive(Debug)]
+pub struct LogNormalNoise {
+    dist: LogNormal,
+}
+
+impl LogNormalNoise {
+    pub fn new(sigma: f64) -> Self {
+        LogNormalNoise { dist: LogNormal::error_model(sigma) }
+    }
+}
+
+impl Estimator for LogNormalNoise {
+    fn name(&self) -> &'static str {
+        "lognormal"
+    }
+    fn estimate(&self, size: f64, rng: &mut Rng) -> f64 {
+        (size * self.dist.sample(rng)).max(1e-12)
+    }
+}
+
+/// HFSP-style sampling [15]: execute a fraction `f` of the job, observe
+/// a noisy per-unit rate, extrapolate.  The observed rate is modeled as
+/// log-normal with dispersion shrinking as `sigma0 · sqrt(f0 / f)` —
+/// sampling more of the job averages out more rate noise (CLT), which
+/// reproduces HFSP's empirically log-normal estimate errors.
+#[derive(Debug)]
+pub struct SamplingEstimator {
+    /// Sampled fraction of the job (0 < f <= 1).
+    pub fraction: f64,
+    /// Rate-noise dispersion at the reference fraction `f0 = 0.01`.
+    pub sigma0: f64,
+}
+
+impl SamplingEstimator {
+    pub fn new(fraction: f64, sigma0: f64) -> Self {
+        assert!(fraction > 0.0 && fraction <= 1.0);
+        SamplingEstimator { fraction, sigma0 }
+    }
+
+    /// Effective log-dispersion of this estimator.
+    pub fn effective_sigma(&self) -> f64 {
+        self.sigma0 * (0.01 / self.fraction).sqrt()
+    }
+}
+
+impl Estimator for SamplingEstimator {
+    fn name(&self) -> &'static str {
+        "sampling"
+    }
+    fn estimate(&self, size: f64, rng: &mut Rng) -> f64 {
+        let sigma = self.effective_sigma();
+        let noise = (sigma * rng.normal()).exp();
+        // The sampled prefix is known exactly; only the remainder is
+        // extrapolated through the noisy rate.
+        let sampled = size * self.fraction;
+        let rest = size * (1.0 - self.fraction);
+        (sampled + rest * noise).max(1e-12)
+    }
+}
+
+/// Correlated-proxy estimation [16]: `s_hat = bias · s · LogN(0, σ²)`.
+/// A web server using file size as the job-size proxy has `bias` =
+/// 1/bandwidth (units change) and dispersion from bandwidth variance —
+/// note PSBS is scale-free in estimates with equal weights, so pure
+/// bias is harmless; dispersion is what hurts.
+#[derive(Debug)]
+pub struct ProxyEstimator {
+    pub bias: f64,
+    dist: LogNormal,
+}
+
+impl ProxyEstimator {
+    pub fn new(bias: f64, sigma: f64) -> Self {
+        assert!(bias > 0.0);
+        ProxyEstimator { bias, dist: LogNormal::error_model(sigma) }
+    }
+}
+
+impl Estimator for ProxyEstimator {
+    fn name(&self) -> &'static str {
+        "proxy"
+    }
+    fn estimate(&self, size: f64, rng: &mut Rng) -> f64 {
+        (self.bias * size * self.dist.sample(rng)).max(1e-12)
+    }
+}
+
+/// Semi-clairvoyant estimation [10, 11]: the scheduler knows only the
+/// size class ⌊log₂ s⌋; the estimate is the geometric midpoint of the
+/// class interval `[2^k, 2^(k+1))`.
+#[derive(Debug, Default)]
+pub struct ClassEstimator;
+
+impl Estimator for ClassEstimator {
+    fn name(&self) -> &'static str {
+        "class"
+    }
+    fn estimate(&self, size: f64, _rng: &mut Rng) -> f64 {
+        let k = size.log2().floor();
+        (2f64.powf(k) * std::f64::consts::SQRT_2).max(1e-12)
+    }
+}
+
+/// Apply an estimator to a workload (replaces each job's `est`).
+pub fn apply(jobs: &[Job], est: &dyn Estimator, seed: u64) -> Vec<Job> {
+    let mut rng = Rng::new(seed ^ 0xE57);
+    jobs.iter().map(|j| Job { est: est.estimate(j.size, &mut rng), ..*j }).collect()
+}
+
+/// A-posteriori quality measurement (§2.2 / §6.3).
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorStats {
+    /// Mean of ln(est/size) — systematic bias in log space.
+    pub log_bias: f64,
+    /// Std dev of ln(est/size) — the empirical σ of Eq. 1.
+    pub log_sigma: f64,
+    /// Pearson correlation between size and estimate (the quality
+    /// number Lu et al. [8] and §6.3 report).
+    pub correlation: f64,
+    /// Fraction of under-estimated jobs (est < size) — the §4.2 risk.
+    pub frac_under: f64,
+}
+
+/// Measure estimate quality over a workload.
+pub fn measure(jobs: &[Job]) -> ErrorStats {
+    let n = jobs.len().max(1) as f64;
+    let logs: Vec<f64> = jobs.iter().map(|j| (j.est / j.size).ln()).collect();
+    let log_bias = crate::stats::mean(&logs);
+    let log_sigma = crate::stats::stddev(&logs);
+    let frac_under = jobs.iter().filter(|j| j.est < j.size).count() as f64 / n;
+
+    let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for j in jobs {
+        sx += j.size;
+        sy += j.est;
+        sxx += j.size * j.size;
+        syy += j.est * j.est;
+        sxy += j.size * j.est;
+    }
+    let cov = sxy - sx * sy / n;
+    let vx = sxx - sx * sx / n;
+    let vy = syy - sy * sy / n;
+    let correlation = if vx > 0.0 && vy > 0.0 { cov / (vx * vy).sqrt() } else { 1.0 };
+
+    ErrorStats { log_bias, log_sigma, correlation, frac_under }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::SynthConfig;
+
+    fn base_jobs(n: usize) -> Vec<Job> {
+        let cfg = SynthConfig::default().with_sigma(0.0).with_njobs(n);
+        crate::workload::synthesize(&cfg, 77)
+    }
+
+    #[test]
+    fn oracle_is_exact() {
+        let jobs = apply(&base_jobs(500), &OracleEstimator, 1);
+        let s = measure(&jobs);
+        assert_eq!(s.log_sigma, 0.0);
+        assert_eq!(s.frac_under, 0.0);
+        assert!((s.correlation - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lognormal_noise_matches_requested_sigma() {
+        for sigma in [0.25, 1.0, 2.0] {
+            let jobs = apply(&base_jobs(20_000), &LogNormalNoise::new(sigma), 2);
+            let s = measure(&jobs);
+            assert!((s.log_sigma - sigma).abs() < 0.05, "sigma {sigma}: got {}", s.log_sigma);
+            assert!(s.log_bias.abs() < 0.05, "bias {}", s.log_bias);
+            // Under- and over-estimation equally likely (§6.3).
+            assert!((s.frac_under - 0.5).abs() < 0.02, "under {}", s.frac_under);
+        }
+    }
+
+    #[test]
+    fn sampling_more_reduces_error() {
+        let jobs = base_jobs(20_000);
+        let rough = measure(&apply(&jobs, &SamplingEstimator::new(0.01, 0.5), 3));
+        let fine = measure(&apply(&jobs, &SamplingEstimator::new(0.25, 0.5), 3));
+        assert!(
+            fine.log_sigma < rough.log_sigma / 2.0,
+            "fine {} vs rough {}",
+            fine.log_sigma,
+            rough.log_sigma
+        );
+        // The sampled prefix is never under-estimated below f*s.
+        let full = measure(&apply(&jobs, &SamplingEstimator::new(1.0, 0.5), 3));
+        assert!(full.log_sigma < 1e-9, "fully sampled job is exact");
+    }
+
+    #[test]
+    fn proxy_bias_is_pure_scale() {
+        let jobs = apply(&base_jobs(5_000), &ProxyEstimator::new(100.0, 0.0), 4);
+        let s = measure(&jobs);
+        assert!((s.log_bias - 100f64.ln()).abs() < 1e-9);
+        assert!(s.log_sigma < 1e-9, "sigma {}", s.log_sigma);
+        assert!((s.correlation - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_estimator_quantizes_to_octaves() {
+        let mut rng = Rng::new(5);
+        let e = ClassEstimator;
+        for s in [0.1, 1.0, 3.0, 1000.0] {
+            let est = e.estimate(s, &mut rng);
+            // Estimate within a factor sqrt(2) of the true size.
+            let ratio = est / s;
+            assert!(
+                (std::f64::consts::FRAC_1_SQRT_2..=std::f64::consts::SQRT_2 + 1e-12)
+                    .contains(&ratio),
+                "size {s}: ratio {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn correlation_drops_with_sigma() {
+        // §6.3's table: sigma 0.5 -> ~0.9, sigma 4 -> ~0.05.
+        let jobs = base_jobs(50_000);
+        let tight = measure(&apply(&jobs, &LogNormalNoise::new(0.5), 6));
+        let loose = measure(&apply(&jobs, &LogNormalNoise::new(4.0), 6));
+        assert!(tight.correlation > 0.6, "tight {}", tight.correlation);
+        assert!(loose.correlation < 0.3, "loose {}", loose.correlation);
+    }
+
+    /// End to end: scheduling with a sampling estimator behaves like
+    /// scheduling with the equivalent log-normal sigma (the paper's
+    /// claim that the synthetic model covers practical estimators).
+    #[test]
+    fn sampling_estimator_schedules_like_equivalent_sigma() {
+        use crate::figures::run_mst;
+        let jobs = base_jobs(5_000);
+        let est = SamplingEstimator::new(0.04, 0.5);
+        let sampled = apply(&jobs, &est, 7);
+        let sigma_eq = est.effective_sigma();
+        let synthetic = apply(&jobs, &LogNormalNoise::new(sigma_eq), 7);
+        let a = run_mst("psbs", &sampled);
+        let b = run_mst("psbs", &synthetic);
+        // Same ballpark (both near-optimal): within 25% of each other.
+        assert!((a / b - 1.0).abs() < 0.25, "sampled {a} vs synthetic {b}");
+    }
+}

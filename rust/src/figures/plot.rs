@@ -1,0 +1,301 @@
+//! Dependency-free SVG line charts for the figure harness.
+//!
+//! `psbs sweep --svg` renders each [`Table`] next to its CSV so the
+//! paper's figures can be eyeballed directly: column 0 is the x axis,
+//! every other column one series.  Log scaling (the paper plots both
+//! axes logarithmically in most figures) is automatic when a span
+//! exceeds 30x, or forced via [`PlotOpts`].
+
+use super::tables::Table;
+
+/// Rendering options.
+#[derive(Debug, Clone)]
+pub struct PlotOpts {
+    pub width: u32,
+    pub height: u32,
+    /// None = auto (log when max/min > 30 and all values positive).
+    pub log_x: Option<bool>,
+    pub log_y: Option<bool>,
+    pub title: Option<String>,
+}
+
+impl Default for PlotOpts {
+    fn default() -> Self {
+        PlotOpts { width: 640, height: 420, log_x: None, log_y: None, title: None }
+    }
+}
+
+/// 8-color palette (Okabe–Ito, color-blind safe).
+const PALETTE: [&str; 8] = [
+    "#0072B2", "#D55E00", "#009E73", "#CC79A7", "#E69F00", "#56B4E9", "#F0E442", "#000000",
+];
+
+const MARGIN_L: f64 = 62.0;
+const MARGIN_R: f64 = 12.0;
+const MARGIN_T: f64 = 28.0;
+const MARGIN_B: f64 = 42.0;
+
+struct Axis {
+    min: f64,
+    max: f64,
+    log: bool,
+}
+
+impl Axis {
+    fn build(values: impl Iterator<Item = f64>, force_log: Option<bool>) -> Axis {
+        let finite: Vec<f64> = values.filter(|v| v.is_finite()).collect();
+        let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &finite {
+            min = min.min(v);
+            max = max.max(v);
+        }
+        if !min.is_finite() || !max.is_finite() {
+            (min, max) = (0.0, 1.0);
+        }
+        let log = force_log.unwrap_or(min > 0.0 && max / min.max(f64::MIN_POSITIVE) > 30.0)
+            && min > 0.0;
+        if (max - min).abs() < 1e-300 {
+            max = min + 1.0;
+        }
+        Axis { min, max, log }
+    }
+
+    /// Normalize a value to [0, 1] along this axis.
+    fn t(&self, v: f64) -> f64 {
+        if self.log {
+            (v.max(f64::MIN_POSITIVE).ln() - self.min.ln()) / (self.max.ln() - self.min.ln())
+        } else {
+            (v - self.min) / (self.max - self.min)
+        }
+    }
+
+    /// Tick positions (data coordinates).
+    fn ticks(&self) -> Vec<f64> {
+        if self.log {
+            let lo = self.min.log10().floor() as i32;
+            let hi = self.max.log10().ceil() as i32;
+            (lo..=hi).map(|d| 10f64.powi(d)).filter(|&v| v >= self.min * 0.999 && v <= self.max * 1.001).collect()
+        } else {
+            let span = self.max - self.min;
+            let step = 10f64.powf(span.log10().floor());
+            let step = if span / step > 5.0 { step } else { step / 2.0 };
+            let mut v = (self.min / step).ceil() * step;
+            let mut out = Vec::new();
+            while v <= self.max + step * 1e-9 {
+                out.push(v);
+                v += step;
+            }
+            out
+        }
+    }
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 10_000.0 || a < 0.01 {
+        format!("{v:.0e}")
+    } else if v == v.trunc() {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+            .chars()
+            .take(6)
+            .collect()
+    }
+}
+
+/// Render a table as an SVG line chart.
+pub fn to_svg(table: &Table, opts: &PlotOpts) -> String {
+    let w = opts.width as f64;
+    let h = opts.height as f64;
+    let plot_w = w - MARGIN_L - MARGIN_R;
+    let plot_h = h - MARGIN_T - MARGIN_B;
+
+    let xs = Axis::build(table.rows.iter().map(|r| r[0]), opts.log_x);
+    let ys = Axis::build(
+        table.rows.iter().flat_map(|r| r[1..].iter().copied()),
+        opts.log_y,
+    );
+
+    let px = |v: f64| MARGIN_L + xs.t(v) * plot_w;
+    let py = |v: f64| MARGIN_T + (1.0 - ys.t(v)) * plot_h;
+
+    let mut s = String::with_capacity(8192);
+    s.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{}\" height=\"{}\" \
+         viewBox=\"0 0 {} {}\" font-family=\"sans-serif\" font-size=\"11\">\n",
+        opts.width, opts.height, opts.width, opts.height
+    ));
+    s.push_str(&format!(
+        "<rect width=\"{}\" height=\"{}\" fill=\"white\"/>\n",
+        opts.width, opts.height
+    ));
+    let title = opts.title.clone().unwrap_or_else(|| table.name.clone());
+    s.push_str(&format!(
+        "<text x=\"{}\" y=\"17\" text-anchor=\"middle\" font-size=\"13\">{}</text>\n",
+        w / 2.0,
+        xml_escape(&title)
+    ));
+
+    // Grid + ticks.
+    for tx in xs.ticks() {
+        let x = px(tx);
+        s.push_str(&format!(
+            "<line x1=\"{x:.1}\" y1=\"{:.1}\" x2=\"{x:.1}\" y2=\"{:.1}\" stroke=\"#ddd\"/>\n",
+            MARGIN_T,
+            MARGIN_T + plot_h
+        ));
+        s.push_str(&format!(
+            "<text x=\"{x:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n",
+            MARGIN_T + plot_h + 16.0,
+            fmt_tick(tx)
+        ));
+    }
+    for ty in ys.ticks() {
+        let y = py(ty);
+        s.push_str(&format!(
+            "<line x1=\"{:.1}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" stroke=\"#ddd\"/>\n",
+            MARGIN_L,
+            MARGIN_L + plot_w
+        ));
+        s.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\">{}</text>\n",
+            MARGIN_L - 6.0,
+            y + 4.0,
+            fmt_tick(ty)
+        ));
+    }
+    // Axes frame + labels.
+    s.push_str(&format!(
+        "<rect x=\"{:.1}\" y=\"{:.1}\" width=\"{plot_w:.1}\" height=\"{plot_h:.1}\" \
+         fill=\"none\" stroke=\"#333\"/>\n",
+        MARGIN_L, MARGIN_T
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n",
+        MARGIN_L + plot_w / 2.0,
+        h - 8.0,
+        xml_escape(&table.header[0])
+    ));
+
+    // Series.
+    for (si, name) in table.header[1..].iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let pts: Vec<String> = table
+            .rows
+            .iter()
+            .filter(|r| r[si + 1].is_finite() && (!ys.log || r[si + 1] > 0.0))
+            .map(|r| format!("{:.1},{:.1}", px(r[0]), py(r[si + 1])))
+            .collect();
+        if pts.len() > 1 {
+            s.push_str(&format!(
+                "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"1.8\"/>\n",
+                pts.join(" ")
+            ));
+        }
+        for p in &pts {
+            let (x, y) = p.split_once(',').unwrap();
+            s.push_str(&format!("<circle cx=\"{x}\" cy=\"{y}\" r=\"2.4\" fill=\"{color}\"/>\n"));
+        }
+        // Legend entry.
+        let ly = MARGIN_T + 14.0 * si as f64 + 8.0;
+        let lx = MARGIN_L + plot_w - 110.0;
+        s.push_str(&format!(
+            "<line x1=\"{lx:.1}\" y1=\"{ly:.1}\" x2=\"{:.1}\" y2=\"{ly:.1}\" \
+             stroke=\"{color}\" stroke-width=\"2\"/>\n",
+            lx + 18.0
+        ));
+        s.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\">{}</text>\n",
+            lx + 23.0,
+            ly + 4.0,
+            xml_escape(name)
+        ));
+    }
+
+    s.push_str("</svg>\n");
+    s
+}
+
+/// Write `<dir>/<table name>.svg`; returns the path.
+pub fn write_svg(table: &Table, dir: &str, opts: &PlotOpts) -> std::io::Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{}.svg", table.name);
+    std::fs::write(&path, to_svg(table, opts))?;
+    Ok(path)
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        let mut t = Table::new("plot_test", vec!["x".into(), "a".into(), "b".into()]);
+        for i in 1..=10 {
+            let x = i as f64;
+            t.push(vec![x, x * 2.0, 1000.0 / x]);
+        }
+        t
+    }
+
+    #[test]
+    fn svg_is_well_formed_ish() {
+        let svg = to_svg(&table(), &PlotOpts::default());
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains("plot_test"));
+        assert!(svg.contains(">a<") && svg.contains(">b<"), "legend labels");
+    }
+
+    #[test]
+    fn log_axis_kicks_in_automatically() {
+        // y spans 100..1000 over x 1..10 -> log y (span > 30 after
+        // combining both series: 2..2000).
+        let svg = to_svg(&table(), &PlotOpts::default());
+        // Log ticks are decades: 10, 100, 1000 appear as tick labels.
+        assert!(svg.contains(">100<") && svg.contains(">1000<"));
+    }
+
+    #[test]
+    fn nonfinite_and_nonpositive_points_are_dropped() {
+        let mut t = Table::new("nan_test", vec!["x".into(), "y".into()]);
+        t.push(vec![1.0, 1.0]);
+        t.push(vec![2.0, f64::NAN]);
+        t.push(vec![3.0, 4.0]);
+        t.push(vec![4.0, f64::INFINITY]);
+        t.push(vec![5.0, 9.0]);
+        let svg = to_svg(&t, &PlotOpts::default());
+        assert_eq!(svg.matches("<circle").count(), 3);
+    }
+
+    #[test]
+    fn write_svg_creates_file() {
+        let dir = std::env::temp_dir().join("psbs_plot_test");
+        let path = write_svg(&table(), dir.to_str().unwrap(), &PlotOpts::default()).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("<svg"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn escape_handles_markup() {
+        assert_eq!(xml_escape("a<b&c>d"), "a&lt;b&amp;c&gt;d");
+    }
+
+    #[test]
+    fn constant_series_does_not_collapse() {
+        let mut t = Table::new("const", vec!["x".into(), "y".into()]);
+        t.push(vec![0.0, 5.0]);
+        t.push(vec![1.0, 5.0]);
+        let svg = to_svg(&t, &PlotOpts::default());
+        assert!(svg.contains("<polyline"));
+    }
+}

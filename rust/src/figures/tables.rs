@@ -1,0 +1,122 @@
+//! Tabular output: pretty-printing and CSV persistence for the figure
+//! harness.
+
+use std::io::Write;
+
+/// A named table of f64 rows (figures are numeric series).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(name: impl Into<String>, header: Vec<String>) -> Table {
+        Table { name: name.into(), header, rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        debug_assert_eq!(row.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// CSV rendering (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format_cell(*v)).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write `<dir>/<name>.csv`.
+    pub fn write_csv(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.csv", self.name);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+
+    /// Terminal rendering with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|row| row.iter().map(|v| format_cell(*v)).collect())
+            .collect();
+        for row in &cells {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut s = format!("# {}\n", self.name);
+        let head: Vec<String> = self
+            .header
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        s.push_str(&head.join("  "));
+        s.push('\n');
+        for row in &cells {
+            let line: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+            s.push_str(&line.join("  "));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    if v == v.trunc() && v.abs() < 1e9 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1000.0 || (v != 0.0 && v.abs() < 0.001) {
+        format!("{v:.4e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("t", vec!["a".into(), "b".into()]);
+        t.push(vec![1.0, 2.5]);
+        t.push(vec![0.00001, 123456789.0]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn render_is_aligned() {
+        let mut t = Table::new("x", vec!["col".into(), "longer".into()]);
+        t.push(vec![1.0, 2.0]);
+        let r = t.render();
+        assert!(r.contains("# x"));
+        assert!(r.contains("col"));
+    }
+
+    #[test]
+    fn write_csv_creates_file() {
+        let mut t = Table::new("psbs_test_table", vec!["v".into()]);
+        t.push(vec![3.25]);
+        let dir = std::env::temp_dir().join("psbs_tables_test");
+        let path = t.write_csv(dir.to_str().unwrap()).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("3.25"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

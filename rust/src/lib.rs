@@ -1,0 +1,39 @@
+//! # PSBS: Practical Size-Based Scheduling — reproduction library
+//!
+//! Full reproduction of Dell'Amico, Carra & Michiardi, *"PSBS:
+//! Practical Size-Based Scheduling"* (2014): the PSBS scheduler
+//! (an O(log n), weight-aware, error-robust generalization of FSP),
+//! the complete zoo of disciplines it is evaluated against, a fast
+//! discrete-event simulator, workload synthesis and trace replay, an
+//! online scheduling service, and a benchmark harness regenerating
+//! every figure of the paper's evaluation.
+//!
+//! Architecture (three layers; see DESIGN.md):
+//! * **rust coordinator** (this crate) — schedulers, simulator,
+//!   service, figures;
+//! * **JAX graphs / Pallas kernels** (`python/compile`) — workload
+//!   synthesis and metric analytics, AOT-compiled to HLO text;
+//! * **PJRT runtime** ([`runtime`]) — loads and executes the artifacts
+//!   from the rust hot path. Python never runs at simulation time.
+//!
+//! Quick start:
+//! ```no_run
+//! use psbs::{sched, sim, workload};
+//!
+//! let cfg = workload::SynthConfig::default();          // Table 1 defaults
+//! let jobs = workload::synthesize(&cfg, 42);           // seeded workload
+//! let mut psbs = sched::psbs::Psbs::new();
+//! let res = sim::run(&mut psbs, &jobs);
+//! println!("MST = {}", res.mst(&jobs));
+//! ```
+
+pub mod coordinator;
+pub mod estimate;
+pub mod figures;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;

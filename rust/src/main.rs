@@ -1,0 +1,347 @@
+//! `psbs` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//! * `simulate`  — run one policy over one synthetic workload, print MST
+//!   and slowdown statistics;
+//! * `sweep`     — regenerate the paper's figures (`--fig N` or all),
+//!   writing CSVs into `results/`;
+//! * `replay`    — replay a trace file (SWIM TSV or squid log) through a
+//!   policy at a normalized load;
+//! * `serve`     — start the online scheduling service and drive it with
+//!   a synthetic open-loop client, reporting latency/throughput;
+//! * `gen-trace` — write a synthetic stand-in trace (Facebook/IRCache
+//!   statistics) in SWIM TSV form;
+//! * `dominance` — empirical check of the §3 theorem on random
+//!   workloads (Pri_S vs PS/DPS, PSBS vs DPS).
+
+use psbs::coordinator::{Service, ServiceConfig};
+use psbs::figures::{self, Ctx};
+use psbs::runtime::Runtime;
+use psbs::sched;
+use psbs::sim::{self, Job};
+use psbs::util::cli::Args;
+use psbs::util::rng::Rng;
+use psbs::workload::{self, traces, SizeDist, SynthConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match parsed.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&parsed),
+        Some("sweep") => cmd_sweep(&parsed),
+        Some("replay") => cmd_replay(&parsed),
+        Some("serve") => cmd_serve(&parsed),
+        Some("gen-trace") => cmd_gen_trace(&parsed),
+        Some("dominance") => cmd_dominance(&parsed),
+        Some("estimate") => cmd_estimate(&parsed),
+        Some("policies") => {
+            for p in sched::ALL_POLICIES {
+                println!("{p}");
+            }
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand: {other}\n{USAGE}")),
+        None => Err(USAGE.to_string()),
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+usage: psbs <subcommand> [options]
+  simulate   --policy P --shape S --sigma E --load L --njobs N --seed K [--weights-beta B] [--pareto ALPHA] [--timeshape T]
+  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge]
+  replay     --trace FILE --format swim|squid [--policy P] [--sigma E] [--load L] [--seed K]
+  serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
+  gen-trace  --stats facebook|ircache --out FILE [--seed K]
+  dominance  [--cases N] [--njobs J] [--seed K]
+  estimate   [--shape S] [--njobs N] [--seed K] (compare job-size estimators)
+  policies   (list scheduling disciplines)";
+
+/// Build a SynthConfig from common CLI flags.
+fn synth_cfg(a: &Args) -> Result<SynthConfig, String> {
+    let mut cfg = SynthConfig::default()
+        .with_shape(a.get_f64("shape", 0.25)?)
+        .with_sigma(a.get_f64("sigma", 0.5)?)
+        .with_load(a.get_f64("load", 0.9)?)
+        .with_timeshape(a.get_f64("timeshape", 1.0)?)
+        .with_njobs(a.get_u64("njobs", 10_000)? as usize)
+        .with_beta(a.get_f64("weights-beta", 0.0)?);
+    if let Some(alpha) = a.get_opt("pareto") {
+        let alpha: f64 = alpha.parse().map_err(|_| "--pareto: not a number".to_string())?;
+        cfg.size_dist = SizeDist::Pareto { alpha };
+    }
+    Ok(cfg)
+}
+
+fn cmd_simulate(a: &Args) -> Result<(), String> {
+    let policy = a.get("policy", "psbs");
+    let seed = a.get_u64("seed", 42)?;
+    let reps = a.get_u64("reps", 1)?;
+    let cfg = synth_cfg(a)?;
+    a.check_unknown()?;
+
+    let mut msts = Vec::new();
+    let mut all_slow = Vec::new();
+    for r in 0..reps {
+        let jobs = workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
+        let mut s = sched::by_name(&policy).ok_or_else(|| format!("unknown policy {policy}"))?;
+        let t0 = std::time::Instant::now();
+        let res = sim::run(s.as_mut(), &jobs);
+        let dt = t0.elapsed();
+        msts.push(res.mst(&jobs));
+        all_slow.extend(res.slowdowns(&jobs));
+        println!(
+            "rep {r}: policy={policy} njobs={} mst={:.4} events={} wall={:.1?}",
+            jobs.len(),
+            msts.last().unwrap(),
+            res.events,
+            dt
+        );
+    }
+    let mean_mst = psbs::stats::mean(&msts);
+    all_slow.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    println!("---");
+    println!("mean MST              {mean_mst:.4}");
+    println!("median slowdown       {:.4}", psbs::stats::quantile_sorted(&all_slow, 0.5));
+    println!("p99 slowdown          {:.4}", psbs::stats::quantile_sorted(&all_slow, 0.99));
+    println!("max slowdown          {:.4}", all_slow.last().copied().unwrap_or(f64::NAN));
+    println!(
+        "frac slowdown > 100   {:.4}",
+        psbs::metrics::frac_above(&all_slow, 100.0)
+    );
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<(), String> {
+    let fig = a.get_opt("fig").map(|f| f.parse::<u64>().map_err(|_| "--fig: integer")).transpose()?;
+    let svg = a.get_bool("svg")?;
+    let ctx = Ctx {
+        reps: a.get_u64("reps", 5)?,
+        njobs: a.get_u64("njobs", 10_000)? as usize,
+        seed: a.get_u64("seed", 42)?,
+        out_dir: a.get("out", "results"),
+        runtime: if a.get_bool("no-artifacts")? { None } else { Runtime::try_default() },
+        converge: a.get_bool("converge")?,
+    };
+    a.check_unknown()?;
+    if ctx.runtime.is_some() {
+        println!("# analytics running through the AOT PJRT artifacts");
+    } else {
+        println!("# AOT artifacts not loaded; using pure-rust analytics fallback");
+    }
+
+    let figs: Vec<u64> = match fig {
+        Some(f) => vec![f],
+        None => figures::ALL_FIGS.to_vec(),
+    };
+    for f in figs {
+        let t0 = std::time::Instant::now();
+        let tables = figures::by_number(&ctx, f).ok_or_else(|| format!("no figure {f}"))?;
+        for t in &tables {
+            println!("{}", t.render());
+            let path = t.write_csv(&ctx.out_dir).map_err(|e| e.to_string())?;
+            println!("wrote {path}");
+            if svg {
+                let opts = figures::plot::PlotOpts::default();
+                let path = figures::plot::write_svg(t, &ctx.out_dir, &opts)
+                    .map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
+        println!("# fig {f} done in {:.1?}\n", t0.elapsed());
+    }
+    Ok(())
+}
+
+fn cmd_replay(a: &Args) -> Result<(), String> {
+    let trace = a.get_opt("trace").ok_or("missing --trace FILE")?;
+    let format = a.get("format", "swim");
+    let policy = a.get("policy", "psbs");
+    let sigma = a.get_f64("sigma", 0.5)?;
+    let load = a.get_f64("load", 0.9)?;
+    let seed = a.get_u64("seed", 42)?;
+    a.check_unknown()?;
+
+    let recs = traces::load_file(&trace, &format).map_err(|e| e.to_string())?;
+    if recs.is_empty() {
+        return Err("trace has no usable records".into());
+    }
+    let jobs = traces::to_jobs(&recs, load, sigma, seed);
+    let mut s = sched::by_name(&policy).ok_or_else(|| format!("unknown policy {policy}"))?;
+    let t0 = std::time::Instant::now();
+    let res = sim::run(s.as_mut(), &jobs);
+    let wall = t0.elapsed();
+    let slow = res.slowdowns(&jobs);
+    println!(
+        "trace={} jobs={} policy={policy} sigma={sigma} load={load}",
+        trace,
+        jobs.len()
+    );
+    println!("MST                 {:.4}", res.mst(&jobs));
+    println!("median slowdown     {:.4}", psbs::stats::quantile(&slow, 0.5));
+    println!("p99 slowdown        {:.4}", psbs::stats::quantile(&slow, 0.99));
+    println!("frac slowdown > 100 {:.4}", psbs::metrics::frac_above(&slow, 100.0));
+    println!("sim wall time       {wall:.1?} ({:.0} jobs/s)", jobs.len() as f64 / wall.as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<(), String> {
+    let policy = a.get("policy", "psbs");
+    let speed = a.get_f64("speed", 10_000.0)?;
+    let njobs = a.get_u64("jobs", 200)? as usize;
+    let rate = a.get_f64("rate", 0.0)?; // jobs/s; 0 => closed-loop-ish burst
+    let shape = a.get_f64("shape", 0.25)?;
+    let sigma = a.get_f64("sigma", 0.5)?;
+    let seed = a.get_u64("seed", 42)?;
+    a.check_unknown()?;
+
+    use psbs::workload::dists::{Dist, LogNormal, Weibull};
+    let svc = Service::start(ServiceConfig { policy: policy.clone(), speed });
+    let size_dist = Weibull::with_mean(shape, speed * 0.01); // ~10ms mean service
+    let err = LogNormal::error_model(sigma);
+    let mut rng = Rng::new(seed);
+    let mut rxs = Vec::with_capacity(njobs);
+    for _ in 0..njobs {
+        let size = size_dist.sample(&mut rng).max(1e-3);
+        let est = (size * err.sample(&mut rng)).max(1e-3);
+        rxs.push(svc.submit(size, est, 1.0));
+        if rate > 0.0 {
+            let gap = -rng.u01_open_left().ln() / rate;
+            std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.1)));
+        }
+    }
+    let mut done = 0;
+    for rx in rxs {
+        if rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok() {
+            done += 1;
+        }
+    }
+    let stats = svc.shutdown();
+    println!("policy={policy} speed={speed} submitted={njobs} completed={done}");
+    println!("throughput       {:.1} jobs/s", stats.throughput());
+    println!("mean latency     {:.4} s", stats.mean_latency_s);
+    println!("p50 latency      {:.4} s", stats.p50_latency_s);
+    println!("p99 latency      {:.4} s", stats.p99_latency_s);
+    println!("mean slowdown    {:.3}", stats.mean_slowdown);
+    println!("max slowdown     {:.3}", stats.max_slowdown);
+    Ok(())
+}
+
+fn cmd_gen_trace(a: &Args) -> Result<(), String> {
+    let stats_name = a.get("stats", "facebook");
+    let out = a.get_opt("out").ok_or("missing --out FILE")?;
+    let seed = a.get_u64("seed", 42)?;
+    a.check_unknown()?;
+    let stats = match stats_name.as_str() {
+        "facebook" => &traces::FACEBOOK,
+        "ircache" => &traces::IRCACHE,
+        other => return Err(format!("unknown stats preset: {other}")),
+    };
+    let recs = traces::synth_trace(stats, seed);
+    traces::write_swim(&recs, &out).map_err(|e| e.to_string())?;
+    println!("wrote {} records to {out}", recs.len());
+    Ok(())
+}
+
+fn cmd_dominance(a: &Args) -> Result<(), String> {
+    let cases = a.get_u64("cases", 50)?;
+    let njobs = a.get_u64("njobs", 200)? as usize;
+    let seed = a.get_u64("seed", 42)?;
+    a.check_unknown()?;
+
+    use psbs::sched::pri::Pri;
+    let mut worst: f64 = 0.0;
+    for c in 0..cases {
+        let cfg = SynthConfig::default().with_njobs(njobs).with_sigma(0.0).with_beta(
+            if c % 2 == 0 { 0.0 } else { 1.0 },
+        );
+        let jobs: Vec<Job> = workload::synthesize(&cfg, seed.wrapping_add(c));
+        let base_name = if c % 2 == 0 { "ps" } else { "dps" };
+        let mut base = sched::by_name(base_name).unwrap();
+        let base_res = sim::run(base.as_mut(), &jobs);
+        let mut pri = Pri::from_completions(&base_res.completion);
+        let pri_res = sim::run(&mut pri, &jobs);
+        for i in 0..jobs.len() {
+            let lateness = pri_res.completion[i] - base_res.completion[i];
+            worst = worst.max(lateness);
+            if lateness > 1e-6 {
+                return Err(format!(
+                    "dominance violated: case {c} job {i} pri {} vs {base_name} {}",
+                    pri_res.completion[i], base_res.completion[i]
+                ));
+            }
+        }
+        // PSBS (exact sizes) must dominate DPS as well (§3/§5.2).
+        let mut psbs = sched::by_name("psbs").unwrap();
+        let psbs_res = sim::run(psbs.as_mut(), &jobs);
+        let mut dps = sched::by_name("dps").unwrap();
+        let dps_res = sim::run(dps.as_mut(), &jobs);
+        for i in 0..jobs.len() {
+            let lateness = psbs_res.completion[i] - dps_res.completion[i];
+            worst = worst.max(lateness);
+            if lateness > 1e-6 {
+                return Err(format!(
+                    "PSBS-vs-DPS dominance violated: case {c} job {i}: {} vs {}",
+                    psbs_res.completion[i], dps_res.completion[i]
+                ));
+            }
+        }
+    }
+    println!("dominance holds on {cases} random workloads (worst lateness {worst:.2e})");
+    Ok(())
+}
+
+/// Compare the practical estimators of §2.2 (oracle, HFSP-style
+/// sampling, size-class, log-normal reference) on one workload:
+/// a-posteriori quality (§6.3's correlation) and the resulting PSBS /
+/// SRPTE mean sojourn times against the exact-information optimum.
+fn cmd_estimate(a: &Args) -> Result<(), String> {
+    use psbs::estimate::{self, Estimator};
+    use psbs::figures::{exact_copy, run_mst, Reference};
+    let shape = a.get_f64("shape", 0.25)?;
+    let njobs = a.get_u64("njobs", 10_000)? as usize;
+    let seed = a.get_u64("seed", 42)?;
+    a.check_unknown()?;
+
+    let cfg = SynthConfig::default().with_shape(shape).with_sigma(0.0).with_njobs(njobs);
+    let base = workload::synthesize(&cfg, seed);
+    let opt = Reference::OptSrpt.mst(&exact_copy(&base));
+
+    let estimators: Vec<(&str, Box<dyn Estimator>)> = vec![
+        ("oracle", Box::new(estimate::OracleEstimator)),
+        ("sample-1%", Box::new(estimate::SamplingEstimator::new(0.01, 0.5))),
+        ("sample-5%", Box::new(estimate::SamplingEstimator::new(0.05, 0.5))),
+        ("sample-25%", Box::new(estimate::SamplingEstimator::new(0.25, 0.5))),
+        ("size-class", Box::new(estimate::ClassEstimator)),
+        ("lognorm-0.5", Box::new(estimate::LogNormalNoise::new(0.5))),
+        ("lognorm-2.0", Box::new(estimate::LogNormalNoise::new(2.0))),
+    ];
+    println!(
+        "{:<12} {:>9} {:>7} {:>7} {:>10} {:>10}",
+        "estimator", "log-sigma", "corr", "under%", "psbs/opt", "srpte/opt"
+    );
+    for (name, est) in estimators {
+        let jobs = estimate::apply(&base, est.as_ref(), seed ^ 0xE5);
+        let q = estimate::measure(&jobs);
+        println!(
+            "{:<12} {:>9.3} {:>7.3} {:>7.1} {:>10.3} {:>10.3}",
+            name,
+            q.log_sigma,
+            q.correlation,
+            q.frac_under * 100.0,
+            run_mst("psbs", &jobs) / opt,
+            run_mst("srpte", &jobs) / opt,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! Evaluation metrics (paper §6.2): mean sojourn time, per-job
+//! slowdown ECDF, mean conditional slowdown, CCDF.
+//!
+//! Two implementations of the aggregation pipeline exist:
+//! * this module — pure rust, exact, used by tests and as the fallback;
+//! * the AOT `analytics` artifact ([`crate::runtime::Analytics`]) —
+//!   the production path for large sweeps; `rust/tests/integration.rs`
+//!   cross-checks the two on identical inputs.
+
+use crate::sim::{Job, SimResult};
+
+/// Number of equal-count size classes for conditional slowdown (§7.5:
+/// "binning them into 100 job classes having similar size and
+/// containing the same number of jobs").
+pub const COND_BINS: usize = 100;
+
+/// Full metric bundle for one simulation run.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Mean sojourn time.
+    pub mst: f64,
+    /// Per-job slowdowns (aligned with job ids).
+    pub slowdowns: Vec<f64>,
+}
+
+/// Compute the bundle from a finished run.
+pub fn compute(jobs: &[Job], res: &SimResult) -> Metrics {
+    Metrics { mst: res.mst(jobs), slowdowns: res.slowdowns(jobs) }
+}
+
+/// Mean conditional slowdown (Fig. 7): sort jobs by size, split into
+/// `bins` equal-count classes, return (mean size, mean slowdown) per
+/// class.
+pub fn conditional_slowdown(jobs: &[Job], slowdowns: &[f64], bins: usize) -> Vec<(f64, f64)> {
+    assert_eq!(jobs.len(), slowdowns.len());
+    // Group through the same class assignment the analytics artifact
+    // receives ([`bin_indices`]) so the two pipelines agree exactly.
+    let idx = bin_indices(jobs, bins);
+    let mut size_sum = vec![0.0; bins];
+    let mut slow_sum = vec![0.0; bins];
+    let mut count = vec![0usize; bins];
+    for (i, &b) in idx.iter().enumerate() {
+        size_sum[b as usize] += jobs[i].size;
+        slow_sum[b as usize] += slowdowns[i];
+        count[b as usize] += 1;
+    }
+    (0..bins)
+        .filter(|&b| count[b] > 0)
+        .map(|b| (size_sum[b] / count[b] as f64, slow_sum[b] / count[b] as f64))
+        .collect()
+}
+
+/// Equal-count bin index per job (input to the analytics artifact):
+/// jobs sorted by size, class = rank * bins / n.
+pub fn bin_indices(jobs: &[Job], bins: usize) -> Vec<i32> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].size.partial_cmp(&jobs[b].size).unwrap());
+    let mut idx = vec![0i32; jobs.len()];
+    for (rank, &i) in order.iter().enumerate() {
+        idx[i] = (rank * bins / jobs.len().max(1)) as i32;
+    }
+    idx
+}
+
+/// ECDF of slowdowns evaluated at `thresholds` (Figs. 4 and 8):
+/// fraction of jobs with slowdown <= t.
+pub fn slowdown_ecdf(slowdowns: &[f64], thresholds: &[f64]) -> Vec<f64> {
+    let mut sorted = slowdowns.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len().max(1) as f64;
+    thresholds
+        .iter()
+        .map(|&t| {
+            let cnt = sorted.partition_point(|&s| s <= t);
+            cnt as f64 / n
+        })
+        .collect()
+}
+
+/// Log-spaced threshold grid covering slowdown 1..10^`decades`
+/// (matches the artifact's fixed 128-point input).
+pub fn log_thresholds(points: usize, decades: f64) -> Vec<f64> {
+    (0..points)
+        .map(|i| 10f64.powf(i as f64 * decades / (points - 1).max(1) as f64))
+        .collect()
+}
+
+/// Fraction of jobs with slowdown above `limit` (the paper's headline
+/// fairness number: "jobs with slowdown larger than 100 are around 1%
+/// for FSPE and around 8% for SRPTE").
+pub fn frac_above(slowdowns: &[f64], limit: f64) -> f64 {
+    slowdowns.iter().filter(|&&s| s > limit).count() as f64 / slowdowns.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimResult;
+
+    fn mk(jobs_sizes: &[(f64, f64)], completions: &[f64]) -> (Vec<Job>, SimResult) {
+        let jobs: Vec<Job> = jobs_sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, s))| Job::exact(i as u32, a, s))
+            .collect();
+        (jobs, SimResult { completion: completions.to_vec(), events: 0 })
+    }
+
+    #[test]
+    fn mst_and_slowdowns() {
+        let (jobs, res) = mk(&[(0.0, 1.0), (0.0, 2.0)], &[2.0, 4.0]);
+        let m = compute(&jobs, &res);
+        assert_eq!(m.mst, 3.0);
+        assert_eq!(m.slowdowns, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn conditional_slowdown_bins_by_size() {
+        // 4 jobs, 2 bins: small pair vs large pair.
+        let (jobs, res) = mk(
+            &[(0.0, 1.0), (0.0, 10.0), (0.0, 1.0), (0.0, 10.0)],
+            &[2.0, 20.0, 2.0, 40.0],
+        );
+        let m = compute(&jobs, &res);
+        let cs = conditional_slowdown(&jobs, &m.slowdowns, 2);
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0], (1.0, 2.0));
+        assert_eq!(cs[1], (10.0, 3.0)); // (20/10 + 40/10)/2
+    }
+
+    #[test]
+    fn bin_indices_are_equal_count() {
+        let jobs: Vec<Job> =
+            (0..1000).map(|i| Job::exact(i, 0.0, (i as f64 + 1.0) * 0.1)).collect();
+        let idx = bin_indices(&jobs, 100);
+        let mut counts = [0; 100];
+        for &i in &idx {
+            counts[i as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+        // Larger size => larger (or equal) bin.
+        assert!(idx[999] == 99 && idx[0] == 0);
+    }
+
+    #[test]
+    fn ecdf_basics() {
+        let e = slowdown_ecdf(&[1.0, 2.0, 4.0, 8.0], &[1.0, 3.0, 10.0]);
+        assert_eq!(e, vec![0.25, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn log_thresholds_span() {
+        let t = log_thresholds(128, 3.0);
+        assert_eq!(t.len(), 128);
+        assert!((t[0] - 1.0).abs() < 1e-12);
+        assert!((t[127] - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frac_above_counts_tail() {
+        assert_eq!(frac_above(&[1.0, 50.0, 150.0, 200.0], 100.0), 0.5);
+    }
+}

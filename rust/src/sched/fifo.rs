@@ -1,0 +1,90 @@
+//! FIFO — jobs run to completion in arrival order (§6.1).
+//!
+//! The paper uses FIFO both as the Hadoop-default baseline and as the
+//! limit case of a size-based scheduler whose estimates carry no
+//! information (§7.3).
+
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::EPS;
+use std::collections::VecDeque;
+
+/// First-in-first-out, non-preemptive, serial service at rate 1.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    /// (id, remaining); front is being served.
+    queue: VecDeque<(u32, f64)>,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        self.queue.push_back((job.id, job.size));
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        self.queue.front().map(|&(_, rem)| now + rem)
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let mut budget = t - now;
+        while let Some((id, rem)) = self.queue.front_mut() {
+            if *rem <= budget + EPS {
+                budget -= *rem;
+                let finished_at = t - budget.max(0.0);
+                let id = *id;
+                self.queue.pop_front();
+                done.push(Completion { id, time: finished_at });
+            } else {
+                *rem -= budget;
+                break;
+            }
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+
+    #[test]
+    fn serial_in_arrival_order() {
+        let jobs = vec![
+            Job::exact(0, 0.0, 2.0),
+            Job::exact(1, 0.5, 1.0), // smaller but must wait
+            Job::exact(2, 0.5, 0.1),
+        ];
+        let r = run(&mut Fifo::new(), &jobs);
+        assert_eq!(r.completion, vec![2.0, 3.0, 3.1]);
+    }
+
+    #[test]
+    fn estimates_are_ignored() {
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 2.0, est: 100.0, weight: 1.0 },
+            Job { id: 1, arrival: 0.0, size: 1.0, est: 0.01, weight: 1.0 },
+        ];
+        let r = run(&mut Fifo::new(), &jobs);
+        assert_eq!(r.completion, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn idle_period_resets_service() {
+        let jobs = vec![Job::exact(0, 0.0, 1.0), Job::exact(1, 5.0, 1.0)];
+        let r = run(&mut Fifo::new(), &jobs);
+        assert_eq!(r.completion, vec![1.0, 6.0]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Classic O(n) FSP — Friedman & Henderson's formulation, kept as
+//! (a) an independent oracle for the O(log n) implementation in
+//! [`super::fsp_family`] and (b) the baseline of the §5.2.2 complexity
+//! claim (`psbs_ops` bench: per-event cost O(n) vs O(log n)).
+//!
+//! The virtual PS system is emulated *literally*: every pending job's
+//! virtual remaining size is updated on every event (the O(n) step the
+//! virtual-lag trick removes).  Real side is identical to plain FSPE:
+//! serve the earliest virtual completer; late jobs run serially.
+
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::EPS;
+
+#[derive(Debug, Clone, Copy)]
+struct NJob {
+    id: u32,
+    /// Remaining size in the virtual PS system (estimated units).
+    virt_rem: f64,
+    true_rem: f64,
+    /// usize::MAX until the job completes virtually; then its rank.
+    virt_order: usize,
+}
+
+/// Naive-update FSP/FSPE.
+#[derive(Debug, Default)]
+pub struct FspNaive {
+    /// All jobs still active in either system (O(n) scans by design).
+    jobs: Vec<NJob>,
+    virt_seq: usize,
+}
+
+impl FspNaive {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn virt_pending(&self) -> usize {
+        self.jobs.iter().filter(|j| j.virt_order == usize::MAX).count()
+    }
+
+    /// Index of the served job: earliest late job, else the pending job
+    /// with minimum virtual remaining (they all shrink at the same
+    /// rate, so min remaining == earliest virtual completion).
+    fn serving(&self) -> Option<usize> {
+        let late = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.virt_order != usize::MAX && j.true_rem > 0.0)
+            .min_by_key(|(_, j)| j.virt_order);
+        if let Some((i, _)) = late {
+            return Some(i);
+        }
+        self.jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.true_rem > 0.0)
+            .min_by(|(a, x), (b, y)| {
+                x.virt_rem.partial_cmp(&y.virt_rem).unwrap().then(a.cmp(b))
+            })
+            .map(|(i, _)| i)
+    }
+}
+
+impl Scheduler for FspNaive {
+    fn name(&self) -> &'static str {
+        "fsp-naive"
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        // O(n) by construction: nothing to update here, but every
+        // `advance` touches all virtually-pending jobs.
+        self.jobs.push(NJob {
+            id: job.id,
+            virt_rem: job.est,
+            true_rem: job.size,
+            virt_order: usize::MAX,
+        });
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        let mut dt = f64::INFINITY;
+        let n_virt = self.virt_pending();
+        if n_virt > 0 {
+            // Earliest virtual completion: min virt_rem * n.
+            let min_rem = self
+                .jobs
+                .iter()
+                .filter(|j| j.virt_order == usize::MAX)
+                .map(|j| j.virt_rem)
+                .fold(f64::INFINITY, f64::min);
+            dt = dt.min(min_rem * n_virt as f64);
+        }
+        if let Some(i) = self.serving() {
+            dt = dt.min(self.jobs[i].true_rem);
+        }
+        if dt.is_finite() {
+            Some(now + dt.max(0.0))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let dt = t - now;
+        // Real progress.
+        if let Some(i) = self.serving() {
+            self.jobs[i].true_rem -= dt;
+            if self.jobs[i].true_rem <= EPS {
+                self.jobs[i].true_rem = 0.0;
+                done.push(Completion { id: self.jobs[i].id, time: t });
+            }
+        }
+        // Virtual progress: the O(n) update.
+        let n_virt = self.virt_pending();
+        if n_virt > 0 {
+            let share = dt / n_virt as f64;
+            for j in self.jobs.iter_mut() {
+                if j.virt_order == usize::MAX {
+                    j.virt_rem -= share;
+                }
+            }
+            // Virtual completions in deterministic order.
+            loop {
+                let next = self
+                    .jobs
+                    .iter_mut()
+                    .filter(|j| j.virt_order == usize::MAX && j.virt_rem <= EPS)
+                    .min_by(|x, y| {
+                        x.virt_rem.partial_cmp(&y.virt_rem).unwrap().then(x.id.cmp(&y.id))
+                    });
+                match next {
+                    Some(j) => {
+                        j.virt_order = self.virt_seq;
+                        self.virt_seq += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        // Garbage-collect jobs done in both systems.
+        self.jobs
+            .retain(|j| j.true_rem > 0.0 || j.virt_order == usize::MAX);
+    }
+
+    fn active(&self) -> usize {
+        self.jobs.iter().filter(|j| j.true_rem > 0.0).count()
+    }
+
+    /// Kill a pending job.  Mirrors the O(log n) family's semantics:
+    /// the job leaves the real system but keeps its virtual share until
+    /// its virtual completion (late jobs simply disappear).
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        let Some(i) = self.jobs.iter().position(|j| j.id == id && j.true_rem > 0.0) else {
+            return false;
+        };
+        if self.jobs[i].virt_order != usize::MAX {
+            self.jobs.remove(i); // late: gone from both systems
+        } else {
+            self.jobs[i].true_rem = 0.0; // "early": still ages virtually
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+
+    #[test]
+    fn fig2_example_matches_fsp() {
+        let jobs = vec![
+            Job::exact(0, 0.0, 10.0),
+            Job::exact(1, 3.0, 5.0),
+            Job::exact(2, 5.0, 2.0),
+        ];
+        let r = run(&mut FspNaive::new(), &jobs);
+        assert!((r.completion[2] - 7.0).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[1] - 10.0).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[0] - 17.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    #[test]
+    fn matches_ologn_family_without_errors() {
+        use crate::workload::dists::{Dist, Weibull};
+        let mut rng = crate::util::rng::Rng::new(41);
+        let w = Weibull::unit_mean(0.5);
+        let mut t = 0.0;
+        let jobs: Vec<Job> = (0..200)
+            .map(|i| {
+                t += rng.u01();
+                Job::exact(i, t, w.sample(&mut rng).max(1e-9))
+            })
+            .collect();
+        let naive = run(&mut FspNaive::new(), &jobs).completion;
+        let fast = run(&mut super::super::fsp_family::Psbs::new(), &jobs).completion;
+        for (i, (a, b)) in naive.iter().zip(&fast).enumerate() {
+            assert!((a - b).abs() < 1e-6, "job {i}: naive {a} vs psbs {b}");
+        }
+    }
+
+    #[test]
+    fn matches_fspe_with_errors() {
+        use crate::workload::dists::{Dist, LogNormal, Weibull};
+        let mut rng = crate::util::rng::Rng::new(43);
+        let w = Weibull::unit_mean(0.25);
+        let e = LogNormal::error_model(1.5);
+        let mut t = 0.0;
+        let jobs: Vec<Job> = (0..200)
+            .map(|i| {
+                t += rng.u01() * 0.3;
+                let size = w.sample(&mut rng).max(1e-9);
+                Job { id: i, arrival: t, size, est: size * e.sample(&mut rng), weight: 1.0 }
+            })
+            .collect();
+        let naive = run(&mut FspNaive::new(), &jobs).completion;
+        let fspe = run(&mut super::super::fsp_family::FspFamily::fspe(), &jobs).completion;
+        for (i, (a, b)) in naive.iter().zip(&fspe).enumerate() {
+            assert!((a - b).abs() < 1e-6, "job {i}: naive {a} vs fspe {b}");
+        }
+    }
+}

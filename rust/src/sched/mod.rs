@@ -1,0 +1,328 @@
+//! The scheduler zoo: every discipline evaluated in the paper.
+//!
+//! | module | disciplines | paper § |
+//! |--------|-------------|---------|
+//! | [`fifo`] | FIFO | §6.1 |
+//! | [`ps`] | PS, DPS (virtual-lag implementation) | §6.1 |
+//! | [`las`] | LAS (attained-service levels) | §2.1, §6.1 |
+//! | [`srpt`] | SRPT / SRPTE (late jobs block) | §4 |
+//! | [`srpte_hybrid`] | SRPTE+PS, SRPTE+LAS | §5.1 |
+//! | [`fsp_family`] | FSPE, FSPE+PS, FSPE+LAS, **PSBS** (Algorithm 1) | §4.2, §5 |
+//! | [`fsp_naive`] | FSP/FSPE with the classic O(n) virtual update | §3, §5.2.2 |
+//! | [`pri`] | Pri_S — the §3 dominance construction | §3 |
+//!
+//! All implement [`crate::sim::Scheduler`] and are cross-validated
+//! against the independent small-step oracle in `rust/tests/crossval.rs`.
+
+pub mod fifo;
+pub mod fsp_family;
+pub mod fsp_naive;
+pub mod las;
+pub mod mlfq;
+pub mod pri;
+pub mod ps;
+pub mod srpt;
+pub mod srpte_hybrid;
+
+// The headline scheduler gets a short path: `sched::psbs::Psbs`.
+pub mod psbs {
+    pub use super::fsp_family::Psbs;
+}
+
+use crate::sim::Scheduler;
+
+/// Policy names accepted by [`by_name`] (and the CLI / figure harness).
+pub const ALL_POLICIES: &[&str] = &[
+    "fifo", "ps", "dps", "las", "mlfq", "srpt", "srpte", "srpte+ps", "srpte+las",
+    "fsp", "fspe", "fspe+ps", "fspe+las", "psbs", "psbs-paperlit", "fsp-naive",
+];
+
+/// Construct a scheduler by CLI name.
+///
+/// `srpt` and `srpte` share one implementation (SRPT *is* SRPTE with
+/// exact estimates); likewise `fsp`/`fspe`.  `fsp-naive` is the classic
+/// O(n)-per-arrival FSP used for the §5.2.2 complexity comparison.
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    Some(match name {
+        "fifo" => Box::new(fifo::Fifo::new()),
+        "ps" => Box::new(ps::Dps::ps()),
+        "dps" => Box::new(ps::Dps::new()),
+        "las" => Box::new(las::Las::new()),
+        "mlfq" => Box::new(mlfq::Mlfq::default_zoo()),
+        "srpt" | "srpte" => Box::new(srpt::Srpte::new()),
+        "srpte+ps" => Box::new(srpte_hybrid::SrpteHybrid::ps()),
+        "srpte+las" => Box::new(srpte_hybrid::SrpteHybrid::las()),
+        "fsp" | "fspe" => Box::new(fsp_family::FspFamily::fspe()),
+        "fspe+ps" => Box::new(fsp_family::FspFamily::fspe_ps()),
+        "fspe+las" => Box::new(fsp_family::FspFamily::fspe_las()),
+        "psbs" => Box::new(fsp_family::Psbs::new()),
+        "psbs-paperlit" => Box::new(fsp_family::FspFamily::psbs_paper_literal()),
+        "fsp-naive" => Box::new(fsp_naive::FspNaive::new()),
+        _ => return None,
+    })
+}
+
+/// Binary min-heap keyed by `(f64, u64)` — the `(g_i, id)` priority
+/// queues of Algorithm 1 and friends.  `std::collections::BinaryHeap`
+/// is unusable here because f64 is not `Ord`; this implementation also
+/// gives us deterministic tie-breaking by sequence number, which the
+/// simulator's reproducibility relies on.
+#[derive(Debug, Clone)]
+pub struct MinHeap<T> {
+    items: Vec<(f64, u64, T)>,
+}
+
+impl<T> Default for MinHeap<T> {
+    fn default() -> Self {
+        MinHeap { items: Vec::new() }
+    }
+}
+
+impl<T> MinHeap<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// O(log n) push; `seq` breaks key ties deterministically.
+    pub fn push(&mut self, key: f64, seq: u64, value: T) {
+        self.items.push((key, seq, value));
+        self.sift_up(self.items.len() - 1);
+    }
+
+    /// Minimum element: `(key, seq, &value)`.
+    pub fn peek(&self) -> Option<(f64, u64, &T)> {
+        self.items.first().map(|(k, s, v)| (*k, *s, v))
+    }
+
+    /// Mutable access to the minimum element's payload.  The caller
+    /// must not change anything the *key* depends on (used by the FSP
+    /// family to update the served job's remaining work in O(1)).
+    pub fn head_mut(&mut self) -> Option<&mut T> {
+        self.items.first_mut().map(|(_, _, v)| v)
+    }
+
+    /// O(log n) pop of the minimum.
+    pub fn pop(&mut self) -> Option<(f64, u64, T)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let last = self.items.len() - 1;
+        self.items.swap(0, last);
+        let out = self.items.pop();
+        if !self.items.is_empty() {
+            self.sift_down(0);
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+
+    /// O(n) removal by sequence number (used by job cancellation — rare
+    /// by assumption, so the linear scan is acceptable; the swap-remove
+    /// plus one sift restores the heap in O(log n) after the scan).
+    pub fn remove_by_seq(&mut self, seq: u64) -> Option<(f64, u64, T)> {
+        let i = self.items.iter().position(|(_, s, _)| *s == seq)?;
+        let item = self.items.swap_remove(i);
+        if i < self.items.len() {
+            // The swapped-in element may violate order in either
+            // direction relative to its new position.
+            self.sift_down(i);
+            self.sift_up(i);
+        }
+        Some(item)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (f64, u64, &T)> {
+        self.items.iter().map(|(k, s, v)| (*k, *s, v))
+    }
+
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (ka, sa, _) = &self.items[a];
+        let (kb, sb, _) = &self.items[b];
+        match ka.partial_cmp(kb).expect("NaN key in MinHeap") {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => sa < sb,
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.less(i, parent) {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < self.items.len() && self.less(l, smallest) {
+                smallest = l;
+            }
+            if r < self.items.len() && self.less(r, smallest) {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            self.items.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// Heap-order invariant check (test/debug support).
+    pub fn check_invariant(&self) -> bool {
+        (1..self.items.len()).all(|i| !self.less(i, (i - 1) / 2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minheap_sorts() {
+        let mut h = MinHeap::new();
+        for (i, k) in [5.0, 1.0, 3.0, 2.0, 4.0].into_iter().enumerate() {
+            h.push(k, i as u64, ());
+        }
+        let mut out = Vec::new();
+        while let Some((k, _, _)) = h.pop() {
+            out.push(k);
+        }
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn minheap_tie_breaks_by_seq() {
+        let mut h = MinHeap::new();
+        h.push(1.0, 7, "b");
+        h.push(1.0, 3, "a");
+        assert_eq!(h.pop().unwrap().2, "a");
+        assert_eq!(h.pop().unwrap().2, "b");
+    }
+
+    #[test]
+    fn minheap_invariant_random() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut h = MinHeap::new();
+        for i in 0..1000u64 {
+            h.push(rng.u01(), i, i);
+            assert!(h.check_invariant());
+            if rng.u01() < 0.3 {
+                h.pop();
+            }
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some((k, _, _)) = h.pop() {
+            assert!(k >= last);
+            last = k;
+        }
+    }
+
+    #[test]
+    fn by_name_covers_all_policies() {
+        for name in ALL_POLICIES {
+            assert!(by_name(name).is_some(), "missing policy {name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn remove_by_seq_preserves_invariant_and_order() {
+        crate::util::check::property(
+            "minheap remove_by_seq",
+            crate::util::check::Config { cases: 48, max_size: 80, ..Default::default() },
+            |rng, size| {
+                let keys: Vec<f64> = (0..2 + size).map(|_| rng.u01()).collect();
+                let removals: Vec<u64> =
+                    (0..size / 2).map(|_| rng.below(keys.len() as u64 + 4)).collect();
+                (keys, removals)
+            },
+            |(keys, removals)| {
+                let mut h = MinHeap::new();
+                for (i, &k) in keys.iter().enumerate() {
+                    h.push(k, i as u64, i);
+                }
+                let mut gone = std::collections::HashSet::new();
+                for &seq in removals {
+                    let removed = h.remove_by_seq(seq);
+                    let expect = (seq as usize) < keys.len() && !gone.contains(&seq);
+                    if removed.is_some() != expect {
+                        return Err(format!("remove {seq}: got {removed:?}"));
+                    }
+                    if removed.is_some() {
+                        gone.insert(seq);
+                    }
+                    if !h.check_invariant() {
+                        return Err(format!("heap invariant broken after removing {seq}"));
+                    }
+                }
+                // Remaining elements pop in sorted order.
+                let mut last = f64::NEG_INFINITY;
+                let mut popped = 0;
+                while let Some((k, s, _)) = h.pop() {
+                    if k < last {
+                        return Err(format!("out of order: {k} after {last}"));
+                    }
+                    if gone.contains(&s) {
+                        return Err(format!("removed element {s} resurfaced"));
+                    }
+                    last = k;
+                    popped += 1;
+                }
+                if popped + gone.len() != keys.len() {
+                    return Err("element count mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Stress: every policy survives a batch of simultaneous arrivals
+    /// (an engine edge case — all jobs delivered at one instant) mixed
+    /// with near-zero sizes, and completes everything.
+    #[test]
+    fn mass_simultaneous_arrivals_stress() {
+        use crate::sim::{run, Job};
+        let mut rng = crate::util::rng::Rng::new(99);
+        let jobs: Vec<Job> = (0..300)
+            .map(|i| {
+                let size = if i % 7 == 0 { 1e-9 } else { rng.u01() + 1e-6 };
+                Job {
+                    id: i,
+                    arrival: if i < 150 { 0.0 } else { 1.0 },
+                    size,
+                    est: (size * (0.1 + rng.u01() * 5.0)).max(1e-12),
+                    weight: 1.0 / (1.0 + (i % 4) as f64),
+                }
+            })
+            .collect();
+        for policy in ALL_POLICIES {
+            let mut s = by_name(policy).unwrap();
+            let r = run(s.as_mut(), &jobs);
+            assert!(
+                r.completion.iter().all(|c| c.is_finite()),
+                "{policy} left jobs incomplete"
+            );
+            assert_eq!(s.active(), 0, "{policy} leaked active jobs");
+        }
+    }
+}

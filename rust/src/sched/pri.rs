@@ -1,0 +1,142 @@
+//! Pri_S — the §3 dominance construction.
+//!
+//! Given a *completion sequence* S (an ordering of all job ids), Pri_S
+//! serves, at every instant, the first pending job in S at full rate.
+//! The paper's theorem: Pri_S **dominates** any schedule whose
+//! completion sequence is S — no job completes later.  FSP is Pri_S
+//! applied to the completion sequence of PS; PSBS (without errors) is
+//! Pri_S applied to DPS.  The dominance property tests in
+//! `rust/tests/dominance.rs` exercise this scheduler directly.
+
+use super::MinHeap;
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::EPS;
+
+/// Serve jobs serially in a fixed priority order.
+#[derive(Debug)]
+pub struct Pri {
+    /// position[id] = rank in S (lower = earlier = higher priority).
+    position: Vec<usize>,
+    /// Pending jobs keyed by rank; payload = true remaining.
+    pending: MinHeap<f64>,
+}
+
+impl Pri {
+    /// Build from a completion sequence (job ids, earliest first).
+    pub fn new(sequence: &[u32]) -> Self {
+        let mut position = vec![usize::MAX; sequence.len()];
+        for (rank, &id) in sequence.iter().enumerate() {
+            assert!(
+                position[id as usize] == usize::MAX,
+                "duplicate id {id} in completion sequence"
+            );
+            position[id as usize] = rank;
+        }
+        assert!(
+            position.iter().all(|&p| p != usize::MAX),
+            "completion sequence must cover all ids 0..n"
+        );
+        Pri { position, pending: MinHeap::new() }
+    }
+
+    /// Convenience: Pri_S for the completion sequence of a finished
+    /// simulation (sort ids by completion time, ties by id).
+    pub fn from_completions(completion: &[f64]) -> Self {
+        let mut ids: Vec<u32> = (0..completion.len() as u32).collect();
+        ids.sort_by(|&a, &b| {
+            completion[a as usize]
+                .partial_cmp(&completion[b as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        Pri::new(&ids)
+    }
+}
+
+impl Scheduler for Pri {
+    fn name(&self) -> &'static str {
+        "pri"
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        let rank = self.position[job.id as usize];
+        self.pending.push(rank as f64, job.id as u64, job.size);
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        self.pending.peek().map(|(_, _, rem)| now + rem)
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let dt = t - now;
+        let completed = match self.pending.head_mut() {
+            Some(rem) => {
+                *rem -= dt;
+                *rem <= EPS
+            }
+            None => false,
+        };
+        if completed {
+            let (_, id, _) = self.pending.pop().unwrap();
+            done.push(Completion { id: id as u32, time: t });
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+
+    #[test]
+    fn serves_in_sequence_order() {
+        let jobs = vec![
+            Job::exact(0, 0.0, 2.0),
+            Job::exact(1, 0.0, 1.0),
+            Job::exact(2, 0.0, 1.0),
+        ];
+        let r = run(&mut Pri::new(&[2, 0, 1]), &jobs);
+        assert_eq!(r.completion, vec![3.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn preempts_for_higher_priority_arrival() {
+        let jobs = vec![Job::exact(0, 0.0, 3.0), Job::exact(1, 1.0, 1.0)];
+        let r = run(&mut Pri::new(&[1, 0]), &jobs);
+        // J0 runs [0,1); J1 (higher priority) preempts, runs [1,2);
+        // J0 resumes, done at 4.
+        assert_eq!(r.completion, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn fsp_is_pri_of_ps_sequence() {
+        // The theorem's construction: run PS, take its completion
+        // sequence, Pri_S over it must equal FSP's real schedule.
+        let jobs = vec![
+            Job::exact(0, 0.0, 10.0),
+            Job::exact(1, 3.0, 5.0),
+            Job::exact(2, 5.0, 2.0),
+        ];
+        let ps = run(&mut super::super::ps::Dps::ps(), &jobs);
+        let pri = run(&mut Pri::from_completions(&ps.completion), &jobs);
+        let fsp = run(&mut super::super::fsp_family::Psbs::new(), &jobs);
+        for i in 0..jobs.len() {
+            assert!(
+                (pri.completion[i] - fsp.completion[i]).abs() < 1e-9,
+                "job {i}: pri {} vs fsp {}",
+                pri.completion[i],
+                fsp.completion[i]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate id")]
+    fn rejects_duplicate_sequence() {
+        Pri::new(&[0, 0]);
+    }
+}

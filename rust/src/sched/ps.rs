@@ -1,0 +1,167 @@
+//! PS and DPS via the paper's own virtual-lag trick (§5.2.2).
+//!
+//! Processor sharing: all pending jobs receive rate `1/n` (DPS:
+//! `w_i/Σw`).  Instead of updating every job's remaining size at each
+//! event (O(n)), we track a global *lag* `g` growing at `1/Σw` and give
+//! each arriving job an immutable completion lag `g_i = g + s_i/w_i`;
+//! jobs complete when `g` reaches `g_i`, in `g_i` order, from a binary
+//! min-heap — O(log n) per event.  (This is exactly the structure PSBS
+//! uses for its *virtual* system; here it runs the *real* one.)
+
+use super::MinHeap;
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::EPS;
+
+/// Discriminatory processor sharing (PS when `use_weights` is false or
+/// all weights are 1).
+#[derive(Debug)]
+pub struct Dps {
+    /// Completion-lag heap: key `g_i`, payload weight.
+    heap: MinHeap<f64>,
+    /// Global lag `g` (grows at `1/Σw` while jobs are pending).
+    g: f64,
+    /// Σ weights of pending jobs.
+    wsum: f64,
+    use_weights: bool,
+}
+
+impl Dps {
+    /// Weight-respecting DPS (§6.1, §7.6).
+    pub fn new() -> Self {
+        Dps { heap: MinHeap::new(), g: 0.0, wsum: 0.0, use_weights: true }
+    }
+
+    /// Plain PS: every job weighs 1 regardless of `Job::weight`.
+    pub fn ps() -> Self {
+        Dps { use_weights: false, ..Dps::new() }
+    }
+
+    fn weight_of(&self, job: &Job) -> f64 {
+        if self.use_weights {
+            job.weight
+        } else {
+            1.0
+        }
+    }
+}
+
+impl Default for Dps {
+    fn default() -> Self {
+        Dps::new()
+    }
+}
+
+impl Scheduler for Dps {
+    fn name(&self) -> &'static str {
+        if self.use_weights {
+            "dps"
+        } else {
+            "ps"
+        }
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        let w = self.weight_of(job);
+        // True size: PS is size-oblivious; a job leaves when it has
+        // *received* its true service demand.
+        self.heap.push(self.g + job.size / w, job.id as u64, w);
+        self.wsum += w;
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        let (g_min, _, _) = self.heap.peek()?;
+        Some(now + (g_min - self.g).max(0.0) * self.wsum)
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        if self.wsum > 0.0 {
+            self.g += (t - now) / self.wsum;
+        }
+        // Complete every job whose lag has been reached. Comparison in
+        // *time* units (lag gap x Σw) so EPS keeps its meaning.
+        while let Some((g_i, _, _)) = self.heap.peek() {
+            if (g_i - self.g) * self.wsum <= EPS {
+                let (_, id, w) = self.heap.pop().unwrap();
+                self.wsum -= w;
+                if self.heap.is_empty() {
+                    self.wsum = 0.0; // kill accumulated rounding
+                }
+                done.push(Completion { id: id as u32, time: t });
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+
+    #[test]
+    fn two_equal_jobs_share() {
+        let jobs = vec![Job::exact(0, 0.0, 1.0), Job::exact(1, 0.0, 1.0)];
+        let r = run(&mut Dps::ps(), &jobs);
+        assert!((r.completion[0] - 2.0).abs() < 1e-9);
+        assert!((r.completion[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staggered_arrival_hand_computed() {
+        // J0 (size 2) alone on [0,1): rem 1. J1 (size 1) arrives at 1;
+        // both at rate 1/2: J1 needs 2 time units -> done at 3; J0 also
+        // has rem 1 at t=1 -> done at 3.
+        let jobs = vec![Job::exact(0, 0.0, 2.0), Job::exact(1, 1.0, 1.0)];
+        let r = run(&mut Dps::ps(), &jobs);
+        assert!((r.completion[0] - 3.0).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[1] - 3.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    #[test]
+    fn dps_weights_shift_completion() {
+        // weights 2:1, sizes 1:1 -> rates 2/3, 1/3; J0 done at 1.5;
+        // then J1 alone (rem 0.5) -> done at 2.0.
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 1.0, est: 1.0, weight: 2.0 },
+            Job { id: 1, arrival: 0.0, size: 1.0, est: 1.0, weight: 1.0 },
+        ];
+        let r = run(&mut Dps::new(), &jobs);
+        assert!((r.completion[0] - 1.5).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[1] - 2.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    #[test]
+    fn ps_ignores_weights() {
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 1.0, est: 1.0, weight: 100.0 },
+            Job { id: 1, arrival: 0.0, size: 1.0, est: 1.0, weight: 1.0 },
+        ];
+        let r = run(&mut Dps::ps(), &jobs);
+        assert!((r.completion[0] - 2.0).abs() < 1e-9);
+        assert!((r.completion[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slowdown_constant_under_ps_batch() {
+        // A PS batch arriving together: slowdown of each job is n for
+        // equal sizes (paper §7.2's "staircase" intuition).
+        let jobs: Vec<Job> = (0..4).map(|i| Job::exact(i, 0.0, 1.0)).collect();
+        let r = run(&mut Dps::ps(), &jobs);
+        for j in &jobs {
+            assert!((j.slowdown(r.completion[j.id as usize]) - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn idle_gap_between_bursts() {
+        let jobs = vec![Job::exact(0, 0.0, 1.0), Job::exact(1, 10.0, 1.0)];
+        let r = run(&mut Dps::ps(), &jobs);
+        assert!((r.completion[0] - 1.0).abs() < 1e-9);
+        assert!((r.completion[1] - 11.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,316 @@
+//! SRPTE+PS and SRPTE+LAS — the paper's §5.1 amendments to SRPTE.
+//!
+//! As long as no job is late these behave exactly like SRPTE.  When
+//! late jobs exist, the *eligible set* is **all late jobs plus the
+//! highest-priority non-late job** (jobs go late only while served, so
+//! non-late jobs must keep getting a chance — unlike the FSPE variants
+//! which schedule late jobs only).  Eligible jobs share the server:
+//!
+//! * `SrpteHybrid::ps()`  — PS among eligible jobs;
+//! * `SrpteHybrid::las()` — LAS among eligible jobs (equal split of the
+//!   least-attained group).
+//!
+//! The late set is small in practice (§7.2), so per-event O(|L|) scans
+//! are the right trade-off versus maintaining more heaps.
+
+use super::MinHeap;
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::EPS;
+
+/// How eligible jobs share the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShareMode {
+    Ps,
+    Las,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Elig {
+    id: u32,
+    est_rem: f64,
+    true_rem: f64,
+    /// Original size (attained = size - true_rem, for LAS mode).
+    size: f64,
+}
+
+impl Elig {
+    fn attained(&self) -> f64 {
+        self.size - self.true_rem
+    }
+}
+
+/// SRPTE with PS/LAS among late jobs + the best non-late job.
+#[derive(Debug)]
+pub struct SrpteHybrid {
+    mode: ShareMode,
+    /// The non-late eligible job (highest SRPTE priority).
+    slot: Option<Elig>,
+    /// Late jobs (est_rem <= 0); unordered, scanned per event.
+    late: Vec<Elig>,
+    /// Non-late, non-eligible jobs keyed by estimated remainder
+    /// (static while waiting). Payload: (true_rem, size).
+    waiting: MinHeap<(f64, f64)>,
+}
+
+impl SrpteHybrid {
+    pub fn new(mode: ShareMode) -> Self {
+        SrpteHybrid { mode, slot: None, late: Vec::new(), waiting: MinHeap::new() }
+    }
+
+    pub fn ps() -> Self {
+        Self::new(ShareMode::Ps)
+    }
+
+    pub fn las() -> Self {
+        Self::new(ShareMode::Las)
+    }
+
+    fn pull_slot(&mut self) {
+        if self.slot.is_none() {
+            if let Some((est_rem, id, (true_rem, size))) = self.waiting.pop() {
+                self.slot = Some(Elig { id: id as u32, est_rem, true_rem, size });
+            }
+        }
+    }
+
+    /// Service rates: (late_rates[i], slot_rate). Rates sum to 1 when
+    /// any job is eligible.
+    fn rates(&self) -> (Vec<f64>, f64) {
+        let n_elig = self.late.len() + usize::from(self.slot.is_some());
+        if n_elig == 0 {
+            return (Vec::new(), 0.0);
+        }
+        match self.mode {
+            ShareMode::Ps => {
+                let share = 1.0 / n_elig as f64;
+                (vec![share; self.late.len()], if self.slot.is_some() { share } else { 0.0 })
+            }
+            ShareMode::Las => {
+                // Equal split of the least-attained group among eligible.
+                let slot_att = self.slot.map(|s| s.attained());
+                let min_att = self
+                    .late
+                    .iter()
+                    .map(|e| e.attained())
+                    .chain(slot_att)
+                    .fold(f64::INFINITY, f64::min);
+                let in_group = |a: f64| a <= min_att + EPS;
+                let k = self.late.iter().filter(|e| in_group(e.attained())).count()
+                    + usize::from(slot_att.map_or(false, in_group));
+                let share = 1.0 / k as f64;
+                (
+                    self.late
+                        .iter()
+                        .map(|e| if in_group(e.attained()) { share } else { 0.0 })
+                        .collect(),
+                    if slot_att.map_or(false, in_group) { share } else { 0.0 },
+                )
+            }
+        }
+    }
+}
+
+impl Scheduler for SrpteHybrid {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            ShareMode::Ps => "srpte+ps",
+            ShareMode::Las => "srpte+las",
+        }
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        let fresh = Elig { id: job.id, est_rem: job.est, true_rem: job.size, size: job.size };
+        match self.slot {
+            None => self.slot = Some(fresh),
+            Some(cur) if job.est < cur.est_rem => {
+                // The slot job is non-late by construction (it would
+                // have moved to `late` otherwise), so preemption is
+                // purely priority-based.
+                self.waiting.push(cur.est_rem, cur.id as u64, (cur.true_rem, cur.size));
+                self.slot = Some(fresh);
+            }
+            Some(_) => self.waiting.push(job.est, job.id as u64, (job.size, job.size)),
+        }
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        let (late_rates, slot_rate) = self.rates();
+        let mut dt = f64::INFINITY;
+        for (e, r) in self.late.iter().zip(&late_rates) {
+            if *r > 0.0 {
+                dt = dt.min(e.true_rem / r);
+            }
+        }
+        if let Some(s) = &self.slot {
+            if slot_rate > 0.0 {
+                // Completion, or the slot job going late (est hits 0).
+                dt = dt.min(s.true_rem / slot_rate);
+                if s.est_rem > 0.0 {
+                    dt = dt.min(s.est_rem / slot_rate);
+                }
+            }
+        }
+        if self.mode == ShareMode::Las {
+            // Regroup: the served group catches the next attained level.
+            let (late_rates, slot_rate) = (late_rates, slot_rate);
+            let served_att = self
+                .late
+                .iter()
+                .zip(&late_rates)
+                .filter(|(_, r)| **r > 0.0)
+                .map(|(e, _)| e.attained())
+                .chain(self.slot.filter(|_| slot_rate > 0.0).map(|s| s.attained()))
+                .fold(f64::INFINITY, f64::min);
+            let next_att = self
+                .late
+                .iter()
+                .map(|e| e.attained())
+                .chain(self.slot.map(|s| s.attained()))
+                .filter(|a| *a > served_att + EPS)
+                .fold(f64::INFINITY, f64::min);
+            if next_att.is_finite() {
+                let k = late_rates.iter().filter(|r| **r > 0.0).count()
+                    + usize::from(slot_rate > 0.0);
+                dt = dt.min((next_att - served_att) * k as f64);
+            }
+        }
+        if dt.is_finite() {
+            Some(now + dt.max(0.0))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let dt = t - now;
+        let (late_rates, slot_rate) = self.rates();
+        for (e, r) in self.late.iter_mut().zip(&late_rates) {
+            e.true_rem -= r * dt;
+            e.est_rem -= r * dt;
+        }
+        if let Some(s) = self.slot.as_mut() {
+            s.true_rem -= slot_rate * dt;
+            s.est_rem -= slot_rate * dt;
+        }
+
+        // Completions among late jobs.
+        let mut i = 0;
+        while i < self.late.len() {
+            if self.late[i].true_rem <= EPS {
+                let e = self.late.swap_remove(i);
+                done.push(Completion { id: e.id, time: t });
+            } else {
+                i += 1;
+            }
+        }
+        // Slot: completion, or late transition.
+        if let Some(s) = self.slot {
+            if s.true_rem <= EPS {
+                done.push(Completion { id: s.id, time: t });
+                self.slot = None;
+            } else if s.est_rem <= EPS {
+                self.late.push(s);
+                self.slot = None;
+            }
+        }
+        self.pull_slot();
+    }
+
+    fn active(&self) -> usize {
+        self.late.len() + self.waiting.len() + usize::from(self.slot.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+
+    /// §5.1's motivating example: a late job no longer blocks.
+    #[test]
+    fn ps_mode_shares_with_late_job() {
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 },
+            Job::exact(1, 2.0, 1.0),
+        ];
+        let r = run(&mut SrpteHybrid::ps(), &jobs);
+        // From t=2: late J0 (rem 2) and J1 (rem 1) each at 1/2.
+        // J1 done at 4; J0 rem 1 at t=4, alone -> done at 5.
+        assert!((r.completion[1] - 4.0).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[0] - 5.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    #[test]
+    fn las_mode_favors_fresh_small_job() {
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 },
+            Job::exact(1, 2.0, 1.0),
+        ];
+        let r = run(&mut SrpteHybrid::las(), &jobs);
+        // At t=2 late J0 has attained 2, J1 attained 0: LAS serves J1
+        // alone -> done at 3 (slowdown 1); J0 resumes -> done at 5.
+        assert!((r.completion[1] - 3.0).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[0] - 5.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    #[test]
+    fn equals_srpte_without_errors() {
+        use crate::workload::dists::{Dist, Weibull};
+        let mut rng = crate::util::rng::Rng::new(11);
+        let w = Weibull::unit_mean(0.5);
+        let mut t = 0.0;
+        let jobs: Vec<Job> = (0..300)
+            .map(|i| {
+                t += rng.u01();
+                Job::exact(i, t, w.sample(&mut rng).max(1e-6))
+            })
+            .collect();
+        let a = run(&mut SrpteHybrid::ps(), &jobs).completion;
+        let b = run(&mut super::super::srpt::Srpte::new(), &jobs).completion;
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "SRPTE+PS must equal SRPTE with exact sizes");
+        }
+        let c = run(&mut SrpteHybrid::las(), &jobs).completion;
+        for (x, y) in c.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "SRPTE+LAS must equal SRPTE with exact sizes");
+        }
+    }
+
+    #[test]
+    fn multiple_late_jobs_share() {
+        // Two under-estimated jobs both go late; they then share.
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 3.0, est: 1.0, weight: 1.0 },
+            Job { id: 1, arrival: 0.0, size: 3.0, est: 2.0, weight: 1.0 },
+        ];
+        let r = run(&mut SrpteHybrid::ps(), &jobs);
+        // J0 served first (est 1 < 2), late at t=1; then J0(late) + J1
+        // (slot) share. J1 goes late after serving 2 => t=5. Then both
+        // late, sharing; J0 rem = 3-1-2=0 at t=5... step through:
+        // [0,1): J0 alone, att 1, late. [1,?): J0,J1 at 1/2.
+        // J1 est 2 -> late after 2 att => t=5. J0 att 1+2=3 => done t=5.
+        // J1 rem 1, alone -> done t=6.
+        assert!((r.completion[0] - 5.0).abs() < 1e-9, "{:?}", r.completion);
+        assert!((r.completion[1] - 6.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    #[test]
+    fn work_conserving_random() {
+        use crate::workload::dists::{Dist, LogNormal, Weibull};
+        let mut rng = crate::util::rng::Rng::new(23);
+        let w = Weibull::unit_mean(0.25);
+        let e = LogNormal::error_model(2.0);
+        let mut t = 0.0;
+        let jobs: Vec<Job> = (0..200)
+            .map(|i| {
+                t += rng.u01() * 0.3;
+                let size = w.sample(&mut rng).max(1e-6);
+                Job { id: i, arrival: t, size, est: size * e.sample(&mut rng), weight: 1.0 }
+            })
+            .collect();
+        for mut s in [SrpteHybrid::ps(), SrpteHybrid::las()] {
+            let r = run(&mut s, &jobs);
+            assert!(r.completion.iter().all(|c| c.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! The workload unit: a job with true size, estimated size and weight.
+
+/// One job in the single-server preemptive model (§3 of the paper:
+/// `1|r_i; pmtn|...`).  Sizes are in service-time units (service rate
+/// normalized to 1); `est` is what the scheduler sees, `size` is what
+/// the server actually has to do.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Job {
+    /// Dense id: index into the workload's job vector.
+    pub id: u32,
+    /// Release time r_i.
+    pub arrival: f64,
+    /// True size s_i (> 0).
+    pub size: f64,
+    /// Estimated size s_hat_i (> 0) — equals `size` for exact-info runs.
+    pub est: f64,
+    /// Weight w_i (> 0); 1.0 unless the experiment differentiates jobs
+    /// (paper §7.6).
+    pub weight: f64,
+}
+
+impl Job {
+    /// Unweighted, exactly-estimated job.
+    pub fn exact(id: u32, arrival: f64, size: f64) -> Job {
+        Job { id, arrival, size, est: size, weight: 1.0 }
+    }
+
+    /// Job with an estimation error multiplier (`est = size * mult`).
+    pub fn estimated(id: u32, arrival: f64, size: f64, mult: f64) -> Job {
+        Job { id, arrival, size, est: size * mult, weight: 1.0 }
+    }
+
+    /// Paper's slowdown for a given completion time.
+    pub fn slowdown(&self, completion: f64) -> f64 {
+        (completion - self.arrival) / self.size
+    }
+}
+
+/// A real (not virtual) job completion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub id: u32,
+    pub time: f64,
+}
+
+/// Validate a workload: sorted arrivals, positive sizes/weights.
+/// Panics with a description on the first violation (workload
+/// generators are required to uphold this; traces are sanitized on
+/// parse).
+pub fn validate(jobs: &[Job]) {
+    let mut last = f64::NEG_INFINITY;
+    for (i, j) in jobs.iter().enumerate() {
+        assert_eq!(j.id as usize, i, "job ids must be dense indices");
+        assert!(j.arrival >= last, "arrivals must be sorted (job {i})");
+        assert!(j.size > 0.0, "job {i} has non-positive size");
+        assert!(j.est > 0.0, "job {i} has non-positive estimate");
+        assert!(j.weight > 0.0, "job {i} has non-positive weight");
+        last = j.arrival;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slowdown_definition() {
+        let j = Job::exact(0, 10.0, 2.0);
+        assert_eq!(j.slowdown(14.0), 2.0); // waited 4, size 2
+        assert_eq!(j.slowdown(12.0), 1.0); // optimal
+    }
+
+    #[test]
+    fn estimated_multiplier() {
+        let j = Job::estimated(0, 0.0, 4.0, 0.5);
+        assert_eq!(j.est, 2.0);
+        assert_eq!(j.size, 4.0);
+    }
+
+    #[test]
+    fn validate_accepts_good_workload() {
+        validate(&[
+            Job::exact(0, 0.0, 1.0),
+            Job::exact(1, 0.5, 2.0),
+            Job::exact(2, 0.5, 3.0),
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn validate_rejects_unsorted() {
+        validate(&[Job::exact(0, 1.0, 1.0), Job::exact(1, 0.5, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive size")]
+    fn validate_rejects_zero_size() {
+        validate(&[Job::exact(0, 0.0, 0.0)]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Discrete-event simulation core.
+//!
+//! * [`Job`] / [`Completion`] — the workload unit and its outcome.
+//! * [`Scheduler`] — the event-driven discipline interface implemented
+//!   by every policy in [`crate::sched`].
+//! * [`engine`] — the event loop merging the arrival stream with each
+//!   scheduler's internal event stream.
+//! * [`smallstep`] — an independent fixed-step integrator over
+//!   allocation functions ω(i,t), used purely as a cross-validation
+//!   oracle for the event-driven implementations.
+
+pub mod engine;
+pub mod job;
+pub mod smallstep;
+
+pub use engine::{run, run_with_observer, SimResult};
+pub use job::{Completion, Job};
+
+/// An event-driven scheduling discipline.
+///
+/// The engine drives implementations through three calls:
+///
+/// 1. [`Scheduler::on_arrival`] — a job is released at time `now`
+///    (the engine has already advanced state to `now`).
+/// 2. [`Scheduler::next_event`] — earliest *future* time (> `now`) at
+///    which the scheduler's internal state changes discontinuously
+///    (a real completion, a virtual completion, a service-group
+///    regroup, a late transition), assuming no further arrivals.
+/// 3. [`Scheduler::advance`] — integrate state forward from `now` to
+///    `t` (with `t` no later than `next_event`), appending any real
+///    completions that occur exactly at `t`.
+///
+/// Work conservation, preemption rules and tie-breaking are entirely
+/// the implementation's business; the engine only merges event streams.
+pub trait Scheduler {
+    /// Discipline name (used in reports and CSV headers).
+    fn name(&self) -> &'static str;
+
+    /// A job arrives. State has already been advanced to `now`.
+    fn on_arrival(&mut self, now: f64, job: &Job);
+
+    /// Earliest future internal event, or `None` if the scheduler is
+    /// idle (no pending real work *and* no pending internal events).
+    fn next_event(&self, now: f64) -> Option<f64>;
+
+    /// Advance internal state from `now` to `t >= now`, pushing real
+    /// completions (with their exact completion times) onto `done`.
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>);
+
+    /// Number of jobs released but not yet really completed.
+    fn active(&self) -> usize;
+
+    /// Cancel (kill) a pending job: remove it from all bookkeeping
+    /// without completing it.  Returns `true` if the job was found and
+    /// removed; the default implementation reports the discipline does
+    /// not support cancellation.  This is the "additional bookkeeping
+    /// ... to handle jobs that complete even when they are not
+    /// scheduled (e.g. ... after being killed)" of paper §5.2.2.
+    fn cancel(&mut self, _now: f64, _id: u32) -> bool {
+        false
+    }
+}

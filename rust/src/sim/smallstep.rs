@@ -1,0 +1,402 @@
+//! Fixed-step reference simulator — the cross-validation oracle.
+//!
+//! Every discipline is re-expressed here *directly from its paper
+//! definition* as an allocation function ω(i, t) over per-job state
+//! (attained service, virtual remaining), integrated with a small time
+//! step.  The implementations share nothing with the event-driven
+//! schedulers in [`crate::sched`], so agreement between the two (see
+//! `rust/tests/crossval.rs`) validates the event-driven bookkeeping —
+//! heaps, virtual lag, late sets — against the definitions.
+//!
+//! Accuracy is O(dt); tests use small workloads and compare completion
+//! times with a tolerance of a few dt.  This module is **test-only
+//! machinery** (never on the measurement path).
+
+use super::job::Job;
+
+/// Disciplines the oracle can integrate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    Ps,
+    Dps,
+    Las,
+    /// SRPT over estimates (exact when est == size); a late serving job
+    /// (estimated remaining <= 0) is never preempted (§4.2).
+    Srpte,
+    /// SRPTE, but all late jobs + the best non-late job share via PS (§5.1).
+    SrptePs,
+    /// SRPTE, but eligible jobs are scheduled via LAS (§5.1).
+    SrpteLas,
+    /// FSP over estimates: serve jobs in virtual (PS-emulated)
+    /// completion order; late jobs (virtually done, really pending)
+    /// run serially and block (§4.2).
+    Fspe,
+    /// FSPE with PS among late jobs (§5.1).
+    FspePs,
+    /// FSPE with LAS among late jobs (§5.1).
+    FspeLas,
+    /// PSBS: FSPE+PS generalized with weights — the virtual system is
+    /// DPS and late jobs share in proportion to weight (§5.2).
+    Psbs,
+}
+
+struct St {
+    arrival: f64,
+    size: f64,
+    est: f64,
+    weight: f64,
+    attained: f64,
+    /// Remaining *estimated* work in the virtual system (FSP family).
+    virt_rem: f64,
+    /// Order in which the job completed virtually (usize::MAX if not yet).
+    virt_order: usize,
+    done_at: f64,
+}
+
+const TOL: f64 = 1e-12;
+
+/// Integrate `policy` over `jobs` with step `dt`; returns completion
+/// times by job id.
+pub fn simulate(policy: Policy, jobs: &[Job], dt: f64) -> Vec<f64> {
+    let mut st: Vec<St> = jobs
+        .iter()
+        .map(|j| St {
+            arrival: j.arrival,
+            size: j.size,
+            est: j.est,
+            weight: j.weight,
+            attained: 0.0,
+            virt_rem: j.est,
+            virt_order: usize::MAX,
+            done_at: f64::NAN,
+        })
+        .collect();
+
+    let uses_virtual = matches!(
+        policy,
+        Policy::Fspe | Policy::FspePs | Policy::FspeLas | Policy::Psbs
+    );
+    let mut virt_seq = 0usize;
+    let mut t = 0.0_f64;
+    let mut remaining = jobs.len();
+    let mut alloc: Vec<f64> = vec![0.0; jobs.len()];
+    // Hard stop so a buggy policy cannot spin forever: total work is
+    // bounded by sum of sizes + last arrival.
+    let t_max = jobs.iter().map(|j| j.size).sum::<f64>()
+        + jobs.last().map(|j| j.arrival).unwrap_or(0.0)
+        + 1.0;
+
+    while remaining > 0 {
+        assert!(t < t_max + 1.0, "smallstep exceeded work bound (policy bug)");
+        let pending: Vec<usize> = (0..st.len())
+            .filter(|&i| st[i].arrival <= t + TOL && st[i].done_at.is_nan())
+            .collect();
+
+        // --- virtual system step (FSP family) --------------------------
+        if uses_virtual {
+            let vpend: Vec<usize> = (0..st.len())
+                .filter(|&i| st[i].arrival <= t + TOL && st[i].virt_order == usize::MAX)
+                .collect();
+            let wsum: f64 = vpend.iter().map(|&i| st[i].weight).sum();
+            if wsum > 0.0 {
+                for &i in &vpend {
+                    st[i].virt_rem -= st[i].weight / wsum * dt;
+                }
+                // Virtual completions, in deterministic (virt_rem/w, id)
+                // order when several cross zero in the same step.
+                let mut crossed: Vec<usize> = vpend
+                    .iter()
+                    .cloned()
+                    .filter(|&i| st[i].virt_rem <= TOL)
+                    .collect();
+                crossed.sort_by(|&a, &b| {
+                    (st[a].virt_rem / st[a].weight)
+                        .partial_cmp(&(st[b].virt_rem / st[b].weight))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                for i in crossed {
+                    st[i].virt_order = virt_seq;
+                    virt_seq += 1;
+                }
+            }
+        }
+
+        // --- real allocation -------------------------------------------
+        for a in alloc.iter_mut() {
+            *a = 0.0;
+        }
+        if !pending.is_empty() {
+            match policy {
+                Policy::Fifo => {
+                    let i = *pending
+                        .iter()
+                        .min_by(|&&a, &&b| {
+                            st[a].arrival.partial_cmp(&st[b].arrival).unwrap().then(a.cmp(&b))
+                        })
+                        .unwrap();
+                    alloc[i] = 1.0;
+                }
+                Policy::Ps => {
+                    let share = 1.0 / pending.len() as f64;
+                    for &i in &pending {
+                        alloc[i] = share;
+                    }
+                }
+                Policy::Dps => {
+                    let wsum: f64 = pending.iter().map(|&i| st[i].weight).sum();
+                    for &i in &pending {
+                        alloc[i] = st[i].weight / wsum;
+                    }
+                }
+                Policy::Las => las_alloc(&st, &pending, &mut alloc),
+                Policy::Srpte => {
+                    let i = srpte_top(&st, &pending);
+                    alloc[i] = 1.0;
+                }
+                Policy::SrptePs | Policy::SrpteLas => {
+                    let mut eligible: Vec<usize> = pending
+                        .iter()
+                        .cloned()
+                        .filter(|&i| st[i].est - st[i].attained <= TOL)
+                        .collect();
+                    // plus the highest-priority non-late job, if any
+                    let non_late: Vec<usize> = pending
+                        .iter()
+                        .cloned()
+                        .filter(|&i| st[i].est - st[i].attained > TOL)
+                        .collect();
+                    if !non_late.is_empty() {
+                        eligible.push(srpte_top(&st, &non_late));
+                    }
+                    if policy == Policy::SrptePs {
+                        let share = 1.0 / eligible.len() as f64;
+                        for &i in &eligible {
+                            alloc[i] = share;
+                        }
+                    } else {
+                        las_alloc(&st, &eligible, &mut alloc);
+                    }
+                }
+                Policy::Fspe | Policy::FspePs | Policy::FspeLas | Policy::Psbs => {
+                    let late: Vec<usize> = pending
+                        .iter()
+                        .cloned()
+                        .filter(|&i| st[i].virt_order != usize::MAX)
+                        .collect();
+                    if late.is_empty() {
+                        // Serve the job that completes earliest in the
+                        // virtual system: min virt_rem / weight (== g_i
+                        // order), ties by id.
+                        let i = *pending
+                            .iter()
+                            .min_by(|&&a, &&b| {
+                                (st[a].virt_rem / st[a].weight)
+                                    .partial_cmp(&(st[b].virt_rem / st[b].weight))
+                                    .unwrap()
+                                    .then(a.cmp(&b))
+                            })
+                            .unwrap();
+                        alloc[i] = 1.0;
+                    } else {
+                        match policy {
+                            Policy::Fspe => {
+                                // Serial: earliest virtual completion first.
+                                let i = *late
+                                    .iter()
+                                    .min_by_key(|&&i| st[i].virt_order)
+                                    .unwrap();
+                                alloc[i] = 1.0;
+                            }
+                            Policy::FspePs => {
+                                let share = 1.0 / late.len() as f64;
+                                for &i in &late {
+                                    alloc[i] = share;
+                                }
+                            }
+                            Policy::FspeLas => las_alloc(&st, &late, &mut alloc),
+                            Policy::Psbs => {
+                                let wsum: f64 = late.iter().map(|&i| st[i].weight).sum();
+                                for &i in &late {
+                                    alloc[i] = st[i].weight / wsum;
+                                }
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                }
+            }
+
+            // Integrate and detect completions (sub-step interpolation).
+            for &i in &pending {
+                if alloc[i] <= 0.0 {
+                    continue;
+                }
+                let need = st[i].size - st[i].attained;
+                let got = alloc[i] * dt;
+                if need <= got + TOL {
+                    st[i].attained = st[i].size;
+                    st[i].done_at = t + need / alloc[i];
+                    remaining -= 1;
+                } else {
+                    st[i].attained += got;
+                }
+            }
+        }
+
+        t += dt;
+    }
+
+    st.iter().map(|s| s.done_at).collect()
+}
+
+/// LAS among `set`: equal shares for the argmin-attained group.
+fn las_alloc(st: &[St], set: &[usize], alloc: &mut [f64]) {
+    let min_att = set
+        .iter()
+        .map(|&i| st[i].attained)
+        .fold(f64::INFINITY, f64::min);
+    let group: Vec<usize> = set
+        .iter()
+        .cloned()
+        .filter(|&i| st[i].attained <= min_att + 1e-9)
+        .collect();
+    let share = 1.0 / group.len() as f64;
+    for &i in &group {
+        alloc[i] = share;
+    }
+}
+
+/// SRPTE serving choice among `set`: minimum estimated remaining, with
+/// late jobs (negative remaining) sorting first — which encodes the
+/// "late jobs cannot be preempted" rule of §4.2.
+fn srpte_top(st: &[St], set: &[usize]) -> usize {
+    *set.iter()
+        .min_by(|&&a, &&b| {
+            let ka = st[a].est - st[a].attained;
+            let kb = st[b].est - st[b].attained;
+            ka.partial_cmp(&kb).unwrap().then(st[a].arrival.partial_cmp(&st[b].arrival).unwrap()).then(a.cmp(&b))
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs3() -> Vec<Job> {
+        vec![
+            Job::exact(0, 0.0, 3.0),
+            Job::exact(1, 1.0, 1.0),
+            Job::exact(2, 1.0, 2.0),
+        ]
+    }
+
+    #[test]
+    fn fifo_matches_hand_computation() {
+        let c = simulate(Policy::Fifo, &jobs3(), 1e-4);
+        assert!((c[0] - 3.0).abs() < 1e-3);
+        assert!((c[1] - 4.0).abs() < 1e-3);
+        assert!((c[2] - 6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn srpt_matches_hand_computation() {
+        // t=1: rem(0)=2; serve job1 (1), then job2 (2), then job0.
+        let c = simulate(Policy::Srpte, &jobs3(), 1e-4);
+        assert!((c[1] - 2.0).abs() < 1e-3, "{c:?}");
+        assert!((c[2] - 4.0).abs() < 1e-3, "{c:?}");
+        assert!((c[0] - 6.0).abs() < 1e-3, "{c:?}");
+    }
+
+    #[test]
+    fn ps_two_equal_jobs() {
+        let jobs = vec![Job::exact(0, 0.0, 1.0), Job::exact(1, 0.0, 1.0)];
+        let c = simulate(Policy::Ps, &jobs, 1e-4);
+        assert!((c[0] - 2.0).abs() < 1e-3);
+        assert!((c[1] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dps_weighted_shares() {
+        // weights 2:1 over equal sizes 1: job0 completes at 1.5
+        // (rates 2/3, 1/3); then job1 alone: 1.5 + (1 - 0.5) = 2.0.
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 1.0, est: 1.0, weight: 2.0 },
+            Job { id: 1, arrival: 0.0, size: 1.0, est: 1.0, weight: 1.0 },
+        ];
+        let c = simulate(Policy::Dps, &jobs, 1e-4);
+        assert!((c[0] - 1.5).abs() < 1e-3, "{c:?}");
+        assert!((c[1] - 2.0).abs() < 1e-3, "{c:?}");
+    }
+
+    #[test]
+    fn las_serves_youngest() {
+        // Job0 size 2 from t=0. Job1 size 1 arrives t=1 with attained 0
+        // < job0's 1, so LAS serves job1 exclusively until parity.
+        let jobs = vec![Job::exact(0, 0.0, 2.0), Job::exact(1, 1.0, 1.0)];
+        let c = simulate(Policy::Las, &jobs, 1e-4);
+        // job1 runs alone [1,2] and completes at 2; job0 resumes, completes at 3.
+        assert!((c[1] - 2.0).abs() < 1e-3, "{c:?}");
+        assert!((c[0] - 3.0).abs() < 1e-3, "{c:?}");
+    }
+
+    #[test]
+    fn fsp_serial_order_matches_paper_fig2_prefix() {
+        // Paper Fig. 2 jobs: sizes 10, 5, 2 at t = 0, 3, 5.
+        // FSP real schedule: J1 [0,3), J2 [3,5), J3 [5,7)->done,
+        // J2 resumes [7,10)->done, J1 [10,17)->done.
+        let jobs = vec![
+            Job::exact(0, 0.0, 10.0),
+            Job::exact(1, 3.0, 5.0),
+            Job::exact(2, 5.0, 2.0),
+        ];
+        let c = simulate(Policy::Fspe, &jobs, 1e-3);
+        assert!((c[2] - 7.0).abs() < 1e-2, "{c:?}");
+        assert!((c[1] - 10.0).abs() < 1e-2, "{c:?}");
+        assert!((c[0] - 17.0).abs() < 1e-2, "{c:?}");
+    }
+
+    #[test]
+    fn srpte_late_job_blocks() {
+        // Job0 size 4 but estimated 1: becomes late at t=1 and cannot
+        // be preempted by job1 (size 1, arrives t=2). Job0 completes at
+        // 4, job1 at 5. (Under exact SRPT job1 would preempt.)
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 },
+            Job::exact(1, 2.0, 1.0),
+        ];
+        let c = simulate(Policy::Srpte, &jobs, 1e-4);
+        assert!((c[0] - 4.0).abs() < 1e-3, "{c:?}");
+        assert!((c[1] - 5.0).abs() < 1e-3, "{c:?}");
+    }
+
+    #[test]
+    fn srpte_ps_unblocks_small_jobs() {
+        // Same workload: under SRPTE+PS the late job shares with job1:
+        // from t=2 both at rate 1/2. Job1 needs 1 unit -> done at 4;
+        // job0 has 2 left at t=2, gets 1 by t=4, runs alone after -> 5.
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 },
+            Job::exact(1, 2.0, 1.0),
+        ];
+        let c = simulate(Policy::SrptePs, &jobs, 1e-4);
+        assert!((c[1] - 4.0).abs() < 1e-3, "{c:?}");
+        assert!((c[0] - 5.0).abs() < 1e-3, "{c:?}");
+    }
+
+    #[test]
+    fn psbs_equals_fspe_ps_with_unit_weights() {
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 5.0, est: 2.0, weight: 1.0 },
+            Job::exact(1, 1.0, 1.0),
+            Job { id: 2, arrival: 2.0, size: 3.0, est: 4.0, weight: 1.0 },
+        ];
+        let a = simulate(Policy::Psbs, &jobs, 1e-4);
+        let b = simulate(Policy::FspePs, &jobs, 1e-4);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "{a:?} vs {b:?}");
+        }
+    }
+}

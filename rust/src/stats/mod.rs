@@ -1,0 +1,166 @@
+//! Summary statistics: means, quantiles, 95% confidence intervals and
+//! the paper's repetition-control rule (§6.3: repeat until the CI is
+//! within 5% of the estimate); [`quantile::P2Quantile`] for streaming
+//! percentiles in the online service.
+
+pub mod quantile;
+pub use quantile::P2Quantile;
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Unbiased sample standard deviation (0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n as f64 - 1.0)).sqrt()
+}
+
+/// Half-width of the 95% confidence interval for the mean
+/// (normal approximation; the paper's runs use n >= 30).
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::INFINITY;
+    }
+    1.96 * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Paper §6.3 stopping rule: true once the 95% CI half-width is within
+/// `frac` (default 0.05) of the estimated mean and n >= `min_reps`.
+pub fn converged(xs: &[f64], frac: f64, min_reps: usize) -> bool {
+    xs.len() >= min_reps && ci95_half_width(xs) <= frac * mean(xs).abs()
+}
+
+/// Quantile via linear interpolation over a *sorted* slice, q in [0,1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Quantile of an unsorted slice (copies + sorts).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Running mean/CI accumulator for repetition loops.
+#[derive(Debug, Default, Clone)]
+pub struct Repetitions {
+    pub values: Vec<f64>,
+}
+
+impl Repetitions {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+    pub fn ci95(&self) -> f64 {
+        ci95_half_width(&self.values)
+    }
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+    /// §6.3 rule with the paper's 5% threshold.
+    pub fn converged(&self, min_reps: usize) -> bool {
+        converged(&self.values, 0.05, min_reps)
+    }
+}
+
+/// ln Γ(x) via the Lanczos approximation (g = 7, n = 9); |err| < 1e-13
+/// over the range we use (x >= 1, since x = 1 + 1/shape).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Γ(x).
+pub fn gamma(x: f64) -> f64 {
+    ln_gamma(x).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.2909944487358056).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(1/2)=sqrt(pi), Γ(9)=40320
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-8);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        assert!((gamma(9.0) - 40320.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn weibull_unit_mean_scale() {
+        // mean = scale * Γ(1 + 1/k); for k = 0.25: Γ(5) = 24.
+        let k: f64 = 0.25;
+        let scale = 1.0 / gamma(1.0 + 1.0 / k);
+        assert!((scale - 1.0 / 24.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn ci_and_convergence() {
+        let tight: Vec<f64> = (0..100).map(|i| 10.0 + 0.01 * (i % 2) as f64).collect();
+        assert!(converged(&tight, 0.05, 30));
+        let loose = vec![1.0, 100.0, 2.0];
+        assert!(!converged(&loose, 0.05, 30));
+        assert_eq!(ci95_half_width(&[1.0]), f64::INFINITY);
+    }
+}

@@ -1,0 +1,203 @@
+//! Streaming quantile estimation — the P² algorithm (Jain & Chlamtac,
+//! CACM 1985).
+//!
+//! The online service reports latency percentiles without retaining
+//! per-job samples: P² tracks one quantile with five markers updated
+//! in O(1) per observation, using piecewise-parabolic interpolation.
+//! Accuracy is ample for operational metrics (≈1% of the true quantile
+//! for unimodal distributions); exact quantiles remain available
+//! offline via [`crate::stats::quantile`] where samples are retained.
+
+/// One P² estimator tracking quantile `q` (0 < q < 1).
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    q: f64,
+    /// Marker heights (estimates of the 5 tracked quantile positions).
+    heights: [f64; 5],
+    /// Actual marker positions (1-based observation ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Desired position increments per observation.
+    inc: [f64; 5],
+    /// Observations seen so far (first 5 are stored raw).
+    n: usize,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!(q > 0.0 && q < 1.0, "quantile must be in (0,1)");
+        P2Quantile {
+            q,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            inc: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            n: 0,
+        }
+    }
+
+    /// Number of observations consumed.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Feed one observation.
+    pub fn observe(&mut self, x: f64) {
+        if self.n < 5 {
+            self.heights[self.n] = x;
+            self.n += 1;
+            if self.n == 5 {
+                self.heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        self.n += 1;
+
+        // Locate the cell k with heights[k] <= x < heights[k+1] and
+        // bump the extremes if x falls outside.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.heights[k + 1] {
+                k += 1;
+            }
+            k
+        };
+
+        for p in self.pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for (d, i) in self.desired.iter_mut().zip(self.inc) {
+            *d += i;
+        }
+
+        // Adjust the three interior markers.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            let right = self.pos[i + 1] - self.pos[i];
+            let left = self.pos[i - 1] - self.pos[i];
+            if (d >= 1.0 && right > 1.0) || (d <= -1.0 && left < -1.0) {
+                let d = d.signum();
+                let cand = self.parabolic(i, d);
+                let new_h = if self.heights[i - 1] < cand && cand < self.heights[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, d)
+                };
+                self.heights[i] = new_h;
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic (P²) height prediction for marker `i`
+    /// moving by `d` (±1).
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (hm, h, hp) = (self.heights[i - 1], self.heights[i], self.heights[i + 1]);
+        let (pm, p, pp) = (self.pos[i - 1], self.pos[i], self.pos[i + 1]);
+        h + d / (pp - pm)
+            * ((p - pm + d) * (hp - h) / (pp - p) + (pp - p - d) * (h - hm) / (p - pm))
+    }
+
+    /// Linear fallback when the parabola would break monotonicity.
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate of the tracked quantile.
+    pub fn value(&self) -> f64 {
+        match self.n {
+            0 => f64::NAN,
+            n if n < 5 => {
+                // Exact small-sample quantile over the raw buffer.
+                let mut v: Vec<f64> = self.heights[..n].to_vec();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                super::quantile_sorted(&v, self.q)
+            }
+            _ => self.heights[2],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tracks_median_of_uniform() {
+        let mut p = P2Quantile::new(0.5);
+        let mut rng = Rng::new(1);
+        for _ in 0..100_000 {
+            p.observe(rng.u01());
+        }
+        assert!((p.value() - 0.5).abs() < 0.01, "median {}", p.value());
+    }
+
+    #[test]
+    fn tracks_p99_of_exponential() {
+        // Exp(1): p99 = -ln(0.01) = 4.605.
+        let mut p = P2Quantile::new(0.99);
+        let mut rng = Rng::new(2);
+        for _ in 0..200_000 {
+            p.observe(-rng.u01_open_left().ln());
+        }
+        let want = -(0.01f64).ln();
+        assert!(
+            (p.value() - want).abs() / want < 0.05,
+            "p99 {} want {want}",
+            p.value()
+        );
+    }
+
+    #[test]
+    fn small_samples_are_exact() {
+        let mut p = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            p.observe(x);
+        }
+        assert_eq!(p.value(), 2.0);
+        assert_eq!(p.count(), 3);
+        assert!(P2Quantile::new(0.5).value().is_nan());
+    }
+
+    #[test]
+    fn heavy_tail_quantile_reasonable() {
+        // LogNormal(0, 2): median = 1 — a hard case for sketches.
+        let mut p = P2Quantile::new(0.5);
+        let mut rng = Rng::new(3);
+        for _ in 0..200_000 {
+            p.observe((2.0 * rng.normal()).exp());
+        }
+        assert!((p.value() - 1.0).abs() < 0.1, "median {}", p.value());
+    }
+
+    #[test]
+    fn matches_exact_quantile_on_retained_samples() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.u01().powi(3) * 100.0).collect();
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let mut p = P2Quantile::new(q);
+            for &x in &xs {
+                p.observe(x);
+            }
+            let exact = crate::stats::quantile(&xs, q);
+            let err = (p.value() - exact).abs() / exact.abs().max(1e-9);
+            assert!(err < 0.08, "q={q}: sketch {} exact {exact}", p.value());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "quantile must be in (0,1)")]
+    fn rejects_degenerate_quantile() {
+        P2Quantile::new(1.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny timing harness (replaces the unavailable `criterion`).
+//!
+//! Each `cargo bench` target builds a [`Bench`] and registers closures;
+//! the harness warms up, runs timed batches until a wall-clock budget
+//! is met, and reports mean / stddev / min per iteration plus optional
+//! throughput.  Output format is one line per benchmark so the figure
+//! harness and EXPERIMENTS.md can diff runs textually.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// Optional items/iter for throughput reporting.
+    pub items: Option<u64>,
+}
+
+/// Harness configuration.
+pub struct Bench {
+    /// Wall-clock budget per benchmark (measurement phase).
+    pub budget: Duration,
+    /// Warmup budget per benchmark.
+    pub warmup: Duration,
+    /// Collected results (also printed as they complete).
+    pub samples: Vec<Sample>,
+    filter: Option<String>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `cargo bench -- <filter>` narrows which benchmarks run.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench {
+            budget: Duration::from_millis(
+                std::env::var("BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(700),
+            ),
+            warmup: Duration::from_millis(100),
+            samples: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.bench_items(name, None, f)
+    }
+
+    /// Time `f` and report throughput as `items` per iteration.
+    pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup and batch-size calibration.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        // Aim for ~30 batches inside the budget.
+        let batch = ((self.budget.as_nanos() as f64 / 30.0 / per_iter.max(1.0)) as u64).max(1);
+
+        let mut batches: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let m0 = Instant::now();
+        while m0.elapsed() < self.budget || batches.len() < 3 {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            batches.push(b0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if batches.len() >= 1000 {
+                break;
+            }
+        }
+        let n = batches.len() as f64;
+        let mean = batches.iter().sum::<f64>() / n;
+        let var = batches.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n.max(1.0);
+        let min = batches.iter().cloned().fold(f64::INFINITY, f64::min);
+        let s = Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            min_ns: min,
+            items,
+        };
+        println!("{}", render(&s));
+        self.samples.push(s);
+    }
+}
+
+/// Human-readable one-line rendering.
+pub fn render(s: &Sample) -> String {
+    let tput = match s.items {
+        Some(items) if s.mean_ns > 0.0 => {
+            format!("  {:>10.2} Kitems/s", items as f64 / s.mean_ns * 1e6)
+        }
+        _ => String::new(),
+    };
+    format!(
+        "bench {:<44} {:>12} ns/iter (+/- {:>10}) min {:>12}{}",
+        s.name,
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.stddev_ns),
+        fmt_ns(s.min_ns),
+        tput
+    )
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new();
+        b.budget = Duration::from_millis(30);
+        b.warmup = Duration::from_millis(5);
+        let mut x = 0u64;
+        b.bench("noop-ish", || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(b.samples.len(), 1);
+        assert!(b.samples[0].mean_ns >= 0.0);
+        assert!(b.samples[0].iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,109 @@
+//! Seeded property-testing harness (replaces the unavailable `proptest`).
+//!
+//! [`property`] runs a predicate over `cases` deterministic seeds; on
+//! failure it *shrinks* by re-running the generator with progressively
+//! smaller `size` hints until the failure disappears, then reports the
+//! smallest failing (seed, size) so the case can be replayed in a unit
+//! test.  Generators receive an [`Rng`] plus the size hint and build an
+//! arbitrary input; predicates return `Err(description)` on violation.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u64,
+    /// Maximum size hint passed to the generator.
+    pub max_size: usize,
+    /// Base seed; each case uses `substream(case_index)`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, max_size: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(gen(rng, size))` over random seeds; panic with a replayable
+/// report on the first failure (after shrinking the size hint).
+pub fn property<T, G, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // Ramp the size hint so early cases are small (cheap + diverse).
+        let size = 1 + (case as usize * cfg.max_size) / cfg.cases.max(1) as usize;
+        let mut rng = base.substream(case);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink: retry the same stream with smaller size hints.
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = base.substream(case);
+                let input = gen(&mut rng, s);
+                match prop(&input) {
+                    Err(m) => {
+                        best = (s, m);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={}, case={case}, size={}): {}\n\
+                 replay: property with Config {{ seed: {}, .. }} case {case}",
+                cfg.seed, best.0, best.1, cfg.seed
+            );
+        }
+    }
+}
+
+/// Assert two floats agree within absolute + relative tolerance.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property(
+            "sum-commutes",
+            Config { cases: 16, ..Default::default() },
+            |rng, size| (0..size).map(|_| rng.u01()).collect::<Vec<_>>(),
+            |xs| {
+                let fwd: f64 = xs.iter().sum();
+                let rev: f64 = xs.iter().rev().sum();
+                close(fwd, rev, 1e-9)
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        property(
+            "always-fails",
+            Config { cases: 4, ..Default::default() },
+            |_, size| size,
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_tolerates() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 1.1, 1e-9).is_err());
+    }
+}

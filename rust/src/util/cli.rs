@@ -1,0 +1,152 @@
+//! Minimal command-line parsing (replaces the unavailable `clap`).
+//!
+//! Grammar: `psbs <subcommand> [--flag value | --flag=value | --switch]...`
+//! Unknown flags are hard errors so typos cannot silently fall back to
+//! defaults in the middle of an experiment sweep.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    /// Flags that were consumed by a getter (for unknown-flag checking).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(stripped) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument: {tok}"));
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                args.opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                args.opts.insert(stripped.to_string(), it.next().unwrap());
+            } else {
+                args.opts.insert(stripped.to_string(), "true".to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: not a number: {v}")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: not an integer: {v}")),
+        }
+    }
+
+    /// Boolean switch (present or `--key true/false`).
+    pub fn get_bool(&self, key: &str) -> Result<bool, String> {
+        self.mark(key);
+        match self.opts.get(key).map(|s| s.as_str()) {
+            None => Ok(false),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => Err(format!("--{key}: not a boolean: {v}")),
+        }
+    }
+
+    /// Error if any provided flag was never consumed by a getter.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .filter(|k| !seen.iter().any(|s| s == *k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate --policy psbs --sigma 0.5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("policy", "ps"), "psbs");
+        assert_eq!(a.get_f64("sigma", 1.0).unwrap(), 0.5);
+        assert!(a.get_bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("sweep --fig=5 --reps=30");
+        assert_eq!(a.get_u64("fig", 0).unwrap(), 5);
+        assert_eq!(a.get_u64("reps", 1).unwrap(), 30);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("simulate");
+        assert_eq!(a.get_f64("load", 0.9).unwrap(), 0.9);
+        assert!(!a.get_bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("simulate --tpyo 3");
+        let _ = a.get_f64("load", 0.9);
+        assert!(a.check_unknown().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("simulate --sigma abc");
+        assert!(a.get_f64("sigma", 0.5).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_rejected() {
+        assert!(Args::parse(["simulate".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Dependency-free substrates: PRNG, CLI parsing, bench harness,
+//! property-testing helpers.
+//!
+//! The build environment is fully offline with only the `xla` crate
+//! closure available, so the conventional crates (`rand`, `clap`,
+//! `criterion`, `proptest`) are replaced by the small, deterministic
+//! implementations in this module (DESIGN.md §4 Substitutions).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod rng;
+
+/// Absolute time tolerance used by the event-driven simulator when
+/// deciding that a remaining quantity has hit zero.  Simulated times in
+/// the paper's parameter space are O(10^4) with f64 arithmetic, so 1e-9
+/// is ~10^5 ulps of slack — far above accumulated rounding, far below
+/// any inter-event gap that matters.
+pub const EPS: f64 = 1e-9;

@@ -1,0 +1,7 @@
+//! Workload generation and trace replay (paper §6.3, §7.8).
+
+pub mod dists;
+pub mod synthetic;
+pub mod traces;
+
+pub use synthetic::{synthesize, SizeDist, SynthConfig};

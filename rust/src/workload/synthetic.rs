@@ -1,0 +1,275 @@
+//! Synthetic workload generation — the paper's Table 1 model.
+//!
+//! Job sizes ~ Weibull(`shape`) with unit mean (or Pareto for Fig. 10);
+//! inter-arrival gaps ~ Weibull(`timeshape`) scaled so that
+//! `load = mean_size / mean_gap`; size estimates are
+//! `s_hat = s * LogNormal(0, sigma^2)`; optional weight classes for the
+//! §7.6 experiments.
+//!
+//! Generation is available through two equivalent paths:
+//! * pure rust ([`synthesize`]) — used by tests and as a fallback;
+//! * the AOT `workload` artifact ([`crate::runtime`]) — rust supplies
+//!   the uniforms, the Weibull/log-normal transforms run in the
+//!   compiled HLO (the production sweep path).
+//!
+//! `rust/tests/integration.rs` checks the two produce the same
+//! workloads to f32 tolerance.
+
+use super::dists::{Dist, LogNormal, Pareto, Weibull};
+use crate::sim::{job, Job};
+use crate::util::rng::Rng;
+
+/// Job size distribution choice (Table 1 default: Weibull).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeDist {
+    /// Weibull with the given shape, unit mean.
+    Weibull { shape: f64 },
+    /// Pareto with x_m chosen for unit mean when alpha > 1, else
+    /// x_m = 1 and empirical load normalization (Fig. 10, alpha = 1).
+    Pareto { alpha: f64 },
+}
+
+/// Table 1 parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthConfig {
+    /// Job size distribution (`shape` column of Table 1).
+    pub size_dist: SizeDist,
+    /// sigma of the log-normal estimation error (0 = exact sizes).
+    pub sigma: f64,
+    /// Shape of the Weibull inter-arrival gap distribution.
+    pub timeshape: f64,
+    /// Offered load = mean size / mean gap.
+    pub load: f64,
+    /// Number of jobs per workload.
+    pub njobs: usize,
+    /// Weight-class skew (§7.6): job in class c in 1..=5 gets weight
+    /// 1/c^beta. 0 disables weighting (all weights 1).
+    pub beta: f64,
+}
+
+impl Default for SynthConfig {
+    /// The paper's defaults (Table 1): shape 0.25, sigma 0.5,
+    /// timeshape 1, load 0.9, njobs 10 000, uniform weights.
+    fn default() -> Self {
+        SynthConfig {
+            size_dist: SizeDist::Weibull { shape: 0.25 },
+            sigma: 0.5,
+            timeshape: 1.0,
+            load: 0.9,
+            njobs: 10_000,
+            beta: 0.0,
+        }
+    }
+}
+
+impl SynthConfig {
+    pub fn with_shape(mut self, shape: f64) -> Self {
+        self.size_dist = SizeDist::Weibull { shape };
+        self
+    }
+    pub fn with_sigma(mut self, sigma: f64) -> Self {
+        self.sigma = sigma;
+        self
+    }
+    pub fn with_load(mut self, load: f64) -> Self {
+        self.load = load;
+        self
+    }
+    pub fn with_njobs(mut self, njobs: usize) -> Self {
+        self.njobs = njobs;
+        self
+    }
+    pub fn with_timeshape(mut self, timeshape: f64) -> Self {
+        self.timeshape = timeshape;
+        self
+    }
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+}
+
+/// Minimum job size: guards the simulator against degenerate zero-size
+/// jobs from the far left tail of f32-sampled distributions.
+pub const MIN_SIZE: f64 = 1e-9;
+
+/// Generate one workload (sorted by arrival, ids dense).
+pub fn synthesize(cfg: &SynthConfig, seed: u64) -> Vec<Job> {
+    let rng = Rng::new(seed);
+    let mut size_rng = rng.substream(1);
+    let mut gap_rng = rng.substream(2);
+    let mut err_rng = rng.substream(3);
+    let mut class_rng = rng.substream(4);
+
+    // --- sizes ---
+    let sizes: Vec<f64> = match cfg.size_dist {
+        SizeDist::Weibull { shape } => {
+            let d = Weibull::unit_mean(shape);
+            (0..cfg.njobs).map(|_| d.sample(&mut size_rng).max(MIN_SIZE)).collect()
+        }
+        SizeDist::Pareto { alpha } => {
+            let d = if alpha > 1.0 {
+                Pareto::unit_mean(alpha)
+            } else {
+                Pareto::new(1.0, alpha)
+            };
+            (0..cfg.njobs).map(|_| d.sample(&mut size_rng).max(MIN_SIZE)).collect()
+        }
+    };
+
+    // --- arrival gaps ---
+    // load = mean_size / mean_gap  =>  mean_gap = mean_size / load.
+    // For finite-mean size dists mean_size = 1 analytically; for
+    // Pareto(alpha<=1) normalize on the empirical sample (the paper's
+    // trace treatment: pick service speed for load 0.9).
+    let mean_size = match cfg.size_dist {
+        SizeDist::Weibull { .. } => 1.0,
+        SizeDist::Pareto { alpha } if alpha > 1.0 => 1.0,
+        SizeDist::Pareto { .. } => sizes.iter().sum::<f64>() / sizes.len() as f64,
+    };
+    let gap_dist = Weibull::with_mean(cfg.timeshape, mean_size / cfg.load);
+
+    // --- error multipliers ---
+    let err = LogNormal::error_model(cfg.sigma);
+
+    let mut t = 0.0;
+    let jobs: Vec<Job> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &size)| {
+            t += gap_dist.sample(&mut gap_rng);
+            let mult = if cfg.sigma > 0.0 { err.sample(&mut err_rng) } else { 1.0 };
+            let weight = if cfg.beta > 0.0 {
+                let class = (1 + class_rng.below(5)) as f64; // classes 1..=5
+                1.0 / class.powf(cfg.beta)
+            } else {
+                1.0
+            };
+            Job {
+                id: i as u32,
+                arrival: t,
+                size,
+                est: (size * mult).max(MIN_SIZE),
+                weight,
+            }
+        })
+        .collect();
+
+    job::validate(&jobs);
+    jobs
+}
+
+/// Weight class of a job generated with `beta > 0` (1..=5), recovered
+/// from the weight value — used by the Fig. 9 harness to group MSTs.
+pub fn weight_class(weight: f64, beta: f64) -> usize {
+    if beta <= 0.0 {
+        return 1;
+    }
+    (1..=5)
+        .min_by(|&a, &b| {
+            let wa = 1.0 / (a as f64).powf(beta);
+            let wb = 1.0 / (b as f64).powf(beta);
+            (wa - weight).abs().partial_cmp(&(wb - weight).abs()).unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_defaults_match_table1() {
+        let cfg = SynthConfig::default();
+        assert_eq!(cfg.size_dist, SizeDist::Weibull { shape: 0.25 });
+        assert_eq!(cfg.sigma, 0.5);
+        assert_eq!(cfg.timeshape, 1.0);
+        assert_eq!(cfg.load, 0.9);
+        assert_eq!(cfg.njobs, 10_000);
+    }
+
+    #[test]
+    fn workload_is_valid_and_seeded() {
+        let cfg = SynthConfig::default().with_njobs(1000);
+        let a = synthesize(&cfg, 1);
+        let b = synthesize(&cfg, 1);
+        let c = synthesize(&cfg, 2);
+        assert_eq!(a.len(), 1000);
+        assert_eq!(a, b, "same seed must reproduce");
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn load_is_respected() {
+        // Empirical load = total size / span of arrivals ~ cfg.load.
+        let cfg = SynthConfig::default().with_shape(1.0).with_njobs(200_000).with_load(0.5);
+        let jobs = synthesize(&cfg, 3);
+        let total: f64 = jobs.iter().map(|j| j.size).sum();
+        let span = jobs.last().unwrap().arrival;
+        let load = total / span;
+        assert!((load - 0.5).abs() < 0.02, "load={load}");
+    }
+
+    #[test]
+    fn sigma_zero_is_exact() {
+        let cfg = SynthConfig::default().with_sigma(0.0).with_njobs(100);
+        for j in synthesize(&cfg, 4) {
+            assert_eq!(j.size, j.est);
+        }
+    }
+
+    #[test]
+    fn sigma_controls_error_spread() {
+        let small = SynthConfig::default().with_sigma(0.125).with_njobs(5000);
+        let big = SynthConfig::default().with_sigma(4.0).with_njobs(5000);
+        let spread = |jobs: &[Job]| {
+            jobs.iter().map(|j| (j.est / j.size).ln().abs()).sum::<f64>() / jobs.len() as f64
+        };
+        let s = spread(&synthesize(&small, 5));
+        let b = spread(&synthesize(&big, 5));
+        assert!(b > 10.0 * s, "spread small={s} big={b}");
+    }
+
+    #[test]
+    fn beta_creates_five_weight_classes() {
+        let cfg = SynthConfig::default().with_beta(1.0).with_njobs(5000);
+        let jobs = synthesize(&cfg, 6);
+        let mut weights: Vec<f64> = jobs.iter().map(|j| j.weight).collect();
+        weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        weights.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(weights.len(), 5);
+        for j in &jobs {
+            let c = weight_class(j.weight, 1.0);
+            assert!((j.weight - 1.0 / c as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pareto_workload_valid() {
+        for alpha in [1.0, 2.0] {
+            let cfg = SynthConfig {
+                size_dist: SizeDist::Pareto { alpha },
+                njobs: 2000,
+                ..Default::default()
+            };
+            let jobs = synthesize(&cfg, 7);
+            assert_eq!(jobs.len(), 2000);
+            assert!(jobs.iter().all(|j| j.size > 0.0));
+        }
+    }
+
+    #[test]
+    fn timeshape_bursty_vs_regular() {
+        // Low timeshape => bursty: higher variance of gaps.
+        let bursty = SynthConfig::default().with_timeshape(0.125).with_njobs(20_000);
+        let regular = SynthConfig::default().with_timeshape(4.0).with_njobs(20_000);
+        let cv = |jobs: &[Job]| {
+            let gaps: Vec<f64> = jobs.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+            crate::stats::stddev(&gaps) / crate::stats::mean(&gaps)
+        };
+        let b = cv(&synthesize(&bursty, 8));
+        let r = cv(&synthesize(&regular, 8));
+        assert!(b > 3.0, "bursty cv={b}");
+        assert!(r < 0.5, "regular cv={r}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Cancellation (kill) bookkeeping — the §5.2.2 "additional
+//! bookkeeping ... to handle jobs that complete even when they are not
+//! scheduled (e.g. ... after being killed)".
+
+use psbs::coordinator::{Service, ServiceConfig};
+use psbs::sched;
+use psbs::sim::{self, Job, Scheduler};
+use psbs::util::check::{property, Config};
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+use std::time::Duration;
+
+fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
+    let n = 4 + size * 2;
+    let w = Weibull::unit_mean(0.4 + rng.u01());
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|i| {
+            t += rng.u01();
+            let s = w.sample(rng).max(1e-6);
+            Job {
+                id: i,
+                arrival: t,
+                size: s,
+                est: (s * err.sample(rng)).max(1e-9),
+                weight: 1.0 / (1.0 + rng.below(3) as f64),
+            }
+        })
+        .collect()
+}
+
+/// Drive a scheduler manually, cancelling one job mid-flight, and
+/// check every *other* job still completes (and none completes twice).
+fn run_with_cancel(policy: &str, jobs: &[Job], victim: u32, cancel_at: f64) -> Vec<f64> {
+    let mut s = sched::by_name(policy).unwrap();
+    let mut completion = vec![f64::NAN; jobs.len()];
+    let mut done = Vec::new();
+    let mut now = 0.0;
+    let mut next = 0usize;
+    let mut cancelled = false;
+    let mut killed = false; // cancel actually removed the victim
+    loop {
+        let next_arrival = jobs.get(next).map(|j| j.arrival);
+        let next_internal = s.next_event(now);
+        let cancel_t = if cancelled { None } else { Some(cancel_at) };
+        // Earliest of the three event sources.
+        let mut t = f64::INFINITY;
+        for cand in [next_arrival, next_internal, cancel_t].into_iter().flatten() {
+            t = t.min(cand);
+        }
+        if !t.is_finite() {
+            break;
+        }
+        let t = t.max(now);
+        done.clear();
+        s.advance(now, t, &mut done);
+        for c in &done {
+            assert!(completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
+            assert!(!(killed && c.id == victim), "killed job must not complete");
+            completion[c.id as usize] = c.time;
+        }
+        now = t;
+        if Some(t) == cancel_t {
+            // Cancel succeeds iff the victim has arrived and neither
+            // completed nor been cancelled yet.
+            let did = s.cancel(now, victim);
+            let arrived = (victim as usize) < next;
+            let already_done = !completion[victim as usize].is_nan();
+            assert_eq!(
+                did,
+                arrived && !already_done,
+                "cancel={did} arrived={arrived} done={already_done}"
+            );
+            cancelled = true;
+            killed = did;
+        }
+        while next < jobs.len() && jobs[next].arrival <= now {
+            s.on_arrival(now, &jobs[next]);
+            next += 1;
+        }
+        if next == jobs.len() && s.next_event(now).is_none() {
+            break;
+        }
+    }
+    completion
+}
+
+#[test]
+fn psbs_survives_cancellation() {
+    property(
+        "psbs cancel",
+        Config { cases: 48, ..Default::default() },
+        |rng, size| {
+            let jobs = random_jobs(rng, size, 1.0);
+            let victim = rng.below(jobs.len() as u64) as u32;
+            let span = jobs.last().unwrap().arrival + 2.0;
+            let cancel_at = rng.u01() * span;
+            (jobs, victim, cancel_at)
+        },
+        |(jobs, victim, cancel_at)| {
+            let completion = run_with_cancel("psbs", jobs, *victim, *cancel_at);
+            // Every non-victim job completes; the victim completes only
+            // if it beat the cancellation.
+            for (i, c) in completion.iter().enumerate() {
+                if i as u32 != *victim && c.is_nan() {
+                    return Err(format!("job {i} never completed after cancelling {victim}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn srpte_survives_cancellation() {
+    property(
+        "srpte cancel",
+        Config { cases: 48, seed: 3, ..Default::default() },
+        |rng, size| {
+            let jobs = random_jobs(rng, size, 1.0);
+            let victim = rng.below(jobs.len() as u64) as u32;
+            let span = jobs.last().unwrap().arrival + 2.0;
+            (jobs, victim, rng.u01() * span)
+        },
+        |(jobs, victim, cancel_at)| {
+            let completion = run_with_cancel("srpte", jobs, *victim, *cancel_at);
+            for (i, c) in completion.iter().enumerate() {
+                if i as u32 != *victim && c.is_nan() {
+                    return Err(format!("job {i} never completed after cancelling {victim}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cancelling a job can only help the others (work disappears):
+/// under PSBS no surviving job completes later than without the kill.
+#[test]
+fn cancellation_never_hurts_survivors_in_psbs() {
+    property(
+        "psbs cancel monotonicity",
+        Config { cases: 48, seed: 7, ..Default::default() },
+        |rng, size| {
+            let jobs = random_jobs(rng, size, 0.7);
+            let victim = rng.below(jobs.len() as u64) as u32;
+            // Cancel at the victim's arrival instant + epsilon so it
+            // definitely exists and has consumed negligible service.
+            let cancel_at = jobs[victim as usize].arrival + 1e-9;
+            (jobs, victim, cancel_at)
+        },
+        |(jobs, victim, cancel_at)| {
+            let with_kill = run_with_cancel("psbs", jobs, *victim, *cancel_at);
+            let mut s = sched::by_name("psbs").unwrap();
+            let without = sim::run(s.as_mut(), jobs).completion;
+            for i in 0..jobs.len() {
+                if i as u32 == *victim {
+                    continue;
+                }
+                if with_kill[i] > without[i] + 1e-6 {
+                    return Err(format!(
+                        "job {i} later with kill: {} vs {}",
+                        with_kill[i], without[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cancel_of_unknown_id_is_noop() {
+    let mut s = sched::by_name("psbs").unwrap();
+    s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
+    assert!(!s.cancel(0.0, 99));
+    assert!(s.cancel(0.0, 0));
+    assert!(!s.cancel(0.0, 0), "double cancel must fail");
+    assert_eq!(s.active(), 0);
+}
+
+#[test]
+fn unsupporting_policies_report_false() {
+    for policy in ["fifo", "ps", "las", "mlfq"] {
+        let mut s = sched::by_name(policy).unwrap();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
+        assert!(!s.cancel(0.0, 0), "{policy} should report no support");
+    }
+}
+
+#[test]
+fn service_kill_api() {
+    let svc = Service::start(ServiceConfig { policy: "psbs".into(), speed: 1_000.0 });
+    // A long job (id 0) and a quick one (id 1).
+    let long_rx = svc.submit(10_000.0, 10_000.0, 1.0);
+    let quick_rx = svc.submit(10.0, 10.0, 1.0);
+    assert!(svc.kill(0), "long job should still be pending");
+    let quick = quick_rx.recv_timeout(Duration::from_secs(10)).expect("quick job completes");
+    assert_eq!(quick.job_id, 1);
+    // The killed job's channel never fires.
+    assert!(long_rx.recv_timeout(Duration::from_millis(50)).is_err());
+    assert!(!svc.kill(0), "double kill reports false");
+    assert!(!svc.kill(1), "completed job cannot be killed");
+    let stats = svc.shutdown();
+    assert_eq!(stats.completed, 1);
+}

@@ -1,0 +1,158 @@
+//! Cross-validation of every event-driven discipline against the
+//! independent small-step oracle (`sim::smallstep`), which integrates
+//! the allocation functions ω(i,t) straight from the paper's
+//! definitions.  Agreement validates the event-driven bookkeeping
+//! (heaps, virtual lag, late sets, LAS levels) — the two code paths
+//! share nothing.
+
+use psbs::sched;
+use psbs::sim::smallstep::{simulate, Policy};
+use psbs::sim::{self, Job};
+use psbs::util::check::{property, Config};
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+
+const DT: f64 = 2e-4;
+/// Small-step error is O(n·dt); workloads here are <= ~40 jobs.
+const TOL: f64 = 0.05;
+
+fn random_jobs(rng: &mut Rng, size: usize, sigma: f64, weighted: bool) -> Vec<Job> {
+    let n = 2 + size.min(12) * 3; // keep the oracle tractable
+    let w = Weibull::unit_mean(0.5 + rng.u01());
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|i| {
+            t += rng.u01() * 1.2;
+            // Keep sizes O(1) so fixed-step error stays small.
+            let s = w.sample(rng).clamp(0.05, 8.0);
+            let est = if sigma > 0.0 {
+                (s * err.sample(rng)).clamp(0.01, 30.0)
+            } else {
+                s
+            };
+            let weight = if weighted { 1.0 / (1.0 + rng.below(4) as f64) } else { 1.0 };
+            Job { id: i, arrival: t, size: s, est, weight }
+        })
+        .collect()
+}
+
+fn crossval(policy_name: &str, oracle: Policy, sigma: f64, weighted: bool, seed: u64) {
+    property(
+        &format!("crossval {policy_name}"),
+        Config { cases: 24, max_size: 12, seed },
+        |rng, size| random_jobs(rng, size, sigma, weighted),
+        |jobs| {
+            let mut s = sched::by_name(policy_name).unwrap();
+            let event = sim::run(s.as_mut(), jobs).completion;
+            // The oracle is O(dt)-accurate; a near-tie (two jobs whose
+            // remaining real or virtual times cross within O(dt)) can
+            // flip an ordering decision, producing a different — but
+            // still discipline-valid — schedule.  Refining dt resolves
+            // true ties toward the exact (event-driven) decision, while
+            // a genuine semantic bug stays broken at every dt.
+            let mut last_err = String::new();
+            for dt in [DT, DT / 8.0, DT / 64.0] {
+                let small = simulate(oracle, jobs, dt);
+                match agrees(&event, &small) {
+                    Ok(()) => return Ok(()),
+                    Err(e) => last_err = format!("dt={dt}: {e}"),
+                }
+            }
+            Err(last_err)
+        },
+    );
+}
+
+/// Per-job agreement, allowing identity swaps among jobs whose
+/// completion times form a matching multiset (same machine timeline).
+fn agrees(event: &[f64], small: &[f64]) -> Result<(), String> {
+    let mut diff: Vec<usize> =
+        (0..event.len()).filter(|&i| (event[i] - small[i]).abs() > TOL).collect();
+    if diff.is_empty() {
+        return Ok(());
+    }
+    let mut ev: Vec<f64> = diff.iter().map(|&i| event[i]).collect();
+    let mut sm: Vec<f64> = diff.iter().map(|&i| small[i]).collect();
+    ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sm.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (a, b) in ev.iter().zip(&sm) {
+        if (a - b).abs() > TOL {
+            diff.truncate(8);
+            return Err(format!(
+                "jobs {diff:?}: event-driven {ev:?} vs small-step {sm:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn fifo_matches_oracle() {
+    crossval("fifo", Policy::Fifo, 0.0, false, 1);
+}
+
+#[test]
+fn ps_matches_oracle() {
+    crossval("ps", Policy::Ps, 0.0, false, 2);
+}
+
+#[test]
+fn dps_matches_oracle() {
+    crossval("dps", Policy::Dps, 0.0, true, 3);
+}
+
+#[test]
+fn las_matches_oracle() {
+    crossval("las", Policy::Las, 0.0, false, 4);
+}
+
+#[test]
+fn srpt_exact_matches_oracle() {
+    crossval("srpt", Policy::Srpte, 0.0, false, 5);
+}
+
+#[test]
+fn srpte_with_errors_matches_oracle() {
+    crossval("srpte", Policy::Srpte, 1.0, false, 6);
+}
+
+#[test]
+fn srpte_ps_matches_oracle() {
+    crossval("srpte+ps", Policy::SrptePs, 1.0, false, 7);
+}
+
+#[test]
+fn srpte_las_matches_oracle() {
+    crossval("srpte+las", Policy::SrpteLas, 1.0, false, 8);
+}
+
+#[test]
+fn fspe_matches_oracle() {
+    crossval("fspe", Policy::Fspe, 1.0, false, 9);
+}
+
+#[test]
+fn fspe_ps_matches_oracle() {
+    crossval("fspe+ps", Policy::FspePs, 1.0, false, 10);
+}
+
+#[test]
+fn fspe_las_matches_oracle() {
+    crossval("fspe+las", Policy::FspeLas, 1.0, false, 11);
+}
+
+#[test]
+fn psbs_exact_matches_oracle() {
+    crossval("psbs", Policy::Psbs, 0.0, true, 12);
+}
+
+#[test]
+fn psbs_with_errors_matches_oracle() {
+    crossval("psbs", Policy::Psbs, 1.0, true, 13);
+}
+
+#[test]
+fn fsp_naive_matches_oracle() {
+    crossval("fsp-naive", Policy::Fspe, 1.0, false, 14);
+}

@@ -1,0 +1,186 @@
+//! Equivalence tests between disciplines that must coincide in
+//! degenerate settings (paper §5.2: "in the absence of errors and when
+//! all job weights are the same, PSBS is equivalent to FSP"; DPS(w=1)
+//! ≡ PS; PSBS(w=1) ≡ FSPE+PS; the O(log n) PSBS matches the naive O(n)
+//! FSP implementation job for job).
+
+use psbs::sched;
+use psbs::sim::{self, Job};
+use psbs::util::check::{property, Config};
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+
+fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
+    let n = 2 + size * 3;
+    let w = Weibull::unit_mean(0.3 + rng.u01());
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|i| {
+            t += rng.u01() * 1.2;
+            let s = w.sample(rng).max(1e-6);
+            let est = if sigma > 0.0 { (s * err.sample(rng)).max(1e-9) } else { s };
+            Job { id: i, arrival: t, size: s, est, weight: 1.0 }
+        })
+        .collect()
+}
+
+fn completions(policy: &str, jobs: &[Job]) -> Vec<f64> {
+    let mut s = sched::by_name(policy).unwrap();
+    sim::run(s.as_mut(), jobs).completion
+}
+
+fn assert_equal_schedules(a: &str, b: &str, jobs: &[Job], tol: f64) -> Result<(), String> {
+    let ca = completions(a, jobs);
+    let cb = completions(b, jobs);
+    for i in 0..jobs.len() {
+        if (ca[i] - cb[i]).abs() > tol {
+            return Err(format!("job {i}: {a} {} vs {b} {}", ca[i], cb[i]));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn dps_with_unit_weights_is_ps() {
+    property(
+        "dps==ps",
+        Config::default(),
+        |rng, size| random_jobs(rng, size, 0.0),
+        |jobs| assert_equal_schedules("dps", "ps", jobs, 1e-6),
+    );
+}
+
+#[test]
+fn psbs_with_unit_weights_is_fspe_ps_under_errors() {
+    property(
+        "psbs==fspe+ps",
+        Config { seed: 5, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 1.5),
+        |jobs| assert_equal_schedules("psbs", "fspe+ps", jobs, 1e-6),
+    );
+}
+
+#[test]
+fn psbs_without_errors_is_fsp_naive() {
+    // The O(log n) virtual-lag implementation must match the classic
+    // O(n)-per-arrival FSP exactly when sizes are known.
+    property(
+        "psbs==fsp-naive (exact)",
+        Config { seed: 7, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 0.0),
+        |jobs| assert_equal_schedules("psbs", "fsp-naive", jobs, 1e-6),
+    );
+}
+
+#[test]
+fn fspe_matches_fsp_naive_under_errors() {
+    // Both implement §4.2 FSPE semantics (serial late jobs).
+    property(
+        "fspe==fsp-naive (errors)",
+        Config { seed: 9, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 1.0),
+        |jobs| assert_equal_schedules("fspe", "fsp-naive", jobs, 1e-6),
+    );
+}
+
+#[test]
+fn srpt_equals_srpte_with_exact_estimates() {
+    property(
+        "srpt==srpte (exact)",
+        Config { seed: 11, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 0.0),
+        |jobs| assert_equal_schedules("srpt", "srpte", jobs, 1e-9),
+    );
+}
+
+#[test]
+fn hybrid_schedulers_equal_bases_without_errors() {
+    // §5.1: "in the absence of errors ... these scheduling policies
+    // will be equivalent to SRPT(E) and FSP(E)".
+    property(
+        "hybrids==bases (exact)",
+        Config { seed: 13, cases: 48, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 0.0),
+        |jobs| {
+            assert_equal_schedules("srpte+ps", "srpt", jobs, 1e-6)?;
+            assert_equal_schedules("srpte+las", "srpt", jobs, 1e-6)?;
+            assert_equal_schedules("fspe+ps", "fspe", jobs, 1e-6)?;
+            assert_equal_schedules("fspe+las", "fspe", jobs, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn overestimation_only_never_makes_jobs_late() {
+    // §5.1: with only over-estimations jobs are never late, so the
+    // amended schedulers equal their bases even with (over-)errors.
+    property(
+        "over-estimation keeps equivalence",
+        Config { seed: 17, cases: 48, ..Default::default() },
+        |rng, size| {
+            let mut jobs = random_jobs(rng, size, 0.0);
+            for j in jobs.iter_mut() {
+                j.est = j.size * (1.0 + rng.u01() * 3.0); // over-estimate
+            }
+            jobs
+        },
+        |jobs| {
+            assert_equal_schedules("fspe+ps", "fspe", jobs, 1e-6)?;
+            assert_equal_schedules("psbs", "fspe", jobs, 1e-6)
+        },
+    );
+}
+
+/// Work conservation: every discipline finishes all jobs at the same
+/// last-completion time on a busy period (Σ service = Σ size).
+#[test]
+fn all_policies_work_conserving() {
+    property(
+        "work conservation",
+        Config { seed: 19, cases: 32, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 1.0),
+        |jobs| {
+            // Keep one busy period: all jobs arrive at 0.
+            let jobs: Vec<Job> =
+                jobs.iter().map(|j| Job { arrival: 0.0, ..*j }).collect();
+            let total: f64 = jobs.iter().map(|j| j.size).sum();
+            for policy in sched::ALL_POLICIES {
+                let last = completions(policy, &jobs)
+                    .iter()
+                    .cloned()
+                    .fold(0.0, f64::max);
+                if (last - total).abs() > 1e-6 * total.max(1.0) {
+                    return Err(format!(
+                        "{policy}: last completion {last} != total work {total}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// No completion can precede arrival + size under any policy.
+#[test]
+fn completions_respect_physics() {
+    property(
+        "completion >= arrival + size",
+        Config { seed: 23, cases: 32, ..Default::default() },
+        |rng, size| random_jobs(rng, size, 2.0),
+        |jobs| {
+            for policy in sched::ALL_POLICIES {
+                let c = completions(policy, jobs);
+                for (j, &ci) in jobs.iter().zip(&c) {
+                    if ci + 1e-9 < j.arrival + j.size {
+                        return Err(format!(
+                            "{policy}: job {} done at {ci} before arrival {} + size {}",
+                            j.id, j.arrival, j.size
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,315 @@
+//! Integration tests across runtime + metrics + workload: the compiled
+//! AOT artifacts (PJRT) must agree with the pure-rust implementations
+//! on identical inputs.  These tests require `artifacts/` (built by
+//! `make artifacts`); they are skipped with a notice when absent so
+//! `cargo test` works in a fresh checkout.
+
+use psbs::metrics;
+use psbs::runtime::Runtime;
+use psbs::sim::Job;
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+
+fn runtime() -> Option<Runtime> {
+    // Tests run from the workspace root.
+    let rt = Runtime::try_default();
+    if rt.is_none() {
+        // (note printed once per test binary run)
+        eprintln!("NOTE: artifacts/ not found — integration tests skipped (run `make artifacts`)");
+    }
+    rt
+}
+
+/// The compiled Weibull inverse-CDF must match the rust `Dist::icdf`
+/// on the same uniforms (f32 tolerance).
+#[test]
+fn workload_artifact_matches_rust_weibull() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let mut rng = Rng::new(71);
+    for shape in [0.25, 1.0, 2.0] {
+        let w = Weibull::unit_mean(shape);
+        let u: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+        let zeros = vec![0.5f32; b];
+        let params = [shape as f32, w.scale as f32, 0.5, 0.0];
+        let (samples, _) = rt.gen_batch(&u, &zeros, &zeros, &params).unwrap();
+        for i in (0..b).step_by(97) {
+            let expect = w.icdf(u[i] as f64);
+            let got = samples[i] as f64;
+            let tol = 1e-3 * expect.abs().max(1e-3);
+            assert!(
+                (got - expect).abs() < tol.max(expect * 5e-3),
+                "shape {shape} i {i}: artifact {got} vs rust {expect}"
+            );
+        }
+    }
+}
+
+/// The compiled log-normal error multiplier has median ~1 and the
+/// right spread (it uses Box–Muller inside the kernel, so we check
+/// moments, not pointwise values).
+#[test]
+fn workload_artifact_lognormal_moments() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let mut rng = Rng::new(72);
+    let sigma = 0.5;
+    let u: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+    let ua: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+    let ub: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+    let params = [0.25, 1.0, sigma as f32, 0.0];
+    let (_, mults) = rt.gen_batch(&u, &ua, &ub, &params).unwrap();
+    let mut logs: Vec<f64> = mults.iter().map(|&m| (m as f64).ln()).collect();
+    logs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = logs[logs.len() / 2];
+    let sd = psbs::stats::stddev(&logs);
+    assert!(median.abs() < 0.05, "log-median {median} should be ~0");
+    assert!((sd - sigma).abs() < 0.05, "log-sd {sd} should be ~{sigma}");
+}
+
+/// End-to-end agreement: analytics artifact vs pure-rust metrics on a
+/// simulated PSBS run.
+#[test]
+fn analytics_artifact_matches_rust_metrics() {
+    let Some(rt) = runtime() else { return };
+    let cfg = psbs::workload::SynthConfig::default().with_njobs(3_000);
+    let jobs = psbs::workload::synthesize(&cfg, 5);
+    let mut s = psbs::sched::by_name("psbs").unwrap();
+    let res = psbs::sim::run(s.as_mut(), &jobs);
+
+    let sizes: Vec<f64> = jobs.iter().map(|j| j.size).collect();
+    let sojourns: Vec<f64> = res.sojourns(&jobs);
+    let idx = metrics::bin_indices(&jobs, rt.manifest.num_bins);
+    let thr = metrics::log_thresholds(rt.manifest.num_thresholds, 3.0);
+    let out = rt.analyze(&sizes, &sojourns, &idx, &thr).unwrap();
+
+    // MST (f32 accumulation tolerance).
+    let rust_mst = res.mst(&jobs);
+    assert!(
+        (out.mst() - rust_mst).abs() / rust_mst < 1e-3,
+        "artifact MST {} vs rust {rust_mst}",
+        out.mst()
+    );
+    assert_eq!(out.count as usize, jobs.len());
+
+    // Per-job slowdowns.
+    let rust_slow = res.slowdowns(&jobs);
+    for i in (0..jobs.len()).step_by(53) {
+        let tol = 1e-3 * rust_slow[i].abs().max(1.0);
+        assert!(
+            (out.slowdowns[i] - rust_slow[i]).abs() < tol,
+            "slowdown {i}: artifact {} vs rust {}",
+            out.slowdowns[i],
+            rust_slow[i]
+        );
+    }
+
+    // Conditional slowdown per class.
+    let rust_cond = metrics::conditional_slowdown(&jobs, &rust_slow, rt.manifest.num_bins);
+    let art_cond = out.conditional_slowdown();
+    assert_eq!(rust_cond.len(), art_cond.len());
+    for (i, (&(_, r), &a)) in rust_cond.iter().zip(&art_cond).enumerate() {
+        assert!(
+            (r - a).abs() / r.abs().max(1.0) < 5e-3,
+            "class {i}: artifact {a} vs rust {r}"
+        );
+    }
+
+    // ECDF counts.  A large mass of jobs sits within floating-point
+    // rounding of slowdown == 1.0 (jobs served without interference),
+    // so an exact comparison at the threshold is ill-posed: bound the
+    // artifact's (f32) count by the rust ECDF evaluated at thresholds
+    // nudged a relative 1e-4 either way.
+    let thr_lo: Vec<f64> = thr.iter().map(|t| t * (1.0 - 1e-4)).collect();
+    let thr_hi: Vec<f64> = thr.iter().map(|t| t * (1.0 + 1e-4)).collect();
+    let ecdf_lo = metrics::slowdown_ecdf(&rust_slow, &thr_lo);
+    let ecdf_hi = metrics::slowdown_ecdf(&rust_slow, &thr_hi);
+    for i in 0..thr.len() {
+        let art_frac = out.ecdf_counts[i] / jobs.len() as f64;
+        assert!(
+            art_frac >= ecdf_lo[i] - 2e-3 && art_frac <= ecdf_hi[i] + 2e-3,
+            "ecdf[{i}]: artifact {art_frac} outside rust bounds [{}, {}]",
+            ecdf_lo[i],
+            ecdf_hi[i]
+        );
+    }
+}
+
+/// Chunking over the fixed AOT batch must be linear: results over a
+/// population larger than one batch equal the pure-rust aggregates.
+#[test]
+fn analytics_chunking_is_linear() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.batch + 1234; // forces 2 chunks + padding
+    let mut rng = Rng::new(99);
+    let w = Weibull::unit_mean(0.5);
+    let jobs: Vec<Job> = (0..n as u32)
+        .map(|i| {
+            let s = w.sample(&mut rng).max(1e-6);
+            Job::exact(i, 0.0, s)
+        })
+        .collect();
+    let sojourns: Vec<f64> = jobs.iter().map(|j| j.size * (1.0 + rng.u01())).collect();
+    let slow: Vec<f64> = jobs.iter().zip(&sojourns).map(|(j, s)| s / j.size).collect();
+    let sizes: Vec<f64> = jobs.iter().map(|j| j.size).collect();
+    let idx = metrics::bin_indices(&jobs, rt.manifest.num_bins);
+    let thr = metrics::log_thresholds(rt.manifest.num_thresholds, 3.0);
+    let out = rt.analyze(&sizes, &sojourns, &idx, &thr).unwrap();
+
+    assert_eq!(out.slowdowns.len(), n);
+    assert_eq!(out.count as usize, n);
+    let rust_mst = psbs::stats::mean(&sojourns);
+    assert!((out.mst() - rust_mst).abs() / rust_mst < 1e-3);
+    let rust_total: f64 = slow.iter().sum();
+    let art_total: f64 = out.bin_sums.iter().sum();
+    assert!(
+        (rust_total - art_total).abs() / rust_total < 1e-3,
+        "total slowdown: artifact {art_total} vs rust {rust_total}"
+    );
+    let counted: f64 = out.bin_counts.iter().sum();
+    assert_eq!(counted as usize, n, "padding leaked into bin counts");
+}
+
+/// `gen_weibull_lognormal` produces samples whose moments match the
+/// requested distributions across chunk boundaries.
+#[test]
+fn gen_weibull_lognormal_moments() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(123);
+    let n = rt.manifest.batch * 2 + 777;
+    let (samples, mults) = rt
+        .gen_weibull_lognormal(&mut rng, n, 1.0, 2.0, 0.5)
+        .unwrap();
+    assert_eq!(samples.len(), n);
+    assert_eq!(mults.len(), n);
+    let mean_s = psbs::stats::mean(&samples);
+    assert!((mean_s - 2.0).abs() < 0.05, "Weibull(1, 2) mean {mean_s}");
+    let mut logs: Vec<f64> = mults.iter().map(|m| m.ln()).collect();
+    logs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(logs[logs.len() / 2].abs() < 0.02, "log-normal median");
+}
+
+/// The compiled Pareto selector (params[3] = 1) must match the rust
+/// `Pareto::icdf` on the same uniforms.
+#[test]
+fn workload_artifact_matches_rust_pareto() {
+    use psbs::workload::dists::Pareto;
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let mut rng = Rng::new(88);
+    for alpha in [1.0, 2.0] {
+        let p = if alpha > 1.0 { Pareto::unit_mean(alpha) } else { Pareto::new(1.0, alpha) };
+        let u: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+        let halves = vec![0.5f32; b];
+        let params = [alpha as f32, p.xm as f32, 0.5, 1.0];
+        let (samples, _) = rt.gen_batch(&u, &halves, &halves, &params).unwrap();
+        for i in (0..b).step_by(131) {
+            let expect = p.icdf(u[i] as f64);
+            let got = samples[i] as f64;
+            assert!(
+                (got - expect).abs() < 5e-3 * expect.abs().max(1e-3),
+                "alpha {alpha} i {i}: artifact {got} vs rust {expect}"
+            );
+        }
+    }
+}
+
+/// `gen_pareto_lognormal` chunks correctly and respects the x_m bound.
+#[test]
+fn gen_pareto_lognormal_bounds_and_moments() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(89);
+    let n = rt.manifest.batch + 99;
+    let (samples, mults) = rt.gen_pareto_lognormal(&mut rng, n, 2.0, 0.5, 0.5).unwrap();
+    assert_eq!(samples.len(), n);
+    assert!(samples.iter().all(|&s| s >= 0.5 * (1.0 - 1e-5)), "Pareto >= xm");
+    // mean = alpha*xm/(alpha-1) = 1 (heavy tail: loose tolerance).
+    let mean = psbs::stats::mean(&samples);
+    assert!((mean - 1.0).abs() < 0.1, "mean {mean}");
+    assert!(mults.iter().all(|&m| m > 0.0));
+}
+
+/// The full workload-generation path through the artifact yields the
+/// same qualitative scheduling results as the pure-rust path (MST
+/// ratios within a few percent on the default workload).
+#[test]
+fn artifact_workload_statistically_equivalent() {
+    let Some(rt) = runtime() else { return };
+    let njobs = 5_000;
+    let shape = 0.5; // moderate tail: MST stable enough to compare
+    let sigma = 0.5;
+
+    // Artifact path.
+    let rng = Rng::new(2024);
+    let scale = 1.0 / psbs::stats::gamma(1.0 + 1.0 / shape);
+    let (sizes, mults) = rt
+        .gen_weibull_lognormal(&mut rng.substream(1), njobs, shape, scale, sigma)
+        .unwrap();
+    let gap_scale = Weibull::with_mean(1.0, 1.0 / 0.9).scale;
+    let (gaps, _) = rt
+        .gen_weibull_lognormal(&mut rng.substream(2), njobs, 1.0, gap_scale, 0.0)
+        .unwrap();
+    let mut t = 0.0;
+    let art_jobs: Vec<Job> = (0..njobs)
+        .map(|i| {
+            t += gaps[i];
+            let size = sizes[i].max(1e-9);
+            Job {
+                id: i as u32,
+                arrival: t,
+                size,
+                est: (size * mults[i]).max(1e-9),
+                weight: 1.0,
+            }
+        })
+        .collect();
+
+    // Pure-rust path (different stream, same distributions).
+    let cfg = psbs::workload::SynthConfig::default()
+        .with_shape(shape)
+        .with_njobs(njobs);
+    let rust_jobs = psbs::workload::synthesize(&cfg, 2024);
+
+    // Compare the PS-normalized PSBS ratio — a distributional property.
+    let ratio = |jobs: &[Job]| {
+        let mut a = psbs::sched::by_name("psbs").unwrap();
+        let pa = psbs::sim::run(a.as_mut(), jobs).mst(jobs);
+        let mut b = psbs::sched::by_name("ps").unwrap();
+        let pb = psbs::sim::run(b.as_mut(), jobs).mst(jobs);
+        pa / pb
+    };
+    let ra = ratio(&art_jobs);
+    let rb = ratio(&rust_jobs);
+    assert!(
+        (ra - rb).abs() < 0.25,
+        "artifact-generated ratio {ra} vs rust-generated {rb}"
+    );
+    // And the headline must hold on both: PSBS beats PS here.
+    assert!(ra < 1.0 && rb < 1.0, "psbs/ps ratios: artifact {ra}, rust {rb}");
+}
+
+/// LogNormal icdf vs the kernel's Box–Muller: distributional agreement
+/// via a KS-style max-gap test on the empirical CDF.
+#[test]
+fn lognormal_ks_agreement() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let sigma = 1.0;
+    let mut rng = Rng::new(55);
+    let u: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+    let ua: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+    let ub: Vec<f32> = (0..b).map(|_| rng.u01() as f32).collect();
+    let (_, mults) = rt.gen_batch(&u, &ua, &ub, &[0.25, 1.0, sigma as f32, 0.0]).unwrap();
+    let dist = LogNormal::error_model(sigma);
+    let mut xs: Vec<f64> = mults.iter().map(|&m| m as f64).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut max_gap: f64 = 0.0;
+    for q in 1..100 {
+        let p = q as f64 / 100.0;
+        let emp = psbs::stats::quantile_sorted(&xs, p);
+        let theo = dist.icdf(p);
+        // Compare in log space (multiplicative distribution).
+        max_gap = max_gap.max((emp.ln() - theo.ln()).abs());
+    }
+    assert!(max_gap < 0.1, "quantile log-gap {max_gap}");
+}
