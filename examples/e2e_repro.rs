@@ -29,7 +29,17 @@ use psbs::util::rng::Rng;
 use psbs::workload::dists::Weibull;
 use psbs::{metrics, sched, sim};
 
-fn main() -> anyhow::Result<()> {
+/// Dependency-free `ensure!` stand-in (`anyhow` is unavailable in the
+/// offline build environment).
+macro_rules! ensure {
+    ($cond:expr, $($msg:tt)+) => {
+        if !$cond {
+            return Err(format!($($msg)+).into());
+        }
+    };
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // ---- 1. load artifacts --------------------------------------------
     let rt = match Runtime::try_default() {
         Some(rt) => rt,
@@ -105,7 +115,7 @@ fn main() -> anyhow::Result<()> {
             let out = rt.analyze(&sizes, &sojourns, &idx, &thr)?;
             let rust_mst = res.mst(&jobs);
             let hlo_mst = out.mst();
-            anyhow::ensure!(
+            ensure!(
                 (rust_mst - hlo_mst).abs() / rust_mst < 1e-3,
                 "compiled vs native MST mismatch: {hlo_mst} vs {rust_mst}"
             );
@@ -117,7 +127,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 5. the reproduction check -------------------------------------
     println!();
-    anyhow::ensure!(
+    ensure!(
         psbs_ratio < fspe_ratio,
         "expected PSBS ({psbs_ratio:.2}) below FSPE ({fspe_ratio:.2}) at shape 0.25"
     );

@@ -1,0 +1,22 @@
+//! Helpers shared by the scheduler benches (pulled in via `#[path]` —
+//! this file is not a bench target itself).  Keeping the standing-
+//! population methodology in one place guarantees the per-event
+//! numbers in BENCH_sched.json and the population curves in
+//! BENCH_psbs_ops.json stay comparable.
+
+use psbs::sched;
+use psbs::sim::{Job, Scheduler};
+
+/// Build a scheduler preloaded with `n` long pending jobs.
+pub fn preload(policy: &str, n: usize) -> Box<dyn Scheduler> {
+    let mut s = sched::by_name(policy).unwrap();
+    for i in 1..=n as u32 {
+        let size = 1e6 + i as f64; // long: nothing completes during the bench
+        s.on_arrival(i as f64 * 1e-6, &Job::exact(i, i as f64 * 1e-6, size));
+    }
+    s
+}
+
+/// Tiny probe-job size: completes (really and virtually) within one
+/// bench step, returning the population to exactly `n`.
+pub const TINY: f64 = 1e-10;

@@ -3,9 +3,16 @@
 //! synthesis, scheduler, metrics) surface as figure-level slowdowns.
 //! `psbs sweep` produces the full-scale CSVs; this harness is the
 //! regression guard.
+//!
+//! Also measures the parallel sweep executor on a Fig. 6-style
+//! shape×sigma ratio grid at 1/2/4 worker threads and records the
+//! wall-clock speedups in `BENCH_sweeps.json` (`derived` section), so
+//! the executor's scaling is tracked from PR to PR.  Filter with
+//! `cargo bench --bench figures -- sweep/` for the scaling run alone.
 
-use psbs::figures::{self, Ctx};
-use psbs::util::bench::Bench;
+use psbs::figures::{self, Ctx, Reference, SweepCell};
+use psbs::util::bench::{self, Bench};
+use psbs::workload::SynthConfig;
 
 fn main() {
     let mut b = Bench::new();
@@ -19,4 +26,53 @@ fn main() {
             std::hint::black_box(tables.len());
         });
     }
+
+    // Parallel sweep executor scaling: the shape×sigma MST/opt ratio
+    // grid (the Fig. 6 shape) as one flat cell list, at 1/2/4 threads.
+    // Identical cells each time — only the thread count varies, so the
+    // mean-time ratios are the executor's wall-clock speedups.
+    let mut cells: Vec<SweepCell> = Vec::new();
+    for &shape in &[0.5, 0.25, 0.125] {
+        for &sigma in &figures::GRID {
+            for p in ["psbs", "srpte", "fspe", "ps", "las"] {
+                cells.push(SweepCell::ratio(
+                    p,
+                    Reference::OptSrpt,
+                    SynthConfig::default().with_shape(shape).with_sigma(sigma).with_njobs(1_500),
+                ));
+            }
+        }
+    }
+    for &threads in &[1usize, 2, 4] {
+        let ctx = Ctx { reps: 1, njobs: 1_500, seed: 7, threads, ..Default::default() };
+        let cells = cells.clone();
+        b.bench_items(
+            &format!("sweep/shape_sigma_grid/threads{threads}"),
+            Some(cells.len() as u64),
+            move || {
+                std::hint::black_box(ctx.eval_grid(&cells).len());
+            },
+        );
+    }
+
+    // Derived speedups vs the 1-thread run (when all three ran — a
+    // `cargo bench -- <filter>` may have skipped some).
+    let mean_of = |suffix: &str| {
+        b.samples.iter().find(|s| s.name.ends_with(suffix)).map(|s| s.mean_ns)
+    };
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    if let Some(t1) = mean_of("threads1") {
+        for (suffix, label) in [("threads2", "sweep_speedup_2v1"), ("threads4", "sweep_speedup_4v1")] {
+            if let Some(tn) = mean_of(suffix) {
+                derived.push((label.to_string(), t1 / tn));
+            }
+        }
+    }
+    for (k, v) in &derived {
+        println!("derived {k} = {v:.2}x");
+    }
+
+    let path = bench::out_path("BENCH_sweeps.json");
+    bench::write_json(&path, "sweeps", &b.samples, &derived).expect("write BENCH_sweeps.json");
+    println!("wrote {path}");
 }

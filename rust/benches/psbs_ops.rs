@@ -13,21 +13,12 @@
 //! O(n) virtual-remaining update inside `advance`; PSBS pays two heap
 //! operations.
 
-use psbs::sched;
 use psbs::sim::{Job, Scheduler};
-use psbs::util::bench::Bench;
+use psbs::util::bench::{self, Bench};
 
-/// Build a scheduler preloaded with `n` long pending jobs.
-fn preload(policy: &str, n: usize) -> Box<dyn Scheduler> {
-    let mut s = sched::by_name(policy).unwrap();
-    for i in 1..=n as u32 {
-        let size = 1e6 + i as f64; // long: nothing completes during the bench
-        s.on_arrival(i as f64 * 1e-6, &Job::exact(i, i as f64 * 1e-6, size));
-    }
-    s
-}
-
-const TINY: f64 = 1e-10;
+#[path = "common.rs"]
+mod common;
+use common::{preload, TINY};
 
 fn main() {
     let mut b = Bench::new();
@@ -74,7 +65,8 @@ fn main() {
         });
     }
 
-    // Cancellation cost at depth (O(n) scan + O(log n) heap fix-up).
+    // Cancellation cost at depth: the O heap is indexed (seq -> slot),
+    // so cancel is an O(1) lookup + O(log n) heap fix-up, no scan.
     // The cancelled job parks in E until its (tiny) virtual lag is
     // reached; the advance drains it so E stays empty.
     for &n in &[1_000usize, 100_000] {
@@ -92,4 +84,8 @@ fn main() {
             now += dt;
         });
     }
+
+    let path = bench::out_path("BENCH_psbs_ops.json");
+    bench::write_json(&path, "psbs_ops", &b.samples, &[]).expect("write BENCH_psbs_ops.json");
+    println!("wrote {path}");
 }

@@ -5,7 +5,7 @@
 
 use psbs::metrics;
 use psbs::runtime::Runtime;
-use psbs::util::bench::Bench;
+use psbs::util::bench::{self, Bench};
 use psbs::util::rng::Rng;
 
 fn main() {
@@ -75,4 +75,8 @@ fn main() {
             std::hint::black_box(out.0.len());
         });
     }
+
+    let path = bench::out_path("BENCH_runtime.json");
+    bench::write_json(&path, "runtime", &b.samples, &[]).expect("write BENCH_runtime.json");
+    println!("wrote {path}");
 }

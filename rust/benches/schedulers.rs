@@ -1,11 +1,21 @@
 //! End-to-end simulator throughput per discipline (paper §A.1: their
 //! Python simulator runs 10k jobs in ~0.5 s; DESIGN.md §Perf targets
-//! <5 ms for PS-class policies here).
+//! <5 ms for PS-class policies here) plus per-event scheduler cost at
+//! a standing 10k-job population (the §5.2.2 O(log n) vs O(n) numbers;
+//! the full population curve lives in the psbs_ops bench).
+//!
+//! Results land in `BENCH_sched.json`.  Filter with
+//! `cargo bench --bench schedulers -- event/` for a quick per-event
+//! smoke (what scripts/tier1.sh runs).
 
 use psbs::sched;
-use psbs::sim;
-use psbs::util::bench::Bench;
+use psbs::sim::{self, Job, Scheduler};
+use psbs::util::bench::{self, Bench};
 use psbs::workload::{self, SynthConfig};
+
+#[path = "common.rs"]
+mod common;
+use common::{preload, TINY};
 
 fn main() {
     let mut b = Bench::new();
@@ -34,9 +44,35 @@ fn main() {
         });
     }
 
+    // Per-event cost against a standing population of 10k jobs: one
+    // tiny-job arrival + completion pair per iteration (methodology as
+    // in the psbs_ops bench, which sweeps the population size).
+    for policy in ["psbs", "fsp-naive"] {
+        let n = 10_000usize;
+        let mut s = preload(policy, n);
+        let mut id = n as u32;
+        let mut now = n as f64 * 1e-6;
+        let mut done = Vec::with_capacity(1);
+        let dt = TINY * 4.0 * (n as f64 + 2.0);
+        b.bench(&format!("event/{policy}/n{n}"), move || {
+            id += 1;
+            s.on_arrival(now, &Job::exact(id, now, TINY));
+            std::hint::black_box(s.next_event(now));
+            done.clear();
+            s.advance(now, now + dt, &mut done);
+            debug_assert_eq!(done.len(), 1);
+            now += dt;
+            std::hint::black_box(done.len());
+        });
+    }
+
     // Workload synthesis itself.
     b.bench_items("workload/synthesize_10k", Some(10_000), || {
         let cfg = SynthConfig::default().with_njobs(10_000);
         std::hint::black_box(workload::synthesize(&cfg, 7).len());
     });
+
+    let path = bench::out_path("BENCH_sched.json");
+    bench::write_json(&path, "sched", &b.samples, &[]).expect("write BENCH_sched.json");
+    println!("wrote {path}");
 }

@@ -7,6 +7,18 @@
 //! repetition counts unless `--reps`/`--paper-scale` raise them); the
 //! *shapes* — who wins, by what factor, where crossovers sit — are the
 //! reproduction targets, recorded in EXPERIMENTS.md.
+//!
+//! ## Parallel sweep execution
+//!
+//! Every figure describes its work as a flat list of independent cells
+//! — [`SweepCell`]s for plain MST/ratio grids, ad-hoc `(index, rep)`
+//! items for pooled-population figures — and evaluates it through
+//! [`crate::util::pool::par_map`] with `Ctx::threads` workers.  Each
+//! cell derives its repetition seeds independently
+//! (`seed + r * 7919`), and results are reassembled in cell order, so
+//! parallel output is **bit-identical** to the serial path
+//! (`threads == 1`); `tests::parallel_sweep_is_bit_identical` pins
+//! this down across thread counts.
 
 pub mod plot;
 pub mod tables;
@@ -16,6 +28,7 @@ use crate::runtime::Runtime;
 use crate::sched;
 use crate::sim::{self, Job};
 use crate::stats::Repetitions;
+use crate::util::pool;
 use crate::workload::traces;
 use crate::workload::{SizeDist, SynthConfig};
 pub use tables::Table;
@@ -35,6 +48,9 @@ pub struct Ctx {
     /// Keep repeating past `reps` (up to 10x) until the 95% CI is
     /// within 5% of the mean (§6.3) — slow; off by default.
     pub converge: bool,
+    /// Worker threads for grid evaluation (1 = the exact serial path;
+    /// results are bit-identical either way).
+    pub threads: usize,
 }
 
 impl Default for Ctx {
@@ -46,6 +62,7 @@ impl Default for Ctx {
             out_dir: "results".to_string(),
             runtime: None,
             converge: false,
+            threads: 1,
         }
     }
 }
@@ -53,42 +70,113 @@ impl Default for Ctx {
 /// The grid used for shape/sigma sweeps (paper: 0.125 .. 4, log-spaced).
 pub const GRID: [f64; 6] = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0];
 
+/// Scalar sweep parameters, detached from [`Ctx`] so worker threads
+/// never touch the (non-`Sync`) runtime handle.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepParams {
+    pub reps: u64,
+    pub seed: u64,
+    pub converge: bool,
+}
+
+/// One cell of a sweep grid: one (policy, workload-config) data point,
+/// evaluated over seeded repetitions.  Figures build flat
+/// `Vec<SweepCell>` grids and hand them to [`Ctx::eval_grid`].
+#[derive(Debug, Clone, Copy)]
+pub struct SweepCell {
+    pub policy: &'static str,
+    pub cfg: SynthConfig,
+    /// `Some(r)` => mean of per-seed MST ratios against `r`;
+    /// `None` => mean raw MST.
+    pub reference: Option<Reference>,
+}
+
+impl SweepCell {
+    /// A ratio cell (the common case).
+    pub fn ratio(policy: &'static str, reference: Reference, cfg: SynthConfig) -> SweepCell {
+        SweepCell { policy, cfg, reference: Some(reference) }
+    }
+
+    /// Evaluate this cell: a pure function of (cell, params), safe to
+    /// run on any worker.
+    pub fn eval(&self, p: SweepParams) -> f64 {
+        match self.reference {
+            None => mst_mean(p, self.policy, &self.cfg),
+            Some(r) => mst_ratio_mean(p, self.policy, r, &self.cfg),
+        }
+    }
+}
+
+/// Mean MST of `policy` over repetitions of `cfg`.
+fn mst_mean(p: SweepParams, policy: &str, cfg: &SynthConfig) -> f64 {
+    let mut reps = Repetitions::default();
+    let max = if p.converge { p.reps * 10 } else { p.reps };
+    for r in 0..max {
+        let jobs = crate::workload::synthesize(cfg, p.seed.wrapping_add(r * 7919));
+        reps.push(run_mst(policy, &jobs));
+        if r + 1 >= p.reps && (!p.converge || reps.converged(p.reps as usize)) {
+            break;
+        }
+    }
+    reps.mean()
+}
+
+/// Mean of MST ratios policy/reference, paired per seed (paired ratios
+/// suppress the enormous per-workload variance of heavy-tailed sizes —
+/// the reason the paper needs thousands of repetitions for raw
+/// averages).
+fn mst_ratio_mean(p: SweepParams, policy: &str, reference: Reference, cfg: &SynthConfig) -> f64 {
+    let mut reps = Repetitions::default();
+    let max = if p.converge { p.reps * 10 } else { p.reps };
+    for r in 0..max {
+        let jobs = crate::workload::synthesize(cfg, p.seed.wrapping_add(r * 7919));
+        let a = run_mst(policy, &jobs);
+        let q = reference.mst(&jobs);
+        reps.push(a / q);
+        if r + 1 >= p.reps && (!p.converge || reps.converged(p.reps as usize)) {
+            break;
+        }
+    }
+    reps.mean()
+}
+
 impl Ctx {
     fn cfg(&self) -> SynthConfig {
         SynthConfig::default().with_njobs(self.njobs)
     }
 
-    /// Mean MST of `policy` over repetitions of `cfg`.
-    pub fn mst(&self, policy: &str, cfg: &SynthConfig) -> f64 {
-        let mut reps = Repetitions::default();
-        let max = if self.converge { self.reps * 10 } else { self.reps };
-        for r in 0..max {
-            let jobs = crate::workload::synthesize(cfg, self.seed.wrapping_add(r * 7919));
-            reps.push(run_mst(policy, &jobs));
-            if r + 1 >= self.reps && (!self.converge || reps.converged(self.reps as usize)) {
-                break;
-            }
-        }
-        reps.mean()
+    /// The worker-safe scalar slice of this context.
+    pub fn params(&self) -> SweepParams {
+        SweepParams { reps: self.reps, seed: self.seed, converge: self.converge }
     }
 
-    /// Mean of MST ratios policy/reference, paired per seed (paired
-    /// ratios suppress the enormous per-workload variance of
-    /// heavy-tailed sizes — the reason the paper needs thousands of
-    /// repetitions for raw averages).
+    /// Mean MST of `policy` over repetitions of `cfg`.
+    pub fn mst(&self, policy: &str, cfg: &SynthConfig) -> f64 {
+        mst_mean(self.params(), policy, cfg)
+    }
+
+    /// Mean of MST ratios policy/reference, paired per seed.
     pub fn mst_ratio(&self, policy: &str, reference: Reference, cfg: &SynthConfig) -> f64 {
-        let mut reps = Repetitions::default();
-        let max = if self.converge { self.reps * 10 } else { self.reps };
-        for r in 0..max {
-            let jobs = crate::workload::synthesize(cfg, self.seed.wrapping_add(r * 7919));
-            let p = run_mst(policy, &jobs);
-            let q = reference.mst(&jobs);
-            reps.push(p / q);
-            if r + 1 >= self.reps && (!self.converge || reps.converged(self.reps as usize)) {
-                break;
-            }
-        }
-        reps.mean()
+        mst_ratio_mean(self.params(), policy, reference, cfg)
+    }
+
+    /// Evaluate a flat sweep grid on the work pool; results come back
+    /// in cell order regardless of thread count.
+    pub fn eval_grid(&self, cells: &[SweepCell]) -> Vec<f64> {
+        let p = self.params();
+        pool::par_map(self.threads, cells, move |c| c.eval(p))
+    }
+
+    /// Parallel map over arbitrary independent work items (figures
+    /// whose cells aren't plain MST points: pooled slowdowns, trace
+    /// replays, per-rep dual-policy runs).  Deterministic: results in
+    /// item order.
+    pub fn par_runs<T, R>(&self, items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+    {
+        pool::par_map(self.threads, items, f)
     }
 }
 
@@ -127,6 +215,32 @@ pub fn run_slowdowns(policy: &str, jobs: &[Job]) -> Vec<f64> {
     sim::run(s.as_mut(), jobs).slowdowns(jobs)
 }
 
+/// Flat (x-major, policy-minor) ratio grid over `xs`, one row per x.
+/// The shared shape of Figs. 5, 6, 10, 14 and friends.
+fn ratio_rows(
+    ctx: &Ctx,
+    xs: &[f64],
+    policies: &[&'static str],
+    reference: Reference,
+    cfg_of: impl Fn(f64) -> SynthConfig,
+    table: &mut Table,
+) {
+    let mut cells = Vec::with_capacity(xs.len() * policies.len());
+    for &x in xs {
+        let cfg = cfg_of(x);
+        for &p in policies {
+            cells.push(SweepCell::ratio(p, reference, cfg));
+        }
+    }
+    let vals = ctx.eval_grid(&cells);
+    let mut it = vals.into_iter();
+    for &x in xs {
+        let mut row = vec![x];
+        row.extend((&mut it).take(policies.len()));
+        table.push(row);
+    }
+}
+
 // --------------------------------------------------------------------
 // Fig. 3 — MST against PS over the sigma x shape grid, 6 policies.
 // --------------------------------------------------------------------
@@ -136,13 +250,21 @@ pub fn fig3(ctx: &Ctx) -> Vec<Table> {
         "fig3_mst_vs_ps",
         ["shape", "sigma"].iter().chain(policies.iter()).map(|s| s.to_string()).collect(),
     );
+    let mut cells = Vec::with_capacity(GRID.len() * GRID.len() * policies.len());
     for &shape in &GRID {
         for &sigma in &GRID {
             let cfg = ctx.cfg().with_shape(shape).with_sigma(sigma);
-            let mut row = vec![shape, sigma];
-            for p in policies {
-                row.push(ctx.mst_ratio(p, Reference::Ps, &cfg));
+            for &p in &policies {
+                cells.push(SweepCell::ratio(p, Reference::Ps, cfg));
             }
+        }
+    }
+    let vals = ctx.eval_grid(&cells);
+    let mut it = vals.into_iter();
+    for &shape in &GRID {
+        for &sigma in &GRID {
+            let mut row = vec![shape, sigma];
+            row.extend((&mut it).take(policies.len()));
             t.push(row);
         }
     }
@@ -155,6 +277,7 @@ pub fn fig3(ctx: &Ctx) -> Vec<Table> {
 pub fn fig4(ctx: &Ctx) -> Vec<Table> {
     let policies = ["ps", "srpte+ps", "srpte+las", "fspe+ps", "fspe+las"];
     let thresholds = metrics::log_thresholds(128, 3.0);
+    let seed = ctx.seed;
     let mut out = Vec::new();
     for &shape in &[0.5, 0.25, 0.125] {
         let mut t = Table::new(
@@ -162,13 +285,21 @@ pub fn fig4(ctx: &Ctx) -> Vec<Table> {
             ["slowdown"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
         );
         let cfg = ctx.cfg().with_shape(shape);
-        // Pool slowdowns across repetitions (the paper pools runs too).
+        // Reps run in parallel, one policy at a time (the fig7 shape):
+        // rep order inside each policy matches the serial loop, so the
+        // pooled ECDFs are bit-identical, and peak memory stays at one
+        // policy's pooled population as in the serial path.  The paper
+        // pools runs too.
+        let rep_items: Vec<u64> = (0..ctx.reps).collect();
         let mut ecdfs: Vec<Vec<f64>> = Vec::new();
-        for p in policies {
+        for &policy in &policies {
+            let runs = ctx.par_runs(&rep_items, |&r| {
+                let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
+                run_slowdowns(policy, &jobs)
+            });
             let mut pooled = Vec::new();
-            for r in 0..ctx.reps {
-                let jobs = crate::workload::synthesize(&cfg, ctx.seed.wrapping_add(r * 7919));
-                pooled.extend(run_slowdowns(p, &jobs));
+            for slow in runs {
+                pooled.extend(slow);
             }
             ecdfs.push(metrics::slowdown_ecdf(&pooled, &thresholds));
         }
@@ -191,14 +322,8 @@ pub fn fig5(ctx: &Ctx) -> Vec<Table> {
         "fig5_mst_vs_shape",
         ["shape"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
     );
-    for &shape in &GRID {
-        let cfg = ctx.cfg().with_shape(shape);
-        let mut row = vec![shape];
-        for p in policies {
-            row.push(ctx.mst_ratio(p, Reference::OptSrpt, &cfg));
-        }
-        t.push(row);
-    }
+    let base = ctx.cfg();
+    ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |shape| base.with_shape(shape), &mut t);
     vec![t]
 }
 
@@ -213,14 +338,8 @@ pub fn fig6(ctx: &Ctx) -> Vec<Table> {
             format!("fig6_mst_vs_sigma_shape{shape}"),
             ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
         );
-        for &sigma in &GRID {
-            let cfg = ctx.cfg().with_shape(shape).with_sigma(sigma);
-            let mut row = vec![sigma];
-            for p in policies {
-                row.push(ctx.mst_ratio(p, Reference::OptSrpt, &cfg));
-            }
-            t.push(row);
-        }
+        let base = ctx.cfg().with_shape(shape);
+        ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |sigma| base.with_sigma(sigma), &mut t);
         out.push(t);
     }
     out
@@ -232,20 +351,30 @@ pub fn fig6(ctx: &Ctx) -> Vec<Table> {
 pub fn fig7(ctx: &Ctx) -> Vec<Table> {
     let policies = ["fifo", "srpte", "fspe", "ps", "las", "psbs"];
     let cfg = ctx.cfg();
+    let seed = ctx.seed;
     let mut t = Table::new(
         "fig7_conditional_slowdown",
         ["size"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
     );
-    // One pooled population across reps, analyzed per policy.
+    // One pooled population across reps, analyzed per policy.  Reps
+    // run in parallel but one policy is materialized at a time: the
+    // cells return full (jobs, slowdowns) populations, so batching all
+    // policies at once would multiply peak memory by the policy count
+    // versus the serial path.  Pooling stays in the serial order.
+    let rep_items: Vec<u64> = (0..ctx.reps).collect();
     let mut per_policy: Vec<Vec<(f64, f64)>> = Vec::new();
-    for p in policies {
+    for &policy in &policies {
+        let runs = ctx.par_runs(&rep_items, |&r| {
+            let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
+            let mut s = sched::by_name(policy).unwrap();
+            let res = sim::run(s.as_mut(), &jobs);
+            let slow = res.slowdowns(&jobs);
+            (jobs, slow)
+        });
         let mut jobs_all: Vec<Job> = Vec::new();
         let mut slow_all: Vec<f64> = Vec::new();
-        for r in 0..ctx.reps {
-            let jobs = crate::workload::synthesize(&cfg, ctx.seed.wrapping_add(r * 7919));
-            let mut s = sched::by_name(p).unwrap();
-            let res = sim::run(s.as_mut(), &jobs);
-            slow_all.extend(res.slowdowns(&jobs));
+        for (jobs, slow) in runs {
+            slow_all.extend(slow);
             jobs_all.extend(jobs);
         }
         per_policy.push(conditional_via_runtime(ctx, &jobs_all, &slow_all));
@@ -264,7 +393,8 @@ pub fn fig7(ctx: &Ctx) -> Vec<Table> {
 
 /// Conditional slowdown through the analytics artifact when loaded
 /// (production path), pure rust otherwise.  Returns (mean size, mean
-/// slowdown) per equal-count class.
+/// slowdown) per equal-count class.  Always runs on the main thread —
+/// the runtime handle never crosses into the pool.
 fn conditional_via_runtime(ctx: &Ctx, jobs: &[Job], slowdowns: &[f64]) -> Vec<(f64, f64)> {
     let rust_way = metrics::conditional_slowdown(jobs, slowdowns, metrics::COND_BINS);
     match &ctx.runtime {
@@ -305,6 +435,7 @@ pub fn fig8(ctx: &Ctx) -> Vec<Table> {
     let policies = ["fifo", "srpte", "fspe", "ps", "las", "psbs"];
     let thresholds = metrics::log_thresholds(128, 4.0);
     let cfg = ctx.cfg();
+    let seed = ctx.seed;
     let mut t = Table::new(
         "fig8_perjob_slowdown_cdf",
         ["slowdown"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
@@ -313,12 +444,18 @@ pub fn fig8(ctx: &Ctx) -> Vec<Table> {
         "fig8_tail_above_100",
         vec!["policy_idx".to_string(), "frac_above_100".to_string()],
     );
+    // Per-policy batches of parallel reps, as in fig4/fig7: flat peak
+    // memory, serial pooling order.
+    let rep_items: Vec<u64> = (0..ctx.reps).collect();
     let mut ecdfs = Vec::new();
-    for (pi, p) in policies.iter().enumerate() {
+    for (pi, &policy) in policies.iter().enumerate() {
+        let runs = ctx.par_runs(&rep_items, |&r| {
+            let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
+            run_slowdowns(policy, &jobs)
+        });
         let mut pooled = Vec::new();
-        for r in 0..ctx.reps {
-            let jobs = crate::workload::synthesize(&cfg, ctx.seed.wrapping_add(r * 7919));
-            pooled.extend(run_slowdowns(p, &jobs));
+        for slow in runs {
+            pooled.extend(slow);
         }
         tails.push(vec![pi as f64, metrics::frac_above(&pooled, 100.0)]);
         ecdfs.push(metrics::slowdown_ecdf(&pooled, &thresholds));
@@ -335,6 +472,7 @@ pub fn fig8(ctx: &Ctx) -> Vec<Table> {
 // Fig. 9 — weighted classes: PSBS vs DPS, beta in {0,1,2}.
 // --------------------------------------------------------------------
 pub fn fig9(ctx: &Ctx) -> Vec<Table> {
+    let seed = ctx.seed;
     let mut out = Vec::new();
     for &shape in &[0.25, 4.0] {
         let mut t = Table::new(
@@ -348,15 +486,19 @@ pub fn fig9(ctx: &Ctx) -> Vec<Table> {
         );
         for &beta in &[0.0, 1.0, 2.0] {
             let cfg = ctx.cfg().with_shape(shape).with_beta(beta);
-            // Per-class MST accumulators over reps.
-            let mut acc: Vec<(Repetitions, Repetitions)> =
-                (0..5).map(|_| Default::default()).collect();
-            for r in 0..ctx.reps {
-                let jobs = crate::workload::synthesize(&cfg, ctx.seed.wrapping_add(r * 7919));
-                for (mst_acc, policy) in [(0usize, "psbs"), (1, "dps")] {
-                    let mut s = sched::by_name(policy).unwrap();
-                    let res = sim::run(s.as_mut(), &jobs);
-                    let soj = res.sojourns(&jobs);
+            // One work item per repetition: both policies run on the
+            // shared workload inside the cell, and the per-class means
+            // are reduced *inside* the cell too (identical arithmetic
+            // to the serial path), so each rep returns ~10 floats
+            // instead of its full job/sojourn vectors — peak memory
+            // stays flat in --reps.
+            let rep_items: Vec<u64> = (0..ctx.reps).collect();
+            let runs = ctx.par_runs(&rep_items, |&r| {
+                let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
+                let mut class_means = [[None::<f64>; 5]; 2];
+                for (pi, policy) in ["psbs", "dps"].into_iter().enumerate() {
+                    let mut sch = sched::by_name(policy).unwrap();
+                    let soj = sim::run(sch.as_mut(), &jobs).sojourns(&jobs);
                     for class in 1..=5usize {
                         let vals: Vec<f64> = jobs
                             .iter()
@@ -368,8 +510,20 @@ pub fn fig9(ctx: &Ctx) -> Vec<Table> {
                             .map(|(_, &s)| s)
                             .collect();
                         if !vals.is_empty() {
-                            let m = crate::stats::mean(&vals);
-                            if mst_acc == 0 {
+                            class_means[pi][class - 1] = Some(crate::stats::mean(&vals));
+                        }
+                    }
+                }
+                class_means
+            });
+            // Per-class MST accumulators over reps (serial order).
+            let mut acc: Vec<(Repetitions, Repetitions)> =
+                (0..5).map(|_| Default::default()).collect();
+            for class_means in runs {
+                for (pi, means) in class_means.iter().enumerate() {
+                    for class in 1..=5usize {
+                        if let Some(m) = means[class - 1] {
+                            if pi == 0 {
                                 acc[class - 1].0.push(m);
                             } else {
                                 acc[class - 1].1.push(m);
@@ -403,19 +557,20 @@ pub fn fig10(ctx: &Ctx) -> Vec<Table> {
             format!("fig10_pareto_alpha{alpha}"),
             ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
         );
-        for &sigma in &GRID {
-            let cfg = SynthConfig {
+        let njobs = ctx.njobs;
+        ratio_rows(
+            ctx,
+            &GRID,
+            &policies,
+            Reference::OptSrpt,
+            |sigma| SynthConfig {
                 size_dist: SizeDist::Pareto { alpha },
                 sigma,
-                njobs: ctx.njobs,
+                njobs,
                 ..SynthConfig::default()
-            };
-            let mut row = vec![sigma];
-            for p in policies {
-                row.push(ctx.mst_ratio(p, Reference::OptSrpt, &cfg));
-            }
-            t.push(row);
-        }
+            },
+            &mut t,
+        );
         out.push(t);
     }
     out
@@ -460,19 +615,31 @@ fn trace_fig(name: &str, stats: &traces::TraceStats, ctx: &Ctx, njobs: usize) ->
         name,
         ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
     );
+    let seed0 = ctx.seed;
+    // One work item per (sigma, repetition): synthesize the replay and
+    // return the per-policy MST/opt ratios for that seed.
+    let items: Vec<(f64, u64)> = GRID
+        .iter()
+        .flat_map(|&sigma| (0..ctx.reps).map(move |r| (sigma, r)))
+        .collect();
+    let ratios = ctx.par_runs(&items, |&(sigma, r)| {
+        let seed = seed0.wrapping_add(r * 104_729);
+        let mut recs = traces::synth_trace(stats, seed);
+        recs.truncate(njobs);
+        let jobs = traces::to_jobs(&recs, 0.9, sigma, seed);
+        let opt = Reference::OptSrpt.mst(&jobs);
+        policies.iter().map(|p| run_mst(p, &jobs) / opt).collect::<Vec<f64>>()
+    });
+    let mut it = ratios.into_iter();
     for &sigma in &GRID {
-        let mut row = vec![sigma];
         let mut accs: Vec<Repetitions> = policies.iter().map(|_| Default::default()).collect();
-        for r in 0..ctx.reps {
-            let seed = ctx.seed.wrapping_add(r * 104_729);
-            let mut recs = traces::synth_trace(stats, seed);
-            recs.truncate(njobs);
-            let jobs = traces::to_jobs(&recs, 0.9, sigma, seed);
-            let opt = Reference::OptSrpt.mst(&jobs);
-            for (p, acc) in policies.iter().zip(&mut accs) {
-                acc.push(run_mst(p, &jobs) / opt);
+        for _ in 0..ctx.reps {
+            let rs = it.next().unwrap();
+            for (acc, v) in accs.iter_mut().zip(rs) {
+                acc.push(v);
             }
         }
+        let mut row = vec![sigma];
         row.extend(accs.iter().map(|a| a.mean()));
         t.push(row);
     }
@@ -484,30 +651,19 @@ fn trace_fig(name: &str, stats: &traces::TraceStats, ctx: &Ctx, njobs: usize) ->
 // --------------------------------------------------------------------
 pub fn fig14(ctx: &Ctx) -> Vec<Table> {
     let policies = ["psbs", "srpte", "fspe", "ps", "las"];
+    let base = ctx.cfg();
     let mut load_t = Table::new(
         "fig14a_load",
         ["load"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
     );
-    for &load in &[0.5, 0.7, 0.9, 0.95, 0.999] {
-        let cfg = ctx.cfg().with_load(load);
-        let mut row = vec![load];
-        for p in policies {
-            row.push(ctx.mst_ratio(p, Reference::OptSrpt, &cfg));
-        }
-        load_t.push(row);
-    }
+    let loads = [0.5, 0.7, 0.9, 0.95, 0.999];
+    ratio_rows(ctx, &loads, &policies, Reference::OptSrpt, |load| base.with_load(load), &mut load_t);
+
     let mut ts_t = Table::new(
         "fig14b_timeshape",
         ["timeshape"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
     );
-    for &tsh in &GRID {
-        let cfg = ctx.cfg().with_timeshape(tsh);
-        let mut row = vec![tsh];
-        for p in policies {
-            row.push(ctx.mst_ratio(p, Reference::OptSrpt, &cfg));
-        }
-        ts_t.push(row);
-    }
+    ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |tsh| base.with_timeshape(tsh), &mut ts_t);
     vec![load_t, ts_t]
 }
 
@@ -518,11 +674,25 @@ pub fn fig15(ctx: &Ctx) -> Vec<Table> {
     let shapes = GRID;
     let mut out = Vec::new();
 
+    // Each sub-figure is a flat (shape x secondary) grid of single
+    // psbs/PS ratio cells.
     let mut t = Table::new("fig15a_load", vec!["shape".into(), "load".into(), "psbs_over_ps".into()]);
+    let loads = [0.5, 0.9, 0.999];
+    let mut cells = Vec::new();
     for &shape in &shapes {
-        for &load in &[0.5, 0.9, 0.999] {
-            let cfg = ctx.cfg().with_shape(shape).with_load(load);
-            t.push(vec![shape, load, ctx.mst_ratio("psbs", Reference::Ps, &cfg)]);
+        for &load in &loads {
+            cells.push(SweepCell::ratio(
+                "psbs",
+                Reference::Ps,
+                ctx.cfg().with_shape(shape).with_load(load),
+            ));
+        }
+    }
+    let vals = ctx.eval_grid(&cells);
+    let mut it = vals.into_iter();
+    for &shape in &shapes {
+        for &load in &loads {
+            t.push(vec![shape, load, it.next().unwrap()]);
         }
     }
     out.push(t);
@@ -531,10 +701,22 @@ pub fn fig15(ctx: &Ctx) -> Vec<Table> {
         "fig15b_timeshape",
         vec!["shape".into(), "timeshape".into(), "psbs_over_ps".into()],
     );
+    let tshapes = [0.125, 1.0, 4.0];
+    let mut cells = Vec::new();
     for &shape in &shapes {
-        for &tsh in &[0.125, 1.0, 4.0] {
-            let cfg = ctx.cfg().with_shape(shape).with_timeshape(tsh);
-            t.push(vec![shape, tsh, ctx.mst_ratio("psbs", Reference::Ps, &cfg)]);
+        for &tsh in &tshapes {
+            cells.push(SweepCell::ratio(
+                "psbs",
+                Reference::Ps,
+                ctx.cfg().with_shape(shape).with_timeshape(tsh),
+            ));
+        }
+    }
+    let vals = ctx.eval_grid(&cells);
+    let mut it = vals.into_iter();
+    for &shape in &shapes {
+        for &tsh in &tshapes {
+            t.push(vec![shape, tsh, it.next().unwrap()]);
         }
     }
     out.push(t);
@@ -543,12 +725,23 @@ pub fn fig15(ctx: &Ctx) -> Vec<Table> {
         "fig15c_njobs",
         vec!["shape".into(), "njobs".into(), "psbs_over_ps".into()],
     );
+    let njob_grid = [1_000usize, 10_000, 100_000];
+    let mut cells = Vec::new();
+    let mut xs: Vec<(f64, f64)> = Vec::new();
     for &shape in &shapes {
-        for &njobs in &[1_000usize, 10_000, 100_000] {
+        for &njobs in &njob_grid {
             let njobs = njobs.min(ctx.njobs * 10);
-            let cfg = ctx.cfg().with_shape(shape).with_njobs(njobs);
-            t.push(vec![shape, njobs as f64, ctx.mst_ratio("psbs", Reference::Ps, &cfg)]);
+            cells.push(SweepCell::ratio(
+                "psbs",
+                Reference::Ps,
+                ctx.cfg().with_shape(shape).with_njobs(njobs),
+            ));
+            xs.push((shape, njobs as f64));
         }
+    }
+    let vals = ctx.eval_grid(&cells);
+    for ((shape, njobs), v) in xs.into_iter().zip(vals) {
+        t.push(vec![shape, njobs, v]);
     }
     out.push(t);
     out
@@ -568,14 +761,8 @@ pub fn ablation_wv(ctx: &Ctx) -> Vec<Table> {
         "ext_ablation_wv",
         ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
     );
-    for &sigma in &GRID {
-        let cfg = ctx.cfg().with_sigma(sigma);
-        let mut row = vec![sigma];
-        for p in policies {
-            row.push(ctx.mst_ratio(p, Reference::OptSrpt, &cfg));
-        }
-        t.push(row);
-    }
+    let base = ctx.cfg();
+    ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |sigma| base.with_sigma(sigma), &mut t);
 
     // The real cost of the literal pseudocode is unbounded state: a job
     // that goes late never leaves the virtual system (its weight stays
@@ -585,14 +772,18 @@ pub fn ablation_wv(ctx: &Ctx) -> Vec<Table> {
         "ext_ablation_wv_residue",
         vec!["sigma".into(), "psbs_residue".into(), "paperlit_residue".into()],
     );
-    for &sigma in &GRID {
-        let cfg = ctx.cfg().with_sigma(sigma);
-        let jobs = crate::workload::synthesize(&cfg, ctx.seed);
+    let seed = ctx.seed;
+    let cfgs: Vec<SynthConfig> = GRID.iter().map(|&sigma| ctx.cfg().with_sigma(sigma)).collect();
+    let residues = ctx.par_runs(&cfgs, |cfg| {
+        let jobs = crate::workload::synthesize(cfg, seed);
         let mut fixed = crate::sched::fsp_family::Psbs::new();
         sim::run(&mut fixed, &jobs);
         let mut lit = crate::sched::fsp_family::FspFamily::psbs_paper_literal();
         sim::run(&mut lit, &jobs);
-        resid.push(vec![sigma, fixed.virtual_residue() as f64, lit.virtual_residue() as f64]);
+        (fixed.virtual_residue() as f64, lit.virtual_residue() as f64)
+    });
+    for (&sigma, (fixed, lit)) in GRID.iter().zip(residues) {
+        resid.push(vec![sigma, fixed, lit]);
     }
     vec![t, resid]
 }
@@ -602,7 +793,7 @@ pub fn ablation_wv(ctx: &Ctx) -> Vec<Table> {
 /// semi-clairvoyant size-class estimator, and log-normal sigma = 0.5
 /// for reference.
 pub fn estimators(ctx: &Ctx) -> Vec<Table> {
-    use crate::estimate::{self, Estimator};
+    use crate::estimate;
     let mut t = Table::new(
         "ext_estimators",
         vec![
@@ -613,27 +804,47 @@ pub fn estimators(ctx: &Ctx) -> Vec<Table> {
             "srpte".into(),
         ],
     );
-    let estimators: Vec<Box<dyn Estimator>> = vec![
-        Box::new(estimate::OracleEstimator),
-        Box::new(estimate::SamplingEstimator::new(0.01, 0.5)),
-        Box::new(estimate::SamplingEstimator::new(0.05, 0.5)),
-        Box::new(estimate::SamplingEstimator::new(0.25, 0.5)),
-        Box::new(estimate::ClassEstimator),
-        Box::new(estimate::LogNormalNoise::new(0.5)),
-    ];
+    // Trait objects aren't Sync; cells rebuild their estimator from
+    // the index instead of sharing boxed instances across threads.
+    const N_EST: usize = 6;
+    fn build(ei: usize) -> Box<dyn crate::estimate::Estimator> {
+        match ei {
+            0 => Box::new(crate::estimate::OracleEstimator),
+            1 => Box::new(crate::estimate::SamplingEstimator::new(0.01, 0.5)),
+            2 => Box::new(crate::estimate::SamplingEstimator::new(0.05, 0.5)),
+            3 => Box::new(crate::estimate::SamplingEstimator::new(0.25, 0.5)),
+            4 => Box::new(crate::estimate::ClassEstimator),
+            _ => Box::new(crate::estimate::LogNormalNoise::new(0.5)),
+        }
+    }
     let base_cfg = ctx.cfg().with_sigma(0.0);
-    for (ei, est) in estimators.iter().enumerate() {
+    let seed = ctx.seed;
+    let items: Vec<(usize, u64)> = (0..N_EST)
+        .flat_map(|ei| (0..ctx.reps).map(move |r| (ei, r)))
+        .collect();
+    let runs = ctx.par_runs(&items, |&(ei, r)| {
+        let est = build(ei);
+        let base = crate::workload::synthesize(&base_cfg, seed.wrapping_add(r * 7919));
+        let jobs = estimate::apply(&base, est.as_ref(), seed.wrapping_add(r));
+        let stats = estimate::measure(&jobs);
+        let opt = Reference::OptSrpt.mst(&jobs);
+        (
+            stats.log_sigma,
+            stats.correlation,
+            run_mst("psbs", &jobs) / opt,
+            run_mst("srpte", &jobs) / opt,
+        )
+    });
+    let mut it = runs.into_iter();
+    for ei in 0..N_EST {
         let mut quality = (0.0, 0.0);
         let mut psbs_acc = Repetitions::default();
         let mut srpte_acc = Repetitions::default();
-        for r in 0..ctx.reps {
-            let base = crate::workload::synthesize(&base_cfg, ctx.seed.wrapping_add(r * 7919));
-            let jobs = estimate::apply(&base, est.as_ref(), ctx.seed.wrapping_add(r));
-            let stats = estimate::measure(&jobs);
-            quality = (stats.log_sigma, stats.correlation);
-            let opt = Reference::OptSrpt.mst(&jobs);
-            psbs_acc.push(run_mst("psbs", &jobs) / opt);
-            srpte_acc.push(run_mst("srpte", &jobs) / opt);
+        for _ in 0..ctx.reps {
+            let (log_sigma, corr, p, s) = it.next().unwrap();
+            quality = (log_sigma, corr);
+            psbs_acc.push(p);
+            srpte_acc.push(s);
         }
         t.push(vec![ei as f64, quality.0, quality.1, psbs_acc.mean(), srpte_acc.mean()]);
     }
@@ -648,17 +859,32 @@ pub fn cluster_scaling(ctx: &Ctx) -> Vec<Table> {
         "ext_cluster_scaling",
         vec!["k".into(), "leastwork".into(), "roundrobin".into(), "random".into()],
     );
-    for &k in &[1usize, 2, 4, 8] {
+    let dispatches = [Dispatch::LeastWork, Dispatch::RoundRobin, Dispatch::Random];
+    let ks = [1usize, 2, 4, 8];
+    let seed = ctx.seed;
+    // One work item per (k, dispatch, rep), in the serial loop order.
+    let mut items: Vec<(usize, usize, u64, SynthConfig)> = Vec::new();
+    for &k in &ks {
         // Offered load k*0.9 against k unit servers.
         let cfg = ctx.cfg().with_load(0.9 * k as f64).with_njobs(ctx.njobs.min(10_000));
-        let mut row = vec![k as f64];
-        for d in [Dispatch::LeastWork, Dispatch::RoundRobin, Dispatch::Random] {
-            let mut acc = Repetitions::default();
+        for di in 0..dispatches.len() {
             for r in 0..ctx.reps {
-                let jobs =
-                    crate::workload::synthesize(&cfg, ctx.seed.wrapping_add(r * 7919));
-                let mut c = Cluster::new("psbs", k, d, ctx.seed).unwrap();
-                acc.push(sim::run(&mut c, &jobs).mst(&jobs));
+                items.push((k, di, r, cfg));
+            }
+        }
+    }
+    let msts = ctx.par_runs(&items, |&(k, di, r, cfg)| {
+        let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
+        let mut c = Cluster::new("psbs", k, dispatches[di], seed).unwrap();
+        sim::run(&mut c, &jobs).mst(&jobs)
+    });
+    let mut it = msts.into_iter();
+    for &k in &ks {
+        let mut row = vec![k as f64];
+        for _ in 0..dispatches.len() {
+            let mut acc = Repetitions::default();
+            for _ in 0..ctx.reps {
+                acc.push(it.next().unwrap());
             }
             row.push(acc.mean());
         }
@@ -701,6 +927,13 @@ mod tests {
         Ctx { reps: 1, njobs: 300, seed: 7, ..Default::default() }
     }
 
+    fn table_bits(tables: &[Table]) -> Vec<Vec<Vec<u64>>> {
+        tables
+            .iter()
+            .map(|t| t.rows.iter().map(|r| r.iter().map(|v| v.to_bits()).collect()).collect())
+            .collect()
+    }
+
     #[test]
     fn fig5_shapes_hold_at_small_scale() {
         let ctx = tiny_ctx();
@@ -720,12 +953,45 @@ mod tests {
         assert_eq!(exact_copy(&jobs)[0].est, 2.0);
     }
 
+    /// Acceptance check for the parallel sweep executor: a full Fig. 6
+    /// regeneration (the sigma sweep, all three shape tables) is
+    /// bit-identical across thread counts {1, 2, 4}.
+    #[test]
+    fn parallel_sweep_is_bit_identical() {
+        let serial = {
+            let ctx = Ctx { reps: 2, njobs: 200, seed: 11, threads: 1, ..Default::default() };
+            table_bits(&fig6(&ctx))
+        };
+        for threads in [2usize, 4] {
+            let ctx = Ctx { reps: 2, njobs: 200, seed: 11, threads, ..Default::default() };
+            let par = table_bits(&fig6(&ctx));
+            assert_eq!(serial, par, "fig6 output diverged at {threads} threads");
+        }
+    }
+
+    /// The pooled-population path (per-(policy, rep) work items) is
+    /// deterministic too: Fig. 4 at 1 vs 3 threads.
+    #[test]
+    fn pooled_figures_are_bit_identical() {
+        let serial = {
+            let ctx = Ctx { reps: 2, njobs: 150, seed: 5, threads: 1, ..Default::default() };
+            table_bits(&fig4(&ctx))
+        };
+        let par = {
+            let ctx = Ctx { reps: 2, njobs: 150, seed: 5, threads: 3, ..Default::default() };
+            table_bits(&fig4(&ctx))
+        };
+        assert_eq!(serial, par, "fig4 pooled ECDFs diverged under parallel execution");
+    }
+
     /// Every figure function executes end to end at tiny scale and
     /// yields non-empty, finite-x tables (a safety net for the sweep
-    /// CLI — individual figure *values* are checked elsewhere).
+    /// CLI — individual figure *values* are checked elsewhere).  Runs
+    /// with 2 worker threads so the parallel path is exercised across
+    /// every figure's work-item shape.
     #[test]
     fn all_figures_execute_at_tiny_scale() {
-        let ctx = Ctx { reps: 1, njobs: 120, seed: 3, ..Default::default() };
+        let ctx = Ctx { reps: 1, njobs: 120, seed: 3, threads: 2, ..Default::default() };
         for f in ALL_FIGS {
             let tables = by_number(&ctx, f).unwrap();
             assert!(!tables.is_empty(), "fig {f} produced no tables");

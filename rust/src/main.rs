@@ -59,7 +59,8 @@ fn main() {
 const USAGE: &str = "\
 usage: psbs <subcommand> [options]
   simulate   --policy P --shape S --sigma E --load L --njobs N --seed K [--weights-beta B] [--pareto ALPHA] [--timeshape T]
-  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge]
+  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge] [--threads T]
+             (--threads defaults to the machine's available parallelism; 1 = exact serial path — results are bit-identical either way)
   replay     --trace FILE --format swim|squid [--policy P] [--sigma E] [--load L] [--seed K]
   serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
   gen-trace  --stats facebook|ircache --out FILE [--seed K]
@@ -132,6 +133,9 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         out_dir: a.get("out", "results"),
         runtime: if a.get_bool("no-artifacts")? { None } else { Runtime::try_default() },
         converge: a.get_bool("converge")?,
+        threads: a
+            .get_u64("threads", psbs::util::pool::available_threads() as u64)?
+            .max(1) as usize,
     };
     a.check_unknown()?;
     if ctx.runtime.is_some() {
@@ -139,6 +143,7 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
     } else {
         println!("# AOT artifacts not loaded; using pure-rust analytics fallback");
     }
+    println!("# sweep executor: {} worker thread(s)", ctx.threads);
 
     let figs: Vec<u64> = match fig {
         Some(f) => vec![f],

@@ -17,10 +17,49 @@
 //! python side (`test_analytics_graph_mst_and_chunk_linearity`) and
 //! cross-checked against the pure-rust metrics in
 //! `rust/tests/integration.rs`.
+//!
+//! ## Feature gating
+//!
+//! The `xla` crate (and everything else beyond std) is unavailable in
+//! the offline build environment, so the PJRT-backed implementation is
+//! gated behind the `xla` cargo feature (see Cargo.toml).  Without it,
+//! a stub [`Runtime`] with the identical API is compiled whose
+//! `try_default` is always `None` — every caller (figures, benches,
+//! integration tests, examples) then takes its pure-rust fallback
+//! path, which is the behavior a fresh checkout had anyway when
+//! `artifacts/` was absent.
 
-use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::fmt;
+
+/// Minimal error type for artifact loading/execution (replaces the
+/// unavailable `anyhow`; DESIGN.md §4 Substitutions).
+#[derive(Debug)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+/// Result alias used across the runtime façade.
+pub type Result<T> = std::result::Result<T, RtError>;
+
+pub(crate) fn rt_err(msg: impl Into<String>) -> RtError {
+    RtError(msg.into())
+}
+
+/// Artifacts directory: `$PSBS_ARTIFACTS` or `./artifacts` — shared
+/// by the PJRT and stub builds so discovery can never drift between
+/// them.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PSBS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
 
 /// Parsed `artifacts/manifest.txt`.
 #[derive(Debug, Clone)]
@@ -39,12 +78,17 @@ impl Manifest {
             .lines()
             .filter_map(|l| l.split_once('='))
             .collect();
-        let get = |k: &str| kv.get(k).copied().ok_or_else(|| anyhow!("manifest missing key {k}"));
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().ok_or_else(|| rt_err(format!("manifest missing key {k}")))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?.parse().map_err(|_| rt_err(format!("manifest key {k}: not an integer")))
+        };
         Ok(Manifest {
-            batch: get("batch")?.parse().context("batch")?,
-            num_params: get("num_params")?.parse().context("num_params")?,
-            num_bins: get("num_bins")?.parse().context("num_bins")?,
-            num_thresholds: get("num_thresholds")?.parse().context("num_thresholds")?,
+            batch: num("batch")?,
+            num_params: num("num_params")?,
+            num_bins: num("num_bins")?,
+            num_thresholds: num("num_thresholds")?,
             workload_file: get("workload")?.to_string(),
             analytics_file: get("analytics")?.to_string(),
         })
@@ -83,247 +127,15 @@ impl AnalyticsOut {
     }
 }
 
-/// Loaded PJRT executables + manifest.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    workload: xla::PjRtLoadedExecutable,
-    analytics: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::Runtime;
 
-impl Runtime {
-    /// Load artifacts from `dir` (compiles the HLO on the CPU client).
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest_text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let manifest = Manifest::parse(&manifest_text)?;
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(wrap)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).map_err(wrap)
-        };
-        let workload = compile(&manifest.workload_file)?;
-        let analytics = compile(&manifest.analytics_file)?;
-        Ok(Runtime { client, manifest, workload, analytics })
-    }
-
-    /// Artifacts directory: `$PSBS_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("PSBS_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
-    }
-
-    /// Load from the default directory; `None` if artifacts are absent
-    /// (callers fall back to the pure-rust paths).
-    pub fn try_default() -> Option<Runtime> {
-        let dir = Self::default_dir();
-        if dir.join("manifest.txt").exists() {
-            match Self::load(&dir) {
-                Ok(rt) => Some(rt),
-                Err(e) => {
-                    eprintln!("warning: artifacts present but unloadable: {e:#}");
-                    None
-                }
-            }
-        } else {
-            None
-        }
-    }
-
-    /// Execute the workload graph on one batch of uniforms.
-    ///
-    /// `params = [weibull_shape, weibull_scale, sigma, 0]` (the
-    /// PARAMS_LAYOUT of python/compile/model.py). Returns
-    /// (weibull samples, log-normal error multipliers).
-    pub fn gen_batch(
-        &self,
-        u_size: &[f32],
-        u_a: &[f32],
-        u_b: &[f32],
-        params: &[f32],
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let b = self.manifest.batch;
-        anyhow::ensure!(
-            u_size.len() == b && u_a.len() == b && u_b.len() == b,
-            "uniform inputs must have the AOT batch length {b}"
-        );
-        anyhow::ensure!(params.len() == self.manifest.num_params, "params length");
-        let ins = [
-            xla::Literal::vec1(u_size),
-            xla::Literal::vec1(u_a),
-            xla::Literal::vec1(u_b),
-            xla::Literal::vec1(params),
-        ];
-        let result = self.workload.execute::<xla::Literal>(&ins).map_err(wrap)?[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?;
-        let outs = result.to_tuple().map_err(wrap)?;
-        anyhow::ensure!(outs.len() == 2, "workload graph must return 2 outputs");
-        let samples = outs[0].to_vec::<f32>().map_err(wrap)?;
-        let mults = outs[1].to_vec::<f32>().map_err(wrap)?;
-        Ok((samples, mults))
-    }
-
-    /// Generate `n` Weibull(shape, scale) samples and log-normal(sigma)
-    /// multipliers, chunking over the AOT batch. The uniforms come from
-    /// the caller's deterministic stream.
-    pub fn gen_weibull_lognormal(
-        &self,
-        rng: &mut crate::util::rng::Rng,
-        n: usize,
-        shape: f64,
-        scale: f64,
-        sigma: f64,
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let b = self.manifest.batch;
-        let params = [shape as f32, scale as f32, sigma as f32, 0.0];
-        let mut samples = Vec::with_capacity(n);
-        let mut mults = Vec::with_capacity(n);
-        let mut u1 = vec![0f32; b];
-        let mut u2 = vec![0f32; b];
-        let mut u3 = vec![0f32; b];
-        let mut produced = 0;
-        while produced < n {
-            for i in 0..b {
-                u1[i] = rng.u01() as f32;
-                u2[i] = rng.u01() as f32;
-                u3[i] = rng.u01() as f32;
-            }
-            let (s, m) = self.gen_batch(&u1, &u2, &u3, &params)?;
-            let take = (n - produced).min(b);
-            samples.extend(s[..take].iter().map(|&x| x as f64));
-            mults.extend(m[..take].iter().map(|&x| x as f64));
-            produced += take;
-        }
-        Ok((samples, mults))
-    }
-
-    /// Generate `n` Pareto(alpha, xm) samples (plus log-normal(sigma)
-    /// multipliers) through the same artifact — `params[3] = 1` selects
-    /// the Pareto inverse CDF (Fig. 10 workloads).
-    pub fn gen_pareto_lognormal(
-        &self,
-        rng: &mut crate::util::rng::Rng,
-        n: usize,
-        alpha: f64,
-        xm: f64,
-        sigma: f64,
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let b = self.manifest.batch;
-        let params = [alpha as f32, xm as f32, sigma as f32, 1.0];
-        let mut samples = Vec::with_capacity(n);
-        let mut mults = Vec::with_capacity(n);
-        let mut u1 = vec![0f32; b];
-        let mut u2 = vec![0f32; b];
-        let mut u3 = vec![0f32; b];
-        let mut produced = 0;
-        while produced < n {
-            for i in 0..b {
-                u1[i] = rng.u01() as f32;
-                u2[i] = rng.u01() as f32;
-                u3[i] = rng.u01() as f32;
-            }
-            let (s, m) = self.gen_batch(&u1, &u2, &u3, &params)?;
-            let take = (n - produced).min(b);
-            samples.extend(s[..take].iter().map(|&x| x as f64));
-            mults.extend(m[..take].iter().map(|&x| x as f64));
-            produced += take;
-        }
-        Ok((samples, mults))
-    }
-
-    /// Execute the analytics graph over a full population, chunking and
-    /// summing the linear aggregates.
-    ///
-    /// `bin_idx` uses `manifest.num_bins` as the "no class" tag for any
-    /// padding the chunking introduces.
-    pub fn analyze(
-        &self,
-        sizes: &[f64],
-        sojourns: &[f64],
-        bin_idx: &[i32],
-        thresholds: &[f64],
-    ) -> Result<AnalyticsOut> {
-        let n = sizes.len();
-        anyhow::ensure!(sojourns.len() == n && bin_idx.len() == n, "input lengths");
-        anyhow::ensure!(
-            thresholds.len() == self.manifest.num_thresholds,
-            "thresholds must have length {}",
-            self.manifest.num_thresholds
-        );
-        let b = self.manifest.batch;
-        let thr: Vec<f32> = thresholds.iter().map(|&t| t as f32).collect();
-
-        let mut out = AnalyticsOut {
-            slowdowns: Vec::with_capacity(n),
-            bin_sums: vec![0.0; self.manifest.num_bins],
-            bin_counts: vec![0.0; self.manifest.num_bins],
-            ecdf_counts: vec![0.0; self.manifest.num_thresholds],
-            sojourn_sum: 0.0,
-            count: 0.0,
-        };
-
-        let mut szs = vec![0f32; b];
-        let mut soj = vec![0f32; b];
-        let mut mask = vec![0f32; b];
-        let mut idx = vec![0i32; b];
-        let mut start = 0;
-        while start < n {
-            let take = (n - start).min(b);
-            for i in 0..b {
-                if i < take {
-                    szs[i] = sizes[start + i] as f32;
-                    soj[i] = sojourns[start + i] as f32;
-                    mask[i] = 1.0;
-                    idx[i] = bin_idx[start + i];
-                } else {
-                    szs[i] = 0.0;
-                    soj[i] = 0.0;
-                    mask[i] = 0.0;
-                    idx[i] = self.manifest.num_bins as i32;
-                }
-            }
-            let ins = [
-                xla::Literal::vec1(&szs[..]),
-                xla::Literal::vec1(&soj[..]),
-                xla::Literal::vec1(&mask[..]),
-                xla::Literal::vec1(&idx[..]),
-                xla::Literal::vec1(&thr[..]),
-            ];
-            let result = self.analytics.execute::<xla::Literal>(&ins).map_err(wrap)?[0][0]
-                .to_literal_sync()
-                .map_err(wrap)?;
-            let outs = result.to_tuple().map_err(wrap)?;
-            anyhow::ensure!(outs.len() == 6, "analytics graph must return 6 outputs");
-            let slow = outs[0].to_vec::<f32>().map_err(wrap)?;
-            out.slowdowns.extend(slow[..take].iter().map(|&x| x as f64));
-            for (acc, v) in out.bin_sums.iter_mut().zip(outs[1].to_vec::<f32>().map_err(wrap)?) {
-                *acc += v as f64;
-            }
-            for (acc, v) in out.bin_counts.iter_mut().zip(outs[2].to_vec::<f32>().map_err(wrap)?) {
-                *acc += v as f64;
-            }
-            for (acc, v) in out.ecdf_counts.iter_mut().zip(outs[3].to_vec::<f32>().map_err(wrap)?) {
-                *acc += v as f64;
-            }
-            out.sojourn_sum += outs[4].to_vec::<f32>().map_err(wrap)?[0] as f64;
-            out.count += outs[5].to_vec::<f32>().map_err(wrap)?[0] as f64;
-            start += take;
-        }
-        Ok(out)
-    }
-}
-
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("{e}")
-}
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -344,5 +156,23 @@ mod tests {
     #[test]
     fn manifest_missing_key_is_error() {
         assert!(Manifest::parse("batch=4\n").is_err());
+    }
+
+    #[test]
+    fn manifest_bad_number_is_error() {
+        let e = Manifest::parse(
+            "batch=many\nnum_params=4\nnum_bins=128\nnum_thresholds=128\n\
+             workload=w\nanalytics=a\n",
+        );
+        assert!(e.is_err());
+        assert!(format!("{:#}", e.unwrap_err()).contains("batch"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_never_loads() {
+        // Without the xla feature the runtime must gracefully report
+        // absence so callers use the pure-rust fallback.
+        assert!(Runtime::load(std::path::Path::new("/nonexistent")).is_err());
     }
 }

@@ -1,0 +1,246 @@
+//! PJRT-backed runtime (the real implementation), compiled only with
+//! the `xla` cargo feature — it needs the vendored `xla` crate, which
+//! the offline environment does not ship.  Error plumbing uses the
+//! module-local [`RtError`](super::RtError) so no `anyhow` is needed.
+
+use super::{rt_err, AnalyticsOut, Manifest, Result};
+use std::path::{Path, PathBuf};
+
+/// Loaded PJRT executables + manifest.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    workload: xla::PjRtLoadedExecutable,
+    analytics: xla::PjRtLoadedExecutable,
+}
+
+fn wrap(e: xla::Error) -> super::RtError {
+    rt_err(format!("{e}"))
+}
+
+impl Runtime {
+    /// Load artifacts from `dir` (compiles the HLO on the CPU client).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| rt_err(format!("reading manifest in {}: {e}", dir.display())))?;
+        let manifest = Manifest::parse(&manifest_text)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| rt_err("non-utf8 path"))?,
+            )
+            .map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(wrap)
+        };
+        let workload = compile(&manifest.workload_file)?;
+        let analytics = compile(&manifest.analytics_file)?;
+        Ok(Runtime { client, manifest, workload, analytics })
+    }
+
+    /// Artifacts directory: `$PSBS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifacts_dir()
+    }
+
+    /// Load from the default directory; `None` if artifacts are absent
+    /// (callers fall back to the pure-rust paths).
+    pub fn try_default() -> Option<Runtime> {
+        let dir = Self::default_dir();
+        if dir.join("manifest.txt").exists() {
+            match Self::load(&dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("warning: artifacts present but unloadable: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    /// Execute the workload graph on one batch of uniforms.
+    ///
+    /// `params = [weibull_shape, weibull_scale, sigma, 0]` (the
+    /// PARAMS_LAYOUT of python/compile/model.py). Returns
+    /// (weibull samples, log-normal error multipliers).
+    pub fn gen_batch(
+        &self,
+        u_size: &[f32],
+        u_a: &[f32],
+        u_b: &[f32],
+        params: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let b = self.manifest.batch;
+        if !(u_size.len() == b && u_a.len() == b && u_b.len() == b) {
+            return Err(rt_err(format!("uniform inputs must have the AOT batch length {b}")));
+        }
+        if params.len() != self.manifest.num_params {
+            return Err(rt_err("params length"));
+        }
+        let ins = [
+            xla::Literal::vec1(u_size),
+            xla::Literal::vec1(u_a),
+            xla::Literal::vec1(u_b),
+            xla::Literal::vec1(params),
+        ];
+        let result = self.workload.execute::<xla::Literal>(&ins).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let outs = result.to_tuple().map_err(wrap)?;
+        if outs.len() != 2 {
+            return Err(rt_err("workload graph must return 2 outputs"));
+        }
+        let samples = outs[0].to_vec::<f32>().map_err(wrap)?;
+        let mults = outs[1].to_vec::<f32>().map_err(wrap)?;
+        Ok((samples, mults))
+    }
+
+    /// Generate `n` Weibull(shape, scale) samples and log-normal(sigma)
+    /// multipliers, chunking over the AOT batch. The uniforms come from
+    /// the caller's deterministic stream.
+    pub fn gen_weibull_lognormal(
+        &self,
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+        shape: f64,
+        scale: f64,
+        sigma: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let params = [shape as f32, scale as f32, sigma as f32, 0.0];
+        self.gen_chunked(rng, n, params)
+    }
+
+    /// Generate `n` Pareto(alpha, xm) samples (plus log-normal(sigma)
+    /// multipliers) through the same artifact — `params[3] = 1` selects
+    /// the Pareto inverse CDF (Fig. 10 workloads).
+    pub fn gen_pareto_lognormal(
+        &self,
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+        alpha: f64,
+        xm: f64,
+        sigma: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let params = [alpha as f32, xm as f32, sigma as f32, 1.0];
+        self.gen_chunked(rng, n, params)
+    }
+
+    /// Shared chunking loop of the two generators.
+    fn gen_chunked(
+        &self,
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+        params: [f32; 4],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let b = self.manifest.batch;
+        let mut samples = Vec::with_capacity(n);
+        let mut mults = Vec::with_capacity(n);
+        let mut u1 = vec![0f32; b];
+        let mut u2 = vec![0f32; b];
+        let mut u3 = vec![0f32; b];
+        let mut produced = 0;
+        while produced < n {
+            for i in 0..b {
+                u1[i] = rng.u01() as f32;
+                u2[i] = rng.u01() as f32;
+                u3[i] = rng.u01() as f32;
+            }
+            let (s, m) = self.gen_batch(&u1, &u2, &u3, &params)?;
+            let take = (n - produced).min(b);
+            samples.extend(s[..take].iter().map(|&x| x as f64));
+            mults.extend(m[..take].iter().map(|&x| x as f64));
+            produced += take;
+        }
+        Ok((samples, mults))
+    }
+
+    /// Execute the analytics graph over a full population, chunking and
+    /// summing the linear aggregates.
+    ///
+    /// `bin_idx` uses `manifest.num_bins` as the "no class" tag for any
+    /// padding the chunking introduces.
+    pub fn analyze(
+        &self,
+        sizes: &[f64],
+        sojourns: &[f64],
+        bin_idx: &[i32],
+        thresholds: &[f64],
+    ) -> Result<AnalyticsOut> {
+        let n = sizes.len();
+        if !(sojourns.len() == n && bin_idx.len() == n) {
+            return Err(rt_err("input lengths"));
+        }
+        if thresholds.len() != self.manifest.num_thresholds {
+            return Err(rt_err(format!(
+                "thresholds must have length {}",
+                self.manifest.num_thresholds
+            )));
+        }
+        let b = self.manifest.batch;
+        let thr: Vec<f32> = thresholds.iter().map(|&t| t as f32).collect();
+
+        let mut out = AnalyticsOut {
+            slowdowns: Vec::with_capacity(n),
+            bin_sums: vec![0.0; self.manifest.num_bins],
+            bin_counts: vec![0.0; self.manifest.num_bins],
+            ecdf_counts: vec![0.0; self.manifest.num_thresholds],
+            sojourn_sum: 0.0,
+            count: 0.0,
+        };
+
+        let mut szs = vec![0f32; b];
+        let mut soj = vec![0f32; b];
+        let mut mask = vec![0f32; b];
+        let mut idx = vec![0i32; b];
+        let mut start = 0;
+        while start < n {
+            let take = (n - start).min(b);
+            for i in 0..b {
+                if i < take {
+                    szs[i] = sizes[start + i] as f32;
+                    soj[i] = sojourns[start + i] as f32;
+                    mask[i] = 1.0;
+                    idx[i] = bin_idx[start + i];
+                } else {
+                    szs[i] = 0.0;
+                    soj[i] = 0.0;
+                    mask[i] = 0.0;
+                    idx[i] = self.manifest.num_bins as i32;
+                }
+            }
+            let ins = [
+                xla::Literal::vec1(&szs[..]),
+                xla::Literal::vec1(&soj[..]),
+                xla::Literal::vec1(&mask[..]),
+                xla::Literal::vec1(&idx[..]),
+                xla::Literal::vec1(&thr[..]),
+            ];
+            let result = self.analytics.execute::<xla::Literal>(&ins).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            let outs = result.to_tuple().map_err(wrap)?;
+            if outs.len() != 6 {
+                return Err(rt_err("analytics graph must return 6 outputs"));
+            }
+            let slow = outs[0].to_vec::<f32>().map_err(wrap)?;
+            out.slowdowns.extend(slow[..take].iter().map(|&x| x as f64));
+            for (acc, v) in out.bin_sums.iter_mut().zip(outs[1].to_vec::<f32>().map_err(wrap)?) {
+                *acc += v as f64;
+            }
+            for (acc, v) in out.bin_counts.iter_mut().zip(outs[2].to_vec::<f32>().map_err(wrap)?) {
+                *acc += v as f64;
+            }
+            for (acc, v) in out.ecdf_counts.iter_mut().zip(outs[3].to_vec::<f32>().map_err(wrap)?) {
+                *acc += v as f64;
+            }
+            out.sojourn_sum += outs[4].to_vec::<f32>().map_err(wrap)?[0] as f64;
+            out.count += outs[5].to_vec::<f32>().map_err(wrap)?[0] as f64;
+            start += take;
+        }
+        Ok(out)
+    }
+}

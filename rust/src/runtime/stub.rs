@@ -1,0 +1,82 @@
+//! Stub runtime for builds without the `xla` feature (the default in
+//! the offline environment): same API surface as the PJRT-backed
+//! implementation, but artifacts can never load — `try_default` is
+//! always `None`, so every caller takes its pure-rust fallback path.
+//! Method bodies are unreachable in practice (no constructor
+//! succeeds); they return errors rather than panicking so misuse is
+//! diagnosable.
+
+use super::{rt_err, AnalyticsOut, Manifest, Result};
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// API-compatible stand-in for the PJRT runtime.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+const NO_XLA: &str =
+    "built without the `xla` feature: PJRT artifacts cannot be loaded (pure-rust fallback applies)";
+
+impl Runtime {
+    /// Always fails: this build has no PJRT support.
+    pub fn load(_dir: &Path) -> Result<Runtime> {
+        Err(rt_err(NO_XLA))
+    }
+
+    /// Artifacts directory: `$PSBS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifacts_dir()
+    }
+
+    /// `None`, always — with a notice when artifacts exist on disk but
+    /// this build cannot execute them.
+    pub fn try_default() -> Option<Runtime> {
+        if Self::default_dir().join("manifest.txt").exists() {
+            eprintln!("warning: artifacts present but {NO_XLA}");
+        }
+        None
+    }
+
+    pub fn gen_batch(
+        &self,
+        _u_size: &[f32],
+        _u_a: &[f32],
+        _u_b: &[f32],
+        _params: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        Err(rt_err(NO_XLA))
+    }
+
+    pub fn gen_weibull_lognormal(
+        &self,
+        _rng: &mut Rng,
+        _n: usize,
+        _shape: f64,
+        _scale: f64,
+        _sigma: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Err(rt_err(NO_XLA))
+    }
+
+    pub fn gen_pareto_lognormal(
+        &self,
+        _rng: &mut Rng,
+        _n: usize,
+        _alpha: f64,
+        _xm: f64,
+        _sigma: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Err(rt_err(NO_XLA))
+    }
+
+    pub fn analyze(
+        &self,
+        _sizes: &[f64],
+        _sojourns: &[f64],
+        _bin_idx: &[i32],
+        _thresholds: &[f64],
+    ) -> Result<AnalyticsOut> {
+        Err(rt_err(NO_XLA))
+    }
+}

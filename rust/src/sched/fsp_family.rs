@@ -109,7 +109,10 @@ impl FspFamily {
             g: 0.0,
             w_v: 0.0,
             w_l: 0.0,
-            o: MinHeap::new(),
+            // `o` is indexed: cancellation removes by job id, and the
+            // seq -> slot map makes that O(log n) (§5.2.2 bookkeeping).
+            // `e` is only ever popped from the top; no index needed.
+            o: MinHeap::with_index(),
             e: MinHeap::new(),
             late: VecDeque::new(),
         }

@@ -67,14 +67,32 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
 /// is unusable here because f64 is not `Ord`; this implementation also
 /// gives us deterministic tie-breaking by sequence number, which the
 /// simulator's reproducibility relies on.
+///
+/// **Layout.** Keys and payloads live in two parallel vectors: the
+/// sift loops touch only the dense `(f64, u64)` key array (16
+/// bytes/slot, four per cache line), so payload size no longer dilutes
+/// the comparison-heavy hot path.  The split also makes the ordering
+/// key *physically* immutable through [`MinHeap::head_mut`] — a caller
+/// mutating the payload cannot corrupt heap order, because order lives
+/// only in `keys` (tested by `head_mut_cannot_corrupt_order`).
+///
+/// **Indexing.** [`MinHeap::with_index`] maintains a seq → slot map
+/// across sifts, turning [`MinHeap::remove_by_seq`] from an O(n) scan
+/// into O(log n) — the §5.2.2 job-cancellation path.  Unindexed heaps
+/// pay nothing for it.
 #[derive(Debug, Clone)]
 pub struct MinHeap<T> {
-    items: Vec<(f64, u64, T)>,
+    /// Hot half of the split layout: `(key, seq)`, heap-ordered.
+    keys: Vec<(f64, u64)>,
+    /// Cold half: `payloads[i]` belongs to `keys[i]`.
+    payloads: Vec<T>,
+    /// Optional seq → slot index (see [`MinHeap::with_index`]).
+    slots: Option<std::collections::HashMap<u64, usize>>,
 }
 
 impl<T> Default for MinHeap<T> {
     fn default() -> Self {
-        MinHeap { items: Vec::new() }
+        MinHeap { keys: Vec::new(), payloads: Vec::new(), slots: None }
     }
 }
 
@@ -83,73 +101,120 @@ impl<T> MinHeap<T> {
         Self::default()
     }
 
+    /// A heap that additionally maintains a seq → slot index, making
+    /// [`MinHeap::remove_by_seq`] O(log n).  Live entries must have
+    /// unique `seq`s (job ids do).
+    pub fn with_index() -> Self {
+        MinHeap {
+            keys: Vec::new(),
+            payloads: Vec::new(),
+            slots: Some(std::collections::HashMap::new()),
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.keys.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.keys.is_empty()
     }
 
     /// O(log n) push; `seq` breaks key ties deterministically.
     pub fn push(&mut self, key: f64, seq: u64, value: T) {
-        self.items.push((key, seq, value));
-        self.sift_up(self.items.len() - 1);
+        let i = self.keys.len();
+        self.keys.push((key, seq));
+        self.payloads.push(value);
+        if let Some(m) = &mut self.slots {
+            let prev = m.insert(seq, i);
+            debug_assert!(prev.is_none(), "duplicate seq {seq} in indexed MinHeap");
+        }
+        self.sift_up(i);
     }
 
     /// Minimum element: `(key, seq, &value)`.
     pub fn peek(&self) -> Option<(f64, u64, &T)> {
-        self.items.first().map(|(k, s, v)| (*k, *s, v))
+        self.keys.first().map(|&(k, s)| (k, s, &self.payloads[0]))
     }
 
-    /// Mutable access to the minimum element's payload.  The caller
-    /// must not change anything the *key* depends on (used by the FSP
-    /// family to update the served job's remaining work in O(1)).
+    /// Mutable access to the minimum element's payload (used by the FSP
+    /// family to update the served job's remaining work in O(1)).  The
+    /// ordering key is stored separately and cannot be reached — let
+    /// alone corrupted — through this reference.
     pub fn head_mut(&mut self) -> Option<&mut T> {
-        self.items.first_mut().map(|(_, _, v)| v)
+        self.payloads.first_mut()
     }
 
     /// O(log n) pop of the minimum.
     pub fn pop(&mut self) -> Option<(f64, u64, T)> {
-        if self.items.is_empty() {
+        if self.keys.is_empty() {
             return None;
         }
-        let last = self.items.len() - 1;
-        self.items.swap(0, last);
-        let out = self.items.pop();
-        if !self.items.is_empty() {
+        let last = self.keys.len() - 1;
+        self.swap_slots(0, last);
+        let (k, s) = self.keys.pop().unwrap();
+        let v = self.payloads.pop().unwrap();
+        if let Some(m) = &mut self.slots {
+            m.remove(&s);
+        }
+        if !self.keys.is_empty() {
             self.sift_down(0);
         }
-        out
+        Some((k, s, v))
     }
 
     pub fn clear(&mut self) {
-        self.items.clear();
+        self.keys.clear();
+        self.payloads.clear();
+        if let Some(m) = &mut self.slots {
+            m.clear();
+        }
     }
 
-    /// O(n) removal by sequence number (used by job cancellation — rare
-    /// by assumption, so the linear scan is acceptable; the swap-remove
-    /// plus one sift restores the heap in O(log n) after the scan).
+    /// Removal by sequence number (the job-cancellation path): O(log n)
+    /// on indexed heaps ([`MinHeap::with_index`]), an O(n) scan plus
+    /// O(log n) fix-up otherwise.
     pub fn remove_by_seq(&mut self, seq: u64) -> Option<(f64, u64, T)> {
-        let i = self.items.iter().position(|(_, s, _)| *s == seq)?;
-        let item = self.items.swap_remove(i);
-        if i < self.items.len() {
+        let i = match &self.slots {
+            Some(m) => *m.get(&seq)?,
+            None => self.keys.iter().position(|&(_, s)| s == seq)?,
+        };
+        let last = self.keys.len() - 1;
+        self.swap_slots(i, last);
+        let (k, s) = self.keys.pop().unwrap();
+        let v = self.payloads.pop().unwrap();
+        debug_assert_eq!(s, seq, "seq index out of sync");
+        if let Some(m) = &mut self.slots {
+            m.remove(&s);
+        }
+        if i < self.keys.len() {
             // The swapped-in element may violate order in either
             // direction relative to its new position.
             self.sift_down(i);
             self.sift_up(i);
         }
-        Some(item)
+        Some((k, s, v))
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (f64, u64, &T)> {
-        self.items.iter().map(|(k, s, v)| (*k, *s, v))
+        self.keys.iter().zip(&self.payloads).map(|(&(k, s), v)| (k, s, v))
+    }
+
+    /// Swap two slots in both halves, keeping the seq index in sync.
+    #[inline]
+    fn swap_slots(&mut self, a: usize, b: usize) {
+        self.keys.swap(a, b);
+        self.payloads.swap(a, b);
+        if let Some(m) = &mut self.slots {
+            m.insert(self.keys[a].1, a);
+            m.insert(self.keys[b].1, b);
+        }
     }
 
     #[inline]
     fn less(&self, a: usize, b: usize) -> bool {
-        let (ka, sa, _) = &self.items[a];
-        let (kb, sb, _) = &self.items[b];
+        let (ka, sa) = &self.keys[a];
+        let (kb, sb) = &self.keys[b];
         match ka.partial_cmp(kb).expect("NaN key in MinHeap") {
             std::cmp::Ordering::Less => true,
             std::cmp::Ordering::Greater => false,
@@ -161,7 +226,7 @@ impl<T> MinHeap<T> {
         while i > 0 {
             let parent = (i - 1) / 2;
             if self.less(i, parent) {
-                self.items.swap(i, parent);
+                self.swap_slots(i, parent);
                 i = parent;
             } else {
                 break;
@@ -173,23 +238,34 @@ impl<T> MinHeap<T> {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut smallest = i;
-            if l < self.items.len() && self.less(l, smallest) {
+            if l < self.keys.len() && self.less(l, smallest) {
                 smallest = l;
             }
-            if r < self.items.len() && self.less(r, smallest) {
+            if r < self.keys.len() && self.less(r, smallest) {
                 smallest = r;
             }
             if smallest == i {
                 return;
             }
-            self.items.swap(i, smallest);
+            self.swap_slots(i, smallest);
             i = smallest;
         }
     }
 
-    /// Heap-order invariant check (test/debug support).
+    /// Invariant check (test/debug support): heap order, split halves
+    /// in lockstep, and — when indexed — every live seq mapping to its
+    /// actual slot.
     pub fn check_invariant(&self) -> bool {
-        (1..self.items.len()).all(|i| !self.less(i, (i - 1) / 2))
+        let ordered = (1..self.keys.len()).all(|i| !self.less(i, (i - 1) / 2));
+        let aligned = self.keys.len() == self.payloads.len();
+        let indexed = match &self.slots {
+            None => true,
+            Some(m) => {
+                m.len() == self.keys.len()
+                    && self.keys.iter().enumerate().all(|(i, &(_, s))| m.get(&s) == Some(&i))
+            }
+        };
+        ordered && aligned && indexed
     }
 }
 
@@ -257,43 +333,94 @@ mod tests {
                 (keys, removals)
             },
             |(keys, removals)| {
-                let mut h = MinHeap::new();
-                for (i, &k) in keys.iter().enumerate() {
-                    h.push(k, i as u64, i);
-                }
-                let mut gone = std::collections::HashSet::new();
-                for &seq in removals {
-                    let removed = h.remove_by_seq(seq);
-                    let expect = (seq as usize) < keys.len() && !gone.contains(&seq);
-                    if removed.is_some() != expect {
-                        return Err(format!("remove {seq}: got {removed:?}"));
+                // Indexed and unindexed heaps must behave identically.
+                for indexed in [false, true] {
+                    let mut h = if indexed { MinHeap::with_index() } else { MinHeap::new() };
+                    for (i, &k) in keys.iter().enumerate() {
+                        h.push(k, i as u64, i);
                     }
-                    if removed.is_some() {
-                        gone.insert(seq);
+                    let mut gone = std::collections::HashSet::new();
+                    for &seq in removals {
+                        let removed = h.remove_by_seq(seq);
+                        let expect = (seq as usize) < keys.len() && !gone.contains(&seq);
+                        if removed.is_some() != expect {
+                            return Err(format!("indexed={indexed} remove {seq}: got {removed:?}"));
+                        }
+                        if removed.is_some() {
+                            gone.insert(seq);
+                        }
+                        if !h.check_invariant() {
+                            return Err(format!(
+                                "indexed={indexed}: heap invariant broken after removing {seq}"
+                            ));
+                        }
                     }
-                    if !h.check_invariant() {
-                        return Err(format!("heap invariant broken after removing {seq}"));
+                    // Remaining elements pop in sorted order.
+                    let mut last = f64::NEG_INFINITY;
+                    let mut popped = 0;
+                    while let Some((k, s, _)) = h.pop() {
+                        if k < last {
+                            return Err(format!("out of order: {k} after {last}"));
+                        }
+                        if gone.contains(&s) {
+                            return Err(format!("removed element {s} resurfaced"));
+                        }
+                        last = k;
+                        popped += 1;
                     }
-                }
-                // Remaining elements pop in sorted order.
-                let mut last = f64::NEG_INFINITY;
-                let mut popped = 0;
-                while let Some((k, s, _)) = h.pop() {
-                    if k < last {
-                        return Err(format!("out of order: {k} after {last}"));
+                    if popped + gone.len() != keys.len() {
+                        return Err("element count mismatch".into());
                     }
-                    if gone.contains(&s) {
-                        return Err(format!("removed element {s} resurfaced"));
-                    }
-                    last = k;
-                    popped += 1;
-                }
-                if popped + gone.len() != keys.len() {
-                    return Err("element count mismatch".into());
                 }
                 Ok(())
             },
         );
+    }
+
+    /// Indexed and unindexed heaps agree operation-for-operation under
+    /// a random push/pop/remove interleaving (the index is a pure
+    /// accelerator — it must never change observable behavior).
+    #[test]
+    fn indexed_heap_matches_unindexed() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut plain: MinHeap<u64> = MinHeap::new();
+        let mut fast: MinHeap<u64> = MinHeap::with_index();
+        let mut seq = 0u64;
+        for _ in 0..2000 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let k = rng.u01();
+                    plain.push(k, seq, seq);
+                    fast.push(k, seq, seq);
+                    seq += 1;
+                }
+                2 => assert_eq!(plain.pop(), fast.pop()),
+                _ => {
+                    let target = rng.below(seq.max(1));
+                    assert_eq!(plain.remove_by_seq(target), fast.remove_by_seq(target));
+                }
+            }
+            assert!(plain.check_invariant() && fast.check_invariant());
+        }
+        while let Some(x) = plain.pop() {
+            assert_eq!(Some(x), fast.pop());
+        }
+        assert!(fast.is_empty());
+    }
+
+    /// The split layout stores ordering keys apart from payloads, so a
+    /// caller mutating the head payload — the historical `head_mut`
+    /// footgun — cannot corrupt heap order.
+    #[test]
+    fn head_mut_cannot_corrupt_order() {
+        let mut h = MinHeap::new();
+        h.push(1.0, 1, 1.0f64);
+        h.push(2.0, 2, 2.0);
+        h.push(3.0, 3, 3.0);
+        *h.head_mut().unwrap() = 999.0; // pathological payload mutation
+        assert!(h.check_invariant(), "payload mutation must not affect order");
+        let order: Vec<u64> = std::iter::from_fn(|| h.pop().map(|(_, s, _)| s)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
     }
 
     /// Stress: every policy survives a batch of simultaneous arrivals

@@ -73,17 +73,26 @@ impl SrpteHybrid {
         }
     }
 
-    /// Service rates: (late_rates[i], slot_rate). Rates sum to 1 when
-    /// any job is eligible.
-    fn rates(&self) -> (Vec<f64>, f64) {
+    /// Sharing descriptor for one event step (rates sum to 1 when any
+    /// job is eligible), precomputed once per call.  Allocation-free
+    /// replacement for the former per-call rate `Vec`s: `next_event`
+    /// and `advance` run once per simulator event, so those fresh
+    /// allocations dominated the per-event profile.
+    fn rate_ctx(&self) -> RateCtx {
         let n_elig = self.late.len() + usize::from(self.slot.is_some());
         if n_elig == 0 {
-            return (Vec::new(), 0.0);
+            return RateCtx { share: 0.0, min_att: f64::INFINITY, k: 0, slot_rate: 0.0 };
         }
         match self.mode {
             ShareMode::Ps => {
                 let share = 1.0 / n_elig as f64;
-                (vec![share; self.late.len()], if self.slot.is_some() { share } else { 0.0 })
+                RateCtx {
+                    share,
+                    // +inf ceiling: every eligible job is in the group.
+                    min_att: f64::INFINITY,
+                    k: n_elig,
+                    slot_rate: if self.slot.is_some() { share } else { 0.0 },
+                }
             }
             ShareMode::Las => {
                 // Equal split of the least-attained group among eligible.
@@ -98,15 +107,39 @@ impl SrpteHybrid {
                 let k = self.late.iter().filter(|e| in_group(e.attained())).count()
                     + usize::from(slot_att.map_or(false, in_group));
                 let share = 1.0 / k as f64;
-                (
-                    self.late
-                        .iter()
-                        .map(|e| if in_group(e.attained()) { share } else { 0.0 })
-                        .collect(),
-                    if slot_att.map_or(false, in_group) { share } else { 0.0 },
-                )
+                RateCtx {
+                    share,
+                    min_att,
+                    k,
+                    slot_rate: if slot_att.map_or(false, in_group) { share } else { 0.0 },
+                }
             }
         }
+    }
+}
+
+/// Precomputed sharing state for one event step.
+#[derive(Debug, Clone, Copy)]
+struct RateCtx {
+    /// Per-served-job rate (1/k).
+    share: f64,
+    /// Attained-service ceiling of the served group: a late job with
+    /// `attained <= min_att + EPS` is served.  `+inf` in PS mode
+    /// (everyone served); the LAS front-group minimum otherwise.
+    min_att: f64,
+    /// Served-group size.
+    k: usize,
+    /// Rate of the slot job (0 when idle or outside the LAS group).
+    slot_rate: f64,
+}
+
+/// Rate of a late job with the given attained service.
+#[inline]
+fn late_rate(ctx: RateCtx, attained: f64) -> f64 {
+    if attained <= ctx.min_att + EPS {
+        ctx.share
+    } else {
+        0.0
     }
 }
 
@@ -134,44 +167,37 @@ impl Scheduler for SrpteHybrid {
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
-        let (late_rates, slot_rate) = self.rates();
+        let ctx = self.rate_ctx();
         let mut dt = f64::INFINITY;
-        for (e, r) in self.late.iter().zip(&late_rates) {
-            if *r > 0.0 {
+        for e in &self.late {
+            let r = late_rate(ctx, e.attained());
+            if r > 0.0 {
                 dt = dt.min(e.true_rem / r);
             }
         }
         if let Some(s) = &self.slot {
-            if slot_rate > 0.0 {
+            if ctx.slot_rate > 0.0 {
                 // Completion, or the slot job going late (est hits 0).
-                dt = dt.min(s.true_rem / slot_rate);
+                dt = dt.min(s.true_rem / ctx.slot_rate);
                 if s.est_rem > 0.0 {
-                    dt = dt.min(s.est_rem / slot_rate);
+                    dt = dt.min(s.est_rem / ctx.slot_rate);
                 }
             }
         }
-        if self.mode == ShareMode::Las {
-            // Regroup: the served group catches the next attained level.
-            let (late_rates, slot_rate) = (late_rates, slot_rate);
-            let served_att = self
-                .late
-                .iter()
-                .zip(&late_rates)
-                .filter(|(_, r)| **r > 0.0)
-                .map(|(e, _)| e.attained())
-                .chain(self.slot.filter(|_| slot_rate > 0.0).map(|s| s.attained()))
-                .fold(f64::INFINITY, f64::min);
+        if self.mode == ShareMode::Las && ctx.k > 0 {
+            // Regroup: the served group catches the next attained
+            // level.  The group's minimum attained service is exactly
+            // `ctx.min_att` (the group is defined as everything within
+            // EPS of it).
             let next_att = self
                 .late
                 .iter()
                 .map(|e| e.attained())
                 .chain(self.slot.map(|s| s.attained()))
-                .filter(|a| *a > served_att + EPS)
+                .filter(|a| *a > ctx.min_att + EPS)
                 .fold(f64::INFINITY, f64::min);
             if next_att.is_finite() {
-                let k = late_rates.iter().filter(|r| **r > 0.0).count()
-                    + usize::from(slot_rate > 0.0);
-                dt = dt.min((next_att - served_att) * k as f64);
+                dt = dt.min((next_att - ctx.min_att) * ctx.k as f64);
             }
         }
         if dt.is_finite() {
@@ -183,14 +209,17 @@ impl Scheduler for SrpteHybrid {
 
     fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
         let dt = t - now;
-        let (late_rates, slot_rate) = self.rates();
-        for (e, r) in self.late.iter_mut().zip(&late_rates) {
+        let ctx = self.rate_ctx();
+        for e in self.late.iter_mut() {
+            // `attained()` is read before the update, so the rate is
+            // the step-start rate (as the old rate vectors had it).
+            let r = late_rate(ctx, e.attained());
             e.true_rem -= r * dt;
             e.est_rem -= r * dt;
         }
         if let Some(s) = self.slot.as_mut() {
-            s.true_rem -= slot_rate * dt;
-            s.est_rem -= slot_rate * dt;
+            s.true_rem -= ctx.slot_rate * dt;
+            s.est_rem -= ctx.slot_rate * dt;
         }
 
         // Completions among late jobs.

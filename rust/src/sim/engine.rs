@@ -50,6 +50,14 @@ pub fn run_with_observer<F>(sched: &mut dyn Scheduler, jobs: &[Job], mut observe
 where
     F: FnMut(f64, &Completion),
 {
+    // The loop below indexes `completion[c.id]` and walks `jobs` as a
+    // time-ordered stream: ids that aren't the dense indices 0..n or
+    // out-of-order arrivals would silently corrupt results (wrong
+    // slots overwritten, arrivals delivered at the wrong times).
+    // Fail fast in debug builds via the shared workload validator.
+    #[cfg(debug_assertions)]
+    super::job::validate(jobs);
+
     let mut completion = vec![f64::NAN; jobs.len()];
     let mut done: Vec<Completion> = Vec::with_capacity(16);
     let mut now = 0.0_f64;
@@ -187,6 +195,28 @@ mod tests {
         let mut s = SerialFifo { queue: Default::default() };
         let r = run(&mut s, &jobs);
         assert_eq!(r.completion, vec![1.0, 101.0]);
+    }
+
+    /// The unsorted-input failure mode is caught upfront (debug
+    /// builds), not silently folded into corrupted completion times.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "must be sorted")]
+    fn engine_rejects_unsorted_arrivals() {
+        let jobs = vec![Job::exact(0, 1.0, 1.0), Job::exact(1, 0.5, 1.0)];
+        let mut s = SerialFifo { queue: Default::default() };
+        run(&mut s, &jobs);
+    }
+
+    /// Ids must be the dense indices 0..n: `completion[c.id]` indexing
+    /// would otherwise write the wrong slots (or panic late, mid-run).
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "dense indices")]
+    fn engine_rejects_non_dense_ids() {
+        let jobs = vec![Job::exact(0, 0.0, 1.0), Job::exact(5, 1.0, 1.0)];
+        let mut s = SerialFifo { queue: Default::default() };
+        run(&mut s, &jobs);
     }
 
     #[test]

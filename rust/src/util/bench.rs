@@ -4,7 +4,10 @@
 //! the harness warms up, runs timed batches until a wall-clock budget
 //! is met, and reports mean / stddev / min per iteration plus optional
 //! throughput.  Output format is one line per benchmark so the figure
-//! harness and EXPERIMENTS.md can diff runs textually.
+//! harness and EXPERIMENTS.md can diff runs textually; [`write_json`]
+//! additionally emits a machine-readable `BENCH_*.json` report (schema
+//! in rust/benches/README.md) so the perf trajectory can be tracked
+//! across PRs.
 
 use std::time::{Duration, Instant};
 
@@ -123,6 +126,89 @@ pub fn render(s: &Sample) -> String {
     )
 }
 
+/// Throughput implied by a sample: `items`/iter when reported, else
+/// iterations themselves (events, ops) per second.
+pub fn ops_per_sec(s: &Sample) -> f64 {
+    if s.mean_ns <= 0.0 {
+        return 0.0;
+    }
+    s.items.unwrap_or(1) as f64 * 1e9 / s.mean_ns
+}
+
+/// Output path for a `BENCH_*.json` report: `$BENCH_OUT_DIR` if set,
+/// the working directory otherwise (the workspace root under `cargo
+/// bench`).
+pub fn out_path(file: &str) -> String {
+    match std::env::var("BENCH_OUT_DIR") {
+        Ok(d) if !d.is_empty() => format!("{d}/{file}"),
+        _ => file.to_string(),
+    }
+}
+
+/// Write samples (+ optional derived scalars, e.g. computed speedups)
+/// as a machine-readable JSON report.  Schema `psbs-bench-v1`,
+/// documented in rust/benches/README.md.
+pub fn write_json(
+    path: &str,
+    bench: &str,
+    samples: &[Sample],
+    derived: &[(String, f64)],
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"psbs-bench-v1\",\n");
+    s.push_str(&format!("  \"bench\": {},\n", json_str(bench)));
+    s.push_str("  \"samples\": [\n");
+    for (i, sm) in samples.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {}, \"iters\": {}, \"mean_ns\": {}, \"stddev_ns\": {}, \
+             \"min_ns\": {}, \"items_per_iter\": {}, \"ops_per_sec\": {}}}{}\n",
+            json_str(&sm.name),
+            sm.iters,
+            json_num(sm.mean_ns),
+            json_num(sm.stddev_ns),
+            json_num(sm.min_ns),
+            sm.items.map_or("null".to_string(), |v| v.to_string()),
+            json_num(ops_per_sec(sm)),
+            if i + 1 < samples.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"derived\": {");
+    for (i, (k, v)) in derived.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{}: {}", json_str(k), json_num(*v)));
+    }
+    s.push_str("}\n}\n");
+    std::fs::write(path, s)
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON has no NaN/Infinity; non-finite values serialize as null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns >= 1e9 {
         format!("{:.3}s", ns / 1e9)
@@ -159,5 +245,62 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("us"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn json_report_roundtrips_structurally() {
+        let samples = vec![
+            Sample {
+                name: "sim/10k \"q\"\\x".to_string(),
+                iters: 42,
+                mean_ns: 1234.5,
+                stddev_ns: 1.5,
+                min_ns: 1200.0,
+                items: Some(10_000),
+            },
+            Sample {
+                name: "event/psbs".to_string(),
+                iters: 7,
+                mean_ns: f64::NAN, // must serialize as null, not NaN
+                stddev_ns: 0.0,
+                min_ns: 0.0,
+                items: None,
+            },
+        ];
+        let dir = std::env::temp_dir().join("psbs_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(
+            path.to_str().unwrap(),
+            "test",
+            &samples,
+            &[("speedup_4v1".to_string(), 2.5)],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"schema\": \"psbs-bench-v1\""));
+        assert!(text.contains("\"speedup_4v1\": 2.500"));
+        assert!(text.contains("\\\"q\\\"\\\\x"), "quotes/backslashes escaped: {text}");
+        assert!(!text.contains("NaN"), "non-finite numbers must become null");
+        // Structural sanity: balanced braces/brackets.
+        let braces = text.matches('{').count();
+        assert_eq!(braces, text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ops_per_sec_uses_items() {
+        let mut s = Sample {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            stddev_ns: 0.0,
+            min_ns: 0.0,
+            items: Some(5000),
+        };
+        assert!((ops_per_sec(&s) - 5000.0).abs() < 1e-9);
+        s.items = None;
+        assert!((ops_per_sec(&s) - 1.0).abs() < 1e-12);
     }
 }

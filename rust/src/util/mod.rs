@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod pool;
 pub mod rng;
 
 /// Absolute time tolerance used by the event-driven simulator when

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: release build + full test suite + a
+# short (~10 s) bench smoke that refreshes the machine-readable
+# BENCH_*.json perf reports (schema: rust/benches/README.md).
+#
+# Usage:
+#   scripts/tier1.sh             # build + test + bench smoke
+#   scripts/tier1.sh --no-bench  # build + test only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+  # BENCH_MS bounds each benchmark's measurement budget; the filters
+  # restrict the run to the per-event scheduler numbers (psbs vs
+  # fsp-naive) and the parallel-sweep scaling grid.  The smoke writes
+  # into its own directory: a filtered run contains only the filtered
+  # samples and must not clobber full reports from an unfiltered
+  # `cargo bench` (those are the ones tracked across PRs).
+  mkdir -p bench-smoke
+  BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/
+  BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench figures -- sweep/
+  echo "--- bench-smoke/BENCH_sweeps.json derived speedups ---"
+  grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sweeps.json || true
+fi
+
+echo "tier1 OK"
