@@ -4,10 +4,21 @@
 //! `psbs sweep` produces the full-scale CSVs; this harness is the
 //! regression guard.
 //!
-//! Also measures the parallel sweep executor on a Fig. 6-style
-//! shape×sigma ratio grid at 1/2/4 worker threads and records the
-//! wall-clock speedups in `BENCH_sweeps.json` (`derived` section), so
-//! the executor's scaling is tracked from PR to PR.  Filter with
+//! Also measures the sweep executor on a Fig. 6-style shape×sigma
+//! ratio grid at 1/2/4 worker threads, in BOTH evaluation modes:
+//!
+//! * `sweep/shape_sigma_grid/threadsN` — the per-cell legacy path of
+//!   PR 1 (every cell re-synthesizes its workloads and re-runs its
+//!   reference); names unchanged so the numbers stay comparable
+//!   across PRs.
+//! * `sweep/planner/shape_sigma_grid/threadsN` — the shared-workload
+//!   planner (synthesize once per (config, seed), reference once per
+//!   seed, repetition-level split, cost-aware ordering).
+//!
+//! The `derived` section of `BENCH_sweeps.json` records the thread
+//! speedups of each mode plus `planner_speedup_t{1,4}` — the planner's
+//! wall-clock win over the per-cell path at equal thread count (the
+//! sweep-throughput number this PR is accountable for).  Filter with
 //! `cargo bench --bench figures -- sweep/` for the scaling run alone.
 
 use psbs::figures::{self, Ctx, Reference, SweepCell};
@@ -18,7 +29,8 @@ fn main() {
     let mut b = Bench::new();
     // Reduced scale: 1 rep x 500 jobs keeps every figure fast; the
     // pure-rust analytics fallback avoids timing PJRT compilation here
-    // (runtime.rs benches the artifacts directly).
+    // (runtime.rs benches the artifacts directly).  Figures run through
+    // the planner (the production default).
     for fig in figures::ALL_FIGS {
         b.bench(&format!("figure/fig{fig}"), move || {
             let ctx = Ctx { reps: 1, njobs: 500, seed: 7, runtime: None, ..Default::default() };
@@ -27,10 +39,11 @@ fn main() {
         });
     }
 
-    // Parallel sweep executor scaling: the shape×sigma MST/opt ratio
-    // grid (the Fig. 6 shape) as one flat cell list, at 1/2/4 threads.
-    // Identical cells each time — only the thread count varies, so the
-    // mean-time ratios are the executor's wall-clock speedups.
+    // Sweep executor scaling: the shape×sigma MST/opt ratio grid (the
+    // Fig. 6 shape) as one flat cell list, at 1/2/4 threads, per-cell
+    // vs planner-shared.  Identical cells each time — only the thread
+    // count and sharing mode vary, so mean-time ratios are wall-clock
+    // speedups (results themselves are bit-identical by construction).
     let mut cells: Vec<SweepCell> = Vec::new();
     for &shape in &[0.5, 0.25, 0.125] {
         for &sigma in &figures::GRID {
@@ -43,29 +56,42 @@ fn main() {
             }
         }
     }
-    for &threads in &[1usize, 2, 4] {
-        let ctx = Ctx { reps: 1, njobs: 1_500, seed: 7, threads, ..Default::default() };
-        let cells = cells.clone();
-        b.bench_items(
-            &format!("sweep/shape_sigma_grid/threads{threads}"),
-            Some(cells.len() as u64),
-            move || {
-                std::hint::black_box(ctx.eval_grid(&cells).len());
-            },
-        );
+    for share in [false, true] {
+        for &threads in &[1usize, 2, 4] {
+            let ctx =
+                Ctx { reps: 1, njobs: 1_500, seed: 7, threads, share, ..Default::default() };
+            let cells = cells.clone();
+            let mode = if share { "sweep/planner" } else { "sweep" };
+            b.bench_items(
+                &format!("{mode}/shape_sigma_grid/threads{threads}"),
+                Some(cells.len() as u64),
+                move || {
+                    std::hint::black_box(ctx.eval_grid(&cells).len());
+                },
+            );
+        }
     }
 
-    // Derived speedups vs the 1-thread run (when all three ran — a
+    // Derived speedups (when the relevant samples ran — a
     // `cargo bench -- <filter>` may have skipped some).
-    let mean_of = |suffix: &str| {
-        b.samples.iter().find(|s| s.name.ends_with(suffix)).map(|s| s.mean_ns)
-    };
+    let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
     let mut derived: Vec<(String, f64)> = Vec::new();
-    if let Some(t1) = mean_of("threads1") {
-        for (suffix, label) in [("threads2", "sweep_speedup_2v1"), ("threads4", "sweep_speedup_4v1")] {
-            if let Some(tn) = mean_of(suffix) {
-                derived.push((label.to_string(), t1 / tn));
+    for (mode, tag) in [("sweep", "sweep_speedup"), ("sweep/planner", "planner_speedup")] {
+        if let Some(t1) = mean_of(&format!("{mode}/shape_sigma_grid/threads1")) {
+            for n in [2u32, 4] {
+                if let Some(tn) = mean_of(&format!("{mode}/shape_sigma_grid/threads{n}")) {
+                    derived.push((format!("{tag}_{n}v1"), t1 / tn));
+                }
             }
+        }
+    }
+    // The planner's win over the per-cell path at equal thread count.
+    for n in [1u32, 4] {
+        if let (Some(cell), Some(plan)) = (
+            mean_of(&format!("sweep/shape_sigma_grid/threads{n}")),
+            mean_of(&format!("sweep/planner/shape_sigma_grid/threads{n}")),
+        ) {
+            derived.push((format!("planner_speedup_t{n}"), cell / plan));
         }
     }
     for (k, v) in &derived {

@@ -13,6 +13,7 @@
 //! O(n) virtual-remaining update inside `advance`; PSBS pays two heap
 //! operations.
 
+use psbs::sched::MinHeap;
 use psbs::sim::{Job, Scheduler};
 use psbs::util::bench::{self, Bench};
 
@@ -22,6 +23,54 @@ use common::{preload, TINY};
 
 fn main() {
     let mut b = Bench::new();
+
+    // Seq-index backing trade-off (ROADMAP open item): the PSBS `O`
+    // heap pays index maintenance on every sift swap of the
+    // arrival/virtual-completion path (`heap/push_pop/` ~ the `event/`
+    // cost) to make cancellation O(log n) (`heap/cancel/`).  Three
+    // backings: `plain` (no index — O(n)-scan cancel), `map` (HashMap),
+    // `dense` (Vec keyed by seq — what the PSBS `O` heap now uses; job
+    // ids are dense).  `derived` summarizes dense-vs-map at n=100k.
+    for &n in &[1_000usize, 100_000] {
+        for mode in ["plain", "map", "dense"] {
+            let build = |mode: &str| -> MinHeap<u64> {
+                match mode {
+                    "plain" => MinHeap::new(),
+                    "map" => MinHeap::with_index(),
+                    _ => MinHeap::with_dense_index(),
+                }
+            };
+            // Standing population of n; each iteration pushes one entry
+            // below the minimum and pops it — two sifts over the full
+            // depth, index maintenance included (the event-path shape).
+            {
+                let mut h = build(mode);
+                for i in 0..n as u64 {
+                    h.push(1.0 + i as f64, i, i);
+                }
+                let mut seq = n as u64;
+                b.bench(&format!("heap/push_pop/{mode}/n{n}"), move || {
+                    seq += 1;
+                    h.push(0.0, seq, seq);
+                    std::hint::black_box(h.pop());
+                });
+            }
+            // Cancellation path: push a random-depth entry, remove it
+            // by seq (plain scans; indexed modes jump to the slot).
+            {
+                let mut h = build(mode);
+                for i in 0..n as u64 {
+                    h.push(1.0 + i as f64, i, i);
+                }
+                let mut seq = n as u64;
+                b.bench(&format!("heap/cancel/{mode}/n{n}"), move || {
+                    seq += 1;
+                    h.push(0.5 + (seq % 997) as f64, seq, seq);
+                    std::hint::black_box(h.remove_by_seq(seq));
+                });
+            }
+        }
+    }
 
     for &n in &[100usize, 1_000, 10_000, 100_000] {
         for policy in ["psbs", "fsp-naive"] {
@@ -85,7 +134,26 @@ fn main() {
         });
     }
 
+    // Derived trade-off summary (n = 100k): what the event path pays
+    // for each index backing, and what cancellation gains from it.
+    let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let pairs = [
+        ("dense_vs_map_event", "heap/push_pop/map/n100000", "heap/push_pop/dense/n100000"),
+        ("dense_vs_map_cancel", "heap/cancel/map/n100000", "heap/cancel/dense/n100000"),
+        ("index_cost_event", "heap/push_pop/dense/n100000", "heap/push_pop/plain/n100000"),
+        ("scan_vs_dense_cancel", "heap/cancel/plain/n100000", "heap/cancel/dense/n100000"),
+    ];
+    for (label, num, den) in pairs {
+        if let (Some(a), Some(c)) = (mean_of(num), mean_of(den)) {
+            derived.push((label.to_string(), a / c));
+        }
+    }
+    for (k, v) in &derived {
+        println!("derived {k} = {v:.2}x");
+    }
+
     let path = bench::out_path("BENCH_psbs_ops.json");
-    bench::write_json(&path, "psbs_ops", &b.samples, &[]).expect("write BENCH_psbs_ops.json");
+    bench::write_json(&path, "psbs_ops", &b.samples, &derived).expect("write BENCH_psbs_ops.json");
     println!("wrote {path}");
 }

@@ -18,13 +18,12 @@
 //!   paper studies, now at the routing layer too);
 //! * [`Dispatch::Random`] — seeded uniform (the mean-field reference).
 
-use crate::sched;
+use crate::scenario::PolicySpec;
 use crate::sim::{Completion, Job, Scheduler};
 use crate::util::rng::Rng;
-use std::collections::HashMap;
 
 /// Routing policy for new arrivals.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dispatch {
     RoundRobin,
     LeastWork,
@@ -37,25 +36,65 @@ pub struct Cluster {
     dispatch: Dispatch,
     /// Outstanding estimated work per server (LeastWork bookkeeping).
     est_backlog: Vec<f64>,
-    /// job id -> (server, estimate) for completion-time bookkeeping.
-    placement: HashMap<u32, (usize, f64)>,
+    /// `placement[id] = Some((server, estimate))` for completion-time
+    /// bookkeeping.  Dense by job id — the same 0..n contract the
+    /// engine asserts — so the per-arrival/per-completion touch is one
+    /// array slot, not a hash probe.
+    placement: Vec<Option<(usize, f64)>>,
     rr_next: usize,
     rng: Rng,
 }
 
 impl Cluster {
-    /// Build `k` servers each running `policy` (any `sched::by_name`).
-    pub fn new(policy: &str, k: usize, dispatch: Dispatch, seed: u64) -> Option<Cluster> {
+    /// Build `k` servers each running `policy` — a typed
+    /// [`PolicySpec`], or any spec string via the `From<&str>`
+    /// conversion (which panics on an invalid literal; parse user
+    /// input with [`PolicySpec::parse`] first).
+    ///
+    /// Always `Some` since validation moved into the spec parser; the
+    /// `Option` return is kept so the pre-spec call sites
+    /// (`Cluster::new("psbs", ...).unwrap()`) stay source-compatible.
+    /// New code should prefer [`Cluster::from_spec`].
+    pub fn new(
+        policy: impl Into<PolicySpec>,
+        k: usize,
+        dispatch: Dispatch,
+        seed: u64,
+    ) -> Option<Cluster> {
+        Some(Cluster::from_spec(&policy.into(), k, dispatch, seed))
+    }
+
+    /// Spec-native constructor (what `PolicySpec::build_seeded` uses).
+    pub fn from_spec(policy: &PolicySpec, k: usize, dispatch: Dispatch, seed: u64) -> Cluster {
         assert!(k >= 1);
-        let servers: Option<Vec<_>> = (0..k).map(|_| sched::by_name(policy)).collect();
-        Some(Cluster {
-            servers: servers?,
+        Cluster {
+            servers: (0..k).map(|_| policy.build_seeded(seed)).collect(),
             dispatch,
             est_backlog: vec![0.0; k],
-            placement: HashMap::new(),
+            placement: Vec::new(),
             rr_next: 0,
             rng: Rng::new(seed ^ 0xC105_7E2),
-        })
+        }
+    }
+
+    /// Dense-slot accessor, growing the table to cover `id`.
+    fn slot(&mut self, id: u32) -> &mut Option<(usize, f64)> {
+        let i = id as usize;
+        if i >= self.placement.len() {
+            self.placement.resize(i + 1, None);
+        }
+        &mut self.placement[i]
+    }
+
+    /// Clear a slot and reclaim the trailing tail, keeping the table
+    /// proportional to the live id span even under the online
+    /// service's forever-growing job ids.  Amortized O(1).
+    fn clear_slot(&mut self, id: u32) -> Option<(usize, f64)> {
+        let taken = self.placement.get_mut(id as usize).and_then(|s| s.take());
+        while self.placement.last() == Some(&None) {
+            self.placement.pop();
+        }
+        taken
     }
 
     pub fn k(&self) -> usize {
@@ -91,7 +130,7 @@ impl Scheduler for Cluster {
     fn on_arrival(&mut self, now: f64, job: &Job) {
         let s = self.pick();
         self.est_backlog[s] += job.est;
-        self.placement.insert(job.id, (s, job.est));
+        *self.slot(job.id) = Some((s, job.est));
         self.servers[s].on_arrival(now, job);
     }
 
@@ -120,7 +159,7 @@ impl Scheduler for Cluster {
             s.advance(local_now, t, done);
         }
         for c in done.iter() {
-            if let Some((srv, est)) = self.placement.remove(&c.id) {
+            if let Some((srv, est)) = self.clear_slot(c.id) {
                 self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
             }
         }
@@ -131,10 +170,10 @@ impl Scheduler for Cluster {
     }
 
     fn cancel(&mut self, now: f64, id: u32) -> bool {
-        let Some(&(srv, est)) = self.placement.get(&id) else { return false };
+        let Some(&Some((srv, est))) = self.placement.get(id as usize) else { return false };
         if self.servers[srv].cancel(now, id) {
             self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
-            self.placement.remove(&id);
+            self.clear_slot(id);
             true
         } else {
             false
@@ -145,6 +184,7 @@ impl Scheduler for Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched;
     use crate::sim::run;
     use crate::workload::SynthConfig;
 

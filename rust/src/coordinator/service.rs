@@ -1,6 +1,6 @@
 //! Leader thread + submission/notification channels.
 
-use crate::sched;
+use crate::scenario::PolicySpec;
 use crate::sim::{Completion, Job, Scheduler};
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -10,15 +10,18 @@ use std::time::{Duration, Instant};
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Scheduling discipline (any name accepted by `sched::by_name`).
-    pub policy: String,
+    /// Scheduling discipline: a typed [`PolicySpec`] (string literals
+    /// convert via `From<&str>`, so `policy: "psbs".into()` and
+    /// composed specs like `"cluster(k=4,inner=psbs)".into()` both
+    /// work; parse user input with [`PolicySpec::parse`]).
+    pub policy: PolicySpec,
     /// Machine speed: service units per wall-clock second.
     pub speed: f64,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { policy: "psbs".to_string(), speed: 1000.0 }
+        ServiceConfig { policy: PolicySpec::psbs(), speed: 1000.0 }
     }
 }
 
@@ -112,8 +115,7 @@ struct Pending {
 }
 
 fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
-    let mut sched = sched::by_name(&cfg.policy)
-        .unwrap_or_else(|| panic!("unknown policy {}", cfg.policy));
+    let mut sched = cfg.policy.build();
     let t0 = Instant::now();
     let speed = cfg.speed;
     let sim_now = |t0: Instant| t0.elapsed().as_secs_f64() * speed;
@@ -266,7 +268,7 @@ mod tests {
     fn every_policy_runs_in_the_service() {
         for policy in crate::sched::ALL_POLICIES {
             let svc = Service::start(ServiceConfig {
-                policy: policy.to_string(),
+                policy: (*policy).into(),
                 speed: 50_000.0,
             });
             let rx = svc.submit(5.0, 5.0, 1.0);

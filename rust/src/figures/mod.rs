@@ -8,29 +8,41 @@
 //! *shapes* — who wins, by what factor, where crossovers sit — are the
 //! reproduction targets, recorded in EXPERIMENTS.md.
 //!
-//! ## Parallel sweep execution
+//! ## Declarative scenarios & the shared-workload planner
 //!
-//! Every figure describes its work as a flat list of independent cells
-//! — [`SweepCell`]s for plain MST/ratio grids, ad-hoc `(index, rep)`
-//! items for pooled-population figures — and evaluates it through
-//! [`crate::util::pool::par_map`] with `Ctx::threads` workers.  Each
-//! cell derives its repetition seeds independently
-//! (`seed + r * 7919`), and results are reassembled in cell order, so
-//! parallel output is **bit-identical** to the serial path
-//! (`threads == 1`); `tests::parallel_sweep_is_bit_identical` pins
-//! this down across thread counts.
+//! Grid figures are [`crate::scenario::Scenario`] declarations (base
+//! workload config x axes x policy set x [`Reference`]) evaluated by
+//! one generic executor; non-grid figures (pooled populations, trace
+//! replays, per-rep dual-policy runs) describe flat work-item lists
+//! run through [`Ctx::par_runs`].  Cell grids go through the
+//! [`crate::scenario::planner`]: cells sharing a workload config are
+//! grouped so each `(config, seed)` workload is synthesized **once**
+//! and each reference MST computed **once per seed**, with per-policy
+//! simulations fanned out through [`crate::util::pool`]
+//! (`Ctx::threads` workers, cost-aware largest-first ordering).
+//!
+//! Sharing and parallelism are both numerically no-ops: every value is
+//! a pure function of (cell, repetition seed), seeds derive
+//! independently (`seed + r * 7919`), and results reassemble in cell
+//! order — so planner output is **bit-identical** to the per-cell
+//! legacy path (`Ctx::share = false`) and parallel output to the
+//! serial path (`threads == 1`).
+//! `tests::planner_reproduces_per_cell_figures_bitwise` and
+//! `tests::parallel_sweep_is_bit_identical` pin both down.
 
 pub mod plot;
 pub mod tables;
 
 use crate::metrics;
 use crate::runtime::Runtime;
+use crate::scenario::{self, AxisParam, Scenario};
 use crate::sched;
 use crate::sim::{self, Job};
 use crate::stats::Repetitions;
 use crate::util::pool;
 use crate::workload::traces;
 use crate::workload::{SizeDist, SynthConfig};
+pub use crate::scenario::{exact_copy, Reference, SweepCell, SweepParams};
 pub use tables::Table;
 
 /// Shared sweep context.
@@ -51,6 +63,10 @@ pub struct Ctx {
     /// Worker threads for grid evaluation (1 = the exact serial path;
     /// results are bit-identical either way).
     pub threads: usize,
+    /// Route cell grids through the shared-workload planner (default).
+    /// `false` = the per-cell legacy path of PR 1, kept as the
+    /// reference the bit-identity tests compare against.
+    pub share: bool,
 }
 
 impl Default for Ctx {
@@ -63,82 +79,13 @@ impl Default for Ctx {
             runtime: None,
             converge: false,
             threads: 1,
+            share: true,
         }
     }
 }
 
 /// The grid used for shape/sigma sweeps (paper: 0.125 .. 4, log-spaced).
 pub const GRID: [f64; 6] = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0];
-
-/// Scalar sweep parameters, detached from [`Ctx`] so worker threads
-/// never touch the (non-`Sync`) runtime handle.
-#[derive(Debug, Clone, Copy)]
-pub struct SweepParams {
-    pub reps: u64,
-    pub seed: u64,
-    pub converge: bool,
-}
-
-/// One cell of a sweep grid: one (policy, workload-config) data point,
-/// evaluated over seeded repetitions.  Figures build flat
-/// `Vec<SweepCell>` grids and hand them to [`Ctx::eval_grid`].
-#[derive(Debug, Clone, Copy)]
-pub struct SweepCell {
-    pub policy: &'static str,
-    pub cfg: SynthConfig,
-    /// `Some(r)` => mean of per-seed MST ratios against `r`;
-    /// `None` => mean raw MST.
-    pub reference: Option<Reference>,
-}
-
-impl SweepCell {
-    /// A ratio cell (the common case).
-    pub fn ratio(policy: &'static str, reference: Reference, cfg: SynthConfig) -> SweepCell {
-        SweepCell { policy, cfg, reference: Some(reference) }
-    }
-
-    /// Evaluate this cell: a pure function of (cell, params), safe to
-    /// run on any worker.
-    pub fn eval(&self, p: SweepParams) -> f64 {
-        match self.reference {
-            None => mst_mean(p, self.policy, &self.cfg),
-            Some(r) => mst_ratio_mean(p, self.policy, r, &self.cfg),
-        }
-    }
-}
-
-/// Mean MST of `policy` over repetitions of `cfg`.
-fn mst_mean(p: SweepParams, policy: &str, cfg: &SynthConfig) -> f64 {
-    let mut reps = Repetitions::default();
-    let max = if p.converge { p.reps * 10 } else { p.reps };
-    for r in 0..max {
-        let jobs = crate::workload::synthesize(cfg, p.seed.wrapping_add(r * 7919));
-        reps.push(run_mst(policy, &jobs));
-        if r + 1 >= p.reps && (!p.converge || reps.converged(p.reps as usize)) {
-            break;
-        }
-    }
-    reps.mean()
-}
-
-/// Mean of MST ratios policy/reference, paired per seed (paired ratios
-/// suppress the enormous per-workload variance of heavy-tailed sizes —
-/// the reason the paper needs thousands of repetitions for raw
-/// averages).
-fn mst_ratio_mean(p: SweepParams, policy: &str, reference: Reference, cfg: &SynthConfig) -> f64 {
-    let mut reps = Repetitions::default();
-    let max = if p.converge { p.reps * 10 } else { p.reps };
-    for r in 0..max {
-        let jobs = crate::workload::synthesize(cfg, p.seed.wrapping_add(r * 7919));
-        let a = run_mst(policy, &jobs);
-        let q = reference.mst(&jobs);
-        reps.push(a / q);
-        if r + 1 >= p.reps && (!p.converge || reps.converged(p.reps as usize)) {
-            break;
-        }
-    }
-    reps.mean()
-}
 
 impl Ctx {
     fn cfg(&self) -> SynthConfig {
@@ -152,19 +99,26 @@ impl Ctx {
 
     /// Mean MST of `policy` over repetitions of `cfg`.
     pub fn mst(&self, policy: &str, cfg: &SynthConfig) -> f64 {
-        mst_mean(self.params(), policy, cfg)
+        SweepCell::mst(policy, *cfg).eval(self.params())
     }
 
-    /// Mean of MST ratios policy/reference, paired per seed.
+    /// Mean of MST ratios policy/reference, paired per seed (paired
+    /// ratios suppress the enormous per-workload variance of
+    /// heavy-tailed sizes — the reason the paper needs thousands of
+    /// repetitions for raw averages).
     pub fn mst_ratio(&self, policy: &str, reference: Reference, cfg: &SynthConfig) -> f64 {
-        mst_ratio_mean(self.params(), policy, reference, cfg)
+        SweepCell::ratio(policy, reference, *cfg).eval(self.params())
     }
 
-    /// Evaluate a flat sweep grid on the work pool; results come back
-    /// in cell order regardless of thread count.
+    /// Evaluate a flat sweep grid; results come back in cell order
+    /// regardless of thread count or sharing mode.
     pub fn eval_grid(&self, cells: &[SweepCell]) -> Vec<f64> {
-        let p = self.params();
-        pool::par_map(self.threads, cells, move |c| c.eval(p))
+        scenario::eval_cells(self.params(), self.threads, self.share, cells)
+    }
+
+    /// Evaluate a declarative scenario into its table.
+    pub fn eval_scenario(&self, sc: &Scenario) -> Table {
+        sc.table(self.params(), self.threads, self.share)
     }
 
     /// Parallel map over arbitrary independent work items (figures
@@ -180,30 +134,9 @@ impl Ctx {
     }
 }
 
-/// Normalization baseline for MST ratios.
-#[derive(Debug, Clone, Copy)]
-pub enum Reference {
-    /// PS on the same workload (Fig. 3, Fig. 15).
-    Ps,
-    /// Optimal MST: SRPT with *exact* sizes (Figs. 5, 6, 10, 12-14).
-    OptSrpt,
-}
-
-impl Reference {
-    pub fn mst(&self, jobs: &[Job]) -> f64 {
-        match self {
-            Reference::Ps => run_mst("ps", jobs),
-            Reference::OptSrpt => run_mst("srpt", &exact_copy(jobs)),
-        }
-    }
-}
-
-/// The same workload with perfect size information.
-pub fn exact_copy(jobs: &[Job]) -> Vec<Job> {
-    jobs.iter().map(|j| Job { est: j.size, ..*j }).collect()
-}
-
-/// Run one policy over one workload; returns MST.
+/// Run one policy over one workload; returns MST.  Accepts any policy
+/// spec string (`by_name` is a shim over the [`crate::scenario`]
+/// parser).
 pub fn run_mst(policy: &str, jobs: &[Job]) -> f64 {
     let mut s = sched::by_name(policy).unwrap_or_else(|| panic!("unknown policy {policy}"));
     sim::run(s.as_mut(), jobs).mst(jobs)
@@ -215,60 +148,16 @@ pub fn run_slowdowns(policy: &str, jobs: &[Job]) -> Vec<f64> {
     sim::run(s.as_mut(), jobs).slowdowns(jobs)
 }
 
-/// Flat (x-major, policy-minor) ratio grid over `xs`, one row per x.
-/// The shared shape of Figs. 5, 6, 10, 14 and friends.
-fn ratio_rows(
-    ctx: &Ctx,
-    xs: &[f64],
-    policies: &[&'static str],
-    reference: Reference,
-    cfg_of: impl Fn(f64) -> SynthConfig,
-    table: &mut Table,
-) {
-    let mut cells = Vec::with_capacity(xs.len() * policies.len());
-    for &x in xs {
-        let cfg = cfg_of(x);
-        for &p in policies {
-            cells.push(SweepCell::ratio(p, reference, cfg));
-        }
-    }
-    let vals = ctx.eval_grid(&cells);
-    let mut it = vals.into_iter();
-    for &x in xs {
-        let mut row = vec![x];
-        row.extend((&mut it).take(policies.len()));
-        table.push(row);
-    }
-}
-
 // --------------------------------------------------------------------
 // Fig. 3 — MST against PS over the sigma x shape grid, 6 policies.
 // --------------------------------------------------------------------
 pub fn fig3(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["srpte", "srpte+ps", "srpte+las", "fspe", "fspe+ps", "fspe+las"];
-    let mut t = Table::new(
-        "fig3_mst_vs_ps",
-        ["shape", "sigma"].iter().chain(policies.iter()).map(|s| s.to_string()).collect(),
-    );
-    let mut cells = Vec::with_capacity(GRID.len() * GRID.len() * policies.len());
-    for &shape in &GRID {
-        for &sigma in &GRID {
-            let cfg = ctx.cfg().with_shape(shape).with_sigma(sigma);
-            for &p in &policies {
-                cells.push(SweepCell::ratio(p, Reference::Ps, cfg));
-            }
-        }
-    }
-    let vals = ctx.eval_grid(&cells);
-    let mut it = vals.into_iter();
-    for &shape in &GRID {
-        for &sigma in &GRID {
-            let mut row = vec![shape, sigma];
-            row.extend((&mut it).take(policies.len()));
-            t.push(row);
-        }
-    }
-    vec![t]
+    let sc = Scenario::new("fig3_mst_vs_ps", ctx.cfg())
+        .axis("shape", AxisParam::Shape, &GRID)
+        .axis("sigma", AxisParam::Sigma, &GRID)
+        .policies(&["srpte", "srpte+ps", "srpte+las", "fspe", "fspe+ps", "fspe+las"])
+        .vs(Reference::Ps);
+    vec![ctx.eval_scenario(&sc)]
 }
 
 // --------------------------------------------------------------------
@@ -317,32 +206,30 @@ pub fn fig4(ctx: &Ctx) -> Vec<Table> {
 // Fig. 5 — MST / optimal vs shape, all policies (sigma = 0.5).
 // --------------------------------------------------------------------
 pub fn fig5(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["psbs", "srpte", "fspe", "ps", "las", "fifo"];
-    let mut t = Table::new(
-        "fig5_mst_vs_shape",
-        ["shape"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    let base = ctx.cfg();
-    ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |shape| base.with_shape(shape), &mut t);
-    vec![t]
+    let sc = Scenario::new("fig5_mst_vs_shape", ctx.cfg())
+        .axis("shape", AxisParam::Shape, &GRID)
+        .policies(&["psbs", "srpte", "fspe", "ps", "las", "fifo"])
+        .vs(Reference::OptSrpt);
+    vec![ctx.eval_scenario(&sc)]
 }
 
 // --------------------------------------------------------------------
 // Fig. 6 — MST / optimal vs sigma for three heavy-tailed shapes.
 // --------------------------------------------------------------------
 pub fn fig6(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["psbs", "srpte", "fspe", "ps", "las"];
-    let mut out = Vec::new();
-    for &shape in &[0.5, 0.25, 0.125] {
-        let mut t = Table::new(
-            format!("fig6_mst_vs_sigma_shape{shape}"),
-            ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-        );
-        let base = ctx.cfg().with_shape(shape);
-        ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |sigma| base.with_sigma(sigma), &mut t);
-        out.push(t);
-    }
-    out
+    [0.5, 0.25, 0.125]
+        .iter()
+        .map(|&shape| {
+            let sc = Scenario::new(
+                format!("fig6_mst_vs_sigma_shape{shape}"),
+                ctx.cfg().with_shape(shape),
+            )
+            .axis("sigma", AxisParam::Sigma, &GRID)
+            .policies(&["psbs", "srpte", "fspe", "ps", "las"])
+            .vs(Reference::OptSrpt);
+            ctx.eval_scenario(&sc)
+        })
+        .collect()
 }
 
 // --------------------------------------------------------------------
@@ -550,30 +437,21 @@ pub fn fig9(ctx: &Ctx) -> Vec<Table> {
 // Fig. 10 — Pareto job sizes, alpha in {2, 1}.
 // --------------------------------------------------------------------
 pub fn fig10(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["psbs", "srpte", "fspe", "ps", "las"];
-    let mut out = Vec::new();
-    for &alpha in &[2.0, 1.0] {
-        let mut t = Table::new(
-            format!("fig10_pareto_alpha{alpha}"),
-            ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-        );
-        let njobs = ctx.njobs;
-        ratio_rows(
-            ctx,
-            &GRID,
-            &policies,
-            Reference::OptSrpt,
-            |sigma| SynthConfig {
+    [2.0, 1.0]
+        .iter()
+        .map(|&alpha| {
+            let base = SynthConfig {
                 size_dist: SizeDist::Pareto { alpha },
-                sigma,
-                njobs,
+                njobs: ctx.njobs,
                 ..SynthConfig::default()
-            },
-            &mut t,
-        );
-        out.push(t);
-    }
-    out
+            };
+            let sc = Scenario::new(format!("fig10_pareto_alpha{alpha}"), base)
+                .axis("sigma", AxisParam::Sigma, &GRID)
+                .policies(&["psbs", "srpte", "fspe", "ps", "las"])
+                .vs(Reference::OptSrpt);
+            ctx.eval_scenario(&sc)
+        })
+        .collect()
 }
 
 // --------------------------------------------------------------------
@@ -651,100 +529,42 @@ fn trace_fig(name: &str, stats: &traces::TraceStats, ctx: &Ctx, njobs: usize) ->
 // --------------------------------------------------------------------
 pub fn fig14(ctx: &Ctx) -> Vec<Table> {
     let policies = ["psbs", "srpte", "fspe", "ps", "las"];
-    let base = ctx.cfg();
-    let mut load_t = Table::new(
-        "fig14a_load",
-        ["load"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    let loads = [0.5, 0.7, 0.9, 0.95, 0.999];
-    ratio_rows(ctx, &loads, &policies, Reference::OptSrpt, |load| base.with_load(load), &mut load_t);
-
-    let mut ts_t = Table::new(
-        "fig14b_timeshape",
-        ["timeshape"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |tsh| base.with_timeshape(tsh), &mut ts_t);
-    vec![load_t, ts_t]
+    let load = Scenario::new("fig14a_load", ctx.cfg())
+        .axis("load", AxisParam::Load, &[0.5, 0.7, 0.9, 0.95, 0.999])
+        .policies(&policies)
+        .vs(Reference::OptSrpt);
+    let timeshape = Scenario::new("fig14b_timeshape", ctx.cfg())
+        .axis("timeshape", AxisParam::Timeshape, &GRID)
+        .policies(&policies)
+        .vs(Reference::OptSrpt);
+    vec![ctx.eval_scenario(&load), ctx.eval_scenario(&timeshape)]
 }
 
 // --------------------------------------------------------------------
 // Fig. 15 — PSBS vs PS across shape x {load, timeshape, njobs}.
 // --------------------------------------------------------------------
 pub fn fig15(ctx: &Ctx) -> Vec<Table> {
-    let shapes = GRID;
-    let mut out = Vec::new();
-
-    // Each sub-figure is a flat (shape x secondary) grid of single
-    // psbs/PS ratio cells.
-    let mut t = Table::new("fig15a_load", vec!["shape".into(), "load".into(), "psbs_over_ps".into()]);
-    let loads = [0.5, 0.9, 0.999];
-    let mut cells = Vec::new();
-    for &shape in &shapes {
-        for &load in &loads {
-            cells.push(SweepCell::ratio(
-                "psbs",
-                Reference::Ps,
-                ctx.cfg().with_shape(shape).with_load(load),
-            ));
-        }
-    }
-    let vals = ctx.eval_grid(&cells);
-    let mut it = vals.into_iter();
-    for &shape in &shapes {
-        for &load in &loads {
-            t.push(vec![shape, load, it.next().unwrap()]);
-        }
-    }
-    out.push(t);
-
-    let mut t = Table::new(
-        "fig15b_timeshape",
-        vec!["shape".into(), "timeshape".into(), "psbs_over_ps".into()],
-    );
-    let tshapes = [0.125, 1.0, 4.0];
-    let mut cells = Vec::new();
-    for &shape in &shapes {
-        for &tsh in &tshapes {
-            cells.push(SweepCell::ratio(
-                "psbs",
-                Reference::Ps,
-                ctx.cfg().with_shape(shape).with_timeshape(tsh),
-            ));
-        }
-    }
-    let vals = ctx.eval_grid(&cells);
-    let mut it = vals.into_iter();
-    for &shape in &shapes {
-        for &tsh in &tshapes {
-            t.push(vec![shape, tsh, it.next().unwrap()]);
-        }
-    }
-    out.push(t);
-
-    let mut t = Table::new(
-        "fig15c_njobs",
-        vec!["shape".into(), "njobs".into(), "psbs_over_ps".into()],
-    );
-    let njob_grid = [1_000usize, 10_000, 100_000];
-    let mut cells = Vec::new();
-    let mut xs: Vec<(f64, f64)> = Vec::new();
-    for &shape in &shapes {
-        for &njobs in &njob_grid {
-            let njobs = njobs.min(ctx.njobs * 10);
-            cells.push(SweepCell::ratio(
-                "psbs",
-                Reference::Ps,
-                ctx.cfg().with_shape(shape).with_njobs(njobs),
-            ));
-            xs.push((shape, njobs as f64));
-        }
-    }
-    let vals = ctx.eval_grid(&cells);
-    for ((shape, njobs), v) in xs.into_iter().zip(vals) {
-        t.push(vec![shape, njobs, v]);
-    }
-    out.push(t);
-    out
+    // Each sub-figure is a (shape x secondary) grid of single psbs/PS
+    // ratio cells.
+    let sub = |name: &str, label: &str, param: AxisParam, values: &[f64]| {
+        Scenario::new(name, ctx.cfg())
+            .axis("shape", AxisParam::Shape, &GRID)
+            .axis(label, param, values)
+            .policy_as("psbs_over_ps", "psbs")
+            .vs(Reference::Ps)
+    };
+    let njob_grid: Vec<f64> = [1_000usize, 10_000, 100_000]
+        .iter()
+        .map(|&n| n.min(ctx.njobs * 10) as f64)
+        .collect();
+    [
+        sub("fig15a_load", "load", AxisParam::Load, &[0.5, 0.9, 0.999]),
+        sub("fig15b_timeshape", "timeshape", AxisParam::Timeshape, &[0.125, 1.0, 4.0]),
+        sub("fig15c_njobs", "njobs", AxisParam::Njobs, &njob_grid),
+    ]
+    .iter()
+    .map(|sc| ctx.eval_scenario(sc))
+    .collect()
 }
 
 // --------------------------------------------------------------------
@@ -756,13 +576,11 @@ pub fn fig15(ctx: &Ctx) -> Vec<Table> {
 /// error levels on the default heavy tail.  Quantifies why the module
 /// note's interpretation matters.
 pub fn ablation_wv(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["psbs", "psbs-paperlit", "fspe", "fspe+ps"];
-    let mut t = Table::new(
-        "ext_ablation_wv",
-        ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    let base = ctx.cfg();
-    ratio_rows(ctx, &GRID, &policies, Reference::OptSrpt, |sigma| base.with_sigma(sigma), &mut t);
+    let sc = Scenario::new("ext_ablation_wv", ctx.cfg())
+        .axis("sigma", AxisParam::Sigma, &GRID)
+        .policies(&["psbs", "psbs-paperlit", "fspe", "fspe+ps"])
+        .vs(Reference::OptSrpt);
+    let t = ctx.eval_scenario(&sc);
 
     // The real cost of the literal pseudocode is unbounded state: a job
     // that goes late never leaves the virtual system (its weight stays
@@ -967,6 +785,58 @@ mod tests {
             let par = table_bits(&fig6(&ctx));
             assert_eq!(serial, par, "fig6 output diverged at {threads} threads");
         }
+    }
+
+    /// Acceptance check for the shared-workload planner: figure output
+    /// with shared workloads/references (`share = true`, the default)
+    /// is bit-identical to the pre-refactor per-cell path
+    /// (`share = false`), across thread counts, for the three figure
+    /// shapes — plain ratio grids (Fig. 6), pooled populations
+    /// (Fig. 4) and per-rep dual-policy class means (Fig. 9).
+    #[test]
+    fn planner_reproduces_per_cell_figures_bitwise() {
+        let run = |share: bool, threads: usize, f: u64| {
+            let ctx = Ctx {
+                reps: 2,
+                njobs: 180,
+                seed: 13,
+                threads,
+                share,
+                ..Default::default()
+            };
+            table_bits(&by_number(&ctx, f).unwrap())
+        };
+        for f in [4u64, 6, 9] {
+            let legacy = run(false, 1, f);
+            for threads in [1usize, 3] {
+                assert_eq!(
+                    legacy,
+                    run(true, threads, f),
+                    "fig {f}: planner output diverged from the per-cell path at {threads} threads"
+                );
+            }
+        }
+    }
+
+    /// Converge mode replays the per-cell stopping rule exactly even
+    /// though the planner splits work at repetition level.
+    #[test]
+    fn planner_converge_mode_is_bit_identical() {
+        let run = |share: bool, threads: usize| {
+            let ctx = Ctx {
+                reps: 2,
+                njobs: 150,
+                seed: 29,
+                threads,
+                share,
+                converge: true,
+                ..Default::default()
+            };
+            table_bits(&fig5(&ctx))
+        };
+        let legacy = run(false, 1);
+        assert_eq!(legacy, run(true, 1));
+        assert_eq!(legacy, run(true, 4));
     }
 
     /// The pooled-population path (per-(policy, rep) work items) is

@@ -32,6 +32,7 @@ pub mod estimate;
 pub mod figures;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod stats;

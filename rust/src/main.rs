@@ -17,6 +17,7 @@
 use psbs::coordinator::{Service, ServiceConfig};
 use psbs::figures::{self, Ctx};
 use psbs::runtime::Runtime;
+use psbs::scenario::{AxisParam, PolicySpec, Reference, Scenario};
 use psbs::sched;
 use psbs::sim::{self, Job};
 use psbs::util::cli::Args;
@@ -59,8 +60,11 @@ fn main() {
 const USAGE: &str = "\
 usage: psbs <subcommand> [options]
   simulate   --policy P --shape S --sigma E --load L --njobs N --seed K [--weights-beta B] [--pareto ALPHA] [--timeshape T]
-  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge] [--threads T]
-             (--threads defaults to the machine's available parallelism; 1 = exact serial path — results are bit-identical either way)
+  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge] [--threads T] [--no-share]
+             [--policies P1,P2,... [--axis shape|sigma|load|timeshape|njobs|beta] [--reference opt|ps|none]]
+             (--threads defaults to the machine's available parallelism; 1 = exact serial path — results are bit-identical either
+              way, as is the shared-workload planner vs --no-share; --policies sweeps a custom policy set — composed specs like
+              cluster(k=4,dispatch=leastwork,inner=psbs) work anywhere a bare policy name does)
   replay     --trace FILE --format swim|squid [--policy P] [--sigma E] [--load L] [--seed K]
   serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
   gen-trace  --stats facebook|ircache --out FILE [--seed K]
@@ -126,6 +130,14 @@ fn cmd_simulate(a: &Args) -> Result<(), String> {
 fn cmd_sweep(a: &Args) -> Result<(), String> {
     let fig = a.get_opt("fig").map(|f| f.parse::<u64>().map_err(|_| "--fig: integer")).transpose()?;
     let svg = a.get_bool("svg")?;
+    let policies = a.get_list("policies");
+    let axis_opt = a.get_opt("axis");
+    let reference_opt = a.get_opt("reference");
+    if policies.is_none() && (axis_opt.is_some() || reference_opt.is_some()) {
+        return Err("--axis/--reference only apply to a --policies sweep".into());
+    }
+    let axis = axis_opt.unwrap_or_else(|| "sigma".to_string());
+    let reference = reference_opt.unwrap_or_else(|| "opt".to_string());
     let ctx = Ctx {
         reps: a.get_u64("reps", 5)?,
         njobs: a.get_u64("njobs", 10_000)? as usize,
@@ -136,6 +148,7 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         threads: a
             .get_u64("threads", psbs::util::pool::available_threads() as u64)?
             .max(1) as usize,
+        share: !a.get_bool("no-share")?,
     };
     a.check_unknown()?;
     if ctx.runtime.is_some() {
@@ -143,7 +156,43 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
     } else {
         println!("# AOT artifacts not loaded; using pure-rust analytics fallback");
     }
-    println!("# sweep executor: {} worker thread(s)", ctx.threads);
+    println!(
+        "# sweep executor: {} worker thread(s), {} workloads",
+        ctx.threads,
+        if ctx.share { "planner-shared" } else { "per-cell" }
+    );
+
+    // Custom scenario sweep: a user-declared policy set (composed
+    // specs welcome) over one grid axis, through the same planner as
+    // the paper figures.
+    if let Some(policies) = policies {
+        let mut sc = Scenario::new("custom_sweep", SynthConfig::default().with_njobs(ctx.njobs));
+        let param = AxisParam::parse(&axis).ok_or_else(|| format!("unknown --axis {axis}"))?;
+        // Each axis gets a grid in its own natural units (the fractional
+        // shape/sigma GRID would be nonsense for njobs or load).
+        let values: Vec<f64> = match param {
+            AxisParam::Shape | AxisParam::Sigma | AxisParam::Timeshape => figures::GRID.to_vec(),
+            AxisParam::Load => vec![0.5, 0.7, 0.9, 0.95, 0.999],
+            AxisParam::Njobs => vec![1_000.0, 10_000.0, 100_000.0],
+            AxisParam::Beta => vec![0.0, 0.5, 1.0, 2.0],
+        };
+        sc = sc.axis(axis.clone(), param, &values);
+        for p in &policies {
+            let spec = PolicySpec::parse(p)?;
+            sc = sc.policy_as(spec.to_string(), spec);
+        }
+        match reference.as_str() {
+            "opt" => sc = sc.vs(Reference::OptSrpt),
+            "ps" => sc = sc.vs(Reference::Ps),
+            "none" => {}
+            other => return Err(format!("unknown --reference {other} (opt|ps|none)")),
+        }
+        let t0 = std::time::Instant::now();
+        let t = ctx.eval_scenario(&sc);
+        emit_table(&t, &ctx, svg)?;
+        println!("# custom sweep done in {:.1?}\n", t0.elapsed());
+        return Ok(());
+    }
 
     let figs: Vec<u64> = match fig {
         Some(f) => vec![f],
@@ -153,17 +202,21 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         let t0 = std::time::Instant::now();
         let tables = figures::by_number(&ctx, f).ok_or_else(|| format!("no figure {f}"))?;
         for t in &tables {
-            println!("{}", t.render());
-            let path = t.write_csv(&ctx.out_dir).map_err(|e| e.to_string())?;
-            println!("wrote {path}");
-            if svg {
-                let opts = figures::plot::PlotOpts::default();
-                let path = figures::plot::write_svg(t, &ctx.out_dir, &opts)
-                    .map_err(|e| e.to_string())?;
-                println!("wrote {path}");
-            }
+            emit_table(t, &ctx, svg)?;
         }
         println!("# fig {f} done in {:.1?}\n", t0.elapsed());
+    }
+    Ok(())
+}
+
+fn emit_table(t: &figures::Table, ctx: &Ctx, svg: bool) -> Result<(), String> {
+    println!("{}", t.render());
+    let path = t.write_csv(&ctx.out_dir).map_err(|e| e.to_string())?;
+    println!("wrote {path}");
+    if svg {
+        let opts = figures::plot::PlotOpts::default();
+        let path = figures::plot::write_svg(t, &ctx.out_dir, &opts).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -211,7 +264,8 @@ fn cmd_serve(a: &Args) -> Result<(), String> {
     a.check_unknown()?;
 
     use psbs::workload::dists::{Dist, LogNormal, Weibull};
-    let svc = Service::start(ServiceConfig { policy: policy.clone(), speed });
+    let spec = PolicySpec::parse(&policy)?;
+    let svc = Service::start(ServiceConfig { policy: spec, speed });
     let size_dist = Weibull::with_mean(shape, speed * 0.01); // ~10ms mean service
     let err = LogNormal::error_model(sigma);
     let mut rng = Rng::new(seed);

@@ -1,0 +1,344 @@
+//! Declarative scenario layer: typed policy specs, scenario
+//! descriptions, and the shared-workload sweep planner.
+//!
+//! The paper's evaluation (§6–7) — and everything the ROADMAP wants to
+//! grow beyond it — is a grid of *scenarios*: policy x workload shape x
+//! estimation error x weights, evaluated over seeded repetitions and
+//! normalized against a reference discipline.  This module makes that
+//! structure first-class:
+//!
+//! * [`PolicySpec`] (`spec`) — typed, parse/display-able policy
+//!   specifications composing parameterized deployments
+//!   (`cluster(k=8,dispatch=leastwork,inner=psbs)`,
+//!   `est(model=sampling,fraction=0.05,inner=psbs)`,
+//!   `mlfq(levels=12,q0=0.02)`) over the base disciplines.
+//!   [`crate::sched::by_name`] is a compatibility shim over
+//!   [`PolicySpec::parse`].
+//! * [`Scenario`] — a declarative sweep description: base workload
+//!   config x grid axes x policy set x optional [`Reference`]; one
+//!   generic evaluator ([`Scenario::table`]) turns it into a figure
+//!   table, so each `figures::figN` collapses to a ~10-line
+//!   declaration.
+//! * the **planner** (`planner`) — evaluates a flat [`SweepCell`] grid
+//!   by grouping cells on their workload config, synthesizing each
+//!   `(config, seed)` workload **once**, running each [`Reference`]
+//!   **once per seed**, and fanning the per-policy simulations out
+//!   through [`crate::util::pool`] with cost-aware largest-first
+//!   ordering (an fsp-naive cell costs ~100x a psbs cell) and a
+//!   repetition-level work split in `--converge` mode.
+//!
+//! **Bit-identity invariant.** Sharing is numerically a no-op: the same
+//! seed produces the same workload, hence the same reference MST and
+//! the same per-policy MST, and repetition means accumulate in the same
+//! order — so planner output is bit-identical to the per-cell path of
+//! PR 1 (and to the serial path, for every thread count).
+//! `figures::tests` pins this for Figs. 4/6/9 across `share` x
+//! `threads`.
+
+pub mod planner;
+pub mod spec;
+
+pub use planner::{eval_cells, group_cells, mst_of, mst_of_seeded, slowdowns_of};
+pub use spec::{BasePolicy, Estimated, EstimatorSpec, PolicySpec};
+
+use crate::figures::tables::Table;
+use crate::sim::Job;
+use crate::workload::SynthConfig;
+
+/// Scalar sweep parameters, detached from `figures::Ctx` so worker
+/// threads never touch the (non-`Sync`) runtime handle.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepParams {
+    pub reps: u64,
+    pub seed: u64,
+    pub converge: bool,
+}
+
+/// Normalization baseline for MST ratios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reference {
+    /// PS on the same workload (Fig. 3, Fig. 15).
+    Ps,
+    /// Optimal MST: SRPT with *exact* sizes (Figs. 5, 6, 10, 12-14).
+    OptSrpt,
+}
+
+impl Reference {
+    pub fn mst(&self, jobs: &[Job]) -> f64 {
+        match self {
+            Reference::Ps => mst_of(&PolicySpec::Base(BasePolicy::Ps), jobs),
+            Reference::OptSrpt => {
+                mst_of(&PolicySpec::Base(BasePolicy::Srpt), &exact_copy(jobs))
+            }
+        }
+    }
+}
+
+/// The same workload with perfect size information.
+pub fn exact_copy(jobs: &[Job]) -> Vec<Job> {
+    jobs.iter().map(|j| Job { est: j.size, ..*j }).collect()
+}
+
+/// One cell of a sweep grid: one (policy, workload-config) data point,
+/// evaluated over seeded repetitions.  Figures and the CLI build flat
+/// `Vec<SweepCell>` grids and hand them to [`eval_cells`] (shared
+/// planner or the per-cell legacy path).
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub policy: PolicySpec,
+    pub cfg: SynthConfig,
+    /// `Some(r)` => mean of per-seed MST ratios against `r`;
+    /// `None` => mean raw MST.
+    pub reference: Option<Reference>,
+}
+
+impl SweepCell {
+    /// A ratio cell (the common case).
+    pub fn ratio(
+        policy: impl Into<PolicySpec>,
+        reference: Reference,
+        cfg: SynthConfig,
+    ) -> SweepCell {
+        SweepCell { policy: policy.into(), cfg, reference: Some(reference) }
+    }
+
+    /// A raw-MST cell.
+    pub fn mst(policy: impl Into<PolicySpec>, cfg: SynthConfig) -> SweepCell {
+        SweepCell { policy: policy.into(), cfg, reference: None }
+    }
+
+    /// Evaluate this cell alone: a pure function of (cell, params),
+    /// safe to run on any worker.  This is the legacy per-cell path the
+    /// planner is checked against — it re-synthesizes the workload and
+    /// re-runs the reference for every cell.
+    pub fn eval(&self, p: SweepParams) -> f64 {
+        let mut reps = crate::stats::Repetitions::default();
+        let max = if p.converge { p.reps * 10 } else { p.reps };
+        for r in 0..max {
+            let rep_seed = p.seed.wrapping_add(r * 7919);
+            let jobs = crate::workload::synthesize(&self.cfg, rep_seed);
+            let a = mst_of_seeded(&self.policy, &jobs, rep_seed);
+            reps.push(match self.reference {
+                None => a,
+                Some(reference) => a / reference.mst(&jobs),
+            });
+            if r + 1 >= p.reps && (!p.converge || reps.converged(p.reps as usize)) {
+                break;
+            }
+        }
+        reps.mean()
+    }
+}
+
+/// Which [`SynthConfig`] knob a grid axis sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AxisParam {
+    Shape,
+    Sigma,
+    Load,
+    Timeshape,
+    Njobs,
+    Beta,
+}
+
+impl AxisParam {
+    pub fn apply(self, cfg: SynthConfig, v: f64) -> SynthConfig {
+        match self {
+            AxisParam::Shape => cfg.with_shape(v),
+            AxisParam::Sigma => cfg.with_sigma(v),
+            AxisParam::Load => cfg.with_load(v),
+            AxisParam::Timeshape => cfg.with_timeshape(v),
+            AxisParam::Njobs => cfg.with_njobs(v as usize),
+            AxisParam::Beta => cfg.with_beta(v),
+        }
+    }
+
+    /// CLI name (the `--axis` argument of `psbs sweep`).
+    pub fn parse(s: &str) -> Option<AxisParam> {
+        Some(match s {
+            "shape" => AxisParam::Shape,
+            "sigma" => AxisParam::Sigma,
+            "load" => AxisParam::Load,
+            "timeshape" => AxisParam::Timeshape,
+            "njobs" => AxisParam::Njobs,
+            "beta" => AxisParam::Beta,
+            _ => return None,
+        })
+    }
+}
+
+/// One grid axis: a labelled list of values for one config knob.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub label: String,
+    pub param: AxisParam,
+    pub values: Vec<f64>,
+}
+
+/// A declarative sweep scenario: `base` workload config, grid `axes`
+/// (row-major cartesian product), a labelled `policies` set, and an
+/// optional normalization [`Reference`].  [`Scenario::table`] is the
+/// one generic executor every grid figure now goes through.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub base: SynthConfig,
+    pub axes: Vec<Axis>,
+    /// (column label, spec) — the label is usually `spec.to_string()`,
+    /// but figures may override it (e.g. Fig. 15's `psbs_over_ps`).
+    pub policies: Vec<(String, PolicySpec)>,
+    pub reference: Option<Reference>,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, base: SynthConfig) -> Scenario {
+        Scenario {
+            name: name.into(),
+            base,
+            axes: Vec::new(),
+            policies: Vec::new(),
+            reference: None,
+        }
+    }
+
+    /// Add a grid axis (outermost first).
+    pub fn axis(mut self, label: impl Into<String>, param: AxisParam, values: &[f64]) -> Scenario {
+        self.axes.push(Axis { label: label.into(), param, values: values.to_vec() });
+        self
+    }
+
+    /// Add policies labelled by their canonical spec strings.
+    pub fn policies(mut self, specs: &[&str]) -> Scenario {
+        for s in specs {
+            self.policies.push((s.to_string(), PolicySpec::from(*s)));
+        }
+        self
+    }
+
+    /// Add one policy under an explicit column label.
+    pub fn policy_as(mut self, label: impl Into<String>, spec: impl Into<PolicySpec>) -> Scenario {
+        self.policies.push((label.into(), spec.into()));
+        self
+    }
+
+    /// Normalize against `r` (omit for raw MST columns).
+    pub fn vs(mut self, r: Reference) -> Scenario {
+        self.reference = Some(r);
+        self
+    }
+
+    /// The flat cell grid (grid-point-major, policy-minor — the cell
+    /// order every pre-refactor figure used).
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let points = self.grid_points();
+        let mut cells = Vec::with_capacity(points.len() * self.policies.len());
+        for point in &points {
+            let mut cfg = self.base;
+            for (axis, &v) in self.axes.iter().zip(point) {
+                cfg = axis.param.apply(cfg, v);
+            }
+            for (_, spec) in &self.policies {
+                cells.push(SweepCell { policy: spec.clone(), cfg, reference: self.reference });
+            }
+        }
+        cells
+    }
+
+    /// Row-major cartesian product of the axis values.
+    fn grid_points(&self) -> Vec<Vec<f64>> {
+        let mut points: Vec<Vec<f64>> = vec![Vec::new()];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(points.len() * axis.values.len());
+            for p in &points {
+                for &v in &axis.values {
+                    let mut q = p.clone();
+                    q.push(v);
+                    next.push(q);
+                }
+            }
+            points = next;
+        }
+        points
+    }
+
+    /// Evaluate the scenario into a table: one row per grid point
+    /// (axis value columns first), one column per policy.
+    pub fn table(&self, p: SweepParams, threads: usize, share: bool) -> Table {
+        let header: Vec<String> = self
+            .axes
+            .iter()
+            .map(|a| a.label.clone())
+            .chain(self.policies.iter().map(|(l, _)| l.clone()))
+            .collect();
+        let mut t = Table::new(self.name.clone(), header);
+        let cells = self.cells();
+        let vals = eval_cells(p, threads, share, &cells);
+        let mut it = vals.into_iter();
+        for point in self.grid_points() {
+            let mut row = point;
+            row.extend((&mut it).take(self.policies.len()));
+            t.push(row);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::GRID;
+
+    fn params() -> SweepParams {
+        SweepParams { reps: 2, seed: 11, converge: false }
+    }
+
+    #[test]
+    fn scenario_table_shape_matches_declaration() {
+        let sc = Scenario::new("t", SynthConfig::default().with_njobs(150))
+            .axis("shape", AxisParam::Shape, &[0.5, 2.0])
+            .axis("sigma", AxisParam::Sigma, &[0.25, 1.0, 4.0])
+            .policies(&["psbs", "ps"])
+            .vs(Reference::OptSrpt);
+        let t = sc.table(params(), 2, true);
+        assert_eq!(t.header, vec!["shape", "sigma", "psbs", "ps"]);
+        assert_eq!(t.rows.len(), 6);
+        // Row-major: shape outer, sigma inner.
+        assert_eq!((t.rows[0][0], t.rows[0][1]), (0.5, 0.25));
+        assert_eq!((t.rows[4][0], t.rows[4][1]), (2.0, 1.0));
+        for row in &t.rows {
+            assert!(row[2..].iter().all(|v| v.is_finite() && *v > 0.0));
+        }
+    }
+
+    #[test]
+    fn shared_planner_is_bit_identical_to_per_cell_path() {
+        let sc = Scenario::new("t", SynthConfig::default().with_njobs(200))
+            .axis("sigma", AxisParam::Sigma, &GRID[..3])
+            .policies(&["psbs", "srpte", "ps"])
+            .vs(Reference::OptSrpt);
+        let cells = sc.cells();
+        for converge in [false, true] {
+            let p = SweepParams { reps: 2, seed: 7, converge };
+            let legacy = eval_cells(p, 1, false, &cells);
+            for threads in [1usize, 3] {
+                let shared = eval_cells(p, threads, true, &cells);
+                let lb: Vec<u64> = legacy.iter().map(|v| v.to_bits()).collect();
+                let sb: Vec<u64> = shared.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(lb, sb, "converge={converge} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn composed_cluster_cells_are_sweepable() {
+        let sc = Scenario::new("t", SynthConfig::default().with_njobs(150).with_load(1.8))
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["cluster(k=2,dispatch=leastwork,inner=psbs)", "ps"])
+            .vs(Reference::Ps);
+        let t = sc.table(params(), 1, true);
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.rows[0][1].is_finite());
+        // PS against itself is exactly 1 on every seed.
+        assert!((t.rows[0][2] - 1.0).abs() < 1e-12);
+    }
+}

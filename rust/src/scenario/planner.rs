@@ -1,0 +1,284 @@
+//! The shared-workload sweep planner.
+//!
+//! [`eval_cells`] is the single evaluation engine behind
+//! [`super::Scenario::table`], `figures::Ctx::eval_grid` and the
+//! `psbs sweep --policies` CLI.  Given a flat [`SweepCell`] grid it:
+//!
+//! 1. **groups** cells by their [`SynthConfig`] (bitwise key — two
+//!    cells share a group iff they would synthesize identical
+//!    workloads);
+//! 2. **splits at repetition level**: the parallel work item is
+//!    `(group, rep)`, not a whole cell, so even a single expensive
+//!    cell's repetitions spread across workers (the `--converge` mode
+//!    requirement — late repetitions are scheduled one wave at a time
+//!    as cells individually fail their convergence test);
+//! 3. inside each item, **synthesizes the workload once** and runs
+//!    each required [`Reference`] **once**, then simulates every
+//!    not-yet-converged policy of the group against them — the
+//!    pre-refactor per-cell path repeated both per policy;
+//! 4. orders each wave's items **largest-first** by the group's summed
+//!    [`PolicySpec::cost_weight`] before handing them to
+//!    [`pool::par_map`]'s self-balancing work queue, so a stray
+//!    fsp-naive group cannot serialize the sweep's tail (LPT
+//!    heuristic; results are scattered back to cell order, which the
+//!    pool already guarantees per item).
+//!
+//! Sharing is numerically a no-op (same seed, same workload, same
+//! reference MST, same accumulation order), so output is bit-identical
+//! to [`SweepCell::eval`] per cell — the `share` flag exists precisely
+//! so tests can assert that.
+
+use super::{PolicySpec, Reference, SweepCell, SweepParams};
+use crate::sim::{self, Job};
+use crate::stats::Repetitions;
+use crate::util::pool;
+use crate::workload::{SizeDist, SynthConfig};
+use std::collections::HashMap;
+
+/// MST of one policy spec over one workload (seed 0 build — base
+/// disciplines ignore the seed entirely).
+pub fn mst_of(spec: &PolicySpec, jobs: &[Job]) -> f64 {
+    mst_of_seeded(spec, jobs, 0)
+}
+
+/// MST with an explicit build seed (cluster random dispatch, estimator
+/// noise); the planner passes the cell's repetition seed.
+pub fn mst_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> f64 {
+    let mut s = spec.build_seeded(seed);
+    sim::run(s.as_mut(), jobs).mst(jobs)
+}
+
+/// Per-job slowdowns of one policy spec over one workload.
+pub fn slowdowns_of(spec: &PolicySpec, jobs: &[Job]) -> Vec<f64> {
+    let mut s = spec.build_seeded(0);
+    sim::run(s.as_mut(), jobs).slowdowns(jobs)
+}
+
+/// Bitwise grouping key: cells share a group iff `synthesize` would
+/// produce identical workloads for them at every seed.
+fn cfg_key(c: &SynthConfig) -> [u64; 7] {
+    let (tag, param) = match c.size_dist {
+        SizeDist::Weibull { shape } => (0u64, shape.to_bits()),
+        SizeDist::Pareto { alpha } => (1u64, alpha.to_bits()),
+    };
+    [
+        tag,
+        param,
+        c.sigma.to_bits(),
+        c.timeshape.to_bits(),
+        c.load.to_bits(),
+        c.njobs as u64,
+        c.beta.to_bits(),
+    ]
+}
+
+/// Group cell indices by workload config, in first-appearance order.
+/// Exposed for tests: the "synthesize once per (cfg, seed)" guarantee
+/// is structural — `eval_group_rep` synthesizes once per group item.
+pub fn group_cells(cells: &[SweepCell]) -> Vec<(SynthConfig, Vec<usize>)> {
+    let mut index: HashMap<[u64; 7], usize> = HashMap::new();
+    let mut groups: Vec<(SynthConfig, Vec<usize>)> = Vec::new();
+    for (ci, cell) in cells.iter().enumerate() {
+        let gi = *index.entry(cfg_key(&cell.cfg)).or_insert_with(|| {
+            groups.push((cell.cfg, Vec::new()));
+            groups.len() - 1
+        });
+        groups[gi].1.push(ci);
+    }
+    groups
+}
+
+/// One shared work item: synthesize the group's workload for rep `r`,
+/// run each needed reference once, simulate every active policy.
+/// Returns one value per entry of `active`, in order.
+fn eval_group_rep(
+    p: SweepParams,
+    cfg: &SynthConfig,
+    active: &[usize],
+    cells: &[SweepCell],
+    r: u64,
+) -> Vec<f64> {
+    let rep_seed = p.seed.wrapping_add(r * 7919);
+    let jobs = crate::workload::synthesize(cfg, rep_seed);
+    let mut ps_mst: Option<f64> = None;
+    let mut opt_mst: Option<f64> = None;
+    active
+        .iter()
+        .map(|&ci| {
+            let cell = &cells[ci];
+            let a = mst_of_seeded(&cell.policy, &jobs, rep_seed);
+            match cell.reference {
+                None => a,
+                Some(Reference::Ps) => {
+                    a / *ps_mst.get_or_insert_with(|| Reference::Ps.mst(&jobs))
+                }
+                Some(Reference::OptSrpt) => {
+                    a / *opt_mst.get_or_insert_with(|| Reference::OptSrpt.mst(&jobs))
+                }
+            }
+        })
+        .collect()
+}
+
+/// Evaluate a sweep grid; results in cell order.
+///
+/// * `share = true` — the planner: shared workloads/references,
+///   repetition-level parallel split, cost-aware ordering.
+/// * `share = false` — the legacy per-cell path of PR 1 (one work item
+///   per cell, each re-synthesizing its own workloads); kept as the
+///   reference the bit-identity tests compare against.
+pub fn eval_cells(p: SweepParams, threads: usize, share: bool, cells: &[SweepCell]) -> Vec<f64> {
+    if !share {
+        return pool::par_map(threads, cells, move |c| c.eval(p));
+    }
+
+    let groups = group_cells(cells);
+    let mut accs: Vec<Repetitions> = vec![Repetitions::default(); cells.len()];
+    let mut stopped: Vec<bool> = vec![false; cells.len()];
+
+    let max = if p.converge { p.reps * 10 } else { p.reps };
+    let mut r0: u64 = 0;
+    while r0 < max {
+        // First wave: the full `--reps` budget at once (every cell
+        // needs at least that many).  Later waves (converge mode only):
+        // one repetition at a time, only for still-unconverged cells.
+        let span = if r0 == 0 { p.reps.min(max) } else { 1 };
+
+        // Active cells per group are fixed for the wave: the stop rule
+        // cannot fire before rep `reps - 1`, the last rep of wave one.
+        let active: Vec<Vec<usize>> = groups
+            .iter()
+            .map(|(_, cs)| cs.iter().copied().filter(|&ci| !stopped[ci]).collect())
+            .collect();
+        let mut items: Vec<(usize, u64)> = Vec::new();
+        for (gi, act) in active.iter().enumerate() {
+            if act.is_empty() {
+                continue;
+            }
+            for r in r0..r0 + span {
+                items.push((gi, r));
+            }
+        }
+        if items.is_empty() {
+            break;
+        }
+
+        // Largest-first (LPT) ordering by summed policy cost; stable on
+        // the original order so equal-cost waves keep a deterministic
+        // layout.  Results are reassembled per item, so ordering only
+        // affects wall-clock, never values.
+        let group_cost: Vec<f64> = active
+            .iter()
+            .map(|act| act.iter().map(|&ci| cells[ci].policy.cost_weight()).sum::<f64>() + 1.0)
+            .collect();
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by(|&a, &b| {
+            group_cost[items[b].0]
+                .partial_cmp(&group_cost[items[a].0])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let ordered: Vec<(usize, u64)> = order.iter().map(|&i| items[i]).collect();
+
+        let results = pool::par_map(threads, &ordered, |&(gi, r)| {
+            eval_group_rep(p, &groups[gi].0, &active[gi], cells, r)
+        });
+        let mut by_item: HashMap<(usize, u64), Vec<f64>> = HashMap::with_capacity(ordered.len());
+        for (key, vals) in ordered.into_iter().zip(results) {
+            by_item.insert(key, vals);
+        }
+
+        // Sequential replay in repetition order: each cell accumulates
+        // exactly the values (and applies exactly the stop rule) the
+        // serial per-cell loop would.
+        for r in r0..r0 + span {
+            for (gi, act) in active.iter().enumerate() {
+                if act.is_empty() {
+                    continue;
+                }
+                let vals = by_item.remove(&(gi, r)).expect("planner item missing");
+                for (&ci, v) in act.iter().zip(vals) {
+                    if stopped[ci] {
+                        continue;
+                    }
+                    accs[ci].push(v);
+                    if r + 1 >= p.reps && (!p.converge || accs[ci].converged(p.reps as usize)) {
+                        stopped[ci] = true;
+                    }
+                }
+            }
+        }
+        r0 += span;
+        if stopped.iter().all(|&s| s) {
+            break;
+        }
+    }
+
+    accs.iter().map(|a| a.mean()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::GRID;
+
+    #[test]
+    fn grouping_merges_identical_configs_only() {
+        let base = SynthConfig::default().with_njobs(100);
+        let cells = vec![
+            SweepCell::ratio("psbs", Reference::OptSrpt, base),
+            SweepCell::ratio("srpte", Reference::OptSrpt, base),
+            SweepCell::ratio("ps", Reference::Ps, base),
+            SweepCell::ratio("psbs", Reference::OptSrpt, base.with_sigma(2.0)),
+        ];
+        let groups = group_cells(&cells);
+        assert_eq!(groups.len(), 2, "three same-config cells share one group");
+        assert_eq!(groups[0].1, vec![0, 1, 2]);
+        assert_eq!(groups[1].1, vec![3]);
+    }
+
+    #[test]
+    fn planner_matches_per_cell_eval_bitwise() {
+        let base = SynthConfig::default().with_njobs(180);
+        let mut cells = Vec::new();
+        for &sigma in &GRID[..3] {
+            for policy in ["psbs", "srpte", "ps"] {
+                cells.push(SweepCell::ratio(policy, Reference::OptSrpt, base.with_sigma(sigma)));
+            }
+            cells.push(SweepCell::mst("las", base.with_sigma(sigma)));
+        }
+        let p = SweepParams { reps: 3, seed: 23, converge: false };
+        let per_cell: Vec<u64> =
+            eval_cells(p, 1, false, &cells).into_iter().map(f64::to_bits).collect();
+        for threads in [1usize, 2, 4] {
+            let shared: Vec<u64> =
+                eval_cells(p, threads, true, &cells).into_iter().map(f64::to_bits).collect();
+            assert_eq!(per_cell, shared, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn converge_mode_replays_the_serial_stop_rule() {
+        // Heavy-tailed ratios at 2 base reps rarely converge instantly,
+        // so the wave loop actually exercises continuation waves.
+        let base = SynthConfig::default().with_njobs(150);
+        let cells = vec![
+            SweepCell::ratio("psbs", Reference::OptSrpt, base),
+            SweepCell::ratio("las", Reference::OptSrpt, base.with_sigma(2.0)),
+        ];
+        let p = SweepParams { reps: 2, seed: 3, converge: true };
+        let per_cell: Vec<u64> =
+            eval_cells(p, 1, false, &cells).into_iter().map(f64::to_bits).collect();
+        let shared: Vec<u64> =
+            eval_cells(p, 3, true, &cells).into_iter().map(f64::to_bits).collect();
+        assert_eq!(per_cell, shared);
+    }
+
+    #[test]
+    fn empty_grid_and_zero_reps() {
+        let p = SweepParams { reps: 0, seed: 1, converge: false };
+        assert!(eval_cells(p, 2, true, &[]).is_empty());
+        let cells = [SweepCell::mst("ps", SynthConfig::default().with_njobs(50))];
+        assert_eq!(eval_cells(p, 2, true, &cells), vec![0.0]);
+    }
+}

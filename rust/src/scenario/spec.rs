@@ -1,0 +1,672 @@
+//! Typed policy specifications.
+//!
+//! [`PolicySpec`] is the parsed, composable form of the policy strings
+//! the CLI, figure harness and coordinator accept.  Every bare name in
+//! [`crate::sched::ALL_POLICIES`] is a [`BasePolicy`]; on top of those
+//! the grammar composes parameterized deployments:
+//!
+//! ```text
+//! psbs                                          bare discipline
+//! mlfq(levels=12,q0=0.02)                       parameterized MLFQ
+//! cluster(k=8,dispatch=leastwork,inner=psbs)    k-server dispatcher
+//! est(model=sampling,fraction=0.05,sigma0=0.5,inner=psbs)
+//!                                               estimator-wrapped policy
+//! cluster(k=4,dispatch=random,inner=est(model=lognormal,sigma=2,inner=srpte))
+//!                                               arbitrary nesting
+//! ```
+//!
+//! Arguments are `key=value`, comma-separated; `inner` may itself be a
+//! composed spec (the splitter respects parenthesis depth).  `Display`
+//! renders the canonical form and `parse` inverts it exactly
+//! (round-trip property-tested in this module and in `figures`).
+//!
+//! [`crate::sched::by_name`] is a thin compatibility shim over
+//! [`PolicySpec::parse`], so every call site that accepted a bare name
+//! (simulate/replay/serve CLI, `Service`, `Cluster`, benches) now
+//! accepts composed specs with no further change.
+
+use crate::coordinator::{Cluster, Dispatch};
+use crate::estimate::{self, Estimator};
+use crate::sched;
+use crate::sim::{Completion, Job, Scheduler};
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// The sixteen single-server disciplines of the zoo, one variant per
+/// name in [`crate::sched::ALL_POLICIES`] (aliases like `srpt`/`srpte`
+/// stay distinct variants so parse/display round-trips exactly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BasePolicy {
+    Fifo,
+    Ps,
+    Dps,
+    Las,
+    Mlfq,
+    Srpt,
+    Srpte,
+    SrptePs,
+    SrpteLas,
+    Fsp,
+    Fspe,
+    FspePs,
+    FspeLas,
+    Psbs,
+    PsbsPaperlit,
+    FspNaive,
+}
+
+impl BasePolicy {
+    /// The canonical CLI name (exactly the `ALL_POLICIES` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            BasePolicy::Fifo => "fifo",
+            BasePolicy::Ps => "ps",
+            BasePolicy::Dps => "dps",
+            BasePolicy::Las => "las",
+            BasePolicy::Mlfq => "mlfq",
+            BasePolicy::Srpt => "srpt",
+            BasePolicy::Srpte => "srpte",
+            BasePolicy::SrptePs => "srpte+ps",
+            BasePolicy::SrpteLas => "srpte+las",
+            BasePolicy::Fsp => "fsp",
+            BasePolicy::Fspe => "fspe",
+            BasePolicy::FspePs => "fspe+ps",
+            BasePolicy::FspeLas => "fspe+las",
+            BasePolicy::Psbs => "psbs",
+            BasePolicy::PsbsPaperlit => "psbs-paperlit",
+            BasePolicy::FspNaive => "fsp-naive",
+        }
+    }
+
+    /// Inverse of [`BasePolicy::name`].
+    pub fn from_name(name: &str) -> Option<BasePolicy> {
+        Some(match name {
+            "fifo" => BasePolicy::Fifo,
+            "ps" => BasePolicy::Ps,
+            "dps" => BasePolicy::Dps,
+            "las" => BasePolicy::Las,
+            "mlfq" => BasePolicy::Mlfq,
+            "srpt" => BasePolicy::Srpt,
+            "srpte" => BasePolicy::Srpte,
+            "srpte+ps" => BasePolicy::SrptePs,
+            "srpte+las" => BasePolicy::SrpteLas,
+            "fsp" => BasePolicy::Fsp,
+            "fspe" => BasePolicy::Fspe,
+            "fspe+ps" => BasePolicy::FspePs,
+            "fspe+las" => BasePolicy::FspeLas,
+            "psbs" => BasePolicy::Psbs,
+            "psbs-paperlit" => BasePolicy::PsbsPaperlit,
+            "fsp-naive" => BasePolicy::FspNaive,
+            _ => return None,
+        })
+    }
+
+    /// Construct the discipline (the former body of `sched::by_name`).
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            BasePolicy::Fifo => Box::new(sched::fifo::Fifo::new()),
+            BasePolicy::Ps => Box::new(sched::ps::Dps::ps()),
+            BasePolicy::Dps => Box::new(sched::ps::Dps::new()),
+            BasePolicy::Las => Box::new(sched::las::Las::new()),
+            BasePolicy::Mlfq => Box::new(sched::mlfq::Mlfq::default_zoo()),
+            BasePolicy::Srpt | BasePolicy::Srpte => Box::new(sched::srpt::Srpte::new()),
+            BasePolicy::SrptePs => Box::new(sched::srpte_hybrid::SrpteHybrid::ps()),
+            BasePolicy::SrpteLas => Box::new(sched::srpte_hybrid::SrpteHybrid::las()),
+            BasePolicy::Fsp | BasePolicy::Fspe => Box::new(sched::fsp_family::FspFamily::fspe()),
+            BasePolicy::FspePs => Box::new(sched::fsp_family::FspFamily::fspe_ps()),
+            BasePolicy::FspeLas => Box::new(sched::fsp_family::FspFamily::fspe_las()),
+            BasePolicy::Psbs => Box::new(sched::fsp_family::Psbs::new()),
+            BasePolicy::PsbsPaperlit => {
+                Box::new(sched::fsp_family::FspFamily::psbs_paper_literal())
+            }
+            BasePolicy::FspNaive => Box::new(sched::fsp_naive::FspNaive::new()),
+        }
+    }
+
+    /// Relative per-event cost (sweep-planner chunking heuristic):
+    /// fsp-naive pays an O(n) virtual update per event where everything
+    /// else pays O(log n) — on Table-1 populations that is the ~100x
+    /// the ROADMAP cites.
+    pub fn cost_weight(self) -> f64 {
+        match self {
+            BasePolicy::FspNaive => 100.0,
+            _ => 1.0,
+        }
+    }
+}
+
+/// A job-size estimator specification (paper §2.2), parse/display-able
+/// so estimator-wrapped policies are first-class sweepable cells.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EstimatorSpec {
+    /// Exact sizes.
+    Oracle,
+    /// Eq. 1: `s_hat = s * LogN(0, sigma^2)`.
+    LogNormal { sigma: f64 },
+    /// HFSP-style sampling: run `fraction`, extrapolate with rate noise
+    /// `sigma0 * sqrt(0.01 / fraction)`.
+    Sampling { fraction: f64, sigma0: f64 },
+    /// Semi-clairvoyant size classes (log2 bucket midpoint).
+    Class,
+    /// Correlated proxy with multiplicative `bias` and dispersion.
+    Proxy { bias: f64, sigma: f64 },
+}
+
+impl EstimatorSpec {
+    pub fn build(&self) -> Box<dyn Estimator> {
+        match *self {
+            EstimatorSpec::Oracle => Box::new(estimate::OracleEstimator),
+            EstimatorSpec::LogNormal { sigma } => Box::new(estimate::LogNormalNoise::new(sigma)),
+            EstimatorSpec::Sampling { fraction, sigma0 } => {
+                Box::new(estimate::SamplingEstimator::new(fraction, sigma0))
+            }
+            EstimatorSpec::Class => Box::new(estimate::ClassEstimator),
+            EstimatorSpec::Proxy { bias, sigma } => {
+                Box::new(estimate::ProxyEstimator::new(bias, sigma))
+            }
+        }
+    }
+
+    fn model_name(&self) -> &'static str {
+        match self {
+            EstimatorSpec::Oracle => "oracle",
+            EstimatorSpec::LogNormal { .. } => "lognormal",
+            EstimatorSpec::Sampling { .. } => "sampling",
+            EstimatorSpec::Class => "class",
+            EstimatorSpec::Proxy { .. } => "proxy",
+        }
+    }
+}
+
+/// A typed, composable policy specification.  See the module docs for
+/// the grammar; `Display` is the canonical rendering and
+/// [`PolicySpec::parse`] its exact inverse.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// A bare single-server discipline.
+    Base(BasePolicy),
+    /// Parameterized MLFQ (`mlfq(levels=N,q0=X)`); the bare name `mlfq`
+    /// stays `Base(Mlfq)` (the calibrated default zoo member).
+    Mlfq { levels: usize, q0: f64 },
+    /// `k` servers behind a dispatcher, each running `inner`.
+    Cluster {
+        k: usize,
+        dispatch: Dispatch,
+        inner: Box<PolicySpec>,
+        /// Extra seed folded into the runtime seed (0 = omitted in the
+        /// canonical rendering).
+        seed: u64,
+    },
+    /// `inner` fed estimator-generated `est` values instead of the
+    /// workload's own (the estimator sees only true sizes).
+    Estimated { est: EstimatorSpec, inner: Box<PolicySpec>, seed: u64 },
+}
+
+impl PolicySpec {
+    /// The headline scheduler (handy default).
+    pub fn psbs() -> PolicySpec {
+        PolicySpec::Base(BasePolicy::Psbs)
+    }
+
+    /// Parse a policy spec string.  Errors name the offending fragment.
+    pub fn parse(s: &str) -> Result<PolicySpec, String> {
+        let s = s.trim();
+        if let Some(b) = BasePolicy::from_name(s) {
+            return Ok(PolicySpec::Base(b));
+        }
+        let (head, args) = match s.find('(') {
+            Some(i) if s.ends_with(')') => (&s[..i], &s[i + 1..s.len() - 1]),
+            _ => return Err(format!("unknown policy: {s}")),
+        };
+        let kv = parse_kv(args)?;
+        let get = |key: &str| -> Option<&str> {
+            kv.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+        };
+        let check_keys = |allowed: &[&str]| -> Result<(), String> {
+            for (k, _) in &kv {
+                if !allowed.contains(&k.as_str()) {
+                    return Err(format!("{head}: unknown argument `{k}`"));
+                }
+            }
+            Ok(())
+        };
+        match head {
+            "mlfq" => {
+                check_keys(&["levels", "q0"])?;
+                let levels = parse_num::<usize>(get("levels"), "mlfq: levels", 8)?;
+                let q0 = parse_num::<f64>(get("q0"), "mlfq: q0", 0.05)?;
+                if levels < 1 || !(q0 > 0.0) {
+                    return Err("mlfq: need levels >= 1 and q0 > 0".into());
+                }
+                Ok(PolicySpec::Mlfq { levels, q0 })
+            }
+            "cluster" => {
+                check_keys(&["k", "dispatch", "inner", "seed"])?;
+                let k = parse_num::<usize>(get("k"), "cluster: k", 2)?;
+                if k < 1 {
+                    return Err("cluster: need k >= 1".into());
+                }
+                let dispatch = match get("dispatch").unwrap_or("leastwork") {
+                    "leastwork" => Dispatch::LeastWork,
+                    "roundrobin" => Dispatch::RoundRobin,
+                    "random" => Dispatch::Random,
+                    other => return Err(format!("cluster: unknown dispatch `{other}`")),
+                };
+                let inner = PolicySpec::parse(get("inner").unwrap_or("psbs"))?;
+                let seed = parse_num::<u64>(get("seed"), "cluster: seed", 0)?;
+                Ok(PolicySpec::Cluster { k, dispatch, inner: Box::new(inner), seed })
+            }
+            "est" => {
+                check_keys(&["model", "sigma", "fraction", "sigma0", "bias", "inner", "seed"])?;
+                let est = match get("model").unwrap_or("lognormal") {
+                    "oracle" => EstimatorSpec::Oracle,
+                    "lognormal" => EstimatorSpec::LogNormal {
+                        sigma: parse_num::<f64>(get("sigma"), "est: sigma", 0.5)?,
+                    },
+                    "sampling" => EstimatorSpec::Sampling {
+                        fraction: parse_num::<f64>(get("fraction"), "est: fraction", 0.01)?,
+                        sigma0: parse_num::<f64>(get("sigma0"), "est: sigma0", 0.5)?,
+                    },
+                    "class" => EstimatorSpec::Class,
+                    "proxy" => EstimatorSpec::Proxy {
+                        bias: parse_num::<f64>(get("bias"), "est: bias", 1.0)?,
+                        sigma: parse_num::<f64>(get("sigma"), "est: sigma", 0.5)?,
+                    },
+                    other => return Err(format!("est: unknown model `{other}`")),
+                };
+                if let EstimatorSpec::Sampling { fraction, .. } = est {
+                    if !(fraction > 0.0 && fraction <= 1.0) {
+                        return Err("est: need 0 < fraction <= 1".into());
+                    }
+                }
+                if let EstimatorSpec::Proxy { bias, .. } = est {
+                    if !(bias > 0.0) {
+                        return Err("est: need bias > 0".into());
+                    }
+                }
+                let inner = PolicySpec::parse(get("inner").unwrap_or("psbs"))?;
+                let seed = parse_num::<u64>(get("seed"), "est: seed", 0)?;
+                Ok(PolicySpec::Estimated { est, inner: Box::new(inner), seed })
+            }
+            other => Err(format!("unknown policy: {other}")),
+        }
+    }
+
+    /// Construct the scheduler.  `seed` feeds the components that need
+    /// randomness (cluster random dispatch, estimator noise); it is
+    /// folded with the spec's own `seed=` argument, so the same spec
+    /// under the same runtime seed is fully deterministic.  Base
+    /// disciplines ignore it.
+    pub fn build_seeded(&self, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            PolicySpec::Base(b) => b.build(),
+            PolicySpec::Mlfq { levels, q0 } => Box::new(sched::mlfq::Mlfq::new(*levels, *q0)),
+            PolicySpec::Cluster { k, dispatch, inner, seed: s0 } => Box::new(Cluster::from_spec(
+                inner,
+                *k,
+                *dispatch,
+                seed.wrapping_add(*s0),
+            )),
+            PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
+                est.build(),
+                inner.build_seeded(seed.wrapping_add(*s0)),
+                seed.wrapping_add(*s0),
+            )),
+        }
+    }
+
+    /// [`PolicySpec::build_seeded`] at seed 0 — what the `by_name`
+    /// compatibility shim uses.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        self.build_seeded(0)
+    }
+
+    /// Relative cost of simulating one workload under this policy —
+    /// the planner's chunking weight (largest-first dispatch keeps a
+    /// stray fsp-naive cell from serializing the tail of a sweep).
+    pub fn cost_weight(&self) -> f64 {
+        match self {
+            PolicySpec::Base(b) => b.cost_weight(),
+            PolicySpec::Mlfq { .. } => 1.0,
+            PolicySpec::Cluster { k, inner, .. } => *k as f64 * inner.cost_weight(),
+            PolicySpec::Estimated { inner, .. } => inner.cost_weight(),
+        }
+    }
+}
+
+impl fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicySpec::Base(b) => f.write_str(b.name()),
+            PolicySpec::Mlfq { levels, q0 } => write!(f, "mlfq(levels={levels},q0={q0})"),
+            PolicySpec::Cluster { k, dispatch, inner, seed } => {
+                let d = match dispatch {
+                    Dispatch::LeastWork => "leastwork",
+                    Dispatch::RoundRobin => "roundrobin",
+                    Dispatch::Random => "random",
+                };
+                write!(f, "cluster(k={k},dispatch={d},inner={inner}")?;
+                if *seed != 0 {
+                    write!(f, ",seed={seed}")?;
+                }
+                f.write_str(")")
+            }
+            PolicySpec::Estimated { est, inner, seed } => {
+                write!(f, "est(model={}", est.model_name())?;
+                match est {
+                    EstimatorSpec::Oracle | EstimatorSpec::Class => {}
+                    EstimatorSpec::LogNormal { sigma } => write!(f, ",sigma={sigma}")?,
+                    EstimatorSpec::Sampling { fraction, sigma0 } => {
+                        write!(f, ",fraction={fraction},sigma0={sigma0}")?
+                    }
+                    EstimatorSpec::Proxy { bias, sigma } => {
+                        write!(f, ",bias={bias},sigma={sigma}")?
+                    }
+                }
+                write!(f, ",inner={inner}")?;
+                if *seed != 0 {
+                    write!(f, ",seed={seed}")?;
+                }
+                f.write_str(")")
+            }
+        }
+    }
+}
+
+/// Literal conversion for the figure harness and examples (policy
+/// literals are compile-time constants there).  Panics on an invalid
+/// spec — use [`PolicySpec::parse`] for user input.
+impl From<&str> for PolicySpec {
+    fn from(s: &str) -> PolicySpec {
+        PolicySpec::parse(s).unwrap_or_else(|e| panic!("bad policy spec: {e}"))
+    }
+}
+
+impl From<String> for PolicySpec {
+    fn from(s: String) -> PolicySpec {
+        PolicySpec::from(s.as_str())
+    }
+}
+
+impl From<BasePolicy> for PolicySpec {
+    fn from(b: BasePolicy) -> PolicySpec {
+        PolicySpec::Base(b)
+    }
+}
+
+/// Split `args` on top-level commas (parenthesis-depth aware) and parse
+/// `key=value` pairs.
+fn parse_kv(args: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    for part in split_top_level(args, ',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        // `=` inside a composed inner value must not split here: take
+        // the first `=` outside parentheses.
+        let mut depth = 0usize;
+        let mut eq = None;
+        for (i, c) in part.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => depth = depth.saturating_sub(1),
+                '=' if depth == 0 => {
+                    eq = Some(i);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(eq) = eq else {
+            return Err(format!("expected key=value, got `{part}`"));
+        };
+        out.push((part[..eq].trim().to_string(), part[eq + 1..].trim().to_string()));
+    }
+    Ok(out)
+}
+
+/// Split on `sep` at parenthesis depth 0 (the list separator used by
+/// `--policies` and by spec arguments, where values may themselves be
+/// parenthesized specs).
+pub fn split_top_level(s: &str, sep: char) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            c if c == sep && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() || !out.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn parse_num<T: std::str::FromStr>(v: Option<&str>, what: &str, default: T) -> Result<T, String> {
+    match v {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("{what}: not a number: {v}")),
+    }
+}
+
+/// Estimator-wrapping scheduler: replaces each arriving job's `est`
+/// with the estimator's output (computed from the *true* size, like
+/// `estimate::apply`, but online — one draw per arrival in arrival
+/// order, so runs are deterministic per seed).
+pub struct Estimated {
+    est: Box<dyn Estimator>,
+    inner: Box<dyn Scheduler>,
+    rng: Rng,
+}
+
+impl Estimated {
+    pub fn new(est: Box<dyn Estimator>, inner: Box<dyn Scheduler>, seed: u64) -> Estimated {
+        Estimated { est, inner, rng: Rng::new(seed ^ 0xE57) }
+    }
+}
+
+impl Scheduler for Estimated {
+    fn name(&self) -> &'static str {
+        "estimated"
+    }
+
+    fn on_arrival(&mut self, now: f64, job: &Job) {
+        let est = self.est.estimate(job.size, &mut self.rng).max(1e-12);
+        self.inner.on_arrival(now, &Job { est, ..*job });
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        self.inner.next_event(now)
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        self.inner.advance(now, t, done)
+    }
+
+    fn active(&self) -> usize {
+        self.inner.active()
+    }
+
+    fn cancel(&mut self, now: f64, id: u32) -> bool {
+        self.inner.cancel(now, id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ALL_POLICIES;
+    use crate::sim::run;
+    use crate::util::check::{property, Config};
+    use crate::workload::SynthConfig;
+
+    #[test]
+    fn every_base_name_parses_and_round_trips() {
+        for name in ALL_POLICIES {
+            let spec = PolicySpec::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.to_string(), *name, "display must equal the canonical name");
+            assert_eq!(PolicySpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn composed_specs_round_trip() {
+        for s in [
+            "mlfq(levels=12,q0=0.02)",
+            "cluster(k=8,dispatch=leastwork,inner=psbs)",
+            "cluster(k=4,dispatch=random,inner=srpte+las,seed=9)",
+            "est(model=lognormal,sigma=2,inner=psbs)",
+            "est(model=sampling,fraction=0.05,sigma0=0.5,inner=fspe+ps)",
+            "est(model=class,inner=srpte)",
+            "cluster(k=2,dispatch=roundrobin,inner=est(model=oracle,inner=psbs))",
+        ] {
+            let spec = PolicySpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            let rendered = spec.to_string();
+            let reparsed = PolicySpec::parse(&rendered).unwrap();
+            assert_eq!(reparsed, spec, "`{s}` -> `{rendered}` must re-parse identically");
+        }
+    }
+
+    /// Random composed specs round-trip through display/parse — the
+    /// grammar and the renderer cannot drift apart.
+    #[test]
+    fn random_specs_round_trip_property() {
+        fn gen_spec(rng: &mut crate::util::rng::Rng, depth: usize) -> PolicySpec {
+            let pick = rng.below(if depth == 0 { 2 } else { 5 });
+            match pick {
+                0 => {
+                    let names = ALL_POLICIES;
+                    PolicySpec::parse(names[rng.below(names.len() as u64) as usize]).unwrap()
+                }
+                1 => PolicySpec::Mlfq {
+                    levels: 1 + rng.below(16) as usize,
+                    q0: 0.01 * (1 + rng.below(50)) as f64,
+                },
+                2 | 3 => PolicySpec::Cluster {
+                    k: 1 + rng.below(8) as usize,
+                    dispatch: [Dispatch::LeastWork, Dispatch::RoundRobin, Dispatch::Random]
+                        [rng.below(3) as usize],
+                    inner: Box::new(gen_spec(rng, depth - 1)),
+                    seed: rng.below(3),
+                },
+                _ => PolicySpec::Estimated {
+                    est: match rng.below(5) {
+                        0 => EstimatorSpec::Oracle,
+                        1 => EstimatorSpec::LogNormal { sigma: 0.25 * (1 + rng.below(8)) as f64 },
+                        2 => EstimatorSpec::Sampling {
+                            fraction: 0.01 * (1 + rng.below(99)) as f64,
+                            sigma0: 0.5,
+                        },
+                        3 => EstimatorSpec::Class,
+                        _ => EstimatorSpec::Proxy {
+                            bias: 0.5 * (1 + rng.below(4)) as f64,
+                            sigma: 0.25 * (1 + rng.below(4)) as f64,
+                        },
+                    },
+                    inner: Box::new(gen_spec(rng, depth - 1)),
+                    seed: rng.below(2),
+                },
+            }
+        }
+        property(
+            "policy spec round-trip",
+            Config { cases: 64, max_size: 3, ..Default::default() },
+            |rng, size| gen_spec(rng, size.min(3)),
+            |spec| {
+                let rendered = spec.to_string();
+                match PolicySpec::parse(&rendered) {
+                    Ok(p) if p == *spec => Ok(()),
+                    Ok(p) => Err(format!("`{rendered}` re-parsed as `{p}`")),
+                    Err(e) => Err(format!("`{rendered}` failed to parse: {e}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "nope",
+            "cluster(k=0,inner=psbs)",
+            "cluster(k=2,dispatch=wat,inner=psbs)",
+            "cluster(k=2,inner=nope)",
+            "mlfq(levels=0)",
+            "est(model=wat,inner=psbs)",
+            "cluster(k=2,inner=psbs,bogus=1)",
+            "cluster(k=2",
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        assert_eq!(
+            PolicySpec::parse("cluster(k=4)").unwrap(),
+            PolicySpec::Cluster {
+                k: 4,
+                dispatch: Dispatch::LeastWork,
+                inner: Box::new(PolicySpec::psbs()),
+                seed: 0,
+            }
+        );
+        assert_eq!(PolicySpec::parse("mlfq(levels=8,q0=0.05)").unwrap().to_string(), "mlfq(levels=8,q0=0.05)");
+    }
+
+    #[test]
+    fn built_cluster_spec_matches_direct_cluster() {
+        let cfg = SynthConfig::default().with_njobs(800);
+        let jobs = crate::workload::synthesize(&cfg, 12);
+        let spec: PolicySpec = "cluster(k=4,dispatch=leastwork,inner=psbs)".into();
+        let a = run(spec.build_seeded(7).as_mut(), &jobs).completion;
+        let mut direct = Cluster::new("psbs", 4, Dispatch::LeastWork, 7).unwrap();
+        let b = run(&mut direct, &jobs).completion;
+        assert_eq!(a, b, "spec-built cluster must equal the direct constructor");
+    }
+
+    #[test]
+    fn estimated_oracle_is_transparent_and_lognormal_is_not() {
+        let cfg = SynthConfig::default().with_njobs(600).with_sigma(0.0);
+        let jobs = crate::workload::synthesize(&cfg, 5);
+        let oracle: PolicySpec = "est(model=oracle,inner=psbs)".into();
+        let a = run(oracle.build().as_mut(), &jobs).completion;
+        let b = run(PolicySpec::psbs().build().as_mut(), &jobs).completion;
+        assert_eq!(a, b, "oracle wrapper must be transparent on exact workloads");
+
+        let noisy: PolicySpec = "est(model=lognormal,sigma=4,inner=psbs)".into();
+        let c = run(noisy.build().as_mut(), &jobs).completion;
+        assert_ne!(a, c, "heavy noise must change the schedule");
+        // Deterministic per seed.
+        let c2 = run(noisy.build().as_mut(), &jobs).completion;
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn cost_weights_rank_sensibly() {
+        let cheap: PolicySpec = "psbs".into();
+        let naive: PolicySpec = "fsp-naive".into();
+        let cluster: PolicySpec = "cluster(k=8,inner=fsp-naive)".into();
+        assert!(naive.cost_weight() > 10.0 * cheap.cost_weight());
+        assert!(cluster.cost_weight() > naive.cost_weight());
+    }
+
+    #[test]
+    fn split_top_level_respects_depth() {
+        let parts = split_top_level("psbs,cluster(k=4,inner=ps),las", ',');
+        assert_eq!(parts, vec!["psbs", "cluster(k=4,inner=ps)", "las"]);
+        assert!(split_top_level("", ',').is_empty());
+    }
+}

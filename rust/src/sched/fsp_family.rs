@@ -110,9 +110,14 @@ impl FspFamily {
             w_v: 0.0,
             w_l: 0.0,
             // `o` is indexed: cancellation removes by job id, and the
-            // seq -> slot map makes that O(log n) (§5.2.2 bookkeeping).
+            // seq -> slot index makes that O(log n) (§5.2.2
+            // bookkeeping).  Job ids are dense (the engine asserts it),
+            // so the index is the dense `Vec<usize>` variant: sift
+            // swaps on the arrival/virtual-completion hot path pay one
+            // array write instead of a hash probe (the `event/` vs
+            // `cancel/` trade-off tracked in BENCH_psbs_ops.json).
             // `e` is only ever popped from the top; no index needed.
-            o: MinHeap::with_index(),
+            o: MinHeap::with_dense_index(),
             e: MinHeap::new(),
             late: VecDeque::new(),
         }

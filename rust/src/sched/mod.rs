@@ -37,29 +37,19 @@ pub const ALL_POLICIES: &[&str] = &[
     "fsp", "fspe", "fspe+ps", "fspe+las", "psbs", "psbs-paperlit", "fsp-naive",
 ];
 
-/// Construct a scheduler by CLI name.
+/// Construct a scheduler by CLI name — a thin compatibility shim over
+/// [`crate::scenario::PolicySpec::parse`], so every call site that
+/// accepted a bare name also accepts composed specs
+/// (`cluster(k=4,dispatch=leastwork,inner=psbs)`,
+/// `est(model=lognormal,sigma=2,inner=srpte)`, `mlfq(levels=12)`).
 ///
 /// `srpt` and `srpte` share one implementation (SRPT *is* SRPTE with
 /// exact estimates); likewise `fsp`/`fspe`.  `fsp-naive` is the classic
 /// O(n)-per-arrival FSP used for the §5.2.2 complexity comparison.
+/// Base-discipline construction itself lives in
+/// [`crate::scenario::BasePolicy::build`].
 pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
-    Some(match name {
-        "fifo" => Box::new(fifo::Fifo::new()),
-        "ps" => Box::new(ps::Dps::ps()),
-        "dps" => Box::new(ps::Dps::new()),
-        "las" => Box::new(las::Las::new()),
-        "mlfq" => Box::new(mlfq::Mlfq::default_zoo()),
-        "srpt" | "srpte" => Box::new(srpt::Srpte::new()),
-        "srpte+ps" => Box::new(srpte_hybrid::SrpteHybrid::ps()),
-        "srpte+las" => Box::new(srpte_hybrid::SrpteHybrid::las()),
-        "fsp" | "fspe" => Box::new(fsp_family::FspFamily::fspe()),
-        "fspe+ps" => Box::new(fsp_family::FspFamily::fspe_ps()),
-        "fspe+las" => Box::new(fsp_family::FspFamily::fspe_las()),
-        "psbs" => Box::new(fsp_family::Psbs::new()),
-        "psbs-paperlit" => Box::new(fsp_family::FspFamily::psbs_paper_literal()),
-        "fsp-naive" => Box::new(fsp_naive::FspNaive::new()),
-        _ => return None,
-    })
+    Some(crate::scenario::PolicySpec::parse(name).ok()?.build())
 }
 
 /// Binary min-heap keyed by `(f64, u64)` — the `(g_i, id)` priority
@@ -79,20 +69,122 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
 /// **Indexing.** [`MinHeap::with_index`] maintains a seq → slot map
 /// across sifts, turning [`MinHeap::remove_by_seq`] from an O(n) scan
 /// into O(log n) — the §5.2.2 job-cancellation path.  Unindexed heaps
-/// pay nothing for it.
+/// pay nothing for it.  [`MinHeap::with_dense_index`] keeps the same
+/// contract in a flat `Vec<usize>` keyed directly by seq — for dense
+/// small seqs (job ids are the dense indices `0..n`, which the engine
+/// asserts), every index maintenance touch is one bounds-checked array
+/// write instead of a hash probe, which keeps the per-sift overhead on
+/// the arrival/virtual-completion hot path near zero (the `heap/` +
+/// `event/` vs `cancel/` samples in `BENCH_psbs_ops.json` record the
+/// trade-off).
 #[derive(Debug, Clone)]
 pub struct MinHeap<T> {
     /// Hot half of the split layout: `(key, seq)`, heap-ordered.
     keys: Vec<(f64, u64)>,
     /// Cold half: `payloads[i]` belongs to `keys[i]`.
     payloads: Vec<T>,
-    /// Optional seq → slot index (see [`MinHeap::with_index`]).
-    slots: Option<std::collections::HashMap<u64, usize>>,
+    /// Optional seq → slot index (see [`MinHeap::with_index`] /
+    /// [`MinHeap::with_dense_index`]).
+    slots: SeqIndex,
+}
+
+/// The seq → slot index backing (a pure accelerator: it must never
+/// change observable heap behavior, only the cost of `remove_by_seq`).
+#[derive(Debug, Clone)]
+enum SeqIndex {
+    /// No index: `remove_by_seq` scans.
+    None,
+    /// HashMap index: arbitrary (sparse, large) seqs.
+    Map(std::collections::HashMap<u64, usize>),
+    /// Dense vector index: `dense[seq] = slot`, [`ABSENT`] when the seq
+    /// is not live.  Memory is proportional to the largest seq ever
+    /// pushed, so this fits seqs that are dense small integers — job
+    /// ids in this codebase.
+    Dense(Vec<usize>),
+}
+
+/// Sentinel slot for "seq not present" in the dense index.
+const ABSENT: usize = usize::MAX;
+
+impl SeqIndex {
+    /// Record `seq -> slot` for a fresh push; returns false if the seq
+    /// was already live (callers debug_assert on that).
+    #[inline]
+    fn insert_new(&mut self, seq: u64, slot: usize) -> bool {
+        match self {
+            SeqIndex::None => true,
+            SeqIndex::Map(m) => m.insert(seq, slot).is_none(),
+            SeqIndex::Dense(v) => {
+                let i = seq as usize;
+                if i >= v.len() {
+                    v.resize(i + 1, ABSENT);
+                }
+                let fresh = v[i] == ABSENT;
+                v[i] = slot;
+                fresh
+            }
+        }
+    }
+
+    /// Update the slot of a live seq (sift bookkeeping).
+    #[inline]
+    fn set(&mut self, seq: u64, slot: usize) {
+        match self {
+            SeqIndex::None => {}
+            SeqIndex::Map(m) => {
+                m.insert(seq, slot);
+            }
+            SeqIndex::Dense(v) => v[seq as usize] = slot,
+        }
+    }
+
+    /// Drop a seq that left the heap.
+    #[inline]
+    fn remove(&mut self, seq: u64) {
+        match self {
+            SeqIndex::None => {}
+            SeqIndex::Map(m) => {
+                m.remove(&seq);
+            }
+            SeqIndex::Dense(v) => {
+                v[seq as usize] = ABSENT;
+                // Reclaim the tail so long-running deployments with
+                // monotonically growing seqs (the online service) keep
+                // the index proportional to the live seq span, not to
+                // every seq ever pushed.  Amortized O(1): each popped
+                // slot was resized in exactly once.
+                while v.last() == Some(&ABSENT) {
+                    v.pop();
+                }
+            }
+        }
+    }
+
+    /// Current slot of a live seq (None on unindexed heaps too — the
+    /// caller falls back to a scan there).
+    #[inline]
+    fn lookup(&self, seq: u64) -> Option<Option<usize>> {
+        match self {
+            SeqIndex::None => None,
+            SeqIndex::Map(m) => Some(m.get(&seq).copied()),
+            SeqIndex::Dense(v) => {
+                Some(v.get(seq as usize).copied().filter(|&s| s != ABSENT))
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        match self {
+            SeqIndex::None => {}
+            SeqIndex::Map(m) => m.clear(),
+            SeqIndex::Dense(v) => v.clear(),
+        }
+    }
 }
 
 impl<T> Default for MinHeap<T> {
     fn default() -> Self {
-        MinHeap { keys: Vec::new(), payloads: Vec::new(), slots: None }
+        MinHeap { keys: Vec::new(), payloads: Vec::new(), slots: SeqIndex::None }
     }
 }
 
@@ -108,8 +200,17 @@ impl<T> MinHeap<T> {
         MinHeap {
             keys: Vec::new(),
             payloads: Vec::new(),
-            slots: Some(std::collections::HashMap::new()),
+            slots: SeqIndex::Map(std::collections::HashMap::new()),
         }
+    }
+
+    /// Like [`MinHeap::with_index`], backed by a dense `Vec<usize>`
+    /// keyed directly by seq: O(1) array writes per sift swap instead
+    /// of hash probes.  Requires seqs to be dense small integers (the
+    /// index holds `max_seq + 1` slots) — exactly the job-id contract
+    /// the engine already asserts.
+    pub fn with_dense_index() -> Self {
+        MinHeap { keys: Vec::new(), payloads: Vec::new(), slots: SeqIndex::Dense(Vec::new()) }
     }
 
     pub fn len(&self) -> usize {
@@ -125,10 +226,8 @@ impl<T> MinHeap<T> {
         let i = self.keys.len();
         self.keys.push((key, seq));
         self.payloads.push(value);
-        if let Some(m) = &mut self.slots {
-            let prev = m.insert(seq, i);
-            debug_assert!(prev.is_none(), "duplicate seq {seq} in indexed MinHeap");
-        }
+        let fresh = self.slots.insert_new(seq, i);
+        debug_assert!(fresh, "duplicate seq {seq} in indexed MinHeap");
         self.sift_up(i);
     }
 
@@ -154,9 +253,7 @@ impl<T> MinHeap<T> {
         self.swap_slots(0, last);
         let (k, s) = self.keys.pop().unwrap();
         let v = self.payloads.pop().unwrap();
-        if let Some(m) = &mut self.slots {
-            m.remove(&s);
-        }
+        self.slots.remove(s);
         if !self.keys.is_empty() {
             self.sift_down(0);
         }
@@ -166,17 +263,16 @@ impl<T> MinHeap<T> {
     pub fn clear(&mut self) {
         self.keys.clear();
         self.payloads.clear();
-        if let Some(m) = &mut self.slots {
-            m.clear();
-        }
+        self.slots.clear();
     }
 
     /// Removal by sequence number (the job-cancellation path): O(log n)
-    /// on indexed heaps ([`MinHeap::with_index`]), an O(n) scan plus
-    /// O(log n) fix-up otherwise.
+    /// on indexed heaps ([`MinHeap::with_index`] /
+    /// [`MinHeap::with_dense_index`]), an O(n) scan plus O(log n)
+    /// fix-up otherwise.
     pub fn remove_by_seq(&mut self, seq: u64) -> Option<(f64, u64, T)> {
-        let i = match &self.slots {
-            Some(m) => *m.get(&seq)?,
+        let i = match self.slots.lookup(seq) {
+            Some(slot) => slot?,
             None => self.keys.iter().position(|&(_, s)| s == seq)?,
         };
         let last = self.keys.len() - 1;
@@ -184,9 +280,7 @@ impl<T> MinHeap<T> {
         let (k, s) = self.keys.pop().unwrap();
         let v = self.payloads.pop().unwrap();
         debug_assert_eq!(s, seq, "seq index out of sync");
-        if let Some(m) = &mut self.slots {
-            m.remove(&s);
-        }
+        self.slots.remove(s);
         if i < self.keys.len() {
             // The swapped-in element may violate order in either
             // direction relative to its new position.
@@ -205,9 +299,9 @@ impl<T> MinHeap<T> {
     fn swap_slots(&mut self, a: usize, b: usize) {
         self.keys.swap(a, b);
         self.payloads.swap(a, b);
-        if let Some(m) = &mut self.slots {
-            m.insert(self.keys[a].1, a);
-            m.insert(self.keys[b].1, b);
+        if !matches!(self.slots, SeqIndex::None) {
+            self.slots.set(self.keys[a].1, a);
+            self.slots.set(self.keys[b].1, b);
         }
     }
 
@@ -259,10 +353,18 @@ impl<T> MinHeap<T> {
         let ordered = (1..self.keys.len()).all(|i| !self.less(i, (i - 1) / 2));
         let aligned = self.keys.len() == self.payloads.len();
         let indexed = match &self.slots {
-            None => true,
-            Some(m) => {
+            SeqIndex::None => true,
+            SeqIndex::Map(m) => {
                 m.len() == self.keys.len()
                     && self.keys.iter().enumerate().all(|(i, &(_, s))| m.get(&s) == Some(&i))
+            }
+            SeqIndex::Dense(v) => {
+                v.iter().filter(|&&s| s != ABSENT).count() == self.keys.len()
+                    && self
+                        .keys
+                        .iter()
+                        .enumerate()
+                        .all(|(i, &(_, s))| v.get(s as usize) == Some(&i))
             }
         };
         ordered && aligned && indexed
@@ -333,9 +435,13 @@ mod tests {
                 (keys, removals)
             },
             |(keys, removals)| {
-                // Indexed and unindexed heaps must behave identically.
-                for indexed in [false, true] {
-                    let mut h = if indexed { MinHeap::with_index() } else { MinHeap::new() };
+                // All three index modes must behave identically.
+                for indexed in [0usize, 1, 2] {
+                    let mut h = match indexed {
+                        0 => MinHeap::new(),
+                        1 => MinHeap::with_index(),
+                        _ => MinHeap::with_dense_index(),
+                    };
                     for (i, &k) in keys.iter().enumerate() {
                         h.push(k, i as u64, i);
                     }
@@ -377,14 +483,16 @@ mod tests {
         );
     }
 
-    /// Indexed and unindexed heaps agree operation-for-operation under
-    /// a random push/pop/remove interleaving (the index is a pure
-    /// accelerator — it must never change observable behavior).
+    /// Indexed (map and dense) and unindexed heaps agree
+    /// operation-for-operation under a random push/pop/remove
+    /// interleaving (the index is a pure accelerator — it must never
+    /// change observable behavior).
     #[test]
     fn indexed_heap_matches_unindexed() {
         let mut rng = crate::util::rng::Rng::new(41);
         let mut plain: MinHeap<u64> = MinHeap::new();
         let mut fast: MinHeap<u64> = MinHeap::with_index();
+        let mut dense: MinHeap<u64> = MinHeap::with_dense_index();
         let mut seq = 0u64;
         for _ in 0..2000 {
             match rng.below(4) {
@@ -392,20 +500,48 @@ mod tests {
                     let k = rng.u01();
                     plain.push(k, seq, seq);
                     fast.push(k, seq, seq);
+                    dense.push(k, seq, seq);
                     seq += 1;
                 }
-                2 => assert_eq!(plain.pop(), fast.pop()),
+                2 => {
+                    let want = plain.pop();
+                    assert_eq!(want, fast.pop());
+                    assert_eq!(want, dense.pop());
+                }
                 _ => {
                     let target = rng.below(seq.max(1));
-                    assert_eq!(plain.remove_by_seq(target), fast.remove_by_seq(target));
+                    let want = plain.remove_by_seq(target);
+                    assert_eq!(want, fast.remove_by_seq(target));
+                    assert_eq!(want, dense.remove_by_seq(target));
                 }
             }
-            assert!(plain.check_invariant() && fast.check_invariant());
+            assert!(plain.check_invariant() && fast.check_invariant() && dense.check_invariant());
         }
         while let Some(x) = plain.pop() {
             assert_eq!(Some(x), fast.pop());
+            assert_eq!(Some(x), dense.pop());
         }
-        assert!(fast.is_empty());
+        assert!(fast.is_empty() && dense.is_empty());
+    }
+
+    /// The dense index copes with seqs pushed out of order, re-pushed
+    /// after removal, and queried past the end of the backing vector.
+    #[test]
+    fn dense_index_reuse_and_out_of_range() {
+        let mut h: MinHeap<&str> = MinHeap::with_dense_index();
+        h.push(2.0, 5, "five");
+        h.push(1.0, 0, "zero");
+        assert!(h.check_invariant());
+        assert_eq!(h.remove_by_seq(99), None, "past-the-end seq is absent, not a panic");
+        assert_eq!(h.remove_by_seq(5).unwrap().2, "five");
+        h.push(0.5, 5, "five again");
+        assert!(h.check_invariant());
+        assert_eq!(h.pop().unwrap().2, "five again");
+        assert_eq!(h.pop().unwrap().2, "zero");
+        h.clear();
+        h.push(1.0, 3, "post-clear");
+        assert!(h.check_invariant());
+        assert_eq!(h.remove_by_seq(3).unwrap().2, "post-clear");
     }
 
     /// The split layout stores ordering keys apart from payloads, so a

@@ -92,7 +92,13 @@ where
             debug_assert!(completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
             completion[c.id as usize] = c.time;
             completed += 1;
-            observe(t, c);
+            // The completion's own time, not the event-merge time `t`:
+            // schedulers may report completions that landed strictly
+            // inside [now, t] (chained sub-EPS completions, composite
+            // schedulers crossing several internal events), and the
+            // recorded results already use `c.time` — the observer must
+            // see the same instant.
+            observe(c.time, c);
         }
 
         now = t;
@@ -226,5 +232,72 @@ mod tests {
         let mut seen = 0;
         run_with_observer(&mut s, &jobs, |_, _| seen += 1);
         assert_eq!(seen, 10);
+    }
+
+    /// A FIFO that batches: `next_event` reports only the time its
+    /// whole backlog drains, and `advance` emits each completion at its
+    /// true (mid-interval) instant — the composite-scheduler shape
+    /// (e.g. `Cluster`) where a single engine step crosses several
+    /// internal completions.
+    struct BatchingFifo {
+        queue: std::collections::VecDeque<(u32, f64)>,
+    }
+
+    impl Scheduler for BatchingFifo {
+        fn name(&self) -> &'static str {
+            "test-batching-fifo"
+        }
+        fn on_arrival(&mut self, _now: f64, job: &Job) {
+            self.queue.push_back((job.id, job.size));
+        }
+        fn next_event(&self, now: f64) -> Option<f64> {
+            if self.queue.is_empty() {
+                return None;
+            }
+            Some(now + self.queue.iter().map(|(_, r)| r).sum::<f64>())
+        }
+        fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+            let mut dt = t - now;
+            let mut at = now;
+            while let Some((id, rem)) = self.queue.front_mut() {
+                if *rem <= dt + crate::util::EPS {
+                    dt -= *rem;
+                    at += *rem;
+                    let id = *id;
+                    self.queue.pop_front();
+                    done.push(Completion { id, time: at });
+                } else {
+                    *rem -= dt;
+                    break;
+                }
+            }
+        }
+        fn active(&self) -> usize {
+            self.queue.len()
+        }
+    }
+
+    /// The observer must receive each completion's own `c.time`, not
+    /// the event-merge time `t` — they differ when a completion lands
+    /// mid-interval (this pins the PR's engine bugfix).
+    #[test]
+    fn observer_gets_completion_time_not_merge_time() {
+        let jobs = vec![
+            Job::exact(0, 0.0, 1.0),
+            Job::exact(1, 0.0, 2.0),
+            Job::exact(2, 0.0, 3.0),
+        ];
+        let mut s = BatchingFifo { queue: Default::default() };
+        let mut observed: Vec<(f64, u32, f64)> = Vec::new();
+        let r = run_with_observer(&mut s, &jobs, |time, c| observed.push((time, c.id, c.time)));
+        // Completions land at 1, 3, 6 inside ONE engine step ending at 6.
+        assert_eq!(r.completion, vec![1.0, 3.0, 6.0]);
+        assert_eq!(observed.len(), 3);
+        for (time, id, ctime) in observed {
+            assert_eq!(
+                time, ctime,
+                "observer for job {id} got merge time {time}, completion time {ctime}"
+            );
+        }
     }
 }

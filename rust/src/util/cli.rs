@@ -74,6 +74,20 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option, split parenthesis-aware so
+    /// composed policy specs (`cluster(k=4,inner=psbs)`) stay single
+    /// elements.  `None` when the flag is absent.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.mark(key);
+        self.opts.get(key).map(|v| {
+            crate::scenario::spec::split_top_level(v, ',')
+                .into_iter()
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+
     /// Boolean switch (present or `--key true/false`).
     pub fn get_bool(&self, key: &str) -> Result<bool, String> {
         self.mark(key);
@@ -148,5 +162,15 @@ mod tests {
     #[test]
     fn positional_after_subcommand_rejected() {
         assert!(Args::parse(["simulate".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn list_splits_outside_parens_only() {
+        let a = parse("sweep --policies psbs,cluster(k=4,dispatch=leastwork,inner=psbs),ps");
+        assert_eq!(
+            a.get_list("policies").unwrap(),
+            vec!["psbs", "cluster(k=4,dispatch=leastwork,inner=psbs)", "ps"]
+        );
+        assert!(a.get_list("missing").is_none());
     }
 }

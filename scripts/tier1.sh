@@ -1,29 +1,71 @@
 #!/usr/bin/env bash
-# Tier-1 verify in one command: release build + full test suite + a
-# short (~10 s) bench smoke that refreshes the machine-readable
-# BENCH_*.json perf reports (schema: rust/benches/README.md).
+# Tier-1 verify in one command: release build + full test suite +
+# format/lint gates + a short (~10 s) bench smoke that refreshes the
+# machine-readable BENCH_*.json perf reports (schema:
+# rust/benches/README.md).
+#
+# fmt and clippy are skipped gracefully when the toolchain lacks the
+# component (offline containers often ship bare rustc/cargo) and are
+# ADVISORY: their status lands in the JSON summary but does not flip
+# the tier-1 exit code (the repo has never been auto-formatted — make
+# them blocking once a toolchain-equipped environment has run
+# `cargo fmt` / fixed the first clippy pass).  Build, test and bench
+# failures are fatal.  The last line is a one-line JSON pass/fail
+# summary for machines.
 #
 # Usage:
-#   scripts/tier1.sh             # build + test + bench smoke
-#   scripts/tier1.sh --no-bench  # build + test only
-set -euo pipefail
+#   scripts/tier1.sh             # build + test + fmt + clippy + bench smoke
+#   scripts/tier1.sh --no-bench  # skip the bench smoke
+set -uo pipefail
 cd "$(dirname "$0")/.."
 
-cargo build --release
-cargo test -q
+BUILD=fail TEST=skipped FMT=skipped CLIPPY=skipped BENCH=skipped
 
-if [[ "${1:-}" != "--no-bench" ]]; then
-  # BENCH_MS bounds each benchmark's measurement budget; the filters
-  # restrict the run to the per-event scheduler numbers (psbs vs
-  # fsp-naive) and the parallel-sweep scaling grid.  The smoke writes
-  # into its own directory: a filtered run contains only the filtered
-  # samples and must not clobber full reports from an unfiltered
-  # `cargo bench` (those are the ones tracked across PRs).
-  mkdir -p bench-smoke
-  BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/
-  BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench figures -- sweep/
-  echo "--- bench-smoke/BENCH_sweeps.json derived speedups ---"
-  grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sweeps.json || true
+if cargo build --release; then BUILD=ok; fi
+
+if [[ "$BUILD" == ok ]]; then
+  TEST=fail
+  if cargo test -q; then TEST=ok; fi
 fi
 
-echo "tier1 OK"
+# Format gate: only when rustfmt is installed for this toolchain.
+if cargo fmt --version >/dev/null 2>&1; then
+  FMT=fail
+  if cargo fmt --check; then FMT=ok; fi
+else
+  echo "tier1: rustfmt unavailable; skipping fmt gate"
+fi
+
+# Lint gate: only when clippy is installed; warnings are errors.
+if cargo clippy --version >/dev/null 2>&1; then
+  CLIPPY=fail
+  if cargo clippy --all-targets -- -D warnings; then CLIPPY=ok; fi
+else
+  echo "tier1: clippy unavailable; skipping lint gate"
+fi
+
+if [[ "${1:-}" != "--no-bench" && "$BUILD" == ok ]]; then
+  # BENCH_MS bounds each benchmark's measurement budget; the filters
+  # restrict the run to the per-event scheduler numbers (psbs vs
+  # fsp-naive) and the sweep-executor scaling grid (per-cell vs
+  # planner).  The smoke writes into its own directory: a filtered run
+  # contains only the filtered samples and must not clobber full
+  # reports from an unfiltered `cargo bench` (those are the ones
+  # tracked across PRs).
+  BENCH=fail
+  mkdir -p bench-smoke
+  if BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/ &&
+     BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench figures -- sweep/; then
+    BENCH=ok
+    echo "--- bench-smoke/BENCH_sweeps.json derived speedups ---"
+    grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sweeps.json || true
+  fi
+fi
+
+PASS=true
+for gate in "$BUILD" "$TEST" "$BENCH"; do
+  [[ "$gate" == fail ]] && PASS=false
+done
+
+echo "{\"tier1\": \"$([[ $PASS == true ]] && echo pass || echo fail)\", \"build\": \"$BUILD\", \"test\": \"$TEST\", \"fmt\": \"$FMT\", \"clippy\": \"$CLIPPY\", \"bench\": \"$BENCH\"}"
+[[ "$PASS" == true ]]
