@@ -10,20 +10,24 @@
 //!
 //! ## Declarative scenarios & the shared-workload planner
 //!
-//! Grid figures are [`crate::scenario::Scenario`] declarations (base
-//! workload config x axes x policy set x [`Reference`]) evaluated by
-//! one generic executor; non-grid figures (pooled populations, trace
-//! replays, per-rep dual-policy runs) describe flat work-item lists
-//! run through [`Ctx::par_runs`].  Cell grids go through the
-//! [`crate::scenario::planner`]: cells sharing a workload config are
-//! grouped so each `(config, seed)` workload is synthesized **once**
+//! Every scenario-shaped figure — ratio grids (3/5/6/10/14/15),
+//! pooled slowdown ECDFs (4/8) and trace replays (12/13) — is a
+//! [`crate::scenario::Scenario`] declaration ([`scenarios_for`] is
+//! the single source; `psbs scenario export` dumps them as the
+//! committed `scenarios/*.toml` files) evaluated by one generic
+//! executor; the remaining figures (conditional slowdowns, per-rep
+//! dual-policy runs, CCDFs) describe flat work-item lists run through
+//! [`Ctx::par_runs`].  Cell grids go through the
+//! [`crate::scenario::planner`]: cells sharing a workload spec are
+//! grouped so each `(workload, seed)` workload is synthesized **once**
 //! and each reference MST computed **once per seed**, with per-policy
 //! simulations fanned out through [`crate::util::pool`]
 //! (`Ctx::threads` workers, cost-aware largest-first ordering).
 //!
 //! Sharing and parallelism are both numerically no-ops: every value is
 //! a pure function of (cell, repetition seed), seeds derive
-//! independently (`seed + r * 7919`), and results reassemble in cell
+//! independently (`seed + r * 7919`; trace replays keep their
+//! historical `r * 104_729` schedule), and results reassemble in cell
 //! order — so planner output is **bit-identical** to the per-cell
 //! legacy path (`Ctx::share = false`) and parallel output to the
 //! serial path (`threads == 1`).
@@ -35,13 +39,13 @@ pub mod tables;
 
 use crate::metrics;
 use crate::runtime::Runtime;
-use crate::scenario::{self, AxisParam, Scenario};
+use crate::scenario::{self, AxisParam, Metric, Scenario, TraceSpec};
 use crate::sched;
 use crate::sim::{self, Job};
 use crate::stats::Repetitions;
 use crate::util::pool;
-use crate::workload::traces;
-use crate::workload::{SizeDist, SynthConfig};
+use crate::workload::traces::TraceName;
+use crate::workload::{traces, SynthConfig};
 pub use crate::scenario::{exact_copy, Reference, SweepCell, SweepParams};
 pub use tables::Table;
 
@@ -116,9 +120,15 @@ impl Ctx {
         scenario::eval_cells(self.params(), self.threads, self.share, cells)
     }
 
-    /// Evaluate a declarative scenario into its table.
-    pub fn eval_scenario(&self, sc: &Scenario) -> Table {
-        sc.table(self.params(), self.threads, self.share)
+    /// Evaluate a declarative scenario into its tables (one per split
+    /// grid point, plus the ECDF metric's optional tail table).
+    pub fn eval_scenario(&self, sc: &Scenario) -> Vec<Table> {
+        sc.tables(self.params(), self.threads, self.share)
+    }
+
+    /// Evaluate a scenario list, concatenating the tables in order.
+    pub fn eval_scenarios(&self, scs: &[Scenario]) -> Vec<Table> {
+        scs.iter().flat_map(|sc| self.eval_scenario(sc)).collect()
     }
 
     /// Parallel map over arbitrary independent work items (figures
@@ -149,87 +159,144 @@ pub fn run_slowdowns(policy: &str, jobs: &[Job]) -> Vec<f64> {
 }
 
 // --------------------------------------------------------------------
-// Fig. 3 — MST against PS over the sigma x shape grid, 6 policies.
+// Scenario-shaped figures: one declaration each, one generic executor.
 // --------------------------------------------------------------------
-pub fn fig3(ctx: &Ctx) -> Vec<Table> {
-    let sc = Scenario::new("fig3_mst_vs_ps", ctx.cfg())
-        .axis("shape", AxisParam::Shape, &GRID)
-        .axis("sigma", AxisParam::Sigma, &GRID)
-        .policies(&["srpte", "srpte+ps", "srpte+las", "fspe", "fspe+ps", "fspe+las"])
-        .vs(Reference::Ps);
-    vec![ctx.eval_scenario(&sc)]
-}
 
-// --------------------------------------------------------------------
-// Fig. 4 — per-job slowdown ECDF of the §5.1 proposals vs PS.
-// --------------------------------------------------------------------
-pub fn fig4(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["ps", "srpte+ps", "srpte+las", "fspe+ps", "fspe+las"];
-    let thresholds = metrics::log_thresholds(128, 3.0);
-    let seed = ctx.seed;
-    let mut out = Vec::new();
-    for &shape in &[0.5, 0.25, 0.125] {
-        let mut t = Table::new(
-            format!("fig4_slowdown_ecdf_shape{shape}"),
-            ["slowdown"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-        );
-        let cfg = ctx.cfg().with_shape(shape);
-        // Reps run in parallel, one policy at a time (the fig7 shape):
-        // rep order inside each policy matches the serial loop, so the
-        // pooled ECDFs are bit-identical, and peak memory stays at one
-        // policy's pooled population as in the serial path.  The paper
-        // pools runs too.
-        let rep_items: Vec<u64> = (0..ctx.reps).collect();
-        let mut ecdfs: Vec<Vec<f64>> = Vec::new();
-        for &policy in &policies {
-            let runs = ctx.par_runs(&rep_items, |&r| {
-                let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
-                run_slowdowns(policy, &jobs)
-            });
-            let mut pooled = Vec::new();
-            for slow in runs {
-                pooled.extend(slow);
-            }
-            ecdfs.push(metrics::slowdown_ecdf(&pooled, &thresholds));
-        }
-        for (i, &thr) in thresholds.iter().enumerate() {
-            let mut row = vec![thr];
-            row.extend(ecdfs.iter().map(|e| e[i]));
-            t.push(row);
-        }
-        out.push(t);
-    }
-    out
-}
+/// Figure numbers whose every table comes from a [`Scenario`]
+/// declaration — the set `psbs scenario export` dumps into
+/// `scenarios/` (ratio grids, pooled ECDFs, trace replays).
+pub const EXPORTED_FIGS: [u64; 10] = [3, 4, 5, 6, 8, 10, 12, 13, 14, 15];
 
-// --------------------------------------------------------------------
-// Fig. 5 — MST / optimal vs shape, all policies (sigma = 0.5).
-// --------------------------------------------------------------------
-pub fn fig5(ctx: &Ctx) -> Vec<Table> {
-    let sc = Scenario::new("fig5_mst_vs_shape", ctx.cfg())
-        .axis("shape", AxisParam::Shape, &GRID)
-        .policies(&["psbs", "srpte", "fspe", "ps", "las", "fifo"])
-        .vs(Reference::OptSrpt);
-    vec![ctx.eval_scenario(&sc)]
-}
-
-// --------------------------------------------------------------------
-// Fig. 6 — MST / optimal vs sigma for three heavy-tailed shapes.
-// --------------------------------------------------------------------
-pub fn fig6(ctx: &Ctx) -> Vec<Table> {
-    [0.5, 0.25, 0.125]
-        .iter()
-        .map(|&shape| {
-            let sc = Scenario::new(
-                format!("fig6_mst_vs_sigma_shape{shape}"),
-                ctx.cfg().with_shape(shape),
-            )
+/// The declarative form of every scenario-shaped figure: the single
+/// source behind the `figN()` functions, `psbs scenario export`, and
+/// the committed `scenarios/*.toml` files (which must match these —
+/// `tests::committed_scenario_files_match_exports`).  `njobs` scales
+/// the workload (figures pass `Ctx::njobs`; exports use the Table-1
+/// default 10 000).
+pub fn scenarios_for(fig: u64, njobs: usize) -> Option<Vec<Scenario>> {
+    let cfg = SynthConfig::default().with_njobs(njobs);
+    let grid_policies = ["psbs", "srpte", "fspe", "ps", "las"];
+    Some(match fig {
+        // Fig. 3 — MST against PS over the sigma x shape grid.
+        3 => vec![Scenario::new("fig3_mst_vs_ps", cfg)
+            .axis("shape", AxisParam::Shape, &GRID)
             .axis("sigma", AxisParam::Sigma, &GRID)
-            .policies(&["psbs", "srpte", "fspe", "ps", "las"])
-            .vs(Reference::OptSrpt);
-            ctx.eval_scenario(&sc)
-        })
-        .collect()
+            .policies(&["srpte", "srpte+ps", "srpte+las", "fspe", "fspe+ps", "fspe+las"])
+            .vs(Reference::Ps)],
+        // Fig. 4 — per-job slowdown ECDF of the §5.1 proposals vs PS,
+        // pooled across repetitions, one table per shape.
+        4 => vec![Scenario::new("fig4_slowdown_ecdf", cfg)
+            .split_axis("shape", AxisParam::Shape, &[0.5, 0.25, 0.125])
+            .policies(&["ps", "srpte+ps", "srpte+las", "fspe+ps", "fspe+las"])
+            .metric(Metric::PooledEcdf { points: 128, decades: 3.0, tail_above: None })],
+        // Fig. 5 — MST / optimal vs shape, all policies (sigma = 0.5).
+        5 => vec![Scenario::new("fig5_mst_vs_shape", cfg)
+            .axis("shape", AxisParam::Shape, &GRID)
+            .policies(&["psbs", "srpte", "fspe", "ps", "las", "fifo"])
+            .vs(Reference::OptSrpt)],
+        // Fig. 6 — MST / optimal vs sigma for three heavy-tailed shapes.
+        6 => vec![Scenario::new("fig6_mst_vs_sigma", cfg)
+            .split_axis("shape", AxisParam::Shape, &[0.5, 0.25, 0.125])
+            .axis("sigma", AxisParam::Sigma, &GRID)
+            .policies(&grid_policies)
+            .vs(Reference::OptSrpt)],
+        // Fig. 8 — per-job slowdown CDF at the defaults + tail numbers.
+        8 => vec![Scenario::new("fig8_perjob_slowdown_cdf", cfg)
+            .policies(&["fifo", "srpte", "fspe", "ps", "las", "psbs"])
+            .metric(Metric::PooledEcdf { points: 128, decades: 4.0, tail_above: Some(100.0) })],
+        // Fig. 10 — Pareto job sizes, alpha in {2, 1}.
+        10 => vec![Scenario::new("fig10_pareto", cfg)
+            .split_axis("alpha", AxisParam::Alpha, &[2.0, 1.0])
+            .axis("sigma", AxisParam::Sigma, &GRID)
+            .policies(&grid_policies)
+            .vs(Reference::OptSrpt)],
+        // Figs. 12/13 — trace replay: MST / optimal vs sigma.
+        12 => vec![trace_scenario("fig12_facebook", TraceName::Facebook, njobs)],
+        13 => vec![trace_scenario("fig13_ircache", TraceName::Ircache, njobs)],
+        // Fig. 14 — impact of load and timeshape (appendix A.2).
+        14 => vec![
+            Scenario::new("fig14a_load", cfg)
+                .axis("load", AxisParam::Load, &[0.5, 0.7, 0.9, 0.95, 0.999])
+                .policies(&grid_policies)
+                .vs(Reference::OptSrpt),
+            Scenario::new("fig14b_timeshape", cfg)
+                .axis("timeshape", AxisParam::Timeshape, &GRID)
+                .policies(&grid_policies)
+                .vs(Reference::OptSrpt),
+        ],
+        // Fig. 15 — PSBS vs PS across shape x {load, timeshape, njobs}.
+        15 => {
+            let sub = |name: &str, label: &str, param: AxisParam, values: &[f64]| {
+                Scenario::new(name, cfg)
+                    .axis("shape", AxisParam::Shape, &GRID)
+                    .axis(label, param, values)
+                    .policy_as("psbs_over_ps", "psbs")
+                    .vs(Reference::Ps)
+            };
+            let njob_grid: Vec<f64> = [1_000usize, 10_000, 100_000]
+                .iter()
+                .map(|&n| n.min(njobs * 10) as f64)
+                .collect();
+            vec![
+                sub("fig15a_load", "load", AxisParam::Load, &[0.5, 0.9, 0.999]),
+                sub("fig15b_timeshape", "timeshape", AxisParam::Timeshape, &[0.125, 1.0, 4.0]),
+                sub("fig15c_njobs", "njobs", AxisParam::Njobs, &njob_grid),
+            ]
+        }
+        _ => return None,
+    })
+}
+
+/// Figs. 12/13 share one shape: replay the stand-in trace (capped at
+/// the published record count) across the sigma grid.
+fn trace_scenario(name: &str, trace: TraceName, njobs: usize) -> Scenario {
+    let spec = TraceSpec {
+        trace,
+        njobs: njobs.min(trace.stats().jobs),
+        load: 0.9,
+        sigma: 0.5,
+    };
+    Scenario::with_workload(name, spec)
+        .axis("sigma", AxisParam::Sigma, &GRID)
+        .policies(&["psbs", "fspe", "srpte", "ps", "las"])
+        .vs(Reference::OptSrpt)
+}
+
+/// `(file name, canonical TOML)` pairs for one exported figure: what
+/// `psbs scenario export` writes and what `scenarios/` commits.
+/// Single-scenario figures export as `figN.toml`; multi-scenario ones
+/// as `<scenario name>.toml`.
+pub fn export_files(fig: u64, njobs: usize) -> Option<Vec<(String, String)>> {
+    let scs = scenarios_for(fig, njobs)?;
+    let single = scs.len() == 1;
+    Some(
+        scs.iter()
+            .map(|sc| {
+                let fname = if single {
+                    format!("fig{fig}.toml")
+                } else {
+                    format!("{}.toml", sc.name)
+                };
+                (fname, sc.to_toml())
+            })
+            .collect(),
+    )
+}
+
+pub fn fig3(ctx: &Ctx) -> Vec<Table> {
+    ctx.eval_scenarios(&scenarios_for(3, ctx.njobs).unwrap())
+}
+
+pub fn fig4(ctx: &Ctx) -> Vec<Table> {
+    ctx.eval_scenarios(&scenarios_for(4, ctx.njobs).unwrap())
+}
+
+pub fn fig5(ctx: &Ctx) -> Vec<Table> {
+    ctx.eval_scenarios(&scenarios_for(5, ctx.njobs).unwrap())
+}
+
+pub fn fig6(ctx: &Ctx) -> Vec<Table> {
+    ctx.eval_scenarios(&scenarios_for(6, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
@@ -319,40 +386,7 @@ fn conditional_via_runtime(ctx: &Ctx, jobs: &[Job], slowdowns: &[f64]) -> Vec<(f
 // Fig. 8 — per-job slowdown CDF, defaults, + tail zoom numbers.
 // --------------------------------------------------------------------
 pub fn fig8(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["fifo", "srpte", "fspe", "ps", "las", "psbs"];
-    let thresholds = metrics::log_thresholds(128, 4.0);
-    let cfg = ctx.cfg();
-    let seed = ctx.seed;
-    let mut t = Table::new(
-        "fig8_perjob_slowdown_cdf",
-        ["slowdown"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    let mut tails = Table::new(
-        "fig8_tail_above_100",
-        vec!["policy_idx".to_string(), "frac_above_100".to_string()],
-    );
-    // Per-policy batches of parallel reps, as in fig4/fig7: flat peak
-    // memory, serial pooling order.
-    let rep_items: Vec<u64> = (0..ctx.reps).collect();
-    let mut ecdfs = Vec::new();
-    for (pi, &policy) in policies.iter().enumerate() {
-        let runs = ctx.par_runs(&rep_items, |&r| {
-            let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
-            run_slowdowns(policy, &jobs)
-        });
-        let mut pooled = Vec::new();
-        for slow in runs {
-            pooled.extend(slow);
-        }
-        tails.push(vec![pi as f64, metrics::frac_above(&pooled, 100.0)]);
-        ecdfs.push(metrics::slowdown_ecdf(&pooled, &thresholds));
-    }
-    for (i, &thr) in thresholds.iter().enumerate() {
-        let mut row = vec![thr];
-        row.extend(ecdfs.iter().map(|e| e[i]));
-        t.push(row);
-    }
-    vec![t, tails]
+    ctx.eval_scenarios(&scenarios_for(8, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
@@ -437,21 +471,7 @@ pub fn fig9(ctx: &Ctx) -> Vec<Table> {
 // Fig. 10 — Pareto job sizes, alpha in {2, 1}.
 // --------------------------------------------------------------------
 pub fn fig10(ctx: &Ctx) -> Vec<Table> {
-    [2.0, 1.0]
-        .iter()
-        .map(|&alpha| {
-            let base = SynthConfig {
-                size_dist: SizeDist::Pareto { alpha },
-                njobs: ctx.njobs,
-                ..SynthConfig::default()
-            };
-            let sc = Scenario::new(format!("fig10_pareto_alpha{alpha}"), base)
-                .axis("sigma", AxisParam::Sigma, &GRID)
-                .policies(&["psbs", "srpte", "fspe", "ps", "las"])
-                .vs(Reference::OptSrpt);
-            ctx.eval_scenario(&sc)
-        })
-        .collect()
+    ctx.eval_scenarios(&scenarios_for(10, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
@@ -476,95 +496,31 @@ pub fn fig11(ctx: &Ctx) -> Vec<Table> {
 }
 
 // --------------------------------------------------------------------
-// Figs. 12/13 — trace replay: MST / optimal vs sigma.
+// Figs. 12/13 — trace replay: MST / optimal vs sigma.  Trace cells
+// flow through the same planner as synthetic ones (each (trace, seed)
+// replay synthesized once, the SRPT optimum once per seed).
 // --------------------------------------------------------------------
 pub fn fig12(ctx: &Ctx) -> Vec<Table> {
-    vec![trace_fig("fig12_facebook", &traces::FACEBOOK, ctx, ctx.njobs.min(24_443))]
+    ctx.eval_scenarios(&scenarios_for(12, ctx.njobs).unwrap())
 }
 
 pub fn fig13(ctx: &Ctx) -> Vec<Table> {
     // Full IRCache is 206 914 requests; scale by ctx.njobs for speed.
-    vec![trace_fig("fig13_ircache", &traces::IRCACHE, ctx, ctx.njobs.min(206_914))]
-}
-
-fn trace_fig(name: &str, stats: &traces::TraceStats, ctx: &Ctx, njobs: usize) -> Table {
-    let policies = ["psbs", "fspe", "srpte", "ps", "las"];
-    let mut t = Table::new(
-        name,
-        ["sigma"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    let seed0 = ctx.seed;
-    // One work item per (sigma, repetition): synthesize the replay and
-    // return the per-policy MST/opt ratios for that seed.
-    let items: Vec<(f64, u64)> = GRID
-        .iter()
-        .flat_map(|&sigma| (0..ctx.reps).map(move |r| (sigma, r)))
-        .collect();
-    let ratios = ctx.par_runs(&items, |&(sigma, r)| {
-        let seed = seed0.wrapping_add(r * 104_729);
-        let mut recs = traces::synth_trace(stats, seed);
-        recs.truncate(njobs);
-        let jobs = traces::to_jobs(&recs, 0.9, sigma, seed);
-        let opt = Reference::OptSrpt.mst(&jobs);
-        policies.iter().map(|p| run_mst(p, &jobs) / opt).collect::<Vec<f64>>()
-    });
-    let mut it = ratios.into_iter();
-    for &sigma in &GRID {
-        let mut accs: Vec<Repetitions> = policies.iter().map(|_| Default::default()).collect();
-        for _ in 0..ctx.reps {
-            let rs = it.next().unwrap();
-            for (acc, v) in accs.iter_mut().zip(rs) {
-                acc.push(v);
-            }
-        }
-        let mut row = vec![sigma];
-        row.extend(accs.iter().map(|a| a.mean()));
-        t.push(row);
-    }
-    t
+    ctx.eval_scenarios(&scenarios_for(13, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
 // Fig. 14 — impact of load and timeshape (appendix A.2).
 // --------------------------------------------------------------------
 pub fn fig14(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["psbs", "srpte", "fspe", "ps", "las"];
-    let load = Scenario::new("fig14a_load", ctx.cfg())
-        .axis("load", AxisParam::Load, &[0.5, 0.7, 0.9, 0.95, 0.999])
-        .policies(&policies)
-        .vs(Reference::OptSrpt);
-    let timeshape = Scenario::new("fig14b_timeshape", ctx.cfg())
-        .axis("timeshape", AxisParam::Timeshape, &GRID)
-        .policies(&policies)
-        .vs(Reference::OptSrpt);
-    vec![ctx.eval_scenario(&load), ctx.eval_scenario(&timeshape)]
+    ctx.eval_scenarios(&scenarios_for(14, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
 // Fig. 15 — PSBS vs PS across shape x {load, timeshape, njobs}.
 // --------------------------------------------------------------------
 pub fn fig15(ctx: &Ctx) -> Vec<Table> {
-    // Each sub-figure is a (shape x secondary) grid of single psbs/PS
-    // ratio cells.
-    let sub = |name: &str, label: &str, param: AxisParam, values: &[f64]| {
-        Scenario::new(name, ctx.cfg())
-            .axis("shape", AxisParam::Shape, &GRID)
-            .axis(label, param, values)
-            .policy_as("psbs_over_ps", "psbs")
-            .vs(Reference::Ps)
-    };
-    let njob_grid: Vec<f64> = [1_000usize, 10_000, 100_000]
-        .iter()
-        .map(|&n| n.min(ctx.njobs * 10) as f64)
-        .collect();
-    [
-        sub("fig15a_load", "load", AxisParam::Load, &[0.5, 0.9, 0.999]),
-        sub("fig15b_timeshape", "timeshape", AxisParam::Timeshape, &[0.125, 1.0, 4.0]),
-        sub("fig15c_njobs", "njobs", AxisParam::Njobs, &njob_grid),
-    ]
-    .iter()
-    .map(|sc| ctx.eval_scenario(sc))
-    .collect()
+    ctx.eval_scenarios(&scenarios_for(15, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
@@ -580,7 +536,7 @@ pub fn ablation_wv(ctx: &Ctx) -> Vec<Table> {
         .axis("sigma", AxisParam::Sigma, &GRID)
         .policies(&["psbs", "psbs-paperlit", "fspe", "fspe+ps"])
         .vs(Reference::OptSrpt);
-    let t = ctx.eval_scenario(&sc);
+    let t = sc.table(ctx.params(), ctx.threads, ctx.share);
 
     // The real cost of the literal pseudocode is unbounded state: a job
     // that goes late never leaves the virtual system (its weight stays
@@ -871,6 +827,53 @@ mod tests {
                     assert_eq!(row.len(), t.header.len(), "fig {f}: ragged row");
                     assert!(row[0].is_finite(), "fig {f}: non-finite x");
                 }
+            }
+        }
+    }
+
+    /// Golden check for the scenario-file path: loading the committed
+    /// `scenarios/fig6.toml`, rescaling it to test size and running it
+    /// through the generic executor is bit-identical to the built-in
+    /// `fig6()` path.
+    #[test]
+    fn fig6_scenario_file_reproduces_builtin_bitwise() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/fig6.toml");
+        let loaded = Scenario::load(path).unwrap().with_njobs(160);
+        let builtin = &scenarios_for(6, 160).unwrap()[0];
+        assert_eq!(&loaded, builtin, "committed fig6.toml drifted from the declaration");
+        let ctx = Ctx { reps: 2, njobs: 160, seed: 19, threads: 2, ..Default::default() };
+        let from_file = loaded.tables(ctx.params(), ctx.threads, ctx.share);
+        assert_eq!(table_bits(&from_file), table_bits(&fig6(&ctx)));
+    }
+
+    /// Every committed scenario file is byte-identical to what
+    /// `psbs scenario export` would write today: the files in
+    /// `scenarios/` can never drift from the in-binary declarations.
+    #[test]
+    fn committed_scenario_files_match_exports() {
+        for fig in EXPORTED_FIGS {
+            for (fname, toml) in export_files(fig, 10_000).unwrap() {
+                let path = format!("{}/scenarios/{fname}", env!("CARGO_MANIFEST_DIR"));
+                let committed = std::fs::read_to_string(&path)
+                    .unwrap_or_else(|e| panic!("missing committed scenario {path}: {e}"));
+                assert_eq!(
+                    committed, toml,
+                    "scenarios/{fname} differs from `psbs scenario export fig{fig}`"
+                );
+            }
+        }
+    }
+
+    /// Exported scenarios parse back to the exact declarations (the
+    /// file format loses nothing the figures need).
+    #[test]
+    fn exported_scenarios_parse_back_exactly() {
+        for fig in EXPORTED_FIGS {
+            let scs = scenarios_for(fig, 10_000).unwrap();
+            for sc in &scs {
+                let parsed = Scenario::parse_toml(&sc.to_toml())
+                    .unwrap_or_else(|e| panic!("fig{fig} ({}) export does not parse: {e}", sc.name));
+                assert_eq!(&parsed, sc, "fig{fig} ({})", sc.name);
             }
         }
     }

@@ -11,6 +11,9 @@
 //!   a synthetic open-loop client, reporting latency/throughput;
 //! * `gen-trace` — write a synthetic stand-in trace (Facebook/IRCache
 //!   statistics) in SWIM TSV form;
+//! * `scenario`  — export the built-in figure scenarios as `.toml`
+//!   files (`psbs scenario export fig6`); `psbs sweep --scenario`
+//!   runs any such file;
 //! * `dominance` — empirical check of the §3 theorem on random
 //!   workloads (Pri_S vs PS/DPS, PSBS vs DPS).
 
@@ -40,14 +43,14 @@ fn main() {
         Some("replay") => cmd_replay(&parsed),
         Some("serve") => cmd_serve(&parsed),
         Some("gen-trace") => cmd_gen_trace(&parsed),
+        Some("scenario") => cmd_scenario(&parsed),
         Some("dominance") => cmd_dominance(&parsed),
         Some("estimate") => cmd_estimate(&parsed),
-        Some("policies") => {
+        Some("policies") => parsed.check_unknown().map(|()| {
             for p in sched::ALL_POLICIES {
                 println!("{p}");
             }
-            Ok(())
-        }
+        }),
         Some(other) => Err(format!("unknown subcommand: {other}\n{USAGE}")),
         None => Err(USAGE.to_string()),
     };
@@ -61,13 +64,17 @@ const USAGE: &str = "\
 usage: psbs <subcommand> [options]
   simulate   --policy P --shape S --sigma E --load L --njobs N --seed K [--weights-beta B] [--pareto ALPHA] [--timeshape T]
   sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge] [--threads T] [--no-share]
-             [--policies P1,P2,... [--axis shape|sigma|load|timeshape|njobs|beta] [--reference opt|ps|none]]
+             [--scenario FILE.toml]
+             [--policies P1,P2,... [--axis PARAM[=V1,V2,...]]... [--reference opt|ps|none]]
              (--threads defaults to the machine's available parallelism; 1 = exact serial path — results are bit-identical either
-              way, as is the shared-workload planner vs --no-share; --policies sweeps a custom policy set — composed specs like
-              cluster(k=4,dispatch=leastwork,inner=psbs) work anywhere a bare policy name does)
+              way, as is the shared-workload planner vs --no-share; --scenario runs a scenario file (see scenarios/README.md);
+              --policies sweeps a custom policy set — composed specs like cluster(k=4,dispatch=leastwork,inner=psbs) work anywhere
+              a bare policy name does; --axis repeats for multi-axis cross-product grids, PARAM in
+              shape|sigma|load|timeshape|njobs|beta|alpha, values optional — e.g. --axis sigma=0.25,0.5,1 --axis load=0.7,0.9)
   replay     --trace FILE --format swim|squid [--policy P] [--sigma E] [--load L] [--seed K]
   serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
   gen-trace  --stats facebook|ircache --out FILE [--seed K]
+  scenario   export <figN|all> [--dir scenarios] [--njobs N]  (dump built-in figure scenarios as .toml files)
   dominance  [--cases N] [--njobs J] [--seed K]
   estimate   [--shape S] [--njobs N] [--seed K] (compare job-size estimators)
   policies   (list scheduling disciplines)";
@@ -127,16 +134,58 @@ fn cmd_simulate(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse one `--axis` occurrence: `name` (default grid) or
+/// `name=v1,v2,...` (explicit value list).
+fn parse_axis_arg(s: &str) -> Result<(String, AxisParam, Vec<f64>), String> {
+    let (name, vals) = match s.split_once('=') {
+        None => (s, None),
+        Some((name, vals)) => (name, Some(vals)),
+    };
+    let name = name.trim();
+    let param = AxisParam::parse(name).ok_or_else(|| format!("unknown --axis {name}"))?;
+    let values: Vec<f64> = match vals {
+        Some(vals) => {
+            let mut out = Vec::new();
+            for v in vals.split(',').map(str::trim).filter(|v| !v.is_empty()) {
+                out.push(v.parse().map_err(|_| format!("--axis {name}: not a number: {v}"))?);
+            }
+            if out.is_empty() {
+                return Err(format!("--axis {name}: empty value list"));
+            }
+            out
+        }
+        // Each axis gets a default grid in its own natural units (the
+        // fractional shape/sigma GRID would be nonsense for njobs or
+        // load).
+        None => match param {
+            AxisParam::Shape | AxisParam::Sigma | AxisParam::Timeshape | AxisParam::Alpha => {
+                figures::GRID.to_vec()
+            }
+            AxisParam::Load => vec![0.5, 0.7, 0.9, 0.95, 0.999],
+            AxisParam::Njobs => vec![1_000.0, 10_000.0, 100_000.0],
+            AxisParam::Beta => vec![0.0, 0.5, 1.0, 2.0],
+        },
+    };
+    Ok((name.to_string(), param, values))
+}
+
 fn cmd_sweep(a: &Args) -> Result<(), String> {
     let fig = a.get_opt("fig").map(|f| f.parse::<u64>().map_err(|_| "--fig: integer")).transpose()?;
     let svg = a.get_bool("svg")?;
+    let scenario_path = a.get_opt("scenario");
+    let njobs_opt = a.get_opt("njobs");
     let policies = a.get_list("policies");
-    let axis_opt = a.get_opt("axis");
+    let axis_args = a.get_multi("axis");
     let reference_opt = a.get_opt("reference");
-    if policies.is_none() && (axis_opt.is_some() || reference_opt.is_some()) {
+    if policies.is_none() && (!axis_args.is_empty() || reference_opt.is_some()) {
         return Err("--axis/--reference only apply to a --policies sweep".into());
     }
-    let axis = axis_opt.unwrap_or_else(|| "sigma".to_string());
+    if scenario_path.is_some() && (fig.is_some() || policies.is_some()) {
+        return Err("--scenario is exclusive with --fig/--policies".into());
+    }
+    if policies.is_some() && fig.is_some() {
+        return Err("--fig is exclusive with a --policies sweep".into());
+    }
     let reference = reference_opt.unwrap_or_else(|| "opt".to_string());
     let ctx = Ctx {
         reps: a.get_u64("reps", 5)?,
@@ -162,21 +211,35 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         if ctx.share { "planner-shared" } else { "per-cell" }
     );
 
+    // A scenario file: the whole experiment lives in the .toml; only
+    // execution knobs (--reps/--seed/--threads/...) come from the CLI,
+    // plus an explicit --njobs rescale when given.
+    if let Some(path) = scenario_path {
+        let mut sc = Scenario::load(&path)?;
+        if njobs_opt.is_some() {
+            sc = sc.with_njobs(ctx.njobs);
+        }
+        let t0 = std::time::Instant::now();
+        for t in ctx.eval_scenario(&sc) {
+            emit_table(&t, &ctx, svg)?;
+        }
+        println!("# scenario {} done in {:.1?}\n", sc.name, t0.elapsed());
+        return Ok(());
+    }
+
     // Custom scenario sweep: a user-declared policy set (composed
-    // specs welcome) over one grid axis, through the same planner as
-    // the paper figures.
+    // specs welcome) over one or more grid axes (cross-product),
+    // through the same planner as the paper figures.
     if let Some(policies) = policies {
         let mut sc = Scenario::new("custom_sweep", SynthConfig::default().with_njobs(ctx.njobs));
-        let param = AxisParam::parse(&axis).ok_or_else(|| format!("unknown --axis {axis}"))?;
-        // Each axis gets a grid in its own natural units (the fractional
-        // shape/sigma GRID would be nonsense for njobs or load).
-        let values: Vec<f64> = match param {
-            AxisParam::Shape | AxisParam::Sigma | AxisParam::Timeshape => figures::GRID.to_vec(),
-            AxisParam::Load => vec![0.5, 0.7, 0.9, 0.95, 0.999],
-            AxisParam::Njobs => vec![1_000.0, 10_000.0, 100_000.0],
-            AxisParam::Beta => vec![0.0, 0.5, 1.0, 2.0],
+        let axes: Vec<(String, AxisParam, Vec<f64>)> = if axis_args.is_empty() {
+            vec![parse_axis_arg("sigma")?]
+        } else {
+            axis_args.iter().map(|s| parse_axis_arg(s)).collect::<Result<_, _>>()?
         };
-        sc = sc.axis(axis.clone(), param, &values);
+        for (name, param, values) in &axes {
+            sc = sc.axis(name.clone(), *param, values);
+        }
         for p in &policies {
             let spec = PolicySpec::parse(p)?;
             sc = sc.policy_as(spec.to_string(), spec);
@@ -187,8 +250,9 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
             "none" => {}
             other => return Err(format!("unknown --reference {other} (opt|ps|none)")),
         }
+        sc.validate()?;
         let t0 = std::time::Instant::now();
-        let t = ctx.eval_scenario(&sc);
+        let t = sc.table(ctx.params(), ctx.threads, ctx.share);
         emit_table(&t, &ctx, svg)?;
         println!("# custom sweep done in {:.1?}\n", t0.elapsed());
         return Ok(());
@@ -205,6 +269,48 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
             emit_table(t, &ctx, svg)?;
         }
         println!("# fig {f} done in {:.1?}\n", t0.elapsed());
+    }
+    Ok(())
+}
+
+/// `psbs scenario export <figN|all>` — dump the built-in figure
+/// scenarios as canonical `.toml` files (the committed `scenarios/`
+/// directory is exactly this output at the default scale).
+fn cmd_scenario(a: &Args) -> Result<(), String> {
+    let action = a.positional(0).ok_or_else(|| format!("missing action\n{USAGE}"))?;
+    if action != "export" {
+        return Err(format!("unknown scenario action `{action}` (expected `export`)"));
+    }
+    let what = a
+        .positional(1)
+        .ok_or_else(|| format!("scenario export: which figure? (figN or all)\n{USAGE}"))?;
+    let dir = a.get("dir", "scenarios");
+    let njobs = a.get_u64("njobs", 10_000)? as usize;
+    a.check_unknown()?;
+
+    let figs: Vec<u64> = if what == "all" {
+        figures::EXPORTED_FIGS.to_vec()
+    } else {
+        let n: u64 = what
+            .strip_prefix("fig")
+            .unwrap_or(&what)
+            .parse()
+            .map_err(|_| format!("scenario export: expected figN or all, got `{what}`"))?;
+        if !figures::EXPORTED_FIGS.contains(&n) {
+            return Err(format!(
+                "fig {n} is not scenario-shaped; exportable: {:?}",
+                figures::EXPORTED_FIGS
+            ));
+        }
+        vec![n]
+    };
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+    for fig in figs {
+        for (fname, toml) in figures::export_files(fig, njobs).unwrap() {
+            let path = format!("{dir}/{fname}");
+            std::fs::write(&path, &toml).map_err(|e| format!("writing {path}: {e}"))?;
+            println!("wrote {path}");
+        }
     }
     Ok(())
 }
@@ -301,11 +407,9 @@ fn cmd_gen_trace(a: &Args) -> Result<(), String> {
     let out = a.get_opt("out").ok_or("missing --out FILE")?;
     let seed = a.get_u64("seed", 42)?;
     a.check_unknown()?;
-    let stats = match stats_name.as_str() {
-        "facebook" => &traces::FACEBOOK,
-        "ircache" => &traces::IRCACHE,
-        other => return Err(format!("unknown stats preset: {other}")),
-    };
+    let stats = traces::TraceName::from_name(&stats_name)
+        .ok_or_else(|| format!("unknown stats preset: {stats_name}"))?
+        .stats();
     let recs = traces::synth_trace(stats, seed);
     traces::write_swim(&recs, &out).map_err(|e| e.to_string())?;
     println!("wrote {} records to {out}", recs.len());

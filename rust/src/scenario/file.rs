@@ -1,0 +1,679 @@
+//! Persistable scenario files: a dependency-free TOML-subset
+//! serialization of [`Scenario`], so experiment grids live *outside*
+//! the binary (ROADMAP scenario-layer item).  `psbs sweep --scenario
+//! path.toml` runs one; `psbs scenario export` dumps the built-in
+//! figure scenarios into `scenarios/` (see `scenarios/README.md` for
+//! the schema).
+//!
+//! ## Grammar (TOML subset)
+//!
+//! ```text
+//! name = "fig6_mst_vs_sigma"      # top-level keys first
+//! metric = "mean"                 # "mean" | "ecdf"
+//! reference = "opt"               # "opt" | "ps" (omit for raw MST)
+//!
+//! [workload]                      # exactly one
+//! kind = "synthetic"              # "synthetic" | "trace"
+//! shape = 0.25                    # or: alpha = 2  (Pareto sizes)
+//! sigma = 0.5
+//! timeshape = 1
+//! load = 0.9
+//! njobs = 10000
+//! beta = 0
+//!
+//! [[axis]]                        # zero or more
+//! param = "shape"                 # shape|sigma|load|timeshape|njobs|beta|alpha
+//! split = true                    # one table per value (default: row axis)
+//! values = [0.5, 0.25, 0.125]
+//!
+//! [[policy]]                      # one or more
+//! spec = "psbs"                   # any PolicySpec string
+//! label = "psbs_over_ps"          # optional column-label override
+//! ```
+//!
+//! Supported values: double-quoted strings (no escapes), numbers,
+//! `true`/`false`, and flat numeric arrays.  `#` starts a comment
+//! (outside strings).  Unknown keys are hard errors, exactly like the
+//! CLI's unknown-flag policy — a typo must not silently fall back to a
+//! default in the middle of an experiment.
+//!
+//! [`Scenario::to_toml`] renders the canonical form (fixed key order,
+//! shortest-round-trip float formatting, defaults omitted only for
+//! `label`/`split`) and [`Scenario::parse_toml`] inverts it exactly;
+//! `tests::random_scenarios_round_trip_property` pins the pair the
+//! same way `PolicySpec`'s grammar is pinned.
+
+use super::{
+    Axis, AxisParam, Metric, PolicySpec, Reference, Scenario, TraceSpec, WorkloadSpec,
+};
+use crate::workload::traces::TraceName;
+use crate::workload::{SizeDist, SynthConfig};
+use std::fmt;
+
+impl Scenario {
+    /// Render the canonical scenario-file form.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        match self.metric {
+            Metric::Mean => s.push_str("metric = \"mean\"\n"),
+            Metric::PooledEcdf { points, decades, tail_above } => {
+                s.push_str("metric = \"ecdf\"\n");
+                s.push_str(&format!("points = {points}\n"));
+                s.push_str(&format!("decades = {decades}\n"));
+                if let Some(t) = tail_above {
+                    s.push_str(&format!("tail_above = {t}\n"));
+                }
+            }
+        }
+        if let Some(r) = self.reference {
+            let r = match r {
+                Reference::OptSrpt => "opt",
+                Reference::Ps => "ps",
+            };
+            s.push_str(&format!("reference = \"{r}\"\n"));
+        }
+        s.push_str("\n[workload]\n");
+        match self.workload {
+            WorkloadSpec::Synth(c) => {
+                s.push_str("kind = \"synthetic\"\n");
+                match c.size_dist {
+                    SizeDist::Weibull { shape } => s.push_str(&format!("shape = {shape}\n")),
+                    SizeDist::Pareto { alpha } => s.push_str(&format!("alpha = {alpha}\n")),
+                }
+                s.push_str(&format!("sigma = {}\n", c.sigma));
+                s.push_str(&format!("timeshape = {}\n", c.timeshape));
+                s.push_str(&format!("load = {}\n", c.load));
+                s.push_str(&format!("njobs = {}\n", c.njobs));
+                s.push_str(&format!("beta = {}\n", c.beta));
+            }
+            WorkloadSpec::Trace(t) => {
+                s.push_str("kind = \"trace\"\n");
+                s.push_str(&format!("trace = \"{}\"\n", t.trace.name()));
+                s.push_str(&format!("njobs = {}\n", t.njobs));
+                s.push_str(&format!("load = {}\n", t.load));
+                s.push_str(&format!("sigma = {}\n", t.sigma));
+            }
+        }
+        for axis in &self.axes {
+            s.push_str("\n[[axis]]\n");
+            s.push_str(&format!("param = \"{}\"\n", axis.param.name()));
+            if axis.label != axis.param.name() {
+                s.push_str(&format!("label = \"{}\"\n", axis.label));
+            }
+            if axis.split {
+                s.push_str("split = true\n");
+            }
+            let vals: Vec<String> = axis.values.iter().map(|v| format!("{v}")).collect();
+            s.push_str(&format!("values = [{}]\n", vals.join(", ")));
+        }
+        for (label, spec) in &self.policies {
+            s.push_str("\n[[policy]]\n");
+            s.push_str(&format!("spec = \"{spec}\"\n"));
+            if *label != spec.to_string() {
+                s.push_str(&format!("label = \"{label}\"\n"));
+            }
+        }
+        s
+    }
+
+    /// Parse a scenario file.  Errors carry the offending line number.
+    pub fn parse_toml(text: &str) -> Result<Scenario, String> {
+        let doc = Doc::parse(text)?;
+        doc.into_scenario()
+    }
+
+    /// Load a scenario from a file path.
+    pub fn load(path: &str) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Scenario::parse_toml(&text).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+/// The canonical rendering — `format!("{sc}")` is a scenario file.
+impl fmt::Display for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_toml())
+    }
+}
+
+/// One parsed value.
+#[derive(Debug, Clone, PartialEq)]
+enum Val {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<f64>),
+}
+
+/// A flat key list for one section, with the line each key came from.
+#[derive(Debug, Default)]
+struct Section {
+    keys: Vec<(String, Val, usize)>,
+}
+
+impl Section {
+    fn get(&self, key: &str) -> Option<&Val> {
+        self.keys.iter().find(|(k, _, _)| k == key).map(|(_, v, _)| v)
+    }
+
+    fn str(&self, key: &str) -> Result<Option<&str>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Val::Str(s)) => Ok(Some(s)),
+            Some(v) => Err(format!("`{key}` must be a string, got {v:?}")),
+        }
+    }
+
+    fn num(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Val::Num(n)) => Ok(Some(*n)),
+            Some(v) => Err(format!("`{key}` must be a number, got {v:?}")),
+        }
+    }
+
+    fn usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.num(key)? {
+            None => Ok(None),
+            Some(n) if n >= 0.0 && n == n.trunc() => Ok(Some(n as usize)),
+            Some(n) => Err(format!("`{key}` must be a non-negative integer, got {n}")),
+        }
+    }
+
+    fn bool(&self, key: &str) -> Result<Option<bool>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Val::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(format!("`{key}` must be true or false, got {v:?}")),
+        }
+    }
+
+    fn arr(&self, key: &str) -> Result<Option<&[f64]>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Val::Arr(a)) => Ok(Some(a)),
+            Some(v) => Err(format!("`{key}` must be a numeric array, got {v:?}")),
+        }
+    }
+
+    /// Hard-error on any key outside `allowed` (typos must not fall
+    /// back to defaults).
+    fn check_keys(&self, what: &str, allowed: &[&str]) -> Result<(), String> {
+        for (k, _, line) in &self.keys {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("line {line}: {what}: unknown key `{k}`"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A parsed scenario document: top-level keys plus the three section
+/// kinds the schema defines.
+#[derive(Debug, Default)]
+struct Doc {
+    top: Section,
+    workload: Option<Section>,
+    axes: Vec<Section>,
+    policies: Vec<Section>,
+}
+
+/// Which section subsequent `key = value` lines land in.
+enum Cursor {
+    Top,
+    Workload,
+    Axis,
+    Policy,
+}
+
+impl Doc {
+    fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut cursor = Cursor::Top;
+        for (ln, raw) in text.lines().enumerate() {
+            let ln = ln + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                match header.trim() {
+                    "axis" => {
+                        doc.axes.push(Section::default());
+                        cursor = Cursor::Axis;
+                    }
+                    "policy" => {
+                        doc.policies.push(Section::default());
+                        cursor = Cursor::Policy;
+                    }
+                    other => return Err(format!("line {ln}: unknown section [[{other}]]")),
+                }
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                match header.trim() {
+                    "workload" => {
+                        if doc.workload.is_some() {
+                            return Err(format!("line {ln}: duplicate [workload] section"));
+                        }
+                        doc.workload = Some(Section::default());
+                        cursor = Cursor::Workload;
+                    }
+                    other => return Err(format!("line {ln}: unknown section [{other}]")),
+                }
+                continue;
+            }
+            let Some((key, rest)) = line.split_once('=') else {
+                return Err(format!("line {ln}: expected `key = value`, got `{line}`"));
+            };
+            let key = key.trim().to_string();
+            let val = parse_val(rest.trim()).map_err(|e| format!("line {ln}: {e}"))?;
+            let section = match cursor {
+                Cursor::Top => &mut doc.top,
+                Cursor::Workload => doc.workload.as_mut().unwrap(),
+                Cursor::Axis => doc.axes.last_mut().unwrap(),
+                Cursor::Policy => doc.policies.last_mut().unwrap(),
+            };
+            if section.get(&key).is_some() {
+                return Err(format!("line {ln}: duplicate key `{key}`"));
+            }
+            section.keys.push((key, val, ln));
+        }
+        Ok(doc)
+    }
+
+    fn into_scenario(self) -> Result<Scenario, String> {
+        self.top.check_keys(
+            "top level",
+            &["name", "metric", "points", "decades", "tail_above", "reference"],
+        )?;
+        let name = self
+            .top
+            .str("name")?
+            .ok_or("missing top-level `name`")?
+            .to_string();
+        let metric = match self.top.str("metric")?.unwrap_or("mean") {
+            "mean" => {
+                for k in ["points", "decades", "tail_above"] {
+                    if self.top.get(k).is_some() {
+                        return Err(format!("`{k}` only applies to metric = \"ecdf\""));
+                    }
+                }
+                Metric::Mean
+            }
+            "ecdf" => Metric::PooledEcdf {
+                points: self.top.usize("points")?.unwrap_or(128),
+                decades: self.top.num("decades")?.unwrap_or(3.0),
+                tail_above: self.top.num("tail_above")?,
+            },
+            other => return Err(format!("unknown metric `{other}` (mean|ecdf)")),
+        };
+        let reference = match self.top.str("reference")? {
+            None | Some("none") => None,
+            Some("opt") => Some(Reference::OptSrpt),
+            Some("ps") => Some(Reference::Ps),
+            Some(other) => return Err(format!("unknown reference `{other}` (opt|ps|none)")),
+        };
+
+        let w = self.workload.as_ref().ok_or("missing [workload] section")?;
+        let workload = match w.str("kind")?.ok_or("[workload]: missing `kind`")? {
+            "synthetic" => {
+                w.check_keys(
+                    "[workload]",
+                    &["kind", "shape", "alpha", "sigma", "timeshape", "load", "njobs", "beta"],
+                )?;
+                let d = SynthConfig::default();
+                let size_dist = match (w.num("shape")?, w.num("alpha")?) {
+                    (Some(_), Some(_)) => {
+                        return Err("[workload]: `shape` and `alpha` are mutually exclusive".into())
+                    }
+                    (None, Some(alpha)) => SizeDist::Pareto { alpha },
+                    (shape, None) => SizeDist::Weibull {
+                        shape: shape.unwrap_or(match d.size_dist {
+                            SizeDist::Weibull { shape } => shape,
+                            SizeDist::Pareto { .. } => unreachable!("default is Weibull"),
+                        }),
+                    },
+                };
+                WorkloadSpec::Synth(SynthConfig {
+                    size_dist,
+                    sigma: w.num("sigma")?.unwrap_or(d.sigma),
+                    timeshape: w.num("timeshape")?.unwrap_or(d.timeshape),
+                    load: w.num("load")?.unwrap_or(d.load),
+                    njobs: w.usize("njobs")?.unwrap_or(d.njobs),
+                    beta: w.num("beta")?.unwrap_or(d.beta),
+                })
+            }
+            "trace" => {
+                w.check_keys("[workload]", &["kind", "trace", "njobs", "load", "sigma"])?;
+                let trace_name = w.str("trace")?.ok_or("[workload]: missing `trace`")?;
+                let trace = TraceName::from_name(trace_name)
+                    .ok_or_else(|| format!("unknown trace `{trace_name}` (facebook|ircache)"))?;
+                WorkloadSpec::Trace(TraceSpec {
+                    trace,
+                    njobs: w.usize("njobs")?.unwrap_or(trace.stats().jobs),
+                    load: w.num("load")?.unwrap_or(0.9),
+                    sigma: w.num("sigma")?.unwrap_or(0.5),
+                })
+            }
+            other => return Err(format!("unknown workload kind `{other}` (synthetic|trace)")),
+        };
+
+        let mut axes = Vec::new();
+        for a in &self.axes {
+            a.check_keys("[[axis]]", &["param", "label", "split", "values"])?;
+            let pname = a.str("param")?.ok_or("[[axis]]: missing `param`")?;
+            let param = AxisParam::parse(pname)
+                .ok_or_else(|| format!("[[axis]]: unknown param `{pname}`"))?;
+            axes.push(Axis {
+                label: a.str("label")?.unwrap_or(pname).to_string(),
+                param,
+                values: a
+                    .arr("values")?
+                    .ok_or("[[axis]]: missing `values`")?
+                    .to_vec(),
+                split: a.bool("split")?.unwrap_or(false),
+            });
+        }
+
+        let mut policies = Vec::new();
+        for p in &self.policies {
+            p.check_keys("[[policy]]", &["spec", "label"])?;
+            let spec_str = p.str("spec")?.ok_or("[[policy]]: missing `spec`")?;
+            let spec = PolicySpec::parse(spec_str)?;
+            let label = p.str("label")?.map(str::to_string).unwrap_or_else(|| spec.to_string());
+            policies.push((label, spec));
+        }
+
+        let sc = Scenario { name, workload, axes, policies, reference, metric };
+        sc.validate()?;
+        Ok(sc)
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse one value: quoted string, numeric array, bool, or number.
+fn parse_val(s: &str) -> Result<Val, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            return Err(format!("unterminated string: {s}"));
+        };
+        if body.contains('"') {
+            return Err(format!("strings cannot contain `\"`: {s}"));
+        }
+        return Ok(Val::Str(body.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            return Err(format!("unterminated array: {s}"));
+        };
+        if body.trim().is_empty() {
+            return Ok(Val::Arr(Vec::new()));
+        }
+        let mut vals = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                // `[0.5,,1]` or `[0.5,]` is a hand-editing slip, not a
+                // value: dropping it silently would shrink the grid.
+                return Err(format!("empty array element in {s}"));
+            }
+            vals.push(
+                part.parse::<f64>()
+                    .map_err(|_| format!("array element is not a number: {part}"))?,
+            );
+        }
+        return Ok(Val::Arr(vals));
+    }
+    match s {
+        "true" => Ok(Val::Bool(true)),
+        "false" => Ok(Val::Bool(false)),
+        _ => s
+            .parse::<f64>()
+            .map(Val::Num)
+            .map_err(|_| format!("not a value (string/number/bool/array): {s}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{property, Config};
+    use crate::util::rng::Rng;
+
+    fn assert_round_trip(sc: &Scenario) {
+        let rendered = sc.to_toml();
+        let parsed = Scenario::parse_toml(&rendered)
+            .unwrap_or_else(|e| panic!("rendered scenario failed to parse: {e}\n{rendered}"));
+        assert_eq!(&parsed, sc, "parse(render(s)) != s\n{rendered}");
+        assert_eq!(parsed.to_toml(), rendered, "render is not a fixpoint");
+    }
+
+    #[test]
+    fn synthetic_mean_scenario_round_trips() {
+        let sc = Scenario::new("fig6_like", SynthConfig::default().with_njobs(500))
+            .split_axis("shape", AxisParam::Shape, &[0.5, 0.25, 0.125])
+            .axis("sigma", AxisParam::Sigma, &[0.125, 0.25, 0.5, 1.0, 2.0, 4.0])
+            .policies(&["psbs", "srpte", "fspe", "ps", "las"])
+            .vs(Reference::OptSrpt);
+        assert_round_trip(&sc);
+    }
+
+    #[test]
+    fn trace_and_ecdf_scenarios_round_trip() {
+        let tr = Scenario::with_workload(
+            "fig12_like",
+            TraceSpec {
+                trace: TraceName::Facebook,
+                njobs: 24_443,
+                load: 0.9,
+                sigma: 0.5,
+            },
+        )
+        .axis("sigma", AxisParam::Sigma, &[0.125, 4.0])
+        .policies(&["psbs", "ps"])
+        .vs(Reference::OptSrpt);
+        assert_round_trip(&tr);
+
+        let ec = Scenario::new("fig8_like", SynthConfig::default())
+            .policies(&["fifo", "srpte", "psbs"])
+            .metric(Metric::PooledEcdf { points: 128, decades: 4.0, tail_above: Some(100.0) });
+        assert_round_trip(&ec);
+    }
+
+    #[test]
+    fn labels_and_composed_specs_round_trip() {
+        let sc = Scenario::new("labelled", SynthConfig::default())
+            .axis("err", AxisParam::Sigma, &[0.5])
+            .policy_as("psbs_over_ps", "psbs")
+            .policy_as(
+                "cluster4",
+                "cluster(k=4,dispatch=leastwork,inner=est(model=lognormal,sigma=2,inner=psbs))",
+            )
+            .vs(Reference::Ps);
+        assert_round_trip(&sc);
+    }
+
+    /// Random scenarios round-trip through render/parse — the schema
+    /// and the renderer cannot drift apart (the `PolicySpec` treatment).
+    #[test]
+    fn random_scenarios_round_trip_property() {
+        fn gen_values(rng: &mut Rng) -> Vec<f64> {
+            (0..1 + rng.below(4)).map(|_| 0.125 * (1 + rng.below(40)) as f64).collect()
+        }
+        fn gen_scenario(rng: &mut Rng) -> Scenario {
+            let workload = if rng.below(4) == 0 {
+                WorkloadSpec::Trace(TraceSpec {
+                    trace: if rng.below(2) == 0 { TraceName::Facebook } else { TraceName::Ircache },
+                    njobs: 100 + rng.below(10_000) as usize,
+                    load: 0.1 * (1 + rng.below(9)) as f64,
+                    sigma: 0.25 * rng.below(8) as f64,
+                })
+            } else {
+                let mut c = SynthConfig::default()
+                    .with_sigma(0.25 * rng.below(8) as f64)
+                    .with_load(0.1 * (1 + rng.below(9)) as f64)
+                    .with_njobs(100 + rng.below(10_000) as usize)
+                    .with_beta(rng.below(3) as f64)
+                    .with_timeshape(0.25 * (1 + rng.below(8)) as f64);
+                if rng.below(3) == 0 {
+                    c.size_dist = SizeDist::Pareto { alpha: 0.5 * (1 + rng.below(4)) as f64 };
+                } else {
+                    c = c.with_shape(0.125 * (1 + rng.below(16)) as f64);
+                }
+                WorkloadSpec::Synth(c)
+            };
+            let is_trace = matches!(workload, WorkloadSpec::Trace(_));
+            let ecdf = rng.below(3) == 0;
+            let mut sc = Scenario::with_workload(format!("s{}", rng.below(1000)), workload);
+            let axis_pool: &[AxisParam] = if is_trace {
+                &[AxisParam::Sigma, AxisParam::Load, AxisParam::Njobs]
+            } else {
+                &[
+                    AxisParam::Shape,
+                    AxisParam::Sigma,
+                    AxisParam::Load,
+                    AxisParam::Timeshape,
+                    AxisParam::Njobs,
+                    AxisParam::Beta,
+                    AxisParam::Alpha,
+                ]
+            };
+            for _ in 0..rng.below(3) {
+                let param = axis_pool[rng.below(axis_pool.len() as u64) as usize];
+                let label = if rng.below(3) == 0 {
+                    format!("x{}", rng.below(10))
+                } else {
+                    param.name().to_string()
+                };
+                let values = gen_values(rng);
+                // ECDF scenarios only carry split axes.
+                if ecdf || rng.below(2) == 0 {
+                    sc = sc.split_axis(label, param, &values);
+                } else {
+                    sc = sc.axis(label, param, &values);
+                }
+            }
+            let specs = ["psbs", "srpte", "ps", "las", "mlfq(levels=12,q0=0.02)",
+                "cluster(k=2,dispatch=roundrobin,inner=psbs)"];
+            for _ in 0..1 + rng.below(3) {
+                let spec = specs[rng.below(specs.len() as u64) as usize];
+                if rng.below(4) == 0 {
+                    sc = sc.policy_as(format!("col{}", rng.below(10)), spec);
+                } else {
+                    sc = sc.policy_as(PolicySpec::from(spec).to_string(), spec);
+                }
+            }
+            if ecdf {
+                sc = sc.metric(Metric::PooledEcdf {
+                    points: 8 + rng.below(120) as usize,
+                    decades: 1.0 + rng.below(4) as f64,
+                    tail_above: if rng.below(2) == 0 { Some(10.0) } else { None },
+                });
+            } else if rng.below(3) > 0 {
+                sc = sc.vs(if rng.below(2) == 0 { Reference::OptSrpt } else { Reference::Ps });
+            }
+            sc
+        }
+        property(
+            "scenario file round-trip",
+            Config { cases: 64, max_size: 3, ..Default::default() },
+            |rng, _| gen_scenario(rng),
+            |sc| {
+                if sc.validate().is_err() {
+                    // The generator can pick the same axis param twice;
+                    // validate() rejects those before they ever render.
+                    return Ok(());
+                }
+                let rendered = sc.to_toml();
+                match Scenario::parse_toml(&rendered) {
+                    Ok(p) if p == *sc && p.to_toml() == rendered => Ok(()),
+                    Ok(p) => Err(format!("round-trip drift:\n--- in ---\n{rendered}\n--- out ---\n{}", p.to_toml())),
+                    Err(e) => Err(format!("`{rendered}` failed to parse: {e}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn comments_and_spacing_are_tolerated() {
+        let text = r#"
+            # a scenario with decorations
+            name = "decorated"   # trailing comment
+            metric = "mean"
+
+            [workload]
+            kind = "synthetic"
+            njobs = 200          # small
+
+            [[axis]]
+            param = "sigma"
+            values = [ 0.5 , 1 ]
+
+            [[policy]]
+            spec = "psbs"        # the "headline" is quoted elsewhere
+        "#;
+        let sc = Scenario::parse_toml(text).unwrap();
+        assert_eq!(sc.name, "decorated");
+        assert_eq!(sc.axes[0].values, vec![0.5, 1.0]);
+        match sc.workload {
+            WorkloadSpec::Synth(c) => assert_eq!(c.njobs, 200),
+            _ => panic!("expected synthetic workload"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_files() {
+        let base = "name = \"t\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n";
+        assert!(Scenario::parse_toml(base).is_ok());
+        for (what, text) in [
+            ("missing name", "metric = \"mean\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("missing workload", "name = \"t\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("no policies", "name = \"t\"\n\n[workload]\nkind = \"synthetic\"\n"),
+            ("unknown top key", &format!("typo = 1\n{base}")),
+            ("unknown section", &format!("{base}\n[wat]\nx = 1\n")),
+            ("unknown axis param", &format!("{base}\n[[axis]]\nparam = \"wat\"\nvalues = [1]\n")),
+            ("axis without values", &format!("{base}\n[[axis]]\nparam = \"sigma\"\n")),
+            ("bad policy spec", "name = \"t\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"nope\"\n"),
+            ("shape and alpha", "name = \"t\"\n\n[workload]\nkind = \"synthetic\"\nshape = 0.5\nalpha = 2\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("trace with shape axis", "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"facebook\"\n\n[[axis]]\nparam = \"shape\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("ecdf with reference", "name = \"t\"\nmetric = \"ecdf\"\nreference = \"ps\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("ecdf points on mean", &format!("points = 9\n{base}")),
+            ("duplicate key", "name = \"t\"\nname = \"u\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("garbage line", &format!("{base}\nwat\n")),
+            ("empty array element", &format!("{base}\n[[axis]]\nparam = \"sigma\"\nvalues = [0.5,,1]\n")),
+            ("trailing array comma", &format!("{base}\n[[axis]]\nparam = \"sigma\"\nvalues = [0.5,]\n")),
+            ("unterminated string", "name = \"t\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+        ] {
+            assert!(Scenario::parse_toml(text).is_err(), "{what} should not parse");
+        }
+    }
+
+    #[test]
+    fn trace_defaults_fill_in() {
+        let text = "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"ircache\"\n\n[[policy]]\nspec = \"psbs\"\n";
+        let sc = Scenario::parse_toml(text).unwrap();
+        match sc.workload {
+            WorkloadSpec::Trace(t) => {
+                assert_eq!(t.trace, TraceName::Ircache);
+                assert_eq!(t.njobs, 206_914);
+                assert_eq!(t.load, 0.9);
+                assert_eq!(t.sigma, 0.5);
+            }
+            _ => panic!("expected trace workload"),
+        }
+    }
+}

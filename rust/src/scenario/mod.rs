@@ -1,5 +1,6 @@
 //! Declarative scenario layer: typed policy specs, scenario
-//! descriptions, and the shared-workload sweep planner.
+//! descriptions, persistable scenario files, and the shared-workload
+//! sweep planner.
 //!
 //! The paper's evaluation (§6–7) — and everything the ROADMAP wants to
 //! grow beyond it — is a grid of *scenarios*: policy x workload shape x
@@ -14,14 +15,25 @@
 //!   `mlfq(levels=12,q0=0.02)`) over the base disciplines.
 //!   [`crate::sched::by_name`] is a compatibility shim over
 //!   [`PolicySpec::parse`].
-//! * [`Scenario`] — a declarative sweep description: base workload
-//!   config x grid axes x policy set x optional [`Reference`]; one
-//!   generic evaluator ([`Scenario::table`]) turns it into a figure
-//!   table, so each `figures::figN` collapses to a ~10-line
-//!   declaration.
+//! * [`Scenario`] — a declarative sweep description: a
+//!   [`WorkloadSpec`] (synthetic Table-1 model or trace-replay
+//!   stand-in) x grid axes (row axes become table columns, *split*
+//!   axes fan out into one table per value) x policy set x
+//!   [`Metric`] x optional [`Reference`]; one generic evaluator
+//!   ([`Scenario::tables`]) turns it into figure tables, so each
+//!   scenario-shaped `figures::figN` collapses to a ~10-line
+//!   declaration — including the pooled-slowdown ECDFs (Figs. 4/8)
+//!   and the trace replays (Figs. 12/13) that used to be bespoke
+//!   work-item code.
+//! * scenario **files** (`file`) — a dependency-free TOML-subset
+//!   serialization of [`Scenario`] (`to_toml`/`parse_toml`,
+//!   round-trip property-tested like `PolicySpec`), so experiment
+//!   grids live *outside* the binary: `psbs sweep --scenario f.toml`
+//!   runs one, `psbs scenario export` dumps the built-ins into
+//!   `scenarios/`.
 //! * the **planner** (`planner`) — evaluates a flat [`SweepCell`] grid
-//!   by grouping cells on their workload config, synthesizing each
-//!   `(config, seed)` workload **once**, running each [`Reference`]
+//!   by grouping cells on their workload spec, synthesizing each
+//!   `(workload, seed)` workload **once**, running each [`Reference`]
 //!   **once per seed**, and fanning the per-policy simulations out
 //!   through [`crate::util::pool`] with cost-aware largest-first
 //!   ordering (an fsp-naive cell costs ~100x a psbs cell) and a
@@ -33,17 +45,23 @@
 //! order — so planner output is bit-identical to the per-cell path of
 //! PR 1 (and to the serial path, for every thread count).
 //! `figures::tests` pins this for Figs. 4/6/9 across `share` x
-//! `threads`.
+//! `threads`, and `tests` below for one pooled and one trace scenario.
 
+pub mod file;
 pub mod planner;
 pub mod spec;
 
-pub use planner::{eval_cells, group_cells, mst_of, mst_of_seeded, slowdowns_of};
+pub use planner::{
+    eval_cells, group_cells, mst_of, mst_of_seeded, slowdowns_of, slowdowns_of_seeded,
+};
 pub use spec::{BasePolicy, Estimated, EstimatorSpec, PolicySpec};
 
 use crate::figures::tables::Table;
+use crate::metrics;
 use crate::sim::Job;
-use crate::workload::SynthConfig;
+use crate::util::pool;
+use crate::workload::traces::{self, TraceName};
+use crate::workload::{SizeDist, SynthConfig};
 
 /// Scalar sweep parameters, detached from `figures::Ctx` so worker
 /// threads never touch the (non-`Sync`) runtime handle.
@@ -79,14 +97,112 @@ pub fn exact_copy(jobs: &[Job]) -> Vec<Job> {
     jobs.iter().map(|j| Job { est: j.size, ..*j }).collect()
 }
 
-/// One cell of a sweep grid: one (policy, workload-config) data point,
+/// A trace-replay workload description (Figs. 12/13): which published
+/// trace stand-in, how many records to replay, the load normalization
+/// and the size-estimation error level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    pub trace: TraceName,
+    /// Replay at most this many records (the full traces are 24 443 /
+    /// 206 914 jobs).
+    pub njobs: usize,
+    /// Offered-load normalization (paper §7.8: 0.9).
+    pub load: f64,
+    /// Log-normal estimation-error sigma.
+    pub sigma: f64,
+}
+
+/// Where a sweep cell's jobs come from.  Everything a cell needs to
+/// synthesize its workload for a repetition, in a `Copy`, hashable-by-
+/// bits form the planner can group on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadSpec {
+    /// The Table-1 synthetic model.
+    Synth(SynthConfig),
+    /// A trace-replay stand-in matched to published statistics.
+    Trace(TraceSpec),
+}
+
+impl From<SynthConfig> for WorkloadSpec {
+    fn from(c: SynthConfig) -> WorkloadSpec {
+        WorkloadSpec::Synth(c)
+    }
+}
+
+impl From<TraceSpec> for WorkloadSpec {
+    fn from(t: TraceSpec) -> WorkloadSpec {
+        WorkloadSpec::Trace(t)
+    }
+}
+
+impl WorkloadSpec {
+    /// Repetition seed schedule.  Kept distinct per source so every
+    /// value is bit-identical to what the pre-refactor figure code
+    /// produced (figures used `r * 7919` for synthetic sweeps and
+    /// `r * 104_729` for trace replays).
+    pub fn rep_seed(&self, base: u64, r: u64) -> u64 {
+        match self {
+            WorkloadSpec::Synth(_) => base.wrapping_add(r.wrapping_mul(7919)),
+            WorkloadSpec::Trace(_) => base.wrapping_add(r.wrapping_mul(104_729)),
+        }
+    }
+
+    /// Materialize the jobs for one repetition seed.
+    pub fn synthesize(&self, rep_seed: u64) -> Vec<Job> {
+        match self {
+            WorkloadSpec::Synth(cfg) => crate::workload::synthesize(cfg, rep_seed),
+            WorkloadSpec::Trace(t) => {
+                let mut recs = traces::synth_trace(t.trace.stats(), rep_seed);
+                recs.truncate(t.njobs);
+                traces::to_jobs(&recs, t.load, t.sigma, rep_seed)
+            }
+        }
+    }
+
+    /// Bitwise grouping key: two specs share a key iff [`synthesize`]
+    /// would produce identical workloads for them at every seed.
+    ///
+    /// [`synthesize`]: WorkloadSpec::synthesize
+    pub fn key(&self) -> [u64; 8] {
+        match self {
+            WorkloadSpec::Synth(c) => {
+                let (tag, param) = match c.size_dist {
+                    SizeDist::Weibull { shape } => (0u64, shape.to_bits()),
+                    SizeDist::Pareto { alpha } => (1u64, alpha.to_bits()),
+                };
+                [
+                    0,
+                    tag,
+                    param,
+                    c.sigma.to_bits(),
+                    c.timeshape.to_bits(),
+                    c.load.to_bits(),
+                    c.njobs as u64,
+                    c.beta.to_bits(),
+                ]
+            }
+            WorkloadSpec::Trace(t) => [
+                1,
+                t.trace as u64,
+                t.njobs as u64,
+                t.load.to_bits(),
+                t.sigma.to_bits(),
+                0,
+                0,
+                0,
+            ],
+        }
+    }
+}
+
+/// One cell of a sweep grid: one (policy, workload) data point,
 /// evaluated over seeded repetitions.  Figures and the CLI build flat
 /// `Vec<SweepCell>` grids and hand them to [`eval_cells`] (shared
 /// planner or the per-cell legacy path).
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     pub policy: PolicySpec,
-    pub cfg: SynthConfig,
+    pub workload: WorkloadSpec,
     /// `Some(r)` => mean of per-seed MST ratios against `r`;
     /// `None` => mean raw MST.
     pub reference: Option<Reference>,
@@ -97,14 +213,18 @@ impl SweepCell {
     pub fn ratio(
         policy: impl Into<PolicySpec>,
         reference: Reference,
-        cfg: SynthConfig,
+        workload: impl Into<WorkloadSpec>,
     ) -> SweepCell {
-        SweepCell { policy: policy.into(), cfg, reference: Some(reference) }
+        SweepCell {
+            policy: policy.into(),
+            workload: workload.into(),
+            reference: Some(reference),
+        }
     }
 
     /// A raw-MST cell.
-    pub fn mst(policy: impl Into<PolicySpec>, cfg: SynthConfig) -> SweepCell {
-        SweepCell { policy: policy.into(), cfg, reference: None }
+    pub fn mst(policy: impl Into<PolicySpec>, workload: impl Into<WorkloadSpec>) -> SweepCell {
+        SweepCell { policy: policy.into(), workload: workload.into(), reference: None }
     }
 
     /// Evaluate this cell alone: a pure function of (cell, params),
@@ -115,8 +235,8 @@ impl SweepCell {
         let mut reps = crate::stats::Repetitions::default();
         let max = if p.converge { p.reps * 10 } else { p.reps };
         for r in 0..max {
-            let rep_seed = p.seed.wrapping_add(r * 7919);
-            let jobs = crate::workload::synthesize(&self.cfg, rep_seed);
+            let rep_seed = self.workload.rep_seed(p.seed, r);
+            let jobs = self.workload.synthesize(rep_seed);
             let a = mst_of_seeded(&self.policy, &jobs, rep_seed);
             reps.push(match self.reference {
                 None => a,
@@ -130,7 +250,7 @@ impl SweepCell {
     }
 }
 
-/// Which [`SynthConfig`] knob a grid axis sweeps.
+/// Which workload knob a grid axis sweeps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AxisParam {
     Shape,
@@ -139,21 +259,61 @@ pub enum AxisParam {
     Timeshape,
     Njobs,
     Beta,
+    /// Pareto tail exponent: applying it switches the size
+    /// distribution to `Pareto { alpha }` (Fig. 10).
+    Alpha,
 }
 
 impl AxisParam {
-    pub fn apply(self, cfg: SynthConfig, v: f64) -> SynthConfig {
-        match self {
-            AxisParam::Shape => cfg.with_shape(v),
-            AxisParam::Sigma => cfg.with_sigma(v),
-            AxisParam::Load => cfg.with_load(v),
-            AxisParam::Timeshape => cfg.with_timeshape(v),
-            AxisParam::Njobs => cfg.with_njobs(v as usize),
-            AxisParam::Beta => cfg.with_beta(v),
+    /// Apply the value to a workload spec.  Parameters with no meaning
+    /// for the spec's kind (e.g. `shape` on a trace replay) leave it
+    /// unchanged — [`Scenario::validate`] rejects such combinations up
+    /// front, so the executor never reaches them.
+    pub fn apply(self, w: WorkloadSpec, v: f64) -> WorkloadSpec {
+        match (self, w) {
+            (AxisParam::Shape, WorkloadSpec::Synth(c)) => c.with_shape(v).into(),
+            (AxisParam::Sigma, WorkloadSpec::Synth(c)) => c.with_sigma(v).into(),
+            (AxisParam::Load, WorkloadSpec::Synth(c)) => c.with_load(v).into(),
+            (AxisParam::Timeshape, WorkloadSpec::Synth(c)) => c.with_timeshape(v).into(),
+            (AxisParam::Njobs, WorkloadSpec::Synth(c)) => c.with_njobs(v as usize).into(),
+            (AxisParam::Beta, WorkloadSpec::Synth(c)) => c.with_beta(v).into(),
+            (AxisParam::Alpha, WorkloadSpec::Synth(c)) => {
+                WorkloadSpec::Synth(SynthConfig { size_dist: SizeDist::Pareto { alpha: v }, ..c })
+            }
+            (AxisParam::Sigma, WorkloadSpec::Trace(t)) => TraceSpec { sigma: v, ..t }.into(),
+            (AxisParam::Load, WorkloadSpec::Trace(t)) => TraceSpec { load: v, ..t }.into(),
+            (AxisParam::Njobs, WorkloadSpec::Trace(t)) => {
+                TraceSpec { njobs: v as usize, ..t }.into()
+            }
+            (_, w) => w,
         }
     }
 
-    /// CLI name (the `--axis` argument of `psbs sweep`).
+    /// Does this parameter mean anything for the given workload kind?
+    pub fn applies_to(self, w: &WorkloadSpec) -> bool {
+        match w {
+            WorkloadSpec::Synth(_) => true,
+            WorkloadSpec::Trace(_) => {
+                matches!(self, AxisParam::Sigma | AxisParam::Load | AxisParam::Njobs)
+            }
+        }
+    }
+
+    /// Canonical name (the `--axis` argument of `psbs sweep` and the
+    /// `param` key of scenario files).
+    pub fn name(self) -> &'static str {
+        match self {
+            AxisParam::Shape => "shape",
+            AxisParam::Sigma => "sigma",
+            AxisParam::Load => "load",
+            AxisParam::Timeshape => "timeshape",
+            AxisParam::Njobs => "njobs",
+            AxisParam::Beta => "beta",
+            AxisParam::Alpha => "alpha",
+        }
+    }
+
+    /// Inverse of [`AxisParam::name`].
     pub fn parse(s: &str) -> Option<AxisParam> {
         Some(match s {
             "shape" => AxisParam::Shape,
@@ -162,48 +322,94 @@ impl AxisParam {
             "timeshape" => AxisParam::Timeshape,
             "njobs" => AxisParam::Njobs,
             "beta" => AxisParam::Beta,
+            "alpha" => AxisParam::Alpha,
             _ => return None,
         })
     }
 }
 
-/// One grid axis: a labelled list of values for one config knob.
-#[derive(Debug, Clone)]
+/// One grid axis: a labelled list of values for one workload knob.
+/// Row axes (the default) become leading table columns; *split* axes
+/// fan the scenario out into one table per value, the table named
+/// `{name}_{label}{value}` (Fig. 6's three per-shape tables, Fig. 10's
+/// two per-alpha tables, Fig. 4's three per-shape ECDFs).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Axis {
     pub label: String,
     pub param: AxisParam,
     pub values: Vec<f64>,
+    pub split: bool,
 }
 
-/// A declarative sweep scenario: `base` workload config, grid `axes`
-/// (row-major cartesian product), a labelled `policies` set, and an
-/// optional normalization [`Reference`].  [`Scenario::table`] is the
-/// one generic executor every grid figure now goes through.
-#[derive(Debug, Clone)]
+/// What a scenario measures per grid point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    /// One value per (grid point, policy): the mean over repetitions
+    /// of the MST (or of the per-seed MST ratio against the
+    /// [`Reference`]).  Evaluated through the shared-workload planner.
+    Mean,
+    /// The pooled per-job slowdown ECDF across repetitions
+    /// (Figs. 4/8): rows are `points` log-spaced thresholds spanning
+    /// `decades` decades, one column per policy.  With `tail_above =
+    /// Some(t)`, a companion table records the pooled fraction of jobs
+    /// with slowdown above `t` per policy.  Axes must be split axes
+    /// (an ECDF table has no room for extra value columns), and no
+    /// reference applies.  Always pools exactly `reps` repetitions:
+    /// the §6.3 convergence stopping rule is a per-scalar-cell notion
+    /// and does not apply to pooled populations (the pre-refactor
+    /// figure code ignored `--converge` here too).
+    PooledEcdf { points: usize, decades: f64, tail_above: Option<f64> },
+}
+
+/// A declarative sweep scenario: workload source, grid `axes`
+/// (row-major cartesian product; split axes fan out into separate
+/// tables), a labelled `policies` set, a [`Metric`] and an optional
+/// normalization [`Reference`].  [`Scenario::tables`] is the one
+/// generic executor every scenario-shaped figure now goes through.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
     pub name: String,
-    pub base: SynthConfig,
+    pub workload: WorkloadSpec,
     pub axes: Vec<Axis>,
     /// (column label, spec) — the label is usually `spec.to_string()`,
     /// but figures may override it (e.g. Fig. 15's `psbs_over_ps`).
     pub policies: Vec<(String, PolicySpec)>,
     pub reference: Option<Reference>,
+    pub metric: Metric,
 }
 
 impl Scenario {
     pub fn new(name: impl Into<String>, base: SynthConfig) -> Scenario {
+        Scenario::with_workload(name, base)
+    }
+
+    /// A scenario over an arbitrary workload source (trace replays use
+    /// this; [`Scenario::new`] is the synthetic shorthand).
+    pub fn with_workload(name: impl Into<String>, w: impl Into<WorkloadSpec>) -> Scenario {
         Scenario {
             name: name.into(),
-            base,
+            workload: w.into(),
             axes: Vec::new(),
             policies: Vec::new(),
             reference: None,
+            metric: Metric::Mean,
         }
     }
 
-    /// Add a grid axis (outermost first).
+    /// Add a row axis (outermost first).
     pub fn axis(mut self, label: impl Into<String>, param: AxisParam, values: &[f64]) -> Scenario {
-        self.axes.push(Axis { label: label.into(), param, values: values.to_vec() });
+        self.axes.push(Axis { label: label.into(), param, values: values.to_vec(), split: false });
+        self
+    }
+
+    /// Add a split axis: one table per value instead of a row column.
+    pub fn split_axis(
+        mut self,
+        label: impl Into<String>,
+        param: AxisParam,
+        values: &[f64],
+    ) -> Scenario {
+        self.axes.push(Axis { label: label.into(), param, values: values.to_vec(), split: true });
         self
     }
 
@@ -227,60 +433,272 @@ impl Scenario {
         self
     }
 
-    /// The flat cell grid (grid-point-major, policy-minor — the cell
-    /// order every pre-refactor figure used).
-    pub fn cells(&self) -> Vec<SweepCell> {
-        let points = self.grid_points();
+    /// Set the metric (default: [`Metric::Mean`]).
+    pub fn metric(mut self, m: Metric) -> Scenario {
+        self.metric = m;
+        self
+    }
+
+    /// Rescale the workload's job count (figures shrink scenarios for
+    /// tests; `psbs sweep --scenario --njobs N` overrides files).
+    /// `njobs` *axes* are clamped to `njobs * 10` per value — the same
+    /// rule the built-in Fig. 15c grid applies — so rescaling a
+    /// scenario whose grid sweeps njobs cannot silently keep running
+    /// full-scale cells.
+    pub fn with_njobs(mut self, njobs: usize) -> Scenario {
+        self.workload = match self.workload {
+            WorkloadSpec::Synth(c) => c.with_njobs(njobs).into(),
+            WorkloadSpec::Trace(t) => {
+                TraceSpec { njobs: njobs.min(t.trace.stats().jobs), ..t }.into()
+            }
+        };
+        for axis in self.axes.iter_mut().filter(|a| a.param == AxisParam::Njobs) {
+            for v in axis.values.iter_mut() {
+                *v = v.min((njobs * 10) as f64);
+            }
+        }
+        self
+    }
+
+    /// Structural checks shared by the file parser and the executor:
+    /// a scenario that passes evaluates without panicking.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.policies.is_empty() {
+            return Err(format!("scenario {}: no policies", self.name));
+        }
+        for (i, axis) in self.axes.iter().enumerate() {
+            if axis.values.is_empty() {
+                return Err(format!("scenario {}: axis {} has no values", self.name, axis.label));
+            }
+            if !axis.param.applies_to(&self.workload) {
+                return Err(format!(
+                    "scenario {}: axis param `{}` does not apply to a trace workload \
+                     (use sigma, load or njobs)",
+                    self.name,
+                    axis.param.name()
+                ));
+            }
+            // Two axes over one knob would make the later value win
+            // silently while both still label the rows — exactly the
+            // kind of quiet misreport the CLI's unknown-flag policy
+            // exists to prevent.
+            if self.axes[..i].iter().any(|b| b.param == axis.param) {
+                return Err(format!(
+                    "scenario {}: axis param `{}` appears more than once",
+                    self.name,
+                    axis.param.name()
+                ));
+            }
+        }
+        if let Metric::PooledEcdf { points, decades, .. } = self.metric {
+            if points < 2 || !(decades > 0.0) {
+                return Err(format!(
+                    "scenario {}: ecdf metric needs points >= 2 and decades > 0",
+                    self.name
+                ));
+            }
+            if self.axes.iter().any(|a| !a.split) {
+                return Err(format!(
+                    "scenario {}: ecdf metric requires all axes to be split axes",
+                    self.name
+                ));
+            }
+            if self.reference.is_some() {
+                return Err(format!(
+                    "scenario {}: ecdf metric takes no reference",
+                    self.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the split axes: (table base name, specialized workload)
+    /// per split grid point, in row-major declaration order.
+    fn split_expansions(&self) -> Vec<(String, WorkloadSpec)> {
+        let mut out = vec![(self.name.clone(), self.workload)];
+        for axis in self.axes.iter().filter(|a| a.split) {
+            let mut next = Vec::with_capacity(out.len() * axis.values.len());
+            for (name, w) in &out {
+                for &v in &axis.values {
+                    next.push((format!("{name}_{}{v}", axis.label), axis.param.apply(*w, v)));
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    fn row_axes(&self) -> Vec<&Axis> {
+        self.axes.iter().filter(|a| !a.split).collect()
+    }
+
+    /// The flat cell grid for one specialized workload (grid-point-
+    /// major, policy-minor — the cell order every pre-refactor figure
+    /// used).
+    fn cells_for(&self, w: WorkloadSpec) -> Vec<SweepCell> {
+        let axes = self.row_axes();
+        let points = grid_points(&axes);
         let mut cells = Vec::with_capacity(points.len() * self.policies.len());
         for point in &points {
-            let mut cfg = self.base;
-            for (axis, &v) in self.axes.iter().zip(point) {
-                cfg = axis.param.apply(cfg, v);
+            let mut wl = w;
+            for (axis, &v) in axes.iter().zip(point) {
+                wl = axis.param.apply(wl, v);
             }
             for (_, spec) in &self.policies {
-                cells.push(SweepCell { policy: spec.clone(), cfg, reference: self.reference });
+                cells.push(SweepCell {
+                    policy: spec.clone(),
+                    workload: wl,
+                    reference: self.reference,
+                });
             }
         }
         cells
     }
 
-    /// Row-major cartesian product of the axis values.
-    fn grid_points(&self) -> Vec<Vec<f64>> {
-        let mut points: Vec<Vec<f64>> = vec![Vec::new()];
-        for axis in &self.axes {
-            let mut next = Vec::with_capacity(points.len() * axis.values.len());
-            for p in &points {
-                for &v in &axis.values {
-                    let mut q = p.clone();
-                    q.push(v);
-                    next.push(q);
-                }
-            }
-            points = next;
-        }
-        points
+    /// All cells across every split expansion, in table order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        self.split_expansions()
+            .into_iter()
+            .flat_map(|(_, w)| self.cells_for(w))
+            .collect()
     }
 
-    /// Evaluate the scenario into a table: one row per grid point
-    /// (axis value columns first), one column per policy.
+    /// Evaluate the scenario into its tables: one table per split grid
+    /// point; within each, one row per row-axis grid point and one
+    /// column per policy ([`Metric::Mean`]), or one row per slowdown
+    /// threshold ([`Metric::PooledEcdf`], plus the optional tail
+    /// table).
+    pub fn tables(&self, p: SweepParams, threads: usize, share: bool) -> Vec<Table> {
+        debug_assert!(self.validate().is_ok(), "{:?}", self.validate());
+        let mut out = Vec::new();
+        for (name, w) in self.split_expansions() {
+            match self.metric {
+                Metric::Mean => out.push(self.mean_table(name, w, p, threads, share)),
+                Metric::PooledEcdf { points, decades, tail_above } => {
+                    self.ecdf_tables(&mut out, name, w, p, threads, points, decades, tail_above)
+                }
+            }
+        }
+        out
+    }
+
+    /// Convenience for single-table scenarios (no split axes, Mean
+    /// metric): the CLI custom sweep and several figures use this.
     pub fn table(&self, p: SweepParams, threads: usize, share: bool) -> Table {
-        let header: Vec<String> = self
-            .axes
+        let mut ts = self.tables(p, threads, share);
+        assert_eq!(ts.len(), 1, "scenario {} produces {} tables; use tables()", self.name, ts.len());
+        ts.pop().unwrap()
+    }
+
+    fn mean_table(
+        &self,
+        name: String,
+        w: WorkloadSpec,
+        p: SweepParams,
+        threads: usize,
+        share: bool,
+    ) -> Table {
+        let axes = self.row_axes();
+        let header: Vec<String> = axes
             .iter()
             .map(|a| a.label.clone())
             .chain(self.policies.iter().map(|(l, _)| l.clone()))
             .collect();
-        let mut t = Table::new(self.name.clone(), header);
-        let cells = self.cells();
+        let mut t = Table::new(name, header);
+        let cells = self.cells_for(w);
         let vals = eval_cells(p, threads, share, &cells);
         let mut it = vals.into_iter();
-        for point in self.grid_points() {
+        for point in grid_points(&axes) {
             let mut row = point;
             row.extend((&mut it).take(self.policies.len()));
             t.push(row);
         }
         t
     }
+
+    /// The pooled-population path (Figs. 4/8): repetitions run in
+    /// parallel, one policy at a time — rep order inside each policy
+    /// matches the serial loop, so the pooled ECDFs are bit-identical
+    /// to it, and peak memory stays at one policy's pooled population.
+    /// The paper pools runs too.  Workload sharing does not apply
+    /// (each (policy, rep) item synthesizes its own workload, exactly
+    /// as the pre-refactor figure code did), so `share` is a no-op
+    /// here by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn ecdf_tables(
+        &self,
+        out: &mut Vec<Table>,
+        name: String,
+        w: WorkloadSpec,
+        p: SweepParams,
+        threads: usize,
+        points: usize,
+        decades: f64,
+        tail_above: Option<f64>,
+    ) {
+        let thresholds = metrics::log_thresholds(points, decades);
+        let rep_items: Vec<u64> = (0..p.reps).collect();
+        let mut ecdfs: Vec<Vec<f64>> = Vec::new();
+        let mut tails: Vec<f64> = Vec::new();
+        for (_, spec) in &self.policies {
+            let runs = pool::par_map(threads, &rep_items, |&r| {
+                let rep_seed = w.rep_seed(p.seed, r);
+                let jobs = w.synthesize(rep_seed);
+                // The repetition seed also feeds the policy build (as in
+                // the Mean path): base disciplines ignore it, seeded
+                // specs draw independent streams per repetition.
+                slowdowns_of_seeded(spec, &jobs, rep_seed)
+            });
+            let mut pooled = Vec::new();
+            for slow in runs {
+                pooled.extend(slow);
+            }
+            if let Some(t) = tail_above {
+                tails.push(metrics::frac_above(&pooled, t));
+            }
+            ecdfs.push(metrics::slowdown_ecdf(&pooled, &thresholds));
+        }
+        let header: Vec<String> = ["slowdown"]
+            .iter()
+            .map(|s| s.to_string())
+            .chain(self.policies.iter().map(|(l, _)| l.clone()))
+            .collect();
+        let mut t = Table::new(name.clone(), header);
+        for (i, &thr) in thresholds.iter().enumerate() {
+            let mut row = vec![thr];
+            row.extend(ecdfs.iter().map(|e| e[i]));
+            t.push(row);
+        }
+        out.push(t);
+        if let Some(thr) = tail_above {
+            let mut tt = Table::new(
+                format!("{name}_tail_above_{thr}"),
+                vec!["policy_idx".to_string(), format!("frac_above_{thr}")],
+            );
+            for (pi, &frac) in tails.iter().enumerate() {
+                tt.push(vec![pi as f64, frac]);
+            }
+            out.push(tt);
+        }
+    }
+}
+
+/// Row-major cartesian product of the axis values.
+fn grid_points(axes: &[&Axis]) -> Vec<Vec<f64>> {
+    let mut points: Vec<Vec<f64>> = vec![Vec::new()];
+    for axis in axes {
+        let mut next = Vec::with_capacity(points.len() * axis.values.len());
+        for p in &points {
+            for &v in &axis.values {
+                let mut q = p.clone();
+                q.push(v);
+                next.push(q);
+            }
+        }
+        points = next;
+    }
+    points
 }
 
 #[cfg(test)]
@@ -340,5 +758,134 @@ mod tests {
         assert!(t.rows[0][1].is_finite());
         // PS against itself is exactly 1 on every seed.
         assert!((t.rows[0][2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_axes_fan_out_into_named_tables() {
+        let sc = Scenario::new("t", SynthConfig::default().with_njobs(120))
+            .split_axis("shape", AxisParam::Shape, &[0.5, 2.0])
+            .axis("sigma", AxisParam::Sigma, &[0.25, 1.0])
+            .policies(&["psbs", "ps"])
+            .vs(Reference::OptSrpt);
+        let ts = sc.tables(SweepParams { reps: 1, seed: 5, converge: false }, 1, true);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "t_shape0.5");
+        assert_eq!(ts[1].name, "t_shape2");
+        for t in &ts {
+            assert_eq!(t.header, vec!["sigma", "psbs", "ps"]);
+            assert_eq!(t.rows.len(), 2);
+        }
+    }
+
+    /// The pooled-ECDF metric is bit-identical across threads and
+    /// share modes (sharing is structurally a no-op on this path).
+    #[test]
+    fn pooled_ecdf_scenario_is_bit_identical_across_modes() {
+        let sc = Scenario::new("t_ecdf", SynthConfig::default().with_njobs(150))
+            .policies(&["ps", "psbs"])
+            .metric(Metric::PooledEcdf { points: 16, decades: 2.0, tail_above: Some(10.0) });
+        let p = SweepParams { reps: 2, seed: 9, converge: false };
+        let bits = |share: bool, threads: usize| -> Vec<Vec<u64>> {
+            sc.tables(p, threads, share)
+                .iter()
+                .map(|t| t.rows.iter().flatten().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+        let base = bits(false, 1);
+        assert_eq!(base.len(), 2, "ecdf + tail table");
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
+        // ECDF columns are monotone in the threshold.
+        let ecdf = &sc.tables(p, 1, true)[0];
+        for c in 1..ecdf.header.len() {
+            for w in ecdf.rows.windows(2) {
+                assert!(w[1][c] >= w[0][c]);
+            }
+        }
+    }
+
+    /// Trace-replay cells group and share through the planner exactly
+    /// like synthetic ones: bit-identity across share x threads.
+    #[test]
+    fn trace_scenario_is_bit_identical_across_modes() {
+        use crate::workload::traces::TraceName;
+        let sc = Scenario::with_workload(
+            "t_trace",
+            TraceSpec { trace: TraceName::Facebook, njobs: 150, load: 0.9, sigma: 0.5 },
+        )
+        .axis("sigma", AxisParam::Sigma, &[0.25, 1.0])
+        .policies(&["psbs", "ps"])
+        .vs(Reference::OptSrpt);
+        let p = SweepParams { reps: 2, seed: 17, converge: false };
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.table(p, threads, share)
+                .rows
+                .iter()
+                .flatten()
+                .map(|v| v.to_bits())
+                .collect()
+        };
+        let base = bits(false, 1);
+        assert!(base.iter().any(|&b| f64::from_bits(b) > 0.0));
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn with_njobs_rescales_base_and_njobs_axes() {
+        let sc = Scenario::new("t", SynthConfig::default())
+            .axis("njobs", AxisParam::Njobs, &[1_000.0, 100_000.0])
+            .policies(&["ps"])
+            .with_njobs(200);
+        match sc.workload {
+            WorkloadSpec::Synth(c) => assert_eq!(c.njobs, 200),
+            _ => unreachable!(),
+        }
+        // Axis values clamp at njobs * 10 (the built-in Fig. 15c rule),
+        // so a "quick look" rescale cannot run full-scale cells.
+        assert_eq!(sc.axes[0].values, vec![1_000.0, 2_000.0]);
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_scenarios() {
+        let trace = TraceSpec {
+            trace: crate::workload::traces::TraceName::Ircache,
+            njobs: 100,
+            load: 0.9,
+            sigma: 0.5,
+        };
+        // Shape axis on a trace replay.
+        let bad = Scenario::with_workload("t", trace)
+            .axis("shape", AxisParam::Shape, &[0.5])
+            .policies(&["ps"]);
+        assert!(bad.validate().is_err());
+        // ECDF with a row axis.
+        let bad = Scenario::new("t", SynthConfig::default())
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"])
+            .metric(Metric::PooledEcdf { points: 8, decades: 2.0, tail_above: None });
+        assert!(bad.validate().is_err());
+        // ECDF with a reference.
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .vs(Reference::Ps)
+            .metric(Metric::PooledEcdf { points: 8, decades: 2.0, tail_above: None });
+        assert!(bad.validate().is_err());
+        // No policies.
+        assert!(Scenario::new("t", SynthConfig::default()).validate().is_err());
+        // The same knob on two axes (row, split — either way).
+        let bad = Scenario::new("t", SynthConfig::default())
+            .split_axis("s1", AxisParam::Sigma, &[0.25])
+            .axis("s2", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"]);
+        assert!(bad.validate().is_err());
+        // A good one.
+        let ok = Scenario::with_workload("t", trace)
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"])
+            .vs(Reference::OptSrpt);
+        assert!(ok.validate().is_ok());
     }
 }

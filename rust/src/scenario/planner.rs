@@ -1,12 +1,13 @@
 //! The shared-workload sweep planner.
 //!
 //! [`eval_cells`] is the single evaluation engine behind
-//! [`super::Scenario::table`], `figures::Ctx::eval_grid` and the
+//! [`super::Scenario::tables`], `figures::Ctx::eval_grid` and the
 //! `psbs sweep --policies` CLI.  Given a flat [`SweepCell`] grid it:
 //!
-//! 1. **groups** cells by their [`SynthConfig`] (bitwise key — two
+//! 1. **groups** cells by their [`WorkloadSpec`] (bitwise key — two
 //!    cells share a group iff they would synthesize identical
-//!    workloads);
+//!    workloads, whether synthetic Table-1 configs or trace-replay
+//!    stand-ins);
 //! 2. **splits at repetition level**: the parallel work item is
 //!    `(group, rep)`, not a whole cell, so even a single expensive
 //!    cell's repetitions spread across workers (the `--converge` mode
@@ -28,11 +29,10 @@
 //! to [`SweepCell::eval`] per cell — the `share` flag exists precisely
 //! so tests can assert that.
 
-use super::{PolicySpec, Reference, SweepCell, SweepParams};
+use super::{PolicySpec, Reference, SweepCell, SweepParams, WorkloadSpec};
 use crate::sim::{self, Job};
 use crate::stats::Repetitions;
 use crate::util::pool;
-use crate::workload::{SizeDist, SynthConfig};
 use std::collections::HashMap;
 
 /// MST of one policy spec over one workload (seed 0 build — base
@@ -48,39 +48,31 @@ pub fn mst_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> f64 {
     sim::run(s.as_mut(), jobs).mst(jobs)
 }
 
-/// Per-job slowdowns of one policy spec over one workload.
+/// Per-job slowdowns of one policy spec over one workload (seed 0
+/// build).
 pub fn slowdowns_of(spec: &PolicySpec, jobs: &[Job]) -> Vec<f64> {
-    let mut s = spec.build_seeded(0);
+    slowdowns_of_seeded(spec, jobs, 0)
+}
+
+/// Slowdowns with an explicit build seed — the pooled-ECDF metric
+/// passes the repetition seed, like [`mst_of_seeded`], so seeded specs
+/// (cluster random dispatch, estimator noise) draw independent streams
+/// per repetition.  Base disciplines ignore the seed.
+pub fn slowdowns_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> Vec<f64> {
+    let mut s = spec.build_seeded(seed);
     sim::run(s.as_mut(), jobs).slowdowns(jobs)
 }
 
-/// Bitwise grouping key: cells share a group iff `synthesize` would
-/// produce identical workloads for them at every seed.
-fn cfg_key(c: &SynthConfig) -> [u64; 7] {
-    let (tag, param) = match c.size_dist {
-        SizeDist::Weibull { shape } => (0u64, shape.to_bits()),
-        SizeDist::Pareto { alpha } => (1u64, alpha.to_bits()),
-    };
-    [
-        tag,
-        param,
-        c.sigma.to_bits(),
-        c.timeshape.to_bits(),
-        c.load.to_bits(),
-        c.njobs as u64,
-        c.beta.to_bits(),
-    ]
-}
-
-/// Group cell indices by workload config, in first-appearance order.
-/// Exposed for tests: the "synthesize once per (cfg, seed)" guarantee
-/// is structural — `eval_group_rep` synthesizes once per group item.
-pub fn group_cells(cells: &[SweepCell]) -> Vec<(SynthConfig, Vec<usize>)> {
-    let mut index: HashMap<[u64; 7], usize> = HashMap::new();
-    let mut groups: Vec<(SynthConfig, Vec<usize>)> = Vec::new();
+/// Group cell indices by workload spec, in first-appearance order.
+/// Exposed for tests: the "synthesize once per (workload, seed)"
+/// guarantee is structural — `eval_group_rep` synthesizes once per
+/// group item.
+pub fn group_cells(cells: &[SweepCell]) -> Vec<(WorkloadSpec, Vec<usize>)> {
+    let mut index: HashMap<[u64; 8], usize> = HashMap::new();
+    let mut groups: Vec<(WorkloadSpec, Vec<usize>)> = Vec::new();
     for (ci, cell) in cells.iter().enumerate() {
-        let gi = *index.entry(cfg_key(&cell.cfg)).or_insert_with(|| {
-            groups.push((cell.cfg, Vec::new()));
+        let gi = *index.entry(cell.workload.key()).or_insert_with(|| {
+            groups.push((cell.workload, Vec::new()));
             groups.len() - 1
         });
         groups[gi].1.push(ci);
@@ -93,13 +85,13 @@ pub fn group_cells(cells: &[SweepCell]) -> Vec<(SynthConfig, Vec<usize>)> {
 /// Returns one value per entry of `active`, in order.
 fn eval_group_rep(
     p: SweepParams,
-    cfg: &SynthConfig,
+    w: &WorkloadSpec,
     active: &[usize],
     cells: &[SweepCell],
     r: u64,
 ) -> Vec<f64> {
-    let rep_seed = p.seed.wrapping_add(r * 7919);
-    let jobs = crate::workload::synthesize(cfg, rep_seed);
+    let rep_seed = w.rep_seed(p.seed, r);
+    let jobs = w.synthesize(rep_seed);
     let mut ps_mst: Option<f64> = None;
     let mut opt_mst: Option<f64> = None;
     active
@@ -221,6 +213,9 @@ pub fn eval_cells(p: SweepParams, threads: usize, share: bool, cells: &[SweepCel
 mod tests {
     use super::*;
     use crate::figures::GRID;
+    use crate::scenario::TraceSpec;
+    use crate::workload::traces::TraceName;
+    use crate::workload::SynthConfig;
 
     #[test]
     fn grouping_merges_identical_configs_only() {
@@ -235,6 +230,25 @@ mod tests {
         assert_eq!(groups.len(), 2, "three same-config cells share one group");
         assert_eq!(groups[0].1, vec![0, 1, 2]);
         assert_eq!(groups[1].1, vec![3]);
+    }
+
+    #[test]
+    fn grouping_keeps_trace_and_synth_apart() {
+        let synth = SynthConfig::default().with_njobs(100);
+        let trace = TraceSpec { trace: TraceName::Facebook, njobs: 100, load: 0.9, sigma: 0.5 };
+        let cells = vec![
+            SweepCell::ratio("psbs", Reference::OptSrpt, synth),
+            SweepCell::ratio("psbs", Reference::OptSrpt, trace),
+            SweepCell::ratio("ps", Reference::OptSrpt, trace),
+            SweepCell::ratio(
+                "ps",
+                Reference::OptSrpt,
+                TraceSpec { trace: TraceName::Ircache, ..trace },
+            ),
+        ];
+        let groups = group_cells(&cells);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[1].1, vec![1, 2], "same trace spec shares a group");
     }
 
     #[test]

@@ -1,18 +1,26 @@
 //! Minimal command-line parsing (replaces the unavailable `clap`).
 //!
-//! Grammar: `psbs <subcommand> [--flag value | --flag=value | --switch]...`
-//! Unknown flags are hard errors so typos cannot silently fall back to
-//! defaults in the middle of an experiment sweep.
+//! Grammar: `psbs <subcommand> [positional...] [--flag value |
+//! --flag=value | --switch]...`  Flags may repeat (`--axis sigma
+//! --axis load=0.7,0.9` accumulates; single-value getters take the
+//! last occurrence).  Unknown flags and unconsumed positionals are
+//! hard errors so typos cannot silently fall back to defaults in the
+//! middle of an experiment sweep.
 
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 
-/// Parsed command line: a subcommand plus `--key value` options.
+/// Parsed command line: a subcommand, positional arguments, and
+/// `--key value` options (multi-valued: repeated flags accumulate).
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
+    positionals: Vec<String>,
     /// Flags that were consumed by a getter (for unknown-flag checking).
-    seen: std::cell::RefCell<Vec<String>>,
+    seen: RefCell<Vec<String>>,
+    /// How many positionals a getter has looked at.
+    pos_seen: Cell<usize>,
 }
 
 impl Args {
@@ -27,14 +35,15 @@ impl Args {
         }
         while let Some(tok) = it.next() {
             let Some(stripped) = tok.strip_prefix("--") else {
-                return Err(format!("unexpected positional argument: {tok}"));
+                args.positionals.push(tok);
+                continue;
             };
             if let Some((k, v)) = stripped.split_once('=') {
-                args.opts.insert(k.to_string(), v.to_string());
+                args.opts.entry(k.to_string()).or_default().push(v.to_string());
             } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                args.opts.insert(stripped.to_string(), it.next().unwrap());
+                args.opts.entry(stripped.to_string()).or_default().push(it.next().unwrap());
             } else {
-                args.opts.insert(stripped.to_string(), "true".to_string());
+                args.opts.entry(stripped.to_string()).or_default().push("true".to_string());
             }
         }
         Ok(args)
@@ -44,22 +53,33 @@ impl Args {
         self.seen.borrow_mut().push(key.to_string());
     }
 
+    fn last(&self, key: &str) -> Option<&String> {
+        self.opts.get(key).and_then(|v| v.last())
+    }
+
     /// String option with default.
     pub fn get(&self, key: &str, default: &str) -> String {
         self.mark(key);
-        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.last(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
     /// Optional string option.
     pub fn get_opt(&self, key: &str) -> Option<String> {
         self.mark(key);
-        self.opts.get(key).cloned()
+        self.last(key).cloned()
+    }
+
+    /// Every occurrence of a repeatable flag, in argv order (empty when
+    /// absent) — `psbs sweep --axis sigma=0.25,0.5 --axis load=0.7,0.9`.
+    pub fn get_multi(&self, key: &str) -> Vec<String> {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_default()
     }
 
     /// f64 option with default.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
         self.mark(key);
-        match self.opts.get(key) {
+        match self.last(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key}: not a number: {v}")),
         }
@@ -68,7 +88,7 @@ impl Args {
     /// u64 option with default.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
         self.mark(key);
-        match self.opts.get(key) {
+        match self.last(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key}: not an integer: {v}")),
         }
@@ -79,7 +99,7 @@ impl Args {
     /// elements.  `None` when the flag is absent.
     pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
         self.mark(key);
-        self.opts.get(key).map(|v| {
+        self.last(key).map(|v| {
             crate::scenario::spec::split_top_level(v, ',')
                 .into_iter()
                 .map(|s| s.trim().to_string())
@@ -91,7 +111,7 @@ impl Args {
     /// Boolean switch (present or `--key true/false`).
     pub fn get_bool(&self, key: &str) -> Result<bool, String> {
         self.mark(key);
-        match self.opts.get(key).map(|s| s.as_str()) {
+        match self.last(key).map(|s| s.as_str()) {
             None => Ok(false),
             Some("true") | Some("1") => Ok(true),
             Some("false") | Some("0") => Ok(false),
@@ -99,7 +119,15 @@ impl Args {
         }
     }
 
-    /// Error if any provided flag was never consumed by a getter.
+    /// The `i`-th positional argument after the subcommand
+    /// (`psbs scenario export fig6` => positional(0) = "export").
+    pub fn positional(&self, i: usize) -> Option<String> {
+        self.pos_seen.set(self.pos_seen.get().max(i + 1));
+        self.positionals.get(i).cloned()
+    }
+
+    /// Error if any provided flag or positional was never consumed by
+    /// a getter.
     pub fn check_unknown(&self) -> Result<(), String> {
         let seen = self.seen.borrow();
         let unknown: Vec<&String> = self
@@ -107,11 +135,16 @@ impl Args {
             .keys()
             .filter(|k| !seen.iter().any(|s| s == *k))
             .collect();
-        if unknown.is_empty() {
-            Ok(())
-        } else {
-            Err(format!("unknown flags: {unknown:?}"))
+        if !unknown.is_empty() {
+            return Err(format!("unknown flags: {unknown:?}"));
         }
+        if self.positionals.len() > self.pos_seen.get() {
+            return Err(format!(
+                "unexpected positional arguments: {:?}",
+                &self.positionals[self.pos_seen.get()..]
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -160,8 +193,31 @@ mod tests {
     }
 
     #[test]
-    fn positional_after_subcommand_rejected() {
-        assert!(Args::parse(["simulate".into(), "oops".into()]).is_err());
+    fn repeated_flags_accumulate_and_last_wins() {
+        let a = parse("sweep --axis sigma=0.25,0.5 --axis load=0.7,0.9 --reps 2 --reps 5");
+        assert_eq!(a.get_multi("axis"), vec!["sigma=0.25,0.5", "load=0.7,0.9"]);
+        // Single-value getters take the last occurrence.
+        assert_eq!(a.get_u64("reps", 1).unwrap(), 5);
+        assert!(a.get_multi("missing").is_empty());
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn positionals_are_collected_and_checked() {
+        let a = parse("scenario export fig6");
+        assert_eq!(a.subcommand.as_deref(), Some("scenario"));
+        assert_eq!(a.positional(0).as_deref(), Some("export"));
+        // fig6 not consumed yet: check_unknown flags it.
+        assert!(a.check_unknown().is_err());
+        assert_eq!(a.positional(1).as_deref(), Some("fig6"));
+        assert!(a.check_unknown().is_ok());
+        assert_eq!(a.positional(2), None);
+    }
+
+    #[test]
+    fn unconsumed_positional_rejected() {
+        let a = parse("simulate oops");
+        assert!(a.check_unknown().is_err());
     }
 
     #[test]

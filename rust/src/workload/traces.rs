@@ -87,6 +87,45 @@ pub struct TraceStats {
     pub max_bytes: f64,
 }
 
+/// Named trace preset — the declarable handle scenario files and
+/// [`crate::scenario::TraceSpec`] use to refer to a stand-in without
+/// carrying the raw statistics around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceName {
+    /// Facebook Hadoop 2010 (Fig. 12).
+    Facebook,
+    /// IRCache web cache 2007 (Fig. 13).
+    Ircache,
+}
+
+impl TraceName {
+    /// The published statistics behind this preset.
+    pub fn stats(self) -> &'static TraceStats {
+        match self {
+            TraceName::Facebook => &FACEBOOK,
+            TraceName::Ircache => &IRCACHE,
+        }
+    }
+
+    /// Canonical lowercase name (the `gen-trace --stats` / scenario-file
+    /// spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceName::Facebook => "facebook",
+            TraceName::Ircache => "ircache",
+        }
+    }
+
+    /// Inverse of [`TraceName::name`].
+    pub fn from_name(s: &str) -> Option<TraceName> {
+        Some(match s {
+            "facebook" => TraceName::Facebook,
+            "ircache" => TraceName::Ircache,
+            _ => return None,
+        })
+    }
+}
+
 /// Facebook Hadoop 2010 (Chen et al. [37] / SWIM).
 pub const FACEBOOK: TraceStats = TraceStats {
     jobs: 24_443,
@@ -326,6 +365,15 @@ garbage line\n\
             assert!(w[1].0 >= w[0].0);
             assert!(w[1].1 <= w[0].1);
         }
+    }
+
+    #[test]
+    fn trace_names_round_trip() {
+        for t in [TraceName::Facebook, TraceName::Ircache] {
+            assert_eq!(TraceName::from_name(t.name()), Some(t));
+        }
+        assert_eq!(TraceName::from_name("nope"), None);
+        assert_eq!(TraceName::Facebook.stats().jobs, FACEBOOK.jobs);
     }
 
     #[test]

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json perf reports (schema psbs-bench-v1).
+
+Usage:
+    bench_compare.py BASELINE.json CURRENT.json
+        [--threshold 0.20]
+        [--keys planner_speedup_,dense_vs_map_]
+        [--summary FILE]
+
+Compares the `derived` scalars of two reports produced by the
+dependency-free bench harness (rust/src/util/bench.rs; schema in
+rust/benches/README.md).  Derived keys are ratios where HIGHER IS
+BETTER (thread speedups, planner-vs-per-cell wins, dense-vs-map index
+wins), so a REGRESSION is `current < baseline * (1 - threshold)`.
+
+Only keys matching one of the --keys prefixes AND present in BOTH
+files gate the exit code (default prefixes: the ROADMAP-tracked
+`planner_speedup_*` and `dense_vs_map_*`).  Everything else — other
+derived keys and per-sample mean_ns deltas — is reported
+informationally.  Exits 1 on any gated regression, 0 otherwise;
+missing baselines are not failures (first run on a branch has nothing
+to compare against).
+
+stdlib-only by design: CI and offline containers run it bare.
+"""
+
+import argparse
+import json
+import sys
+
+DEFAULT_KEY_PREFIXES = "planner_speedup_,dense_vs_map_"
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "psbs-bench-v1":
+        sys.exit(f"error: {path}: unexpected schema {doc.get('schema')!r}")
+    return doc
+
+
+def fmt_ratio(cur, base):
+    """Relative change current vs baseline, e.g. -25.0 %."""
+    if base == 0:
+        return "n/a"
+    return f"{cur / base - 1.0:+.1%}".replace("%", " %")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="gated relative regression tolerance (default 0.20 = 20%%)",
+    )
+    ap.add_argument(
+        "--keys",
+        default=DEFAULT_KEY_PREFIXES,
+        help="comma-separated derived-key prefixes that gate the exit code",
+    )
+    ap.add_argument(
+        "--summary",
+        default=None,
+        help="append a markdown summary to this file (e.g. $GITHUB_STEP_SUMMARY)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    prefixes = [p for p in args.keys.split(",") if p]
+
+    base_derived = base.get("derived", {}) or {}
+    cur_derived = cur.get("derived", {}) or {}
+    shared = sorted(set(base_derived) & set(cur_derived))
+
+    lines = [
+        f"### bench compare: `{base.get('bench', '?')}`",
+        "",
+        f"baseline `{args.baseline}` vs current `{args.current}` "
+        f"(gate: >{args.threshold:.0%} drop on {', '.join(prefixes)})",
+        "",
+        "| derived key | baseline | current | delta | gated | verdict |",
+        "|---|---:|---:|---:|:--:|:--:|",
+    ]
+    regressions = []
+    for key in shared:
+        b, c = float(base_derived[key]), float(cur_derived[key])
+        gated = any(key.startswith(p) for p in prefixes)
+        regressed = gated and b > 0 and c < b * (1.0 - args.threshold)
+        if regressed:
+            regressions.append(key)
+        verdict = "REGRESSED" if regressed else "ok"
+        lines.append(
+            f"| `{key}` | {b:.3f} | {c:.3f} | {fmt_ratio(c, b)} "
+            f"| {'yes' if gated else 'no'} | {verdict} |"
+        )
+    if not shared:
+        lines.append("| _no shared derived keys_ | | | | | |")
+
+    # Informational: per-sample wall-clock deltas (lower is better).
+    base_samples = {s["name"]: s for s in base.get("samples", [])}
+    cur_samples = {s["name"]: s for s in cur.get("samples", [])}
+    shared_samples = sorted(set(base_samples) & set(cur_samples))
+    if shared_samples:
+        lines += [
+            "",
+            "<details><summary>per-sample mean_ns (informational)</summary>",
+            "",
+            "| sample | baseline ns | current ns | delta |",
+            "|---|---:|---:|---:|",
+        ]
+        for name in shared_samples:
+            b = float(base_samples[name]["mean_ns"])
+            c = float(cur_samples[name]["mean_ns"])
+            lines.append(f"| `{name}` | {b:.0f} | {c:.0f} | {fmt_ratio(c, b)} |")
+        lines += ["", "</details>"]
+
+    if regressions:
+        lines += ["", f"**{len(regressions)} gated regression(s): {', '.join(regressions)}**"]
+    else:
+        lines += ["", "no gated regressions"]
+
+    report = "\n".join(lines) + "\n"
+    print(report)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(report)
+
+    sys.exit(1 if regressions else 0)
+
+
+if __name__ == "__main__":
+    main()
