@@ -27,13 +27,13 @@ use psbs::workload::SynthConfig;
 
 fn main() {
     let mut b = Bench::new();
-    // Reduced scale: 1 rep x 500 jobs keeps every figure fast; the
-    // pure-rust analytics fallback avoids timing PJRT compilation here
-    // (runtime.rs benches the artifacts directly).  Figures run through
-    // the planner (the production default).
+    // Reduced scale: 1 rep x 500 jobs keeps every figure fast; all
+    // figure metrics are pure rust (runtime.rs benches the PJRT
+    // artifacts directly).  Figures run through the planner (the
+    // production default).
     for fig in figures::ALL_FIGS {
         b.bench(&format!("figure/fig{fig}"), move || {
-            let ctx = Ctx { reps: 1, njobs: 500, seed: 7, runtime: None, ..Default::default() };
+            let ctx = Ctx { reps: 1, njobs: 500, seed: 7, ..Default::default() };
             let tables = figures::by_number(&ctx, fig).unwrap();
             std::hint::black_box(tables.len());
         });
@@ -72,6 +72,22 @@ fn main() {
         }
     }
 
+    // Trace-ingestion throughput: parse a 50k-row CSV trace held in
+    // memory (no disk IO in the timed region — the parser, not the
+    // filesystem, is the tracked quantity).  Named under `sweep/` so
+    // the tier-1 bench smoke (`cargo bench --bench figures -- sweep/`)
+    // emits it into BENCH_sweeps.json from day one; the derived
+    // `trace_parse_throughput` (rows/s) rides the bench-compare step.
+    const TRACE_ROWS: usize = 50_000;
+    let mut csv = String::with_capacity(TRACE_ROWS * 16);
+    csv.push_str("arrival,size,weight\n");
+    for i in 0..TRACE_ROWS {
+        csv.push_str(&format!("{i}.5,{},{}\n", (i * 7919) % 997 + 1, 1 + i % 3));
+    }
+    b.bench_items("sweep/trace_parse/rows50k", Some(TRACE_ROWS as u64), move || {
+        std::hint::black_box(psbs::workload::trace_file::parse(&csv).unwrap().len());
+    });
+
     // Derived speedups (when the relevant samples ran — a
     // `cargo bench -- <filter>` may have skipped some).
     let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
@@ -93,6 +109,9 @@ fn main() {
         ) {
             derived.push((format!("planner_speedup_t{n}"), cell / plan));
         }
+    }
+    if let Some(s) = b.samples.iter().find(|s| s.name == "sweep/trace_parse/rows50k") {
+        derived.push(("trace_parse_throughput".to_string(), bench::ops_per_sec(s)));
     }
     for (k, v) in &derived {
         println!("derived {k} = {v:.2}x");

@@ -11,13 +11,13 @@
 //! ## Declarative scenarios & the shared-workload planner
 //!
 //! Every scenario-shaped figure — ratio grids (3/5/6/10/14/15),
-//! pooled slowdown ECDFs (4/8) and trace replays (12/13) — is a
+//! pooled slowdown ECDFs (4/8), conditional slowdowns (7) and trace
+//! replays (12/13, stand-ins or on-disk trace files) — is a
 //! [`crate::scenario::Scenario`] declaration ([`scenarios_for`] is
 //! the single source; `psbs scenario export` dumps them as the
 //! committed `scenarios/*.toml` files) evaluated by one generic
-//! executor; the remaining figures (conditional slowdowns, per-rep
-//! dual-policy runs, CCDFs) describe flat work-item lists run through
-//! [`Ctx::par_runs`].  Cell grids go through the
+//! executor; the remaining figures (per-rep dual-policy runs, CCDFs)
+//! describe flat work-item lists run through [`Ctx::par_runs`].  Cell grids go through the
 //! [`crate::scenario::planner`]: cells sharing a workload spec are
 //! grouped so each `(workload, seed)` workload is synthesized **once**
 //! and each reference MST computed **once per seed**, with per-policy
@@ -38,7 +38,6 @@ pub mod plot;
 pub mod tables;
 
 use crate::metrics;
-use crate::runtime::Runtime;
 use crate::scenario::{self, AxisParam, Metric, Scenario, TraceSpec};
 use crate::sched;
 use crate::sim::{self, Job};
@@ -58,9 +57,14 @@ pub struct Ctx {
     /// Base seed.
     pub seed: u64,
     /// Output directory for CSVs.
+    ///
+    /// (The AOT runtime handle that used to live here is gone: its
+    /// last figure-path consumer was Fig. 7's bespoke main-thread
+    /// loop, replaced by [`Metric::CondSlowdown`] in the scenario
+    /// layer.  The artifact pipelines stay cross-checked against the
+    /// pure-rust metrics in `rust/tests/integration.rs` and benched
+    /// in `rust/benches/runtime.rs`.)
     pub out_dir: String,
-    /// AOT analytics/workload runtime (None => pure-rust fallback).
-    pub runtime: Option<Runtime>,
     /// Keep repeating past `reps` (up to 10x) until the 95% CI is
     /// within 5% of the mean (§6.3) — slow; off by default.
     pub converge: bool,
@@ -80,7 +84,6 @@ impl Default for Ctx {
             njobs: 10_000,
             seed: 42,
             out_dir: "results".to_string(),
-            runtime: None,
             converge: false,
             threads: 1,
             share: true,
@@ -164,8 +167,9 @@ pub fn run_slowdowns(policy: &str, jobs: &[Job]) -> Vec<f64> {
 
 /// Figure numbers whose every table comes from a [`Scenario`]
 /// declaration — the set `psbs scenario export` dumps into
-/// `scenarios/` (ratio grids, pooled ECDFs, trace replays).
-pub const EXPORTED_FIGS: [u64; 10] = [3, 4, 5, 6, 8, 10, 12, 13, 14, 15];
+/// `scenarios/` (ratio grids, pooled ECDFs, conditional slowdowns,
+/// trace replays).
+pub const EXPORTED_FIGS: [u64; 11] = [3, 4, 5, 6, 7, 8, 10, 12, 13, 14, 15];
 
 /// The declarative form of every scenario-shaped figure: the single
 /// source behind the `figN()` functions, `psbs scenario export`, and
@@ -200,6 +204,11 @@ pub fn scenarios_for(fig: u64, njobs: usize) -> Option<Vec<Scenario>> {
             .axis("sigma", AxisParam::Sigma, &GRID)
             .policies(&grid_policies)
             .vs(Reference::OptSrpt)],
+        // Fig. 7 — mean conditional slowdown vs job size (100
+        // equal-count classes, §7.5's per-size-class fairness lens).
+        7 => vec![Scenario::new("fig7_conditional_slowdown", cfg)
+            .policies(&["fifo", "srpte", "fspe", "ps", "las", "psbs"])
+            .metric(Metric::CondSlowdown { bins: metrics::COND_BINS })],
         // Fig. 8 — per-job slowdown CDF at the defaults + tail numbers.
         8 => vec![Scenario::new("fig8_perjob_slowdown_cdf", cfg)
             .policies(&["fifo", "srpte", "fspe", "ps", "las", "psbs"])
@@ -251,7 +260,7 @@ pub fn scenarios_for(fig: u64, njobs: usize) -> Option<Vec<Scenario>> {
 /// the published record count) across the sigma grid.
 fn trace_scenario(name: &str, trace: TraceName, njobs: usize) -> Scenario {
     let spec = TraceSpec {
-        trace,
+        source: trace.into(),
         njobs: njobs.min(trace.stats().jobs),
         load: 0.9,
         sigma: 0.5,
@@ -300,86 +309,17 @@ pub fn fig6(ctx: &Ctx) -> Vec<Table> {
 }
 
 // --------------------------------------------------------------------
-// Fig. 7 — mean conditional slowdown vs job size (100 classes).
+// Fig. 7 — mean conditional slowdown vs job size (100 classes).  The
+// bespoke main-thread path is gone: the scenario layer's
+// [`Metric::CondSlowdown`] runs it through the shared executor,
+// bit-identical to the old loop
+// (`tests::fig7_scenario_path_matches_bespoke_path_bitwise`).  The
+// analytics-artifact cross-check of this metric lives in
+// `rust/tests/integration.rs`, where both pipelines get identical
+// inputs.
 // --------------------------------------------------------------------
 pub fn fig7(ctx: &Ctx) -> Vec<Table> {
-    let policies = ["fifo", "srpte", "fspe", "ps", "las", "psbs"];
-    let cfg = ctx.cfg();
-    let seed = ctx.seed;
-    let mut t = Table::new(
-        "fig7_conditional_slowdown",
-        ["size"].iter().map(|s| s.to_string()).chain(policies.iter().map(|s| s.to_string())).collect(),
-    );
-    // One pooled population across reps, analyzed per policy.  Reps
-    // run in parallel but one policy is materialized at a time: the
-    // cells return full (jobs, slowdowns) populations, so batching all
-    // policies at once would multiply peak memory by the policy count
-    // versus the serial path.  Pooling stays in the serial order.
-    let rep_items: Vec<u64> = (0..ctx.reps).collect();
-    let mut per_policy: Vec<Vec<(f64, f64)>> = Vec::new();
-    for &policy in &policies {
-        let runs = ctx.par_runs(&rep_items, |&r| {
-            let jobs = crate::workload::synthesize(&cfg, seed.wrapping_add(r * 7919));
-            let mut s = sched::by_name(policy).unwrap();
-            let res = sim::run(s.as_mut(), &jobs);
-            let slow = res.slowdowns(&jobs);
-            (jobs, slow)
-        });
-        let mut jobs_all: Vec<Job> = Vec::new();
-        let mut slow_all: Vec<f64> = Vec::new();
-        for (jobs, slow) in runs {
-            slow_all.extend(slow);
-            jobs_all.extend(jobs);
-        }
-        per_policy.push(conditional_via_runtime(ctx, &jobs_all, &slow_all));
-    }
-    let bins = per_policy[0].len();
-    for b in 0..bins {
-        // Mean size per class is policy-independent (same workloads).
-        let mut row = vec![per_policy[0][b].0];
-        for pp in &per_policy {
-            row.push(pp.get(b).map(|x| x.1).unwrap_or(f64::NAN));
-        }
-        t.push(row);
-    }
-    vec![t]
-}
-
-/// Conditional slowdown through the analytics artifact when loaded
-/// (production path), pure rust otherwise.  Returns (mean size, mean
-/// slowdown) per equal-count class.  Always runs on the main thread —
-/// the runtime handle never crosses into the pool.
-fn conditional_via_runtime(ctx: &Ctx, jobs: &[Job], slowdowns: &[f64]) -> Vec<(f64, f64)> {
-    let rust_way = metrics::conditional_slowdown(jobs, slowdowns, metrics::COND_BINS);
-    match &ctx.runtime {
-        None => rust_way,
-        Some(rt) => {
-            // The artifact computes slowdown = sojourn/size itself; feed
-            // sojourn = slowdown * size so both paths share inputs.
-            let sizes: Vec<f64> = jobs.iter().map(|j| j.size).collect();
-            let sojourns: Vec<f64> =
-                jobs.iter().zip(slowdowns).map(|(j, s)| j.size * s).collect();
-            let idx = metrics::bin_indices(jobs, metrics::COND_BINS);
-            let thr = metrics::log_thresholds(rt.manifest.num_thresholds, 3.0);
-            match rt.analyze(&sizes, &sojourns, &idx, &thr) {
-                Ok(out) => {
-                    let means = out.conditional_slowdown();
-                    // Pair with the rust-side mean sizes (the artifact
-                    // aggregates slowdowns; sizes come from the same
-                    // equal-count classes).
-                    rust_way
-                        .iter()
-                        .zip(means)
-                        .map(|(&(sz, _), m)| (sz, m))
-                        .collect()
-                }
-                Err(e) => {
-                    eprintln!("warning: analytics artifact failed ({e:#}); using rust fallback");
-                    rust_way
-                }
-            }
-        }
-    }
+    ctx.eval_scenarios(&scenarios_for(7, ctx.njobs).unwrap())
 }
 
 // --------------------------------------------------------------------
@@ -746,9 +686,10 @@ mod tests {
     /// Acceptance check for the shared-workload planner: figure output
     /// with shared workloads/references (`share = true`, the default)
     /// is bit-identical to the pre-refactor per-cell path
-    /// (`share = false`), across thread counts, for the three figure
+    /// (`share = false`), across thread counts, for the four figure
     /// shapes — plain ratio grids (Fig. 6), pooled populations
-    /// (Fig. 4) and per-rep dual-policy class means (Fig. 9).
+    /// (Fig. 4), conditional slowdowns (Fig. 7) and per-rep
+    /// dual-policy class means (Fig. 9).
     #[test]
     fn planner_reproduces_per_cell_figures_bitwise() {
         let run = |share: bool, threads: usize, f: u64| {
@@ -762,7 +703,7 @@ mod tests {
             };
             table_bits(&by_number(&ctx, f).unwrap())
         };
-        for f in [4u64, 6, 9] {
+        for f in [4u64, 6, 7, 9] {
             let legacy = run(false, 1, f);
             for threads in [1usize, 3] {
                 assert_eq!(
@@ -844,6 +785,84 @@ mod tests {
         let ctx = Ctx { reps: 2, njobs: 160, seed: 19, threads: 2, ..Default::default() };
         let from_file = loaded.tables(ctx.params(), ctx.threads, ctx.share);
         assert_eq!(table_bits(&from_file), table_bits(&fig6(&ctx)));
+    }
+
+    /// Golden check for the fig-7 migration: the scenario-layer
+    /// [`Metric::CondSlowdown`] path is bit-identical to the deleted
+    /// bespoke main-thread path — replicated here verbatim (workload
+    /// per rep via `seed + r*7919`, `sched::by_name` build, pooling in
+    /// rep order, `metrics::conditional_slowdown` over the pooled
+    /// population, first column from policy 0's classes).
+    #[test]
+    fn fig7_scenario_path_matches_bespoke_path_bitwise() {
+        let ctx = Ctx { reps: 2, njobs: 250, seed: 23, threads: 2, ..Default::default() };
+        // --- the deleted figures::fig7 loop, inlined ---
+        let policies = ["fifo", "srpte", "fspe", "ps", "las", "psbs"];
+        let cfg = SynthConfig::default().with_njobs(ctx.njobs);
+        let mut per_policy: Vec<Vec<(f64, f64)>> = Vec::new();
+        for &policy in &policies {
+            let mut jobs_all: Vec<Job> = Vec::new();
+            let mut slow_all: Vec<f64> = Vec::new();
+            for r in 0..ctx.reps {
+                let jobs =
+                    crate::workload::synthesize(&cfg, ctx.seed.wrapping_add(r * 7919));
+                let mut s = sched::by_name(policy).unwrap();
+                let res = sim::run(s.as_mut(), &jobs);
+                slow_all.extend(res.slowdowns(&jobs));
+                jobs_all.extend(jobs);
+            }
+            per_policy.push(crate::metrics::conditional_slowdown(
+                &jobs_all,
+                &slow_all,
+                crate::metrics::COND_BINS,
+            ));
+        }
+        let mut expected: Vec<Vec<f64>> = Vec::new();
+        for b in 0..per_policy[0].len() {
+            let mut row = vec![per_policy[0][b].0];
+            for pp in &per_policy {
+                row.push(pp.get(b).map(|x| x.1).unwrap_or(f64::NAN));
+            }
+            expected.push(row);
+        }
+        // --- the scenario path ---
+        let got = fig7(&ctx);
+        assert_eq!(got.len(), 1);
+        let t = &got[0];
+        assert_eq!(t.name, "fig7_conditional_slowdown");
+        assert_eq!(t.header[0], "size");
+        let expected_header: Vec<String> = policies.iter().map(|s| s.to_string()).collect();
+        assert_eq!(t.header[1..].to_vec(), expected_header);
+        let bits =
+            |rows: &[Vec<f64>]| -> Vec<Vec<u64>> {
+                rows.iter().map(|r| r.iter().map(|v| v.to_bits()).collect()).collect()
+            };
+        assert_eq!(bits(&expected), bits(&t.rows), "fig7 diverged from the bespoke path");
+    }
+
+    /// The committed trace-file demo scenario (an on-disk
+    /// `arrival,size,weight` trace next to it) loads with its path
+    /// resolved against `scenarios/`, runs through the shared planner,
+    /// and is bit-identical across share x threads.
+    #[test]
+    fn committed_trace_file_demo_runs_bit_identically() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/trace_file_demo.toml");
+        let sc = Scenario::load(path).unwrap();
+        match &sc.workload {
+            scenario::WorkloadSpec::Trace(t) => {
+                assert!(matches!(t.source, scenario::TraceSource::File(_)))
+            }
+            _ => panic!("demo must be a trace-file workload"),
+        }
+        let p = SweepParams { reps: 2, seed: 11, converge: false };
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.table(p, threads, share).rows.iter().flatten().map(|v| v.to_bits()).collect()
+        };
+        let base = bits(false, 1);
+        assert!(base.iter().any(|&b| f64::from_bits(b) > 0.0));
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
     }
 
     /// Every committed scenario file is byte-identical to what

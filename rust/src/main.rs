@@ -5,21 +5,23 @@
 //!   and slowdown statistics;
 //! * `sweep`     — regenerate the paper's figures (`--fig N` or all),
 //!   writing CSVs into `results/`;
-//! * `replay`    — replay a trace file (SWIM TSV or squid log) through a
+//! * `replay`    — replay a trace file (SWIM TSV, squid log, or the
+//!   CSV-like `arrival,size[,weight][,estimate]` format) through a
 //!   policy at a normalized load;
 //! * `serve`     — start the online scheduling service and drive it with
 //!   a synthetic open-loop client, reporting latency/throughput;
 //! * `gen-trace` — write a synthetic stand-in trace (Facebook/IRCache
 //!   statistics) in SWIM TSV form;
 //! * `scenario`  — export the built-in figure scenarios as `.toml`
-//!   files (`psbs scenario export fig6`); `psbs sweep --scenario`
-//!   runs any such file;
+//!   files (`psbs scenario export fig6`) and validate a directory of
+//!   scenario files (`psbs scenario validate`: render/parse round-trip
+//!   plus a tiny smoke run — what the CI `scenario-validate` job
+//!   gates on); `psbs sweep --scenario` runs any such file;
 //! * `dominance` — empirical check of the §3 theorem on random
 //!   workloads (Pri_S vs PS/DPS, PSBS vs DPS).
 
 use psbs::coordinator::{Service, ServiceConfig};
 use psbs::figures::{self, Ctx};
-use psbs::runtime::Runtime;
 use psbs::scenario::{AxisParam, PolicySpec, Reference, Scenario};
 use psbs::sched;
 use psbs::sim::{self, Job};
@@ -63,18 +65,23 @@ fn main() {
 const USAGE: &str = "\
 usage: psbs <subcommand> [options]
   simulate   --policy P --shape S --sigma E --load L --njobs N --seed K [--weights-beta B] [--pareto ALPHA] [--timeshape T]
-  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--no-artifacts] [--converge] [--threads T] [--no-share]
+  sweep      [--fig N] [--reps R] [--njobs N] [--seed K] [--out DIR] [--svg] [--converge] [--threads T] [--no-share]
              [--scenario FILE.toml]
              [--policies P1,P2,... [--axis PARAM[=V1,V2,...]]... [--reference opt|ps|none]]
              (--threads defaults to the machine's available parallelism; 1 = exact serial path — results are bit-identical either
-              way, as is the shared-workload planner vs --no-share; --scenario runs a scenario file (see scenarios/README.md);
+              way, as is the shared-workload planner vs --no-share; --scenario runs a scenario file (see scenarios/README.md) —
+              the file's reps/converge overrides apply unless the same flag is given explicitly here;
               --policies sweeps a custom policy set — composed specs like cluster(k=4,dispatch=leastwork,inner=psbs) work anywhere
               a bare policy name does; --axis repeats for multi-axis cross-product grids, PARAM in
               shape|sigma|load|timeshape|njobs|beta|alpha, values optional — e.g. --axis sigma=0.25,0.5,1 --axis load=0.7,0.9)
-  replay     --trace FILE --format swim|squid [--policy P] [--sigma E] [--load L] [--seed K]
+  replay     --trace FILE --format swim|squid|csv [--policy P] [--sigma E] [--load L] [--seed K]
+             (csv = the scenario-layer trace format: arrival,size[,weight][,estimate] — see scenarios/README.md)
   serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
   gen-trace  --stats facebook|ircache --out FILE [--seed K]
   scenario   export <figN|all> [--dir scenarios] [--njobs N]  (dump built-in figure scenarios as .toml files)
+  scenario   validate [--dir scenarios] [--njobs N] [--reps R] [--threads T]
+             (round-trip every *.toml in --dir through render/parse and smoke-run it at a tiny --njobs;
+              non-zero exit on any failure — the CI scenario-validate gate)
   dominance  [--cases N] [--njobs J] [--seed K]
   estimate   [--shape S] [--njobs N] [--seed K] (compare job-size estimators)
   policies   (list scheduling disciplines)";
@@ -192,7 +199,6 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         njobs: a.get_u64("njobs", 10_000)? as usize,
         seed: a.get_u64("seed", 42)?,
         out_dir: a.get("out", "results"),
-        runtime: if a.get_bool("no-artifacts")? { None } else { Runtime::try_default() },
         converge: a.get_bool("converge")?,
         threads: a
             .get_u64("threads", psbs::util::pool::available_threads() as u64)?
@@ -200,11 +206,6 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         share: !a.get_bool("no-share")?,
     };
     a.check_unknown()?;
-    if ctx.runtime.is_some() {
-        println!("# analytics running through the AOT PJRT artifacts");
-    } else {
-        println!("# AOT artifacts not loaded; using pure-rust analytics fallback");
-    }
     println!(
         "# sweep executor: {} worker thread(s), {} workloads",
         ctx.threads,
@@ -213,14 +214,25 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
 
     // A scenario file: the whole experiment lives in the .toml; only
     // execution knobs (--reps/--seed/--threads/...) come from the CLI,
-    // plus an explicit --njobs rescale when given.
+    // plus an explicit --njobs rescale when given.  The file's own
+    // reps/converge overrides apply unless the matching CLI flag was
+    // given explicitly — a file pinning `reps = 30` must not silently
+    // run at the CLI default 5, and `--reps 2` on the command line
+    // must still win for quick looks.
     if let Some(path) = scenario_path {
         let mut sc = Scenario::load(&path)?;
         if njobs_opt.is_some() {
             sc = sc.with_njobs(ctx.njobs);
         }
+        let mut p = sc.sweep_params(ctx.params());
+        if a.has("reps") {
+            p.reps = ctx.reps;
+        }
+        if a.has("converge") {
+            p.converge = ctx.converge;
+        }
         let t0 = std::time::Instant::now();
-        for t in ctx.eval_scenario(&sc) {
+        for t in sc.tables(p, ctx.threads, ctx.share) {
             emit_table(&t, &ctx, svg)?;
         }
         println!("# scenario {} done in {:.1?}\n", sc.name, t0.elapsed());
@@ -276,11 +288,20 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
 /// `psbs scenario export <figN|all>` — dump the built-in figure
 /// scenarios as canonical `.toml` files (the committed `scenarios/`
 /// directory is exactly this output at the default scale).
+/// `psbs scenario validate` — round-trip + smoke-run a directory of
+/// scenario files.
 fn cmd_scenario(a: &Args) -> Result<(), String> {
     let action = a.positional(0).ok_or_else(|| format!("missing action\n{USAGE}"))?;
-    if action != "export" {
-        return Err(format!("unknown scenario action `{action}` (expected `export`)"));
+    match action.as_str() {
+        "export" => cmd_scenario_export(a),
+        "validate" => cmd_scenario_validate(a),
+        other => {
+            Err(format!("unknown scenario action `{other}` (expected `export` or `validate`)"))
+        }
     }
+}
+
+fn cmd_scenario_export(a: &Args) -> Result<(), String> {
     let what = a
         .positional(1)
         .ok_or_else(|| format!("scenario export: which figure? (figN or all)\n{USAGE}"))?;
@@ -315,6 +336,105 @@ fn cmd_scenario(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `psbs scenario validate [--dir D] [--njobs N] [--reps R]
+/// [--threads T]` — for every `*.toml` in the directory: (1) parse,
+/// render the canonical form, re-parse and require the result to be
+/// identical and the render a byte-exact fixpoint (schema and renderer
+/// cannot drift apart on committed files); (2) smoke-run the scenario
+/// through the shared planner at a tiny `--njobs` budget and require
+/// well-formed, finite tables.  Non-zero exit on any failure — this is
+/// exactly what the blocking CI `scenario-validate` job runs, so a
+/// schema change or a broken scenario file fails the PR, not the user.
+fn cmd_scenario_validate(a: &Args) -> Result<(), String> {
+    let dir = a.get("dir", "scenarios");
+    let njobs = a.get_u64("njobs", 150)? as usize;
+    let reps = a.get_u64("reps", 1)?;
+    let threads = a
+        .get_u64("threads", psbs::util::pool::available_threads() as u64)?
+        .max(1) as usize;
+    a.check_unknown()?;
+
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .map_err(|e| format!("reading {dir}: {e}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map_or(false, |x| x == "toml"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("{dir}: no scenario (*.toml) files to validate"));
+    }
+
+    let base = std::path::Path::new(&dir);
+    let mut failures: Vec<String> = Vec::new();
+    for path in &files {
+        let shown = path.display();
+        match validate_scenario_file(path, base, njobs, reps, threads) {
+            Ok(ntables) => println!("ok   {shown}: round-trip + smoke ({ntables} table(s))"),
+            Err(e) => {
+                eprintln!("FAIL {shown}: {e}");
+                failures.push(shown.to_string());
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("validated {} scenario file(s) in {dir}", files.len());
+        Ok(())
+    } else {
+        Err(format!(
+            "{} of {} scenario file(s) failed validation: {}",
+            failures.len(),
+            files.len(),
+            failures.join(", ")
+        ))
+    }
+}
+
+fn validate_scenario_file(
+    path: &std::path::Path,
+    base: &std::path::Path,
+    njobs: usize,
+    reps: u64,
+    threads: usize,
+) -> Result<usize, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading: {e}"))?;
+    let sc = Scenario::parse_toml_in(&text, Some(base))?;
+    // Round-trip: the canonical render must re-parse to the same
+    // scenario and be a byte-exact fixpoint.
+    let rendered = sc.to_toml();
+    let back = Scenario::parse_toml_in(&rendered, Some(base))
+        .map_err(|e| format!("canonical render failed to re-parse: {e}"))?;
+    if back != sc {
+        return Err("render/parse round-trip drifted from the original scenario".into());
+    }
+    if back.to_toml() != rendered {
+        return Err("canonical render is not byte-identical under re-render".into());
+    }
+    // Smoke run: tiny but real — through the same planner a full sweep
+    // uses.  File reps/converge overrides are deliberately ignored
+    // here; the smoke budget must stay bounded no matter what a
+    // scenario pins for its production runs.
+    let smoke = sc.with_njobs(njobs);
+    let p = psbs::scenario::SweepParams { reps, seed: 42, converge: false };
+    let tables = smoke.tables(p, threads, true);
+    if tables.is_empty() {
+        return Err("smoke run produced no tables".into());
+    }
+    for t in &tables {
+        if t.rows.is_empty() {
+            return Err(format!("smoke run: table {} has no rows", t.name));
+        }
+        for row in &t.rows {
+            if row.len() != t.header.len() {
+                return Err(format!("smoke run: table {} has a ragged row", t.name));
+            }
+            if !row[0].is_finite() {
+                return Err(format!("smoke run: table {} has a non-finite x value", t.name));
+            }
+        }
+    }
+    Ok(tables.len())
+}
+
 fn emit_table(t: &figures::Table, ctx: &Ctx, svg: bool) -> Result<(), String> {
     println!("{}", t.render());
     let path = t.write_csv(&ctx.out_dir).map_err(|e| e.to_string())?;
@@ -336,11 +456,19 @@ fn cmd_replay(a: &Args) -> Result<(), String> {
     let seed = a.get_u64("seed", 42)?;
     a.check_unknown()?;
 
-    let recs = traces::load_file(&trace, &format).map_err(|e| e.to_string())?;
-    if recs.is_empty() {
-        return Err("trace has no usable records".into());
-    }
-    let jobs = traces::to_jobs(&recs, load, sigma, seed);
+    // The scenario-layer CSV format parses with hard errors and
+    // carries optional weight/estimate columns; SWIM/squid keep their
+    // lenient skip-malformed-rows behavior (real logs are dirty).
+    let jobs = if format == "csv" {
+        psbs::workload::trace_file::TraceFile::load(&trace)?
+            .to_jobs(usize::MAX, load, sigma, seed)
+    } else {
+        let recs = traces::load_file(&trace, &format).map_err(|e| e.to_string())?;
+        if recs.is_empty() {
+            return Err("trace has no usable records".into());
+        }
+        traces::to_jobs(&recs, load, sigma, seed)
+    };
     let mut s = sched::by_name(&policy).ok_or_else(|| format!("unknown policy {policy}"))?;
     let t0 = std::time::Instant::now();
     let res = sim::run(s.as_mut(), &jobs);

@@ -9,7 +9,9 @@
 //!
 //! ```text
 //! name = "fig6_mst_vs_sigma"      # top-level keys first
-//! metric = "mean"                 # "mean" | "ecdf"
+//! metric = "mean"                 # "mean" | "ecdf" | "cond_slowdown"
+//! reps = 30                       # optional per-scenario overrides;
+//! converge = true                 # an explicit CLI flag still wins
 //! reference = "opt"               # "opt" | "ps" (omit for raw MST)
 //!
 //! [workload]                      # exactly one
@@ -20,6 +22,13 @@
 //! load = 0.9
 //! njobs = 10000
 //! beta = 0
+//!
+//! # kind = "trace" instead names a built-in stand-in OR an on-disk
+//! # trace file (arrival,size[,weight][,estimate] — see
+//! # crate::workload::trace_file), mutually exclusive:
+//! # trace = "facebook"            # "facebook" | "ircache"
+//! # path = "my_trace.csv"         # resolved against the scenario
+//! #                               # file's own directory
 //!
 //! [[axis]]                        # zero or more
 //! param = "shape"                 # shape|sigma|load|timeshape|njobs|beta|alpha
@@ -44,11 +53,14 @@
 //! same way `PolicySpec`'s grammar is pinned.
 
 use super::{
-    Axis, AxisParam, Metric, PolicySpec, Reference, Scenario, TraceSpec, WorkloadSpec,
+    Axis, AxisParam, Metric, PolicySpec, Reference, Scenario, TraceSource, TraceSpec,
+    WorkloadSpec,
 };
+use crate::workload::trace_file::TraceFile;
 use crate::workload::traces::TraceName;
 use crate::workload::{SizeDist, SynthConfig};
 use std::fmt;
+use std::path::Path;
 
 impl Scenario {
     /// Render the canonical scenario-file form.
@@ -65,6 +77,16 @@ impl Scenario {
                     s.push_str(&format!("tail_above = {t}\n"));
                 }
             }
+            Metric::CondSlowdown { bins } => {
+                s.push_str("metric = \"cond_slowdown\"\n");
+                s.push_str(&format!("bins = {bins}\n"));
+            }
+        }
+        if let Some(r) = self.reps {
+            s.push_str(&format!("reps = {r}\n"));
+        }
+        if let Some(c) = self.converge {
+            s.push_str(&format!("converge = {c}\n"));
         }
         if let Some(r) = self.reference {
             let r = match r {
@@ -74,7 +96,7 @@ impl Scenario {
             s.push_str(&format!("reference = \"{r}\"\n"));
         }
         s.push_str("\n[workload]\n");
-        match self.workload {
+        match &self.workload {
             WorkloadSpec::Synth(c) => {
                 s.push_str("kind = \"synthetic\"\n");
                 match c.size_dist {
@@ -89,7 +111,12 @@ impl Scenario {
             }
             WorkloadSpec::Trace(t) => {
                 s.push_str("kind = \"trace\"\n");
-                s.push_str(&format!("trace = \"{}\"\n", t.trace.name()));
+                match &t.source {
+                    TraceSource::Builtin(n) => {
+                        s.push_str(&format!("trace = \"{}\"\n", n.name()))
+                    }
+                    TraceSource::File(f) => s.push_str(&format!("path = \"{}\"\n", f.path)),
+                }
                 s.push_str(&format!("njobs = {}\n", t.njobs));
                 s.push_str(&format!("load = {}\n", t.load));
                 s.push_str(&format!("sigma = {}\n", t.sigma));
@@ -118,15 +145,26 @@ impl Scenario {
     }
 
     /// Parse a scenario file.  Errors carry the offending line number.
+    /// Relative trace-file `path`s resolve against the working
+    /// directory; use [`Scenario::parse_toml_in`] to anchor them.
     pub fn parse_toml(text: &str) -> Result<Scenario, String> {
+        Scenario::parse_toml_in(text, None)
+    }
+
+    /// Parse with relative trace-file `path`s resolved against `base`
+    /// (the scenario file's own directory, for [`Scenario::load`] and
+    /// `psbs scenario validate` — a committed scenario must work from
+    /// any working directory).
+    pub fn parse_toml_in(text: &str, base: Option<&Path>) -> Result<Scenario, String> {
         let doc = Doc::parse(text)?;
-        doc.into_scenario()
+        doc.into_scenario(base)
     }
 
     /// Load a scenario from a file path.
     pub fn load(path: &str) -> Result<Scenario, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
-        Scenario::parse_toml(&text).map_err(|e| format!("{path}: {e}"))
+        let base = Path::new(path).parent().filter(|p| !p.as_os_str().is_empty());
+        Scenario::parse_toml_in(&text, base).map_err(|e| format!("{path}: {e}"))
     }
 }
 
@@ -283,32 +321,50 @@ impl Doc {
         Ok(doc)
     }
 
-    fn into_scenario(self) -> Result<Scenario, String> {
+    fn into_scenario(self, base: Option<&Path>) -> Result<Scenario, String> {
         self.top.check_keys(
             "top level",
-            &["name", "metric", "points", "decades", "tail_above", "reference"],
+            &[
+                "name", "metric", "points", "decades", "tail_above", "bins", "reps",
+                "converge", "reference",
+            ],
         )?;
         let name = self
             .top
             .str("name")?
             .ok_or("missing top-level `name`")?
             .to_string();
+        // Each metric rejects the other metrics' parameter keys: a
+        // stray `points` on a mean scenario is a typo, not a default.
+        let reject = |keys: &[&str], metric: &str| -> Result<(), String> {
+            for k in keys {
+                if self.top.get(k).is_some() {
+                    return Err(format!("`{k}` does not apply to metric = \"{metric}\""));
+                }
+            }
+            Ok(())
+        };
         let metric = match self.top.str("metric")?.unwrap_or("mean") {
             "mean" => {
-                for k in ["points", "decades", "tail_above"] {
-                    if self.top.get(k).is_some() {
-                        return Err(format!("`{k}` only applies to metric = \"ecdf\""));
-                    }
-                }
+                reject(&["points", "decades", "tail_above", "bins"], "mean")?;
                 Metric::Mean
             }
-            "ecdf" => Metric::PooledEcdf {
-                points: self.top.usize("points")?.unwrap_or(128),
-                decades: self.top.num("decades")?.unwrap_or(3.0),
-                tail_above: self.top.num("tail_above")?,
-            },
-            other => return Err(format!("unknown metric `{other}` (mean|ecdf)")),
+            "ecdf" => {
+                reject(&["bins"], "ecdf")?;
+                Metric::PooledEcdf {
+                    points: self.top.usize("points")?.unwrap_or(128),
+                    decades: self.top.num("decades")?.unwrap_or(3.0),
+                    tail_above: self.top.num("tail_above")?,
+                }
+            }
+            "cond_slowdown" => {
+                reject(&["points", "decades", "tail_above"], "cond_slowdown")?;
+                Metric::CondSlowdown { bins: self.top.usize("bins")?.unwrap_or(100) }
+            }
+            other => return Err(format!("unknown metric `{other}` (mean|ecdf|cond_slowdown)")),
         };
+        let reps = self.top.usize("reps")?.map(|r| r as u64);
+        let converge = self.top.bool("converge")?;
         let reference = match self.top.str("reference")? {
             None | Some("none") => None,
             Some("opt") => Some(Reference::OptSrpt),
@@ -346,15 +402,35 @@ impl Doc {
                 })
             }
             "trace" => {
-                w.check_keys("[workload]", &["kind", "trace", "njobs", "load", "sigma"])?;
-                let trace_name = w.str("trace")?.ok_or("[workload]: missing `trace`")?;
-                let trace = TraceName::from_name(trace_name)
-                    .ok_or_else(|| format!("unknown trace `{trace_name}` (facebook|ircache)"))?;
+                w.check_keys("[workload]", &["kind", "trace", "path", "njobs", "load", "sigma"])?;
+                let source = match (w.str("trace")?, w.str("path")?) {
+                    (Some(_), Some(_)) => {
+                        return Err(
+                            "[workload]: `trace` and `path` are mutually exclusive".into()
+                        )
+                    }
+                    (None, None) => {
+                        return Err(
+                            "[workload]: trace needs `trace` (stand-in) or `path` (file)".into()
+                        )
+                    }
+                    (Some(name), None) => TraceSource::Builtin(
+                        TraceName::from_name(name)
+                            .ok_or_else(|| format!("unknown trace `{name}` (facebook|ircache)"))?,
+                    ),
+                    // The file loads eagerly: a scenario naming a
+                    // missing or malformed trace fails at parse time
+                    // (what `psbs scenario validate` gates on), never
+                    // mid-sweep on a worker.
+                    (None, Some(path)) => {
+                        TraceSource::File(TraceFile::load_relative(path, base)?)
+                    }
+                };
                 WorkloadSpec::Trace(TraceSpec {
-                    trace,
-                    njobs: w.usize("njobs")?.unwrap_or(trace.stats().jobs),
+                    njobs: w.usize("njobs")?.unwrap_or(source.max_jobs()),
                     load: w.num("load")?.unwrap_or(0.9),
                     sigma: w.num("sigma")?.unwrap_or(0.5),
+                    source,
                 })
             }
             other => return Err(format!("unknown workload kind `{other}` (synthetic|trace)")),
@@ -386,7 +462,7 @@ impl Doc {
             policies.push((label, spec));
         }
 
-        let sc = Scenario { name, workload, axes, policies, reference, metric };
+        let sc = Scenario { name, workload, axes, policies, reference, metric, reps, converge };
         sc.validate()?;
         Ok(sc)
     }
@@ -477,7 +553,7 @@ mod tests {
         let tr = Scenario::with_workload(
             "fig12_like",
             TraceSpec {
-                trace: TraceName::Facebook,
+                source: TraceName::Facebook.into(),
                 njobs: 24_443,
                 load: 0.9,
                 sigma: 0.5,
@@ -492,6 +568,66 @@ mod tests {
             .policies(&["fifo", "srpte", "psbs"])
             .metric(Metric::PooledEcdf { points: 128, decades: 4.0, tail_above: Some(100.0) });
         assert_round_trip(&ec);
+    }
+
+    #[test]
+    fn cond_slowdown_and_override_scenarios_round_trip() {
+        let sc = Scenario::new("fig7_like", SynthConfig::default())
+            .policies(&["fifo", "ps", "psbs"])
+            .metric(Metric::CondSlowdown { bins: 100 });
+        assert_round_trip(&sc);
+        assert!(sc.to_toml().contains("metric = \"cond_slowdown\"\nbins = 100\n"));
+
+        let sc = Scenario::new("pinned", SynthConfig::default())
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["psbs"])
+            .vs(Reference::OptSrpt)
+            .reps_override(30)
+            .converge_override(true);
+        assert_round_trip(&sc);
+        assert!(sc.to_toml().contains("reps = 30\nconverge = true\n"));
+    }
+
+    /// `kind = "trace"` + `path = ...`: loads eagerly, resolves the
+    /// path against `base`, renders the path back verbatim, and
+    /// round-trips.
+    #[test]
+    fn trace_file_scenarios_round_trip_and_resolve_relative_paths() {
+        let dir = std::env::temp_dir().join("psbs_scenario_trace_file_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.csv"), "arrival,size\n0,10\n1,20\n2,5\n").unwrap();
+        let text = "name = \"t\"\n\n[workload]\nkind = \"trace\"\npath = \"t.csv\"\n\n\
+                    [[policy]]\nspec = \"psbs\"\n";
+        // Without a base dir the relative path misses (unless the CWD
+        // happens to hold a t.csv — use an absolute-base parse for the
+        // positive case).
+        let sc = Scenario::parse_toml_in(text, Some(dir.as_path())).unwrap();
+        match &sc.workload {
+            WorkloadSpec::Trace(t) => {
+                assert_eq!(t.njobs, 3, "njobs defaults to the file's row count");
+                match &t.source {
+                    TraceSource::File(f) => {
+                        assert_eq!(f.path, "t.csv", "path stored as written");
+                        assert_eq!(f.rows.len(), 3);
+                    }
+                    _ => panic!("expected file source"),
+                }
+            }
+            _ => panic!("expected trace workload"),
+        }
+        let rendered = sc.to_toml();
+        assert!(rendered.contains("path = \"t.csv\"\n"));
+        let back = Scenario::parse_toml_in(&rendered, Some(dir.as_path())).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.to_toml(), rendered, "render is not a fixpoint");
+        // A missing trace file fails the scenario parse, eagerly.
+        let err = Scenario::parse_toml_in(
+            &rendered.replace("t.csv", "missing.csv"),
+            Some(dir.as_path()),
+        )
+        .unwrap_err();
+        assert!(err.contains("reading trace file"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]
@@ -517,7 +653,11 @@ mod tests {
         fn gen_scenario(rng: &mut Rng) -> Scenario {
             let workload = if rng.below(4) == 0 {
                 WorkloadSpec::Trace(TraceSpec {
-                    trace: if rng.below(2) == 0 { TraceName::Facebook } else { TraceName::Ircache },
+                    source: if rng.below(2) == 0 {
+                        TraceName::Facebook.into()
+                    } else {
+                        TraceName::Ircache.into()
+                    },
                     njobs: 100 + rng.below(10_000) as usize,
                     load: 0.1 * (1 + rng.below(9)) as f64,
                     sigma: 0.25 * rng.below(8) as f64,
@@ -537,7 +677,10 @@ mod tests {
                 WorkloadSpec::Synth(c)
             };
             let is_trace = matches!(workload, WorkloadSpec::Trace(_));
-            let ecdf = rng.below(3) == 0;
+            // Metric: 0 = ecdf, 1 = cond_slowdown, else mean.  Both
+            // pooled metrics restrict axes to split axes.
+            let metric_kind = rng.below(5);
+            let pooled = metric_kind < 2;
             let mut sc = Scenario::with_workload(format!("s{}", rng.below(1000)), workload);
             let axis_pool: &[AxisParam] = if is_trace {
                 &[AxisParam::Sigma, AxisParam::Load, AxisParam::Njobs]
@@ -560,8 +703,8 @@ mod tests {
                     param.name().to_string()
                 };
                 let values = gen_values(rng);
-                // ECDF scenarios only carry split axes.
-                if ecdf || rng.below(2) == 0 {
+                // Pooled-metric scenarios only carry split axes.
+                if pooled || rng.below(2) == 0 {
                     sc = sc.split_axis(label, param, &values);
                 } else {
                     sc = sc.axis(label, param, &values);
@@ -577,14 +720,27 @@ mod tests {
                     sc = sc.policy_as(PolicySpec::from(spec).to_string(), spec);
                 }
             }
-            if ecdf {
-                sc = sc.metric(Metric::PooledEcdf {
-                    points: 8 + rng.below(120) as usize,
-                    decades: 1.0 + rng.below(4) as f64,
-                    tail_above: if rng.below(2) == 0 { Some(10.0) } else { None },
-                });
-            } else if rng.below(3) > 0 {
-                sc = sc.vs(if rng.below(2) == 0 { Reference::OptSrpt } else { Reference::Ps });
+            match metric_kind {
+                0 => {
+                    sc = sc.metric(Metric::PooledEcdf {
+                        points: 8 + rng.below(120) as usize,
+                        decades: 1.0 + rng.below(4) as f64,
+                        tail_above: if rng.below(2) == 0 { Some(10.0) } else { None },
+                    });
+                }
+                1 => {
+                    sc = sc.metric(Metric::CondSlowdown { bins: 2 + rng.below(200) as usize });
+                }
+                _ if rng.below(3) > 0 => {
+                    sc = sc.vs(if rng.below(2) == 0 { Reference::OptSrpt } else { Reference::Ps });
+                }
+                _ => {}
+            }
+            if rng.below(4) == 0 {
+                sc = sc.reps_override(1 + rng.below(50));
+            }
+            if rng.below(4) == 0 {
+                sc = sc.converge_override(rng.below(2) == 0);
             }
             sc
         }
@@ -652,6 +808,15 @@ mod tests {
             ("trace with shape axis", "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"facebook\"\n\n[[axis]]\nparam = \"shape\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
             ("ecdf with reference", "name = \"t\"\nmetric = \"ecdf\"\nreference = \"ps\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("ecdf points on mean", &format!("points = 9\n{base}")),
+            ("cond bins on mean", &format!("bins = 9\n{base}")),
+            ("ecdf points on cond_slowdown", "name = \"t\"\nmetric = \"cond_slowdown\"\npoints = 9\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("cond bins below 2", "name = \"t\"\nmetric = \"cond_slowdown\"\nbins = 1\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("cond with row axis", "name = \"t\"\nmetric = \"cond_slowdown\"\n\n[workload]\nkind = \"synthetic\"\n\n[[axis]]\nparam = \"sigma\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("zero reps override", &format!("reps = 0\n{base}")),
+            ("non-bool converge", &format!("converge = 3\n{base}")),
+            ("trace with both trace and path", "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"facebook\"\npath = \"x.csv\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("trace with neither trace nor path", "name = \"t\"\n\n[workload]\nkind = \"trace\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("trace path missing on disk", "name = \"t\"\n\n[workload]\nkind = \"trace\"\npath = \"/nonexistent/psbs_missing.csv\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("duplicate key", "name = \"t\"\nname = \"u\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("garbage line", &format!("{base}\nwat\n")),
             ("empty array element", &format!("{base}\n[[axis]]\nparam = \"sigma\"\nvalues = [0.5,,1]\n")),
@@ -668,7 +833,7 @@ mod tests {
         let sc = Scenario::parse_toml(text).unwrap();
         match sc.workload {
             WorkloadSpec::Trace(t) => {
-                assert_eq!(t.trace, TraceName::Ircache);
+                assert_eq!(t.source, TraceSource::Builtin(TraceName::Ircache));
                 assert_eq!(t.njobs, 206_914);
                 assert_eq!(t.load, 0.9);
                 assert_eq!(t.sigma, 0.5);

@@ -16,15 +16,17 @@
 //!   [`crate::sched::by_name`] is a compatibility shim over
 //!   [`PolicySpec::parse`].
 //! * [`Scenario`] — a declarative sweep description: a
-//!   [`WorkloadSpec`] (synthetic Table-1 model or trace-replay
-//!   stand-in) x grid axes (row axes become table columns, *split*
-//!   axes fan out into one table per value) x policy set x
-//!   [`Metric`] x optional [`Reference`]; one generic evaluator
+//!   [`WorkloadSpec`] (synthetic Table-1 model, trace-replay
+//!   stand-in, or a user-supplied on-disk trace file via
+//!   [`TraceSource::File`]) x grid axes (row axes become table
+//!   columns, *split* axes fan out into one table per value) x policy
+//!   set x [`Metric`] x optional [`Reference`], plus optional
+//!   per-scenario `reps`/`converge` overrides; one generic evaluator
 //!   ([`Scenario::tables`]) turns it into figure tables, so each
 //!   scenario-shaped `figures::figN` collapses to a ~10-line
-//!   declaration — including the pooled-slowdown ECDFs (Figs. 4/8)
-//!   and the trace replays (Figs. 12/13) that used to be bespoke
-//!   work-item code.
+//!   declaration — including the pooled-slowdown ECDFs (Figs. 4/8),
+//!   the conditional-slowdown fairness table (Fig. 7) and the trace
+//!   replays (Figs. 12/13) that used to be bespoke work-item code.
 //! * scenario **files** (`file`) — a dependency-free TOML-subset
 //!   serialization of [`Scenario`] (`to_toml`/`parse_toml`,
 //!   round-trip property-tested like `PolicySpec`), so experiment
@@ -60,6 +62,7 @@ use crate::figures::tables::Table;
 use crate::metrics;
 use crate::sim::Job;
 use crate::util::pool;
+use crate::workload::trace_file::TraceFile;
 use crate::workload::traces::{self, TraceName};
 use crate::workload::{SizeDist, SynthConfig};
 
@@ -97,14 +100,51 @@ pub fn exact_copy(jobs: &[Job]) -> Vec<Job> {
     jobs.iter().map(|j| Job { est: j.size, ..*j }).collect()
 }
 
-/// A trace-replay workload description (Figs. 12/13): which published
-/// trace stand-in, how many records to replay, the load normalization
-/// and the size-estimation error level.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Where a trace-replay's records come from: a published stand-in or a
+/// user-supplied on-disk trace file
+/// ([`crate::workload::trace_file`]'s `arrival,size[,weight][,estimate]`
+/// format, loaded once and shared by `Arc` across every clone).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSource {
+    /// Synthetic stand-in matched to published statistics, re-drawn
+    /// per repetition seed (Figs. 12/13).
+    Builtin(TraceName),
+    /// Fixed on-disk records; only the size-estimation error varies
+    /// per repetition.
+    File(TraceFile),
+}
+
+impl From<TraceName> for TraceSource {
+    fn from(n: TraceName) -> TraceSource {
+        TraceSource::Builtin(n)
+    }
+}
+
+impl From<TraceFile> for TraceSource {
+    fn from(f: TraceFile) -> TraceSource {
+        TraceSource::File(f)
+    }
+}
+
+impl TraceSource {
+    /// The most records this source can replay (the `njobs` default
+    /// and cap): the published job count, or the file's row count.
+    pub fn max_jobs(&self) -> usize {
+        match self {
+            TraceSource::Builtin(n) => n.stats().jobs,
+            TraceSource::File(f) => f.rows.len(),
+        }
+    }
+}
+
+/// A trace-replay workload description (Figs. 12/13 and on-disk
+/// replays): which record source, how many records to replay, the load
+/// normalization and the size-estimation error level.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceSpec {
-    pub trace: TraceName,
-    /// Replay at most this many records (the full traces are 24 443 /
-    /// 206 914 jobs).
+    pub source: TraceSource,
+    /// Replay at most this many records (the full published traces are
+    /// 24 443 / 206 914 jobs).
     pub njobs: usize,
     /// Offered-load normalization (paper §7.8: 0.9).
     pub load: f64,
@@ -112,14 +152,24 @@ pub struct TraceSpec {
     pub sigma: f64,
 }
 
+impl TraceSpec {
+    /// A spec replaying the whole source at the paper's defaults
+    /// (load 0.9, sigma 0.5).
+    pub fn new(source: impl Into<TraceSource>) -> TraceSpec {
+        let source = source.into();
+        TraceSpec { njobs: source.max_jobs(), load: 0.9, sigma: 0.5, source }
+    }
+}
+
 /// Where a sweep cell's jobs come from.  Everything a cell needs to
-/// synthesize its workload for a repetition, in a `Copy`, hashable-by-
-/// bits form the planner can group on.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// synthesize its workload for a repetition, in a cheaply-clonable,
+/// hashable-by-bits form the planner can group on (file-backed traces
+/// share their rows by `Arc` and key on the path).
+#[derive(Debug, Clone, PartialEq)]
 pub enum WorkloadSpec {
     /// The Table-1 synthetic model.
     Synth(SynthConfig),
-    /// A trace-replay stand-in matched to published statistics.
+    /// A trace replay: published stand-in or on-disk file.
     Trace(TraceSpec),
 }
 
@@ -151,16 +201,28 @@ impl WorkloadSpec {
     pub fn synthesize(&self, rep_seed: u64) -> Vec<Job> {
         match self {
             WorkloadSpec::Synth(cfg) => crate::workload::synthesize(cfg, rep_seed),
-            WorkloadSpec::Trace(t) => {
-                let mut recs = traces::synth_trace(t.trace.stats(), rep_seed);
-                recs.truncate(t.njobs);
-                traces::to_jobs(&recs, t.load, t.sigma, rep_seed)
-            }
+            WorkloadSpec::Trace(t) => match &t.source {
+                TraceSource::Builtin(name) => {
+                    let mut recs = traces::synth_trace(name.stats(), rep_seed);
+                    recs.truncate(t.njobs);
+                    traces::to_jobs(&recs, t.load, t.sigma, rep_seed)
+                }
+                TraceSource::File(f) => f.to_jobs(t.njobs, t.load, t.sigma, rep_seed),
+            },
         }
     }
 
     /// Bitwise grouping key: two specs share a key iff [`synthesize`]
     /// would produce identical workloads for them at every seed.
+    /// File-backed traces key on the *identity* of their loaded row
+    /// buffer (the `Arc` pointer): clones of one load — how a scenario
+    /// fans a trace out across axes and cells — share a group, while
+    /// separately loaded buffers never merge, so two different row
+    /// sets behind one path (an edited file re-loaded, in-memory
+    /// traces with placeholder names) can never be conflated.  The
+    /// key's value varies across runs, but results never depend on it:
+    /// grouping order is first-appearance order and sharing is
+    /// numerically a no-op.
     ///
     /// [`synthesize`]: WorkloadSpec::synthesize
     pub fn key(&self) -> [u64; 8] {
@@ -181,16 +243,25 @@ impl WorkloadSpec {
                     c.beta.to_bits(),
                 ]
             }
-            WorkloadSpec::Trace(t) => [
-                1,
-                t.trace as u64,
-                t.njobs as u64,
-                t.load.to_bits(),
-                t.sigma.to_bits(),
-                0,
-                0,
-                0,
-            ],
+            WorkloadSpec::Trace(t) => {
+                let (tag, ident, extra) = match &t.source {
+                    TraceSource::Builtin(n) => (0u64, *n as u64, 0u64),
+                    TraceSource::File(f) => {
+                        let ptr = std::sync::Arc::as_ptr(&f.rows) as usize as u64;
+                        (1u64, ptr, f.rows.len() as u64)
+                    }
+                };
+                [
+                    1,
+                    tag,
+                    ident,
+                    t.njobs as u64,
+                    t.load.to_bits(),
+                    t.sigma.to_bits(),
+                    extra,
+                    0,
+                ]
+            }
         }
     }
 }
@@ -283,7 +354,8 @@ impl AxisParam {
             (AxisParam::Sigma, WorkloadSpec::Trace(t)) => TraceSpec { sigma: v, ..t }.into(),
             (AxisParam::Load, WorkloadSpec::Trace(t)) => TraceSpec { load: v, ..t }.into(),
             (AxisParam::Njobs, WorkloadSpec::Trace(t)) => {
-                TraceSpec { njobs: v as usize, ..t }.into()
+                let njobs = (v as usize).min(t.source.max_jobs());
+                TraceSpec { njobs, ..t }.into()
             }
             (_, w) => w,
         }
@@ -359,6 +431,17 @@ pub enum Metric {
     /// and does not apply to pooled populations (the pre-refactor
     /// figure code ignored `--converge` here too).
     PooledEcdf { points: usize, decades: f64, tail_above: Option<f64> },
+    /// Mean conditional slowdown per equal-count size class (Fig. 7,
+    /// the paper's per-size-class fairness lens): pool every
+    /// repetition's (jobs, slowdowns) per policy, split the pooled
+    /// population into `bins` classes of similar size and equal count,
+    /// and report (mean class size, mean class slowdown) — rows are
+    /// classes, first column the mean size, one further column per
+    /// policy.  Like [`Metric::PooledEcdf`]: axes must be split axes,
+    /// no reference applies, and exactly `reps` repetitions pool
+    /// (`--converge` is a scalar-cell notion).  Workload sharing is
+    /// structurally a no-op on this path too.
+    CondSlowdown { bins: usize },
 }
 
 /// A declarative sweep scenario: workload source, grid `axes`
@@ -376,6 +459,12 @@ pub struct Scenario {
     pub policies: Vec<(String, PolicySpec)>,
     pub reference: Option<Reference>,
     pub metric: Metric,
+    /// Per-scenario repetition-count override: a scenario file can pin
+    /// how many repetitions it needs (`reps = 30`); an explicit CLI
+    /// `--reps` still wins.  `None` = use the caller's default.
+    pub reps: Option<u64>,
+    /// Per-scenario §6.3 convergence-mode override, same precedence.
+    pub converge: Option<bool>,
 }
 
 impl Scenario {
@@ -393,6 +482,8 @@ impl Scenario {
             policies: Vec::new(),
             reference: None,
             metric: Metric::Mean,
+            reps: None,
+            converge: None,
         }
     }
 
@@ -439,6 +530,29 @@ impl Scenario {
         self
     }
 
+    /// Pin the repetition count (scenario files: `reps = N`).
+    pub fn reps_override(mut self, reps: u64) -> Scenario {
+        self.reps = Some(reps);
+        self
+    }
+
+    /// Pin §6.3 convergence mode (scenario files: `converge = true`).
+    pub fn converge_override(mut self, converge: bool) -> Scenario {
+        self.converge = Some(converge);
+        self
+    }
+
+    /// Apply this scenario's `reps`/`converge` overrides to a caller's
+    /// defaults.  The caller stays responsible for letting explicit
+    /// CLI flags win over the file (see `cmd_sweep`).
+    pub fn sweep_params(&self, base: SweepParams) -> SweepParams {
+        SweepParams {
+            reps: self.reps.unwrap_or(base.reps),
+            converge: self.converge.unwrap_or(base.converge),
+            ..base
+        }
+    }
+
     /// Rescale the workload's job count (figures shrink scenarios for
     /// tests; `psbs sweep --scenario --njobs N` overrides files).
     /// `njobs` *axes* are clamped to `njobs * 10` per value — the same
@@ -446,10 +560,10 @@ impl Scenario {
     /// scenario whose grid sweeps njobs cannot silently keep running
     /// full-scale cells.
     pub fn with_njobs(mut self, njobs: usize) -> Scenario {
-        self.workload = match self.workload {
+        self.workload = match self.workload.clone() {
             WorkloadSpec::Synth(c) => c.with_njobs(njobs).into(),
             WorkloadSpec::Trace(t) => {
-                TraceSpec { njobs: njobs.min(t.trace.stats().jobs), ..t }.into()
+                TraceSpec { njobs: njobs.min(t.source.max_jobs()), ..t }.into()
             }
         };
         for axis in self.axes.iter_mut().filter(|a| a.param == AxisParam::Njobs) {
@@ -465,6 +579,20 @@ impl Scenario {
     pub fn validate(&self) -> Result<(), String> {
         if self.policies.is_empty() {
             return Err(format!("scenario {}: no policies", self.name));
+        }
+        if self.reps == Some(0) {
+            return Err(format!("scenario {}: reps override must be >= 1", self.name));
+        }
+        if let WorkloadSpec::Trace(t) = &self.workload {
+            if t.njobs == 0 {
+                return Err(format!("scenario {}: trace njobs must be >= 1", self.name));
+            }
+            if !(t.load > 0.0) {
+                return Err(format!(
+                    "scenario {}: trace load normalization needs load > 0, got {}",
+                    self.name, t.load
+                ));
+            }
         }
         for (i, axis) in self.axes.iter().enumerate() {
             if axis.values.is_empty() {
@@ -490,22 +618,53 @@ impl Scenario {
                 ));
             }
         }
-        if let Metric::PooledEcdf { points, decades, .. } = self.metric {
-            if points < 2 || !(decades > 0.0) {
-                return Err(format!(
-                    "scenario {}: ecdf metric needs points >= 2 and decades > 0",
-                    self.name
-                ));
+        // The pooled-population metrics (ECDF, conditional slowdown)
+        // share structural constraints: split axes only (their tables
+        // have no room for extra value columns) and no reference.
+        let pooled_kind = match self.metric {
+            Metric::Mean => None,
+            Metric::PooledEcdf { points, decades, .. } => {
+                if points < 2 || !(decades > 0.0) {
+                    return Err(format!(
+                        "scenario {}: ecdf metric needs points >= 2 and decades > 0",
+                        self.name
+                    ));
+                }
+                Some("ecdf")
             }
+            Metric::CondSlowdown { bins } => {
+                if bins < 2 {
+                    return Err(format!(
+                        "scenario {}: cond_slowdown metric needs bins >= 2",
+                        self.name
+                    ));
+                }
+                Some("cond_slowdown")
+            }
+        };
+        if let Some(kind) = pooled_kind {
             if self.axes.iter().any(|a| !a.split) {
                 return Err(format!(
-                    "scenario {}: ecdf metric requires all axes to be split axes",
+                    "scenario {}: {kind} metric requires all axes to be split axes",
                     self.name
                 ));
             }
             if self.reference.is_some() {
                 return Err(format!(
-                    "scenario {}: ecdf metric takes no reference",
+                    "scenario {}: {kind} metric takes no reference",
+                    self.name
+                ));
+            }
+            // Pooled populations always use exactly `reps` repetitions
+            // (§6.3 convergence is a scalar-cell notion), so a file
+            // pinning `converge = true` would be silently ignored —
+            // reject it like any other key that cannot take effect.
+            // An explicit `converge = false` states the actual
+            // behavior and is allowed.
+            if self.converge == Some(true) {
+                return Err(format!(
+                    "scenario {}: {kind} metric pools exactly `reps` repetitions; \
+                     a `converge = true` override cannot take effect",
                     self.name
                 ));
             }
@@ -516,12 +675,13 @@ impl Scenario {
     /// Expand the split axes: (table base name, specialized workload)
     /// per split grid point, in row-major declaration order.
     fn split_expansions(&self) -> Vec<(String, WorkloadSpec)> {
-        let mut out = vec![(self.name.clone(), self.workload)];
+        let mut out = vec![(self.name.clone(), self.workload.clone())];
         for axis in self.axes.iter().filter(|a| a.split) {
             let mut next = Vec::with_capacity(out.len() * axis.values.len());
             for (name, w) in &out {
                 for &v in &axis.values {
-                    next.push((format!("{name}_{}{v}", axis.label), axis.param.apply(*w, v)));
+                    let applied = axis.param.apply(w.clone(), v);
+                    next.push((format!("{name}_{}{v}", axis.label), applied));
                 }
             }
             out = next;
@@ -541,14 +701,14 @@ impl Scenario {
         let points = grid_points(&axes);
         let mut cells = Vec::with_capacity(points.len() * self.policies.len());
         for point in &points {
-            let mut wl = w;
+            let mut wl = w.clone();
             for (axis, &v) in axes.iter().zip(point) {
                 wl = axis.param.apply(wl, v);
             }
             for (_, spec) in &self.policies {
                 cells.push(SweepCell {
                     policy: spec.clone(),
-                    workload: wl,
+                    workload: wl.clone(),
                     reference: self.reference,
                 });
             }
@@ -566,9 +726,9 @@ impl Scenario {
 
     /// Evaluate the scenario into its tables: one table per split grid
     /// point; within each, one row per row-axis grid point and one
-    /// column per policy ([`Metric::Mean`]), or one row per slowdown
+    /// column per policy ([`Metric::Mean`]), one row per slowdown
     /// threshold ([`Metric::PooledEcdf`], plus the optional tail
-    /// table).
+    /// table), or one row per size class ([`Metric::CondSlowdown`]).
     pub fn tables(&self, p: SweepParams, threads: usize, share: bool) -> Vec<Table> {
         debug_assert!(self.validate().is_ok(), "{:?}", self.validate());
         let mut out = Vec::new();
@@ -577,6 +737,9 @@ impl Scenario {
                 Metric::Mean => out.push(self.mean_table(name, w, p, threads, share)),
                 Metric::PooledEcdf { points, decades, tail_above } => {
                     self.ecdf_tables(&mut out, name, w, p, threads, points, decades, tail_above)
+                }
+                Metric::CondSlowdown { bins } => {
+                    out.push(self.cond_table(name, w, p, threads, bins))
                 }
             }
         }
@@ -681,6 +844,58 @@ impl Scenario {
             }
             out.push(tt);
         }
+    }
+
+    /// The conditional-slowdown path (Fig. 7): repetitions run in
+    /// parallel, one policy materialized at a time (the full pooled
+    /// (jobs, slowdowns) population per policy is the peak-memory unit,
+    /// exactly as in the deleted bespoke `figures::fig7` loop), pooled
+    /// in repetition order and reduced through
+    /// [`metrics::conditional_slowdown`].  The mean size per class is
+    /// policy-independent (same pooled workloads), so the first column
+    /// comes from the first policy's classes — all of it bit-identical
+    /// to the bespoke path it replaces
+    /// (`figures::tests::fig7_scenario_path_matches_bespoke_path_bitwise`).
+    /// `share` is structurally a no-op here, like the ECDF path.
+    fn cond_table(
+        &self,
+        name: String,
+        w: WorkloadSpec,
+        p: SweepParams,
+        threads: usize,
+        bins: usize,
+    ) -> Table {
+        let rep_items: Vec<u64> = (0..p.reps).collect();
+        let mut per_policy: Vec<Vec<(f64, f64)>> = Vec::new();
+        for (_, spec) in &self.policies {
+            let runs = pool::par_map(threads, &rep_items, |&r| {
+                let rep_seed = w.rep_seed(p.seed, r);
+                let jobs = w.synthesize(rep_seed);
+                let slow = slowdowns_of_seeded(spec, &jobs, rep_seed);
+                (jobs, slow)
+            });
+            let mut jobs_all: Vec<Job> = Vec::new();
+            let mut slow_all: Vec<f64> = Vec::new();
+            for (jobs, slow) in runs {
+                slow_all.extend(slow);
+                jobs_all.extend(jobs);
+            }
+            per_policy.push(metrics::conditional_slowdown(&jobs_all, &slow_all, bins));
+        }
+        let header: Vec<String> = ["size"]
+            .iter()
+            .map(|s| s.to_string())
+            .chain(self.policies.iter().map(|(l, _)| l.clone()))
+            .collect();
+        let mut t = Table::new(name, header);
+        for b in 0..per_policy[0].len() {
+            let mut row = vec![per_policy[0][b].0];
+            for pp in &per_policy {
+                row.push(pp.get(b).map(|x| x.1).unwrap_or(f64::NAN));
+            }
+            t.push(row);
+        }
+        t
     }
 }
 
@@ -812,7 +1027,7 @@ mod tests {
         use crate::workload::traces::TraceName;
         let sc = Scenario::with_workload(
             "t_trace",
-            TraceSpec { trace: TraceName::Facebook, njobs: 150, load: 0.9, sigma: 0.5 },
+            TraceSpec { source: TraceName::Facebook.into(), njobs: 150, load: 0.9, sigma: 0.5 },
         )
         .axis("sigma", AxisParam::Sigma, &[0.25, 1.0])
         .policies(&["psbs", "ps"])
@@ -851,13 +1066,13 @@ mod tests {
     #[test]
     fn validate_rejects_inconsistent_scenarios() {
         let trace = TraceSpec {
-            trace: crate::workload::traces::TraceName::Ircache,
+            source: crate::workload::traces::TraceName::Ircache.into(),
             njobs: 100,
             load: 0.9,
             sigma: 0.5,
         };
         // Shape axis on a trace replay.
-        let bad = Scenario::with_workload("t", trace)
+        let bad = Scenario::with_workload("t", trace.clone())
             .axis("shape", AxisParam::Shape, &[0.5])
             .policies(&["ps"]);
         assert!(bad.validate().is_err());
@@ -881,11 +1096,145 @@ mod tests {
             .axis("s2", AxisParam::Sigma, &[0.5])
             .policies(&["ps"]);
         assert!(bad.validate().is_err());
+        // Cond-slowdown with a row axis / a reference / silly bins.
+        let cond = Metric::CondSlowdown { bins: 10 };
+        let bad = Scenario::new("t", SynthConfig::default())
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"])
+            .metric(cond);
+        assert!(bad.validate().is_err());
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .vs(Reference::Ps)
+            .metric(cond);
+        assert!(bad.validate().is_err());
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .metric(Metric::CondSlowdown { bins: 1 });
+        assert!(bad.validate().is_err());
+        // converge=true on a pooled metric would be silently ignored.
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .metric(cond)
+            .converge_override(true);
+        assert!(bad.validate().is_err());
+        let ok = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .metric(cond)
+            .converge_override(false);
+        assert!(ok.validate().is_ok());
+        // Zero-rep override, degenerate trace knobs.
+        let bad = Scenario::new("t", SynthConfig::default()).policies(&["ps"]).reps_override(0);
+        assert!(bad.validate().is_err());
+        let bad = Scenario::with_workload("t", TraceSpec { njobs: 0, ..trace.clone() })
+            .policies(&["ps"]);
+        assert!(bad.validate().is_err());
+        let bad = Scenario::with_workload("t", TraceSpec { load: 0.0, ..trace.clone() })
+            .policies(&["ps"]);
+        assert!(bad.validate().is_err());
         // A good one.
         let ok = Scenario::with_workload("t", trace)
             .axis("sigma", AxisParam::Sigma, &[0.5])
             .policies(&["ps"])
             .vs(Reference::OptSrpt);
         assert!(ok.validate().is_ok());
+    }
+
+    /// A file-backed trace scenario runs through the same planner as
+    /// the stand-ins: bit-identity across `share` x `threads`, with the
+    /// sigma axis re-estimating per repetition.
+    #[test]
+    fn trace_file_scenario_is_bit_identical_across_modes() {
+        use crate::workload::trace_file::{parse, TraceFile};
+        use std::sync::Arc;
+        let mut text = String::from("arrival,size,weight\n");
+        for i in 0..120u32 {
+            // Deterministic, mildly heavy-tailed sizes; strictly
+            // increasing arrivals.
+            let size = 1 + (i as u64 * 7919) % 97 + if i % 17 == 0 { 500 } else { 0 };
+            text.push_str(&format!("{}.5,{size},{}\n", i, 1 + i % 3));
+        }
+        let tf = TraceFile { path: "mem.csv".into(), rows: Arc::new(parse(&text).unwrap()) };
+        let sc = Scenario::with_workload("t_trace_file", TraceSpec::new(tf))
+            .axis("sigma", AxisParam::Sigma, &[0.0, 0.5, 2.0])
+            .policies(&["psbs", "srpte", "ps"])
+            .vs(Reference::OptSrpt);
+        assert!(sc.validate().is_ok());
+        let p = SweepParams { reps: 2, seed: 31, converge: false };
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.table(p, threads, share).rows.iter().flatten().map(|v| v.to_bits()).collect()
+        };
+        let base = bits(false, 1);
+        assert!(base.iter().any(|&b| f64::from_bits(b) > 0.0));
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
+        // sigma = 0 keeps jobs identical across reps; sigma > 0 varies
+        // the estimates only — sizes/arrivals stay the trace's.
+        let w: WorkloadSpec = TraceSpec {
+            sigma: 2.0,
+            ..match &sc.workload {
+                WorkloadSpec::Trace(t) => t.clone(),
+                _ => unreachable!(),
+            }
+        }
+        .into();
+        let a = w.synthesize(w.rep_seed(1, 0));
+        let b = w.synthesize(w.rep_seed(1, 1));
+        assert_ne!(a, b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.size, y.size);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.weight, y.weight);
+        }
+    }
+
+    /// The reps/converge file overrides: applied over caller defaults,
+    /// field by field.
+    #[test]
+    fn sweep_params_applies_overrides() {
+        let base = SweepParams { reps: 5, seed: 42, converge: false };
+        let sc = Scenario::new("t", SynthConfig::default()).policies(&["ps"]);
+        assert_eq!(sc.sweep_params(base).reps, 5);
+        assert!(!sc.sweep_params(base).converge);
+        let sc = sc.reps_override(30).converge_override(true);
+        let p = sc.sweep_params(base);
+        assert_eq!(p.reps, 30);
+        assert!(p.converge);
+        assert_eq!(p.seed, 42);
+    }
+
+    /// Metric::CondSlowdown: table shape (size + one column per
+    /// policy, one row per class) and bit-identity across modes.
+    #[test]
+    fn cond_slowdown_scenario_shape_and_determinism() {
+        let sc = Scenario::new("t_cond", SynthConfig::default().with_njobs(200))
+            .policies(&["ps", "psbs"])
+            .metric(Metric::CondSlowdown { bins: 20 });
+        let p = SweepParams { reps: 2, seed: 13, converge: false };
+        let ts = sc.tables(p, 1, true);
+        assert_eq!(ts.len(), 1);
+        let t = &ts[0];
+        assert_eq!(t.header, vec!["size", "ps", "psbs"]);
+        assert_eq!(t.rows.len(), 20);
+        // Classes are sorted by size; slowdowns are >= 1-ish (>0).
+        for w in t.rows.windows(2) {
+            assert!(w[1][0] >= w[0][0]);
+        }
+        for row in &t.rows {
+            assert!(row[1] > 0.0 && row[2] > 0.0);
+        }
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.tables(p, threads, share)[0]
+                .rows
+                .iter()
+                .flatten()
+                .map(|v| v.to_bits())
+                .collect()
+        };
+        let base = bits(false, 1);
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
     }
 }

@@ -72,7 +72,7 @@ pub fn group_cells(cells: &[SweepCell]) -> Vec<(WorkloadSpec, Vec<usize>)> {
     let mut groups: Vec<(WorkloadSpec, Vec<usize>)> = Vec::new();
     for (ci, cell) in cells.iter().enumerate() {
         let gi = *index.entry(cell.workload.key()).or_insert_with(|| {
-            groups.push((cell.workload, Vec::new()));
+            groups.push((cell.workload.clone(), Vec::new()));
             groups.len() - 1
         });
         groups[gi].1.push(ci);
@@ -235,20 +235,56 @@ mod tests {
     #[test]
     fn grouping_keeps_trace_and_synth_apart() {
         let synth = SynthConfig::default().with_njobs(100);
-        let trace = TraceSpec { trace: TraceName::Facebook, njobs: 100, load: 0.9, sigma: 0.5 };
+        let trace =
+            TraceSpec { source: TraceName::Facebook.into(), njobs: 100, load: 0.9, sigma: 0.5 };
         let cells = vec![
             SweepCell::ratio("psbs", Reference::OptSrpt, synth),
-            SweepCell::ratio("psbs", Reference::OptSrpt, trace),
-            SweepCell::ratio("ps", Reference::OptSrpt, trace),
+            SweepCell::ratio("psbs", Reference::OptSrpt, trace.clone()),
+            SweepCell::ratio("ps", Reference::OptSrpt, trace.clone()),
             SweepCell::ratio(
                 "ps",
                 Reference::OptSrpt,
-                TraceSpec { trace: TraceName::Ircache, ..trace },
+                TraceSpec { source: TraceName::Ircache.into(), ..trace },
             ),
         ];
         let groups = group_cells(&cells);
         assert_eq!(groups.len(), 3);
         assert_eq!(groups[1].1, vec![1, 2], "same trace spec shares a group");
+    }
+
+    /// File-backed traces group on the identity of their loaded row
+    /// buffer: clones of one load (how a scenario fans out across
+    /// cells) share a group; a separately loaded buffer — even with
+    /// identical-looking contents — never merges, so two different row
+    /// sets behind one path can never be conflated; and different
+    /// knobs or a stand-in always split.
+    #[test]
+    fn grouping_keys_trace_files_by_row_identity() {
+        use crate::scenario::TraceSource;
+        use crate::workload::trace_file::{parse, TraceFile};
+        use std::sync::Arc;
+        let rows = Arc::new(parse("0,10\n1,20\n2,15\n").unwrap());
+        let reload = Arc::new(parse("0,10\n1,20\n2,15\n").unwrap());
+        let file = |rows: &Arc<Vec<_>>| {
+            TraceSpec::new(TraceFile { path: "t.csv".into(), rows: rows.clone() })
+        };
+        let builtin = TraceSpec {
+            source: TraceSource::Builtin(TraceName::Facebook),
+            njobs: 3,
+            load: 0.9,
+            sigma: 0.5,
+        };
+        let cells = vec![
+            SweepCell::ratio("psbs", Reference::OptSrpt, file(&rows)),
+            SweepCell::ratio("ps", Reference::OptSrpt, file(&rows)),
+            SweepCell::ratio("ps", Reference::OptSrpt, file(&reload)),
+            SweepCell::ratio("ps", Reference::OptSrpt, TraceSpec { sigma: 2.0, ..file(&rows) }),
+            SweepCell::ratio("ps", Reference::OptSrpt, builtin),
+        ];
+        let groups = group_cells(&cells);
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0].1, vec![0, 1], "clones of one load share a group");
+        assert_eq!(groups[1].1, vec![2], "a separate load never merges");
     }
 
     #[test]

@@ -69,6 +69,14 @@ impl Args {
         self.last(key).cloned()
     }
 
+    /// Was the flag given at all?  (Scenario files carry `reps`/
+    /// `converge` defaults; an explicit CLI flag must win over them,
+    /// which requires telling "absent" apart from "default value".)
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.opts.contains_key(key)
+    }
+
     /// Every occurrence of a repeatable flag, in argv order (empty when
     /// absent) — `psbs sweep --axis sigma=0.25,0.5 --axis load=0.7,0.9`.
     pub fn get_multi(&self, key: &str) -> Vec<String> {
@@ -177,6 +185,17 @@ mod tests {
         let a = parse("simulate");
         assert_eq!(a.get_f64("load", 0.9).unwrap(), 0.9);
         assert!(!a.get_bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn has_detects_presence_and_counts_as_consumed() {
+        let a = parse("sweep --reps 3 --tpyo 1");
+        assert!(a.has("reps"));
+        assert!(!a.has("converge"));
+        // `has` consumes the flag for unknown-flag checking purposes.
+        let b = parse("sweep --converge");
+        assert!(b.has("converge"));
+        assert!(b.check_unknown().is_ok());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 pub mod dists;
 pub mod synthetic;
+pub mod trace_file;
 pub mod traces;
 
 pub use synthetic::{synthesize, SizeDist, SynthConfig};

@@ -1,0 +1,381 @@
+//! On-disk trace ingestion: a dependency-free CSV-like trace format so
+//! `kind = "trace"` scenarios can replay *user-supplied* workloads, not
+//! just the two published stand-ins (ROADMAP "scenario files for
+//! arbitrary on-disk traces").
+//!
+//! ## Format
+//!
+//! One job per line, comma-separated:
+//!
+//! ```text
+//! arrival,size[,weight][,estimate]
+//! ```
+//!
+//! * `arrival` — submission time, non-negative, non-decreasing down the
+//!   file (the simulator requires arrival-sorted workloads — a shuffled
+//!   trace is a hard error, not something to silently re-sort, because
+//!   row order is how trace tools express causality);
+//! * `size` — job size in any consistent unit (bytes, seconds, ...);
+//!   must be positive.  Sizes are re-expressed in seconds of service by
+//!   the load normalization below, so the unit cancels;
+//! * `weight` — optional per-job weight (default 1), must be positive;
+//! * `estimate` — optional a-priori size estimate in the same unit as
+//!   `size`, must be positive.  Only honored at `sigma = 0`; any
+//!   `sigma > 0` *re-estimates* (see [`TraceFile::to_jobs`]).
+//!
+//! Blank lines and `#` comments are skipped.  An optional header line
+//! (`arrival,size`, `arrival,size,weight` or
+//! `arrival,size,weight,estimate`) both documents and *enforces* the
+//! column count; without one, the first data row fixes it.  Everything
+//! else — ragged rows, non-numeric fields, negative sizes, non-monotone
+//! arrivals — is a hard error carrying the offending line number: a
+//! half-ingested trace must never silently become an experiment.
+//!
+//! ## Normalization
+//!
+//! [`TraceFile::to_jobs`] applies the same three knobs
+//! [`crate::scenario::TraceSpec`] already applies to the built-in
+//! stand-ins: an `njobs` cap (replay a prefix), the paper's §7.8
+//! offered-load rescaling (pick the service speed so the replayed
+//! prefix offers exactly `load`), and log-normal size-error
+//! re-estimation with parameter `sigma` (seeded per repetition, exactly
+//! like [`crate::workload::traces::to_jobs`]).
+
+use super::dists::{Dist, LogNormal};
+use super::synthetic::MIN_SIZE;
+use crate::sim::{job, Job};
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One parsed trace row, in file units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRow {
+    pub arrival: f64,
+    pub size: f64,
+    pub weight: f64,
+    /// A-priori size estimate in file units (None: none recorded).
+    pub est: Option<f64>,
+}
+
+/// A loaded on-disk trace: the path as written (scenario files render
+/// it back verbatim) plus the parsed rows, shared so cloning a
+/// [`crate::scenario::WorkloadSpec`] across planner groups and axis
+/// expansions never re-reads or copies the data.
+#[derive(Debug, Clone)]
+pub struct TraceFile {
+    pub path: String,
+    pub rows: Arc<Vec<TraceRow>>,
+}
+
+/// Two trace files are the same workload source iff they were named by
+/// the same path and carry the same rows (a re-load of an edited file
+/// must not compare equal).
+impl PartialEq for TraceFile {
+    fn eq(&self, other: &Self) -> bool {
+        self.path == other.path && self.rows == other.rows
+    }
+}
+
+/// Column names, in order; also the accepted header spellings.
+const COLUMNS: [&str; 4] = ["arrival", "size", "weight", "estimate"];
+
+/// Parse trace text.  Errors carry the offending 1-based line number
+/// and are distinct per failure mode (the CLI and the scenario loader
+/// surface them verbatim).
+pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
+    let mut rows: Vec<TraceRow> = Vec::new();
+    let mut ncols: Option<usize> = None;
+    let mut prev_arrival = f64::NEG_INFINITY;
+    for (ln, raw) in text.lines().enumerate() {
+        let ln = ln + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if ncols.is_none() && fields[0].parse::<f64>().is_err() {
+            // Optional header line: must spell a prefix of COLUMNS of
+            // length 2..=4; it then pins the column count for the rest
+            // of the file.
+            let is_header = (2..=COLUMNS.len()).contains(&fields.len())
+                && fields.iter().zip(COLUMNS).all(|(f, c)| *f == c);
+            if !is_header {
+                return Err(format!(
+                    "line {ln}: malformed row `{line}`: expected \
+                     `arrival,size[,weight][,estimate]` (numbers) or a matching header"
+                ));
+            }
+            ncols = Some(fields.len());
+            continue;
+        }
+        let expect = *ncols.get_or_insert(fields.len().clamp(2, 4));
+        if fields.len() != expect {
+            return Err(format!(
+                "line {ln}: malformed row `{line}`: expected {expect} comma-separated \
+                 fields ({}), got {}",
+                COLUMNS[..expect].join(","),
+                fields.len()
+            ));
+        }
+        let mut nums = [0.0f64; 4];
+        for (i, f) in fields.iter().enumerate() {
+            nums[i] = f.parse::<f64>().map_err(|_| {
+                format!("line {ln}: malformed row: `{f}` is not a number (column `{}`)", COLUMNS[i])
+            })?;
+            if !nums[i].is_finite() {
+                return Err(format!(
+                    "line {ln}: malformed row: `{f}` is not finite (column `{}`)",
+                    COLUMNS[i]
+                ));
+            }
+        }
+        let arrival = nums[0];
+        if arrival < 0.0 {
+            return Err(format!("line {ln}: arrival must be non-negative, got {arrival}"));
+        }
+        if arrival < prev_arrival {
+            return Err(format!(
+                "line {ln}: arrivals must be non-decreasing ({arrival} after {prev_arrival})"
+            ));
+        }
+        prev_arrival = arrival;
+        let size = nums[1];
+        if size <= 0.0 {
+            return Err(format!("line {ln}: job size must be positive, got {size}"));
+        }
+        let weight = if expect >= 3 { nums[2] } else { 1.0 };
+        if weight <= 0.0 {
+            return Err(format!("line {ln}: weight must be positive, got {weight}"));
+        }
+        let est = (expect >= 4).then_some(nums[3]);
+        if let Some(e) = est {
+            if e <= 0.0 {
+                return Err(format!("line {ln}: size estimate must be positive, got {e}"));
+            }
+        }
+        rows.push(TraceRow { arrival, size, weight, est });
+    }
+    if rows.is_empty() {
+        return Err("trace has no data rows".to_string());
+    }
+    Ok(rows)
+}
+
+impl TraceFile {
+    /// Load and parse a trace file.  A missing or unreadable file is
+    /// its own error (distinct from every parse error).
+    pub fn load(path: &str) -> Result<TraceFile, String> {
+        TraceFile::load_relative(path, None)
+    }
+
+    /// Load with relative paths resolved against `base` (scenario
+    /// files resolve trace paths against their own directory, so a
+    /// committed scenario works from any working directory).  `path`
+    /// is stored as written — rendering a scenario back to TOML must
+    /// not bake the load-time working directory into the file.
+    pub fn load_relative(path: &str, base: Option<&Path>) -> Result<TraceFile, String> {
+        let resolved = match base {
+            Some(dir) if !Path::new(path).is_absolute() => dir.join(path),
+            _ => PathBuf::from(path),
+        };
+        let text = std::fs::read_to_string(&resolved)
+            .map_err(|e| format!("reading trace file {}: {e}", resolved.display()))?;
+        let rows = parse(&text).map_err(|e| format!("{}: {e}", resolved.display()))?;
+        Ok(TraceFile { path: path.to_string(), rows: Arc::new(rows) })
+    }
+
+    /// Convert (a prefix of) the trace into simulator jobs, applying
+    /// the same normalization as the built-in stand-ins
+    /// ([`crate::workload::traces::to_jobs`]): replay at most `njobs`
+    /// rows, pick the service speed so the replayed prefix offers
+    /// exactly `load`, and model size information as
+    ///
+    /// * `sigma > 0` — *re-estimation*: estimates are re-drawn from the
+    ///   log-normal error model (seeded per repetition; any `estimate`
+    ///   column is ignored), so repetitions of a fixed trace vary in
+    ///   their size information exactly like stand-in replays;
+    /// * `sigma = 0` — the file's `estimate` column when present
+    ///   (rescaled by the same speed), exact sizes otherwise.
+    pub fn to_jobs(&self, njobs: usize, load: f64, sigma: f64, seed: u64) -> Vec<Job> {
+        let rows = &self.rows[..njobs.min(self.rows.len())];
+        assert!(!rows.is_empty(), "trace {} replays zero rows", self.path);
+        assert!(load > 0.0, "trace load normalization requires load > 0, got {load}");
+        let total: f64 = rows.iter().map(|r| r.size).sum();
+        let t0 = rows.first().unwrap().arrival;
+        let span = (rows.last().unwrap().arrival - t0).max(1e-9);
+        // load = total_work / (speed * span)  =>  speed = total / (span*load)
+        let speed = total / (span * load);
+
+        let err = LogNormal::error_model(sigma);
+        let mut err_rng = Rng::new(seed).substream(3);
+        let jobs: Vec<Job> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let size = (r.size / speed).max(MIN_SIZE);
+                let est = if sigma > 0.0 {
+                    (size * err.sample(&mut err_rng)).max(MIN_SIZE)
+                } else {
+                    match r.est {
+                        Some(e) => (e / speed).max(MIN_SIZE),
+                        None => size,
+                    }
+                };
+                Job { id: i as u32, arrival: r.arrival - t0, size, est, weight: r.weight }
+            })
+            .collect();
+        job::validate(&jobs);
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# a comment\n\
+arrival,size,weight\n\
+0.0,100,1\n\
+\n\
+1.5,50,2\n\
+1.5,200,0.5\n\
+4,25,1\n";
+
+    #[test]
+    fn parses_header_comments_and_blank_lines() {
+        let rows = parse(GOOD).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0], TraceRow { arrival: 0.0, size: 100.0, weight: 1.0, est: None });
+        assert_eq!(rows[2].weight, 0.5);
+        // Equal arrivals are fine (non-decreasing, not strict).
+        assert_eq!(rows[1].arrival, rows[2].arrival);
+    }
+
+    #[test]
+    fn two_and_four_column_forms_parse() {
+        let rows = parse("0,10\n1,20\n").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].weight, 1.0);
+        assert_eq!(rows[0].est, None);
+
+        let rows = parse("arrival,size,weight,estimate\n0,10,1,12\n1,20,2,15\n").unwrap();
+        assert_eq!(rows[0].est, Some(12.0));
+        assert_eq!(rows[1].weight, 2.0);
+    }
+
+    /// Each ingestion failure mode yields its own distinct error
+    /// message (with the offending line number) — the ISSUE-4
+    /// acceptance list, plus the neighbours.
+    #[test]
+    fn error_paths_are_distinct() {
+        for (text, needle) in [
+            // Malformed rows: garbage text, ragged width, bad number.
+            ("hello world\n", "malformed row"),
+            ("0,10\n1\n", "expected 2 comma-separated fields"),
+            ("0,10,1\n1,20\n", "expected 3 comma-separated fields"),
+            ("0,abc\n", "`abc` is not a number (column `size`)"),
+            ("xyz,10\n0,10\n", "malformed row"),
+            ("0,inf\n", "not finite"),
+            // Non-monotone arrivals.
+            ("2,10\n1,20\n", "arrivals must be non-decreasing (1 after 2)"),
+            // Negative / zero quantities.
+            ("0,-5\n", "job size must be positive, got -5"),
+            ("0,0\n", "job size must be positive, got 0"),
+            ("-1,10\n", "arrival must be non-negative"),
+            ("0,10,-1\n", "weight must be positive"),
+            ("0,10,1,0\n", "size estimate must be positive"),
+            // Bad header.
+            ("arrival,bytes\n0,10\n", "malformed row"),
+            ("arrival\n0,10\n", "malformed row"),
+            // Empty.
+            ("", "no data rows"),
+            ("# only comments\n\n", "no data rows"),
+        ] {
+            let err = parse(text).unwrap_err();
+            assert!(err.contains(needle), "for {text:?}: got `{err}`, wanted `{needle}`");
+        }
+    }
+
+    #[test]
+    fn error_lines_are_one_based_and_skip_decorations() {
+        let err = parse("# c\narrival,size\n0,10\n0,-1\n").unwrap_err();
+        assert!(err.starts_with("line 4:"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_a_distinct_error() {
+        let err = TraceFile::load("/nonexistent/psbs_no_such_trace.csv").unwrap_err();
+        assert!(err.contains("reading trace file"), "{err}");
+    }
+
+    #[test]
+    fn load_resolves_relative_paths_against_base() {
+        let dir = std::env::temp_dir().join("psbs_trace_file_base_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.csv"), "0,10\n1,20\n").unwrap();
+        let tf = TraceFile::load_relative("t.csv", Some(dir.as_path())).unwrap();
+        assert_eq!(tf.path, "t.csv", "path stored as written, not resolved");
+        assert_eq!(tf.rows.len(), 2);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    fn fixture() -> TraceFile {
+        TraceFile { path: "mem".into(), rows: Arc::new(parse(GOOD).unwrap()) }
+    }
+
+    #[test]
+    fn to_jobs_normalizes_load_and_caps_njobs() {
+        let tf = fixture();
+        let jobs = tf.to_jobs(usize::MAX, 0.9, 0.0, 0);
+        assert_eq!(jobs.len(), 4);
+        let total: f64 = jobs.iter().map(|j| j.size).sum();
+        let span = jobs.last().unwrap().arrival;
+        assert!((total / span - 0.9).abs() < 1e-9);
+        assert_eq!(jobs[1].weight, 2.0, "weight column survives");
+        // njobs cap replays a prefix, re-normalized on the prefix.
+        let jobs = tf.to_jobs(2, 0.5, 0.0, 0);
+        assert_eq!(jobs.len(), 2);
+        let total: f64 = jobs.iter().map(|j| j.size).sum();
+        assert!((total / jobs.last().unwrap().arrival - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigma_reestimates_per_seed_and_zero_keeps_file_estimates() {
+        let tf = TraceFile {
+            path: "mem".into(),
+            rows: Arc::new(parse("0,10,1,20\n1,10,1,5\n2,10,1,10\n").unwrap()),
+        };
+        // sigma = 0: the estimate column, rescaled by the same speed.
+        let exact = tf.to_jobs(usize::MAX, 0.9, 0.0, 7);
+        assert!((exact[0].est / exact[0].size - 2.0).abs() < 1e-12);
+        assert!((exact[1].est / exact[1].size - 0.5).abs() < 1e-12);
+        // sigma > 0 re-estimates (ignores the column), seeded per rep.
+        let a = tf.to_jobs(usize::MAX, 0.9, 1.0, 7);
+        let b = tf.to_jobs(usize::MAX, 0.9, 1.0, 7);
+        let c = tf.to_jobs(usize::MAX, 0.9, 1.0, 8);
+        assert_eq!(a, b, "same seed reproduces");
+        assert_ne!(a, c, "different seeds differ");
+        assert!(a.iter().any(|j| (j.est / j.size - 2.0).abs() > 1e-9));
+        // Sizes themselves never depend on sigma or seed.
+        for (x, y) in a.iter().zip(&exact) {
+            assert_eq!(x.size, y.size);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn equality_tracks_path_and_rows() {
+        let a = fixture();
+        let b = fixture();
+        assert_eq!(a, b);
+        let c = TraceFile { path: "other".into(), rows: b.rows.clone() };
+        assert_ne!(a, c);
+        let d = TraceFile {
+            path: "mem".into(),
+            rows: Arc::new(parse("0,1\n").unwrap()),
+        };
+        assert_ne!(a, d);
+    }
+}

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Unit tests for scripts/bench_compare.py (stdlib only — CI runs this
+even on runners without a cargo toolchain, so the perf-gate logic is
+tested independently of the rust build).
+
+Covers the contract the CI bench-compare step relies on:
+  * a >threshold drop on a gated derived key (planner_speedup_*,
+    dense_vs_map_*) exits 1 and is labelled REGRESSED;
+  * drops within the threshold, drops on non-gated keys (e.g.
+    trace_parse_throughput), and improvements exit 0;
+  * keys missing from either file never gate;
+  * --summary appends a markdown report;
+  * a wrong schema is rejected.
+
+Run: python3 scripts/test_bench_compare.py -v
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_compare.py")
+
+
+def report(derived, samples=(), schema="psbs-bench-v1"):
+    return {
+        "schema": schema,
+        "bench": "sweeps",
+        "samples": [
+            {
+                "name": name,
+                "iters": 3,
+                "mean_ns": mean_ns,
+                "stddev_ns": 0.0,
+                "min_ns": mean_ns,
+                "items_per_iter": None,
+                "ops_per_sec": 0.0,
+            }
+            for (name, mean_ns) in samples
+        ],
+        "derived": derived,
+    }
+
+
+class BenchCompareTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def write(self, name, doc):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def run_compare(self, baseline, current, *extra):
+        return subprocess.run(
+            [sys.executable, SCRIPT, baseline, current, *extra],
+            capture_output=True,
+            text=True,
+        )
+
+    def test_gated_regression_exits_1(self):
+        base = self.write("base.json", report({"planner_speedup_t4": 2.0}))
+        cur = self.write("cur.json", report({"planner_speedup_t4": 1.5}))  # -25%
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("REGRESSED", r.stdout)
+        self.assertIn("1 gated regression(s): planner_speedup_t4", r.stdout)
+
+    def test_drop_within_threshold_passes(self):
+        base = self.write("base.json", report({"planner_speedup_t4": 2.0}))
+        cur = self.write("cur.json", report({"planner_speedup_t4": 1.7}))  # -15%
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("no gated regressions", r.stdout)
+
+    def test_custom_threshold_tightens_the_gate(self):
+        base = self.write("base.json", report({"dense_vs_map_event": 1.0}))
+        cur = self.write("cur.json", report({"dense_vs_map_event": 0.9}))  # -10%
+        self.assertEqual(self.run_compare(base, cur).returncode, 0)
+        r = self.run_compare(base, cur, "--threshold", "0.05")
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+
+    def test_non_gated_key_drop_is_informational(self):
+        # trace_parse_throughput halves: reported, never gates.
+        base = self.write(
+            "base.json",
+            report({"trace_parse_throughput": 4e6, "planner_speedup_t1": 1.8}),
+        )
+        cur = self.write(
+            "cur.json",
+            report({"trace_parse_throughput": 2e6, "planner_speedup_t1": 1.8}),
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("trace_parse_throughput", r.stdout)
+        self.assertNotIn("REGRESSED", r.stdout)
+
+    def test_keys_missing_from_either_side_never_gate(self):
+        base = self.write("base.json", report({"planner_speedup_t4": 2.0}))
+        cur = self.write("cur.json", report({"planner_speedup_t1": 0.1}))
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("no shared derived keys", r.stdout)
+
+    def test_improvement_passes_and_samples_are_reported(self):
+        base = self.write(
+            "base.json",
+            report({"planner_speedup_t4": 2.0}, samples=[("sweep/trace_parse/rows50k", 2e7)]),
+        )
+        cur = self.write(
+            "cur.json",
+            report({"planner_speedup_t4": 3.0}, samples=[("sweep/trace_parse/rows50k", 1e7)]),
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("sweep/trace_parse/rows50k", r.stdout)
+
+    def test_summary_file_is_appended(self):
+        base = self.write("base.json", report({"planner_speedup_t4": 2.0}))
+        cur = self.write("cur.json", report({"planner_speedup_t4": 1.0}))
+        summary = os.path.join(self.dir.name, "summary.md")
+        with open(summary, "w") as f:
+            f.write("pre-existing\n")
+        r = self.run_compare(base, cur, "--summary", summary)
+        self.assertEqual(r.returncode, 1)
+        with open(summary) as f:
+            text = f.read()
+        self.assertTrue(text.startswith("pre-existing\n"), "must append, not truncate")
+        self.assertIn("REGRESSED", text)
+
+    def test_wrong_schema_is_rejected(self):
+        base = self.write("base.json", report({}, schema="not-a-bench"))
+        cur = self.write("cur.json", report({}))
+        r = self.run_compare(base, cur)
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("unexpected schema", r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()

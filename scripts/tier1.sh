@@ -57,16 +57,18 @@ if [[ "${1:-}" != "--no-bench" && "$BUILD" == ok ]]; then
   # BENCH_MS bounds each benchmark's measurement budget; the filters
   # restrict the run to the per-event scheduler numbers (psbs vs
   # fsp-naive) and the sweep-executor scaling grid (per-cell vs
-  # planner).  The smoke writes into its own directory: a filtered run
-  # contains only the filtered samples and must not clobber full
-  # reports from an unfiltered `cargo bench` (those are the ones
-  # tracked across PRs).
+  # planner) — which includes sweep/trace_parse/rows50k, so the smoke's
+  # BENCH_sweeps.json carries the trace_parse_throughput derived sample
+  # and trace ingestion perf rides the bench-compare step from day one.
+  # The smoke writes into its own directory: a filtered run contains
+  # only the filtered samples and must not clobber full reports from an
+  # unfiltered `cargo bench` (those are the ones tracked across PRs).
   BENCH=fail
   mkdir -p bench-smoke
   if BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/ &&
      BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench figures -- sweep/; then
     BENCH=ok
-    echo "--- bench-smoke/BENCH_sweeps.json derived speedups ---"
+    echo "--- bench-smoke/BENCH_sweeps.json derived (speedups + trace_parse_throughput) ---"
     grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sweeps.json || true
   fi
 fi
