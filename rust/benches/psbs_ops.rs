@@ -13,6 +13,7 @@
 //! O(n) virtual-remaining update inside `advance`; PSBS pays two heap
 //! operations.
 
+use psbs::sched::late_set::{LateMode, LateSet};
 use psbs::sched::MinHeap;
 use psbs::sim::{Job, Scheduler};
 use psbs::util::bench::{self, Bench};
@@ -20,6 +21,25 @@ use psbs::util::bench::{self, Bench};
 #[path = "common.rs"]
 mod common;
 use common::{preload, TINY};
+
+/// Standing late-set member size: nothing completes during a bench.
+const LATE_BIG: f64 = 1e9;
+/// Probe remaining work for the `complete` path: above EPS (a member
+/// must be admitted pending) but tiny next to the standing population.
+const LATE_PROBE: f64 = 1e-6;
+
+/// A late set preloaded with `n` members: weights vary (Dps), and LAS
+/// members spread over 64 attained levels (the realistic shape — many
+/// members, few levels).
+fn preload_late(mode: LateMode, n: usize) -> LateSet {
+    let mut s = LateSet::new(mode);
+    for i in 0..n as u32 {
+        let attained = (i % 64) as f64 * 10.0;
+        let w = 1.0 + (i % 7) as f64 * 0.5;
+        s.insert(i, w, LATE_BIG, LATE_BIG + attained);
+    }
+    s
+}
 
 fn main() {
     let mut b = Bench::new();
@@ -67,6 +87,83 @@ fn main() {
                     seq += 1;
                     h.push(0.5 + (seq % 997) as f64, seq, seq);
                     std::hint::black_box(h.remove_by_seq(seq));
+                });
+            }
+        }
+    }
+
+    // Late-set engine costs (the §5.2.2 shared late-set subsystem):
+    // insert / complete / cancel / scan against a standing population
+    // of n late members in each sharing mode.  `scan` is the per-event
+    // read the flat paths paid O(|L|) for (rates, LAS front group and
+    // regroup boundary) — now O(1); the membership ops are O(log |L|).
+    // `derived` summarizes the n = 1k -> 100k scaling (flat ratios =
+    // the claim holds; a linear engine would scale ~100x).
+    let late_modes = [
+        (LateMode::Serial, "serial"),
+        (LateMode::Ps, "ps"),
+        (LateMode::Las, "las"),
+        (LateMode::Dps, "dps"),
+    ];
+    for &n in &[1_000usize, 100_000] {
+        for (mode, mname) in late_modes {
+            // Admission + kill of a fresh member (population constant).
+            {
+                let mut s = preload_late(mode, n);
+                let mut id = n as u32;
+                b.bench(&format!("late_set/insert/{mname}/n{n}"), move || {
+                    id += 1;
+                    s.insert(id, 1.25, LATE_BIG, LATE_BIG + 30.0);
+                    std::hint::black_box(s.cancel(id));
+                });
+            }
+            // Kill at varying depth (the remaining work staggers the
+            // member through the engine's ordering structure).
+            {
+                let mut s = preload_late(mode, n);
+                let mut id = n as u32;
+                b.bench(&format!("late_set/cancel/{mname}/n{n}"), move || {
+                    id += 1;
+                    let rem = LATE_BIG * (0.25 + (id % 997) as f64 * 1e-3);
+                    s.insert(id, 1.0, rem, LATE_BIG + rem);
+                    std::hint::black_box(s.cancel(id));
+                });
+            }
+            // A member completion against the standing population.
+            {
+                let mut s = preload_late(mode, n);
+                let mut id = n as u32;
+                let mut now = 0.0_f64;
+                let mut done = Vec::with_capacity(4);
+                b.bench(&format!("late_set/complete/{mname}/n{n}"), move || {
+                    id += 1;
+                    let share = s.exclusive_share();
+                    done.clear();
+                    if mode == LateMode::Serial {
+                        // Serial serves the head: complete it, then
+                        // restore the population with a fresh member.
+                        now += LATE_BIG;
+                        s.advance(LATE_BIG, share, now, &mut done);
+                        s.insert(id, 1.0, LATE_BIG, LATE_BIG);
+                    } else {
+                        // Admit a probe that finishes within one step.
+                        s.insert(id, 1.0, LATE_PROBE, LATE_PROBE);
+                        let share = s.exclusive_share();
+                        let dt = s.next_event_dt(share).unwrap();
+                        now += dt;
+                        s.advance(dt, share, now, &mut done);
+                    }
+                    debug_assert!(!done.is_empty());
+                    std::hint::black_box(done.len());
+                });
+            }
+            // The per-event read: next completion / regroup boundary.
+            {
+                let s = preload_late(mode, n);
+                b.bench(&format!("late_set/scan/{mname}/n{n}"), move || {
+                    let share = s.exclusive_share();
+                    std::hint::black_box(s.next_event_dt(share));
+                    std::hint::black_box(s.served());
                 });
             }
         }
@@ -143,6 +240,17 @@ fn main() {
         ("dense_vs_map_cancel", "heap/cancel/map/n100000", "heap/cancel/dense/n100000"),
         ("index_cost_event", "heap/push_pop/dense/n100000", "heap/push_pop/plain/n100000"),
         ("scan_vs_dense_cancel", "heap/cancel/plain/n100000", "heap/cancel/dense/n100000"),
+        // Late-set population scaling, 1k -> 100k members: ~1 means the
+        // O(log |L|) / O(1)-scan claim holds (a flat engine would pay
+        // ~100x).  Informational in bench-compare, never gated.
+        ("late_set_insert_scaling", "late_set/insert/dps/n100000", "late_set/insert/dps/n1000"),
+        ("late_set_cancel_scaling", "late_set/cancel/dps/n100000", "late_set/cancel/dps/n1000"),
+        (
+            "late_set_complete_scaling",
+            "late_set/complete/dps/n100000",
+            "late_set/complete/dps/n1000",
+        ),
+        ("late_set_scan_scaling", "late_set/scan/las/n100000", "late_set/scan/las/n1000"),
     ];
     for (label, num, den) in pairs {
         if let (Some(a), Some(c)) = (mean_of(num), mean_of(den)) {

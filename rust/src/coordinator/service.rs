@@ -41,6 +41,17 @@ pub struct CompletionInfo {
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     pub completed: u64,
+    /// Jobs removed by [`Service::kill`] before completing (§5.2.2
+    /// bookkeeping — their completion channels never fire).
+    pub killed: u64,
+    /// Kill requests that found no pending job (unknown id, already
+    /// completed, already killed) — benign races, but recorded.
+    pub kills_rejected: u64,
+    /// Kill requests for a *pending* job that the discipline's
+    /// `cancel` refused.  A § 5.2.2 bookkeeping gap: every in-tree
+    /// policy now supports cancellation, so a nonzero count means a
+    /// composed/custom scheduler silently dropped a kill.
+    pub kills_unsupported: u64,
     pub mean_latency_s: f64,
     /// Streaming (P²) latency percentiles — no per-job retention.
     pub p50_latency_s: f64,
@@ -185,9 +196,19 @@ fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
             Ok(Msg::Kill { id, ack }) => {
                 let now = sim_now(t0);
                 advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
-                let killed = pending.contains_key(&id) && sched.cancel(last_sim, id);
+                let was_pending = pending.contains_key(&id);
+                let killed = was_pending && sched.cancel(last_sim, id);
                 if killed {
                     pending.remove(&id);
+                    stats.killed += 1;
+                } else if was_pending {
+                    // The discipline refused a kill for a job it still
+                    // holds — record the §5.2.2 bookkeeping gap instead
+                    // of silently dropping it (the job will run to
+                    // completion and its channel will still fire).
+                    stats.kills_unsupported += 1;
+                } else {
+                    stats.kills_rejected += 1;
                 }
                 let _ = ack.send(killed);
             }
@@ -276,6 +297,35 @@ mod tests {
                 .unwrap_or_else(|e| panic!("policy {policy}: {e}"));
             let stats = svc.shutdown();
             assert_eq!(stats.completed, 1, "policy {policy}");
+        }
+    }
+
+    /// `Service::kill` works for EVERY entry in `ALL_POLICIES` — the
+    /// §5.2.2 bookkeeping with no default-`false` gaps — and the
+    /// accounting distinguishes kills from benign rejections.
+    #[test]
+    fn every_policy_supports_kill() {
+        for policy in crate::sched::ALL_POLICIES {
+            let svc = Service::start(ServiceConfig {
+                policy: (*policy).into(),
+                speed: 10_000.0,
+            });
+            // A job far too large to complete before the kill lands.
+            let rx = svc.submit(1e9, 1e9, 1.0);
+            assert!(svc.kill(0), "policy {policy}: kill must succeed");
+            assert!(!svc.kill(0), "policy {policy}: double kill reports false");
+            assert!(
+                rx.recv_timeout(Duration::from_millis(50)).is_err(),
+                "policy {policy}: killed job's channel must never fire"
+            );
+            let stats = svc.shutdown();
+            assert_eq!(stats.completed, 0, "policy {policy}");
+            assert_eq!(stats.killed, 1, "policy {policy}");
+            assert_eq!(stats.kills_rejected, 1, "policy {policy} (the double kill)");
+            assert_eq!(
+                stats.kills_unsupported, 0,
+                "policy {policy} silently dropped a kill"
+            );
         }
     }
 }

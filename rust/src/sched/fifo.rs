@@ -53,6 +53,20 @@ impl Scheduler for Fifo {
     fn active(&self) -> usize {
         self.queue.len()
     }
+
+    /// §5.2.2 kill bookkeeping: drop the job from the queue (killing
+    /// the served front simply starts the next job; later jobs keep
+    /// their order).  O(n) scan — FIFO keeps no per-id index and kills
+    /// are cold.
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        match self.queue.iter().position(|&(i, _)| i == id) {
+            Some(pos) => {
+                self.queue.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +100,26 @@ mod tests {
         let jobs = vec![Job::exact(0, 0.0, 1.0), Job::exact(1, 5.0, 1.0)];
         let r = run(&mut Fifo::new(), &jobs);
         assert_eq!(r.completion, vec![1.0, 6.0]);
+    }
+
+    /// Killing the served head promotes the next job immediately.
+    #[test]
+    fn cancel_head_and_waiter() {
+        let mut s = Fifo::new();
+        let mut done = Vec::new();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 5.0));
+        s.on_arrival(0.0, &Job::exact(1, 0.0, 1.0));
+        s.on_arrival(0.0, &Job::exact(2, 0.0, 1.0));
+        s.advance(0.0, 2.0, &mut done); // head J0 has 3 left
+        assert!(s.cancel(2.0, 0), "kill the served head");
+        assert!(s.cancel(2.0, 2), "kill a waiter");
+        assert!(!s.cancel(2.0, 0), "double kill must fail");
+        // J1 is now the head with its full size: done at 3.
+        let ev = s.next_event(2.0).unwrap();
+        assert!((ev - 3.0).abs() < 1e-9, "promoted head event at {ev}");
+        s.advance(2.0, ev, &mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(s.active(), 0);
     }
 }

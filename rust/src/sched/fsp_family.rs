@@ -14,14 +14,21 @@
 //! * no late jobs → serve the head of `O` (earliest virtual completion)
 //!   at rate 1;
 //! * late jobs present (virtually complete, really pending — the §4.2
-//!   failure mode) → serve **only** the late set `L`, shared by
-//!   [`LateMode`]:
+//!   failure mode) → serve **only** the late set `L`, owned by the
+//!   shared [`LateSet`] engine and shared per [`LateMode`]:
 //!   - [`LateMode::Serial`]: one at a time in virtual-completion order
 //!     — plain **FSPE**, kept faithful to reproduce its pathology;
 //!   - [`LateMode::Ps`]: equal split — **FSPE+PS**;
 //!   - [`LateMode::Las`]: least-attained-service split — **FSPE+LAS**;
 //!   - [`LateMode::Dps`]: weight-proportional split — **PSBS** (with
 //!     the virtual system also weight-aware).
+//!
+//! Every late-set operation — membership, per-mode event computation,
+//! §5.2.2 cancellation — is O(log |L|) via [`LateSet`]; the flat
+//! per-event folds this module used to carry are gone, which is what
+//! makes the hot path scale in the heavy-underestimation regime where
+//! |L| grows large.  Both `w_v` (here) and `w_l` (inside the set) are
+//! drift-proof compensated sums, recomputed/reset on empty.
 //!
 //! ### Note on the paper's pseudocode
 //! Algorithm 1 as printed decrements `w_v` only when a virtual
@@ -34,35 +41,12 @@
 //! equivalence with FSP (tested in `rust/tests/equivalence.rs`) and the
 //! Fig. 2 worked example both pin this choice down.
 
+use super::late_set::{CompensatedSum, LateSet};
 use super::MinHeap;
 use crate::sim::{Completion, Job, Scheduler};
 use crate::util::EPS;
-use std::collections::VecDeque;
 
-/// How the late set shares the server.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum LateMode {
-    Serial,
-    Ps,
-    Las,
-    Dps,
-}
-
-/// A late job: virtually complete, still really pending.
-#[derive(Debug, Clone, Copy)]
-struct LateJob {
-    id: u32,
-    weight: f64,
-    true_rem: f64,
-    /// Total size (attained = size - true_rem) for LAS mode.
-    size: f64,
-}
-
-impl LateJob {
-    fn attained(&self) -> f64 {
-        self.size - self.true_rem
-    }
-}
+pub use super::late_set::LateMode;
 
 /// Per-job real-side state for jobs in `O` (indexed by heap payload).
 #[derive(Debug, Clone, Copy)]
@@ -75,7 +59,6 @@ struct OJob {
 /// FSPE / FSPE+PS / FSPE+LAS / PSBS scheduler (Algorithm 1).
 #[derive(Debug)]
 pub struct FspFamily {
-    late_mode: LateMode,
     /// Respect `Job::weight` (PSBS); the FSPE variants force 1.
     use_weights: bool,
     /// Ablation: keep `w_v` inflated when a job pops from `O` into the
@@ -85,16 +68,20 @@ pub struct FspFamily {
     paper_literal_wv: bool,
     /// Virtual lag `g`.
     g: f64,
-    /// Σ weights running in the virtual system (`O` ∪ `E`).
-    w_v: f64,
-    /// Σ weights of late jobs.
-    w_l: f64,
+    /// Σ weights running in the virtual system (`O` ∪ `E`) —
+    /// compensated so millions of arrivals/departures cannot drift the
+    /// virtual clock rate, and still reset when the system empties.
+    w_v: CompensatedSum,
     /// Jobs running in both systems, keyed by `g_i`.
     o: MinHeap<OJob>,
     /// Early jobs (really done, virtually running), keyed by `g_i`.
     e: MinHeap<f64>, // payload: weight
-    /// Late jobs in virtual-completion order (front = earliest).
-    late: VecDeque<LateJob>,
+    /// The late set (virtually complete, really pending), sharing the
+    /// server per its [`LateMode`]; owns `w_l`.
+    late: LateSet,
+    /// Periodic `w_v`-vs-fold drift check (debug builds only).
+    #[cfg(debug_assertions)]
+    check_tick: u32,
 }
 
 /// The paper's headline scheduler: weight-aware FSPE+PS.
@@ -103,12 +90,10 @@ pub type Psbs = FspFamily;
 impl FspFamily {
     fn with(late_mode: LateMode, use_weights: bool) -> Self {
         FspFamily {
-            late_mode,
             use_weights,
             paper_literal_wv: false,
             g: 0.0,
-            w_v: 0.0,
-            w_l: 0.0,
+            w_v: CompensatedSum::new(),
             // `o` is indexed: cancellation removes by job id, and the
             // seq -> slot index makes that O(log n) (§5.2.2
             // bookkeeping).  Job ids are dense (the engine asserts it),
@@ -119,7 +104,9 @@ impl FspFamily {
             // `e` is only ever popped from the top; no index needed.
             o: MinHeap::with_dense_index(),
             e: MinHeap::new(),
-            late: VecDeque::new(),
+            late: LateSet::new(late_mode),
+            #[cfg(debug_assertions)]
+            check_tick: 0,
         }
     }
 
@@ -182,55 +169,7 @@ impl FspFamily {
             (None, Some(b)) => b,
             (Some(a), Some(b)) => a.min(b),
         };
-        Some(now + ((g_hat - self.g) * self.w_v).max(0.0))
-    }
-
-    /// Service rate of late job `i` (rates sum to 1 when late jobs
-    /// exist).  Allocation-free: `advance`/`next_event` run once per
-    /// simulator event, so a per-call `Vec` here dominated the profile
-    /// (see EXPERIMENTS.md §Perf).  `las_group` carries the
-    /// precomputed (min_attained, group_size) for LAS mode.
-    #[inline]
-    fn late_rate(&self, i: usize, las_group: (f64, f64)) -> f64 {
-        match self.late_mode {
-            LateMode::Serial => {
-                if i == 0 {
-                    1.0 // earliest virtual completion
-                } else {
-                    0.0
-                }
-            }
-            LateMode::Ps => 1.0 / self.late.len() as f64,
-            LateMode::Dps => self.late[i].weight / self.w_l,
-            LateMode::Las => {
-                let (min_att, k) = las_group;
-                if self.late[i].attained() <= min_att + EPS {
-                    1.0 / k
-                } else {
-                    0.0
-                }
-            }
-        }
-    }
-
-    /// (min attained, group size) of the LAS front group among late
-    /// jobs; (0, 1) placeholder for the other modes.
-    #[inline]
-    fn las_group(&self) -> (f64, f64) {
-        if self.late_mode != LateMode::Las {
-            return (0.0, 1.0);
-        }
-        let min_att = self
-            .late
-            .iter()
-            .map(|l| l.attained())
-            .fold(f64::INFINITY, f64::min);
-        let k = self
-            .late
-            .iter()
-            .filter(|l| l.attained() <= min_att + EPS)
-            .count() as f64;
-        (min_att, k)
+        Some(now + ((g_hat - self.g) * self.w_v.value()).max(0.0))
     }
 
     /// `VirtualJobCompletion`: pop every virtually-complete job.
@@ -239,7 +178,7 @@ impl FspFamily {
             let g_o = self.o.peek().map(|(g, _, _)| g);
             let g_e = self.e.peek().map(|(g, _, _)| g);
             let (g_hat, from_o) = match (g_o, g_e) {
-                (None, None) => return,
+                (None, None) => break,
                 (Some(a), None) => (a, true),
                 (None, Some(b)) => (b, false),
                 (Some(a), Some(b)) => {
@@ -250,32 +189,54 @@ impl FspFamily {
                     }
                 }
             };
-            if (g_hat - self.g) * self.w_v > EPS {
-                return;
+            if (g_hat - self.g) * self.w_v.value() > EPS {
+                break;
             }
             if from_o {
                 // The job becomes late: it leaves the virtual system
                 // and joins L (see module note on the w_v decrement).
                 let (_, id, oj) = self.o.pop().unwrap();
                 if !self.paper_literal_wv {
-                    self.w_v -= oj.weight;
+                    self.w_v.sub(oj.weight);
                 }
-                self.w_l += oj.weight;
-                self.late.push_back(LateJob {
-                    id: id as u32,
-                    weight: oj.weight,
-                    true_rem: oj.true_rem,
-                    size: oj.size,
-                });
+                self.late.insert(id as u32, oj.weight, oj.true_rem, oj.size);
             } else {
                 let (_, _, w) = self.e.pop().unwrap();
-                self.w_v -= w;
+                self.w_v.sub(w);
             }
             if self.o.is_empty() && self.e.is_empty() && !self.paper_literal_wv {
-                self.w_v = 0.0; // kill accumulated rounding
+                self.w_v.reset(); // kill accumulated rounding
             }
         }
+        self.debug_check_wv();
     }
+
+    /// Periodic drift pin: the incremental `w_v` must match a fresh
+    /// fold over `O` ∪ `E` (every 64th drain + whenever either heap
+    /// empties; debug builds only).
+    #[cfg(debug_assertions)]
+    fn debug_check_wv(&mut self) {
+        if self.paper_literal_wv {
+            return; // the ablation inflates w_v on purpose
+        }
+        self.check_tick = self.check_tick.wrapping_add(1);
+        if self.virtual_residue() != 0 && self.check_tick % 64 != 0 {
+            return;
+        }
+        let fold: f64 = self.o.iter().map(|(_, _, oj)| oj.weight).sum::<f64>()
+            + self.e.iter().map(|(_, _, w)| *w).sum::<f64>();
+        let scale = fold.abs().max(1.0);
+        debug_assert!(
+            (self.w_v.value() - fold).abs() <= 1e-9 * scale,
+            "w_v drift: incremental {} vs fold {}",
+            self.w_v.value(),
+            fold
+        );
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline]
+    fn debug_check_wv(&mut self) {}
 }
 
 impl Default for FspFamily {
@@ -286,7 +247,7 @@ impl Default for FspFamily {
 
 impl Scheduler for FspFamily {
     fn name(&self) -> &'static str {
-        match self.late_mode {
+        match self.late.mode() {
             LateMode::Serial => "fspe",
             LateMode::Ps => "fspe+ps",
             LateMode::Las => "fspe+las",
@@ -302,7 +263,7 @@ impl Scheduler for FspFamily {
         let w = self.weight_of(job);
         let g_i = self.g + job.est / w;
         self.o.push(g_i, job.id as u64, OJob { weight: w, true_rem: job.size, size: job.size });
-        self.w_v += w;
+        self.w_v.add(w);
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
@@ -317,25 +278,10 @@ impl Scheduler for FspFamily {
                 dt = dt.min(oj.true_rem);
             }
         } else {
-            let las_group = self.las_group();
-            for i in 0..self.late.len() {
-                let r = self.late_rate(i, las_group);
-                if r > 0.0 {
-                    dt = dt.min(self.late[i].true_rem / r);
-                }
-            }
-            // LAS regroup boundary.
-            if self.late_mode == LateMode::Las && self.late.len() > 1 {
-                let (min_att, k) = las_group;
-                let next_att = self
-                    .late
-                    .iter()
-                    .map(|l| l.attained())
-                    .filter(|a| *a > min_att + EPS)
-                    .fold(f64::INFINITY, f64::min);
-                if next_att.is_finite() {
-                    dt = dt.min((next_att - min_att) * k);
-                }
+            // Real side: the late set owns the server; its earliest
+            // completion / regroup is an O(1) read.
+            if let Some(d) = self.late.next_event_dt(self.late.exclusive_share()) {
+                dt = dt.min(d);
             }
         }
         if dt.is_finite() {
@@ -366,30 +312,14 @@ impl Scheduler for FspFamily {
                 done.push(Completion { id: id as u32, time: t });
             }
         } else {
-            let las_group = self.las_group();
-            for i in 0..self.late.len() {
-                let r = self.late_rate(i, las_group);
-                self.late[i].true_rem -= r * dt;
-            }
-            // `RealJobCompletion` for late jobs: remove from L.
-            let mut i = 0;
-            while i < self.late.len() {
-                if self.late[i].true_rem <= EPS {
-                    let l = self.late.remove(i).unwrap();
-                    self.w_l -= l.weight;
-                    if self.late.is_empty() {
-                        self.w_l = 0.0;
-                    }
-                    done.push(Completion { id: l.id, time: t });
-                } else {
-                    i += 1;
-                }
-            }
+            // `RealJobCompletion` for late jobs happens inside the set.
+            let share = self.late.exclusive_share();
+            self.late.advance(dt, share, t, done);
         }
 
         // ---- virtual progress (`UpdateVirtualTime`) ----
-        if self.w_v > 0.0 {
-            self.g += dt / self.w_v;
+        if self.w_v.value() > 0.0 {
+            self.g += dt / self.w_v.value();
         }
         self.drain_virtual_completions();
     }
@@ -402,21 +332,13 @@ impl Scheduler for FspFamily {
     /// system immediately.  If it was still running virtually (in `O`)
     /// it must keep its virtual share until its virtual completion —
     /// exactly like a job that finished early — so it moves to `E`;
-    /// a late job simply leaves `L`.
+    /// a late job simply leaves `L` (O(log |L|) via the set's index).
     fn cancel(&mut self, _now: f64, id: u32) -> bool {
         if let Some((g_i, seq, oj)) = self.o.remove_by_seq(id as u64) {
             self.e.push(g_i, seq, oj.weight);
             return true;
         }
-        if let Some(pos) = self.late.iter().position(|l| l.id == id) {
-            let l = self.late.remove(pos).unwrap();
-            self.w_l -= l.weight;
-            if self.late.is_empty() {
-                self.w_l = 0.0;
-            }
-            return true;
-        }
-        false
+        self.late.cancel(id)
     }
 }
 
@@ -563,6 +485,23 @@ mod tests {
         let b = run(&mut FspFamily::fspe_ps(), &jobs).completion;
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert!((x - y).abs() < 1e-6, "job {i}: psbs {x} vs fspe+ps {y}");
+        }
+    }
+
+    /// Killing a late job in every mode: the set's cancel path.
+    #[test]
+    fn cancel_late_job_every_mode() {
+        for mk in [FspFamily::fspe, FspFamily::fspe_ps, FspFamily::fspe_las, FspFamily::new] {
+            let mut s = mk();
+            // Underestimated: goes late at t=1 while really pending.
+            s.on_arrival(0.0, &Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 });
+            let mut done = Vec::new();
+            s.advance(0.0, 1.5, &mut done);
+            assert!(done.is_empty(), "{}: nothing really completes by 1.5", s.name());
+            assert_eq!(s.late.len(), 1, "{}: job must be late", s.name());
+            assert!(s.cancel(1.5, 0), "{}", s.name());
+            assert!(!s.cancel(1.5, 0), "{}: double cancel", s.name());
+            assert_eq!(s.active(), 0, "{}", s.name());
         }
     }
 }

@@ -8,18 +8,38 @@
 //! `k` jobs.  Internal events are (a) a completion inside the front
 //! level (its smallest job reaches its size) and (b) a *catch-up*: the
 //! front level reaches the next level's attained service and the two
-//! merge.  New arrivals have attained 0 and thus form (or join) the
-//! front level.  Every operation is O(log n) amortized: each job is
-//! pushed into a level heap once per merge, and levels only ever merge
-//! forward.
+//! merge — **looped**, so several levels within `EPS` of each other
+//! (a cascading catch-up, or an overshooting external driver) collapse
+//! in one `advance` instead of leaking zero-length events.  New
+//! arrivals have attained 0 and thus form (or join) the front level.
+//! Every operation is O(log n) amortized: each job is pushed into a
+//! level heap once per merge, and levels only ever merge forward.
+//!
+//! Cancellation (§5.2.2 kills) is supported through an id → level map
+//! (levels carry stable tags; deque positions shift): find the level,
+//! drop the job from its heap, reclaim empty levels.
+//!
+//! Relation to [`super::late_set`]: the late-set engine's Las mode is
+//! the *generalized* form of this structure (members admitted at
+//! arbitrary attained service, exact finish-key rebasing on merge,
+//! map-indexed level heaps for O(log) kills).  Plain LAS deliberately
+//! keeps this leaner specialization — arrivals only ever join at
+//! attained 0, so absolute job *sizes* are valid heap keys with no
+//! rebasing, and the unindexed level heaps keep hash maintenance off
+//! the arrival/completion hot path (LAS is a reference discipline in
+//! every sweep).  The catch-up merge loop below intentionally mirrors
+//! `late_set`'s `merge_caught_levels`; fixes to one should be
+//! considered for the other.
 
 use super::MinHeap;
 use crate::sim::{Completion, Job, Scheduler};
 use crate::util::EPS;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 #[derive(Debug)]
 struct Level {
+    /// Stable identity for the id → level map.
+    tag: u32,
     /// Attained service of every job in this level.
     attained: f64,
     /// Jobs keyed by *size* (same attained => least size completes first).
@@ -31,6 +51,9 @@ struct Level {
 pub struct Las {
     /// Levels sorted by ascending `attained`; front is served.
     levels: VecDeque<Level>,
+    /// id → level tag (the kill path; see [`Las::cancel`]).
+    where_is: HashMap<u32, u32>,
+    next_tag: u32,
     active: usize,
 }
 
@@ -70,11 +93,15 @@ impl Scheduler for Las {
         match self.levels.front_mut() {
             Some(front) if front.attained <= EPS => {
                 front.jobs.push(job.size, job.id as u64, ());
+                self.where_is.insert(job.id, front.tag);
             }
             _ => {
+                let tag = self.next_tag;
+                self.next_tag = self.next_tag.wrapping_add(1);
                 let mut jobs = MinHeap::new();
                 jobs.push(job.size, job.id as u64, ());
-                self.levels.push_front(Level { attained: 0.0, jobs });
+                self.levels.push_front(Level { tag, attained: 0.0, jobs });
+                self.where_is.insert(job.id, tag);
             }
         }
     }
@@ -93,6 +120,7 @@ impl Scheduler for Las {
         while let Some((size, _, _)) = front.jobs.peek() {
             if size - front.attained <= EPS {
                 let (_, id, _) = front.jobs.pop().unwrap();
+                self.where_is.remove(&(id as u32));
                 self.active -= 1;
                 done.push(Completion { id: id as u32, time: t });
             } else {
@@ -103,25 +131,57 @@ impl Scheduler for Las {
             self.levels.pop_front();
             return;
         }
-        // (b) merge with the next level on catch-up.
-        let front_attained = front.attained;
-        if let Some(next) = self.levels.get(1) {
-            if next.attained - front_attained <= EPS {
-                let mut front = self.levels.pop_front().unwrap();
-                let next = self.levels.front_mut().unwrap();
-                // Move the smaller heap into the larger one.
-                if front.jobs.len() > next.jobs.len() {
-                    std::mem::swap(&mut front.jobs, &mut next.jobs);
-                }
-                while let Some((size, id, _)) = front.jobs.pop() {
-                    next.jobs.push(size, id, ());
-                }
+        // (b) merge on catch-up — looped.  `reach` tracks how far the
+        // served group has actually advanced: the surviving level keeps
+        // the (possibly lower) attained of the merge target, so an
+        // overshot front must keep comparing successors against its own
+        // high-water mark or a cascading catch-up stalls after one
+        // merge (the bug this loop replaces).
+        let mut reach = self.levels.front().unwrap().attained;
+        while self.levels.len() >= 2 && self.levels[1].attained - reach <= EPS {
+            let mut front = self.levels.pop_front().unwrap();
+            let next = self.levels.front_mut().unwrap();
+            // Move the smaller heap into the larger one; the level tag
+            // follows its heap so untouched members stay mapped.
+            if front.jobs.len() > next.jobs.len() {
+                std::mem::swap(&mut front.jobs, &mut next.jobs);
+                std::mem::swap(&mut front.tag, &mut next.tag);
+            }
+            reach = reach.max(next.attained);
+            while let Some((size, id, _)) = front.jobs.pop() {
+                next.jobs.push(size, id, ());
+                self.where_is.insert(id as u32, next.tag);
             }
         }
     }
 
     fn active(&self) -> usize {
         self.active
+    }
+
+    /// §5.2.2 kill bookkeeping: the id → level map locates the job's
+    /// level (positions shift, tags don't), the level heap drops it,
+    /// and an emptied level is reclaimed so it cannot stall the
+    /// front-level rotation.
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        let Some(tag) = self.where_is.remove(&id) else {
+            return false;
+        };
+        let pos = self
+            .levels
+            .iter()
+            .position(|l| l.tag == tag)
+            .expect("LAS level map out of sync");
+        let removed = self.levels[pos].jobs.remove_by_seq(id as u64);
+        debug_assert!(removed.is_some(), "LAS id map out of sync");
+        if removed.is_none() {
+            return false;
+        }
+        self.active -= 1;
+        if self.levels[pos].jobs.is_empty() {
+            self.levels.remove(pos);
+        }
+        true
     }
 }
 
@@ -202,5 +262,79 @@ mod tests {
         assert!((r.completion[2] - 9.0).abs() < 1e-9, "{:?}", r.completion);
         assert!((r.completion[1] - 11.0).abs() < 1e-9, "{:?}", r.completion);
         assert!((r.completion[0] - 12.0).abs() < 1e-9, "{:?}", r.completion);
+    }
+
+    /// Regression (the merge-at-most-once bug): one `advance` carrying
+    /// the front past SEVERAL level boundaries — an external driver
+    /// merging event streams can legally land past a boundary by
+    /// rounding — must fuse every caught level, not just the first.
+    #[test]
+    fn cascading_catch_up_merges_every_level() {
+        let mut s = Las::new();
+        let mut done = Vec::new();
+        // Three levels with attained 0 (J2), 3 (J1), 5 (J0).
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 10.0));
+        s.advance(0.0, 5.0, &mut done); // J0 attained 5
+        s.on_arrival(5.0, &Job::exact(1, 5.0, 10.0));
+        s.advance(5.0, 8.0, &mut done); // J1 attained 3
+        s.on_arrival(8.0, &Job::exact(2, 8.0, 10.0));
+        assert_eq!(s.levels.len(), 3);
+        assert!(done.is_empty());
+        // J2 (alone, rate 1) attains 5 + a rounding hair: it catches J1
+        // *and* the fused pair catches J0 — a cascade in one call.
+        s.advance(8.0, 13.0 + 1e-10, &mut done);
+        assert!(done.is_empty());
+        assert_eq!(s.levels.len(), 1, "cascade must merge every caught level");
+        assert_eq!(s.levels[0].jobs.len(), 3);
+        // The fused group drains normally.
+        let dt = s.next_dt().unwrap();
+        s.advance(13.0, 13.0 + dt, &mut done);
+        assert_eq!(done.len(), 3, "all three share and finish together");
+        assert_eq!(s.active(), 0);
+    }
+
+    /// Kill coverage: front-level job, deeper-level job, served job;
+    /// the map stays consistent across merges.
+    #[test]
+    fn cancel_any_level() {
+        let mut s = Las::new();
+        let mut done = Vec::new();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 6.0));
+        s.advance(0.0, 2.0, &mut done); // J0 attained 2
+        s.on_arrival(2.0, &Job::exact(1, 2.0, 6.0));
+        s.on_arrival(2.0, &Job::exact(2, 2.0, 6.0));
+        assert_eq!(s.levels.len(), 2);
+        // Kill the deep (already-served) job, then a front job.
+        assert!(s.cancel(2.0, 0), "deep-level kill");
+        assert!(s.cancel(2.0, 2), "front-level kill");
+        assert!(!s.cancel(2.0, 2), "double kill must fail");
+        assert!(!s.cancel(2.0, 9), "unknown id must fail");
+        assert_eq!(s.active(), 1);
+        // The survivor completes alone.
+        let r_dt = s.next_dt().unwrap();
+        s.advance(2.0, 2.0 + r_dt, &mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(s.active(), 0);
+        assert!(s.where_is.is_empty(), "map must drain with the jobs");
+    }
+
+    /// Kills interleaved with merges: moved jobs stay findable.
+    #[test]
+    fn cancel_after_merge_keeps_map_consistent() {
+        let mut s = Las::new();
+        let mut done = Vec::new();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 8.0));
+        s.advance(0.0, 1.0, &mut done); // J0 attained 1
+        s.on_arrival(1.0, &Job::exact(1, 1.0, 8.0));
+        s.on_arrival(1.0, &Job::exact(2, 1.0, 8.0));
+        // Front {J1,J2} catches J0 at attained 1 (t = 1 + 2).
+        s.advance(1.0, 3.0, &mut done);
+        assert_eq!(s.levels.len(), 1, "catch-up merged");
+        for id in [0u32, 1, 2] {
+            assert!(s.cancel(3.0, id), "job {id} findable after merge");
+        }
+        assert_eq!(s.active(), 0);
+        assert!(s.levels.is_empty() || s.levels[0].jobs.is_empty());
     }
 }

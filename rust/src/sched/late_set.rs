@@ -1,0 +1,875 @@
+//! Shared late-set engine — the §5.2.2 "additional bookkeeping".
+//!
+//! A *late* job is really pending while its estimated service is
+//! exhausted: virtually complete in the FSP family (§4.2), estimated
+//! remainder ≤ 0 in the SRPTE hybrids (§5.1).  Both families used to
+//! keep those jobs in flat `VecDeque`/`Vec`s, folding over the whole
+//! set once per `next_event` *and* once per `advance` and paying
+//! O(|L|) removals — fine while |L| is small (§7.2), wrong in the
+//! regime arXiv:1403.5996 identifies as the hard one (heavy
+//! underestimation of skewed sizes, where |L| grows with the error).
+//!
+//! [`LateSet`] owns membership, per-mode sharing and event computation.
+//! Serial/Ps/Dps insert, complete and cancel are O(log |L|); the Las
+//! engine's completions are O(log |L|) and its admissions/cancels pay
+//! an additional O(#levels) for level positioning (a binary search
+//! plus a level-pointer memmove / tag scan — #levels is the number of
+//! distinct EPS-separated attained groups, far below |L| in every
+//! workload shape the paper studies, and the per-*event* folds are
+//! gone in all modes, which is where the flat path actually burned
+//! O(|L|)):
+//!
+//! * [`LateMode::Serial`] — one job at a time in insertion (= virtual
+//!   completion) order: a rank-keyed [`MinHeap`], only the head's
+//!   remaining work changes (in place, O(1) per step).
+//! * [`LateMode::Ps`] / [`LateMode::Dps`] — the paper's own virtual-lag
+//!   trick (§5.2.2), replayed *inside* the late set: a lag `g` grows at
+//!   the per-weight service rate, a member admitted with remaining work
+//!   `r` and weight `w` completes when `g` reaches its immutable
+//!   `g + r/w`, and a `g`-keyed heap yields completions in order with
+//!   no per-member updates.  The weight sum (the DPS denominator,
+//!   arXiv:1506.09158's fairness bookkeeping) is a Neumaier-
+//!   [`CompensatedSum`], reset on empty and debug-checked against a
+//!   fresh fold, so long adversarial churn cannot drift the rates.
+//! * [`LateMode::Las`] — attained-service levels as in [`super::las`],
+//!   generalized to members arriving at *arbitrary* attained service:
+//!   the front (minimum) group's common attained, size and next regroup
+//!   boundary are all O(1) reads, replacing the two full folds the flat
+//!   path paid per event; catch-up merges cascade through every level
+//!   within `EPS` in a single `advance`.
+//!
+//! Cancellation ("jobs that complete even when they are not scheduled —
+//! e.g. … after being killed") is first-class in every mode: the
+//! serial/lag heaps carry a dense seq index (ids are the engine's dense
+//! job ids), the LAS engine an id → level map.
+//!
+//! Exactness contract: per-member *remaining work* is represented
+//! losslessly in every mode (head payload, lag gap × weight, finish
+//! key − level attained), so the rewired schedulers reproduce the flat
+//! path's completions to ≤ 1e-9 — pinned by `rust/tests/late_set_equiv.rs`
+//! and the `sim::smallstep` cross-validation.
+
+use super::MinHeap;
+use crate::sim::Completion;
+use crate::util::EPS;
+use std::collections::{HashMap, VecDeque};
+
+/// How the late set shares the server (the §5.1/§5.2 amendments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LateMode {
+    /// One at a time in virtual-completion order — plain FSPE (§4.2).
+    Serial,
+    /// Equal split — FSPE+PS / the SRPTE+PS eligible pool.
+    Ps,
+    /// Least-attained-service split — FSPE+LAS / SRPTE+LAS.
+    Las,
+    /// Weight-proportional split — PSBS (§5.2).
+    Dps,
+}
+
+/// Neumaier-compensated running sum: `add`/`sub` churn accumulates
+/// O(eps) total error instead of O(n·eps) — the drift-proof backing for
+/// the `w_l`/`w_v` weight sums that feed DPS rate denominators on every
+/// event.  (Recompute-on-empty stays as a second line of defense: the
+/// owners reset the sum whenever their population drains.)
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompensatedSum {
+    sum: f64,
+    comp: f64,
+}
+
+impl CompensatedSum {
+    pub fn new() -> CompensatedSum {
+        CompensatedSum::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let t = self.sum + x;
+        // Neumaier's branch: compensate with whichever operand was
+        // large enough to have absorbed the other's low bits.
+        if self.sum.abs() >= x.abs() {
+            self.comp += (self.sum - t) + x;
+        } else {
+            self.comp += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    #[inline]
+    pub fn sub(&mut self, x: f64) {
+        self.add(-x);
+    }
+
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.sum + self.comp
+    }
+
+    pub fn reset(&mut self) {
+        *self = CompensatedSum::default();
+    }
+}
+
+/// Service split over one event step (rates are constant inside a
+/// step; both owners recompute it per step).  The single field is the
+/// service rate each *served* member receives: per unit weight in the
+/// lag modes (`Ps`/`Dps` — a member of weight `w` progresses at
+/// `w * rate`), per job in `Serial`/`Las` (head / front group).
+/// `rate == 0.0` means the set is not served this step (e.g. an
+/// SRPTE+LAS slot job strictly below the front group).
+#[derive(Debug, Clone, Copy)]
+pub struct Share {
+    pub rate: f64,
+}
+
+/// One attained-service level of the LAS engine: every member has the
+/// common `attained`; a member's heap key is the value of `attained`
+/// at which it completes (`finish = attained_at_admission + remaining`),
+/// so per-member remaining work is exact regardless of the ≤ EPS snap
+/// at admission or merge.
+#[derive(Debug)]
+struct Level {
+    /// Stable identity for the id → level map (positions shift).
+    tag: u32,
+    attained: f64,
+    /// Keyed by finish, seq = job id.
+    jobs: MinHeap<()>,
+}
+
+/// The LAS engine: levels sorted ascending by attained; the front is
+/// the served group.  Adjacent levels always differ by more than EPS
+/// (admission joins within EPS, catch-up merges at ≤ EPS), which keeps
+/// the front's `(min_attained, k)` and the regroup boundary O(1).
+#[derive(Debug, Default)]
+struct LasLevels {
+    levels: VecDeque<Level>,
+    /// id → level tag (the §5.2.2 cancellation path).
+    where_is: HashMap<u32, u32>,
+    next_tag: u32,
+}
+
+impl LasLevels {
+    fn insert(&mut self, id: u32, true_rem: f64, size: f64) {
+        let attained = (size - true_rem).max(0.0);
+        // First level strictly above the member's attained service.
+        let pos = self.levels.partition_point(|lv| lv.attained <= attained);
+        // Join the nearest level when within EPS; adjacent levels
+        // differ by > EPS, so at most one side qualifies.
+        let join = if pos > 0 && attained - self.levels[pos - 1].attained <= EPS {
+            Some(pos - 1)
+        } else if pos < self.levels.len() && self.levels[pos].attained - attained <= EPS {
+            Some(pos)
+        } else {
+            None
+        };
+        match join {
+            Some(i) => {
+                let lv = &mut self.levels[i];
+                lv.jobs.push(lv.attained + true_rem, id as u64, ());
+                self.where_is.insert(id, lv.tag);
+            }
+            None => {
+                let tag = self.next_tag;
+                self.next_tag = self.next_tag.wrapping_add(1);
+                // Map-indexed: cancellation inside a level is O(log)
+                // instead of a scan (ids are sparse within one level,
+                // so the dense-Vec index variant does not fit here).
+                let mut jobs = MinHeap::with_index();
+                jobs.push(attained + true_rem, id as u64, ());
+                self.levels.insert(pos, Level { tag, attained, jobs });
+                self.where_is.insert(id, tag);
+            }
+        }
+    }
+
+    fn cancel(&mut self, id: u32) -> bool {
+        let Some(tag) = self.where_is.remove(&id) else {
+            return false;
+        };
+        let pos = self
+            .levels
+            .iter()
+            .position(|lv| lv.tag == tag)
+            .expect("late-set LAS level map out of sync");
+        let removed = self.levels[pos].jobs.remove_by_seq(id as u64);
+        debug_assert!(removed.is_some(), "late-set LAS id map out of sync");
+        if self.levels[pos].jobs.is_empty() {
+            self.levels.remove(pos);
+        }
+        removed.is_some()
+    }
+
+    /// Integrate `step` units of per-member service into the front
+    /// group, pop completions (landing at absolute time `t`), then
+    /// cascade-merge every level the front has caught.
+    fn advance(&mut self, step: f64, t: f64, done: &mut Vec<Completion>) {
+        if let Some(front) = self.levels.front_mut() {
+            front.attained += step;
+        }
+        while let Some(front) = self.levels.front_mut() {
+            let due = match front.jobs.peek() {
+                Some((finish, _, _)) => finish - front.attained <= EPS,
+                None => false,
+            };
+            if due {
+                let (_, id, ()) = front.jobs.pop().unwrap();
+                self.where_is.remove(&(id as u32));
+                done.push(Completion { id: id as u32, time: t });
+            } else if front.jobs.is_empty() {
+                // Front drained: the next level takes over.  It saw no
+                // service this step, so no completions are due there —
+                // re-running the loop keeps that an invariant rather
+                // than an assumption.
+                self.levels.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.merge_caught_levels();
+    }
+
+    /// Merge the front into its successor while the gap is ≤ EPS —
+    /// **looped**, so several equal-attained levels (a cascading
+    /// catch-up, or an `advance` overshooting a boundary by rounding)
+    /// collapse into one served group within a single call instead of
+    /// leaking zero-length events.  `reach` tracks how far the served
+    /// group has actually advanced: a merge keeps one level's frame
+    /// (the larger heap's), which can sit below an overshot front —
+    /// comparing successors against `reach` instead of the surviving
+    /// frame keeps the cascade going through every caught level.
+    fn merge_caught_levels(&mut self) {
+        let Some(front) = self.levels.front() else { return };
+        let mut reach = front.attained;
+        while self.levels.len() >= 2 && self.levels[1].attained - reach <= EPS {
+            let mut small = self.levels.pop_front().unwrap();
+            let keep = self.levels.front_mut().unwrap();
+            // Keep the larger heap (amortized-cheap merges, as in
+            // `super::las`); the frame — attained and tag — travels
+            // with the heap it describes.
+            if small.jobs.len() > keep.jobs.len() {
+                std::mem::swap(&mut small.jobs, &mut keep.jobs);
+                std::mem::swap(&mut small.attained, &mut keep.attained);
+                std::mem::swap(&mut small.tag, &mut keep.tag);
+            }
+            // Rebase the smaller side into the surviving frame; the
+            // shift keeps every moved member's remaining work exact.
+            let shift = keep.attained - small.attained;
+            reach = reach.max(keep.attained);
+            while let Some((finish, id, ())) = small.jobs.pop() {
+                keep.jobs.push(finish + shift, id, ());
+                self.where_is.insert(id as u32, keep.tag);
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Engine {
+    /// Insertion-order queue; only the head is served.
+    Serial { queue: MinHeap<f64>, next_rank: u64 },
+    /// Weighted virtual-lag pool (Ps: all weights forced to 1).
+    Lag { heap: MinHeap<f64>, g: f64, w: CompensatedSum },
+    Las(LasLevels),
+}
+
+/// The shared late set: membership, per-[`LateMode`] sharing and event
+/// computation for the FSP family and the SRPTE hybrids.
+#[derive(Debug)]
+pub struct LateSet {
+    mode: LateMode,
+    engine: Engine,
+    /// Mutation counter driving the periodic drift debug-check.
+    #[cfg(debug_assertions)]
+    check_tick: u32,
+}
+
+impl LateSet {
+    pub fn new(mode: LateMode) -> LateSet {
+        let engine = match mode {
+            LateMode::Serial => Engine::Serial {
+                // Dense seq index: seqs are the engine's dense job ids,
+                // making cancel O(log |L|) (same trade-off as the PSBS
+                // `O` heap, tracked in BENCH_psbs_ops.json).
+                queue: MinHeap::with_dense_index(),
+                next_rank: 0,
+            },
+            LateMode::Ps | LateMode::Dps => Engine::Lag {
+                heap: MinHeap::with_dense_index(),
+                g: 0.0,
+                w: CompensatedSum::new(),
+            },
+            LateMode::Las => Engine::Las(LasLevels::default()),
+        };
+        LateSet {
+            mode,
+            engine,
+            #[cfg(debug_assertions)]
+            check_tick: 0,
+        }
+    }
+
+    pub fn mode(&self) -> LateMode {
+        self.mode
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.engine {
+            Engine::Serial { queue, .. } => queue.len(),
+            Engine::Lag { heap, .. } => heap.len(),
+            Engine::Las(l) => l.where_is.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Σ weights of members — the DPS rate denominator (`w_l`), kept
+    /// drift-proof; equals `len()` in the unweighted modes.
+    pub fn weight(&self) -> f64 {
+        match &self.engine {
+            Engine::Lag { w, .. } => w.value(),
+            _ => self.len() as f64,
+        }
+    }
+
+    /// Size of the group currently receiving service when the set is
+    /// served: 1 (Serial), everyone (Ps/Dps), the front group (Las).
+    pub fn served(&self) -> usize {
+        match &self.engine {
+            Engine::Serial { queue, .. } => queue.len().min(1),
+            Engine::Lag { heap, .. } => heap.len(),
+            Engine::Las(l) => l.levels.front().map_or(0, |lv| lv.jobs.len()),
+        }
+    }
+
+    /// Las: common attained service of the front group (the set-wide
+    /// minimum), O(1).  `None` in other modes or when empty.
+    pub fn front_attained(&self) -> Option<f64> {
+        match &self.engine {
+            Engine::Las(l) => l.levels.front().map(|lv| lv.attained),
+            _ => None,
+        }
+    }
+
+    /// Las: the next attained level above the front — the §5.1 regroup
+    /// boundary — O(1).
+    pub fn regroup_boundary(&self) -> Option<f64> {
+        match &self.engine {
+            Engine::Las(l) => l.levels.get(1).map(|lv| lv.attained),
+            _ => None,
+        }
+    }
+
+    /// The share when the set owns the whole server (the FSP-family
+    /// real side while late jobs exist).
+    pub fn exclusive_share(&self) -> Share {
+        let rate = if self.is_empty() {
+            0.0
+        } else {
+            match &self.engine {
+                Engine::Serial { .. } => 1.0,
+                Engine::Lag { w, .. } => 1.0 / w.value(),
+                Engine::Las(l) => {
+                    1.0 / l.levels.front().map_or(1, |lv| lv.jobs.len()) as f64
+                }
+            }
+        };
+        Share { rate }
+    }
+
+    /// Admit a member: O(log |L|) (Las additionally pays O(#levels)
+    /// to position/create the member's level).  `true_rem` must be
+    /// > EPS (a job with no real work left completes instead of going
+    /// late — both owners guarantee it).  `weight` is honored in Dps
+    /// mode only.
+    pub fn insert(&mut self, id: u32, weight: f64, true_rem: f64, size: f64) {
+        let dps = self.mode == LateMode::Dps;
+        match &mut self.engine {
+            Engine::Serial { queue, next_rank } => {
+                queue.push(*next_rank as f64, id as u64, true_rem);
+                *next_rank += 1;
+            }
+            Engine::Lag { heap, g, w } => {
+                let w_i = if dps { weight } else { 1.0 };
+                heap.push(*g + true_rem / w_i, id as u64, w_i);
+                w.add(w_i);
+            }
+            Engine::Las(l) => l.insert(id, true_rem, size),
+        }
+        self.debug_check_weight();
+    }
+
+    /// Remove a killed member without completing it: O(log |L|) in the
+    /// indexed modes, O(#levels + log) in Las.
+    pub fn cancel(&mut self, id: u32) -> bool {
+        let hit = match &mut self.engine {
+            Engine::Serial { queue, next_rank } => {
+                let hit = queue.remove_by_seq(id as u64).is_some();
+                if queue.is_empty() {
+                    *next_rank = 0;
+                }
+                hit
+            }
+            Engine::Lag { heap, g, w } => match heap.remove_by_seq(id as u64) {
+                Some((_, _, w_i)) => {
+                    w.sub(w_i);
+                    if heap.is_empty() {
+                        w.reset();
+                        *g = 0.0;
+                    }
+                    true
+                }
+                None => false,
+            },
+            Engine::Las(l) => l.cancel(id),
+        };
+        self.debug_check_weight();
+        hit
+    }
+
+    /// Time until the earliest internal event of the set — a member
+    /// completion, or a LAS catch-up with the level above the front —
+    /// when served according to `share`.  O(1).
+    pub fn next_event_dt(&self, share: Share) -> Option<f64> {
+        if share.rate <= 0.0 || self.is_empty() {
+            return None;
+        }
+        match &self.engine {
+            Engine::Serial { queue, .. } => {
+                queue.peek().map(|(_, _, rem)| (rem / share.rate).max(0.0))
+            }
+            Engine::Lag { heap, g, .. } => {
+                heap.peek().map(|(g_min, _, _)| ((g_min - g) / share.rate).max(0.0))
+            }
+            Engine::Las(l) => {
+                let front = l.levels.front()?;
+                let (finish, _, _) = front.jobs.peek()?;
+                let mut dt = (finish - front.attained).max(0.0);
+                if let Some(next) = l.levels.get(1) {
+                    dt = dt.min((next.attained - front.attained).max(0.0));
+                }
+                Some(dt / share.rate)
+            }
+        }
+    }
+
+    /// Integrate `dt` of wall-clock under `share`; completions land at
+    /// the absolute time `t` (the step's end, as the flat path had it).
+    pub fn advance(&mut self, dt: f64, share: Share, t: f64, done: &mut Vec<Completion>) {
+        debug_assert!(dt >= 0.0, "late-set advance must move forward");
+        let step = if share.rate > 0.0 { dt * share.rate } else { 0.0 };
+        match &mut self.engine {
+            Engine::Serial { queue, next_rank } => {
+                if let Some(rem) = queue.head_mut() {
+                    *rem -= step;
+                }
+                loop {
+                    let due = match queue.peek() {
+                        Some((_, _, &rem)) => rem <= EPS,
+                        None => false,
+                    };
+                    if !due {
+                        break;
+                    }
+                    let (_, id, _) = queue.pop().unwrap();
+                    done.push(Completion { id: id as u32, time: t });
+                }
+                if queue.is_empty() {
+                    *next_rank = 0;
+                }
+            }
+            Engine::Lag { heap, g, w } => {
+                *g += step; // step = dt · per-weight rate = dg
+                loop {
+                    // Completion when remaining work (lag gap × weight)
+                    // is exhausted — the same per-member work-units EPS
+                    // the flat path used.
+                    let due = match heap.peek() {
+                        Some((g_i, _, &w_i)) => (g_i - *g) * w_i <= EPS,
+                        None => false,
+                    };
+                    if !due {
+                        break;
+                    }
+                    let (_, id, w_i) = heap.pop().unwrap();
+                    w.sub(w_i);
+                    done.push(Completion { id: id as u32, time: t });
+                }
+                if heap.is_empty() {
+                    // Kill accumulated rounding in both running values.
+                    w.reset();
+                    *g = 0.0;
+                }
+            }
+            Engine::Las(l) => l.advance(step, t, done),
+        }
+        self.debug_check_weight();
+    }
+
+    /// Fold-recompute of the weight sum (test support + debug check).
+    pub fn fold_weight(&self) -> f64 {
+        match &self.engine {
+            Engine::Lag { heap, .. } => heap.iter().map(|(_, _, w_i)| *w_i).sum(),
+            _ => self.len() as f64,
+        }
+    }
+
+    /// Periodic debug assertion: the incremental, compensated weight
+    /// sum must match a fresh fold (the ISSUE's drift pin).  Runs every
+    /// 64th mutation plus whenever the set empties; debug builds only.
+    #[cfg(debug_assertions)]
+    fn debug_check_weight(&mut self) {
+        if let Engine::Lag { heap, w, .. } = &self.engine {
+            self.check_tick = self.check_tick.wrapping_add(1);
+            if !heap.is_empty() && self.check_tick % 64 != 0 {
+                return;
+            }
+            let fold: f64 = heap.iter().map(|(_, _, w_i)| *w_i).sum();
+            let scale = fold.abs().max(1.0);
+            debug_assert!(
+                (w.value() - fold).abs() <= 1e-9 * scale,
+                "late-set weight drift: incremental {} vs fold {}",
+                w.value(),
+                fold
+            );
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline]
+    fn debug_check_weight(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn drain(set: &mut LateSet) -> Vec<(u32, f64)> {
+        // Run the set alone to completion, recording (id, time).
+        let mut out = Vec::new();
+        let mut now = 0.0;
+        let mut done = Vec::new();
+        let mut steps = 0u32;
+        while !set.is_empty() {
+            let share = set.exclusive_share();
+            let dt = set.next_event_dt(share).expect("non-empty set has an event");
+            done.clear();
+            set.advance(dt, share, now + dt, &mut done);
+            now += dt;
+            for c in &done {
+                out.push((c.id, c.time));
+            }
+            steps += 1;
+            assert!(steps <= 100_000, "late set failed to drain");
+        }
+        out
+    }
+
+    #[test]
+    fn serial_completes_in_insertion_order() {
+        let mut s = LateSet::new(LateMode::Serial);
+        s.insert(7, 1.0, 2.0, 2.0);
+        s.insert(3, 1.0, 1.0, 1.0);
+        s.insert(9, 1.0, 0.5, 0.5);
+        let got = drain(&mut s);
+        let ids: Vec<u32> = got.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![7, 3, 9], "serial mode is strict insertion order");
+        let times: Vec<f64> = got.iter().map(|&(_, t)| t).collect();
+        assert!((times[0] - 2.0).abs() < 1e-12);
+        assert!((times[1] - 3.0).abs() < 1e-12);
+        assert!((times[2] - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_mode_shares_equally() {
+        let mut s = LateSet::new(LateMode::Ps);
+        s.insert(0, 1.0, 1.0, 1.0);
+        s.insert(1, 1.0, 2.0, 2.0);
+        // Rates 1/2 each: J0 done at 2; J1 then alone, done at 3.
+        let got = drain(&mut s);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 0);
+        assert!((got[0].1 - 2.0).abs() < 1e-12, "{got:?}");
+        assert!((got[1].1 - 3.0).abs() < 1e-12, "{got:?}");
+    }
+
+    #[test]
+    fn dps_mode_shares_by_weight() {
+        let mut s = LateSet::new(LateMode::Dps);
+        s.insert(0, 3.0, 3.0, 3.0);
+        s.insert(1, 1.0, 1.0, 1.0);
+        // Rates 3/4 and 1/4: both complete exactly at t = 4.
+        let got = drain(&mut s);
+        assert_eq!(got.len(), 2);
+        for (_, t) in got {
+            assert!((t - 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn las_mode_serves_least_attained_first() {
+        let mut s = LateSet::new(LateMode::Las);
+        // J0 attained 2 (size 4, rem 2); J1 attained 0 (size 1, rem 1).
+        s.insert(0, 1.0, 2.0, 4.0);
+        s.insert(1, 1.0, 1.0, 1.0);
+        assert_eq!(s.served(), 1, "front group = the attained-0 job");
+        assert!((s.front_attained().unwrap() - 0.0).abs() < 1e-12);
+        assert!((s.regroup_boundary().unwrap() - 2.0).abs() < 1e-12);
+        // J1 alone until done at 1; J0 resumes alone, done at 3.
+        let got = drain(&mut s);
+        assert_eq!(got[0].0, 1);
+        assert!((got[0].1 - 1.0).abs() < 1e-12, "{got:?}");
+        assert_eq!(got[1].0, 0);
+        assert!((got[1].1 - 3.0).abs() < 1e-12, "{got:?}");
+    }
+
+    #[test]
+    fn las_catch_up_merges_and_shares() {
+        let mut s = LateSet::new(LateMode::Las);
+        // J0 attained 1 (rem 3), J1 attained 0 (rem 3): J1 alone for 1
+        // unit (catch-up), then both share at 1/2.  J1 (rem 2 at the
+        // merge) completes at 1 + 2·2 = 5; J0 has rem 3 − 2 = 1 then
+        // and finishes alone at 6.
+        s.insert(0, 1.0, 3.0, 4.0);
+        s.insert(1, 1.0, 3.0, 3.0);
+        let got = drain(&mut s);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 1);
+        assert!((got[0].1 - 5.0).abs() < 1e-12, "{got:?}");
+        assert!((got[1].1 - 6.0).abs() < 1e-12, "{got:?}");
+    }
+
+    /// Three levels brought within EPS of each other collapse to one
+    /// group in a single advance (the cascading catch-up the flat scan
+    /// handled implicitly and the old level code left unmerged).
+    #[test]
+    fn las_cascading_catch_up_merges_all_levels() {
+        let mut s = LateSet::new(LateMode::Las);
+        s.insert(0, 1.0, 10.0, 10.0); // attained 0 (front)
+        s.insert(1, 1.0, 10.0, 13.0); // attained 3
+        s.insert(2, 1.0, 10.0, 13.0 + 2.0 * EPS); // attained 3 + 2eps
+        assert_eq!(s.served(), 1);
+        // Drive the front past BOTH boundaries in one call (an
+        // overshooting driver — rounding in an external event merge can
+        // legally land here); the cascade must absorb both levels.
+        // 1.5·EPS keeps each gap comfortably inside the ≤ EPS merge
+        // band (no exact-EPS fp coin flips).
+        let share = s.exclusive_share();
+        let mut done = Vec::new();
+        s.advance(3.0 + 1.5 * EPS, share, 3.0 + 1.5 * EPS, &mut done);
+        assert!(done.is_empty());
+        assert_eq!(
+            s.served(),
+            3,
+            "all three members must share after the cascading catch-up"
+        );
+        // And the set still drains cleanly.
+        let got = drain(&mut s);
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn cancel_every_mode_mid_flight() {
+        for mode in [LateMode::Serial, LateMode::Ps, LateMode::Las, LateMode::Dps] {
+            let mut s = LateSet::new(mode);
+            for id in 0..10u32 {
+                s.insert(id, 1.0 + (id % 3) as f64, 1.0 + id as f64 * 0.3, 2.0 + id as f64);
+            }
+            assert!(s.cancel(4), "{mode:?}: member 4 is present");
+            assert!(!s.cancel(4), "{mode:?}: double cancel must fail");
+            assert!(!s.cancel(77), "{mode:?}: unknown id must fail");
+            assert_eq!(s.len(), 9);
+            let got = drain(&mut s);
+            assert_eq!(got.len(), 9, "{mode:?}");
+            assert!(got.iter().all(|&(id, _)| id != 4), "{mode:?}: cancelled member completed");
+        }
+    }
+
+    /// Long adversarial churn with wildly mixed weights: the
+    /// compensated `w_l` must match a fresh fold to ~1e-12 relative —
+    /// the drift pin for the DPS rates (a plain running sum drifts
+    /// orders of magnitude further under this schedule).
+    #[test]
+    fn dps_weight_sum_survives_adversarial_churn() {
+        let mut rng = Rng::new(0xD217);
+        let mut s = LateSet::new(LateMode::Dps);
+        let mut live: Vec<u32> = Vec::new();
+        let mut next_id = 0u32;
+        for round in 0..20_000u32 {
+            let op = rng.below(3);
+            if op < 2 || live.is_empty() {
+                // Weights spanning ~12 orders of magnitude.
+                let w = 10f64.powf(rng.u01() * 12.0 - 6.0);
+                s.insert(next_id, w, 1.0 + rng.u01(), 2.0 + rng.u01());
+                live.push(next_id);
+                next_id += 1;
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let id = live.swap_remove(i);
+                assert!(s.cancel(id));
+            }
+            if round % 512 == 0 {
+                let fold = s.fold_weight();
+                let err = (s.weight() - fold).abs() / fold.max(1.0);
+                assert!(err < 1e-12, "round {round}: w_l drift {err:e}");
+            }
+        }
+        // Drain and re-check the empty reset.
+        for &id in &live {
+            assert!(s.cancel(id));
+        }
+        assert!(s.is_empty());
+        assert_eq!(s.weight(), 0.0, "empty set must reset its weight sum exactly");
+    }
+
+    /// The compensated sum itself: alternating add/sub churn of
+    /// mixed-magnitude values stays exact where a naive sum drifts.
+    #[test]
+    fn compensated_sum_beats_naive_under_churn() {
+        let mut rng = Rng::new(42);
+        let mut comp = CompensatedSum::new();
+        let mut naive = 0.0f64;
+        let mut vals: Vec<f64> = Vec::new();
+        for _ in 0..50_000 {
+            if vals.is_empty() || rng.u01() < 0.6 {
+                let v = 10f64.powf(rng.u01() * 16.0 - 8.0);
+                comp.add(v);
+                naive += v;
+                vals.push(v);
+            } else {
+                let v = vals.swap_remove(rng.below(vals.len() as u64) as usize);
+                comp.sub(v);
+                naive -= v;
+            }
+        }
+        let exact: f64 = vals.iter().sum();
+        let scale = exact.abs().max(1.0);
+        let comp_err = (comp.value() - exact).abs() / scale;
+        let naive_err = (naive - exact).abs() / scale;
+        assert!(comp_err < 1e-13, "compensated error {comp_err:e}");
+        assert!(
+            comp_err <= naive_err,
+            "compensation must not be worse than the naive sum ({comp_err:e} vs {naive_err:e})"
+        );
+    }
+
+    /// Randomized agreement with a flat O(|L|) reference across all
+    /// four modes (the in-crate half of the old-path equivalence pin;
+    /// the full scheduler-level pin lives in tests/late_set_equiv.rs).
+    #[test]
+    fn matches_flat_reference_all_modes() {
+        #[derive(Clone, Copy)]
+        struct Flat {
+            id: u32,
+            weight: f64,
+            true_rem: f64,
+            size: f64,
+        }
+        fn flat_drain(mode: LateMode, jobs: &[Flat]) -> Vec<(u32, f64)> {
+            let mut late: Vec<Flat> = jobs.to_vec();
+            let mut now = 0.0;
+            let mut out = Vec::new();
+            while !late.is_empty() {
+                let w_l: f64 = late.iter().map(|l| l.weight).sum();
+                let min_att = late
+                    .iter()
+                    .map(|l| l.size - l.true_rem)
+                    .fold(f64::INFINITY, f64::min);
+                let k = late
+                    .iter()
+                    .filter(|l| l.size - l.true_rem <= min_att + EPS)
+                    .count() as f64;
+                let rate = |i: usize, l: &Flat| -> f64 {
+                    match mode {
+                        LateMode::Serial => {
+                            if i == 0 {
+                                1.0
+                            } else {
+                                0.0
+                            }
+                        }
+                        LateMode::Ps => 1.0 / late.len() as f64,
+                        LateMode::Dps => l.weight / w_l,
+                        LateMode::Las => {
+                            if l.size - l.true_rem <= min_att + EPS {
+                                1.0 / k
+                            } else {
+                                0.0
+                            }
+                        }
+                    }
+                };
+                let mut dt = f64::INFINITY;
+                for (i, l) in late.iter().enumerate() {
+                    let r = rate(i, l);
+                    if r > 0.0 {
+                        dt = dt.min(l.true_rem / r);
+                    }
+                }
+                if mode == LateMode::Las {
+                    let next = late
+                        .iter()
+                        .map(|l| l.size - l.true_rem)
+                        .filter(|a| *a > min_att + EPS)
+                        .fold(f64::INFINITY, f64::min);
+                    if next.is_finite() {
+                        dt = dt.min((next - min_att) * k);
+                    }
+                }
+                let rates: Vec<f64> =
+                    late.iter().enumerate().map(|(i, l)| rate(i, l)).collect();
+                for (l, r) in late.iter_mut().zip(&rates) {
+                    l.true_rem -= r * dt;
+                }
+                now += dt;
+                let mut i = 0;
+                while i < late.len() {
+                    if late[i].true_rem <= EPS {
+                        out.push((late[i].id, now));
+                        late.remove(i);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            out
+        }
+
+        let mut rng = Rng::new(7);
+        for mode in [LateMode::Serial, LateMode::Ps, LateMode::Las, LateMode::Dps] {
+            for case in 0..30 {
+                let n = 2 + (case % 9);
+                let jobs: Vec<Flat> = (0..n)
+                    .map(|id| {
+                        let size = 0.2 + rng.u01() * 4.0;
+                        let true_rem = (size * (0.2 + 0.8 * rng.u01())).max(0.05);
+                        let weight = 1.0 / (1.0 + rng.below(4) as f64);
+                        Flat { id, weight, true_rem, size }
+                    })
+                    .collect();
+                let mut s = LateSet::new(mode);
+                for j in &jobs {
+                    s.insert(j.id, j.weight, j.true_rem, j.size);
+                }
+                let mut got = drain(&mut s);
+                let mut want = flat_drain(mode, &jobs);
+                got.sort_by(|a, b| a.0.cmp(&b.0));
+                want.sort_by(|a, b| a.0.cmp(&b.0));
+                assert_eq!(got.len(), want.len(), "{mode:?} case {case}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.0, w.0, "{mode:?} case {case}");
+                    assert!(
+                        (g.1 - w.1).abs() < 1e-9,
+                        "{mode:?} case {case} job {}: {} vs {}",
+                        g.0,
+                        g.1,
+                        w.1
+                    );
+                }
+            }
+        }
+    }
+}

@@ -163,6 +163,21 @@ impl Scheduler for Mlfq {
     fn active(&self) -> usize {
         self.active
     }
+
+    /// §5.2.2 kill bookkeeping: probe each level for the id (levels
+    /// are few — the geometric quantum ladder — and `remove_by_seq`
+    /// scans only the owning level's heap).  The level's fluid progress
+    /// `p` is untouched: remaining residents keep their exact attained
+    /// service and simply split the freed capacity.
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        for l in self.levels.iter_mut() {
+            if l.jobs.remove_by_seq(id as u64).is_some() {
+                self.active -= 1;
+                return true;
+            }
+        }
+        false
+    }
 }
 
 #[cfg(test)]
@@ -223,5 +238,29 @@ mod tests {
         ];
         let r = run(&mut Mlfq::default_zoo(), &jobs);
         assert!((r.completion[0] - r.completion[1]).abs() < 1e-9);
+    }
+
+    /// Kill a demoted elephant and a top-level job; survivors finish.
+    #[test]
+    fn cancel_across_levels() {
+        let mut s = Mlfq::default_zoo();
+        let mut done = Vec::new();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 10.0));
+        // Serve long enough that the elephant sinks below level 0
+        // (level-0 ceiling is 0.05 in the default zoo).
+        s.advance(0.0, s.next_event(0.0).unwrap(), &mut done);
+        s.on_arrival(1.0, &Job::exact(1, 1.0, 0.04));
+        s.on_arrival(1.0, &Job::exact(2, 1.0, 0.04));
+        assert!(done.is_empty());
+        assert!(s.cancel(1.0, 0), "kill the demoted elephant");
+        assert!(s.cancel(1.0, 1), "kill a level-0 job");
+        assert!(!s.cancel(1.0, 1), "double kill must fail");
+        assert!(!s.cancel(1.0, 7), "unknown id must fail");
+        assert_eq!(s.active(), 1);
+        let ev = s.next_event(1.0).unwrap();
+        s.advance(1.0, ev, &mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 2);
+        assert_eq!(s.active(), 0);
     }
 }

@@ -1,15 +1,25 @@
 //! The scheduler zoo: every discipline evaluated in the paper.
 //!
-//! | module | disciplines | paper § |
-//! |--------|-------------|---------|
-//! | [`fifo`] | FIFO | §6.1 |
-//! | [`ps`] | PS, DPS (virtual-lag implementation) | §6.1 |
-//! | [`las`] | LAS (attained-service levels) | §2.1, §6.1 |
-//! | [`srpt`] | SRPT / SRPTE (late jobs block) | §4 |
-//! | [`srpte_hybrid`] | SRPTE+PS, SRPTE+LAS | §5.1 |
-//! | [`fsp_family`] | FSPE, FSPE+PS, FSPE+LAS, **PSBS** (Algorithm 1) | §4.2, §5 |
-//! | [`fsp_naive`] | FSP/FSPE with the classic O(n) virtual update | §3, §5.2.2 |
-//! | [`pri`] | Pri_S — the §3 dominance construction | §3 |
+//! | module | disciplines | kill (`cancel`) semantics | paper § |
+//! |--------|-------------|---------------------------|---------|
+//! | [`fifo`] | FIFO | queue removal; killed head promotes the next job | §6.1 |
+//! | [`ps`] | PS, DPS (virtual-lag implementation) | lag-heap removal; survivors split the freed weight | §6.1 |
+//! | [`las`] | LAS (attained-service levels) | id → level map, heap removal, empty-level reclaim | §2.1, §6.1 |
+//! | [`mlfq`] | MLFQ (geometric quanta) | per-level probe + heap removal | §2.1 |
+//! | [`srpt`] | SRPT / SRPTE (late jobs block) | served slot cleared (next waiter pulled) or heap removal | §4 |
+//! | [`srpte_hybrid`] | SRPTE+PS, SRPTE+LAS | slot / [`late_set`] / waiting-heap removal, O(log n) | §5.1 |
+//! | [`fsp_family`] | FSPE, FSPE+PS, FSPE+LAS, **PSBS** (Algorithm 1) | `O` job keeps its virtual share (moves to `E`); late job leaves [`late_set`] | §4.2, §5 |
+//! | [`fsp_naive`] | FSP/FSPE with the classic O(n) virtual update | same semantics as `fsp_family`, O(n) | §3, §5.2.2 |
+//! | [`pri`] | Pri_S — the §3 dominance construction | rank-heap removal | §3 |
+//!
+//! Every discipline supports `cancel` — the §5.2.2 "additional
+//! bookkeeping … to handle jobs that complete even when they are not
+//! scheduled (e.g. … after being killed)" — so `coordinator::Service`
+//! kills work across the whole zoo (property-tested under churn in
+//! `rust/tests/cancellation.rs`).  [`late_set`] is the shared engine
+//! behind the error-tolerant disciplines' late sets — O(log |L|)
+//! membership (plus O(#levels) level positioning in Las mode) and
+//! O(1) per-event reads, replacing the old flat O(|L|) folds.
 //!
 //! All implement [`crate::sim::Scheduler`] and are cross-validated
 //! against the independent small-step oracle in `rust/tests/crossval.rs`.
@@ -18,6 +28,7 @@ pub mod fifo;
 pub mod fsp_family;
 pub mod fsp_naive;
 pub mod las;
+pub mod late_set;
 pub mod mlfq;
 pub mod pri;
 pub mod ps;

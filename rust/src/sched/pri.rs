@@ -85,6 +85,12 @@ impl Scheduler for Pri {
     fn active(&self) -> usize {
         self.pending.len()
     }
+
+    /// §5.2.2 kill bookkeeping: drop the job from the rank heap; the
+    /// next job in S is served as if the victim had completed.
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        self.pending.remove_by_seq(id as u64).is_some()
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +144,26 @@ mod tests {
     #[should_panic(expected = "duplicate id")]
     fn rejects_duplicate_sequence() {
         Pri::new(&[0, 0]);
+    }
+
+    /// Killing the served (highest-rank) job hands the server to the
+    /// next job in S.
+    #[test]
+    fn cancel_served_job_promotes_next_in_sequence() {
+        let mut s = Pri::new(&[0, 1, 2]);
+        let mut done = Vec::new();
+        for i in 0..3u32 {
+            s.on_arrival(0.0, &Job::exact(i, 0.0, 2.0));
+        }
+        s.advance(0.0, 1.0, &mut done); // J0 served, 1 left
+        assert!(s.cancel(1.0, 0));
+        assert!(s.cancel(1.0, 2), "waiting job killable too");
+        assert!(!s.cancel(1.0, 0), "double kill must fail");
+        assert_eq!(s.active(), 1);
+        let ev = s.next_event(1.0).unwrap();
+        assert!((ev - 3.0).abs() < 1e-9, "J1 (full size 2) from t=1: {ev}");
+        s.advance(1.0, ev, &mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
     }
 }

@@ -28,7 +28,11 @@ pub struct Dps {
 impl Dps {
     /// Weight-respecting DPS (§6.1, §7.6).
     pub fn new() -> Self {
-        Dps { heap: MinHeap::new(), g: 0.0, wsum: 0.0, use_weights: true }
+        // Dense seq index (job ids are dense by the engine contract):
+        // `remove_by_seq` — the §5.2.2 kill path — is O(log n) instead
+        // of an O(n) scan, at one array write per sift swap on the
+        // event path (the `heap/` trade-off in BENCH_psbs_ops.json).
+        Dps { heap: MinHeap::with_dense_index(), g: 0.0, wsum: 0.0, use_weights: true }
     }
 
     /// Plain PS: every job weighs 1 regardless of `Job::weight`.
@@ -95,6 +99,22 @@ impl Scheduler for Dps {
 
     fn active(&self) -> usize {
         self.heap.len()
+    }
+
+    /// §5.2.2 kill bookkeeping: drop the job's lag entry and its weight
+    /// share — the remaining jobs immediately split the freed capacity
+    /// (their completion lags are immutable; only `Σw` changes).
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        match self.heap.remove_by_seq(id as u64) {
+            Some((_, _, w)) => {
+                self.wsum -= w;
+                if self.heap.is_empty() {
+                    self.wsum = 0.0; // kill accumulated rounding
+                }
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -163,5 +183,43 @@ mod tests {
         let r = run(&mut Dps::ps(), &jobs);
         assert!((r.completion[0] - 1.0).abs() < 1e-9);
         assert!((r.completion[1] - 11.0).abs() < 1e-9);
+    }
+
+    /// Killing a sharer frees its share for the survivors at once.
+    #[test]
+    fn cancel_releases_the_share() {
+        let mut s = Dps::ps();
+        let mut done = Vec::new();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 4.0));
+        s.on_arrival(0.0, &Job::exact(1, 0.0, 4.0));
+        s.advance(0.0, 2.0, &mut done); // each has 3 remaining
+        assert!(s.cancel(2.0, 0));
+        assert!(!s.cancel(2.0, 0), "double kill must fail");
+        assert_eq!(s.active(), 1);
+        // Survivor now runs at rate 1: done at 2 + 3 = 5.
+        let ev = s.next_event(2.0).unwrap();
+        assert!((ev - 5.0).abs() < 1e-9, "survivor event at {ev}");
+        s.advance(2.0, ev, &mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(s.active(), 0);
+    }
+
+    /// DPS: killing a heavy job re-weights the survivors correctly.
+    #[test]
+    fn dps_cancel_reweights() {
+        let mut s = Dps::new();
+        let mut done = Vec::new();
+        s.on_arrival(0.0, &Job { id: 0, arrival: 0.0, size: 10.0, est: 10.0, weight: 3.0 });
+        s.on_arrival(0.0, &Job { id: 1, arrival: 0.0, size: 2.0, est: 2.0, weight: 1.0 });
+        // Rates 3/4, 1/4. At t=1: J0 rem 9.25, J1 rem 1.75.
+        s.advance(0.0, 1.0, &mut done);
+        assert!(s.cancel(1.0, 0));
+        // J1 alone at rate 1: done at 1 + 1.75 = 2.75.
+        let ev = s.next_event(1.0).unwrap();
+        assert!((ev - 2.75).abs() < 1e-9, "survivor event at {ev}");
+        s.advance(1.0, ev, &mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(s.active(), 0);
     }
 }

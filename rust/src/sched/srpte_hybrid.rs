@@ -10,9 +10,19 @@
 //! * `SrpteHybrid::las()` — LAS among eligible jobs (equal split of the
 //!   least-attained group).
 //!
-//! The late set is small in practice (§7.2), so per-event O(|L|) scans
-//! are the right trade-off versus maintaining more heaps.
+//! The late jobs live in the shared [`LateSet`] engine (`Ps`/`Las`
+//! mode), so membership, completions and §5.2.2 cancellation are
+//! O(log |L|) (Las admissions/cancels add O(#levels) positioning) and
+//! the per-event sharing state — PS pool size, LAS front group and
+//! regroup boundary — is an O(1) read.  The paper
+//! argues |L| stays small in practice (§7.2), but under heavy
+//! underestimation of skewed sizes (the arXiv:1403.5996 hard regime)
+//! it does not, and the flat O(|L|) per-event scans this module used
+//! to carry became the bottleneck.  The slot job is the one eligible
+//! member outside the set; the [`RateCtx`] glue below splits the
+//! server between the two.
 
+use super::late_set::{LateMode, LateSet, Share};
 use super::MinHeap;
 use crate::sim::{Completion, Job, Scheduler};
 use crate::util::EPS;
@@ -45,16 +55,21 @@ pub struct SrpteHybrid {
     mode: ShareMode,
     /// The non-late eligible job (highest SRPTE priority).
     slot: Option<Elig>,
-    /// Late jobs (est_rem <= 0); unordered, scanned per event.
-    late: Vec<Elig>,
+    /// Late jobs (est_rem <= 0): the shared O(log |L|) engine.
+    late: LateSet,
     /// Non-late, non-eligible jobs keyed by estimated remainder
-    /// (static while waiting). Payload: (true_rem, size).
+    /// (static while waiting). Payload: (true_rem, size).  Dense
+    /// seq index: `remove_by_seq` (the kill path) is O(log n).
     waiting: MinHeap<(f64, f64)>,
 }
 
 impl SrpteHybrid {
     pub fn new(mode: ShareMode) -> Self {
-        SrpteHybrid { mode, slot: None, late: Vec::new(), waiting: MinHeap::new() }
+        let late = LateSet::new(match mode {
+            ShareMode::Ps => LateMode::Ps,
+            ShareMode::Las => LateMode::Las,
+        });
+        SrpteHybrid { mode, slot: None, late, waiting: MinHeap::with_dense_index() }
     }
 
     pub fn ps() -> Self {
@@ -74,44 +89,52 @@ impl SrpteHybrid {
     }
 
     /// Sharing descriptor for one event step (rates sum to 1 when any
-    /// job is eligible), precomputed once per call.  Allocation-free
-    /// replacement for the former per-call rate `Vec`s: `next_event`
-    /// and `advance` run once per simulator event, so those fresh
-    /// allocations dominated the per-event profile.
+    /// job is eligible), precomputed once per call from O(1) late-set
+    /// reads — no fold over the late members.
     fn rate_ctx(&self) -> RateCtx {
-        let n_elig = self.late.len() + usize::from(self.slot.is_some());
+        let has_slot = self.slot.is_some();
+        let n_elig = self.late.len() + usize::from(has_slot);
         if n_elig == 0 {
-            return RateCtx { share: 0.0, min_att: f64::INFINITY, k: 0, slot_rate: 0.0 };
+            return RateCtx { set_share: Share { rate: 0.0 }, slot_rate: 0.0 };
         }
         match self.mode {
             ShareMode::Ps => {
+                // Equal split of the whole eligible pool (unit weights:
+                // the per-weight lag rate IS the per-job rate).
                 let share = 1.0 / n_elig as f64;
                 RateCtx {
-                    share,
-                    // +inf ceiling: every eligible job is in the group.
-                    min_att: f64::INFINITY,
-                    k: n_elig,
-                    slot_rate: if self.slot.is_some() { share } else { 0.0 },
+                    set_share: Share { rate: share },
+                    slot_rate: if has_slot { share } else { 0.0 },
                 }
             }
             ShareMode::Las => {
-                // Equal split of the least-attained group among eligible.
+                // Equal split of the least-attained group among
+                // eligible; the late side's group is the front level.
                 let slot_att = self.slot.map(|s| s.attained());
-                let min_att = self
-                    .late
-                    .iter()
-                    .map(|e| e.attained())
-                    .chain(slot_att)
-                    .fold(f64::INFINITY, f64::min);
-                let in_group = |a: f64| a <= min_att + EPS;
-                let k = self.late.iter().filter(|e| in_group(e.attained())).count()
-                    + usize::from(slot_att.map_or(false, in_group));
-                let share = 1.0 / k as f64;
-                RateCtx {
-                    share,
-                    min_att,
-                    k,
-                    slot_rate: if slot_att.map_or(false, in_group) { share } else { 0.0 },
+                match (slot_att, self.late.front_attained()) {
+                    (None, None) => unreachable!("n_elig > 0"),
+                    (Some(_), None) => {
+                        RateCtx { set_share: Share { rate: 0.0 }, slot_rate: 1.0 }
+                    }
+                    (None, Some(_)) => RateCtx {
+                        set_share: Share { rate: 1.0 / self.late.served() as f64 },
+                        slot_rate: 0.0,
+                    },
+                    (Some(sa), Some(fa)) => {
+                        if sa < fa - EPS {
+                            // Slot strictly least-attained: served alone.
+                            RateCtx { set_share: Share { rate: 0.0 }, slot_rate: 1.0 }
+                        } else if sa <= fa + EPS {
+                            // Slot inside the front group.
+                            let share = 1.0 / (self.late.served() + 1) as f64;
+                            RateCtx { set_share: Share { rate: share }, slot_rate: share }
+                        } else {
+                            RateCtx {
+                                set_share: Share { rate: 1.0 / self.late.served() as f64 },
+                                slot_rate: 0.0,
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -121,26 +144,11 @@ impl SrpteHybrid {
 /// Precomputed sharing state for one event step.
 #[derive(Debug, Clone, Copy)]
 struct RateCtx {
-    /// Per-served-job rate (1/k).
-    share: f64,
-    /// Attained-service ceiling of the served group: a late job with
-    /// `attained <= min_att + EPS` is served.  `+inf` in PS mode
-    /// (everyone served); the LAS front-group minimum otherwise.
-    min_att: f64,
-    /// Served-group size.
-    k: usize,
+    /// Per-member rate handed to the late set (0 when the set is not
+    /// served, e.g. the slot is strictly least-attained in LAS mode).
+    set_share: Share,
     /// Rate of the slot job (0 when idle or outside the LAS group).
     slot_rate: f64,
-}
-
-/// Rate of a late job with the given attained service.
-#[inline]
-fn late_rate(ctx: RateCtx, attained: f64) -> f64 {
-    if attained <= ctx.min_att + EPS {
-        ctx.share
-    } else {
-        0.0
-    }
 }
 
 impl Scheduler for SrpteHybrid {
@@ -157,8 +165,8 @@ impl Scheduler for SrpteHybrid {
             None => self.slot = Some(fresh),
             Some(cur) if job.est < cur.est_rem => {
                 // The slot job is non-late by construction (it would
-                // have moved to `late` otherwise), so preemption is
-                // purely priority-based.
+                // have moved to the late set otherwise), so preemption
+                // is purely priority-based.
                 self.waiting.push(cur.est_rem, cur.id as u64, (cur.true_rem, cur.size));
                 self.slot = Some(fresh);
             }
@@ -169,11 +177,9 @@ impl Scheduler for SrpteHybrid {
     fn next_event(&self, now: f64) -> Option<f64> {
         let ctx = self.rate_ctx();
         let mut dt = f64::INFINITY;
-        for e in &self.late {
-            let r = late_rate(ctx, e.attained());
-            if r > 0.0 {
-                dt = dt.min(e.true_rem / r);
-            }
+        // Late-side completion / internal LAS regroup: O(1).
+        if let Some(d) = self.late.next_event_dt(ctx.set_share) {
+            dt = dt.min(d);
         }
         if let Some(s) = &self.slot {
             if ctx.slot_rate > 0.0 {
@@ -183,21 +189,18 @@ impl Scheduler for SrpteHybrid {
                     dt = dt.min(s.est_rem / ctx.slot_rate);
                 }
             }
-        }
-        if self.mode == ShareMode::Las && ctx.k > 0 {
-            // Regroup: the served group catches the next attained
-            // level.  The group's minimum attained service is exactly
-            // `ctx.min_att` (the group is defined as everything within
-            // EPS of it).
-            let next_att = self
-                .late
-                .iter()
-                .map(|e| e.attained())
-                .chain(self.slot.map(|s| s.attained()))
-                .filter(|a| *a > ctx.min_att + EPS)
-                .fold(f64::INFINITY, f64::min);
-            if next_att.is_finite() {
-                dt = dt.min((next_att - ctx.min_att) * ctx.k as f64);
+            // LAS regroup boundaries that involve the slot (the
+            // set-internal one is part of `next_event_dt`): whichever
+            // of the slot / the front group trails catches the other.
+            if self.mode == ShareMode::Las {
+                if let Some(fa) = self.late.front_attained() {
+                    let sa = s.attained();
+                    if ctx.set_share.rate <= 0.0 && ctx.slot_rate > 0.0 {
+                        dt = dt.min((fa - sa).max(0.0) / ctx.slot_rate);
+                    } else if ctx.slot_rate <= 0.0 && ctx.set_share.rate > 0.0 {
+                        dt = dt.min((sa - fa).max(0.0) / ctx.set_share.rate);
+                    }
+                }
             }
         }
         if dt.is_finite() {
@@ -210,27 +213,12 @@ impl Scheduler for SrpteHybrid {
     fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
         let dt = t - now;
         let ctx = self.rate_ctx();
-        for e in self.late.iter_mut() {
-            // `attained()` is read before the update, so the rate is
-            // the step-start rate (as the old rate vectors had it).
-            let r = late_rate(ctx, e.attained());
-            e.true_rem -= r * dt;
-            e.est_rem -= r * dt;
-        }
+        // Late-side progress + completions (rates are step-start, as
+        // the flat rate vectors had it: ctx is precomputed).
+        self.late.advance(dt, ctx.set_share, t, done);
         if let Some(s) = self.slot.as_mut() {
             s.true_rem -= ctx.slot_rate * dt;
             s.est_rem -= ctx.slot_rate * dt;
-        }
-
-        // Completions among late jobs.
-        let mut i = 0;
-        while i < self.late.len() {
-            if self.late[i].true_rem <= EPS {
-                let e = self.late.swap_remove(i);
-                done.push(Completion { id: e.id, time: t });
-            } else {
-                i += 1;
-            }
         }
         // Slot: completion, or late transition.
         if let Some(s) = self.slot {
@@ -238,7 +226,7 @@ impl Scheduler for SrpteHybrid {
                 done.push(Completion { id: s.id, time: t });
                 self.slot = None;
             } else if s.est_rem <= EPS {
-                self.late.push(s);
+                self.late.insert(s.id, 1.0, s.true_rem, s.size);
                 self.slot = None;
             }
         }
@@ -247,6 +235,22 @@ impl Scheduler for SrpteHybrid {
 
     fn active(&self) -> usize {
         self.late.len() + self.waiting.len() + usize::from(self.slot.is_some())
+    }
+
+    /// §5.2.2 kill bookkeeping: remove the job from whichever of the
+    /// three homes holds it — the slot (the next-priority waiter takes
+    /// over), the late set (O(log |L|)), or the waiting heap (O(log n)
+    /// via the dense seq index).
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        if self.slot.map(|s| s.id) == Some(id) {
+            self.slot = None;
+            self.pull_slot();
+            return true;
+        }
+        if self.late.cancel(id) {
+            return true;
+        }
+        self.waiting.remove_by_seq(id as u64).is_some()
     }
 }
 
@@ -340,6 +344,29 @@ mod tests {
         for mut s in [SrpteHybrid::ps(), SrpteHybrid::las()] {
             let r = run(&mut s, &jobs);
             assert!(r.completion.iter().all(|c| c.is_finite()));
+        }
+    }
+
+    /// Kill coverage for all three homes a job can be in: the slot,
+    /// the late set, and the waiting heap.
+    #[test]
+    fn cancel_from_every_home() {
+        for mk in [SrpteHybrid::ps, SrpteHybrid::las] {
+            let mut s = mk();
+            // J0 underestimated -> will go late; J1 next priority;
+            // J2 parks in waiting.
+            s.on_arrival(0.0, &Job { id: 0, arrival: 0.0, size: 5.0, est: 1.0, weight: 1.0 });
+            s.on_arrival(0.0, &Job { id: 1, arrival: 0.0, size: 3.0, est: 3.0, weight: 1.0 });
+            s.on_arrival(0.0, &Job { id: 2, arrival: 0.0, size: 4.0, est: 4.0, weight: 1.0 });
+            let mut done = Vec::new();
+            s.advance(0.0, 1.5, &mut done);
+            assert!(done.is_empty(), "{}", s.name());
+            assert_eq!(s.late.len(), 1, "{}: J0 must be late", s.name());
+            assert!(s.cancel(0.0, 0), "{}: late kill", s.name());
+            assert!(s.cancel(0.0, 2), "{}: waiting kill", s.name());
+            assert!(s.cancel(0.0, 1), "{}: slot kill", s.name());
+            assert!(!s.cancel(0.0, 1), "{}: double kill", s.name());
+            assert_eq!(s.active(), 0, "{}", s.name());
         }
     }
 }

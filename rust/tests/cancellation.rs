@@ -30,23 +30,26 @@ fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
         .collect()
 }
 
-/// Drive a scheduler manually, cancelling one job mid-flight, and
-/// check every *other* job still completes (and none completes twice).
-fn run_with_cancel(policy: &str, jobs: &[Job], victim: u32, cancel_at: f64) -> Vec<f64> {
+/// Drive a scheduler manually through a schedule of kill requests
+/// (sorted by time), checking the §5.2.2 contract at every step:
+/// cancel succeeds iff the victim has arrived and neither completed
+/// nor been killed, killed jobs never complete, nothing completes
+/// twice, and `active()` drains to 0.  Returns (completion, killed).
+fn run_with_kills(policy: &str, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>, Vec<bool>) {
     let mut s = sched::by_name(policy).unwrap();
     let mut completion = vec![f64::NAN; jobs.len()];
+    let mut killed = vec![false; jobs.len()];
     let mut done = Vec::new();
     let mut now = 0.0;
     let mut next = 0usize;
-    let mut cancelled = false;
-    let mut killed = false; // cancel actually removed the victim
+    let mut next_kill = 0usize;
     loop {
         let next_arrival = jobs.get(next).map(|j| j.arrival);
         let next_internal = s.next_event(now);
-        let cancel_t = if cancelled { None } else { Some(cancel_at) };
+        let kill_t = kills.get(next_kill).map(|&(t, _)| t);
         // Earliest of the three event sources.
         let mut t = f64::INFINITY;
-        for cand in [next_arrival, next_internal, cancel_t].into_iter().flatten() {
+        for cand in [next_arrival, next_internal, kill_t].into_iter().flatten() {
             t = t.min(cand);
         }
         if !t.is_finite() {
@@ -56,34 +59,47 @@ fn run_with_cancel(policy: &str, jobs: &[Job], victim: u32, cancel_at: f64) -> V
         done.clear();
         s.advance(now, t, &mut done);
         for c in &done {
-            assert!(completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
-            assert!(!(killed && c.id == victim), "killed job must not complete");
+            assert!(
+                completion[c.id as usize].is_nan(),
+                "{policy}: job {} completed twice",
+                c.id
+            );
+            assert!(!killed[c.id as usize], "{policy}: killed job {} completed", c.id);
             completion[c.id as usize] = c.time;
         }
         now = t;
-        if Some(t) == cancel_t {
-            // Cancel succeeds iff the victim has arrived and neither
-            // completed nor been cancelled yet.
+        // Kills land before same-instant arrivals (as the leader loop
+        // orders them: state advanced, then the request applies).
+        while next_kill < kills.len() && kills[next_kill].0 <= now {
+            let victim = kills[next_kill].1;
             let did = s.cancel(now, victim);
             let arrived = (victim as usize) < next;
-            let already_done = !completion[victim as usize].is_nan();
+            let expect =
+                arrived && completion[victim as usize].is_nan() && !killed[victim as usize];
             assert_eq!(
-                did,
-                arrived && !already_done,
-                "cancel={did} arrived={arrived} done={already_done}"
+                did, expect,
+                "{policy}: cancel({victim}) at {now}: got {did}, expected {expect}"
             );
-            cancelled = true;
-            killed = did;
+            if did {
+                killed[victim as usize] = true;
+            }
+            next_kill += 1;
         }
         while next < jobs.len() && jobs[next].arrival <= now {
             s.on_arrival(now, &jobs[next]);
             next += 1;
         }
-        if next == jobs.len() && s.next_event(now).is_none() {
+        if next == jobs.len() && next_kill == kills.len() && s.next_event(now).is_none() {
             break;
         }
     }
-    completion
+    assert_eq!(s.active(), 0, "{policy}: active() must drain to 0");
+    (completion, killed)
+}
+
+/// Single-kill convenience wrapper (the original harness shape).
+fn run_with_cancel(policy: &str, jobs: &[Job], victim: u32, cancel_at: f64) -> Vec<f64> {
+    run_with_kills(policy, jobs, &[(cancel_at, victim)]).0
 }
 
 #[test]
@@ -172,21 +188,62 @@ fn cancellation_never_hurts_survivors_in_psbs() {
 
 #[test]
 fn cancel_of_unknown_id_is_noop() {
-    let mut s = sched::by_name("psbs").unwrap();
-    s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
-    assert!(!s.cancel(0.0, 99));
-    assert!(s.cancel(0.0, 0));
-    assert!(!s.cancel(0.0, 0), "double cancel must fail");
-    assert_eq!(s.active(), 0);
-}
-
-#[test]
-fn unsupporting_policies_report_false() {
-    for policy in ["fifo", "ps", "las", "mlfq"] {
+    for policy in sched::ALL_POLICIES {
         let mut s = sched::by_name(policy).unwrap();
         s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
-        assert!(!s.cancel(0.0, 0), "{policy} should report no support");
+        assert!(!s.cancel(0.0, 99), "{policy}: unknown id");
+        assert!(s.cancel(0.0, 0), "{policy}: pending job");
+        assert!(!s.cancel(0.0, 0), "{policy}: double cancel must fail");
+        assert_eq!(s.active(), 0, "{policy}");
     }
+}
+
+/// The PR-5 gap pin: these disciplines used to inherit the
+/// default-`false` `cancel` (so `Service::kill` silently failed for
+/// half the zoo); every one of them must now really remove the job.
+#[test]
+fn formerly_unsupported_policies_now_cancel() {
+    for policy in ["fifo", "ps", "dps", "las", "mlfq", "srpte+ps", "srpte+las"] {
+        let mut s = sched::by_name(policy).unwrap();
+        s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
+        assert!(s.cancel(0.0, 0), "{policy} must support cancellation");
+        assert_eq!(s.active(), 0, "{policy} must drop the killed job");
+    }
+}
+
+/// Cancel-mid-churn over the WHOLE zoo: random kill schedules
+/// interleaved with arrivals under heavy estimation error.  Killed
+/// jobs never complete, everyone else does, `active()` drains to 0
+/// (all asserted inside the harness for every step).
+#[test]
+fn cancel_mid_churn_property_all_policies() {
+    property(
+        "cancel mid-churn (all policies)",
+        Config { cases: 20, max_size: 36, seed: 0xC4A11 },
+        |rng, size| {
+            let jobs = random_jobs(rng, size, 1.5);
+            let span = jobs.last().unwrap().arrival + 4.0;
+            let nkills = 1 + rng.below(1 + jobs.len() as u64 / 3) as usize;
+            let mut kills: Vec<(f64, u32)> = (0..nkills)
+                .map(|_| (rng.u01() * span, rng.below(jobs.len() as u64) as u32))
+                .collect();
+            kills.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            (jobs, kills)
+        },
+        |(jobs, kills)| {
+            for policy in sched::ALL_POLICIES {
+                let (completion, killed) = run_with_kills(policy, jobs, kills);
+                for (i, c) in completion.iter().enumerate() {
+                    if !killed[i] && c.is_nan() {
+                        return Err(format!(
+                            "{policy}: job {i} never completed (kills: {kills:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -204,4 +261,9 @@ fn service_kill_api() {
     assert!(!svc.kill(1), "completed job cannot be killed");
     let stats = svc.shutdown();
     assert_eq!(stats.completed, 1);
+    // Kill accounting: one real kill, two benign rejections, and no
+    // silently-dropped (unsupported) kills anywhere in the zoo.
+    assert_eq!(stats.killed, 1);
+    assert_eq!(stats.kills_rejected, 2);
+    assert_eq!(stats.kills_unsupported, 0);
 }

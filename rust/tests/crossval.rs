@@ -152,6 +152,17 @@ fn psbs_with_errors_matches_oracle() {
     crossval("psbs", Policy::Psbs, 1.0, true, 13);
 }
 
+/// The arXiv:1403.5996 hard regime — heavy estimation error, so |L|
+/// grows and the late-set engine (not the no-late fast path) carries
+/// the schedule.  All four `LateMode`s against the oracle.
+#[test]
+fn late_modes_heavy_error_match_oracle() {
+    crossval("fspe", Policy::Fspe, 2.0, false, 15);
+    crossval("fspe+ps", Policy::FspePs, 2.0, false, 16);
+    crossval("fspe+las", Policy::FspeLas, 2.0, false, 17);
+    crossval("psbs", Policy::Psbs, 2.0, true, 18);
+}
+
 #[test]
 fn fsp_naive_matches_oracle() {
     crossval("fsp-naive", Policy::Fspe, 1.0, false, 14);

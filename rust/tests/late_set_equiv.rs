@@ -1,0 +1,673 @@
+//! Old-path vs `late_set` equivalence — the refactor pin.
+//!
+//! PR 5 moved the FSP family's late set and the SRPTE hybrids'
+//! eligible pool from flat O(|L|)-per-event scans onto the shared
+//! O(log |L|) [`psbs::sched::late_set::LateSet`] engine.  This file
+//! keeps the *old* implementations alive verbatim (flat `VecDeque`
+//! with per-job rate folds — the pre-refactor code, preserved here as
+//! reference oracles) and pins the new path to them: completions must
+//! agree to ≤ 1e-9 on randomized underestimated / weighted /
+//! heavy-tailed workloads across all four late modes and both hybrid
+//! share modes.  The independent `sim::smallstep` cross-validation in
+//! `rust/tests/crossval.rs` covers the same disciplines from the
+//! paper's definitions; this file covers them from the repo's own
+//! previous implementation, so a behavior change cannot hide behind
+//! the oracle's O(dt) tolerance.
+
+use psbs::sched::{self, MinHeap};
+use psbs::sim::{self, Completion, Job, Scheduler};
+use psbs::util::rng::Rng;
+use psbs::util::EPS;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// Reference #1: the pre-refactor FSP family (flat late VecDeque).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RefLateMode {
+    Serial,
+    Ps,
+    Las,
+    Dps,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RefLateJob {
+    id: u32,
+    weight: f64,
+    true_rem: f64,
+    size: f64,
+}
+
+impl RefLateJob {
+    fn attained(&self) -> f64 {
+        self.size - self.true_rem
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RefOJob {
+    weight: f64,
+    true_rem: f64,
+    size: f64,
+}
+
+struct RefFspFamily {
+    late_mode: RefLateMode,
+    use_weights: bool,
+    g: f64,
+    w_v: f64,
+    w_l: f64,
+    o: MinHeap<RefOJob>,
+    e: MinHeap<f64>,
+    late: VecDeque<RefLateJob>,
+}
+
+impl RefFspFamily {
+    fn with(late_mode: RefLateMode, use_weights: bool) -> Self {
+        RefFspFamily {
+            late_mode,
+            use_weights,
+            g: 0.0,
+            w_v: 0.0,
+            w_l: 0.0,
+            o: MinHeap::with_dense_index(),
+            e: MinHeap::new(),
+            late: VecDeque::new(),
+        }
+    }
+
+    fn weight_of(&self, job: &Job) -> f64 {
+        if self.use_weights {
+            job.weight
+        } else {
+            1.0
+        }
+    }
+
+    fn next_virtual_completion(&self, now: f64) -> Option<f64> {
+        let g_o = self.o.peek().map(|(g, _, _)| g);
+        let g_e = self.e.peek().map(|(g, _, _)| g);
+        let g_hat = match (g_o, g_e) {
+            (None, None) => return None,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        Some(now + ((g_hat - self.g) * self.w_v).max(0.0))
+    }
+
+    fn late_rate(&self, i: usize, las_group: (f64, f64)) -> f64 {
+        match self.late_mode {
+            RefLateMode::Serial => {
+                if i == 0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RefLateMode::Ps => 1.0 / self.late.len() as f64,
+            RefLateMode::Dps => self.late[i].weight / self.w_l,
+            RefLateMode::Las => {
+                let (min_att, k) = las_group;
+                if self.late[i].attained() <= min_att + EPS {
+                    1.0 / k
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    fn las_group(&self) -> (f64, f64) {
+        if self.late_mode != RefLateMode::Las {
+            return (0.0, 1.0);
+        }
+        let min_att = self
+            .late
+            .iter()
+            .map(|l| l.attained())
+            .fold(f64::INFINITY, f64::min);
+        let k = self
+            .late
+            .iter()
+            .filter(|l| l.attained() <= min_att + EPS)
+            .count() as f64;
+        (min_att, k)
+    }
+
+    fn drain_virtual_completions(&mut self) {
+        loop {
+            let g_o = self.o.peek().map(|(g, _, _)| g);
+            let g_e = self.e.peek().map(|(g, _, _)| g);
+            let (g_hat, from_o) = match (g_o, g_e) {
+                (None, None) => return,
+                (Some(a), None) => (a, true),
+                (None, Some(b)) => (b, false),
+                (Some(a), Some(b)) => {
+                    if a <= b {
+                        (a, true)
+                    } else {
+                        (b, false)
+                    }
+                }
+            };
+            if (g_hat - self.g) * self.w_v > EPS {
+                return;
+            }
+            if from_o {
+                let (_, id, oj) = self.o.pop().unwrap();
+                self.w_v -= oj.weight;
+                self.w_l += oj.weight;
+                self.late.push_back(RefLateJob {
+                    id: id as u32,
+                    weight: oj.weight,
+                    true_rem: oj.true_rem,
+                    size: oj.size,
+                });
+            } else {
+                let (_, _, w) = self.e.pop().unwrap();
+                self.w_v -= w;
+            }
+            if self.o.is_empty() && self.e.is_empty() {
+                self.w_v = 0.0;
+            }
+        }
+    }
+}
+
+impl Scheduler for RefFspFamily {
+    fn name(&self) -> &'static str {
+        "ref-fsp-family"
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        let w = self.weight_of(job);
+        let g_i = self.g + job.est / w;
+        self.o
+            .push(g_i, job.id as u64, RefOJob { weight: w, true_rem: job.size, size: job.size });
+        self.w_v += w;
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        let mut dt = f64::INFINITY;
+        if let Some(t_v) = self.next_virtual_completion(now) {
+            dt = dt.min(t_v - now);
+        }
+        if self.late.is_empty() {
+            if let Some((_, _, oj)) = self.o.peek() {
+                dt = dt.min(oj.true_rem);
+            }
+        } else {
+            let las_group = self.las_group();
+            for i in 0..self.late.len() {
+                let r = self.late_rate(i, las_group);
+                if r > 0.0 {
+                    dt = dt.min(self.late[i].true_rem / r);
+                }
+            }
+            if self.late_mode == RefLateMode::Las && self.late.len() > 1 {
+                let (min_att, k) = las_group;
+                let next_att = self
+                    .late
+                    .iter()
+                    .map(|l| l.attained())
+                    .filter(|a| *a > min_att + EPS)
+                    .fold(f64::INFINITY, f64::min);
+                if next_att.is_finite() {
+                    dt = dt.min((next_att - min_att) * k);
+                }
+            }
+        }
+        if dt.is_finite() {
+            Some(now + dt.max(0.0))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let dt = t - now;
+        if self.late.is_empty() {
+            let completed = match self.o.head_mut() {
+                Some(oj) => {
+                    oj.true_rem -= dt;
+                    oj.true_rem <= EPS
+                }
+                None => false,
+            };
+            if completed {
+                let (g_i, id, oj) = self.o.pop().unwrap();
+                self.e.push(g_i, id, oj.weight);
+                done.push(Completion { id: id as u32, time: t });
+            }
+        } else {
+            let las_group = self.las_group();
+            for i in 0..self.late.len() {
+                let r = self.late_rate(i, las_group);
+                self.late[i].true_rem -= r * dt;
+            }
+            let mut i = 0;
+            while i < self.late.len() {
+                if self.late[i].true_rem <= EPS {
+                    let l = self.late.remove(i).unwrap();
+                    self.w_l -= l.weight;
+                    if self.late.is_empty() {
+                        self.w_l = 0.0;
+                    }
+                    done.push(Completion { id: l.id, time: t });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if self.w_v > 0.0 {
+            self.g += dt / self.w_v;
+        }
+        self.drain_virtual_completions();
+    }
+
+    fn active(&self) -> usize {
+        self.o.len() + self.late.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference #2: the pre-refactor SRPTE hybrid (flat late Vec).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RefShareMode {
+    Ps,
+    Las,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RefElig {
+    id: u32,
+    est_rem: f64,
+    true_rem: f64,
+    size: f64,
+}
+
+impl RefElig {
+    fn attained(&self) -> f64 {
+        self.size - self.true_rem
+    }
+}
+
+struct RefSrpteHybrid {
+    mode: RefShareMode,
+    slot: Option<RefElig>,
+    late: Vec<RefElig>,
+    waiting: MinHeap<(f64, f64)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RefRateCtx {
+    share: f64,
+    min_att: f64,
+    k: usize,
+    slot_rate: f64,
+}
+
+fn ref_late_rate(ctx: RefRateCtx, attained: f64) -> f64 {
+    if attained <= ctx.min_att + EPS {
+        ctx.share
+    } else {
+        0.0
+    }
+}
+
+impl RefSrpteHybrid {
+    fn new(mode: RefShareMode) -> Self {
+        RefSrpteHybrid { mode, slot: None, late: Vec::new(), waiting: MinHeap::new() }
+    }
+
+    fn pull_slot(&mut self) {
+        if self.slot.is_none() {
+            if let Some((est_rem, id, (true_rem, size))) = self.waiting.pop() {
+                self.slot = Some(RefElig { id: id as u32, est_rem, true_rem, size });
+            }
+        }
+    }
+
+    fn rate_ctx(&self) -> RefRateCtx {
+        let n_elig = self.late.len() + usize::from(self.slot.is_some());
+        if n_elig == 0 {
+            return RefRateCtx { share: 0.0, min_att: f64::INFINITY, k: 0, slot_rate: 0.0 };
+        }
+        match self.mode {
+            RefShareMode::Ps => {
+                let share = 1.0 / n_elig as f64;
+                RefRateCtx {
+                    share,
+                    min_att: f64::INFINITY,
+                    k: n_elig,
+                    slot_rate: if self.slot.is_some() { share } else { 0.0 },
+                }
+            }
+            RefShareMode::Las => {
+                let slot_att = self.slot.map(|s| s.attained());
+                let min_att = self
+                    .late
+                    .iter()
+                    .map(|e| e.attained())
+                    .chain(slot_att)
+                    .fold(f64::INFINITY, f64::min);
+                let in_group = |a: f64| a <= min_att + EPS;
+                let k = self.late.iter().filter(|e| in_group(e.attained())).count()
+                    + usize::from(slot_att.map_or(false, in_group));
+                let share = 1.0 / k as f64;
+                RefRateCtx {
+                    share,
+                    min_att,
+                    k,
+                    slot_rate: if slot_att.map_or(false, in_group) { share } else { 0.0 },
+                }
+            }
+        }
+    }
+}
+
+impl Scheduler for RefSrpteHybrid {
+    fn name(&self) -> &'static str {
+        "ref-srpte-hybrid"
+    }
+
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        let fresh =
+            RefElig { id: job.id, est_rem: job.est, true_rem: job.size, size: job.size };
+        match self.slot {
+            None => self.slot = Some(fresh),
+            Some(cur) if job.est < cur.est_rem => {
+                self.waiting.push(cur.est_rem, cur.id as u64, (cur.true_rem, cur.size));
+                self.slot = Some(fresh);
+            }
+            Some(_) => self.waiting.push(job.est, job.id as u64, (job.size, job.size)),
+        }
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        let ctx = self.rate_ctx();
+        let mut dt = f64::INFINITY;
+        for e in &self.late {
+            let r = ref_late_rate(ctx, e.attained());
+            if r > 0.0 {
+                dt = dt.min(e.true_rem / r);
+            }
+        }
+        if let Some(s) = &self.slot {
+            if ctx.slot_rate > 0.0 {
+                dt = dt.min(s.true_rem / ctx.slot_rate);
+                if s.est_rem > 0.0 {
+                    dt = dt.min(s.est_rem / ctx.slot_rate);
+                }
+            }
+        }
+        if self.mode == RefShareMode::Las && ctx.k > 0 {
+            let next_att = self
+                .late
+                .iter()
+                .map(|e| e.attained())
+                .chain(self.slot.map(|s| s.attained()))
+                .filter(|a| *a > ctx.min_att + EPS)
+                .fold(f64::INFINITY, f64::min);
+            if next_att.is_finite() {
+                dt = dt.min((next_att - ctx.min_att) * ctx.k as f64);
+            }
+        }
+        if dt.is_finite() {
+            Some(now + dt.max(0.0))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let dt = t - now;
+        let ctx = self.rate_ctx();
+        for e in self.late.iter_mut() {
+            let r = ref_late_rate(ctx, e.attained());
+            e.true_rem -= r * dt;
+            e.est_rem -= r * dt;
+        }
+        if let Some(s) = self.slot.as_mut() {
+            s.true_rem -= ctx.slot_rate * dt;
+            s.est_rem -= ctx.slot_rate * dt;
+        }
+        let mut i = 0;
+        while i < self.late.len() {
+            if self.late[i].true_rem <= EPS {
+                let e = self.late.swap_remove(i);
+                done.push(Completion { id: e.id, time: t });
+            } else {
+                i += 1;
+            }
+        }
+        if let Some(s) = self.slot {
+            if s.true_rem <= EPS {
+                done.push(Completion { id: s.id, time: t });
+                self.slot = None;
+            } else if s.est_rem <= EPS {
+                self.late.push(s);
+                self.slot = None;
+            }
+        }
+        self.pull_slot();
+    }
+
+    fn active(&self) -> usize {
+        self.late.len() + self.waiting.len() + usize::from(self.slot.is_some())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pin.
+// ---------------------------------------------------------------------------
+
+/// Workload knobs: Weibull shape (low = heavy-tailed), lognormal error
+/// sigma, a multiplicative underestimation bias (< 1 biases estimates
+/// low, growing |L|), and whether weights vary.
+fn workload(
+    seed: u64,
+    n: u32,
+    shape: f64,
+    sigma: f64,
+    under_bias: f64,
+    weighted: bool,
+) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    let w = Weibull::unit_mean(shape);
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.u01() * 0.4;
+            let size = w.sample(&mut rng).max(1e-6);
+            let est = (size * err.sample(&mut rng) * under_bias).max(1e-9);
+            let weight = if weighted { 1.0 / (1.0 + rng.below(4) as f64) } else { 1.0 };
+            Job { id: i, arrival: t, size, est, weight }
+        })
+        .collect()
+}
+
+fn assert_equiv(name: &str, jobs: &[Job], old: &mut dyn Scheduler, new: &mut dyn Scheduler) {
+    let a = sim::run(old, jobs).completion;
+    let b = sim::run(new, jobs).completion;
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-9,
+            "{name}: job {i} diverged: old {x} vs late_set {y}"
+        );
+    }
+    assert_eq!(old.active(), 0, "{name}: old path leaked jobs");
+    assert_eq!(new.active(), 0, "{name}: late_set path leaked jobs");
+}
+
+/// All four FSP-family late modes, over underestimated + heavy-tailed
+/// + weighted workloads (the |L|-grows regime).
+#[test]
+fn fsp_family_matches_old_flat_path() {
+    // (name, reference late mode, use_weights, new-path factory)
+    type NewMk = fn() -> psbs::sched::fsp_family::FspFamily;
+    let cases: [(&str, RefLateMode, bool, NewMk); 4] = [
+        ("fspe", RefLateMode::Serial, false, psbs::sched::fsp_family::FspFamily::fspe),
+        ("fspe+ps", RefLateMode::Ps, false, psbs::sched::fsp_family::FspFamily::fspe_ps),
+        ("fspe+las", RefLateMode::Las, false, psbs::sched::fsp_family::FspFamily::fspe_las),
+        ("psbs", RefLateMode::Dps, true, psbs::sched::fsp_family::FspFamily::new),
+    ];
+    // (shape, sigma, under_bias, weighted): skewed sizes, heavy error,
+    // strong underestimation, weighted classes.
+    let grids = [
+        (0.5, 1.0, 1.0, false),
+        (0.25, 2.0, 0.3, false), // heavy tail + heavy underestimation
+        (0.5, 1.5, 0.5, true),   // weighted + underestimated
+        (1.0, 0.5, 1.0, true),
+    ];
+    for (name, ref_mode, use_weights, new_mk) in cases {
+        for (g, &(shape, sigma, bias, weighted)) in grids.iter().enumerate() {
+            for seed in 0..3u64 {
+                let s = 1000 + seed * 7 + g as u64 * 131;
+                let jobs = workload(s, 250, shape, sigma, bias, weighted);
+                let mut old = RefFspFamily::with(ref_mode, use_weights);
+                let mut new = new_mk();
+                assert_equiv(
+                    &format!("{name} grid {g} seed {seed}"),
+                    &jobs,
+                    &mut old,
+                    &mut new,
+                );
+            }
+        }
+    }
+}
+
+/// Both SRPTE hybrid modes over the same workload grid.
+#[test]
+fn srpte_hybrids_match_old_flat_path() {
+    let grids = [
+        (0.5, 1.0, 1.0, false),
+        (0.25, 2.0, 0.3, false),
+        (0.5, 1.5, 0.5, true),
+    ];
+    for (name, ref_mode) in [("srpte+ps", RefShareMode::Ps), ("srpte+las", RefShareMode::Las)] {
+        for (g, &(shape, sigma, bias, weighted)) in grids.iter().enumerate() {
+            for seed in 0..3u64 {
+                let jobs =
+                    workload(9000 + seed * 13 + g as u64 * 57, 250, shape, sigma, bias, weighted);
+                let mut old = RefSrpteHybrid::new(ref_mode);
+                let mut new = sched::by_name(name).unwrap();
+                assert_equiv(
+                    &format!("{name} grid {g} seed {seed}"),
+                    &jobs,
+                    &mut old,
+                    new.as_mut(),
+                );
+            }
+        }
+    }
+}
+
+/// Cancellation equivalence: killing the same set of jobs at the same
+/// instants in both paths leaves identical survivor completions (the
+/// reference gets the same `cancel` semantics bolted on for the test).
+#[test]
+fn cancellation_matches_old_flat_path() {
+    struct RefWithCancel(RefFspFamily);
+    impl Scheduler for RefWithCancel {
+        fn name(&self) -> &'static str {
+            "ref+cancel"
+        }
+        fn on_arrival(&mut self, now: f64, job: &Job) {
+            self.0.on_arrival(now, job)
+        }
+        fn next_event(&self, now: f64) -> Option<f64> {
+            self.0.next_event(now)
+        }
+        fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+            self.0.advance(now, t, done)
+        }
+        fn active(&self) -> usize {
+            self.0.active()
+        }
+        fn cancel(&mut self, _now: f64, id: u32) -> bool {
+            // The old flat path: O(|L|) scan + O(|L|) removal.
+            if let Some((g_i, seq, oj)) = self.0.o.remove_by_seq(id as u64) {
+                self.0.e.push(g_i, seq, oj.weight);
+                return true;
+            }
+            if let Some(pos) = self.0.late.iter().position(|l| l.id == id) {
+                let l = self.0.late.remove(pos).unwrap();
+                self.0.w_l -= l.weight;
+                if self.0.late.is_empty() {
+                    self.0.w_l = 0.0;
+                }
+                return true;
+            }
+            false
+        }
+    }
+
+    let mut rng = Rng::new(77);
+    for trial in 0..6 {
+        let jobs = workload(500 + trial, 160, 0.3, 1.5, 0.4, true);
+        let span = jobs.last().unwrap().arrival + 4.0;
+        let kills: Vec<(f64, u32)> = (0..8)
+            .map(|_| (rng.u01() * span, rng.below(jobs.len() as u64) as u32))
+            .collect();
+        let mut sorted = kills.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let run_killing = |s: &mut dyn Scheduler| -> Vec<f64> {
+            let mut completion = vec![f64::NAN; jobs.len()];
+            let mut done = Vec::new();
+            let mut now = 0.0;
+            let mut next = 0usize;
+            let mut next_kill = 0usize;
+            loop {
+                let candidates = [
+                    jobs.get(next).map(|j| j.arrival),
+                    s.next_event(now),
+                    sorted.get(next_kill).map(|&(t, _)| t),
+                ];
+                let mut t = f64::INFINITY;
+                for cand in candidates.into_iter().flatten() {
+                    t = t.min(cand);
+                }
+                if !t.is_finite() {
+                    break;
+                }
+                let t = t.max(now);
+                done.clear();
+                s.advance(now, t, &mut done);
+                for c in &done {
+                    completion[c.id as usize] = c.time;
+                }
+                now = t;
+                while next_kill < sorted.len() && sorted[next_kill].0 <= now {
+                    s.cancel(now, sorted[next_kill].1);
+                    next_kill += 1;
+                }
+                while next < jobs.len() && jobs[next].arrival <= now {
+                    s.on_arrival(now, &jobs[next]);
+                    next += 1;
+                }
+                if next == jobs.len() && next_kill == sorted.len() && s.next_event(now).is_none()
+                {
+                    break;
+                }
+            }
+            completion
+        };
+
+        let old = run_killing(&mut RefWithCancel(RefFspFamily::with(RefLateMode::Dps, true)));
+        let new = run_killing(&mut psbs::sched::fsp_family::FspFamily::new());
+        for (i, (x, y)) in old.iter().zip(&new).enumerate() {
+            let same = (x.is_nan() && y.is_nan()) || (x - y).abs() <= 1e-9;
+            assert!(same, "trial {trial} job {i}: old {x} vs late_set {y}");
+        }
+    }
+}

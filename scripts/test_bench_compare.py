@@ -102,6 +102,37 @@ class BenchCompareTest(unittest.TestCase):
         self.assertIn("trace_parse_throughput", r.stdout)
         self.assertNotIn("REGRESSED", r.stdout)
 
+    def test_late_set_keys_are_informational(self):
+        # late_set_*_scaling are population-cost ratios (~1 is good);
+        # they must be reported but never gate, in either direction.
+        base = self.write(
+            "base.json",
+            report(
+                {
+                    "late_set_scan_scaling": 1.05,
+                    "late_set_cancel_scaling": 1.4,
+                    "planner_speedup_t4": 2.0,
+                },
+                samples=[("late_set/scan/las/n100000", 50.0)],
+            ),
+        )
+        cur = self.write(
+            "cur.json",
+            report(
+                {
+                    "late_set_scan_scaling": 9.0,  # huge "drop" in ratio terms
+                    "late_set_cancel_scaling": 0.2,
+                    "planner_speedup_t4": 2.0,
+                },
+                samples=[("late_set/scan/las/n100000", 55.0)],
+            ),
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("late_set_scan_scaling", r.stdout)
+        self.assertIn("late_set/scan/las/n100000", r.stdout)
+        self.assertNotIn("REGRESSED", r.stdout)
+
     def test_keys_missing_from_either_side_never_gate(self):
         base = self.write("base.json", report({"planner_speedup_t4": 2.0}))
         cur = self.write("cur.json", report({"planner_speedup_t1": 0.1}))

@@ -65,11 +65,18 @@ if [[ "${1:-}" != "--no-bench" && "$BUILD" == ok ]]; then
   # unfiltered `cargo bench` (those are the ones tracked across PRs).
   BENCH=fail
   mkdir -p bench-smoke
+  # The psbs_ops late_set/ filter keeps the shared late-set engine
+  # (sched/late_set.rs) on the perf radar from day one: the smoke's
+  # BENCH_psbs_ops.json carries the late_set/* samples and the derived
+  # late_set_*_scaling keys (informational in bench-compare).
   if BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/ &&
+     BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench psbs_ops -- late_set/ &&
      BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench figures -- sweep/; then
     BENCH=ok
     echo "--- bench-smoke/BENCH_sweeps.json derived (speedups + trace_parse_throughput) ---"
     grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sweeps.json || true
+    echo "--- bench-smoke/BENCH_psbs_ops.json derived (late_set_* scaling) ---"
+    grep -o '"derived": {[^}]*}' bench-smoke/BENCH_psbs_ops.json || true
   fi
 fi
 
