@@ -18,10 +18,15 @@
 //! The `derived` section of `BENCH_sweeps.json` records the thread
 //! speedups of each mode plus `planner_speedup_t{1,4}` — the planner's
 //! wall-clock win over the per-cell path at equal thread count (the
-//! sweep-throughput number this PR is accountable for).  Filter with
-//! `cargo bench --bench figures -- sweep/` for the scaling run alone.
+//! sweep-throughput number this PR is accountable for) — and
+//! `fault_replay_overhead`, the cost of running a cluster under a
+//! fault plan relative to the plain path (see BENCH README).  Filter
+//! with `cargo bench --bench figures -- sweep/` for the scaling run
+//! alone.
 
+use psbs::coordinator::{FaultConfig, FaultSpec};
 use psbs::figures::{self, Ctx, Reference, SweepCell};
+use psbs::scenario::PolicySpec;
 use psbs::util::bench::{self, Bench};
 use psbs::workload::SynthConfig;
 
@@ -88,6 +93,35 @@ fn main() {
         std::hint::black_box(psbs::workload::trace_file::parse(&csv).unwrap().len());
     });
 
+    // Fault-replay cost: 10k jobs through a k=4 cluster, plain vs under
+    // a fault plan (crash/recovery churn, degraded windows, retries).
+    // Also named under `sweep/` for the tier-1 smoke; the derived
+    // `fault_replay_overhead` (faulty/plain mean-time ratio) tracks what
+    // the fault machinery costs relative to the bit-identical plain
+    // path — informational in bench-compare, not gated.
+    const FAULT_JOBS: usize = 10_000;
+    let jobs = psbs::workload::synthesize(
+        &SynthConfig::default().with_njobs(FAULT_JOBS),
+        7,
+    );
+    let spec = PolicySpec::from("cluster(k=4,dispatch=leastwork,inner=psbs)");
+    let cfg = FaultConfig {
+        spec: FaultSpec { mtbf: 50.0, mttr: 5.0, slowdown: 0.5 },
+        ..Default::default()
+    };
+    {
+        let jobs = jobs.clone();
+        let spec = spec.clone();
+        b.bench_items("sweep/cluster/plain/n10k", Some(FAULT_JOBS as u64), move || {
+            let mut s = spec.build_seeded(7);
+            std::hint::black_box(psbs::sim::run_to_drain(s.as_mut(), &jobs).completed());
+        });
+    }
+    b.bench_items("sweep/cluster/fault_replay/n10k", Some(FAULT_JOBS as u64), move || {
+        let mut s = spec.build_faulty(7, &cfg);
+        std::hint::black_box(psbs::sim::run_to_drain(s.as_mut(), &jobs).completed());
+    });
+
     // Derived speedups (when the relevant samples ran — a
     // `cargo bench -- <filter>` may have skipped some).
     let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
@@ -112,6 +146,12 @@ fn main() {
     }
     if let Some(s) = b.samples.iter().find(|s| s.name == "sweep/trace_parse/rows50k") {
         derived.push(("trace_parse_throughput".to_string(), bench::ops_per_sec(s)));
+    }
+    if let (Some(plain), Some(faulty)) = (
+        mean_of("sweep/cluster/plain/n10k"),
+        mean_of("sweep/cluster/fault_replay/n10k"),
+    ) {
+        derived.push(("fault_replay_overhead".to_string(), faulty / plain));
     }
     for (k, v) in &derived {
         println!("derived {k} = {v:.2}x");

@@ -5,10 +5,10 @@
 //! schedulers in real, complex systems"; real systems (web farms,
 //! Hadoop as in HFSP [15]) are multi-server with immediate dispatch.
 //! This module composes the single-server disciplines into that shape:
-//! each of `k` servers runs its own scheduler instance at unit rate;
-//! an arriving job is routed once (no migration) by a [`Dispatch`]
-//! policy.  The composite implements [`Scheduler`] itself, so the same
-//! engine, metrics and figure harness apply unchanged.
+//! each of `k` servers runs its own scheduler instance; an arriving job
+//! is routed once by a [`Dispatch`] policy.  The composite implements
+//! [`Scheduler`] itself, so the same engine, metrics and figure harness
+//! apply unchanged.
 //!
 //! Dispatch policies:
 //! * [`Dispatch::RoundRobin`] — the size-oblivious baseline;
@@ -16,9 +16,42 @@
 //!   outstanding *estimated* work (the size-based policy; with wrong
 //!   estimates it inherits exactly the error-sensitivity questions the
 //!   paper studies, now at the routing layer too);
-//! * [`Dispatch::Random`] — seeded uniform (the mean-field reference).
+//! * [`Dispatch::Random`] — seeded uniform (the mean-field reference);
+//! * [`Dispatch::Jsq`] — join-the-shortest-queue by job count;
+//! * [`Dispatch::RandomD`] — power-of-d-choices: `d` uniform probes,
+//!   least estimated work among them;
+//! * [`Dispatch::LeastTime`] — least estimated *completion time*
+//!   (`backlog / speed`), the speed-aware routing for heterogeneous
+//!   clusters.
+//!
+//! Beyond dispatch, the cluster is where the robustness machinery
+//! lives (see [`crate::coordinator::faults`] for the schedules):
+//!
+//! * **Heterogeneous speeds** — per-server static multipliers; each
+//!   inner scheduler runs in its own *local* clock (work units), and
+//!   the cluster translates times at the boundary.
+//! * **Crashes** — at a fault-plan crash instant, every copy placed on
+//!   the server is cancelled through the PR-5 kill path (attained work
+//!   is lost), then re-dispatched under the [`RetryPolicy`]'s
+//!   exponential backoff; a job crashed on its `max_attempts`-th
+//!   attempt is accounted lost.  Recovered servers come back empty at
+//!   full speed.
+//! * **Degraded windows** — straggler intervals scale a server's rate
+//!   by `slowdown` without killing anything.
+//! * **Speculative execution** — with a `speculate(after=A,...)` spec,
+//!   a job still unfinished `A * est` after dispatch launches a backup
+//!   copy on the least-loaded *other* alive server; the first copy to
+//!   finish wins and the loser is killed.  Each job completes at most
+//!   once, whichever copy wins.
+//!
+//! All of that is gated: with unit speeds, no fault plan and no
+//! speculation the cluster takes the original bit-exact code paths
+//! (`plain` mode), so fault-free runs stay bit-identical to every
+//! earlier PR — the standing oracle discipline.
 
+use crate::coordinator::faults::{FaultConfig, FaultEvent, FaultPlan, FaultStats, RetryPolicy};
 use crate::scenario::PolicySpec;
+use crate::sched::MinHeap;
 use crate::sim::{Completion, Job, Scheduler};
 use crate::util::rng::Rng;
 
@@ -28,21 +61,71 @@ pub enum Dispatch {
     RoundRobin,
     LeastWork,
     Random,
+    /// Join-the-shortest-queue: fewest active jobs (ties: lowest index).
+    Jsq,
+    /// Power-of-d-choices: `d` uniform probes, least estimated work
+    /// among the probed servers.
+    RandomD(u32),
+    /// Least estimated completion time: `est_backlog / speed` (equals
+    /// [`Dispatch::LeastWork`] on homogeneous clusters).
+    LeastTime,
+}
+
+/// Where one job currently lives.
+#[derive(Debug, Clone)]
+struct Placement {
+    /// Primary copy's server.
+    srv: usize,
+    /// Estimate charged to the backlog (per copy).
+    est: f64,
+    /// Speculative backup copy's server, if launched.
+    backup: Option<usize>,
+    /// The job itself — carried only on the fault/speculation paths
+    /// (retries and backups re-dispatch it); `None` in plain mode.
+    job: Option<Job>,
+    /// Dispatch attempts consumed (1 = first dispatch; 0 in plain mode).
+    attempts: u32,
 }
 
 /// `k` single-server schedulers behind one dispatcher.
 pub struct Cluster {
     servers: Vec<Box<dyn Scheduler>>,
     dispatch: Dispatch,
-    /// Outstanding estimated work per server (LeastWork bookkeeping).
+    /// Outstanding estimated work per server (dispatch bookkeeping).
     est_backlog: Vec<f64>,
-    /// `placement[id] = Some((server, estimate))` for completion-time
-    /// bookkeeping.  Dense by job id — the same 0..n contract the
-    /// engine asserts — so the per-arrival/per-completion touch is one
-    /// array slot, not a hash probe.
-    placement: Vec<Option<(usize, f64)>>,
+    /// `placement[id]` for completion-time bookkeeping.  Dense by job
+    /// id — the same 0..n contract the engine asserts — so the
+    /// per-arrival/per-completion touch is one array slot, not a hash
+    /// probe.
+    placement: Vec<Option<Placement>>,
     rr_next: usize,
     rng: Rng,
+    /// Static per-server speed multipliers (all 1.0 = homogeneous).
+    speeds: Vec<f64>,
+    /// The fault/speed/speculation layer is inert: run the original
+    /// bit-exact paths.
+    plain: bool,
+    // ---- state below is only touched when `!plain` ----
+    /// Per-server local clocks: the inner scheduler's time (work
+    /// units).  `synced[s]` marks a clock that has always run at rate
+    /// exactly 1.0, where local == global with no float arithmetic.
+    local: Vec<f64>,
+    synced: Vec<bool>,
+    faults: Option<FaultPlan>,
+    retry: RetryPolicy,
+    /// Jobs waiting for re-dispatch: key = due time, seq = job id,
+    /// payload = (job, attempts already consumed).
+    pending: MinHeap<(Job, u32)>,
+    /// Speculation threshold: launch a backup when a job is still
+    /// unfinished `after * est` past its dispatch.
+    spec_after: Option<f64>,
+    /// Armed speculation deadlines: key = deadline, seq = job id.
+    spec_deadlines: MinHeap<()>,
+    /// Jobs released and not yet completed or lost.
+    live: usize,
+    stats: FaultStats,
+    /// Scratch buffer for per-server completion translation.
+    buf: Vec<Completion>,
 }
 
 impl Cluster {
@@ -64,9 +147,36 @@ impl Cluster {
         Some(Cluster::from_spec(&policy.into(), k, dispatch, seed))
     }
 
-    /// Spec-native constructor (what `PolicySpec::build_seeded` uses).
+    /// Spec-native constructor (what `PolicySpec::build_seeded` uses):
+    /// homogeneous, fault-free, no speculation.
     pub fn from_spec(policy: &PolicySpec, k: usize, dispatch: Dispatch, seed: u64) -> Cluster {
+        Cluster::from_spec_full(policy, k, dispatch, &[], seed, None, None)
+    }
+
+    /// Full constructor: per-server `speeds` (empty = all 1.0), an
+    /// optional fault-injection config and an optional speculation
+    /// threshold.  With unit speeds, an empty (or absent) config and no
+    /// speculation, the cluster runs the original bit-exact paths.
+    pub fn from_spec_full(
+        policy: &PolicySpec,
+        k: usize,
+        dispatch: Dispatch,
+        speeds: &[f64],
+        seed: u64,
+        faults: Option<&FaultConfig>,
+        spec_after: Option<f64>,
+    ) -> Cluster {
         assert!(k >= 1);
+        let speeds: Vec<f64> = if speeds.is_empty() {
+            vec![1.0; k]
+        } else {
+            assert_eq!(speeds.len(), k, "need one speed per server");
+            speeds.to_vec()
+        };
+        assert!(speeds.iter().all(|&s| s > 0.0), "server speeds must be positive");
+        let cfg = faults.filter(|c| !c.is_empty());
+        let plain =
+            cfg.is_none() && spec_after.is_none() && speeds.iter().all(|&s| s == 1.0);
         Cluster {
             servers: (0..k).map(|_| policy.build_seeded(seed)).collect(),
             dispatch,
@@ -74,11 +184,23 @@ impl Cluster {
             placement: Vec::new(),
             rr_next: 0,
             rng: Rng::new(seed ^ 0xC105_7E2),
+            local: vec![0.0; k],
+            synced: vec![true; k],
+            faults: cfg.map(|c| FaultPlan::new(c, k)),
+            retry: cfg.map(|c| c.retry).unwrap_or_default(),
+            pending: MinHeap::with_index(),
+            spec_after,
+            spec_deadlines: MinHeap::with_index(),
+            live: 0,
+            stats: FaultStats::default(),
+            speeds,
+            plain,
+            buf: Vec::new(),
         }
     }
 
     /// Dense-slot accessor, growing the table to cover `id`.
-    fn slot(&mut self, id: u32) -> &mut Option<(usize, f64)> {
+    fn slot(&mut self, id: u32) -> &mut Option<Placement> {
         let i = id as usize;
         if i >= self.placement.len() {
             self.placement.resize(i + 1, None);
@@ -89,9 +211,9 @@ impl Cluster {
     /// Clear a slot and reclaim the trailing tail, keeping the table
     /// proportional to the live id span even under the online
     /// service's forever-growing job ids.  Amortized O(1).
-    fn clear_slot(&mut self, id: u32) -> Option<(usize, f64)> {
+    fn clear_slot(&mut self, id: u32) -> Option<Placement> {
         let taken = self.placement.get_mut(id as usize).and_then(|s| s.take());
-        while self.placement.last() == Some(&None) {
+        while matches!(self.placement.last(), Some(None)) {
             self.placement.pop();
         }
         taken
@@ -101,6 +223,20 @@ impl Cluster {
         self.servers.len()
     }
 
+    /// Server `s` is not currently crashed.
+    fn is_up(&self, s: usize) -> bool {
+        self.faults.as_ref().map_or(true, |f| !f.servers[s].down)
+    }
+
+    /// Current effective service rate of server `s` (global-time units
+    /// of work per unit time): static speed × fault multiplier.
+    fn rate(&self, s: usize) -> f64 {
+        self.speeds[s] * self.faults.as_ref().map_or(1.0, |f| f.servers[s].rate())
+    }
+
+    /// Dispatch among all `k` servers (plain mode, and the faulty-mode
+    /// fast path when every server is up — so fault-free prefixes of a
+    /// run consume the identical random draws).
     fn pick(&mut self) -> usize {
         match self.dispatch {
             Dispatch::RoundRobin => {
@@ -118,7 +254,359 @@ impl Cluster {
                 }
                 best
             }
+            Dispatch::Jsq => {
+                let mut best = 0;
+                for i in 1..self.servers.len() {
+                    if self.servers[i].active() < self.servers[best].active() {
+                        best = i;
+                    }
+                }
+                best
+            }
+            Dispatch::RandomD(d) => {
+                let k = self.servers.len() as u64;
+                let mut best = self.rng.below(k) as usize;
+                for _ in 1..d {
+                    let c = self.rng.below(k) as usize;
+                    if self.est_backlog[c] < self.est_backlog[best] {
+                        best = c;
+                    }
+                }
+                best
+            }
+            Dispatch::LeastTime => {
+                let mut best = 0;
+                for i in 1..self.servers.len() {
+                    if self.est_backlog[i] / self.speeds[i]
+                        < self.est_backlog[best] / self.speeds[best]
+                    {
+                        best = i;
+                    }
+                }
+                best
+            }
         }
+    }
+
+    /// Dispatch among the servers that are up; `None` when the whole
+    /// cluster is down (the caller parks the job until a recovery).
+    fn pick_up(&mut self) -> Option<usize> {
+        let k = self.servers.len();
+        if (0..k).all(|s| self.is_up(s)) {
+            return Some(self.pick());
+        }
+        let up: Vec<usize> = (0..k).filter(|&s| self.is_up(s)).collect();
+        if up.is_empty() {
+            return None;
+        }
+        let argmin = |cost: &dyn Fn(&Cluster, usize) -> f64| {
+            let mut best = up[0];
+            for &s in &up[1..] {
+                if cost(self, s) < cost(self, best) {
+                    best = s;
+                }
+            }
+            best
+        };
+        Some(match self.dispatch {
+            Dispatch::RoundRobin => {
+                let mut s = self.rr_next % k;
+                while !self.is_up(s) {
+                    s = (s + 1) % k;
+                }
+                self.rr_next = (s + 1) % k;
+                s
+            }
+            Dispatch::Random => up[self.rng.below(up.len() as u64) as usize],
+            Dispatch::RandomD(d) => {
+                let mut best = up[self.rng.below(up.len() as u64) as usize];
+                for _ in 1..d {
+                    let c = up[self.rng.below(up.len() as u64) as usize];
+                    if self.est_backlog[c] < self.est_backlog[best] {
+                        best = c;
+                    }
+                }
+                best
+            }
+            Dispatch::LeastWork => argmin(&|c, s| c.est_backlog[s]),
+            Dispatch::Jsq => argmin(&|c, s| c.servers[s].active() as f64),
+            Dispatch::LeastTime => argmin(&|c, s| c.est_backlog[s] / c.speeds[s]),
+        })
+    }
+
+    /// Place one copy of `job` (attempt number `attempts`, counting the
+    /// first dispatch as 1), or park it if the whole cluster is down.
+    fn dispatch_copy(&mut self, now: f64, job: &Job, attempts: u32) {
+        match self.pick_up() {
+            Some(s) => {
+                self.est_backlog[s] += job.est;
+                let lt = self.local[s];
+                *self.slot(job.id) = Some(Placement {
+                    srv: s,
+                    est: job.est,
+                    backup: None,
+                    job: Some(*job),
+                    attempts,
+                });
+                self.servers[s].on_arrival(lt, job);
+                if attempts > 1 {
+                    self.stats.restarts += 1;
+                }
+                if let Some(after) = self.spec_after {
+                    self.spec_deadlines.push(now + after * job.est, job.id as u64, ());
+                }
+            }
+            None => {
+                // Every server is down: park until the earliest
+                // recovery (one always exists while a server is down).
+                let due = self.earliest_recovery().unwrap_or(now).max(now);
+                self.pending.push(due, job.id as u64, (*job, attempts.saturating_sub(1)));
+            }
+        }
+    }
+
+    fn earliest_recovery(&self) -> Option<f64> {
+        self.faults
+            .as_ref()?
+            .servers
+            .iter()
+            .filter_map(|sf| sf.recover_at())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Earliest pending control event (fault state change, retry due
+    /// time, speculation deadline), if any.
+    fn next_control_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        if let Some(f) = &self.faults {
+            for sf in &f.servers {
+                if let Some(c) = sf.next_change() {
+                    t = t.min(c);
+                }
+            }
+        }
+        if let Some((k, _, _)) = self.pending.peek() {
+            t = t.min(k);
+        }
+        if let Some((k, _, _)) = self.spec_deadlines.peek() {
+            t = t.min(k);
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Advance every server's inner scheduler from global `from` to
+    /// global `to` (rates are constant on the window — control events
+    /// bound it), translating completions back to global time and
+    /// settling them immediately.
+    fn step_servers(&mut self, from: f64, to: f64, done: &mut Vec<Completion>) {
+        if to <= from {
+            return;
+        }
+        for s in 0..self.servers.len() {
+            let rate = self.rate(s);
+            if rate <= 0.0 {
+                // Crashed: the local clock freezes (and can never again
+                // equal global time).
+                self.synced[s] = false;
+                continue;
+            }
+            let exact = self.synced[s] && rate == 1.0;
+            if !exact {
+                self.synced[s] = false;
+            }
+            let l0 = self.local[s];
+            let l1 = if exact { to } else { l0 + (to - from) * rate };
+            let mut lnow = l0;
+            let mut out = std::mem::take(&mut self.buf);
+            loop {
+                let ev = match self.servers[s].next_event(lnow) {
+                    Some(ev) if ev < l1 => ev.max(lnow),
+                    _ => break,
+                };
+                if self.servers[s].active() > 0 {
+                    self.stats.work_done += ev - lnow;
+                }
+                out.clear();
+                self.servers[s].advance(lnow, ev, &mut out);
+                self.settle(s, from, l0, rate, exact, &out, done);
+                lnow = ev;
+            }
+            if self.servers[s].active() > 0 {
+                self.stats.work_done += l1 - lnow;
+            }
+            out.clear();
+            self.servers[s].advance(lnow, l1, &mut out);
+            self.settle(s, from, l0, rate, exact, &out, done);
+            self.buf = out;
+            self.local[s] = l1;
+        }
+    }
+
+    /// Record completions surfaced by server `s`: translate to global
+    /// time, kill the losing twin of a speculated job, release the
+    /// bookkeeping, and forward exactly one completion per job.
+    fn settle(
+        &mut self,
+        s: usize,
+        from: f64,
+        l0: f64,
+        rate: f64,
+        exact: bool,
+        out: &[Completion],
+        done: &mut Vec<Completion>,
+    ) {
+        for c in out {
+            let g = if exact { c.time } else { from + (c.time - l0) / rate };
+            // A copy whose placement is already gone lost a same-window
+            // race; its twin completed and this copy's kill was
+            // rejected.  Dropping it here keeps exactly-once intact.
+            let Some(Some(p)) = self.placement.get(c.id as usize).map(|x| x.clone()) else {
+                continue;
+            };
+            let loser = if p.srv == s { p.backup } else { Some(p.srv) };
+            if let Some(l) = loser {
+                let lt = self.local[l];
+                if self.servers[l].cancel(lt, c.id) {
+                    self.stats.killed += 1;
+                } else {
+                    self.stats.kills_rejected += 1;
+                }
+                self.est_backlog[l] = (self.est_backlog[l] - p.est).max(0.0);
+            }
+            self.est_backlog[s] = (self.est_backlog[s] - p.est).max(0.0);
+            self.clear_slot(c.id);
+            self.spec_deadlines.remove_by_seq(c.id as u64);
+            self.live -= 1;
+            self.stats.useful_work += p.job.map_or(0.0, |j| j.size);
+            done.push(Completion { id: c.id, time: g });
+        }
+    }
+
+    /// Apply every control event due at `tc` (servers are already
+    /// advanced to `tc`): fault state changes first (so recoveries
+    /// unblock same-instant retries), then crash victim handling, then
+    /// due retries, then speculation deadlines.
+    fn apply_control(&mut self, tc: f64) {
+        let mut crashed: Vec<usize> = Vec::new();
+        if let Some(f) = self.faults.as_mut() {
+            for (s, sf) in f.servers.iter_mut().enumerate() {
+                while let Some(ev) = sf.pop_change(tc) {
+                    if ev == FaultEvent::Crash {
+                        crashed.push(s);
+                    }
+                }
+            }
+        }
+        for &s in &crashed {
+            self.on_crash(tc, s);
+        }
+        while matches!(self.pending.peek(), Some((k, _, _)) if k <= tc) {
+            let (_, _, (job, made)) = self.pending.pop().unwrap();
+            self.dispatch_copy(tc, &job, made + 1);
+        }
+        while matches!(self.spec_deadlines.peek(), Some((k, _, _)) if k <= tc) {
+            let (_, id, ()) = self.spec_deadlines.pop().unwrap();
+            self.try_speculate(tc, id as u32);
+        }
+    }
+
+    /// Server `s` crashed at `tc`: kill every copy placed on it through
+    /// the PR-5 cancel path (attained work is lost), then re-dispatch
+    /// sole copies under the retry policy — or account them lost once
+    /// `max_attempts` is exhausted.  A speculated job whose twin
+    /// survives elsewhere just loses the crashed copy.
+    fn on_crash(&mut self, tc: f64, s: usize) {
+        self.stats.crashes += 1;
+        let victims: Vec<u32> = self
+            .placement
+            .iter()
+            .enumerate()
+            .filter_map(|(id, p)| {
+                p.as_ref()
+                    .filter(|p| p.srv == s || p.backup == Some(s))
+                    .map(|_| id as u32)
+            })
+            .collect();
+        for id in victims {
+            let mut p = self.placement[id as usize].clone().expect("victim vanished");
+            let lt = self.local[s];
+            if self.servers[s].cancel(lt, id) {
+                self.stats.killed += 1;
+            } else {
+                self.stats.kills_rejected += 1;
+            }
+            if p.srv == s && p.backup.is_some() {
+                // The backup survives and becomes the sole copy.
+                p.srv = p.backup.take().unwrap();
+                self.placement[id as usize] = Some(p);
+            } else if p.backup == Some(s) {
+                p.backup = None;
+                self.placement[id as usize] = Some(p);
+            } else {
+                self.clear_slot(id);
+                self.spec_deadlines.remove_by_seq(id as u64);
+                let job = p.job.expect("faulty-mode placement carries the job");
+                if p.attempts >= self.retry.max_attempts {
+                    self.stats.lost += 1;
+                    self.live -= 1;
+                } else {
+                    let delay =
+                        self.retry.backoff * (1u64 << (p.attempts - 1).min(32)) as f64;
+                    self.pending.push(tc + delay, id as u64, (job, p.attempts));
+                }
+            }
+        }
+        // Everything on the server was killed with it.
+        self.est_backlog[s] = 0.0;
+    }
+
+    /// A speculation deadline fired for `id`: if the job is still a
+    /// running sole copy, launch a backup on the least-loaded *other*
+    /// up server (none available: speculation is skipped).
+    fn try_speculate(&mut self, _tc: f64, id: u32) {
+        let Some(Some(p)) = self.placement.get(id as usize) else { return };
+        if p.backup.is_some() {
+            return;
+        }
+        let primary = p.srv;
+        let Some(job) = p.job else { return };
+        let mut best: Option<usize> = None;
+        for s in 0..self.servers.len() {
+            if s == primary || !self.is_up(s) {
+                continue;
+            }
+            if best.map_or(true, |b| {
+                self.est_backlog[s] / self.speeds[s] < self.est_backlog[b] / self.speeds[b]
+            }) {
+                best = Some(s);
+            }
+        }
+        let Some(b) = best else { return };
+        self.est_backlog[b] += job.est;
+        self.placement[id as usize].as_mut().unwrap().backup = Some(b);
+        let lt = self.local[b];
+        self.servers[b].on_arrival(lt, &job);
+        self.stats.speculations += 1;
+    }
+
+    /// Faulty-mode advance: chop `[now, t]` at every control event,
+    /// stepping all servers to each boundary (so completions at a crash
+    /// instant land *before* the crash) and applying the events in
+    /// time order.
+    fn advance_faulty(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        let mut cur = now;
+        loop {
+            match self.next_control_time() {
+                Some(tc) if tc <= t => {
+                    let tc = tc.max(cur);
+                    self.step_servers(cur, tc, done);
+                    cur = tc;
+                    self.apply_control(tc);
+                }
+                _ => break,
+            }
+        }
+        self.step_servers(cur, t, done);
     }
 }
 
@@ -128,20 +616,64 @@ impl Scheduler for Cluster {
     }
 
     fn on_arrival(&mut self, now: f64, job: &Job) {
-        let s = self.pick();
-        self.est_backlog[s] += job.est;
-        *self.slot(job.id) = Some((s, job.est));
-        self.servers[s].on_arrival(now, job);
+        if self.plain {
+            let s = self.pick();
+            self.est_backlog[s] += job.est;
+            *self.slot(job.id) = Some(Placement {
+                srv: s,
+                est: job.est,
+                backup: None,
+                job: None,
+                attempts: 0,
+            });
+            self.servers[s].on_arrival(now, job);
+            return;
+        }
+        // Faulty mode: state was advanced to `now` by the engine (the
+        // standard contract), so the fault plan is current here.
+        self.live += 1;
+        self.dispatch_copy(now, job, 1);
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
-        self.servers
-            .iter()
-            .filter_map(|s| s.next_event(now))
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        if self.plain {
+            return self
+                .servers
+                .iter()
+                .filter_map(|s| s.next_event(now))
+                .min_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        if self.live == 0 {
+            // Idle: suppress the (endless) fault schedule so drained
+            // runs terminate; `advance` catches the plan up across the
+            // gap before the next arrival is delivered.
+            return None;
+        }
+        let mut t = f64::INFINITY;
+        for (s, srv) in self.servers.iter().enumerate() {
+            let rate = self.rate(s);
+            if rate > 0.0 {
+                if let Some(ev) = srv.next_event(self.local[s]) {
+                    let g = if self.synced[s] && rate == 1.0 {
+                        ev
+                    } else {
+                        now + (ev - self.local[s]) / rate
+                    };
+                    t = t.min(g);
+                }
+            }
+        }
+        if let Some(c) = self.next_control_time() {
+            t = t.min(c);
+        }
+        t.is_finite().then(|| t.max(now))
     }
 
     fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        if !self.plain {
+            self.advance_faulty(now, t, done);
+            return;
+        }
         // Servers are independent; each advances through its own
         // internal events up to t (a composite step may cross several
         // per-server events, which the engine cannot see individually).
@@ -159,24 +691,59 @@ impl Scheduler for Cluster {
             s.advance(local_now, t, done);
         }
         for c in done.iter() {
-            if let Some((srv, est)) = self.clear_slot(c.id) {
-                self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
+            if let Some(p) = self.placement.get_mut(c.id as usize).and_then(|s| s.take()) {
+                self.est_backlog[p.srv] = (self.est_backlog[p.srv] - p.est).max(0.0);
             }
+        }
+        while matches!(self.placement.last(), Some(None)) {
+            self.placement.pop();
         }
     }
 
     fn active(&self) -> usize {
-        self.servers.iter().map(|s| s.active()).sum()
+        if self.plain {
+            self.servers.iter().map(|s| s.active()).sum()
+        } else {
+            self.live
+        }
     }
 
     fn cancel(&mut self, now: f64, id: u32) -> bool {
-        let Some(&Some((srv, est))) = self.placement.get(id as usize) else { return false };
-        if self.servers[srv].cancel(now, id) {
-            self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
-            self.clear_slot(id);
-            true
+        if self.plain {
+            let Some(Some(p)) = self.placement.get(id as usize) else { return false };
+            let (srv, est) = (p.srv, p.est);
+            if self.servers[srv].cancel(now, id) {
+                self.est_backlog[srv] = (self.est_backlog[srv] - est).max(0.0);
+                self.clear_slot(id);
+                true
+            } else {
+                false
+            }
         } else {
-            false
+            if self.pending.remove_by_seq(id as u64).is_some() {
+                self.live -= 1;
+                return true;
+            }
+            let Some(p) = self.placement.get(id as usize).and_then(|x| x.clone()) else {
+                return false;
+            };
+            for srv in std::iter::once(p.srv).chain(p.backup) {
+                let lt = self.local[srv];
+                self.servers[srv].cancel(lt, id);
+                self.est_backlog[srv] = (self.est_backlog[srv] - p.est).max(0.0);
+            }
+            self.clear_slot(id);
+            self.spec_deadlines.remove_by_seq(id as u64);
+            self.live -= 1;
+            true
+        }
+    }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        if self.plain {
+            None
+        } else {
+            Some(self.stats)
         }
     }
 }
@@ -184,15 +751,31 @@ impl Scheduler for Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::FaultSpec;
     use crate::sched;
-    use crate::sim::run;
+    use crate::sim::{run, run_to_drain};
     use crate::workload::SynthConfig;
+
+    fn fault_cfg(mtbf: f64, mttr: f64, slowdown: f64, seed: u64) -> FaultConfig {
+        FaultConfig {
+            spec: FaultSpec { mtbf, mttr, slowdown },
+            retry: RetryPolicy::default(),
+            seed,
+        }
+    }
 
     #[test]
     fn single_server_cluster_equals_plain_scheduler() {
         let cfg = SynthConfig::default().with_njobs(500);
         let jobs = crate::workload::synthesize(&cfg, 3);
-        for dispatch in [Dispatch::RoundRobin, Dispatch::LeastWork, Dispatch::Random] {
+        for dispatch in [
+            Dispatch::RoundRobin,
+            Dispatch::LeastWork,
+            Dispatch::Random,
+            Dispatch::Jsq,
+            Dispatch::RandomD(2),
+            Dispatch::LeastTime,
+        ] {
             let mut c = Cluster::new("psbs", 1, dispatch, 0).unwrap();
             let a = run(&mut c, &jobs).completion;
             let mut s = sched::by_name("psbs").unwrap();
@@ -245,6 +828,19 @@ mod tests {
     }
 
     #[test]
+    fn power_of_d_beats_uniform_random_on_skew() {
+        let cfg = SynthConfig::default().with_njobs(4_000).with_load(3.6);
+        let jobs = crate::workload::synthesize(&cfg, 16);
+        let mst = |d| {
+            let mut c = Cluster::new("psbs", 4, d, 3).unwrap();
+            run(&mut c, &jobs).mst(&jobs)
+        };
+        let two = mst(Dispatch::RandomD(2));
+        let uni = mst(Dispatch::Random);
+        assert!(two < uni, "2 choices ({two}) should beat uniform ({uni})");
+    }
+
+    #[test]
     fn cluster_cancellation_updates_backlog() {
         let mut c = Cluster::new("psbs", 2, Dispatch::LeastWork, 4).unwrap();
         c.on_arrival(0.0, &Job::exact(0, 0.0, 100.0)); // -> server 0
@@ -266,5 +862,201 @@ mod tests {
             run(&mut c, &jobs).completion
         };
         assert_eq!(run_once(), run_once());
+    }
+
+    /// The speed/fault/speculation layer at its identity point: unit
+    /// speeds and an *empty* fault config must leave the cluster in
+    /// plain mode, bit-identical to the original constructor.
+    #[test]
+    fn empty_fault_plan_is_bit_identical() {
+        let cfg = SynthConfig::default().with_njobs(800);
+        let jobs = crate::workload::synthesize(&cfg, 21);
+        let spec: PolicySpec = "psbs".into();
+        let empty = fault_cfg(0.0, 1.0, 1.0, 9);
+        for dispatch in [Dispatch::LeastWork, Dispatch::Random, Dispatch::RandomD(3)] {
+            let mut a = Cluster::from_spec(&spec, 3, dispatch, 7);
+            let mut b = Cluster::from_spec_full(
+                &spec,
+                3,
+                dispatch,
+                &[1.0, 1.0, 1.0],
+                7,
+                Some(&empty),
+                None,
+            );
+            assert!(b.fault_stats().is_none(), "empty plan must stay plain");
+            let ra = run(&mut a, &jobs).completion;
+            let rb = run(&mut b, &jobs).completion;
+            assert_eq!(ra, rb, "{dispatch:?}");
+        }
+    }
+
+    /// A k=1 "cluster" with speed 2 halves every sojourn of a serial
+    /// batch (local clocks translate correctly).
+    #[test]
+    fn double_speed_halves_service_times() {
+        let jobs = vec![Job::exact(0, 0.0, 2.0), Job::exact(1, 0.0, 4.0)];
+        let spec: PolicySpec = "fifo".into();
+        let mut c =
+            Cluster::from_spec_full(&spec, 1, Dispatch::RoundRobin, &[2.0], 0, None, None);
+        let r = run(&mut c, &jobs);
+        assert!((r.completion[0] - 1.0).abs() < 1e-9, "got {}", r.completion[0]);
+        assert!((r.completion[1] - 3.0).abs() < 1e-9, "got {}", r.completion[1]);
+        assert_eq!(c.active(), 0);
+    }
+
+    /// Heterogeneous speeds with speed-aware dispatch: a fast+slow pair
+    /// under least-time routing beats the same pair under round-robin.
+    #[test]
+    fn least_time_exploits_fast_server() {
+        let cfg = SynthConfig::default().with_njobs(3_000).with_load(1.8);
+        let jobs = crate::workload::synthesize(&cfg, 13);
+        let spec: PolicySpec = "psbs".into();
+        let mst = |d| {
+            let mut c =
+                Cluster::from_spec_full(&spec, 2, d, &[3.0, 1.0], 5, None, None);
+            run(&mut c, &jobs).mst(&jobs)
+        };
+        let lt = mst(Dispatch::LeastTime);
+        let rr = mst(Dispatch::RoundRobin);
+        assert!(lt < rr, "least-time {lt} should beat round-robin {rr}");
+    }
+
+    /// Crash + retry end to end on a deterministic single server: the
+    /// job's attained work is lost, it restarts after recovery, and the
+    /// stats ledger records the crash, the kill and the restart.
+    #[test]
+    fn crash_loses_attained_work_and_retries() {
+        // mtbf scale >> job sizes: find the first crash window, then
+        // place one long job straddling it.
+        let cfg = fault_cfg(50.0, 5.0, 1.0, 123);
+        let mut probe = FaultPlan::new(&cfg, 1);
+        let crash_at = probe.servers[0].next_change().unwrap();
+        probe.servers[0].pop_change(crash_at);
+        let recover_at = probe.servers[0].recover_at().unwrap();
+
+        let size = crash_at * 0.5 + 1.0; // started at 0, unfinished at the crash
+        let jobs = vec![Job::exact(0, 0.0, size)];
+        let spec: PolicySpec = "fifo".into();
+        let mut c = Cluster::from_spec_full(
+            &spec,
+            1,
+            Dispatch::RoundRobin,
+            &[],
+            0,
+            Some(&cfg),
+            None,
+        );
+        let r = run_to_drain(&mut c, &jobs);
+        let stats = c.fault_stats().unwrap();
+        assert!(stats.crashes >= 1);
+        assert!(stats.killed >= 1, "crash must kill through the cancel path");
+        assert_eq!(stats.kills_rejected, 0);
+        assert_eq!(stats.restarts, 1);
+        assert_eq!(stats.lost, 0);
+        assert_eq!(c.active(), 0);
+        // Restarted from scratch after recovery: full size again.
+        assert!(
+            (r.completion[0] - (recover_at + size)).abs() < 1e-6,
+            "completion {} vs recover {} + size {}",
+            r.completion[0],
+            recover_at,
+            size
+        );
+        // Attained work before the crash was wasted.
+        assert!(stats.wasted_fraction() > 0.0);
+        assert!((stats.useful_work - size).abs() < 1e-9);
+    }
+
+    /// Exhausting max_attempts drops the job as lost — and the run
+    /// still drains (the engine's drain mode tolerates the NaN).
+    #[test]
+    fn retry_exhaustion_accounts_lost() {
+        // Tiny mtbf and huge job: it can never finish.
+        let mut cfg = fault_cfg(1.0, 0.1, 1.0, 7);
+        cfg.retry.max_attempts = 2;
+        let jobs = vec![Job::exact(0, 0.0, 1e4)];
+        let spec: PolicySpec = "fifo".into();
+        let mut c = Cluster::from_spec_full(
+            &spec,
+            1,
+            Dispatch::RoundRobin,
+            &[],
+            0,
+            Some(&cfg),
+            None,
+        );
+        let r = run_to_drain(&mut c, &jobs);
+        let stats = c.fault_stats().unwrap();
+        assert!(r.completion[0].is_nan(), "unfinishable job must be lost");
+        assert_eq!(stats.lost, 1);
+        assert_eq!(r.completed(), 0);
+        assert_eq!(c.active(), 0, "lost jobs must drain from active()");
+    }
+
+    /// Speculative execution rescues a job stuck on a degraded server:
+    /// the backup launches on the other server, wins, and the loser is
+    /// killed — exactly one completion.
+    #[test]
+    fn speculation_rescues_straggler() {
+        // Server 0 is 100x slower; round-robin sends job 0 there.
+        let jobs = vec![Job::exact(0, 0.0, 1.0)];
+        let spec: PolicySpec = "fifo".into();
+        let mut c = Cluster::from_spec_full(
+            &spec,
+            2,
+            Dispatch::RoundRobin,
+            &[0.01, 1.0],
+            0,
+            None,
+            Some(2.0), // backup after 2 * est = 2.0
+        );
+        let r = run_to_drain(&mut c, &jobs);
+        let stats = c.fault_stats().unwrap();
+        assert_eq!(stats.speculations, 1);
+        assert_eq!(stats.killed, 1, "the straggling copy must be killed");
+        // Backup launched at t=2, runs at speed 1: done by t=3 — far
+        // sooner than the straggler's t=100.
+        assert!(
+            (r.completion[0] - 3.0).abs() < 1e-6,
+            "backup should win at 3.0, got {}",
+            r.completion[0]
+        );
+        assert_eq!(c.active(), 0);
+        // Duplicate work shows up in the waste ledger.
+        assert!(stats.wasted_fraction() > 0.0);
+    }
+
+    /// Churn conservation, cluster edition: random faults over a real
+    /// workload — every job completes exactly once or is accounted
+    /// lost, and active() drains to 0.
+    #[test]
+    fn fault_conservation_quickcheck() {
+        let wl = SynthConfig::default().with_njobs(400);
+        let jobs = crate::workload::synthesize(&wl, 30);
+        let horizon = jobs.last().unwrap().arrival;
+        for seed in 0..4u64 {
+            let mut cfg = fault_cfg(horizon / 4.0, horizon / 40.0, 0.5, seed);
+            cfg.retry.max_attempts = 2;
+            let spec: PolicySpec = "psbs".into();
+            let mut c = Cluster::from_spec_full(
+                &spec,
+                3,
+                Dispatch::LeastWork,
+                &[],
+                seed,
+                Some(&cfg),
+                Some(4.0),
+            );
+            let r = run_to_drain(&mut c, &jobs);
+            let stats = c.fault_stats().unwrap();
+            assert_eq!(
+                r.completed() + stats.lost as usize,
+                jobs.len(),
+                "seed {seed}: completions + lost must equal arrivals"
+            );
+            assert_eq!(c.active(), 0, "seed {seed}");
+            assert_eq!(stats.kills_unsupported, 0);
+        }
     }
 }

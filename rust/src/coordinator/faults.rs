@@ -1,0 +1,373 @@
+//! Deterministic fault injection for the cluster layer.
+//!
+//! Real deployments (the HFSP context of PAPER.md §2, the
+//! data-intensive simulators of arXiv:1306.6023) lose machines mid-job,
+//! run stragglers, and re-execute work.  This module provides the
+//! *schedule* side of that story: a seeded, lazily generated
+//! [`FaultPlan`] of per-server crash/recovery windows and degraded
+//! (straggler) intervals, the [`RetryPolicy`] governing re-dispatch of
+//! jobs lost to a crash, and the [`FaultStats`] ledger the metrics
+//! layer reads (goodput, wasted work, restart counts).
+//!
+//! The *mechanism* side — cancelling a crashed server's jobs through
+//! the PR-5 kill path, re-dispatching with lost attained work, backup
+//! copies — lives in [`crate::coordinator::Cluster`], which consumes a
+//! plan.  Everything here is pure bookkeeping over the deterministic
+//! [`Rng`]: the same `(FaultConfig, k)` always yields the same
+//! schedule, so fault runs are exactly reproducible (`--seed`
+//! discipline, like every other experiment).
+
+use crate::util::rng::Rng;
+
+/// Stochastic shape of one server's failure process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures (exponential up-times).
+    /// `<= 0` disables crashes *and* degraded intervals entirely.
+    pub mtbf: f64,
+    /// Mean time to repair (exponential down-times).
+    pub mttr: f64,
+    /// Speed multiplier inside degraded (straggler) windows, drawn
+    /// from an independent stream with the same mtbf/mttr means;
+    /// `1.0` disables them.
+    pub slowdown: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { mtbf: 0.0, mttr: 0.0, slowdown: 1.0 }
+    }
+}
+
+/// Re-dispatch policy for jobs whose server crashed under them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total dispatch attempts a job may consume (the first dispatch
+    /// counts).  A job crashed on its `max_attempts`-th attempt is
+    /// accounted lost.
+    pub max_attempts: u32,
+    /// Exponential-backoff base: the `k`-th retry waits
+    /// `backoff * 2^(k-1)` after the crash; `0` re-dispatches
+    /// immediately.
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff: 0.0 }
+    }
+}
+
+/// Everything needed to reproduce a fault run: the failure shape, the
+/// retry policy, and the schedule seed.  This is what a scenario
+/// `[faults]` section parses into.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultConfig {
+    pub spec: FaultSpec,
+    pub retry: RetryPolicy,
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    /// An empty config injects nothing; the cluster must then stay
+    /// bit-identical to a fault-free run (the standing oracle
+    /// discipline — pinned by `empty_fault_plan_is_bit_identical`).
+    pub fn is_empty(&self) -> bool {
+        self.spec.mtbf <= 0.0
+    }
+}
+
+/// A state change in one server's fault schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// The server dies: in-flight and queued jobs must be killed.
+    Crash,
+    /// The server comes back at full speed, empty.
+    Recover,
+    /// A degraded window opens (rate × `slowdown`).
+    SlowStart,
+    /// The degraded window closes.
+    SlowEnd,
+}
+
+/// One server's lazily generated schedule: alternating
+/// up (`Exp(mtbf)`) / down (`Exp(mttr)`) windows, plus an independent
+/// stream of degraded windows with the same means.  Windows are
+/// regenerated as they are consumed, so the schedule has no horizon —
+/// it covers however long the run needs.
+#[derive(Debug, Clone)]
+pub struct ServerFaults {
+    spec: FaultSpec,
+    rng_crash: Rng,
+    rng_slow: Rng,
+    /// Pending crash window `(crash_at, recover_at)`.
+    crash: Option<(f64, f64)>,
+    /// Pending degraded window `(start, end)`.
+    slow: Option<(f64, f64)>,
+    /// Currently inside the crash window (server down)?
+    pub down: bool,
+    /// Currently inside a degraded window?
+    pub slowed: bool,
+}
+
+impl ServerFaults {
+    fn exp(rng: &mut Rng, mean: f64) -> f64 {
+        -mean * rng.u01_open_left().ln()
+    }
+
+    fn new(cfg: &FaultConfig, server: u64) -> ServerFaults {
+        let base = Rng::new(cfg.seed ^ 0xFA_0175);
+        let mut sf = ServerFaults {
+            spec: cfg.spec,
+            rng_crash: base.substream(2 * server),
+            rng_slow: base.substream(2 * server + 1),
+            crash: None,
+            slow: None,
+            down: false,
+            slowed: false,
+        };
+        sf.refill_crash(0.0);
+        sf.refill_slow(0.0);
+        sf
+    }
+
+    fn refill_crash(&mut self, from: f64) {
+        if self.spec.mtbf > 0.0 {
+            let at = from + Self::exp(&mut self.rng_crash, self.spec.mtbf);
+            let until = at + Self::exp(&mut self.rng_crash, self.spec.mttr);
+            self.crash = Some((at, until));
+        }
+    }
+
+    fn refill_slow(&mut self, from: f64) {
+        if self.spec.mtbf > 0.0 && self.spec.slowdown < 1.0 {
+            let at = from + Self::exp(&mut self.rng_slow, self.spec.mtbf);
+            let until = at + Self::exp(&mut self.rng_slow, self.spec.mttr);
+            self.slow = Some((at, until));
+        }
+    }
+
+    /// Earliest pending state change, if any.
+    pub fn next_change(&self) -> Option<f64> {
+        let c = self.crash.map(|(at, until)| if self.down { until } else { at });
+        let s = self.slow.map(|(at, until)| if self.slowed { until } else { at });
+        match (c, s) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Consume the next state change landing at or before `t` (callers
+    /// loop until `None` to catch up).  Degraded-window transitions
+    /// apply before crash transitions at equal instants — they kill
+    /// nothing, so the order only needs to be deterministic.
+    pub fn pop_change(&mut self, t: f64) -> Option<FaultEvent> {
+        if let Some((at, until)) = self.slow {
+            if !self.slowed && at <= t {
+                self.slowed = true;
+                return Some(FaultEvent::SlowStart);
+            }
+            if self.slowed && until <= t {
+                self.slowed = false;
+                self.refill_slow(until);
+                return Some(FaultEvent::SlowEnd);
+            }
+        }
+        if let Some((at, until)) = self.crash {
+            if !self.down && at <= t {
+                self.down = true;
+                return Some(FaultEvent::Crash);
+            }
+            if self.down && until <= t {
+                self.down = false;
+                self.refill_crash(until);
+                return Some(FaultEvent::Recover);
+            }
+        }
+        None
+    }
+
+    /// The recovery instant, when the server is currently down.
+    pub fn recover_at(&self) -> Option<f64> {
+        match self.crash {
+            Some((_, until)) if self.down => Some(until),
+            _ => None,
+        }
+    }
+
+    /// The fault-induced rate multiplier right now: 0 while down,
+    /// `slowdown` inside a degraded window, 1 otherwise.
+    pub fn rate(&self) -> f64 {
+        if self.down {
+            0.0
+        } else if self.slowed {
+            self.spec.slowdown
+        } else {
+            1.0
+        }
+    }
+}
+
+/// The per-server fault schedules of a `k`-server cluster.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub servers: Vec<ServerFaults>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: &FaultConfig, k: usize) -> FaultPlan {
+        FaultPlan { servers: (0..k).map(|s| ServerFaults::new(cfg, s as u64)).collect() }
+    }
+}
+
+/// Fault-side accounting, surfaced through
+/// [`crate::sim::Scheduler::fault_stats`] and aggregated into the
+/// sweep counter tables.  Counts are exact (not sampled); the work
+/// ledger is in size units (server busy time at unit local rate).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Server crash events that fired.
+    pub crashes: u64,
+    /// Job copies removed through the kill path (crash victims and
+    /// speculation losers).
+    pub killed: u64,
+    /// Kill attempts the inner scheduler rejected (a placed copy it no
+    /// longer knew) — always 0 unless a discipline's bookkeeping leaks.
+    pub kills_rejected: u64,
+    /// Kill attempts on disciplines without `cancel` support — always
+    /// 0 since PR 5 made the whole zoo killable.
+    pub kills_unsupported: u64,
+    /// Re-dispatches of crash victims.
+    pub restarts: u64,
+    /// Backup copies launched by speculative execution.
+    pub speculations: u64,
+    /// Jobs that exhausted `max_attempts` and were dropped.
+    pub lost: u64,
+    /// Total server busy time (size units): everything served,
+    /// including attained work later thrown away.
+    pub work_done: f64,
+    /// Sizes of the jobs that actually completed.
+    pub useful_work: f64,
+}
+
+impl FaultStats {
+    /// Fraction of served work that was thrown away (crash losses and
+    /// speculation duplicates); 0 when nothing ran.
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.work_done <= 0.0 {
+            0.0
+        } else {
+            (self.work_done - self.useful_work).max(0.0) / self.work_done
+        }
+    }
+
+    /// Element-wise sum (aggregation across repetitions / cells).
+    pub fn absorb(&mut self, o: &FaultStats) {
+        self.crashes += o.crashes;
+        self.killed += o.killed;
+        self.kills_rejected += o.kills_rejected;
+        self.kills_unsupported += o.kills_unsupported;
+        self.restarts += o.restarts;
+        self.speculations += o.speculations;
+        self.lost += o.lost;
+        self.work_done += o.work_done;
+        self.useful_work += o.useful_work;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mtbf: f64, mttr: f64, slowdown: f64, seed: u64) -> FaultConfig {
+        FaultConfig {
+            spec: FaultSpec { mtbf, mttr, slowdown },
+            retry: RetryPolicy::default(),
+            seed,
+        }
+    }
+
+    #[test]
+    fn empty_spec_yields_no_events() {
+        let plan = FaultPlan::new(&cfg(0.0, 1.0, 0.5, 7), 4);
+        for s in &plan.servers {
+            assert_eq!(s.next_change(), None);
+            assert_eq!(s.rate(), 1.0);
+        }
+        assert!(cfg(0.0, 1.0, 0.5, 7).is_empty());
+        assert!(!cfg(10.0, 1.0, 1.0, 7).is_empty());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_alternates() {
+        let mk = || FaultPlan::new(&cfg(10.0, 2.0, 1.0, 42), 2);
+        let mut a = mk();
+        let mut b = mk();
+        for _ in 0..100 {
+            for s in 0..2 {
+                let ta = a.servers[s].next_change().unwrap();
+                let tb = b.servers[s].next_change().unwrap();
+                assert_eq!(ta, tb, "same seed must give the same schedule");
+                let eva = a.servers[s].pop_change(ta).unwrap();
+                let evb = b.servers[s].pop_change(tb).unwrap();
+                assert_eq!(eva, evb);
+                // No slowdown stream here: strict crash/recover alternation.
+                match eva {
+                    FaultEvent::Crash => assert!(a.servers[s].down),
+                    FaultEvent::Recover => assert!(!a.servers[s].down),
+                    _ => panic!("slowdown event from a slowdown-free spec"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn changes_are_time_ordered_and_rates_match_state() {
+        let mut plan = FaultPlan::new(&cfg(5.0, 1.0, 0.25, 3), 1);
+        let s = &mut plan.servers[0];
+        let mut last = 0.0;
+        for _ in 0..200 {
+            let t = s.next_change().unwrap();
+            assert!(t >= last, "schedule must be monotone: {t} after {last}");
+            s.pop_change(t).unwrap();
+            last = t;
+            let want = if s.down {
+                0.0
+            } else if s.slowed {
+                0.25
+            } else {
+                1.0
+            };
+            assert_eq!(s.rate(), want);
+            if s.down {
+                assert_eq!(s.recover_at(), Some(s.crash.unwrap().1));
+            }
+        }
+    }
+
+    #[test]
+    fn catch_up_consumes_everything_up_to_t() {
+        let mut plan = FaultPlan::new(&cfg(1.0, 0.5, 0.5, 11), 1);
+        let s = &mut plan.servers[0];
+        while s.pop_change(100.0).is_some() {}
+        assert!(s.next_change().unwrap() > 100.0);
+    }
+
+    #[test]
+    fn distinct_servers_get_distinct_streams() {
+        let plan = FaultPlan::new(&cfg(10.0, 1.0, 1.0, 0), 2);
+        assert_ne!(plan.servers[0].next_change(), plan.servers[1].next_change());
+    }
+
+    #[test]
+    fn wasted_fraction_and_absorb() {
+        let mut a = FaultStats { work_done: 10.0, useful_work: 8.0, crashes: 1, ..Default::default() };
+        assert!((a.wasted_fraction() - 0.2).abs() < 1e-12);
+        assert_eq!(FaultStats::default().wasted_fraction(), 0.0);
+        let b = FaultStats { work_done: 2.0, useful_work: 2.0, lost: 3, ..Default::default() };
+        a.absorb(&b);
+        assert_eq!(a.crashes, 1);
+        assert_eq!(a.lost, 3);
+        assert!((a.work_done - 12.0).abs() < 1e-12);
+    }
+}

@@ -13,9 +13,42 @@
 //! std::thread + mpsc (DESIGN.md §4); the service is I/O-light and the
 //! leader loop is identical in shape to an async reactor — wait until
 //! (next internal event | submission), advance, notify.
+//!
+//! # Crash / retry semantics
+//!
+//! The [`faults`] module supplies deterministic per-server crash,
+//! recovery and slowdown schedules; [`Cluster`] consumes them.  The
+//! contract, uniform across every discipline in the zoo:
+//!
+//! * **Crash** — every copy placed on the server is cancelled through
+//!   the PR-5 [`crate::sim::Scheduler::cancel`] path.  Attained work is
+//!   lost (no checkpointing); for LAS/FSP/PSBS-family disciplines the
+//!   retried copy re-enters as a *fresh* job with its full size, so
+//!   their aging/virtual-time machinery restarts cleanly.  A discipline
+//!   whose `cancel` rejects (or is unsupported) leaks a phantom into
+//!   that server's queue; the cluster still re-dispatches the real job
+//!   and reports the anomaly via `kills_rejected`/`kills_unsupported`
+//!   in [`faults::FaultStats`] — surfaced as a warning by the sweep and
+//!   serve CLIs.
+//! * **Retry** — governed by [`faults::RetryPolicy`]: attempt `a+1`
+//!   starts `backoff * 2^(a-1)` after the crash (attempt numbering
+//!   counts the initial dispatch).  A job crashed on its
+//!   `max_attempts`-th attempt is accounted **lost**: it never
+//!   completes, and `completions + lost == arrivals` is the conserved
+//!   quantity (property-tested across the zoo in `tests/faults.rs`).
+//! * **Speculation** — `speculate(after=A, inner=...)` arms a deadline
+//!   `A * est` after each dispatch; if the job is still unfinished, a
+//!   backup copy launches on the least-loaded other up server.  The
+//!   first copy to complete wins; the loser is cancelled.  Each job
+//!   completes at most once regardless of copies.
+//! * **Empty plan** — a `FaultSpec` with `mtbf <= 0`, unit speeds and
+//!   no speculation short-circuits to the original bit-exact cluster
+//!   code paths: fault-free runs are bit-identical to earlier PRs.
 
 pub mod cluster;
+pub mod faults;
 pub mod service;
 
 pub use cluster::{Cluster, Dispatch};
+pub use faults::{FaultConfig, FaultPlan, FaultSpec, FaultStats, RetryPolicy};
 pub use service::{CompletionInfo, Service, ServiceConfig, ServiceStats};

@@ -59,6 +59,11 @@ pub struct ServiceStats {
     pub mean_slowdown: f64,
     pub max_slowdown: f64,
     pub wall_s: f64,
+    /// Fault-side counters from the discipline itself, captured at
+    /// shutdown — `Some` when the policy runs the faulty/speculative
+    /// cluster path (e.g. a `speculate(...)` spec), `None` for the
+    /// plain disciplines.
+    pub fault_stats: Option<crate::coordinator::faults::FaultStats>,
 }
 
 impl ServiceStats {
@@ -219,6 +224,7 @@ fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
     }
 
     stats.wall_s = t0.elapsed().as_secs_f64();
+    stats.fault_stats = sched.fault_stats();
     if stats.completed > 0 {
         stats.mean_latency_s = lat_sum / stats.completed as f64;
         stats.mean_slowdown = slow_sum / stats.completed as f64;
@@ -298,6 +304,29 @@ mod tests {
             let stats = svc.shutdown();
             assert_eq!(stats.completed, 1, "policy {policy}");
         }
+    }
+
+    /// A speculative cluster policy runs in the service and surfaces
+    /// its fault-side counters at shutdown; plain disciplines stay
+    /// `None`.
+    #[test]
+    fn speculative_policy_reports_fault_stats() {
+        let svc = Service::start(ServiceConfig {
+            policy: "speculate(after=4,inner=cluster(k=2,dispatch=leastwork,inner=psbs))".into(),
+            speed: 10_000.0,
+        });
+        let rxs: Vec<_> = (0..8).map(|_| svc.submit(10.0, 10.0, 1.0)).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).expect("completion");
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed, 8);
+        let f = stats.fault_stats.expect("speculative cluster reports fault stats");
+        assert_eq!(f.lost, 0, "no faults injected: nothing may be lost");
+
+        let svc = Service::start(ServiceConfig { policy: "psbs".into(), speed: 10_000.0 });
+        svc.submit(1.0, 1.0, 1.0).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(svc.shutdown().fault_stats.is_none(), "plain discipline has no fault stats");
     }
 
     /// `Service::kill` works for EVERY entry in `ALL_POLICIES` — the

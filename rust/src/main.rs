@@ -234,6 +234,7 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
         let t0 = std::time::Instant::now();
         for t in sc.tables(p, ctx.threads, ctx.share) {
             emit_table(&t, &ctx, svg)?;
+            warn_on_dropped_kills(&t);
         }
         println!("# scenario {} done in {:.1?}\n", sc.name, t0.elapsed());
         return Ok(());
@@ -435,6 +436,28 @@ fn validate_scenario_file(
     Ok(tables.len())
 }
 
+/// Fault scenarios emit a `{name}_fault_counters` companion table (one
+/// row per policy, columns per `scenario::FAULT_COUNTER_COLUMNS`).  A
+/// non-zero `kills_rejected`/`kills_unsupported` total means a
+/// discipline mishandled a crash-path cancellation — loud warning, not
+/// a silent CSV column.
+fn warn_on_dropped_kills(t: &figures::Table) {
+    if !t.name.ends_with("_fault_counters") {
+        return;
+    }
+    for col in ["kills_rejected", "kills_unsupported"] {
+        let Some(ci) = t.header.iter().position(|h| h == col) else { continue };
+        let total: f64 = t.rows.iter().map(|r| r[ci]).sum();
+        if total > 0.0 {
+            eprintln!(
+                "warning: {} {col} kill(s) across the sweep (table {}) — \
+                 a discipline refused or missed crash-path cancellations",
+                total, t.name
+            );
+        }
+    }
+}
+
 fn emit_table(t: &figures::Table, ctx: &Ctx, svg: bool) -> Result<(), String> {
     println!("{}", t.render());
     let path = t.write_csv(&ctx.out_dir).map_err(|e| e.to_string())?;
@@ -527,6 +550,23 @@ fn cmd_serve(a: &Args) -> Result<(), String> {
     println!("p99 latency      {:.4} s", stats.p99_latency_s);
     println!("mean slowdown    {:.3}", stats.mean_slowdown);
     println!("max slowdown     {:.3}", stats.max_slowdown);
+    println!(
+        "kills            {} ({} rejected, {} unsupported)",
+        stats.killed, stats.kills_rejected, stats.kills_unsupported
+    );
+    if let Some(f) = stats.fault_stats {
+        println!(
+            "cluster faults   {} crash(es), {} restart(s), {} speculation(s), {} lost",
+            f.crashes, f.restarts, f.speculations, f.lost
+        );
+    }
+    if stats.kills_unsupported > 0 {
+        eprintln!(
+            "warning: {} kill(s) were dropped by the discipline (kills_unsupported) — \
+             those jobs ran to completion anyway",
+            stats.kills_unsupported
+        );
+    }
     Ok(())
 }
 

@@ -10,9 +10,18 @@
 //! ```text
 //! name = "fig6_mst_vs_sigma"      # top-level keys first
 //! metric = "mean"                 # "mean" | "ecdf" | "cond_slowdown"
+//!                                 # | "goodput" | "wasted_work" | "restarts"
 //! reps = 30                       # optional per-scenario overrides;
 //! converge = true                 # an explicit CLI flag still wins
 //! reference = "opt"               # "opt" | "ps" (omit for raw MST)
+//!
+//! [faults]                        # optional: run under fault injection
+//! mtbf = 400                      # mean time between per-server crashes
+//! mttr = 40                       # mean repair time
+//! slowdown = 0.5                  # straggler-window rate multiplier, (0,1]
+//! max_attempts = 3                # retry budget per job
+//! backoff = 1                     # base retry delay (doubles per retry)
+//! seed = 0                        # fault-schedule seed
 //!
 //! [workload]                      # exactly one
 //! kind = "synthetic"              # "synthetic" | "trace"
@@ -53,9 +62,10 @@
 //! same way `PolicySpec`'s grammar is pinned.
 
 use super::{
-    Axis, AxisParam, Metric, PolicySpec, Reference, Scenario, TraceSource, TraceSpec,
-    WorkloadSpec,
+    Axis, AxisParam, FaultOutput, Metric, PolicySpec, Reference, Scenario, TraceSource,
+    TraceSpec, WorkloadSpec,
 };
+use crate::coordinator::{FaultConfig, FaultSpec, RetryPolicy};
 use crate::workload::trace_file::TraceFile;
 use crate::workload::traces::TraceName;
 use crate::workload::{SizeDist, SynthConfig};
@@ -81,6 +91,9 @@ impl Scenario {
                 s.push_str("metric = \"cond_slowdown\"\n");
                 s.push_str(&format!("bins = {bins}\n"));
             }
+            Metric::Fault { output } => {
+                s.push_str(&format!("metric = \"{}\"\n", output.name()));
+            }
         }
         if let Some(r) = self.reps {
             s.push_str(&format!("reps = {r}\n"));
@@ -94,6 +107,15 @@ impl Scenario {
                 Reference::Ps => "ps",
             };
             s.push_str(&format!("reference = \"{r}\"\n"));
+        }
+        if let Some(cfg) = &self.faults {
+            s.push_str("\n[faults]\n");
+            s.push_str(&format!("mtbf = {}\n", cfg.spec.mtbf));
+            s.push_str(&format!("mttr = {}\n", cfg.spec.mttr));
+            s.push_str(&format!("slowdown = {}\n", cfg.spec.slowdown));
+            s.push_str(&format!("max_attempts = {}\n", cfg.retry.max_attempts));
+            s.push_str(&format!("backoff = {}\n", cfg.retry.backoff));
+            s.push_str(&format!("seed = {}\n", cfg.seed));
         }
         s.push_str("\n[workload]\n");
         match &self.workload {
@@ -253,6 +275,7 @@ impl Section {
 struct Doc {
     top: Section,
     workload: Option<Section>,
+    faults: Option<Section>,
     axes: Vec<Section>,
     policies: Vec<Section>,
 }
@@ -261,6 +284,7 @@ struct Doc {
 enum Cursor {
     Top,
     Workload,
+    Faults,
     Axis,
     Policy,
 }
@@ -298,6 +322,13 @@ impl Doc {
                         doc.workload = Some(Section::default());
                         cursor = Cursor::Workload;
                     }
+                    "faults" => {
+                        if doc.faults.is_some() {
+                            return Err(format!("line {ln}: duplicate [faults] section"));
+                        }
+                        doc.faults = Some(Section::default());
+                        cursor = Cursor::Faults;
+                    }
                     other => return Err(format!("line {ln}: unknown section [{other}]")),
                 }
                 continue;
@@ -310,6 +341,7 @@ impl Doc {
             let section = match cursor {
                 Cursor::Top => &mut doc.top,
                 Cursor::Workload => doc.workload.as_mut().unwrap(),
+                Cursor::Faults => doc.faults.as_mut().unwrap(),
                 Cursor::Axis => doc.axes.last_mut().unwrap(),
                 Cursor::Policy => doc.policies.last_mut().unwrap(),
             };
@@ -361,7 +393,19 @@ impl Doc {
                 reject(&["points", "decades", "tail_above"], "cond_slowdown")?;
                 Metric::CondSlowdown { bins: self.top.usize("bins")?.unwrap_or(100) }
             }
-            other => return Err(format!("unknown metric `{other}` (mean|ecdf|cond_slowdown)")),
+            name @ ("goodput" | "wasted_work" | "restarts") => {
+                reject(&["points", "decades", "tail_above", "bins"], name)?;
+                Metric::Fault {
+                    output: FaultOutput::parse(name)
+                        .expect("arm pattern and FaultOutput::parse agree"),
+                }
+            }
+            other => {
+                return Err(format!(
+                    "unknown metric `{other}` \
+                     (mean|ecdf|cond_slowdown|goodput|wasted_work|restarts)"
+                ))
+            }
         };
         let reps = self.top.usize("reps")?.map(|r| r as u64);
         let converge = self.top.bool("converge")?;
@@ -370,6 +414,28 @@ impl Doc {
             Some("opt") => Some(Reference::OptSrpt),
             Some("ps") => Some(Reference::Ps),
             Some(other) => return Err(format!("unknown reference `{other}` (opt|ps|none)")),
+        };
+
+        let faults = match self.faults.as_ref() {
+            None => None,
+            Some(f) => {
+                f.check_keys(
+                    "[faults]",
+                    &["mtbf", "mttr", "slowdown", "max_attempts", "backoff", "seed"],
+                )?;
+                Some(FaultConfig {
+                    spec: FaultSpec {
+                        mtbf: f.num("mtbf")?.unwrap_or(0.0),
+                        mttr: f.num("mttr")?.unwrap_or(0.0),
+                        slowdown: f.num("slowdown")?.unwrap_or(1.0),
+                    },
+                    retry: RetryPolicy {
+                        max_attempts: f.usize("max_attempts")?.unwrap_or(3) as u32,
+                        backoff: f.num("backoff")?.unwrap_or(0.0),
+                    },
+                    seed: f.usize("seed")?.unwrap_or(0) as u64,
+                })
+            }
         };
 
         let w = self.workload.as_ref().ok_or("missing [workload] section")?;
@@ -462,7 +528,8 @@ impl Doc {
             policies.push((label, spec));
         }
 
-        let sc = Scenario { name, workload, axes, policies, reference, metric, reps, converge };
+        let sc =
+            Scenario { name, workload, axes, policies, reference, metric, reps, converge, faults };
         sc.validate()?;
         Ok(sc)
     }
@@ -631,6 +698,49 @@ mod tests {
     }
 
     #[test]
+    fn fault_scenarios_round_trip() {
+        let cfg = FaultConfig {
+            spec: FaultSpec { mtbf: 40.0, mttr: 4.0, slowdown: 0.5 },
+            retry: RetryPolicy { max_attempts: 2, backoff: 0.1 },
+            seed: 7,
+        };
+        // Survivor-MST ratio against a clean reference.
+        let sc = Scenario::new("faulty_mean", SynthConfig::default().with_njobs(300))
+            .axis("sigma", AxisParam::Sigma, &[0.5, 1.0])
+            .policies(&["psbs", "srpte", "cluster(k=3,dispatch=jsq,inner=psbs)"])
+            .vs(Reference::Ps)
+            .with_faults(cfg);
+        assert_round_trip(&sc);
+        assert!(sc.to_toml().contains(
+            "\n[faults]\nmtbf = 40\nmttr = 4\nslowdown = 0.5\n\
+             max_attempts = 2\nbackoff = 0.1\nseed = 7\n"
+        ));
+
+        // Each fault-output metric, over a speculating cluster.
+        for output in [FaultOutput::Goodput, FaultOutput::WastedWork, FaultOutput::Restarts] {
+            let sc = Scenario::new("faulty_out", SynthConfig::default().with_njobs(300))
+                .policies(&[
+                    "psbs",
+                    "speculate(after=2,inner=cluster(k=2,dispatch=leastwork,inner=srpte))",
+                ])
+                .metric(Metric::Fault { output })
+                .with_faults(cfg);
+            assert_round_trip(&sc);
+            assert!(sc.to_toml().contains(&format!("metric = \"{}\"\n", output.name())));
+        }
+
+        // Omitted [faults] keys fill their defaults.
+        let text = "name = \"t\"\n\n[faults]\nmtbf = 10\n\n[workload]\nkind = \"synthetic\"\n\n\
+                    [[policy]]\nspec = \"ps\"\n";
+        let f = Scenario::parse_toml(text).unwrap().faults.unwrap();
+        assert_eq!(f.spec.mttr, 0.0);
+        assert_eq!(f.spec.slowdown, 1.0);
+        assert_eq!(f.retry.max_attempts, 3);
+        assert_eq!(f.retry.backoff, 0.0);
+        assert_eq!(f.seed, 0);
+    }
+
+    #[test]
     fn labels_and_composed_specs_round_trip() {
         let sc = Scenario::new("labelled", SynthConfig::default())
             .axis("err", AxisParam::Sigma, &[0.5])
@@ -649,6 +759,20 @@ mod tests {
     fn random_scenarios_round_trip_property() {
         fn gen_values(rng: &mut Rng) -> Vec<f64> {
             (0..1 + rng.below(4)).map(|_| 0.125 * (1 + rng.below(40)) as f64).collect()
+        }
+        fn gen_faults(rng: &mut Rng) -> FaultConfig {
+            FaultConfig {
+                spec: FaultSpec {
+                    mtbf: (1 + rng.below(100)) as f64,
+                    mttr: 0.25 * (1 + rng.below(16)) as f64,
+                    slowdown: 0.125 * (1 + rng.below(8)) as f64,
+                },
+                retry: RetryPolicy {
+                    max_attempts: 1 + rng.below(5) as u32,
+                    backoff: 0.25 * rng.below(8) as f64,
+                },
+                seed: rng.below(1000),
+            }
         }
         fn gen_scenario(rng: &mut Rng) -> Scenario {
             let workload = if rng.below(4) == 0 {
@@ -677,9 +801,10 @@ mod tests {
                 WorkloadSpec::Synth(c)
             };
             let is_trace = matches!(workload, WorkloadSpec::Trace(_));
-            // Metric: 0 = ecdf, 1 = cond_slowdown, else mean.  Both
-            // pooled metrics restrict axes to split axes.
-            let metric_kind = rng.below(5);
+            // Metric: 0 = ecdf, 1 = cond_slowdown, 2 = a fault output,
+            // else mean.  Both pooled metrics restrict axes to split
+            // axes.
+            let metric_kind = rng.below(7);
             let pooled = metric_kind < 2;
             let mut sc = Scenario::with_workload(format!("s{}", rng.below(1000)), workload);
             let axis_pool: &[AxisParam] = if is_trace {
@@ -731,10 +856,24 @@ mod tests {
                 1 => {
                     sc = sc.metric(Metric::CondSlowdown { bins: 2 + rng.below(200) as usize });
                 }
+                2 => {
+                    let output = [
+                        FaultOutput::Goodput,
+                        FaultOutput::WastedWork,
+                        FaultOutput::Restarts,
+                    ][rng.below(3) as usize];
+                    sc = sc.metric(Metric::Fault { output }).with_faults(gen_faults(rng));
+                }
                 _ if rng.below(3) > 0 => {
                     sc = sc.vs(if rng.below(2) == 0 { Reference::OptSrpt } else { Reference::Ps });
                 }
                 _ => {}
+            }
+            // Mean scenarios (with or without a reference) may also run
+            // under a fault plan: survivor MST, possibly as a ratio
+            // against a clean baseline.
+            if matches!(sc.metric, Metric::Mean) && rng.below(3) == 0 {
+                sc = sc.with_faults(gen_faults(rng));
             }
             if rng.below(4) == 0 {
                 sc = sc.reps_override(1 + rng.below(50));
@@ -817,6 +956,14 @@ mod tests {
             ("trace with both trace and path", "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"facebook\"\npath = \"x.csv\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("trace with neither trace nor path", "name = \"t\"\n\n[workload]\nkind = \"trace\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("trace path missing on disk", "name = \"t\"\n\n[workload]\nkind = \"trace\"\npath = \"/nonexistent/psbs_missing.csv\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("fault metric without [faults]", "name = \"t\"\nmetric = \"goodput\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("fault metric with reference", "name = \"t\"\nmetric = \"restarts\"\nreference = \"ps\"\n\n[faults]\nmtbf = 10\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("faults with ecdf metric", "name = \"t\"\nmetric = \"ecdf\"\n\n[faults]\nmtbf = 10\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("unknown faults key", "name = \"t\"\n\n[faults]\nmtbf = 10\nwat = 1\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("faults slowdown above 1", "name = \"t\"\n\n[faults]\nmtbf = 10\nslowdown = 1.5\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("faults zero max_attempts", "name = \"t\"\n\n[faults]\nmtbf = 10\nmax_attempts = 0\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("duplicate faults section", "name = \"t\"\n\n[faults]\nmtbf = 10\n\n[faults]\nmtbf = 20\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("ecdf points on goodput", "name = \"t\"\nmetric = \"goodput\"\npoints = 9\n\n[faults]\nmtbf = 10\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("duplicate key", "name = \"t\"\nname = \"u\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("garbage line", &format!("{base}\nwat\n")),
             ("empty array element", &format!("{base}\n[[axis]]\nparam = \"sigma\"\nvalues = [0.5,,1]\n")),

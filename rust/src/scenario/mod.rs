@@ -54,10 +54,12 @@ pub mod planner;
 pub mod spec;
 
 pub use planner::{
-    eval_cells, group_cells, mst_of, mst_of_seeded, slowdowns_of, slowdowns_of_seeded,
+    eval_cells, fault_rep_seeded, fault_value_seeded, group_cells, mst_of, mst_of_seeded,
+    slowdowns_of, slowdowns_of_seeded,
 };
 pub use spec::{BasePolicy, Estimated, EstimatorSpec, PolicySpec};
 
+use crate::coordinator::{FaultConfig, FaultStats};
 use crate::figures::tables::Table;
 use crate::metrics;
 use crate::sim::Job;
@@ -65,6 +67,22 @@ use crate::util::pool;
 use crate::workload::trace_file::TraceFile;
 use crate::workload::traces::{self, TraceName};
 use crate::workload::{SizeDist, SynthConfig};
+
+/// Column order of the `{table}_fault_counters` companion table a
+/// fault scenario emits next to each mean/fault table: after the
+/// leading `policy` column (the 0-based index into the scenario's
+/// policy declaration order) come these per-policy totals, summed over
+/// every repetition of every grid cell.  All are exact `u64` counts, so
+/// the table is bit-identical for any thread count or `share` setting.
+pub const FAULT_COUNTER_COLUMNS: [&str; 7] = [
+    "crashes",
+    "restarts",
+    "speculations",
+    "lost",
+    "killed",
+    "kills_rejected",
+    "kills_unsupported",
+];
 
 /// Scalar sweep parameters, detached from `figures::Ctx` so worker
 /// threads never touch the (non-`Sync`) runtime handle.
@@ -277,6 +295,18 @@ pub struct SweepCell {
     /// `Some(r)` => mean of per-seed MST ratios against `r`;
     /// `None` => mean raw MST.
     pub reference: Option<Reference>,
+    /// `Some(cfg)` => run under fault injection (`build_faulty` +
+    /// drain-mode engine); the per-cell value is the survivor MST (or
+    /// the `output` scalar).  `None` => today's exact fault-free path.
+    pub faults: Option<FaultConfig>,
+    /// Which fault-side scalar to report (requires `faults`); `None`
+    /// keeps the MST semantics.
+    pub output: Option<FaultOutput>,
+    /// Shared sink for the fault-side counters of every repetition run
+    /// through this cell (one sink per policy column, shared across the
+    /// cells of a table).  Counter totals are pure `u64` sums, so they
+    /// are deterministic for any thread count / work order.
+    pub counters: Option<std::sync::Arc<std::sync::Mutex<FaultStats>>>,
 }
 
 impl SweepCell {
@@ -290,12 +320,40 @@ impl SweepCell {
             policy: policy.into(),
             workload: workload.into(),
             reference: Some(reference),
+            faults: None,
+            output: None,
+            counters: None,
         }
     }
 
     /// A raw-MST cell.
     pub fn mst(policy: impl Into<PolicySpec>, workload: impl Into<WorkloadSpec>) -> SweepCell {
-        SweepCell { policy: policy.into(), workload: workload.into(), reference: None }
+        SweepCell {
+            policy: policy.into(),
+            workload: workload.into(),
+            reference: None,
+            faults: None,
+            output: None,
+            counters: None,
+        }
+    }
+
+    /// The per-repetition value of this cell on one materialized
+    /// workload — the one place the fault-injected and fault-free
+    /// evaluation paths fork (shared by [`SweepCell::eval`] and the
+    /// planner, so both stay bit-identical by construction).
+    fn rep_value(&self, jobs: &[Job], rep_seed: u64) -> f64 {
+        match &self.faults {
+            None => mst_of_seeded(&self.policy, jobs, rep_seed),
+            Some(cfg) => {
+                let (v, stats) =
+                    fault_rep_seeded(&self.policy, jobs, rep_seed, cfg, self.output);
+                if let Some(sink) = &self.counters {
+                    sink.lock().unwrap().absorb(&stats);
+                }
+                v
+            }
+        }
     }
 
     /// Evaluate this cell alone: a pure function of (cell, params),
@@ -308,7 +366,7 @@ impl SweepCell {
         for r in 0..max {
             let rep_seed = self.workload.rep_seed(p.seed, r);
             let jobs = self.workload.synthesize(rep_seed);
-            let a = mst_of_seeded(&self.policy, &jobs, rep_seed);
+            let a = self.rep_value(&jobs, rep_seed);
             reps.push(match self.reference {
                 None => a,
                 Some(reference) => a / reference.mst(&jobs),
@@ -431,6 +489,12 @@ pub enum Metric {
     /// and does not apply to pooled populations (the pre-refactor
     /// figure code ignored `--converge` here too).
     PooledEcdf { points: usize, decades: f64, tail_above: Option<f64> },
+    /// A fault-side scalar per (grid point, policy), mean over
+    /// repetitions — requires a `[faults]` config on the scenario (the
+    /// run is `build_faulty` + drain instead of the strict engine
+    /// loop) and takes no reference.  Evaluated through the same
+    /// planner as [`Metric::Mean`].
+    Fault { output: FaultOutput },
     /// Mean conditional slowdown per equal-count size class (Fig. 7,
     /// the paper's per-size-class fairness lens): pool every
     /// repetition's (jobs, slowdowns) per policy, split the pooled
@@ -442,6 +506,42 @@ pub enum Metric {
     /// (`--converge` is a scalar-cell notion).  Workload sharing is
     /// structurally a no-op on this path too.
     CondSlowdown { bins: usize },
+}
+
+/// Which fault-side scalar a [`Metric::Fault`] scenario reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOutput {
+    /// Fraction of released jobs that completed (lost jobs are the
+    /// complement): `completions / arrivals` per repetition.
+    Goodput,
+    /// Fraction of executed service time that was thrown away (crashed
+    /// attempts, losing speculative copies):
+    /// [`crate::coordinator::FaultStats::wasted_fraction`].
+    WastedWork,
+    /// Number of retry re-dispatches (attempts beyond each job's
+    /// first).
+    Restarts,
+}
+
+impl FaultOutput {
+    /// Canonical scenario-file metric name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultOutput::Goodput => "goodput",
+            FaultOutput::WastedWork => "wasted_work",
+            FaultOutput::Restarts => "restarts",
+        }
+    }
+
+    /// Inverse of [`FaultOutput::name`].
+    pub fn parse(s: &str) -> Option<FaultOutput> {
+        Some(match s {
+            "goodput" => FaultOutput::Goodput,
+            "wasted_work" => FaultOutput::WastedWork,
+            "restarts" => FaultOutput::Restarts,
+            _ => return None,
+        })
+    }
 }
 
 /// A declarative sweep scenario: workload source, grid `axes`
@@ -465,6 +565,10 @@ pub struct Scenario {
     pub reps: Option<u64>,
     /// Per-scenario §6.3 convergence-mode override, same precedence.
     pub converge: Option<bool>,
+    /// Fault-injection config (`[faults]` section): every cell runs
+    /// under the seeded fault plan.  `None` = today's exact fault-free
+    /// paths.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Scenario {
@@ -484,6 +588,7 @@ impl Scenario {
             metric: Metric::Mean,
             reps: None,
             converge: None,
+            faults: None,
         }
     }
 
@@ -539,6 +644,12 @@ impl Scenario {
     /// Pin §6.3 convergence mode (scenario files: `converge = true`).
     pub fn converge_override(mut self, converge: bool) -> Scenario {
         self.converge = Some(converge);
+        self
+    }
+
+    /// Run every cell under a fault plan (scenario files: `[faults]`).
+    pub fn with_faults(mut self, cfg: FaultConfig) -> Scenario {
+        self.faults = Some(cfg);
         self
     }
 
@@ -618,11 +729,55 @@ impl Scenario {
                 ));
             }
         }
+        if let Some(cfg) = &self.faults {
+            if !(cfg.spec.mtbf >= 0.0) {
+                return Err(format!("scenario {}: [faults] mtbf must be >= 0", self.name));
+            }
+            if cfg.spec.mtbf > 0.0 && !(cfg.spec.mttr >= 0.0) {
+                return Err(format!("scenario {}: [faults] mttr must be >= 0", self.name));
+            }
+            if !(cfg.spec.slowdown > 0.0 && cfg.spec.slowdown <= 1.0) {
+                return Err(format!(
+                    "scenario {}: [faults] slowdown must be in (0, 1], got {}",
+                    self.name, cfg.spec.slowdown
+                ));
+            }
+            if cfg.retry.max_attempts < 1 {
+                return Err(format!(
+                    "scenario {}: [faults] max_attempts must be >= 1",
+                    self.name
+                ));
+            }
+            if !(cfg.retry.backoff >= 0.0) {
+                return Err(format!("scenario {}: [faults] backoff must be >= 0", self.name));
+            }
+            if !matches!(self.metric, Metric::Mean | Metric::Fault { .. }) {
+                return Err(format!(
+                    "scenario {}: [faults] applies only to the mean and fault metrics \
+                     (pooled slowdown populations have no lost-job semantics)",
+                    self.name
+                ));
+            }
+        }
+        if matches!(self.metric, Metric::Fault { .. }) {
+            if self.faults.is_none() {
+                return Err(format!(
+                    "scenario {}: fault metrics require a [faults] section",
+                    self.name
+                ));
+            }
+            if self.reference.is_some() {
+                return Err(format!(
+                    "scenario {}: fault metrics take no reference",
+                    self.name
+                ));
+            }
+        }
         // The pooled-population metrics (ECDF, conditional slowdown)
         // share structural constraints: split axes only (their tables
         // have no room for extra value columns) and no reference.
         let pooled_kind = match self.metric {
-            Metric::Mean => None,
+            Metric::Mean | Metric::Fault { .. } => None,
             Metric::PooledEcdf { points, decades, .. } => {
                 if points < 2 || !(decades > 0.0) {
                     return Err(format!(
@@ -710,6 +865,12 @@ impl Scenario {
                     policy: spec.clone(),
                     workload: wl.clone(),
                     reference: self.reference,
+                    faults: self.faults,
+                    output: match self.metric {
+                        Metric::Fault { output } => Some(output),
+                        _ => None,
+                    },
+                    counters: None,
                 });
             }
         }
@@ -734,7 +895,14 @@ impl Scenario {
         let mut out = Vec::new();
         for (name, w) in self.split_expansions() {
             match self.metric {
-                Metric::Mean => out.push(self.mean_table(name, w, p, threads, share)),
+                Metric::Mean | Metric::Fault { .. } => {
+                    let (t, counters) = self.mean_table(name, w, p, threads, share);
+                    out.push(t);
+                    // Fault scenarios also emit a per-policy counter
+                    // table — non-zero `kills_rejected` /
+                    // `kills_unsupported` counts must not vanish.
+                    out.extend(counters);
+                }
                 Metric::PooledEcdf { points, decades, tail_above } => {
                     self.ecdf_tables(&mut out, name, w, p, threads, points, decades, tail_above)
                 }
@@ -761,15 +929,27 @@ impl Scenario {
         p: SweepParams,
         threads: usize,
         share: bool,
-    ) -> Table {
+    ) -> (Table, Option<Table>) {
         let axes = self.row_axes();
         let header: Vec<String> = axes
             .iter()
             .map(|a| a.label.clone())
             .chain(self.policies.iter().map(|(l, _)| l.clone()))
             .collect();
-        let mut t = Table::new(name, header);
-        let cells = self.cells_for(w);
+        let mut t = Table::new(name.clone(), header);
+        let mut cells = self.cells_for(w);
+        // Fault scenarios: one counter sink per policy column, shared by
+        // every cell of that column (cells_for is policy-minor).
+        let sinks: Vec<std::sync::Arc<std::sync::Mutex<FaultStats>>> = if self.faults.is_some() {
+            (0..self.policies.len()).map(|_| Default::default()).collect()
+        } else {
+            Vec::new()
+        };
+        if !sinks.is_empty() {
+            for (i, cell) in cells.iter_mut().enumerate() {
+                cell.counters = Some(sinks[i % self.policies.len()].clone());
+            }
+        }
         let vals = eval_cells(p, threads, share, &cells);
         let mut it = vals.into_iter();
         for point in grid_points(&axes) {
@@ -777,7 +957,24 @@ impl Scenario {
             row.extend((&mut it).take(self.policies.len()));
             t.push(row);
         }
-        t
+        let counters = (!sinks.is_empty()).then(|| {
+            let header = std::iter::once("policy".to_string())
+                .chain(FAULT_COUNTER_COLUMNS.iter().map(|s| s.to_string()))
+                .collect();
+            let mut ct = Table::new(format!("{name}_fault_counters"), header);
+            for (i, sink) in sinks.iter().enumerate() {
+                let s = sink.lock().unwrap();
+                let mut row = vec![i as f64];
+                row.extend(
+                    [s.crashes, s.restarts, s.speculations, s.lost, s.killed, s.kills_rejected,
+                     s.kills_unsupported]
+                    .map(|c| c as f64),
+                );
+                ct.push(row);
+            }
+            ct
+        });
+        (t, counters)
     }
 
     /// The pooled-population path (Figs. 4/8): repetitions run in

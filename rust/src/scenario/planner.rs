@@ -29,7 +29,8 @@
 //! to [`SweepCell::eval`] per cell — the `share` flag exists precisely
 //! so tests can assert that.
 
-use super::{PolicySpec, Reference, SweepCell, SweepParams, WorkloadSpec};
+use super::{FaultOutput, PolicySpec, Reference, SweepCell, SweepParams, WorkloadSpec};
+use crate::coordinator::{FaultConfig, FaultStats};
 use crate::sim::{self, Job};
 use crate::stats::Repetitions;
 use crate::util::pool;
@@ -61,6 +62,46 @@ pub fn slowdowns_of(spec: &PolicySpec, jobs: &[Job]) -> Vec<f64> {
 pub fn slowdowns_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> Vec<f64> {
     let mut s = spec.build_seeded(seed);
     sim::run(s.as_mut(), jobs).slowdowns(jobs)
+}
+
+/// One fault-injected repetition: build the policy through
+/// [`PolicySpec::build_faulty`], run the drain-mode engine (lost jobs
+/// never complete), and reduce to the requested scalar.  The
+/// repetition seed is folded into the fault plan's own seed so every
+/// repetition sees an independent (but fully deterministic) fault
+/// schedule, mirroring how it feeds the policy build.
+pub fn fault_value_seeded(
+    spec: &PolicySpec,
+    jobs: &[Job],
+    seed: u64,
+    cfg: &FaultConfig,
+    output: Option<FaultOutput>,
+) -> f64 {
+    fault_rep_seeded(spec, jobs, seed, cfg, output).0
+}
+
+/// [`fault_value_seeded`] plus the run's raw [`FaultStats`] — the sweep
+/// layer absorbs the stats into per-policy counter tables so non-zero
+/// `kills_rejected`/`kills_unsupported` counts cannot vanish silently.
+pub fn fault_rep_seeded(
+    spec: &PolicySpec,
+    jobs: &[Job],
+    seed: u64,
+    cfg: &FaultConfig,
+    output: Option<FaultOutput>,
+) -> (f64, FaultStats) {
+    let rep_cfg = FaultConfig { seed: cfg.seed.wrapping_add(seed), ..*cfg };
+    let mut s = spec.build_faulty(seed, &rep_cfg);
+    let r = sim::run_to_drain(s.as_mut(), jobs);
+    let stats = s.fault_stats().unwrap_or_default();
+    let v = match output {
+        // Mean metric under faults: MST over the surviving jobs.
+        None => r.mst_completed(jobs),
+        Some(FaultOutput::Goodput) => r.completed() as f64 / jobs.len().max(1) as f64,
+        Some(FaultOutput::WastedWork) => stats.wasted_fraction(),
+        Some(FaultOutput::Restarts) => stats.restarts as f64,
+    };
+    (v, stats)
 }
 
 /// Group cell indices by workload spec, in first-appearance order.
@@ -98,7 +139,7 @@ fn eval_group_rep(
         .iter()
         .map(|&ci| {
             let cell = &cells[ci];
-            let a = mst_of_seeded(&cell.policy, &jobs, rep_seed);
+            let a = cell.rep_value(&jobs, rep_seed);
             match cell.reference {
                 None => a,
                 Some(Reference::Ps) => {
@@ -322,6 +363,54 @@ mod tests {
         let shared: Vec<u64> =
             eval_cells(p, 3, true, &cells).into_iter().map(f64::to_bits).collect();
         assert_eq!(per_cell, shared);
+    }
+
+    /// Fault-injected cells run through the same planner machinery:
+    /// bit-identity across share x threads, and the per-rep fault
+    /// schedule is deterministic.
+    #[test]
+    fn fault_cells_match_per_cell_eval_bitwise() {
+        use crate::coordinator::{FaultConfig, FaultSpec, RetryPolicy};
+        let base = SynthConfig::default().with_njobs(150);
+        let cfg = FaultConfig {
+            spec: FaultSpec { mtbf: 40.0, mttr: 4.0, slowdown: 0.5 },
+            retry: RetryPolicy { max_attempts: 2, backoff: 0.1 },
+            seed: 3,
+        };
+        let mut cells = Vec::new();
+        for policy in ["psbs", "ps", "cluster(k=2,dispatch=jsq,inner=psbs)"] {
+            for output in [FaultOutput::Goodput, FaultOutput::WastedWork, FaultOutput::Restarts]
+            {
+                cells.push(SweepCell {
+                    policy: policy.into(),
+                    workload: base.into(),
+                    reference: None,
+                    faults: Some(cfg),
+                    output: Some(output),
+                    counters: None,
+                });
+            }
+            // Mean-under-faults (survivor MST), ratio vs clean PS.
+            cells.push(SweepCell {
+                policy: policy.into(),
+                workload: base.into(),
+                reference: Some(Reference::Ps),
+                faults: Some(cfg),
+                output: None,
+                counters: None,
+            });
+        }
+        // A fault-free cell in the same grid keeps its old path.
+        cells.push(SweepCell::ratio("psbs", Reference::Ps, base));
+        let p = SweepParams { reps: 2, seed: 19, converge: false };
+        let per_cell: Vec<u64> =
+            eval_cells(p, 1, false, &cells).into_iter().map(f64::to_bits).collect();
+        assert!(per_cell.iter().all(|&b| f64::from_bits(b).is_finite()));
+        for threads in [1usize, 3] {
+            let shared: Vec<u64> =
+                eval_cells(p, threads, true, &cells).into_iter().map(f64::to_bits).collect();
+            assert_eq!(per_cell, shared, "threads={threads}");
+        }
     }
 
     #[test]

@@ -9,11 +9,19 @@
 //! psbs                                          bare discipline
 //! mlfq(levels=12,q0=0.02)                       parameterized MLFQ
 //! cluster(k=8,dispatch=leastwork,inner=psbs)    k-server dispatcher
+//! cluster(k=3,dispatch=leasttime,speeds=4:2:1,inner=psbs)
+//!                                               heterogeneous speeds
 //! est(model=sampling,fraction=0.05,sigma0=0.5,inner=psbs)
 //!                                               estimator-wrapped policy
+//! speculate(after=4,inner=cluster(k=8,inner=psbs))
+//!                                               speculative execution
 //! cluster(k=4,dispatch=random,inner=est(model=lognormal,sigma=2,inner=srpte))
 //!                                               arbitrary nesting
 //! ```
+//!
+//! Dispatch names: `leastwork`, `roundrobin`, `random`, `jsq`,
+//! `random{d}` (power-of-d-choices, e.g. `random2`), `leasttime`
+//! (speed-aware least estimated completion time).
 //!
 //! Arguments are `key=value`, comma-separated; `inner` may itself be a
 //! composed spec (the splitter respects parenthesis depth).  `Display`
@@ -196,10 +204,20 @@ pub enum PolicySpec {
         /// Extra seed folded into the runtime seed (0 = omitted in the
         /// canonical rendering).
         seed: u64,
+        /// Per-server speed multipliers (`speeds=4:2:1`); empty is the
+        /// canonical homogeneous form (all-1.0 parses normalize to it,
+        /// and it is omitted in the rendering).
+        speeds: Vec<f64>,
     },
     /// `inner` fed estimator-generated `est` values instead of the
     /// workload's own (the estimator sees only true sizes).
     Estimated { est: EstimatorSpec, inner: Box<PolicySpec>, seed: u64 },
+    /// Speculative execution (`speculate(after=A,inner=...)`): a job
+    /// still unfinished `A * est` after dispatch launches a backup copy
+    /// on another server; first completion wins, the loser is killed.
+    /// `inner` is normally a `cluster(...)`; any other inner is wrapped
+    /// as a k=1 cluster (where speculation can never trigger).
+    Speculate { after: f64, inner: Box<PolicySpec> },
 }
 
 impl PolicySpec {
@@ -241,20 +259,52 @@ impl PolicySpec {
                 Ok(PolicySpec::Mlfq { levels, q0 })
             }
             "cluster" => {
-                check_keys(&["k", "dispatch", "inner", "seed"])?;
+                check_keys(&["k", "dispatch", "inner", "seed", "speeds"])?;
                 let k = parse_num::<usize>(get("k"), "cluster: k", 2)?;
                 if k < 1 {
                     return Err("cluster: need k >= 1".into());
                 }
-                let dispatch = match get("dispatch").unwrap_or("leastwork") {
-                    "leastwork" => Dispatch::LeastWork,
-                    "roundrobin" => Dispatch::RoundRobin,
-                    "random" => Dispatch::Random,
-                    other => return Err(format!("cluster: unknown dispatch `{other}`")),
+                let dispatch = parse_dispatch(get("dispatch").unwrap_or("leastwork"))?;
+                let speeds = match get("speeds") {
+                    None => Vec::new(),
+                    Some(v) => {
+                        let mut out = Vec::new();
+                        for part in v.split(':') {
+                            let s: f64 = part
+                                .trim()
+                                .parse()
+                                .map_err(|_| format!("cluster: bad speed `{part}`"))?;
+                            if !(s > 0.0) {
+                                return Err(format!("cluster: speed must be > 0, got {s}"));
+                            }
+                            out.push(s);
+                        }
+                        if out.len() != k {
+                            return Err(format!(
+                                "cluster: speeds lists {} values for k={k}",
+                                out.len()
+                            ));
+                        }
+                        // Canonical form: homogeneous = empty.
+                        if out.iter().all(|&s| s == 1.0) {
+                            Vec::new()
+                        } else {
+                            out
+                        }
+                    }
                 };
                 let inner = PolicySpec::parse(get("inner").unwrap_or("psbs"))?;
                 let seed = parse_num::<u64>(get("seed"), "cluster: seed", 0)?;
-                Ok(PolicySpec::Cluster { k, dispatch, inner: Box::new(inner), seed })
+                Ok(PolicySpec::Cluster { k, dispatch, inner: Box::new(inner), seed, speeds })
+            }
+            "speculate" => {
+                check_keys(&["after", "inner"])?;
+                let after = parse_num::<f64>(get("after"), "speculate: after", 2.0)?;
+                if !(after > 0.0) {
+                    return Err("speculate: need after > 0".into());
+                }
+                let inner = PolicySpec::parse(get("inner").unwrap_or("cluster(k=2)"))?;
+                Ok(PolicySpec::Speculate { after, inner: Box::new(inner) })
             }
             "est" => {
                 check_keys(&["model", "sigma", "fraction", "sigma0", "bias", "inner", "seed"])?;
@@ -301,16 +351,85 @@ impl PolicySpec {
         match self {
             PolicySpec::Base(b) => b.build(),
             PolicySpec::Mlfq { levels, q0 } => Box::new(sched::mlfq::Mlfq::new(*levels, *q0)),
-            PolicySpec::Cluster { k, dispatch, inner, seed: s0 } => Box::new(Cluster::from_spec(
-                inner,
-                *k,
-                *dispatch,
-                seed.wrapping_add(*s0),
-            )),
+            PolicySpec::Cluster { k, dispatch, inner, seed: s0, speeds } => {
+                if speeds.is_empty() {
+                    // The historical constructor: bit-identical paths.
+                    Box::new(Cluster::from_spec(inner, *k, *dispatch, seed.wrapping_add(*s0)))
+                } else {
+                    Box::new(Cluster::from_spec_full(
+                        inner,
+                        *k,
+                        *dispatch,
+                        speeds,
+                        seed.wrapping_add(*s0),
+                        None,
+                        None,
+                    ))
+                }
+            }
             PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
                 est.build(),
                 inner.build_seeded(seed.wrapping_add(*s0)),
                 seed.wrapping_add(*s0),
+            )),
+            PolicySpec::Speculate { .. } => self.build_cluster_full(seed, None),
+        }
+    }
+
+    /// Construct the scheduler with fault injection: like
+    /// [`PolicySpec::build_seeded`] but threading `cfg` into the
+    /// cluster layer.  Base/Mlfq specs are wrapped as a k=1 cluster so
+    /// every policy in the zoo can run under a fault plan; `Estimated`
+    /// wraps its faulty inner.  With an *empty* config this still
+    /// resolves to plain-mode paths (and the bare-spec wrap is the k=1
+    /// transparent cluster).
+    pub fn build_faulty(
+        &self,
+        seed: u64,
+        cfg: &crate::coordinator::FaultConfig,
+    ) -> Box<dyn Scheduler> {
+        match self {
+            PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
+                est.build(),
+                inner.build_faulty(seed.wrapping_add(*s0), cfg),
+                seed.wrapping_add(*s0),
+            )),
+            _ => self.build_cluster_full(seed, Some(cfg)),
+        }
+    }
+
+    /// Shared lowering for the cluster-shaped builds: peels one
+    /// optional `speculate` layer, then builds the cluster beneath it
+    /// (wrapping non-cluster specs as k=1).
+    fn build_cluster_full(
+        &self,
+        seed: u64,
+        cfg: Option<&crate::coordinator::FaultConfig>,
+    ) -> Box<dyn Scheduler> {
+        let (after, spec) = match self {
+            PolicySpec::Speculate { after, inner } => (Some(*after), inner.as_ref()),
+            other => (None, other),
+        };
+        match spec {
+            PolicySpec::Cluster { k, dispatch, inner, seed: s0, speeds } => {
+                Box::new(Cluster::from_spec_full(
+                    inner,
+                    *k,
+                    *dispatch,
+                    speeds,
+                    seed.wrapping_add(*s0),
+                    cfg,
+                    after,
+                ))
+            }
+            other => Box::new(Cluster::from_spec_full(
+                other,
+                1,
+                Dispatch::RoundRobin,
+                &[],
+                seed,
+                cfg,
+                after,
             )),
         }
     }
@@ -330,7 +449,35 @@ impl PolicySpec {
             PolicySpec::Mlfq { .. } => 1.0,
             PolicySpec::Cluster { k, inner, .. } => *k as f64 * inner.cost_weight(),
             PolicySpec::Estimated { inner, .. } => inner.cost_weight(),
+            PolicySpec::Speculate { inner, .. } => inner.cost_weight(),
         }
+    }
+}
+
+/// Parse a dispatch name (see the module docs for the list).
+fn parse_dispatch(name: &str) -> Result<Dispatch, String> {
+    Ok(match name {
+        "leastwork" => Dispatch::LeastWork,
+        "roundrobin" => Dispatch::RoundRobin,
+        "random" => Dispatch::Random,
+        "jsq" => Dispatch::Jsq,
+        "leasttime" => Dispatch::LeastTime,
+        other => match other.strip_prefix("random").and_then(|d| d.parse::<u32>().ok()) {
+            Some(d) if d >= 2 => Dispatch::RandomD(d),
+            _ => return Err(format!("cluster: unknown dispatch `{other}`")),
+        },
+    })
+}
+
+/// Canonical dispatch rendering (inverse of [`parse_dispatch`]).
+fn dispatch_name(d: Dispatch) -> String {
+    match d {
+        Dispatch::LeastWork => "leastwork".into(),
+        Dispatch::RoundRobin => "roundrobin".into(),
+        Dispatch::Random => "random".into(),
+        Dispatch::Jsq => "jsq".into(),
+        Dispatch::LeastTime => "leasttime".into(),
+        Dispatch::RandomD(d) => format!("random{d}"),
     }
 }
 
@@ -339,17 +486,24 @@ impl fmt::Display for PolicySpec {
         match self {
             PolicySpec::Base(b) => f.write_str(b.name()),
             PolicySpec::Mlfq { levels, q0 } => write!(f, "mlfq(levels={levels},q0={q0})"),
-            PolicySpec::Cluster { k, dispatch, inner, seed } => {
-                let d = match dispatch {
-                    Dispatch::LeastWork => "leastwork",
-                    Dispatch::RoundRobin => "roundrobin",
-                    Dispatch::Random => "random",
-                };
-                write!(f, "cluster(k={k},dispatch={d},inner={inner}")?;
+            PolicySpec::Cluster { k, dispatch, inner, seed, speeds } => {
+                write!(f, "cluster(k={k},dispatch={},inner={inner}", dispatch_name(*dispatch))?;
+                if !speeds.is_empty() {
+                    f.write_str(",speeds=")?;
+                    for (i, s) in speeds.iter().enumerate() {
+                        if i > 0 {
+                            f.write_str(":")?;
+                        }
+                        write!(f, "{s}")?;
+                    }
+                }
                 if *seed != 0 {
                     write!(f, ",seed={seed}")?;
                 }
                 f.write_str(")")
+            }
+            PolicySpec::Speculate { after, inner } => {
+                write!(f, "speculate(after={after},inner={inner})")
             }
             PolicySpec::Estimated { est, inner, seed } => {
                 write!(f, "est(model={}", est.model_name())?;
@@ -503,6 +657,10 @@ impl Scheduler for Estimated {
     fn cancel(&mut self, now: f64, id: u32) -> bool {
         self.inner.cancel(now, id)
     }
+
+    fn fault_stats(&self) -> Option<crate::coordinator::FaultStats> {
+        self.inner.fault_stats()
+    }
 }
 
 #[cfg(test)]
@@ -532,6 +690,11 @@ mod tests {
             "est(model=sampling,fraction=0.05,sigma0=0.5,inner=fspe+ps)",
             "est(model=class,inner=srpte)",
             "cluster(k=2,dispatch=roundrobin,inner=est(model=oracle,inner=psbs))",
+            "cluster(k=4,dispatch=jsq,inner=psbs)",
+            "cluster(k=4,dispatch=random2,inner=las)",
+            "cluster(k=3,dispatch=leasttime,inner=psbs,speeds=4:2:1)",
+            "speculate(after=4,inner=cluster(k=8,dispatch=leastwork,inner=psbs))",
+            "speculate(after=2.5,inner=cluster(k=2,dispatch=jsq,inner=srpte))",
         ] {
             let spec = PolicySpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
             let rendered = spec.to_string();
@@ -545,7 +708,7 @@ mod tests {
     #[test]
     fn random_specs_round_trip_property() {
         fn gen_spec(rng: &mut crate::util::rng::Rng, depth: usize) -> PolicySpec {
-            let pick = rng.below(if depth == 0 { 2 } else { 5 });
+            let pick = rng.below(if depth == 0 { 2 } else { 6 });
             match pick {
                 0 => {
                     let names = ALL_POLICIES;
@@ -555,12 +718,34 @@ mod tests {
                     levels: 1 + rng.below(16) as usize,
                     q0: 0.01 * (1 + rng.below(50)) as f64,
                 },
-                2 | 3 => PolicySpec::Cluster {
-                    k: 1 + rng.below(8) as usize,
-                    dispatch: [Dispatch::LeastWork, Dispatch::RoundRobin, Dispatch::Random]
-                        [rng.below(3) as usize],
+                2 | 3 => {
+                    let k = 1 + rng.below(8) as usize;
+                    // Empty (canonical homogeneous) or a vector with at
+                    // least one non-unit entry — all-1.0 non-empty
+                    // would re-parse to the canonical empty form.
+                    let speeds = if rng.below(2) == 0 {
+                        Vec::new()
+                    } else {
+                        (0..k).map(|i| if i == 0 { 2.0 } else { 0.5 * (1 + rng.below(6)) as f64 }).collect()
+                    };
+                    PolicySpec::Cluster {
+                        k,
+                        dispatch: [
+                            Dispatch::LeastWork,
+                            Dispatch::RoundRobin,
+                            Dispatch::Random,
+                            Dispatch::Jsq,
+                            Dispatch::RandomD(2 + rng.below(3) as u32),
+                            Dispatch::LeastTime,
+                        ][rng.below(6) as usize],
+                        inner: Box::new(gen_spec(rng, depth - 1)),
+                        seed: rng.below(3),
+                        speeds,
+                    }
+                }
+                4 => PolicySpec::Speculate {
+                    after: 0.5 * (1 + rng.below(8)) as f64,
                     inner: Box::new(gen_spec(rng, depth - 1)),
-                    seed: rng.below(3),
                 },
                 _ => PolicySpec::Estimated {
                     est: match rng.below(5) {
@@ -607,6 +792,12 @@ mod tests {
             "est(model=wat,inner=psbs)",
             "cluster(k=2,inner=psbs,bogus=1)",
             "cluster(k=2",
+            "cluster(k=2,dispatch=random1,inner=psbs)",
+            "cluster(k=2,speeds=1:2:3,inner=psbs)",
+            "cluster(k=2,speeds=0:1,inner=psbs)",
+            "cluster(k=2,speeds=fast:1,inner=psbs)",
+            "speculate(after=0,inner=cluster(k=2))",
+            "speculate(after=2,inner=psbs,bogus=1)",
         ] {
             assert!(PolicySpec::parse(bad).is_err(), "`{bad}` should not parse");
         }
@@ -621,7 +812,13 @@ mod tests {
                 dispatch: Dispatch::LeastWork,
                 inner: Box::new(PolicySpec::psbs()),
                 seed: 0,
+                speeds: Vec::new(),
             }
+        );
+        // All-unit speeds normalize to the canonical empty form.
+        assert_eq!(
+            PolicySpec::parse("cluster(k=2,speeds=1:1)").unwrap(),
+            PolicySpec::parse("cluster(k=2)").unwrap()
         );
         assert_eq!(PolicySpec::parse("mlfq(levels=8,q0=0.05)").unwrap().to_string(), "mlfq(levels=8,q0=0.05)");
     }
@@ -652,6 +849,27 @@ mod tests {
         // Deterministic per seed.
         let c2 = run(noisy.build().as_mut(), &jobs).completion;
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn speculate_spec_builds_and_completes_everything() {
+        let cfg = SynthConfig::default().with_njobs(400);
+        let jobs = crate::workload::synthesize(&cfg, 17);
+        let spec: PolicySpec = "speculate(after=3,inner=cluster(k=4,inner=psbs))".into();
+        let mut s = spec.build_seeded(11);
+        let r = run(s.as_mut(), &jobs);
+        assert!(r.completion.iter().all(|x| x.is_finite()));
+        assert!(s.fault_stats().is_some(), "speculation layer must report stats");
+    }
+
+    #[test]
+    fn faulty_build_with_empty_config_stays_plain_for_every_policy() {
+        let empty = crate::coordinator::FaultConfig::default();
+        for name in ALL_POLICIES {
+            let spec = PolicySpec::parse(name).unwrap();
+            let s = spec.build_faulty(3, &empty);
+            assert!(s.fault_stats().is_none(), "{name}: empty config must stay plain");
+        }
     }
 
     #[test]

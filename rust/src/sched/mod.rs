@@ -16,7 +16,15 @@
 //! bookkeeping … to handle jobs that complete even when they are not
 //! scheduled (e.g. … after being killed)" — so `coordinator::Service`
 //! kills work across the whole zoo (property-tested under churn in
-//! `rust/tests/cancellation.rs`).  [`late_set`] is the shared engine
+//! `rust/tests/cancellation.rs`).  The same `cancel` path is what
+//! server **crashes** ride: under a `coordinator::FaultPlan` the
+//! cluster cancels every copy on the crashed server (attained work
+//! lost — LAS/MLFQ levels, FSP virtual shares and late-set membership
+//! all reset for the re-dispatched attempt, which arrives as a fresh
+//! job) and retries it per `coordinator::RetryPolicy` until it
+//! completes or is accounted lost; disciplines need no fault-specific
+//! code, and `completions + lost == arrivals` is conserved for every
+//! row of the table above (`rust/tests/faults.rs`).  [`late_set`] is the shared engine
 //! behind the error-tolerant disciplines' late sets — O(log |L|)
 //! membership (plus O(#levels) level positioning in Las mode) and
 //! O(1) per-event reads, replacing the old flat O(|L|) folds.

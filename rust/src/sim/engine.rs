@@ -37,16 +37,54 @@ impl SimResult {
     pub fn slowdowns(&self, jobs: &[Job]) -> Vec<f64> {
         jobs.iter().map(|j| j.slowdown(self.completion[j.id as usize])).collect()
     }
+
+    /// Number of jobs that actually completed (lost jobs from
+    /// [`run_to_drain`] keep `NaN` completion times).
+    pub fn completed(&self) -> usize {
+        self.completion.iter().filter(|c| c.is_finite()).count()
+    }
+
+    /// Mean sojourn over *completed* jobs only — the survivor MST of a
+    /// fault run.  Identical to [`SimResult::mst`] (same summation
+    /// order) when nothing was lost.
+    pub fn mst_completed(&self, jobs: &[Job]) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for j in jobs {
+            let c = self.completion[j.id as usize];
+            if c.is_finite() {
+                sum += c - j.arrival;
+                n += 1;
+            }
+        }
+        sum / n.max(1) as f64
+    }
 }
 
 /// Run `sched` over `jobs` (sorted by arrival; see `job::validate`).
 pub fn run(sched: &mut dyn Scheduler, jobs: &[Job]) -> SimResult {
-    run_with_observer(sched, jobs, |_, _| {})
+    run_inner(sched, jobs, |_, _| {}, true)
+}
+
+/// Like [`run`], but tolerant of jobs that never complete: fault
+/// injection can drop a job after exhausting its retries, so the loop
+/// simply ends when both event streams dry up and lost jobs keep `NaN`
+/// completion times.  Fault-free schedulers behave exactly as under
+/// [`run`] — the stepping code is shared.
+pub fn run_to_drain(sched: &mut dyn Scheduler, jobs: &[Job]) -> SimResult {
+    run_inner(sched, jobs, |_, _| {}, false)
 }
 
 /// Like [`run`], invoking `observe(time, &completion)` on every real
 /// completion — used by the online service and the progress meters.
-pub fn run_with_observer<F>(sched: &mut dyn Scheduler, jobs: &[Job], mut observe: F) -> SimResult
+pub fn run_with_observer<F>(sched: &mut dyn Scheduler, jobs: &[Job], observe: F) -> SimResult
+where
+    F: FnMut(f64, &Completion),
+{
+    run_inner(sched, jobs, observe, true)
+}
+
+fn run_inner<F>(sched: &mut dyn Scheduler, jobs: &[Job], mut observe: F, require_all: bool) -> SimResult
 where
     F: FnMut(f64, &Completion),
 {
@@ -114,9 +152,12 @@ where
             // progress (e.g. LAS regroup, virtual completion); the
             // scheduler's next_event must eventually advance. A cheap
             // sanity check: we cannot process more internal events than
-            // a generous bound without completing anything.
+            // a generous bound without completing anything.  Fault
+            // injection legitimately multiplies events (crashes,
+            // recoveries, retries, speculation deadlines), so the
+            // drain-mode bound is far looser.
             debug_assert!(
-                events < 64 * (jobs.len() as u64 + 4) * 4,
+                events < if require_all { 64 } else { 4096 } * (jobs.len() as u64 + 4) * 4,
                 "internal event storm: {} events, {} completed",
                 events,
                 completed
@@ -128,7 +169,9 @@ where
         }
     }
 
-    debug_assert_eq!(completed, jobs.len(), "not all jobs completed");
+    if require_all {
+        debug_assert_eq!(completed, jobs.len(), "not all jobs completed");
+    }
     SimResult { completion, events }
 }
 

@@ -13,7 +13,7 @@ pub mod engine;
 pub mod job;
 pub mod smallstep;
 
-pub use engine::{run, run_with_observer, SimResult};
+pub use engine::{run, run_to_drain, run_with_observer, SimResult};
 pub use job::{Completion, Job};
 
 /// An event-driven scheduling discipline.
@@ -58,5 +58,13 @@ pub trait Scheduler {
     /// scheduled (e.g. ... after being killed)" of paper §5.2.2.
     fn cancel(&mut self, _now: f64, _id: u32) -> bool {
         false
+    }
+
+    /// Fault-side accounting for composite schedulers that inject
+    /// failures (crashes, retries, speculative copies — see
+    /// [`crate::coordinator::faults`]); `None` for ordinary
+    /// disciplines and for fault-free deployments.
+    fn fault_stats(&self) -> Option<crate::coordinator::faults::FaultStats> {
+        None
     }
 }

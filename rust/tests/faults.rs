@@ -1,0 +1,213 @@
+//! Fault-injection robustness — the PR-6 headline invariant: under ANY
+//! fault schedule every job completes exactly once (counting the
+//! surviving speculative copy), is externally killed, or exhausts its
+//! retries and is accounted lost — no double completions, no leaks —
+//! for every discipline in the zoo.  Plus the standing oracle: an
+//! empty `FaultPlan` leaves the committed scenarios bit-identical
+//! through the planner share path.
+
+use psbs::coordinator::{Cluster, Dispatch, FaultConfig, FaultSpec, RetryPolicy};
+use psbs::scenario::{PolicySpec, Scenario, SweepParams};
+use psbs::sched;
+use psbs::sim::{Job, Scheduler};
+use psbs::util::check::{property, Config};
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+
+fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
+    let n = 4 + size * 2;
+    let w = Weibull::unit_mean(0.4 + rng.u01());
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|i| {
+            t += rng.u01();
+            let s = w.sample(rng).max(1e-6);
+            Job {
+                id: i,
+                arrival: t,
+                size: s,
+                est: (s * err.sample(rng)).max(1e-9),
+                weight: 1.0 / (1.0 + rng.below(3) as f64),
+            }
+        })
+        .collect()
+}
+
+/// Drive a fault-injected cluster manually through arrivals, its own
+/// crash/recover/retry schedule, and an external kill schedule, then
+/// check conservation: every arrival is either completed (exactly
+/// once, never after an external kill), externally killed, or counted
+/// in `FaultStats::lost` — and `active()` drains to 0.
+#[allow(clippy::too_many_arguments)]
+fn run_faulty_with_kills(
+    policy: &str,
+    k: usize,
+    dispatch: Dispatch,
+    spec_after: Option<f64>,
+    cfg: &FaultConfig,
+    jobs: &[Job],
+    kills: &[(f64, u32)],
+) -> Result<(), String> {
+    let spec = PolicySpec::from(policy);
+    let mut s = Cluster::from_spec_full(&spec, k, dispatch, &[], 11, Some(cfg), spec_after);
+    let mut completion = vec![f64::NAN; jobs.len()];
+    let mut killed = vec![false; jobs.len()];
+    let mut done = Vec::new();
+    let mut now = 0.0_f64;
+    let mut next = 0usize;
+    let mut next_kill = 0usize;
+    // Generous progress bound: a hang here should fail loudly, not eat
+    // the CI timeout.
+    for _ in 0..200_000 {
+        let next_arrival = jobs.get(next).map(|j| j.arrival);
+        let next_internal = s.next_event(now);
+        let kill_t = kills.get(next_kill).map(|&(t, _)| t);
+        let mut t = f64::INFINITY;
+        for cand in [next_arrival, next_internal, kill_t].into_iter().flatten() {
+            t = t.min(cand);
+        }
+        if !t.is_finite() {
+            break;
+        }
+        let t = t.max(now);
+        done.clear();
+        s.advance(now, t, &mut done);
+        for c in &done {
+            if !completion[c.id as usize].is_nan() {
+                return Err(format!("{policy}: job {} completed twice", c.id));
+            }
+            if killed[c.id as usize] {
+                return Err(format!("{policy}: externally killed job {} completed", c.id));
+            }
+            completion[c.id as usize] = c.time;
+        }
+        now = t;
+        // Kills land before same-instant arrivals (leader-loop order).
+        while next_kill < kills.len() && kills[next_kill].0 <= now {
+            let victim = kills[next_kill].1;
+            if s.cancel(now, victim) {
+                if completion[victim as usize].is_finite() {
+                    return Err(format!(
+                        "{policy}: cancel({victim}) succeeded after completion"
+                    ));
+                }
+                killed[victim as usize] = true;
+            }
+            next_kill += 1;
+        }
+        while next < jobs.len() && jobs[next].arrival <= now {
+            s.on_arrival(now, &jobs[next]);
+            next += 1;
+        }
+        if next == jobs.len() && next_kill == kills.len() && s.next_event(now).is_none() {
+            break;
+        }
+    }
+    if s.active() != 0 {
+        return Err(format!("{policy}: active() = {} after drain", s.active()));
+    }
+    let stats = s.fault_stats().unwrap_or_default();
+    let completed = completion.iter().filter(|c| c.is_finite()).count();
+    let external = killed.iter().filter(|&&x| x).count();
+    let lost = stats.lost as usize;
+    if completed + external + lost != jobs.len() {
+        return Err(format!(
+            "{policy}: conservation violated: {completed} completed + {external} killed + \
+             {lost} lost != {} arrivals (stats: {stats:?})",
+            jobs.len()
+        ));
+    }
+    Ok(())
+}
+
+/// The headline property: random fault plans x random external kill
+/// schedules x every `ALL_POLICIES` entry (random k, dispatch, and an
+/// occasional speculation threshold).
+#[test]
+fn fault_churn_conservation_all_policies() {
+    property(
+        "fault churn conservation (all policies)",
+        Config { cases: 14, max_size: 16, seed: 0xFA_17 },
+        |rng, size| {
+            let jobs = random_jobs(rng, size, 1.2);
+            let span = jobs.last().unwrap().arrival + 4.0;
+            let nkills = rng.below(1 + jobs.len() as u64 / 4) as usize;
+            let mut kills: Vec<(f64, u32)> = (0..nkills)
+                .map(|_| (rng.u01() * span, rng.below(jobs.len() as u64) as u32))
+                .collect();
+            kills.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let cfg = FaultConfig {
+                spec: FaultSpec {
+                    // Short enough (vs the ~span-length run) that
+                    // crashes actually land mid-run.
+                    mtbf: 2.0 + rng.u01() * 20.0,
+                    mttr: 0.2 + rng.u01() * 2.0,
+                    slowdown: 0.25 + 0.75 * rng.u01(),
+                },
+                retry: RetryPolicy {
+                    max_attempts: 1 + rng.below(4) as u32,
+                    backoff: 0.5 * rng.u01(),
+                },
+                seed: rng.below(1 << 20),
+            };
+            let k = 2 + rng.below(2) as usize;
+            let dispatch = [
+                Dispatch::RoundRobin,
+                Dispatch::LeastWork,
+                Dispatch::Random,
+                Dispatch::Jsq,
+                Dispatch::RandomD(2),
+                Dispatch::LeastTime,
+            ][rng.below(6) as usize];
+            let spec_after = (rng.below(3) == 0).then(|| 1.5 + rng.u01() * 3.0);
+            (jobs, kills, cfg, k, dispatch, spec_after)
+        },
+        |(jobs, kills, cfg, k, dispatch, spec_after)| {
+            for policy in sched::ALL_POLICIES {
+                run_faulty_with_kills(policy, *k, *dispatch, *spec_after, cfg, jobs, kills)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Regression pin: an *empty* `FaultPlan` attached to the committed
+/// `fig6.toml` reproduces the fault-free sweep bit-identically through
+/// the planner share path (the faulty build must collapse to the
+/// original code paths), and its counter tables are identically zero.
+#[test]
+fn empty_fault_plan_reproduces_fig6_bitwise() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/fig6.toml");
+    let clean = Scenario::load(path).expect("load fig6.toml").with_njobs(150);
+    let faulty = clean.clone().with_faults(FaultConfig::default());
+    assert!(faulty.validate().is_ok(), "{:?}", faulty.validate());
+    let p = SweepParams { reps: 1, seed: 42, converge: false };
+    let tc = clean.tables(p, 2, true);
+    let tf = faulty.tables(p, 2, true);
+    let tf_mean: Vec<_> =
+        tf.iter().filter(|t| !t.name.ends_with("_fault_counters")).collect();
+    assert_eq!(tc.len(), tf_mean.len(), "one value table per split point either way");
+    for (a, b) in tc.iter().zip(&tf_mean) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.header, b.header);
+        assert_eq!(a.rows.len(), b.rows.len(), "table {}", a.name);
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            let ba: Vec<u64> = ra.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u64> = rb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb, "table {} drifted under an empty fault plan", a.name);
+        }
+    }
+    let counters: Vec<_> =
+        tf.iter().filter(|t| t.name.ends_with("_fault_counters")).collect();
+    assert_eq!(counters.len(), tc.len(), "one counter table per value table");
+    for t in counters {
+        for row in &t.rows {
+            assert!(
+                row[1..].iter().all(|&v| v == 0.0),
+                "table {}: empty fault plan produced non-zero counters: {row:?}",
+                t.name
+            );
+        }
+    }
+}
