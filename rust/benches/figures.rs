@@ -20,8 +20,14 @@
 //! wall-clock win over the per-cell path at equal thread count (the
 //! sweep-throughput number this PR is accountable for) — and
 //! `fault_replay_overhead`, the cost of running a cluster under a
-//! fault plan relative to the plain path (see BENCH README).  Filter
-//! with `cargo bench --bench figures -- sweep/` for the scaling run
+//! fault plan relative to the plain path (see BENCH README).  PR 7
+//! adds the streaming-engine keys: `stream_throughput_jobs_per_s`
+//! (gated — jobs/s through SynthSource → engine → OnlineMetrics),
+//! `stream_vs_vec_overhead` (dyn-dispatch streaming entry point vs the
+//! monomorphized `run` adapter, informational) and
+//! `trace_cache_speedup` (chunked CSV parse vs `.psbt` binary cache
+//! decode for the same 50k rows, informational).  Filter with
+//! `cargo bench --bench figures -- sweep/` for the scaling run
 //! alone.
 
 use psbs::coordinator::{FaultConfig, FaultSpec};
@@ -122,6 +128,96 @@ fn main() {
         std::hint::black_box(psbs::sim::run_to_drain(s.as_mut(), &jobs).completed());
     });
 
+    // Streaming engine vs the materialized path on an identical 50k-job
+    // workload (jobs synthesized outside the timed region).  `run` is a
+    // monomorphized adapter over the same inner loop, so the mean-time
+    // ratio (`stream_vs_vec_overhead`) isolates what the public
+    // dyn-dispatch streaming entry point costs — informational in
+    // bench-compare, expected near 1.0.
+    const STREAM_JOBS: usize = 50_000;
+    let sjobs = psbs::workload::synthesize(
+        &SynthConfig::default().with_njobs(STREAM_JOBS),
+        7,
+    );
+    {
+        let jobs = sjobs.clone();
+        b.bench_items("sweep/stream/replay_vec/n50k", Some(STREAM_JOBS as u64), move || {
+            let mut s = psbs::sched::by_name("psbs").unwrap();
+            std::hint::black_box(psbs::sim::run(s.as_mut(), &jobs).events);
+        });
+    }
+    {
+        let jobs = sjobs.clone();
+        b.bench_items("sweep/stream/replay_stream/n50k", Some(STREAM_JOBS as u64), move || {
+            let mut s = psbs::sched::by_name("psbs").unwrap();
+            let mut src = psbs::sim::SliceSource::new(&jobs);
+            let mut sink = psbs::sim::NullSink;
+            std::hint::black_box(psbs::sim::run_streaming(s.as_mut(), &mut src, &mut sink).events);
+        });
+    }
+
+    // End-to-end streaming replay throughput: generate 50k jobs on the
+    // fly (O(active) memory — no materialized Vec<Job> anywhere) and
+    // fold them into the online accumulator with two P2 quantile
+    // sketches, exactly the `psbs replay --format bin` hot path.  The
+    // derived `stream_throughput_jobs_per_s` is the gated key: jobs/s
+    // through scheduler + engine + online metrics.
+    {
+        let cfg = SynthConfig::default().with_njobs(STREAM_JOBS);
+        b.bench_items("sweep/stream/synth_replay/n50k", Some(STREAM_JOBS as u64), move || {
+            let mut s = psbs::sched::by_name("psbs").unwrap();
+            let mut src = psbs::workload::SynthSource::new(&cfg, 7);
+            let mut m = psbs::metrics::OnlineMetrics::new().with_quantiles(&[0.5, 0.99]);
+            let stats = psbs::sim::run_streaming(s.as_mut(), &mut src, &mut m);
+            std::hint::black_box((stats.completed, m.count()));
+        });
+    }
+
+    // Trace-cache ingestion: stream 50k validated rows from the CSV
+    // (chunked parser) vs the `.psbt` binary cache of the same rows.
+    // Both files are written once outside the timed region; each
+    // iteration reopens and drains the stream, so the ratio
+    // (`trace_cache_speedup`, csv/bin mean time) is the real
+    // cost-per-replay win of caching — parse + validate vs fixed-width
+    // decode + checksummed header.
+    {
+        use psbs::workload::trace_file::RowStream;
+        let dir = std::env::temp_dir().join("psbs_bench_cache");
+        std::fs::create_dir_all(&dir).expect("bench temp dir");
+        let csv_path = dir.join("rows50k.csv");
+        let bin_path = dir.join("rows50k.psbt");
+        let mut text = String::with_capacity(TRACE_ROWS * 16);
+        text.push_str("arrival,size,weight\n");
+        for i in 0..TRACE_ROWS {
+            text.push_str(&format!("{i}.5,{},{}\n", (i * 7919) % 997 + 1, 1 + i % 3));
+        }
+        std::fs::write(&csv_path, &text).expect("write bench csv");
+        let rows = psbs::workload::trace_file::parse(&text).unwrap();
+        psbs::workload::cache::write_cache(bin_path.to_str().unwrap(), rows)
+            .expect("write bench cache");
+        fn drain(mut s: Box<dyn RowStream>) -> u64 {
+            let mut n = 0u64;
+            while s.next_row().unwrap().is_some() {
+                n += 1;
+            }
+            n
+        }
+        {
+            let p = csv_path.to_str().unwrap().to_string();
+            b.bench_items("sweep/trace_cache/csv/rows50k", Some(TRACE_ROWS as u64), move || {
+                let r = psbs::workload::trace_file::ChunkedCsvReader::open(&p).unwrap();
+                std::hint::black_box(drain(Box::new(r)));
+            });
+        }
+        {
+            let p = bin_path.to_str().unwrap().to_string();
+            b.bench_items("sweep/trace_cache/bin/rows50k", Some(TRACE_ROWS as u64), move || {
+                let r = psbs::workload::cache::CacheReader::open(&p).unwrap();
+                std::hint::black_box(drain(Box::new(r)));
+            });
+        }
+    }
+
     // Derived speedups (when the relevant samples ran — a
     // `cargo bench -- <filter>` may have skipped some).
     let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
@@ -152,6 +248,24 @@ fn main() {
         mean_of("sweep/cluster/fault_replay/n10k"),
     ) {
         derived.push(("fault_replay_overhead".to_string(), faulty / plain));
+    }
+    // Streaming-engine keys.  `stream_throughput_jobs_per_s` is the
+    // gated one (bench-compare fails a >20% drop); the two ratios are
+    // informational.
+    if let Some(s) = b.samples.iter().find(|s| s.name == "sweep/stream/synth_replay/n50k") {
+        derived.push(("stream_throughput_jobs_per_s".to_string(), bench::ops_per_sec(s)));
+    }
+    if let (Some(vec_t), Some(stream_t)) = (
+        mean_of("sweep/stream/replay_vec/n50k"),
+        mean_of("sweep/stream/replay_stream/n50k"),
+    ) {
+        derived.push(("stream_vs_vec_overhead".to_string(), stream_t / vec_t));
+    }
+    if let (Some(csv_t), Some(bin_t)) = (
+        mean_of("sweep/trace_cache/csv/rows50k"),
+        mean_of("sweep/trace_cache/bin/rows50k"),
+    ) {
+        derived.push(("trace_cache_speedup".to_string(), csv_t / bin_t));
     }
     for (k, v) in &derived {
         println!("derived {k} = {v:.2}x");

@@ -74,10 +74,14 @@ usage: psbs <subcommand> [options]
               --policies sweeps a custom policy set — composed specs like cluster(k=4,dispatch=leastwork,inner=psbs) work anywhere
               a bare policy name does; --axis repeats for multi-axis cross-product grids, PARAM in
               shape|sigma|load|timeshape|njobs|beta|alpha, values optional — e.g. --axis sigma=0.25,0.5,1 --axis load=0.7,0.9)
-  replay     --trace FILE --format swim|squid|csv [--policy P] [--sigma E] [--load L] [--seed K]
-             (csv = the scenario-layer trace format: arrival,size[,weight][,estimate] — see scenarios/README.md)
+  replay     --trace FILE --format swim|squid|csv|bin [--policy P] [--sigma E] [--load L] [--seed K] [--njobs N]
+             (csv = the scenario-layer trace format: arrival,size[,weight][,estimate] — see scenarios/README.md;
+              bin = a .psbt binary trace cache (write one with gen-trace --format bin) — replayed through the
+              streaming engine with O(active)-memory online metrics, sized for million-job runs)
   serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
-  gen-trace  --stats facebook|ircache --out FILE [--seed K]
+  gen-trace  --stats facebook|ircache --out FILE [--seed K] [--format swim|csv|bin] [--njobs N]
+             (csv = the scenario-layer arrival,size format; bin = the .psbt binary trace cache; --njobs scales
+              the synthetic trace, stretching its duration so the arrival rate stays at the published level)
   scenario   export <figN|all> [--dir scenarios] [--njobs N]  (dump built-in figure scenarios as .toml files)
   scenario   validate [--dir scenarios] [--njobs N] [--reps R] [--threads T]
              (round-trip every *.toml in --dir through render/parse and smoke-run it at a tiny --njobs;
@@ -134,10 +138,10 @@ fn cmd_simulate(a: &Args) -> Result<(), String> {
     println!("median slowdown       {:.4}", psbs::stats::quantile_sorted(&all_slow, 0.5));
     println!("p99 slowdown          {:.4}", psbs::stats::quantile_sorted(&all_slow, 0.99));
     println!("max slowdown          {:.4}", all_slow.last().copied().unwrap_or(f64::NAN));
-    println!(
-        "frac slowdown > 100   {:.4}",
-        psbs::metrics::frac_above(&all_slow, 100.0)
-    );
+    match psbs::metrics::frac_above(&all_slow, 100.0) {
+        Some(f) => println!("frac slowdown > 100   {f:.4}"),
+        None => println!("frac slowdown > 100   n/a (no completions)"),
+    }
     Ok(())
 }
 
@@ -477,14 +481,25 @@ fn cmd_replay(a: &Args) -> Result<(), String> {
     let sigma = a.get_f64("sigma", 0.5)?;
     let load = a.get_f64("load", 0.9)?;
     let seed = a.get_u64("seed", 42)?;
+    let njobs = match a.get_opt("njobs") {
+        None => usize::MAX,
+        Some(n) => n.parse::<usize>().map_err(|_| "--njobs: integer".to_string())?,
+    };
     a.check_unknown()?;
+
+    // A binary trace cache replays through the streaming engine: rows
+    // decode straight from the fixed-width file, jobs exist only while
+    // in flight, and the metrics fold online — memory stays O(active)
+    // for million-job caches.
+    if format == "bin" {
+        return replay_streaming(&trace, &policy, njobs, load, sigma, seed);
+    }
 
     // The scenario-layer CSV format parses with hard errors and
     // carries optional weight/estimate columns; SWIM/squid keep their
     // lenient skip-malformed-rows behavior (real logs are dirty).
     let jobs = if format == "csv" {
-        psbs::workload::trace_file::TraceFile::load(&trace)?
-            .to_jobs(usize::MAX, load, sigma, seed)
+        psbs::workload::trace_file::TraceFile::load(&trace)?.to_jobs(njobs, load, sigma, seed)
     } else {
         let recs = traces::load_file(&trace, &format).map_err(|e| e.to_string())?;
         if recs.is_empty() {
@@ -505,8 +520,54 @@ fn cmd_replay(a: &Args) -> Result<(), String> {
     println!("MST                 {:.4}", res.mst(&jobs));
     println!("median slowdown     {:.4}", psbs::stats::quantile(&slow, 0.5));
     println!("p99 slowdown        {:.4}", psbs::stats::quantile(&slow, 0.99));
-    println!("frac slowdown > 100 {:.4}", psbs::metrics::frac_above(&slow, 100.0));
+    match psbs::metrics::frac_above(&slow, 100.0) {
+        Some(f) => println!("frac slowdown > 100 {f:.4}"),
+        None => println!("frac slowdown > 100 n/a (no completions)"),
+    }
     println!("sim wall time       {wall:.1?} ({:.0} jobs/s)", jobs.len() as f64 / wall.as_secs_f64());
+    Ok(())
+}
+
+/// `psbs replay --format bin`: stream a `.psbt` binary trace cache
+/// through [`sim::run_streaming`] with an
+/// [`psbs::metrics::OnlineMetrics`] sink — no job vector, no
+/// completion vector, no slowdown vector.  This is the bounded-memory
+/// replay the tier-1 `streaming-smoke` gate runs at 10⁶ jobs.
+fn replay_streaming(
+    trace: &str,
+    policy: &str,
+    njobs: usize,
+    load: f64,
+    sigma: f64,
+    seed: u64,
+) -> Result<(), String> {
+    use psbs::metrics::OnlineMetrics;
+    use psbs::workload::cache::CacheReader;
+    use psbs::workload::trace_file::TraceJobSource;
+
+    let reader = CacheReader::open(trace)?;
+    let mut source = TraceJobSource::new(reader, njobs, load, sigma, seed)
+        .map_err(|e| format!("{trace}: {e}"))?;
+    let mut s = sched::by_name(policy).ok_or_else(|| format!("unknown policy {policy}"))?;
+    let mut m = OnlineMetrics::new().with_quantiles(&[0.5, 0.99]);
+    let t0 = std::time::Instant::now();
+    let stats = sim::run_streaming(s.as_mut(), &mut source, &mut m);
+    let wall = t0.elapsed();
+    println!(
+        "trace={trace} jobs={} policy={policy} sigma={sigma} load={load} (streamed cache)",
+        stats.delivered
+    );
+    println!("MST                 {:.4}", m.mst().unwrap_or(f64::NAN));
+    println!("median slowdown     {:.4}", m.quantile(0.5).unwrap_or(f64::NAN));
+    println!("p99 slowdown        {:.4}", m.quantile(0.99).unwrap_or(f64::NAN));
+    match m.frac_above() {
+        Some(f) => println!("frac slowdown > 100 {f:.4}"),
+        None => println!("frac slowdown > 100 n/a (no completions)"),
+    }
+    println!(
+        "sim wall time       {wall:.1?} ({:.0} jobs/s)",
+        stats.delivered as f64 / wall.as_secs_f64()
+    );
     Ok(())
 }
 
@@ -574,13 +635,60 @@ fn cmd_gen_trace(a: &Args) -> Result<(), String> {
     let stats_name = a.get("stats", "facebook");
     let out = a.get_opt("out").ok_or("missing --out FILE")?;
     let seed = a.get_u64("seed", 42)?;
+    let format = a.get("format", "swim");
+    let njobs = match a.get_opt("njobs") {
+        None => None,
+        Some(n) => Some(n.parse::<usize>().map_err(|_| "--njobs: integer".to_string())?),
+    };
     a.check_unknown()?;
-    let stats = traces::TraceName::from_name(&stats_name)
+    let mut stats = *traces::TraceName::from_name(&stats_name)
         .ok_or_else(|| format!("unknown stats preset: {stats_name}"))?
         .stats();
-    let recs = traces::synth_trace(stats, seed);
-    traces::write_swim(&recs, &out).map_err(|e| e.to_string())?;
-    println!("wrote {} records to {out}", recs.len());
+    if let Some(n) = njobs {
+        if n == 0 {
+            return Err("--njobs must be >= 1".into());
+        }
+        // Stretch the duration proportionally so the synthetic arrival
+        // rate (and thus the offered load at replay) stays at the
+        // published level instead of compressing N jobs into the
+        // original span.
+        stats.duration_s *= n as f64 / stats.jobs.max(1) as f64;
+        stats.jobs = n;
+    }
+    let recs = traces::synth_trace(&stats, seed);
+    match format.as_str() {
+        "swim" => traces::write_swim(&recs, &out).map_err(|e| e.to_string())?,
+        // The scenario-layer CSV trace format (arrival,size) — what
+        // `replay --format csv` and `kind = "trace"` scenario files
+        // read back.
+        "csv" => {
+            use std::io::Write;
+            let f = std::fs::File::create(&out).map_err(|e| format!("creating {out}: {e}"))?;
+            let mut w = std::io::BufWriter::new(f);
+            writeln!(w, "arrival,size").map_err(|e| format!("writing {out}: {e}"))?;
+            for r in &recs {
+                writeln!(w, "{},{}", r.submit, r.bytes)
+                    .map_err(|e| format!("writing {out}: {e}"))?;
+            }
+            w.flush().map_err(|e| format!("writing {out}: {e}"))?;
+        }
+        // The binary trace cache — what `replay --format bin` streams.
+        "bin" => {
+            use psbs::workload::cache::write_cache;
+            use psbs::workload::trace_file::TraceRow;
+            write_cache(
+                &out,
+                recs.iter().map(|r| TraceRow {
+                    arrival: r.submit,
+                    size: r.bytes,
+                    weight: 1.0,
+                    est: None,
+                }),
+            )?;
+        }
+        other => return Err(format!("unknown --format {other} (swim|csv|bin)")),
+    }
+    println!("wrote {} records to {out} ({format})", recs.len());
     Ok(())
 }
 

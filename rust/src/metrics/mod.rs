@@ -9,6 +9,9 @@
 
 use crate::sim::{Job, SimResult};
 
+pub mod online;
+pub use online::{OnlineMetrics, WindowSnapshot};
+
 /// Number of equal-count size classes for conditional slowdown (§7.5:
 /// "binning them into 100 job classes having similar size and
 /// containing the same number of jobs").
@@ -63,18 +66,26 @@ pub fn bin_indices(jobs: &[Job], bins: usize) -> Vec<i32> {
 }
 
 /// ECDF of slowdowns evaluated at `thresholds` (Figs. 4 and 8):
-/// fraction of jobs with slowdown <= t.
-pub fn slowdown_ecdf(slowdowns: &[f64], thresholds: &[f64]) -> Vec<f64> {
+/// fraction of jobs with slowdown <= t.  `None` when there are no
+/// samples — an all-zero "ECDF" from an empty population (e.g. every
+/// job lost under faults) would be indistinguishable from a real one
+/// and must be surfaced as absent, not as zeros.
+pub fn slowdown_ecdf(slowdowns: &[f64], thresholds: &[f64]) -> Option<Vec<f64>> {
+    if slowdowns.is_empty() {
+        return None;
+    }
     let mut sorted = slowdowns.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = sorted.len().max(1) as f64;
-    thresholds
-        .iter()
-        .map(|&t| {
-            let cnt = sorted.partition_point(|&s| s <= t);
-            cnt as f64 / n
-        })
-        .collect()
+    let n = sorted.len() as f64;
+    Some(
+        thresholds
+            .iter()
+            .map(|&t| {
+                let cnt = sorted.partition_point(|&s| s <= t);
+                cnt as f64 / n
+            })
+            .collect(),
+    )
 }
 
 /// Log-spaced threshold grid covering slowdown 1..10^`decades`
@@ -87,9 +98,14 @@ pub fn log_thresholds(points: usize, decades: f64) -> Vec<f64> {
 
 /// Fraction of jobs with slowdown above `limit` (the paper's headline
 /// fairness number: "jobs with slowdown larger than 100 are around 1%
-/// for FSPE and around 8% for SRPTE").
-pub fn frac_above(slowdowns: &[f64], limit: f64) -> f64 {
-    slowdowns.iter().filter(|&&s| s > limit).count() as f64 / slowdowns.len().max(1) as f64
+/// for FSPE and around 8% for SRPTE").  `None` when there are no
+/// samples: a silent `0.0` there would read as "no job was ever slow"
+/// when in fact no job was ever *measured*.
+pub fn frac_above(slowdowns: &[f64], limit: f64) -> Option<f64> {
+    if slowdowns.is_empty() {
+        return None;
+    }
+    Some(slowdowns.iter().filter(|&&s| s > limit).count() as f64 / slowdowns.len() as f64)
 }
 
 #[cfg(test)]
@@ -144,8 +160,15 @@ mod tests {
 
     #[test]
     fn ecdf_basics() {
-        let e = slowdown_ecdf(&[1.0, 2.0, 4.0, 8.0], &[1.0, 3.0, 10.0]);
+        let e = slowdown_ecdf(&[1.0, 2.0, 4.0, 8.0], &[1.0, 3.0, 10.0]).unwrap();
         assert_eq!(e, vec![0.25, 0.5, 1.0]);
+    }
+
+    /// Empty populations yield `None`, not a misleading all-zero row.
+    #[test]
+    fn ecdf_and_frac_above_reject_empty_input() {
+        assert_eq!(slowdown_ecdf(&[], &[1.0, 3.0]), None);
+        assert_eq!(frac_above(&[], 100.0), None);
     }
 
     #[test]
@@ -158,6 +181,6 @@ mod tests {
 
     #[test]
     fn frac_above_counts_tail() {
-        assert_eq!(frac_above(&[1.0, 50.0, 150.0, 200.0], 100.0), 0.5);
+        assert_eq!(frac_above(&[1.0, 50.0, 150.0, 200.0], 100.0), Some(0.5));
     }
 }

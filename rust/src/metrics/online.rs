@@ -1,0 +1,271 @@
+//! Streaming metrics accumulation — the O(active)-memory output side
+//! of the million-job engine.
+//!
+//! [`OnlineMetrics`] is a [`crate::sim::CompletionSink`]: it watches
+//! arrivals to learn each job's arrival time and true size (held only
+//! while the job is in flight), and folds every completion into
+//! - Neumaier-compensated sums for MST and mean slowdown (a naive f64
+//!   sum drifts over 10⁷+ terms; see [`crate::stats::CompensatedSum`]),
+//! - a tail counter (`slowdown > limit`, matching
+//!   [`crate::metrics::frac_above`]'s strict comparison),
+//! - one [`crate::stats::P2Quantile`] sketch per requested slowdown
+//!   quantile (O(1) per observation, no sample retention),
+//! - optional fixed-size windows of the sojourn/slowdown means
+//!   ([`WindowSnapshot`]) for long-horizon drift plots.
+//!
+//! All read accessors return `Option`: an accumulator that saw zero
+//! completions reports `None` rather than fabricating zeros — the same
+//! empty-population discipline as `frac_above`/`slowdown_ecdf`.
+
+use std::collections::HashMap;
+
+use crate::sim::{Completion, CompletionSink, Job};
+use crate::stats::{CompensatedSum, P2Quantile};
+
+/// Default tail threshold — the paper's "slowdown larger than 100"
+/// headline number.
+pub const DEFAULT_TAIL_LIMIT: f64 = 100.0;
+
+/// Means over one completed window of `window` jobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSnapshot {
+    /// Completion time of the window's last job.
+    pub end_time: f64,
+    /// Completions in the window (== the configured window size).
+    pub jobs: u64,
+    /// Mean sojourn over the window.
+    pub mean_sojourn: f64,
+    /// Mean slowdown over the window.
+    pub mean_slowdown: f64,
+}
+
+/// Streaming MST / slowdown accumulator with bounded memory:
+/// O(active jobs) for the in-flight map plus O(1) per tracked
+/// quantile, regardless of how many jobs flow through.
+#[derive(Debug, Clone)]
+pub struct OnlineMetrics {
+    /// In-flight jobs: id -> (arrival, true size).
+    active: HashMap<u32, (f64, f64)>,
+    count: u64,
+    sojourn: CompensatedSum,
+    slowdown: CompensatedSum,
+    tail_limit: f64,
+    tail: u64,
+    /// Tracked quantile levels, parallel to `sketches`.
+    qs: Vec<f64>,
+    sketches: Vec<P2Quantile>,
+    /// Window size in completions; 0 disables windowing.
+    window: u64,
+    win_sojourn: CompensatedSum,
+    win_slowdown: CompensatedSum,
+    win_count: u64,
+    snapshots: Vec<WindowSnapshot>,
+}
+
+impl Default for OnlineMetrics {
+    fn default() -> Self {
+        OnlineMetrics::new()
+    }
+}
+
+impl OnlineMetrics {
+    /// Accumulator with the default tail limit, no tracked quantiles
+    /// and no windowing.
+    pub fn new() -> Self {
+        OnlineMetrics {
+            active: HashMap::new(),
+            count: 0,
+            sojourn: CompensatedSum::new(),
+            slowdown: CompensatedSum::new(),
+            tail_limit: DEFAULT_TAIL_LIMIT,
+            tail: 0,
+            qs: Vec::new(),
+            sketches: Vec::new(),
+            window: 0,
+            win_sojourn: CompensatedSum::new(),
+            win_slowdown: CompensatedSum::new(),
+            win_count: 0,
+            snapshots: Vec::new(),
+        }
+    }
+
+    /// Track the given slowdown quantiles (each in (0,1)) via P².
+    pub fn with_quantiles(mut self, qs: &[f64]) -> Self {
+        self.qs = qs.to_vec();
+        self.sketches = qs.iter().map(|&q| P2Quantile::new(q)).collect();
+        self
+    }
+
+    /// Override the tail threshold (default 100).
+    pub fn with_tail_limit(mut self, limit: f64) -> Self {
+        self.tail_limit = limit;
+        self
+    }
+
+    /// Record a [`WindowSnapshot`] every `jobs` completions (0 = off).
+    pub fn with_window(mut self, jobs: u64) -> Self {
+        self.window = jobs;
+        self
+    }
+
+    /// Completions folded in so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Jobs currently in flight (arrived, not yet completed) — the
+    /// memory the accumulator is holding.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Mean sojourn time over completed jobs; `None` before the first
+    /// completion.
+    pub fn mst(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sojourn.value() / self.count as f64)
+    }
+
+    /// Mean slowdown over completed jobs.
+    pub fn mean_slowdown(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.slowdown.value() / self.count as f64)
+    }
+
+    /// Fraction of completed jobs with slowdown strictly above the
+    /// tail limit (same comparison as [`crate::metrics::frac_above`]).
+    pub fn frac_above(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.tail as f64 / self.count as f64)
+    }
+
+    /// The configured tail threshold.
+    pub fn tail_limit(&self) -> f64 {
+        self.tail_limit
+    }
+
+    /// Estimated slowdown quantile for a tracked level `q`; `None` if
+    /// `q` was not requested or nothing completed yet.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let i = self.qs.iter().position(|&x| x == q)?;
+        (self.count > 0).then(|| self.sketches[i].value())
+    }
+
+    /// Completed windows recorded so far (empty when windowing is off
+    /// or fewer than `window` jobs completed).
+    pub fn snapshots(&self) -> &[WindowSnapshot] {
+        &self.snapshots
+    }
+}
+
+impl CompletionSink for OnlineMetrics {
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        self.active.insert(job.id, (job.arrival, job.size));
+    }
+
+    fn on_completion(&mut self, time: f64, c: &Completion) {
+        // A completion for a job this sink never saw arrive would make
+        // every mean silently wrong — refuse it loudly in debug runs,
+        // skip it in release (the engine's own contract makes this
+        // unreachable when the sink is attached for the whole run).
+        let Some((arrival, size)) = self.active.remove(&c.id) else {
+            debug_assert!(false, "completion for unseen job {}", c.id);
+            return;
+        };
+        let sojourn = time - arrival;
+        let slow = sojourn / size;
+        self.count += 1;
+        self.sojourn.add(sojourn);
+        self.slowdown.add(slow);
+        if slow > self.tail_limit {
+            self.tail += 1;
+        }
+        for s in &mut self.sketches {
+            s.observe(slow);
+        }
+        if self.window > 0 {
+            self.win_sojourn.add(sojourn);
+            self.win_slowdown.add(slow);
+            self.win_count += 1;
+            if self.win_count == self.window {
+                self.snapshots.push(WindowSnapshot {
+                    end_time: time,
+                    jobs: self.win_count,
+                    mean_sojourn: self.win_sojourn.value() / self.win_count as f64,
+                    mean_slowdown: self.win_slowdown.value() / self.win_count as f64,
+                });
+                self.win_sojourn.reset();
+                self.win_slowdown.reset();
+                self.win_count = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{self, SliceSource};
+    use crate::workload::{synthesize, SynthConfig};
+
+    fn stream_metrics(policy: &str, jobs: &[crate::sim::Job], m: &mut OnlineMetrics) {
+        let mut sched = crate::sched::by_name(policy).unwrap();
+        let mut src = SliceSource::new(jobs);
+        sim::run_streaming(sched.as_mut(), &mut src, m);
+    }
+
+    #[test]
+    fn empty_accumulator_reports_none() {
+        let m = OnlineMetrics::new().with_quantiles(&[0.5]);
+        assert_eq!(m.count(), 0);
+        assert_eq!(m.mst(), None);
+        assert_eq!(m.mean_slowdown(), None);
+        assert_eq!(m.frac_above(), None);
+        assert_eq!(m.quantile(0.5), None);
+        assert_eq!(m.quantile(0.9), None, "untracked quantile");
+    }
+
+    #[test]
+    fn matches_materialized_metrics() {
+        let jobs = synthesize(&SynthConfig::default().with_njobs(2_000).with_sigma(0.5), 11);
+        let mut sched = crate::sched::by_name("psbs").unwrap();
+        let r = sim::run(sched.as_mut(), &jobs);
+        let slows = r.slowdowns(&jobs);
+
+        let mut m = OnlineMetrics::new().with_quantiles(&[0.5, 0.99]);
+        stream_metrics("psbs", &jobs, &mut m);
+
+        assert_eq!(m.count(), jobs.len() as u64);
+        assert_eq!(m.active_len(), 0, "everything completed");
+        // Summation order differs (completion order vs id order) but
+        // the compensated sums agree to ~eps.
+        let mst = m.mst().unwrap();
+        assert!((mst - r.mst(&jobs)).abs() <= 1e-9 * mst.abs().max(1.0));
+        // Tail fraction is an exact count — must match bitwise.
+        assert_eq!(m.frac_above(), crate::metrics::frac_above(&slows, 100.0));
+        // P2 sketches track the exact retained-sample quantiles.
+        for q in [0.5, 0.99] {
+            let exact = crate::stats::quantile(&slows, q);
+            let est = m.quantile(q).unwrap();
+            assert!(
+                (est - exact).abs() / exact.abs().max(1e-9) < 0.15,
+                "q={q}: sketch {est} exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn windows_partition_the_run() {
+        let jobs = synthesize(&SynthConfig::default().with_njobs(1_000), 3);
+        let mut m = OnlineMetrics::new().with_window(100);
+        stream_metrics("fifo", &jobs, &mut m);
+        assert_eq!(m.snapshots().len(), 10);
+        assert!(m.snapshots().iter().all(|w| w.jobs == 100));
+        let mut last = f64::NEG_INFINITY;
+        for w in m.snapshots() {
+            assert!(w.end_time > last, "windows advance in time");
+            assert!(w.mean_sojourn.is_finite() && w.mean_slowdown >= 1.0 - 1e-12);
+            last = w.end_time;
+        }
+        // Window means recombine to the global mean.
+        let total: f64 = m.snapshots().iter().map(|w| w.mean_sojourn * w.jobs as f64).sum();
+        assert!((total / 1_000.0 - m.mst().unwrap()).abs() < 1e-9);
+    }
+}

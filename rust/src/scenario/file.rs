@@ -10,6 +10,7 @@
 //! ```text
 //! name = "fig6_mst_vs_sigma"      # top-level keys first
 //! metric = "mean"                 # "mean" | "ecdf" | "cond_slowdown"
+//!                                 # | "tail_quantile"
 //!                                 # | "goodput" | "wasted_work" | "restarts"
 //! reps = 30                       # optional per-scenario overrides;
 //! converge = true                 # an explicit CLI flag still wins
@@ -90,6 +91,10 @@ impl Scenario {
             Metric::CondSlowdown { bins } => {
                 s.push_str("metric = \"cond_slowdown\"\n");
                 s.push_str(&format!("bins = {bins}\n"));
+            }
+            Metric::TailQuantile { p } => {
+                s.push_str("metric = \"tail_quantile\"\n");
+                s.push_str(&format!("p = {p}\n"));
             }
             Metric::Fault { output } => {
                 s.push_str(&format!("metric = \"{}\"\n", output.name()));
@@ -357,7 +362,7 @@ impl Doc {
         self.top.check_keys(
             "top level",
             &[
-                "name", "metric", "points", "decades", "tail_above", "bins", "reps",
+                "name", "metric", "points", "decades", "tail_above", "bins", "p", "reps",
                 "converge", "reference",
             ],
         )?;
@@ -378,11 +383,11 @@ impl Doc {
         };
         let metric = match self.top.str("metric")?.unwrap_or("mean") {
             "mean" => {
-                reject(&["points", "decades", "tail_above", "bins"], "mean")?;
+                reject(&["points", "decades", "tail_above", "bins", "p"], "mean")?;
                 Metric::Mean
             }
             "ecdf" => {
-                reject(&["bins"], "ecdf")?;
+                reject(&["bins", "p"], "ecdf")?;
                 Metric::PooledEcdf {
                     points: self.top.usize("points")?.unwrap_or(128),
                     decades: self.top.num("decades")?.unwrap_or(3.0),
@@ -390,11 +395,15 @@ impl Doc {
                 }
             }
             "cond_slowdown" => {
-                reject(&["points", "decades", "tail_above"], "cond_slowdown")?;
+                reject(&["points", "decades", "tail_above", "p"], "cond_slowdown")?;
                 Metric::CondSlowdown { bins: self.top.usize("bins")?.unwrap_or(100) }
             }
+            "tail_quantile" => {
+                reject(&["points", "decades", "tail_above", "bins"], "tail_quantile")?;
+                Metric::TailQuantile { p: self.top.num("p")?.unwrap_or(0.99) }
+            }
             name @ ("goodput" | "wasted_work" | "restarts") => {
-                reject(&["points", "decades", "tail_above", "bins"], name)?;
+                reject(&["points", "decades", "tail_above", "bins", "p"], name)?;
                 Metric::Fault {
                     output: FaultOutput::parse(name)
                         .expect("arm pattern and FaultOutput::parse agree"),
@@ -403,7 +412,7 @@ impl Doc {
             other => {
                 return Err(format!(
                     "unknown metric `{other}` \
-                     (mean|ecdf|cond_slowdown|goodput|wasted_work|restarts)"
+                     (mean|ecdf|cond_slowdown|tail_quantile|goodput|wasted_work|restarts)"
                 ))
             }
         };
@@ -645,6 +654,19 @@ mod tests {
         assert_round_trip(&sc);
         assert!(sc.to_toml().contains("metric = \"cond_slowdown\"\nbins = 100\n"));
 
+        let sc = Scenario::new("tail_like", SynthConfig::default())
+            .policies(&["psbs", "ps"])
+            .metric(Metric::TailQuantile { p: 0.99 });
+        assert_round_trip(&sc);
+        assert!(sc.to_toml().contains("metric = \"tail_quantile\"\np = 0.99\n"));
+        // `p` defaults to 0.99 when omitted.
+        let text = "name = \"t\"\nmetric = \"tail_quantile\"\n\n[workload]\n\
+                    kind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n";
+        match Scenario::parse_toml(text).unwrap().metric {
+            Metric::TailQuantile { p } => assert_eq!(p, 0.99),
+            m => panic!("expected tail_quantile, got {m:?}"),
+        }
+
         let sc = Scenario::new("pinned", SynthConfig::default())
             .axis("sigma", AxisParam::Sigma, &[0.5])
             .policies(&["psbs"])
@@ -801,11 +823,11 @@ mod tests {
                 WorkloadSpec::Synth(c)
             };
             let is_trace = matches!(workload, WorkloadSpec::Trace(_));
-            // Metric: 0 = ecdf, 1 = cond_slowdown, 2 = a fault output,
-            // else mean.  Both pooled metrics restrict axes to split
-            // axes.
-            let metric_kind = rng.below(7);
-            let pooled = metric_kind < 2;
+            // Metric: 0 = ecdf, 1 = cond_slowdown, 2 = tail_quantile,
+            // 3 = a fault output, else mean.  The pooled metrics
+            // restrict axes to split axes.
+            let metric_kind = rng.below(8);
+            let pooled = metric_kind < 3;
             let mut sc = Scenario::with_workload(format!("s{}", rng.below(1000)), workload);
             let axis_pool: &[AxisParam] = if is_trace {
                 &[AxisParam::Sigma, AxisParam::Load, AxisParam::Njobs]
@@ -857,6 +879,11 @@ mod tests {
                     sc = sc.metric(Metric::CondSlowdown { bins: 2 + rng.below(200) as usize });
                 }
                 2 => {
+                    sc = sc.metric(Metric::TailQuantile {
+                        p: 0.05 * (1 + rng.below(19)) as f64,
+                    });
+                }
+                3 => {
                     let output = [
                         FaultOutput::Goodput,
                         FaultOutput::WastedWork,
@@ -951,6 +978,11 @@ mod tests {
             ("ecdf points on cond_slowdown", "name = \"t\"\nmetric = \"cond_slowdown\"\npoints = 9\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("cond bins below 2", "name = \"t\"\nmetric = \"cond_slowdown\"\nbins = 1\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("cond with row axis", "name = \"t\"\nmetric = \"cond_slowdown\"\n\n[workload]\nkind = \"synthetic\"\n\n[[axis]]\nparam = \"sigma\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("tail_quantile p out of range", "name = \"t\"\nmetric = \"tail_quantile\"\np = 1\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("tail_quantile with reference", "name = \"t\"\nmetric = \"tail_quantile\"\nreference = \"ps\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("tail_quantile with row axis", "name = \"t\"\nmetric = \"tail_quantile\"\n\n[workload]\nkind = \"synthetic\"\n\n[[axis]]\nparam = \"sigma\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("ecdf points on tail_quantile", "name = \"t\"\nmetric = \"tail_quantile\"\npoints = 9\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("quantile p on mean", &format!("p = 0.5\n{base}")),
             ("zero reps override", &format!("reps = 0\n{base}")),
             ("non-bool converge", &format!("converge = 3\n{base}")),
             ("trace with both trace and path", "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"facebook\"\npath = \"x.csv\"\n\n[[policy]]\nspec = \"ps\"\n"),

@@ -55,7 +55,7 @@ pub mod spec;
 
 pub use planner::{
     eval_cells, fault_rep_seeded, fault_value_seeded, group_cells, mst_of, mst_of_seeded,
-    slowdowns_of, slowdowns_of_seeded,
+    slowdowns_of, slowdowns_of_seeded, stream_rep_seeded,
 };
 pub use spec::{BasePolicy, Estimated, EstimatorSpec, PolicySpec};
 
@@ -227,6 +227,28 @@ impl WorkloadSpec {
                 }
                 TraceSource::File(f) => f.to_jobs(t.njobs, t.load, t.sigma, rep_seed),
             },
+        }
+    }
+
+    /// A streaming [`crate::sim::JobSource`] for one repetition seed.
+    /// Synthetic configs stream through
+    /// [`crate::workload::SynthSource`] — O(active)-memory job
+    /// production, bit-identical to [`synthesize`].  Trace specs
+    /// already hold their rows in memory (builtin stand-ins are
+    /// bounded, file rows are `Arc`-shared), so they materialize once
+    /// and wrap a [`crate::sim::VecSource`]; the out-of-core trace
+    /// path is `TraceFile::stream_jobs` / the binary cache at the CLI
+    /// replay layer.
+    ///
+    /// [`synthesize`]: WorkloadSpec::synthesize
+    pub fn stream_source(&self, rep_seed: u64) -> Box<dyn crate::sim::JobSource> {
+        match self {
+            WorkloadSpec::Synth(cfg) => {
+                Box::new(crate::workload::SynthSource::new(cfg, rep_seed))
+            }
+            WorkloadSpec::Trace(_) => {
+                Box::new(crate::sim::VecSource::new(self.synthesize(rep_seed)))
+            }
         }
     }
 
@@ -506,6 +528,18 @@ pub enum Metric {
     /// (`--converge` is a scalar-cell notion).  Workload sharing is
     /// structurally a no-op on this path too.
     CondSlowdown { bins: usize },
+    /// One streamed slowdown quantile per policy — the million-job
+    /// engine's bounded-memory tail lens.  Every repetition's
+    /// completions feed one [`metrics::OnlineMetrics`] P² sketch per
+    /// policy through [`crate::sim::run_streaming`]: no pooled
+    /// slowdown population is ever materialized, so memory stays
+    /// O(active jobs) per worker no matter how many jobs the
+    /// repetitions total.  The table has exactly one row, `[p,
+    /// value per policy...]`.  Structurally a pooled-population
+    /// metric: split axes only, no reference, exactly `reps`
+    /// repetitions (the sketch is order-sensitive, so reps run
+    /// serially inside each policy — identical for any thread count).
+    TailQuantile { p: f64 },
 }
 
 /// Which fault-side scalar a [`Metric::Fault`] scenario reports.
@@ -796,6 +830,15 @@ impl Scenario {
                 }
                 Some("cond_slowdown")
             }
+            Metric::TailQuantile { p } => {
+                if !(p > 0.0 && p < 1.0) {
+                    return Err(format!(
+                        "scenario {}: tail_quantile metric needs p in (0, 1), got {p}",
+                        self.name
+                    ));
+                }
+                Some("tail_quantile")
+            }
         };
         if let Some(kind) = pooled_kind {
             if self.axes.iter().any(|a| !a.split) {
@@ -909,6 +952,9 @@ impl Scenario {
                 Metric::CondSlowdown { bins } => {
                     out.push(self.cond_table(name, w, p, threads, bins))
                 }
+                Metric::TailQuantile { p: q } => {
+                    out.push(self.tail_quantile_table(name, w, p, threads, q))
+                }
             }
         }
         out
@@ -1014,10 +1060,16 @@ impl Scenario {
             for slow in runs {
                 pooled.extend(slow);
             }
+            // `frac_above`/`slowdown_ecdf` return `None` on an empty
+            // pooled population (reachable only at `reps = 0`): report
+            // NaN explicitly rather than fabricated zeros.
             if let Some(t) = tail_above {
-                tails.push(metrics::frac_above(&pooled, t));
+                tails.push(metrics::frac_above(&pooled, t).unwrap_or(f64::NAN));
             }
-            ecdfs.push(metrics::slowdown_ecdf(&pooled, &thresholds));
+            ecdfs.push(
+                metrics::slowdown_ecdf(&pooled, &thresholds)
+                    .unwrap_or_else(|| vec![f64::NAN; thresholds.len()]),
+            );
         }
         let header: Vec<String> = ["slowdown"]
             .iter()
@@ -1092,6 +1144,44 @@ impl Scenario {
             }
             t.push(row);
         }
+        t
+    }
+
+    /// The streamed-quantile path ([`Metric::TailQuantile`]): each
+    /// policy runs its repetitions *serially*, feeding every
+    /// completion through one [`metrics::OnlineMetrics`] P² sketch via
+    /// [`crate::sim::run_streaming`] — the sketch's observation order
+    /// is fixed, so the table is identical for any thread count, and
+    /// no pooled slowdown population is ever materialized (memory is
+    /// O(active jobs), not O(reps x njobs)).  Policies fan out across
+    /// threads; `share` is structurally a no-op here like the other
+    /// pooled paths.
+    fn tail_quantile_table(
+        &self,
+        name: String,
+        w: WorkloadSpec,
+        p: SweepParams,
+        threads: usize,
+        q: f64,
+    ) -> Table {
+        let vals = pool::par_map(threads, &self.policies, |(_, spec)| {
+            let mut m = metrics::OnlineMetrics::new().with_quantiles(&[q]);
+            for r in 0..p.reps {
+                let rep_seed = w.rep_seed(p.seed, r);
+                let mut source = w.stream_source(rep_seed);
+                planner::stream_rep_seeded(spec, source.as_mut(), rep_seed, &mut m);
+            }
+            m.quantile(q).unwrap_or(f64::NAN)
+        });
+        let header: Vec<String> = ["p"]
+            .iter()
+            .map(|s| s.to_string())
+            .chain(self.policies.iter().map(|(l, _)| l.clone()))
+            .collect();
+        let mut t = Table::new(name, header);
+        let mut row = vec![q];
+        row.extend(vals);
+        t.push(row);
         t
     }
 }
@@ -1399,6 +1489,68 @@ mod tests {
         assert_eq!(p.reps, 30);
         assert!(p.converge);
         assert_eq!(p.seed, 42);
+    }
+
+    /// Metric::TailQuantile: one-row shape, determinism across
+    /// threads/share (the sketch is fed serially per policy), sanity
+    /// against the exact pooled quantile, and validation of the shared
+    /// pooled-metric constraints plus the p-range check.
+    #[test]
+    fn tail_quantile_scenario_streams_deterministically() {
+        let sc = Scenario::new("t_q", SynthConfig::default().with_njobs(400))
+            .policies(&["ps", "psbs"])
+            .metric(Metric::TailQuantile { p: 0.9 });
+        assert!(sc.validate().is_ok());
+        let p = SweepParams { reps: 2, seed: 5, converge: false };
+        let ts = sc.tables(p, 1, true);
+        assert_eq!(ts.len(), 1);
+        let t = &ts[0];
+        assert_eq!(t.header, vec!["p", "ps", "psbs"]);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], 0.9);
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.tables(p, threads, share)[0].rows[0].iter().map(|v| v.to_bits()).collect()
+        };
+        let base = bits(true, 1);
+        for (share, threads) in [(true, 3), (false, 1), (false, 4)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
+        // The P2 estimate tracks the exact quantile of the pooled
+        // population the sketch saw (~800 observations at q=0.9).
+        let spec: PolicySpec = "psbs".into();
+        let mut pooled = Vec::new();
+        for r in 0..p.reps {
+            let seed = sc.workload.rep_seed(p.seed, r);
+            let jobs = sc.workload.synthesize(seed);
+            pooled.extend(slowdowns_of_seeded(&spec, &jobs, seed));
+        }
+        let exact = crate::stats::quantile(&pooled, 0.9);
+        let est = t.rows[0][2];
+        assert!((est - exact).abs() / exact.abs().max(1e-9) < 0.25, "est {est} exact {exact}");
+        // p outside (0, 1).
+        for bad_p in [0.0, 1.0, -0.5, 1.5] {
+            let bad = Scenario::new("t", SynthConfig::default())
+                .policies(&["ps"])
+                .metric(Metric::TailQuantile { p: bad_p });
+            assert!(bad.validate().is_err(), "p={bad_p}");
+        }
+        // Row axis / reference / converge=true all rejected, like the
+        // other pooled metrics.
+        let bad = Scenario::new("t", SynthConfig::default())
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"])
+            .metric(Metric::TailQuantile { p: 0.5 });
+        assert!(bad.validate().is_err());
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .vs(Reference::Ps)
+            .metric(Metric::TailQuantile { p: 0.5 });
+        assert!(bad.validate().is_err());
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .metric(Metric::TailQuantile { p: 0.5 })
+            .converge_override(true);
+        assert!(bad.validate().is_err());
     }
 
     /// Metric::CondSlowdown: table shape (size + one column per

@@ -31,7 +31,8 @@
 
 use super::{FaultOutput, PolicySpec, Reference, SweepCell, SweepParams, WorkloadSpec};
 use crate::coordinator::{FaultConfig, FaultStats};
-use crate::sim::{self, Job};
+use crate::metrics::OnlineMetrics;
+use crate::sim::{self, Job, JobSource};
 use crate::stats::Repetitions;
 use crate::util::pool;
 use std::collections::HashMap;
@@ -62,6 +63,22 @@ pub fn slowdowns_of(spec: &PolicySpec, jobs: &[Job]) -> Vec<f64> {
 pub fn slowdowns_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> Vec<f64> {
     let mut s = spec.build_seeded(seed);
     sim::run(s.as_mut(), jobs).slowdowns(jobs)
+}
+
+/// Stream one repetition through a shared [`OnlineMetrics`] sink: build
+/// the policy with the repetition seed (like [`mst_of_seeded`]) and run
+/// the streaming engine over `source` — no completion vector, no
+/// slowdown vector, O(active jobs) memory.  The tail-quantile metric
+/// calls this once per (policy, rep), reps in order, so the
+/// order-sensitive P² sketches accumulate deterministically.
+pub fn stream_rep_seeded(
+    spec: &PolicySpec,
+    source: &mut dyn JobSource,
+    seed: u64,
+    m: &mut OnlineMetrics,
+) {
+    let mut s = spec.build_seeded(seed);
+    sim::run_streaming(s.as_mut(), source, m);
 }
 
 /// One fault-injected repetition: build the policy through
@@ -411,6 +428,25 @@ mod tests {
                 eval_cells(p, threads, true, &cells).into_iter().map(f64::to_bits).collect();
             assert_eq!(per_cell, shared, "threads={threads}");
         }
+    }
+
+    /// `stream_rep_seeded` reproduces the materialized run: same job
+    /// count, MST within compensated-summation tolerance (completion
+    /// order vs id order), built from the same repetition seed.
+    #[test]
+    fn streamed_rep_matches_materialized_run() {
+        use crate::metrics::OnlineMetrics;
+        let w: WorkloadSpec = SynthConfig::default().with_njobs(300).into();
+        let spec: PolicySpec = "psbs".into();
+        let seed = w.rep_seed(7, 0);
+        let jobs = w.synthesize(seed);
+        let want = mst_of_seeded(&spec, &jobs, seed);
+        let mut m = OnlineMetrics::new();
+        let mut src = w.stream_source(seed);
+        stream_rep_seeded(&spec, src.as_mut(), seed, &mut m);
+        assert_eq!(m.count(), jobs.len() as u64);
+        let got = m.mst().unwrap();
+        assert!((got - want).abs() <= 1e-9 * want.abs().max(1.0), "got {got} want {want}");
     }
 
     #[test]

@@ -67,49 +67,12 @@ pub enum LateMode {
     Dps,
 }
 
-/// Neumaier-compensated running sum: `add`/`sub` churn accumulates
-/// O(eps) total error instead of O(n·eps) — the drift-proof backing for
-/// the `w_l`/`w_v` weight sums that feed DPS rate denominators on every
+/// Re-exported from [`crate::stats`] (its home since the online
+/// metrics layer began sharing it): the drift-proof backing for the
+/// `w_l`/`w_v` weight sums that feed DPS rate denominators on every
 /// event.  (Recompute-on-empty stays as a second line of defense: the
 /// owners reset the sum whenever their population drains.)
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CompensatedSum {
-    sum: f64,
-    comp: f64,
-}
-
-impl CompensatedSum {
-    pub fn new() -> CompensatedSum {
-        CompensatedSum::default()
-    }
-
-    #[inline]
-    pub fn add(&mut self, x: f64) {
-        let t = self.sum + x;
-        // Neumaier's branch: compensate with whichever operand was
-        // large enough to have absorbed the other's low bits.
-        if self.sum.abs() >= x.abs() {
-            self.comp += (self.sum - t) + x;
-        } else {
-            self.comp += (x - t) + self.sum;
-        }
-        self.sum = t;
-    }
-
-    #[inline]
-    pub fn sub(&mut self, x: f64) {
-        self.add(-x);
-    }
-
-    #[inline]
-    pub fn value(&self) -> f64 {
-        self.sum + self.comp
-    }
-
-    pub fn reset(&mut self) {
-        *self = CompensatedSum::default();
-    }
-}
+pub use crate::stats::CompensatedSum;
 
 /// Service split over one event step (rates are constant inside a
 /// step; both owners recompute it per step).  The single field is the

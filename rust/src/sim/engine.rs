@@ -11,6 +11,7 @@
 //!   or strictly reduces pending internal work.
 
 use super::job::{Completion, Job};
+use super::source::{CompletionSink, JobSource, SliceSource};
 use super::Scheduler;
 
 /// Outcome of one simulation run.
@@ -84,27 +85,67 @@ where
     run_inner(sched, jobs, observe, true)
 }
 
-fn run_inner<F>(sched: &mut dyn Scheduler, jobs: &[Job], mut observe: F, require_all: bool) -> SimResult
-where
-    F: FnMut(f64, &Completion),
-{
-    // The loop below indexes `completion[c.id]` and walks `jobs` as a
-    // time-ordered stream: ids that aren't the dense indices 0..n or
-    // out-of-order arrivals would silently corrupt results (wrong
-    // slots overwritten, arrivals delivered at the wrong times).
-    // Fail fast in debug builds via the shared workload validator.
-    #[cfg(debug_assertions)]
-    super::job::validate(jobs);
+/// Counters from one streaming run (there is no per-job `completion`
+/// vector — that is the whole point; per-job outcomes flow through the
+/// sink as they happen).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamStats {
+    /// Jobs pulled from the source and delivered to the scheduler.
+    pub delivered: u64,
+    /// Real completions observed.
+    pub completed: u64,
+    /// Internal scheduler events processed (profiling — same counter
+    /// as [`SimResult::events`], bit-identical on the same workload).
+    pub events: u64,
+}
 
-    let mut completion = vec![f64::NAN; jobs.len()];
+/// Run `sched` over a streaming arrival `source`, pushing every
+/// completion into `sink`.  Memory is O(active + late) plus whatever
+/// the sink keeps: nothing per-total-job is retained here.  On a
+/// materialized workload this loop is *the same loop* as [`run`] —
+/// `run`/`run_to_drain`/`run_with_observer` are thin adapters over it
+/// (a [`SliceSource`] plus a completion-recording sink), so the two
+/// paths cannot drift apart.
+pub fn run_streaming(
+    sched: &mut dyn Scheduler,
+    source: &mut dyn JobSource,
+    sink: &mut dyn CompletionSink,
+) -> StreamStats {
+    stream_inner(sched, source, sink, true)
+}
+
+/// Streaming analogue of [`run_to_drain`]: tolerates jobs that never
+/// complete (fault injection), ending when both event streams dry up.
+pub fn run_streaming_to_drain(
+    sched: &mut dyn Scheduler,
+    source: &mut dyn JobSource,
+    sink: &mut dyn CompletionSink,
+) -> StreamStats {
+    stream_inner(sched, source, sink, false)
+}
+
+/// The one event loop.  Generic (not `dyn`) over source and sink so
+/// the materialized adapters monomorphize to exactly the direct code
+/// they replaced; the public streaming entry points instantiate it
+/// with trait objects.
+fn stream_inner<S, K>(
+    sched: &mut dyn Scheduler,
+    source: &mut S,
+    sink: &mut K,
+    require_all: bool,
+) -> StreamStats
+where
+    S: JobSource + ?Sized,
+    K: CompletionSink + ?Sized,
+{
     let mut done: Vec<Completion> = Vec::with_capacity(16);
     let mut now = 0.0_f64;
-    let mut next_job = 0usize;
     let mut events: u64 = 0;
-    let mut completed = 0usize;
+    let mut delivered: u64 = 0;
+    let mut completed: u64 = 0;
 
     loop {
-        let next_arrival = jobs.get(next_job).map(|j| j.arrival);
+        let next_arrival = source.peek_arrival();
         let next_internal = sched.next_event(now);
 
         let (t, is_arrival) = match (next_arrival, next_internal) {
@@ -127,24 +168,23 @@ where
         done.clear();
         sched.advance(now, t, &mut done);
         for c in &done {
-            debug_assert!(completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
-            completion[c.id as usize] = c.time;
             completed += 1;
             // The completion's own time, not the event-merge time `t`:
             // schedulers may report completions that landed strictly
             // inside [now, t] (chained sub-EPS completions, composite
-            // schedulers crossing several internal events), and the
-            // recorded results already use `c.time` — the observer must
-            // see the same instant.
-            observe(c.time, c);
+            // schedulers crossing several internal events) — the sink
+            // must see the same instant the recorded results use.
+            sink.on_completion(c.time, c);
         }
 
         now = t;
         if is_arrival {
             // Deliver every arrival at exactly this time.
-            while next_job < jobs.len() && jobs[next_job].arrival <= now {
-                sched.on_arrival(now, &jobs[next_job]);
-                next_job += 1;
+            while matches!(source.peek_arrival(), Some(a) if a <= now) {
+                let job = source.next_job().expect("peeked an arrival but the source is empty");
+                sink.on_arrival(now, &job);
+                sched.on_arrival(now, &job);
+                delivered += 1;
             }
         } else {
             events += 1;
@@ -157,22 +197,64 @@ where
             // recoveries, retries, speculation deadlines), so the
             // drain-mode bound is far looser.
             debug_assert!(
-                events < if require_all { 64 } else { 4096 } * (jobs.len() as u64 + 4) * 4,
+                events < if require_all { 64 } else { 4096 } * (delivered + 4) * 4,
                 "internal event storm: {} events, {} completed",
                 events,
                 completed
             );
         }
 
-        if completed == jobs.len() && next_job == jobs.len() {
+        // Equivalent to the classic `completed == jobs.len() &&
+        // next_job == jobs.len()`: the source is dry exactly when all
+        // n jobs were delivered, and then completed == delivered ⟺
+        // completed == n.
+        if completed == delivered && source.peek_arrival().is_none() {
             break;
         }
     }
 
     if require_all {
-        debug_assert_eq!(completed, jobs.len(), "not all jobs completed");
+        debug_assert_eq!(completed, delivered, "not all jobs completed");
     }
-    SimResult { completion, events }
+    StreamStats { delivered, completed, events }
+}
+
+/// Sink backing the materialized adapters: records each completion
+/// time into the dense per-id vector and forwards to the observer.
+struct Recorder<'a, F> {
+    completion: &'a mut [f64],
+    observe: F,
+}
+
+impl<F: FnMut(f64, &Completion)> CompletionSink for Recorder<'_, F> {
+    fn on_completion(&mut self, time: f64, c: &Completion) {
+        debug_assert!(self.completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
+        self.completion[c.id as usize] = c.time;
+        (self.observe)(time, c);
+    }
+}
+
+fn run_inner<F>(sched: &mut dyn Scheduler, jobs: &[Job], observe: F, require_all: bool) -> SimResult
+where
+    F: FnMut(f64, &Completion),
+{
+    // The recorder indexes `completion[c.id]` and the slice source
+    // walks `jobs` as a time-ordered stream: ids that aren't the dense
+    // indices 0..n or out-of-order arrivals would silently corrupt
+    // results (wrong slots overwritten, arrivals delivered at the
+    // wrong times).  Fail fast in debug builds via the shared
+    // workload validator.
+    #[cfg(debug_assertions)]
+    super::job::validate(jobs);
+
+    let mut completion = vec![f64::NAN; jobs.len()];
+    let mut source = SliceSource::new(jobs);
+    let mut sink = Recorder { completion: &mut completion, observe };
+    let stats = stream_inner(sched, &mut source, &mut sink, require_all);
+    if require_all {
+        debug_assert_eq!(stats.completed as usize, jobs.len(), "not all jobs completed");
+    }
+    SimResult { completion, events: stats.events }
 }
 
 #[cfg(test)]
@@ -341,6 +423,43 @@ mod tests {
                 time, ctime,
                 "observer for job {id} got merge time {time}, completion time {ctime}"
             );
+        }
+    }
+
+    /// Collects completions for streaming-vs-materialized comparisons.
+    struct CollectSink {
+        seen: Vec<(u32, f64)>,
+    }
+
+    impl crate::sim::source::CompletionSink for CollectSink {
+        fn on_completion(&mut self, _time: f64, c: &Completion) {
+            self.seen.push((c.id, c.time));
+        }
+    }
+
+    /// `run_streaming` over a slice source is the same loop as `run`:
+    /// identical completions (bitwise), identical event counter.
+    #[test]
+    fn streaming_matches_run_bitwise() {
+        let jobs = vec![
+            Job::exact(0, 0.0, 2.0),
+            Job::exact(1, 1.0, 1.0),
+            Job::exact(2, 1.0, 0.5),
+            Job::exact(3, 10.0, 3.0),
+        ];
+        let mut a = SerialFifo { queue: Default::default() };
+        let r = run(&mut a, &jobs);
+
+        let mut b = SerialFifo { queue: Default::default() };
+        let mut src = SliceSource::new(&jobs);
+        let mut sink = CollectSink { seen: Vec::new() };
+        let stats = run_streaming(&mut b, &mut src, &mut sink);
+
+        assert_eq!(stats.delivered, jobs.len() as u64);
+        assert_eq!(stats.completed, jobs.len() as u64);
+        assert_eq!(stats.events, r.events);
+        for (id, time) in sink.seen {
+            assert_eq!(r.completion[id as usize].to_bits(), time.to_bits());
         }
     }
 }

@@ -12,9 +12,14 @@
 pub mod engine;
 pub mod job;
 pub mod smallstep;
+pub mod source;
 
-pub use engine::{run, run_to_drain, run_with_observer, SimResult};
+pub use engine::{
+    run, run_streaming, run_streaming_to_drain, run_to_drain, run_with_observer, SimResult,
+    StreamStats,
+};
 pub use job::{Completion, Job};
+pub use source::{CompletionSink, JobSource, NullSink, SliceSource, VecSource};
 
 /// An event-driven scheduling discipline.
 ///

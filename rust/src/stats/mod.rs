@@ -6,6 +6,51 @@
 pub mod quantile;
 pub use quantile::P2Quantile;
 
+/// Neumaier-compensated running sum: `add`/`sub` churn accumulates
+/// O(eps) total error instead of O(n·eps).  Backs the `w_l`/`w_v`
+/// weight sums that feed DPS rate denominators on every event
+/// ([`crate::sched`]'s late-set engine) and the long-horizon MST /
+/// mean-slowdown accumulators of [`crate::metrics::OnlineMetrics`],
+/// where a 10⁷-job naive sum would drift.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompensatedSum {
+    sum: f64,
+    comp: f64,
+}
+
+impl CompensatedSum {
+    pub fn new() -> CompensatedSum {
+        CompensatedSum::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let t = self.sum + x;
+        // Neumaier's branch: compensate with whichever operand was
+        // large enough to have absorbed the other's low bits.
+        if self.sum.abs() >= x.abs() {
+            self.comp += (self.sum - t) + x;
+        } else {
+            self.comp += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    #[inline]
+    pub fn sub(&mut self, x: f64) {
+        self.add(-x);
+    }
+
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.sum + self.comp
+    }
+
+    pub fn reset(&mut self) {
+        *self = CompensatedSum::default();
+    }
+}
+
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -121,6 +166,23 @@ pub fn gamma(x: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compensated_sum_survives_churn() {
+        // 1e16 + many small adds/subs: a naive f64 sum loses every
+        // small term; the compensated value keeps them.
+        let mut s = CompensatedSum::new();
+        s.add(1e16);
+        for _ in 0..1000 {
+            s.add(1.0);
+            s.sub(1.0);
+        }
+        s.add(1.0);
+        s.sub(1e16);
+        assert_eq!(s.value(), 1.0);
+        s.reset();
+        assert_eq!(s.value(), 0.0);
+    }
 
     #[test]
     fn mean_and_stddev() {

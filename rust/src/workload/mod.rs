@@ -1,8 +1,9 @@
 //! Workload generation and trace replay (paper §6.3, §7.8).
 
+pub mod cache;
 pub mod dists;
 pub mod synthetic;
 pub mod trace_file;
 pub mod traces;
 
-pub use synthetic::{synthesize, SizeDist, SynthConfig};
+pub use synthetic::{synthesize, SizeDist, SynthConfig, SynthSource};

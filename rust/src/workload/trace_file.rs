@@ -43,8 +43,9 @@
 
 use super::dists::{Dist, LogNormal};
 use super::synthetic::MIN_SIZE;
-use crate::sim::{job, Job};
+use crate::sim::{job, Job, JobSource};
 use crate::util::rng::Rng;
+use std::io::BufRead;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -80,21 +81,40 @@ impl PartialEq for TraceFile {
 /// Column names, in order; also the accepted header spellings.
 const COLUMNS: [&str; 4] = ["arrival", "size", "weight", "estimate"];
 
-/// Parse trace text.  Errors carry the offending 1-based line number
-/// and are distinct per failure mode (the CLI and the scenario loader
-/// surface them verbatim).
-pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
-    let mut rows: Vec<TraceRow> = Vec::new();
-    let mut ncols: Option<usize> = None;
-    let mut prev_arrival = f64::NEG_INFINITY;
-    for (ln, raw) in text.lines().enumerate() {
-        let ln = ln + 1;
+/// Stateful per-line parser shared by the whole-file [`parse`] and the
+/// chunked [`ChunkedCsvReader`]: header/column-count pinning and the
+/// non-decreasing-arrivals check live here exactly once, so the two
+/// ingestion paths cannot diverge in what they accept or in the
+/// (test-pinned) error strings they produce.
+#[derive(Debug, Clone)]
+pub struct RowParser {
+    ncols: Option<usize>,
+    prev_arrival: f64,
+    rows: u64,
+}
+
+impl Default for RowParser {
+    fn default() -> Self {
+        RowParser::new()
+    }
+}
+
+impl RowParser {
+    pub fn new() -> Self {
+        RowParser { ncols: None, prev_arrival: f64::NEG_INFINITY, rows: 0 }
+    }
+
+    /// Parse one raw line (`ln` is 1-based).  `Ok(None)` for blanks,
+    /// comments and the header; `Ok(Some(row))` for a data row; errors
+    /// carry the offending line number and are distinct per failure
+    /// mode (the CLI and the scenario loader surface them verbatim).
+    pub fn line(&mut self, ln: usize, raw: &str) -> Result<Option<TraceRow>, String> {
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
-            continue;
+            return Ok(None);
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-        if ncols.is_none() && fields[0].parse::<f64>().is_err() {
+        if self.ncols.is_none() && fields[0].parse::<f64>().is_err() {
             // Optional header line: must spell a prefix of COLUMNS of
             // length 2..=4; it then pins the column count for the rest
             // of the file.
@@ -106,10 +126,10 @@ pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
                      `arrival,size[,weight][,estimate]` (numbers) or a matching header"
                 ));
             }
-            ncols = Some(fields.len());
-            continue;
+            self.ncols = Some(fields.len());
+            return Ok(None);
         }
-        let expect = *ncols.get_or_insert(fields.len().clamp(2, 4));
+        let expect = *self.ncols.get_or_insert(fields.len().clamp(2, 4));
         if fields.len() != expect {
             return Err(format!(
                 "line {ln}: malformed row `{line}`: expected {expect} comma-separated \
@@ -134,12 +154,13 @@ pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
         if arrival < 0.0 {
             return Err(format!("line {ln}: arrival must be non-negative, got {arrival}"));
         }
-        if arrival < prev_arrival {
+        if arrival < self.prev_arrival {
             return Err(format!(
-                "line {ln}: arrivals must be non-decreasing ({arrival} after {prev_arrival})"
+                "line {ln}: arrivals must be non-decreasing ({arrival} after {})",
+                self.prev_arrival
             ));
         }
-        prev_arrival = arrival;
+        self.prev_arrival = arrival;
         let size = nums[1];
         if size <= 0.0 {
             return Err(format!("line {ln}: job size must be positive, got {size}"));
@@ -154,12 +175,259 @@ pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
                 return Err(format!("line {ln}: size estimate must be positive, got {e}"));
             }
         }
-        rows.push(TraceRow { arrival, size, weight, est });
+        self.rows += 1;
+        Ok(Some(TraceRow { arrival, size, weight, est }))
     }
-    if rows.is_empty() {
-        return Err("trace has no data rows".to_string());
+
+    /// End-of-input check: a trace with no data rows is an error.
+    pub fn finish(&self) -> Result<(), String> {
+        if self.rows == 0 {
+            return Err("trace has no data rows".to_string());
+        }
+        Ok(())
     }
+}
+
+/// Parse trace text (fully materialized).  Errors carry the offending
+/// 1-based line number — see [`RowParser::line`].
+pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
+    let mut rows: Vec<TraceRow> = Vec::new();
+    let mut p = RowParser::new();
+    for (ln, raw) in text.lines().enumerate() {
+        if let Some(row) = p.line(ln + 1, raw)? {
+            rows.push(row);
+        }
+    }
+    p.finish()?;
     Ok(rows)
+}
+
+/// An arrival-ordered stream of validated trace rows that supports a
+/// second pass — the shape the streaming replay path consumes, whether
+/// the rows come from chunked CSV parsing ([`ChunkedCsvReader`]), the
+/// binary cache ([`crate::workload::cache::CacheReader`]) or memory
+/// ([`SliceRows`]).
+pub trait RowStream {
+    /// Next validated row, or `Ok(None)` at end of stream.
+    fn next_row(&mut self) -> Result<Option<TraceRow>, String>;
+    /// Reset to the first row (the normalization pre-pass rewinds once).
+    fn rewind(&mut self) -> Result<(), String>;
+}
+
+/// Chunked CSV trace reader: a fixed-size read buffer over the file,
+/// one [`TraceRow`] at a time — O(buffer) memory however long the
+/// trace, accepting exactly what [`parse`] accepts and failing with
+/// the same line-numbered errors (prefixed with the path, matching
+/// [`TraceFile::load`]).
+pub struct ChunkedCsvReader {
+    reader: std::io::BufReader<std::fs::File>,
+    parser: RowParser,
+    path: String,
+    line: String,
+    ln: usize,
+    eof: bool,
+}
+
+/// Read-buffer size for [`ChunkedCsvReader`] — the "chunk".
+const CSV_CHUNK: usize = 64 * 1024;
+
+impl ChunkedCsvReader {
+    /// Open a trace file for streaming.  A missing or unreadable file
+    /// is the same distinct error [`TraceFile::load`] produces.
+    pub fn open(path: &str) -> Result<Self, String> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| format!("reading trace file {path}: {e}"))?;
+        Ok(ChunkedCsvReader {
+            reader: std::io::BufReader::with_capacity(CSV_CHUNK, file),
+            parser: RowParser::new(),
+            path: path.to_string(),
+            line: String::new(),
+            ln: 0,
+            eof: false,
+        })
+    }
+}
+
+impl RowStream for ChunkedCsvReader {
+    fn next_row(&mut self) -> Result<Option<TraceRow>, String> {
+        loop {
+            if self.eof {
+                return Ok(None);
+            }
+            self.line.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.line)
+                .map_err(|e| format!("reading trace file {}: {e}", self.path))?;
+            if n == 0 {
+                self.eof = true;
+                self.parser.finish().map_err(|e| format!("{}: {e}", self.path))?;
+                return Ok(None);
+            }
+            self.ln += 1;
+            match self.parser.line(self.ln, &self.line) {
+                Ok(Some(row)) => return Ok(Some(row)),
+                Ok(None) => continue,
+                Err(e) => return Err(format!("{}: {e}", self.path)),
+            }
+        }
+    }
+
+    fn rewind(&mut self) -> Result<(), String> {
+        use std::io::Seek;
+        self.reader
+            .seek(std::io::SeekFrom::Start(0))
+            .map_err(|e| format!("reading trace file {}: {e}", self.path))?;
+        self.parser = RowParser::new();
+        self.ln = 0;
+        self.eof = false;
+        Ok(())
+    }
+}
+
+/// [`RowStream`] over rows already in memory (a loaded [`TraceFile`]).
+pub struct SliceRows {
+    rows: Arc<Vec<TraceRow>>,
+    next: usize,
+}
+
+impl SliceRows {
+    pub fn new(rows: Arc<Vec<TraceRow>>) -> Self {
+        SliceRows { rows, next: 0 }
+    }
+}
+
+impl RowStream for SliceRows {
+    fn next_row(&mut self) -> Result<Option<TraceRow>, String> {
+        let r = self.rows.get(self.next).copied();
+        if r.is_some() {
+            self.next += 1;
+        }
+        Ok(r)
+    }
+    fn rewind(&mut self) -> Result<(), String> {
+        self.next = 0;
+        Ok(())
+    }
+}
+
+/// Streaming analogue of [`TraceFile::to_jobs`]: a [`JobSource`] that
+/// applies the identical njobs-cap / §7.8 load-rescaling / sigma
+/// re-estimation normalization while holding O(1) state.  Construction
+/// makes one aggregation pre-pass over the (capped) stream to fix the
+/// service speed and time origin — the same row-order sums `to_jobs`
+/// computes — then rewinds; jobs are bit-identical to the materialized
+/// path (pinned by `rust/tests/streaming.rs`).
+pub struct TraceJobSource<R: RowStream> {
+    stream: R,
+    njobs: usize,
+    produced: usize,
+    speed: f64,
+    t0: f64,
+    sigma: f64,
+    err: LogNormal,
+    err_rng: Rng,
+    peeked: Option<Job>,
+}
+
+impl<R: RowStream> TraceJobSource<R> {
+    pub fn new(
+        mut stream: R,
+        njobs: usize,
+        load: f64,
+        sigma: f64,
+        seed: u64,
+    ) -> Result<Self, String> {
+        assert!(load > 0.0, "trace load normalization requires load > 0, got {load}");
+        // Aggregation pre-pass, in row order (f64 summation order is
+        // part of the bit-identity contract with `to_jobs`).
+        let mut rows = 0usize;
+        let mut total = 0.0f64;
+        let mut t0 = 0.0f64;
+        let mut last = 0.0f64;
+        while rows < njobs {
+            match stream.next_row()? {
+                Some(r) => {
+                    if rows == 0 {
+                        t0 = r.arrival;
+                    }
+                    total += r.size;
+                    last = r.arrival;
+                    rows += 1;
+                }
+                None => break,
+            }
+        }
+        if rows == 0 {
+            return Err("trace replays zero rows".to_string());
+        }
+        let span = (last - t0).max(1e-9);
+        // load = total_work / (speed * span)  =>  speed = total / (span*load)
+        let speed = total / (span * load);
+        stream.rewind()?;
+        Ok(TraceJobSource {
+            stream,
+            njobs: rows,
+            produced: 0,
+            speed,
+            t0,
+            sigma,
+            err: LogNormal::error_model(sigma),
+            err_rng: Rng::new(seed).substream(3),
+            peeked: None,
+        })
+    }
+
+    /// Jobs this source will produce in total (the capped row count).
+    pub fn len(&self) -> usize {
+        self.njobs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.njobs == 0
+    }
+
+    fn pull(&mut self) -> Option<Job> {
+        if self.produced >= self.njobs {
+            return None;
+        }
+        // The pre-pass validated every row this pass re-reads; an
+        // error or early end here means the underlying file changed
+        // between passes — never silently truncate the replay.
+        let r = self
+            .stream
+            .next_row()
+            .expect("trace changed during streaming replay")
+            .expect("trace shrank during streaming replay");
+        let i = self.produced;
+        self.produced += 1;
+        let size = (r.size / self.speed).max(MIN_SIZE);
+        let est = if self.sigma > 0.0 {
+            (size * self.err.sample(&mut self.err_rng)).max(MIN_SIZE)
+        } else {
+            match r.est {
+                Some(e) => (e / self.speed).max(MIN_SIZE),
+                None => size,
+            }
+        };
+        Some(Job { id: i as u32, arrival: r.arrival - self.t0, size, est, weight: r.weight })
+    }
+}
+
+impl<R: RowStream> JobSource for TraceJobSource<R> {
+    fn peek_arrival(&mut self) -> Option<f64> {
+        if self.peeked.is_none() {
+            self.peeked = self.pull();
+        }
+        self.peeked.as_ref().map(|j| j.arrival)
+    }
+
+    fn next_job(&mut self) -> Option<Job> {
+        if let Some(j) = self.peeked.take() {
+            return Some(j);
+        }
+        self.pull()
+    }
 }
 
 impl TraceFile {
@@ -227,6 +495,19 @@ impl TraceFile {
             .collect();
         job::validate(&jobs);
         jobs
+    }
+
+    /// Streaming counterpart of [`TraceFile::to_jobs`] over the loaded
+    /// rows: same normalization, jobs produced one at a time.
+    pub fn stream_jobs(
+        &self,
+        njobs: usize,
+        load: f64,
+        sigma: f64,
+        seed: u64,
+    ) -> Result<TraceJobSource<SliceRows>, String> {
+        TraceJobSource::new(SliceRows::new(self.rows.clone()), njobs, load, sigma, seed)
+            .map_err(|e| format!("{}: {e}", self.path))
     }
 }
 
@@ -362,6 +643,78 @@ arrival,size,weight\n\
         for (x, y) in a.iter().zip(&exact) {
             assert_eq!(x.size, y.size);
             assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    /// The chunked reader accepts exactly what `parse` accepts and
+    /// yields the same rows — both ride the one `RowParser`.
+    #[test]
+    fn chunked_reader_matches_parse() {
+        let dir = std::env::temp_dir().join("psbs_chunked_reader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        std::fs::write(&path, GOOD).unwrap();
+        let want = parse(GOOD).unwrap();
+        let mut r = ChunkedCsvReader::open(path.to_str().unwrap()).unwrap();
+        let mut got = Vec::new();
+        while let Some(row) = r.next_row().unwrap() {
+            got.push(row);
+        }
+        assert_eq!(got, want);
+        // Rewind replays from the top.
+        r.rewind().unwrap();
+        assert_eq!(r.next_row().unwrap(), Some(want[0]));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Chunked-reader errors are the same line-numbered strings as
+    /// `parse`, prefixed with the path like `TraceFile::load`.
+    #[test]
+    fn chunked_reader_errors_match_parse() {
+        let dir = std::env::temp_dir().join("psbs_chunked_reader_err_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (i, text) in ["# c\narrival,size\n0,10\n0,-1\n", "2,10\n1,20\n", "# only\n"]
+            .iter()
+            .enumerate()
+        {
+            let path = dir.join(format!("t{i}.csv"));
+            std::fs::write(&path, text).unwrap();
+            let want = parse(text).unwrap_err();
+            let mut r = ChunkedCsvReader::open(path.to_str().unwrap()).unwrap();
+            let got = loop {
+                match r.next_row() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => panic!("expected an error for {text:?}"),
+                    Err(e) => break e,
+                }
+            };
+            assert_eq!(got, format!("{}: {want}", path.display()));
+        }
+        let err = ChunkedCsvReader::open("/nonexistent/psbs_no_such.csv").unwrap_err();
+        assert!(err.contains("reading trace file"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The streaming job source replays `to_jobs` bit-for-bit,
+    /// including the njobs cap and sigma re-estimation.
+    #[test]
+    fn stream_jobs_is_bit_identical_to_to_jobs() {
+        let tf = TraceFile {
+            path: "mem".into(),
+            rows: Arc::new(parse("0,10,1,20\n1,30,2,5\n2,10,1,10\n5,70,1,1\n").unwrap()),
+        };
+        for (njobs, load, sigma, seed) in
+            [(usize::MAX, 0.9, 0.0, 7u64), (3, 0.5, 1.0, 7), (usize::MAX, 0.7, 2.0, 9)]
+        {
+            let want = tf.to_jobs(njobs, load, sigma, seed);
+            let mut src = tf.stream_jobs(njobs, load, sigma, seed).unwrap();
+            assert_eq!(src.len(), want.len());
+            let mut got = Vec::new();
+            assert_eq!(src.peek_arrival(), Some(want[0].arrival), "peek before pull");
+            while let Some(j) = src.next_job() {
+                got.push(j);
+            }
+            assert_eq!(got, want, "njobs={njobs} load={load} sigma={sigma}");
         }
     }
 

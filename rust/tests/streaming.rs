@@ -1,0 +1,285 @@
+//! Streaming-engine equivalence — the PR-7 headline invariant: the
+//! O(active)-memory streaming loop ([`psbs::sim::run_streaming`]) is
+//! *bit-identical* to the materialized [`psbs::sim::run`] for every
+//! discipline in the zoo on random workloads, including the drain-mode
+//! engine under fault injection and speculative kill churn.  Plus the
+//! trace side: CSV rows survive a round-trip through the `.psbt`
+//! binary cache exactly, the cached streaming replay produces the very
+//! jobs `TraceFile::to_jobs` materializes, and corrupted caches fail
+//! hard with distinct errors rather than replaying garbage.
+
+use psbs::coordinator::{FaultConfig, FaultSpec, RetryPolicy};
+use psbs::scenario::PolicySpec;
+use psbs::sched;
+use psbs::sim::{self, Completion, CompletionSink, Job, SliceSource};
+use psbs::util::check::{property, Config};
+use psbs::util::rng::Rng;
+use psbs::workload::cache::{write_cache, CacheReader};
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+use psbs::workload::trace_file::{parse, TraceFile, TraceJobSource};
+use std::sync::Arc;
+
+fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
+    let n = 4 + size * 2;
+    let w = Weibull::unit_mean(0.4 + rng.u01());
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|i| {
+            t += rng.u01();
+            let s = w.sample(rng).max(1e-6);
+            Job {
+                id: i,
+                arrival: t,
+                size: s,
+                est: (s * err.sample(rng)).max(1e-9),
+                weight: 1.0 / (1.0 + rng.below(3) as f64),
+            }
+        })
+        .collect()
+}
+
+/// Sink that rebuilds the dense completion vector [`sim::run`] returns,
+/// with the same completed-twice check the engine's own recorder has.
+struct CollectSink {
+    completion: Vec<f64>,
+    arrivals: u64,
+}
+
+impl CollectSink {
+    fn new(n: usize) -> CollectSink {
+        CollectSink { completion: vec![f64::NAN; n], arrivals: 0 }
+    }
+}
+
+impl CompletionSink for CollectSink {
+    fn on_arrival(&mut self, _now: f64, _job: &Job) {
+        self.arrivals += 1;
+    }
+
+    fn on_completion(&mut self, _time: f64, c: &Completion) {
+        assert!(
+            self.completion[c.id as usize].is_nan(),
+            "job {} completed twice",
+            c.id
+        );
+        self.completion[c.id as usize] = c.time;
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The headline property: for every `ALL_POLICIES` entry, streaming a
+/// random workload through [`sim::run_streaming`] reproduces
+/// [`sim::run`] bit-for-bit — completion times AND the internal event
+/// counter, so the loops cannot have diverged even invisibly.
+#[test]
+fn run_streaming_is_bit_identical_to_run_all_policies() {
+    property(
+        "run_streaming == run (all policies)",
+        Config { cases: 12, max_size: 16, seed: 0x57_EA_4 },
+        |rng, size| random_jobs(rng, size, 0.5 + rng.u01() * 1.5),
+        |jobs| {
+            for policy in sched::ALL_POLICIES {
+                let mut a = sched::by_name(policy).unwrap();
+                let want = sim::run(a.as_mut(), jobs);
+
+                let mut b = sched::by_name(policy).unwrap();
+                let mut src = SliceSource::new(jobs);
+                let mut sink = CollectSink::new(jobs.len());
+                let stats = sim::run_streaming(b.as_mut(), &mut src, &mut sink);
+
+                if bits(&sink.completion) != bits(&want.completion) {
+                    return Err(format!("{policy}: completion times drifted"));
+                }
+                if stats.events != want.events {
+                    return Err(format!(
+                        "{policy}: events {} != {}",
+                        stats.events, want.events
+                    ));
+                }
+                if stats.delivered != jobs.len() as u64
+                    || stats.completed != jobs.len() as u64
+                    || sink.arrivals != jobs.len() as u64
+                {
+                    return Err(format!("{policy}: delivery accounting drifted: {stats:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Drain mode under fault injection (crashes, retries, losses) and
+/// speculative kill churn: [`sim::run_streaming_to_drain`] must match
+/// [`sim::run_to_drain`] bitwise — including which jobs never complete
+/// (both leave NaN) and the full fault counter set.
+#[test]
+fn streaming_drain_matches_run_to_drain_under_fault_churn() {
+    property(
+        "streaming drain == drain (faults + speculation)",
+        Config { cases: 10, max_size: 14, seed: 0xD4_A1 },
+        |rng, size| {
+            let jobs = random_jobs(rng, size, 1.2);
+            let cfg = FaultConfig {
+                spec: FaultSpec {
+                    mtbf: 2.0 + rng.u01() * 20.0,
+                    mttr: 0.2 + rng.u01() * 2.0,
+                    slowdown: 0.25 + 0.75 * rng.u01(),
+                },
+                retry: RetryPolicy {
+                    max_attempts: 1 + rng.below(4) as u32,
+                    backoff: 0.5 * rng.u01(),
+                },
+                seed: rng.below(1 << 20),
+            };
+            let seed = rng.below(1 << 20);
+            (jobs, cfg, seed)
+        },
+        |(jobs, cfg, seed)| {
+            // Speculation (`speculate`) kills losing copies internally —
+            // the kill-churn path — and the cluster crash plan retries
+            // and loses jobs.
+            for spec_str in [
+                "psbs",
+                "cluster(k=2,dispatch=leastwork,inner=psbs)",
+                "speculate(after=2,inner=cluster(k=2,dispatch=jsq,inner=srpte))",
+            ] {
+                let spec = PolicySpec::from(spec_str);
+                let mut a = spec.build_faulty(*seed, cfg);
+                let want = sim::run_to_drain(a.as_mut(), jobs);
+                let want_stats = a.fault_stats().unwrap_or_default();
+
+                let mut b = spec.build_faulty(*seed, cfg);
+                let mut src = SliceSource::new(jobs);
+                let mut sink = CollectSink::new(jobs.len());
+                let stats = sim::run_streaming_to_drain(b.as_mut(), &mut src, &mut sink);
+                let got_stats = b.fault_stats().unwrap_or_default();
+
+                if bits(&sink.completion) != bits(&want.completion) {
+                    return Err(format!("{spec_str}: drain completion times drifted"));
+                }
+                if stats.events != want.events {
+                    return Err(format!(
+                        "{spec_str}: events {} != {}",
+                        stats.events, want.events
+                    ));
+                }
+                if want_stats != got_stats {
+                    return Err(format!(
+                        "{spec_str}: fault stats drifted: {want_stats:?} vs {got_stats:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("psbs_streaming_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A deterministic, mildly heavy-tailed CSV trace with all optional
+/// columns exercised (weights always, estimates on one variant).
+fn sample_csv(with_est: bool) -> String {
+    let mut text = String::from(if with_est {
+        "arrival,size,weight,estimate\n"
+    } else {
+        "arrival,size,weight\n"
+    });
+    for i in 0..200u32 {
+        let size = 1 + (i as u64 * 7919) % 97 + if i % 17 == 0 { 500 } else { 0 };
+        let w = 1 + i % 3;
+        if with_est {
+            text.push_str(&format!("{}.25,{size},{w},{}\n", i, size + 1));
+        } else {
+            text.push_str(&format!("{}.25,{size},{w}\n", i));
+        }
+    }
+    text
+}
+
+/// CSV rows -> binary cache -> rows: exact (bitwise f64) equality, and
+/// the cached streaming replay yields the very jobs `to_jobs`
+/// materializes from the CSV — so `replay --format bin` cannot drift
+/// from `replay --format csv` on the same data.
+#[test]
+fn csv_to_cache_round_trip_is_exact() {
+    for with_est in [false, true] {
+        let rows = parse(&sample_csv(with_est)).unwrap();
+        let path = tmp_path(&format!("round_trip_{with_est}.psbt"));
+        let path_str = path.to_str().unwrap();
+        let n = write_cache(path_str, rows.iter().copied()).unwrap();
+        assert_eq!(n, rows.len() as u64);
+
+        let mut reader = CacheReader::open(path_str).unwrap();
+        assert_eq!(reader.len(), rows.len() as u64);
+        use psbs::workload::trace_file::RowStream;
+        let mut back = Vec::new();
+        while let Some(r) = reader.next_row().unwrap() {
+            back.push(r);
+        }
+        assert_eq!(back, rows, "cache round-trip drifted (with_est={with_est})");
+
+        // Streamed jobs from the cache == materialized jobs from the CSV.
+        for (sigma, seed) in [(0.0, 9_u64), (0.5, 9), (2.0, 23)] {
+            let tf = TraceFile { path: "mem.csv".into(), rows: Arc::new(rows.clone()) };
+            let want = tf.to_jobs(usize::MAX, 0.9, sigma, seed);
+            let reader = CacheReader::open(path_str).unwrap();
+            let mut src = TraceJobSource::new(reader, usize::MAX, 0.9, sigma, seed).unwrap();
+            let mut got = Vec::new();
+            while let Some(j) = psbs::sim::JobSource::next_job(&mut src) {
+                got.push(j);
+            }
+            assert_eq!(got, want, "with_est={with_est} sigma={sigma} seed={seed}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Corruption is a hard, *distinct* error at open time — never a
+/// silent short or garbage replay: bad magic, unsupported version,
+/// truncated payload, header/payload length mismatch, and a flipped
+/// payload bit (checksum) each fail with their own message.
+#[test]
+fn corrupted_caches_fail_hard_and_distinctly() {
+    let rows = parse(&sample_csv(false)).unwrap();
+    let path = tmp_path("corrupt.psbt");
+    let path_str = path.to_str().unwrap();
+    write_cache(path_str, rows.iter().copied()).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let open_err = |bytes: &[u8]| -> String {
+        std::fs::write(&path, bytes).unwrap();
+        CacheReader::open(path_str).expect_err("corrupt cache must not open")
+    };
+
+    let mut bad_magic = good.clone();
+    bad_magic[0] = b'X';
+    assert!(open_err(&bad_magic).contains("bad magic"));
+
+    let mut bad_version = good.clone();
+    bad_version[4] = 99;
+    assert!(open_err(&bad_version).contains("unsupported trace cache version"));
+
+    let truncated = &good[..good.len() - 7];
+    assert!(open_err(truncated).contains("truncated trace cache"));
+
+    let header_only = &good[..10];
+    assert!(open_err(header_only).contains("header"));
+
+    let mut flipped = good.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x01;
+    assert!(open_err(&flipped).contains("checksum mismatch"));
+
+    std::fs::remove_file(&path).ok();
+    assert!(
+        CacheReader::open(path_str).expect_err("missing file").contains("reading trace cache")
+    );
+}

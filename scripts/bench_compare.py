@@ -15,13 +15,15 @@ wins), so a REGRESSION is `current < baseline * (1 - threshold)`.
 
 Only keys matching one of the --keys prefixes AND present in BOTH
 files gate the exit code (default prefixes: the ROADMAP-tracked
-`planner_speedup_*` and `dense_vs_map_*`).  Everything else — other
-derived keys (e.g. `trace_parse_throughput`, the late-set engine's
-`late_set_*_scaling` population ratios, and `fault_replay_overhead`,
-where ~1 is good and the "higher is better" framing does not apply)
-and per-sample mean_ns deltas — is reported informationally.  Exits 1 on any gated
-regression, 0 otherwise; missing baselines are not failures (first
-run on a branch has nothing to compare against).
+`planner_speedup_*`, `dense_vs_map_*` and the streaming engine's
+`stream_throughput_*` jobs/s).  Everything else — other derived keys
+(e.g. `trace_parse_throughput`, the late-set engine's
+`late_set_*_scaling` population ratios, `fault_replay_overhead` and
+`stream_vs_vec_overhead`, where ~1 is good and the "higher is better"
+framing does not apply, and `trace_cache_speedup`, tracked but not
+gated) and per-sample mean_ns deltas — is reported informationally.
+Exits 1 on any gated regression, 0 otherwise; missing baselines are
+not failures (first run on a branch has nothing to compare against).
 
 stdlib-only by design: CI and offline containers run it bare.
 """
@@ -30,7 +32,7 @@ import argparse
 import json
 import sys
 
-DEFAULT_KEY_PREFIXES = "planner_speedup_,dense_vs_map_"
+DEFAULT_KEY_PREFIXES = "planner_speedup_,dense_vs_map_,stream_throughput_"
 
 
 def load(path):

@@ -5,7 +5,8 @@ tested independently of the rust build).
 
 Covers the contract the CI bench-compare step relies on:
   * a >threshold drop on a gated derived key (planner_speedup_*,
-    dense_vs_map_*) exits 1 and is labelled REGRESSED;
+    dense_vs_map_*, stream_throughput_*) exits 1 and is labelled
+    REGRESSED;
   * drops within the threshold, drops on non-gated keys (e.g.
     trace_parse_throughput), and improvements exit 0;
   * keys missing from either file never gate;
@@ -131,6 +132,54 @@ class BenchCompareTest(unittest.TestCase):
         self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
         self.assertIn("late_set_scan_scaling", r.stdout)
         self.assertIn("late_set/scan/las/n100000", r.stdout)
+        self.assertNotIn("REGRESSED", r.stdout)
+
+    def test_stream_throughput_drop_gates(self):
+        # The streaming engine's jobs/s is a first-class gated key: a
+        # >20% drop fails the compare like a planner_speedup_* drop.
+        base = self.write(
+            "base.json", report({"stream_throughput_jobs_per_s": 4e6})
+        )
+        cur = self.write(
+            "cur.json", report({"stream_throughput_jobs_per_s": 2.5e6})  # -37.5%
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("stream_throughput_jobs_per_s", r.stdout)
+        self.assertIn("REGRESSED", r.stdout)
+        # Within threshold: passes.
+        cur_ok = self.write(
+            "cur_ok.json", report({"stream_throughput_jobs_per_s": 3.5e6})  # -12.5%
+        )
+        self.assertEqual(self.run_compare(base, cur_ok).returncode, 0)
+
+    def test_stream_ratio_keys_are_informational(self):
+        # stream_vs_vec_overhead (~1 is good) and trace_cache_speedup
+        # are tracked but never gate, in either direction.
+        base = self.write(
+            "base.json",
+            report(
+                {
+                    "stream_vs_vec_overhead": 1.02,
+                    "trace_cache_speedup": 6.0,
+                    "stream_throughput_jobs_per_s": 4e6,
+                }
+            ),
+        )
+        cur = self.write(
+            "cur.json",
+            report(
+                {
+                    "stream_vs_vec_overhead": 5.0,  # huge "drop" in ratio terms
+                    "trace_cache_speedup": 1.1,
+                    "stream_throughput_jobs_per_s": 4e6,
+                }
+            ),
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("stream_vs_vec_overhead", r.stdout)
+        self.assertIn("trace_cache_speedup", r.stdout)
         self.assertNotIn("REGRESSED", r.stdout)
 
     def test_keys_missing_from_either_side_never_gate(self):
