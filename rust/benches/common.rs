@@ -5,16 +5,26 @@
 //! BENCH_psbs_ops.json stay comparable.
 
 use psbs::sched;
-use psbs::sim::{Job, Scheduler};
+use psbs::sim::{Job, JobStore, Scheduler};
 
-/// Build a scheduler preloaded with `n` long pending jobs.
-pub fn preload(policy: &str, n: usize) -> Box<dyn Scheduler> {
+/// Build a scheduler preloaded with `n` long pending jobs (dense ids
+/// 0..n-1), plus the [`JobStore`] holding their rows.  Probe
+/// iterations reuse row `n` via [`JobStore::upsert`], so the store
+/// stays at n + 1 rows no matter how long a bench runs.
+pub fn preload(policy: &str, n: usize) -> (Box<dyn Scheduler>, JobStore) {
     let mut s = sched::by_name(policy).unwrap();
-    for i in 1..=n as u32 {
+    let mut store = JobStore::new();
+    for i in 0..n as u32 {
         let size = 1e6 + i as f64; // long: nothing completes during the bench
-        s.on_arrival(i as f64 * 1e-6, &Job::exact(i, i as f64 * 1e-6, size));
+        store.deliver(s.as_mut(), i as f64 * 1e-6, &Job::exact(i, i as f64 * 1e-6, size));
     }
-    s
+    (s, store)
+}
+
+/// Upsert the probe row and deliver it — one arrival event.
+pub fn probe(s: &mut dyn Scheduler, store: &mut JobStore, now: f64, job: &Job) {
+    store.upsert(job);
+    s.on_arrival(now, job.id, store);
 }
 
 /// Tiny probe-job size: completes (really and virtually) within one

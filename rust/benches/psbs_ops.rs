@@ -20,7 +20,7 @@ use psbs::util::bench::{self, Bench};
 
 #[path = "common.rs"]
 mod common;
-use common::{preload, TINY};
+use common::{preload, probe, TINY};
 
 /// Standing late-set member size: nothing completes during a bench.
 const LATE_BIG: f64 = 1e9;
@@ -174,8 +174,8 @@ fn main() {
             if policy == "fsp-naive" && n > 10_000 {
                 continue; // O(n) per event: the 100k line takes minutes
             }
-            let mut s = preload(policy, n);
-            let mut id = n as u32;
+            let (mut s, mut store) = preload(policy, n);
+            let pid = n as u32;
             let mut now = n as f64 * 1e-6;
             let mut done = Vec::with_capacity(1);
             // Step long enough that the tiny job also completes
@@ -185,11 +185,10 @@ fn main() {
             // population to exactly n each iteration.
             let dt = TINY * 4.0 * (n as f64 + 2.0);
             b.bench(&format!("event/{policy}/n{n}"), move || {
-                id += 1;
-                s.on_arrival(now, &Job::exact(id, now, TINY));
+                probe(s.as_mut(), &mut store, now, &Job::exact(pid, now, TINY));
                 std::hint::black_box(s.next_event(now));
                 done.clear();
-                s.advance(now, now + dt, &mut done);
+                s.advance(now, now + dt, &store, &mut done);
                 debug_assert_eq!(done.len(), 1);
                 now += dt;
                 std::hint::black_box(done.len());
@@ -198,15 +197,15 @@ fn main() {
     }
 
     // Pure arrival cost (population grows during the measurement —
-    // the amortized O(1)-heap-push framing of Algorithm 1).
+    // the amortized O(1)-heap-push framing of Algorithm 1; the store
+    // grows with it, exactly as the engine's would).
     for &n in &[10_000usize, 100_000] {
-        let mut s = preload("psbs", n);
-        let mut id = n as u32;
+        let (mut s, mut store) = preload("psbs", n);
         let mut now = n as f64 * 1e-6;
         b.bench(&format!("arrival_nocancel/psbs/n{n}"), move || {
             now += 1e-9;
-            id += 1;
-            s.on_arrival(now, &Job::exact(id, now, 1e9));
+            let id = store.push(&Job::exact(store.next_id(), now, 1e9));
+            s.on_arrival(now, id, &store);
             std::hint::black_box(s.next_event(now));
         });
     }
@@ -216,17 +215,17 @@ fn main() {
     // The cancelled job parks in E until its (tiny) virtual lag is
     // reached; the advance drains it so E stays empty.
     for &n in &[1_000usize, 100_000] {
-        let mut s = preload("psbs", n);
-        let mut id = n as u32;
+        let (mut s, mut store) = preload("psbs", n);
+        let pid = n as u32;
         let mut now = n as f64 * 1e-6;
         let mut done = Vec::new();
         let dt = TINY * 4.0 * (n as f64 + 2.0);
         b.bench(&format!("cancel/psbs/n{n}"), move || {
-            id += 1;
-            s.on_arrival(now, &Job { id, arrival: now, size: 1e9, est: TINY, weight: 1.0 });
-            assert!(s.cancel(now, id), "cancel fresh job");
+            let job = Job { id: pid, arrival: now, size: 1e9, est: TINY, weight: 1.0 };
+            probe(s.as_mut(), &mut store, now, &job);
+            assert!(s.cancel(now, pid), "cancel fresh job");
             done.clear();
-            s.advance(now, now + dt, &mut done);
+            s.advance(now, now + dt, &store, &mut done);
             now += dt;
         });
     }

@@ -5,8 +5,9 @@
 //! the full population curve lives in the psbs_ops bench).
 //!
 //! Results land in `BENCH_sched.json`.  Filter with
-//! `cargo bench --bench schedulers -- event/` for a quick per-event
-//! smoke (what scripts/tier1.sh runs).
+//! `cargo bench --bench schedulers -- event/,batch/,soa/` for a quick
+//! per-event + batching smoke (what scripts/tier1.sh runs — one
+//! invocation so the rewritten JSON still carries every gated key).
 
 use psbs::sched;
 use psbs::sim::{self, Job, Scheduler};
@@ -15,7 +16,7 @@ use psbs::workload::{self, SynthConfig};
 
 #[path = "common.rs"]
 mod common;
-use common::{preload, TINY};
+use common::{preload, probe, TINY};
 
 fn main() {
     let mut b = Bench::new();
@@ -49,19 +50,77 @@ fn main() {
     // in the psbs_ops bench, which sweeps the population size).
     for policy in ["psbs", "fsp-naive"] {
         let n = 10_000usize;
-        let mut s = preload(policy, n);
-        let mut id = n as u32;
+        let (mut s, mut store) = preload(policy, n);
+        let pid = n as u32;
         let mut now = n as f64 * 1e-6;
         let mut done = Vec::with_capacity(1);
         let dt = TINY * 4.0 * (n as f64 + 2.0);
         b.bench(&format!("event/{policy}/n{n}"), move || {
-            id += 1;
-            s.on_arrival(now, &Job::exact(id, now, TINY));
+            probe(s.as_mut(), &mut store, now, &Job::exact(pid, now, TINY));
             std::hint::black_box(s.next_event(now));
             done.clear();
-            s.advance(now, now + dt, &mut done);
+            s.advance(now, now + dt, &store, &mut done);
             debug_assert_eq!(done.len(), 1);
             now += dt;
+            std::hint::black_box(done.len());
+        });
+    }
+
+    // The same probe loop, named under `soa/` so the struct-of-arrays
+    // store's event cost is tracked as its own key (`soa_event_ns` in
+    // `derived`): arrival field reads go through the [`psbs::sim::JobStore`]
+    // parallel arrays rather than a materialized `Job`.
+    {
+        let n = 10_000usize;
+        let (mut s, mut store) = preload("psbs", n);
+        let pid = n as u32;
+        let mut now = n as f64 * 1e-6;
+        let mut done = Vec::with_capacity(1);
+        let dt = TINY * 4.0 * (n as f64 + 2.0);
+        b.bench("soa/event/psbs/n10k", move || {
+            probe(s.as_mut(), &mut store, now, &Job::exact(pid, now, TINY));
+            std::hint::black_box(s.next_event(now));
+            done.clear();
+            s.advance(now, now + dt, &store, &mut done);
+            debug_assert_eq!(done.len(), 1);
+            now += dt;
+            std::hint::black_box(done.len());
+        });
+    }
+
+    // Batched same-instant delivery vs one-by-one: BURST tiny jobs
+    // land at one timestamp against the standing population, then the
+    // burst is drained to completion.  `grouped` hands the engine-shaped
+    // single `on_arrival_batch` call; `onebyone` pays a dyn-dispatched
+    // `on_arrival` per job (the pre-batching engine loop).  Both
+    // variants share the drain cost, so the derived
+    // `batch_event_speedup` (gated in scripts/bench_compare.py) isolates
+    // what coalescing saves per burst.
+    const BURST: u32 = 64;
+    for grouped in [false, true] {
+        let n = 10_000usize;
+        let (mut s, mut store) = preload("psbs", n);
+        let base = n as u32;
+        let mut now = n as f64 * 1e-6;
+        let mut done = Vec::with_capacity(BURST as usize);
+        let label = if grouped { "grouped" } else { "onebyone" };
+        b.bench(&format!("batch/{label}/psbs/burst{BURST}"), move || {
+            for i in 0..BURST {
+                store.upsert(&Job::exact(base + i, now, TINY));
+            }
+            if grouped {
+                s.on_arrival_batch(now, base..base + BURST, &store);
+            } else {
+                for id in base..base + BURST {
+                    s.on_arrival(now, id, &store);
+                }
+            }
+            done.clear();
+            while done.len() < BURST as usize {
+                let t = s.next_event(now).expect("pending work").max(now);
+                s.advance(now, t, &store, &mut done);
+                now = t;
+            }
             std::hint::black_box(done.len());
         });
     }
@@ -72,7 +131,25 @@ fn main() {
         std::hint::black_box(workload::synthesize(&cfg, 7).len());
     });
 
+    // Derived keys: `batch_event_speedup` (>= 1 means one coalesced
+    // batch call per burst is no slower than per-job dispatch — gated),
+    // `soa_event_ns` (absolute SoA event cost, informational).
+    let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    if let (Some(one), Some(grp)) = (
+        mean_of(&format!("batch/onebyone/psbs/burst{BURST}")),
+        mean_of(&format!("batch/grouped/psbs/burst{BURST}")),
+    ) {
+        derived.push(("batch_event_speedup".to_string(), one / grp));
+    }
+    if let Some(soa) = mean_of("soa/event/psbs/n10k") {
+        derived.push(("soa_event_ns".to_string(), soa));
+    }
+    for (k, v) in &derived {
+        println!("derived {k} = {v:.3}");
+    }
+
     let path = bench::out_path("BENCH_sched.json");
-    bench::write_json(&path, "sched", &b.samples, &[]).expect("write BENCH_sched.json");
+    bench::write_json(&path, "sched", &b.samples, &derived).expect("write BENCH_sched.json");
     println!("wrote {path}");
 }

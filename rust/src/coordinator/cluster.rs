@@ -52,7 +52,7 @@
 use crate::coordinator::faults::{FaultConfig, FaultEvent, FaultPlan, FaultStats, RetryPolicy};
 use crate::scenario::PolicySpec;
 use crate::sched::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::rng::Rng;
 
 /// Routing policy for new arrivals.
@@ -71,7 +71,10 @@ pub enum Dispatch {
     LeastTime,
 }
 
-/// Where one job currently lives.
+/// Where one job currently lives.  Job fields themselves (size, est,
+/// weight) are NOT carried — retries and backups re-read them from the
+/// engine's [`JobStore`], whose row stays live until the job really
+/// completes or is lost.
 #[derive(Debug, Clone)]
 struct Placement {
     /// Primary copy's server.
@@ -80,9 +83,6 @@ struct Placement {
     est: f64,
     /// Speculative backup copy's server, if launched.
     backup: Option<usize>,
-    /// The job itself — carried only on the fault/speculation paths
-    /// (retries and backups re-dispatch it); `None` in plain mode.
-    job: Option<Job>,
     /// Dispatch attempts consumed (1 = first dispatch; 0 in plain mode).
     attempts: u32,
 }
@@ -114,8 +114,9 @@ pub struct Cluster {
     faults: Option<FaultPlan>,
     retry: RetryPolicy,
     /// Jobs waiting for re-dispatch: key = due time, seq = job id,
-    /// payload = (job, attempts already consumed).
-    pending: MinHeap<(Job, u32)>,
+    /// payload = attempts already consumed (fields re-read from the
+    /// store at dispatch time).
+    pending: MinHeap<u32>,
     /// Speculation threshold: launch a backup when a job is still
     /// unfinished `after * est` past its dispatch.
     spec_after: Option<f64>,
@@ -334,33 +335,29 @@ impl Cluster {
         })
     }
 
-    /// Place one copy of `job` (attempt number `attempts`, counting the
-    /// first dispatch as 1), or park it if the whole cluster is down.
-    fn dispatch_copy(&mut self, now: f64, job: &Job, attempts: u32) {
+    /// Place one copy of job `id` (attempt number `attempts`, counting
+    /// the first dispatch as 1), or park it if the whole cluster is
+    /// down.
+    fn dispatch_copy(&mut self, now: f64, id: JobId, attempts: u32, store: &JobStore) {
         match self.pick_up() {
             Some(s) => {
-                self.est_backlog[s] += job.est;
+                let est = store.est(id);
+                self.est_backlog[s] += est;
                 let lt = self.local[s];
-                *self.slot(job.id) = Some(Placement {
-                    srv: s,
-                    est: job.est,
-                    backup: None,
-                    job: Some(*job),
-                    attempts,
-                });
-                self.servers[s].on_arrival(lt, job);
+                *self.slot(id) = Some(Placement { srv: s, est, backup: None, attempts });
+                self.servers[s].on_arrival(lt, id, store);
                 if attempts > 1 {
                     self.stats.restarts += 1;
                 }
                 if let Some(after) = self.spec_after {
-                    self.spec_deadlines.push(now + after * job.est, job.id as u64, ());
+                    self.spec_deadlines.push(now + after * est, id as u64, ());
                 }
             }
             None => {
                 // Every server is down: park until the earliest
                 // recovery (one always exists while a server is down).
                 let due = self.earliest_recovery().unwrap_or(now).max(now);
-                self.pending.push(due, job.id as u64, (*job, attempts.saturating_sub(1)));
+                self.pending.push(due, id as u64, attempts.saturating_sub(1));
             }
         }
     }
@@ -398,7 +395,7 @@ impl Cluster {
     /// global `to` (rates are constant on the window — control events
     /// bound it), translating completions back to global time and
     /// settling them immediately.
-    fn step_servers(&mut self, from: f64, to: f64, done: &mut Vec<Completion>) {
+    fn step_servers(&mut self, from: f64, to: f64, store: &JobStore, done: &mut Vec<Completion>) {
         if to <= from {
             return;
         }
@@ -427,16 +424,16 @@ impl Cluster {
                     self.stats.work_done += ev - lnow;
                 }
                 out.clear();
-                self.servers[s].advance(lnow, ev, &mut out);
-                self.settle(s, from, l0, rate, exact, &out, done);
+                self.servers[s].advance(lnow, ev, store, &mut out);
+                self.settle(s, from, l0, rate, exact, &out, store, done);
                 lnow = ev;
             }
             if self.servers[s].active() > 0 {
                 self.stats.work_done += l1 - lnow;
             }
             out.clear();
-            self.servers[s].advance(lnow, l1, &mut out);
-            self.settle(s, from, l0, rate, exact, &out, done);
+            self.servers[s].advance(lnow, l1, store, &mut out);
+            self.settle(s, from, l0, rate, exact, &out, store, done);
             self.buf = out;
             self.local[s] = l1;
         }
@@ -453,6 +450,7 @@ impl Cluster {
         rate: f64,
         exact: bool,
         out: &[Completion],
+        store: &JobStore,
         done: &mut Vec<Completion>,
     ) {
         for c in out {
@@ -477,7 +475,7 @@ impl Cluster {
             self.clear_slot(c.id);
             self.spec_deadlines.remove_by_seq(c.id as u64);
             self.live -= 1;
-            self.stats.useful_work += p.job.map_or(0.0, |j| j.size);
+            self.stats.useful_work += store.size(c.id);
             done.push(Completion { id: c.id, time: g });
         }
     }
@@ -486,7 +484,7 @@ impl Cluster {
     /// advanced to `tc`): fault state changes first (so recoveries
     /// unblock same-instant retries), then crash victim handling, then
     /// due retries, then speculation deadlines.
-    fn apply_control(&mut self, tc: f64) {
+    fn apply_control(&mut self, tc: f64, store: &JobStore) {
         let mut crashed: Vec<usize> = Vec::new();
         if let Some(f) = self.faults.as_mut() {
             for (s, sf) in f.servers.iter_mut().enumerate() {
@@ -501,12 +499,12 @@ impl Cluster {
             self.on_crash(tc, s);
         }
         while matches!(self.pending.peek(), Some((k, _, _)) if k <= tc) {
-            let (_, _, (job, made)) = self.pending.pop().unwrap();
-            self.dispatch_copy(tc, &job, made + 1);
+            let (_, id, made) = self.pending.pop().unwrap();
+            self.dispatch_copy(tc, id as u32, made + 1, store);
         }
         while matches!(self.spec_deadlines.peek(), Some((k, _, _)) if k <= tc) {
             let (_, id, ()) = self.spec_deadlines.pop().unwrap();
-            self.try_speculate(tc, id as u32);
+            self.try_speculate(tc, id as u32, store);
         }
     }
 
@@ -545,14 +543,13 @@ impl Cluster {
             } else {
                 self.clear_slot(id);
                 self.spec_deadlines.remove_by_seq(id as u64);
-                let job = p.job.expect("faulty-mode placement carries the job");
                 if p.attempts >= self.retry.max_attempts {
                     self.stats.lost += 1;
                     self.live -= 1;
                 } else {
                     let delay =
                         self.retry.backoff * (1u64 << (p.attempts - 1).min(32)) as f64;
-                    self.pending.push(tc + delay, id as u64, (job, p.attempts));
+                    self.pending.push(tc + delay, id as u64, p.attempts);
                 }
             }
         }
@@ -563,13 +560,13 @@ impl Cluster {
     /// A speculation deadline fired for `id`: if the job is still a
     /// running sole copy, launch a backup on the least-loaded *other*
     /// up server (none available: speculation is skipped).
-    fn try_speculate(&mut self, _tc: f64, id: u32) {
+    fn try_speculate(&mut self, _tc: f64, id: u32, store: &JobStore) {
         let Some(Some(p)) = self.placement.get(id as usize) else { return };
         if p.backup.is_some() {
             return;
         }
         let primary = p.srv;
-        let Some(job) = p.job else { return };
+        let est = p.est;
         let mut best: Option<usize> = None;
         for s in 0..self.servers.len() {
             if s == primary || !self.is_up(s) {
@@ -582,10 +579,10 @@ impl Cluster {
             }
         }
         let Some(b) = best else { return };
-        self.est_backlog[b] += job.est;
+        self.est_backlog[b] += est;
         self.placement[id as usize].as_mut().unwrap().backup = Some(b);
         let lt = self.local[b];
-        self.servers[b].on_arrival(lt, &job);
+        self.servers[b].on_arrival(lt, id, store);
         self.stats.speculations += 1;
     }
 
@@ -593,20 +590,20 @@ impl Cluster {
     /// stepping all servers to each boundary (so completions at a crash
     /// instant land *before* the crash) and applying the events in
     /// time order.
-    fn advance_faulty(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance_faulty(&mut self, now: f64, t: f64, store: &JobStore, done: &mut Vec<Completion>) {
         let mut cur = now;
         loop {
             match self.next_control_time() {
                 Some(tc) if tc <= t => {
                     let tc = tc.max(cur);
-                    self.step_servers(cur, tc, done);
+                    self.step_servers(cur, tc, store, done);
                     cur = tc;
-                    self.apply_control(tc);
+                    self.apply_control(tc, store);
                 }
                 _ => break,
             }
         }
-        self.step_servers(cur, t, done);
+        self.step_servers(cur, t, store, done);
     }
 }
 
@@ -615,24 +612,19 @@ impl Scheduler for Cluster {
         "cluster"
     }
 
-    fn on_arrival(&mut self, now: f64, job: &Job) {
+    fn on_arrival(&mut self, now: f64, id: JobId, store: &JobStore) {
         if self.plain {
             let s = self.pick();
-            self.est_backlog[s] += job.est;
-            *self.slot(job.id) = Some(Placement {
-                srv: s,
-                est: job.est,
-                backup: None,
-                job: None,
-                attempts: 0,
-            });
-            self.servers[s].on_arrival(now, job);
+            let est = store.est(id);
+            self.est_backlog[s] += est;
+            *self.slot(id) = Some(Placement { srv: s, est, backup: None, attempts: 0 });
+            self.servers[s].on_arrival(now, id, store);
             return;
         }
         // Faulty mode: state was advanced to `now` by the engine (the
         // standard contract), so the fault plan is current here.
         self.live += 1;
-        self.dispatch_copy(now, job, 1);
+        self.dispatch_copy(now, id, 1, store);
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
@@ -669,9 +661,9 @@ impl Scheduler for Cluster {
         t.is_finite().then(|| t.max(now))
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, store: &JobStore, done: &mut Vec<Completion>) {
         if !self.plain {
-            self.advance_faulty(now, t, done);
+            self.advance_faulty(now, t, store, done);
             return;
         }
         // Servers are independent; each advances through its own
@@ -682,13 +674,13 @@ impl Scheduler for Cluster {
             loop {
                 match s.next_event(local_now) {
                     Some(ev) if ev < t => {
-                        s.advance(local_now, ev.max(local_now), done);
+                        s.advance(local_now, ev.max(local_now), store, done);
                         local_now = ev.max(local_now);
                     }
                     _ => break,
                 }
             }
-            s.advance(local_now, t, done);
+            s.advance(local_now, t, store, done);
         }
         for c in done.iter() {
             if let Some(p) = self.placement.get_mut(c.id as usize).and_then(|s| s.take()) {
@@ -753,7 +745,7 @@ mod tests {
     use super::*;
     use crate::coordinator::faults::FaultSpec;
     use crate::sched;
-    use crate::sim::{run, run_to_drain};
+    use crate::sim::{run, run_to_drain, Job};
     use crate::workload::SynthConfig;
 
     fn fault_cfg(mtbf: f64, mttr: f64, slowdown: f64, seed: u64) -> FaultConfig {
@@ -843,13 +835,14 @@ mod tests {
     #[test]
     fn cluster_cancellation_updates_backlog() {
         let mut c = Cluster::new("psbs", 2, Dispatch::LeastWork, 4).unwrap();
-        c.on_arrival(0.0, &Job::exact(0, 0.0, 100.0)); // -> server 0
-        c.on_arrival(0.0, &Job::exact(1, 0.0, 1.0)); // -> server 1 (least work)
+        let mut st = JobStore::new();
+        st.deliver(&mut c, 0.0, &Job::exact(0, 0.0, 100.0)); // -> server 0
+        st.deliver(&mut c, 0.0, &Job::exact(1, 0.0, 1.0)); // -> server 1 (least work)
         assert_eq!(c.active(), 2);
         assert!(c.cancel(0.0, 0));
         assert_eq!(c.active(), 1);
         // Next big job routes to the now-empty server 0.
-        c.on_arrival(0.0, &Job::exact(2, 0.0, 50.0));
+        st.deliver(&mut c, 0.0, &Job::exact(2, 0.0, 50.0));
         assert!(c.est_backlog[0] >= 50.0 - 1e-9);
     }
 

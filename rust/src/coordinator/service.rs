@@ -1,7 +1,7 @@
 //! Leader thread + submission/notification channels.
 
 use crate::scenario::PolicySpec;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, Job, JobStore, Scheduler};
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
@@ -132,6 +132,10 @@ struct Pending {
 
 fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
     let mut sched = cfg.policy.build();
+    // The leader owns the job store: submissions append rows, kills and
+    // completions settle them, and the retired prefix is reclaimed so a
+    // long-lived service stays O(active) like the streaming engine.
+    let mut store = JobStore::new();
     let t0 = Instant::now();
     let speed = cfg.speed;
     let sim_now = |t0: Instant| t0.elapsed().as_secs_f64() * speed;
@@ -151,8 +155,10 @@ fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
         // Advance the scheduler through every internal event up to the
         // current wall-clock instant.
         let now = sim_now(t0);
-        advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
+        advance_through(sched.as_mut(), &mut last_sim, now, &store, &mut done_buf);
+        let settled = !done_buf.is_empty();
         for c in done_buf.drain(..) {
+            store.mark_completed(c.id);
             if let Some(p) = pending.remove(&c.id) {
                 let latency = p.submitted.elapsed();
                 let service_time = p.size / speed;
@@ -170,6 +176,9 @@ fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
                 stats.max_slowdown = stats.max_slowdown.max(info.slowdown);
                 let _ = p.done_tx.send(info);
             }
+        }
+        if settled {
+            store.retire();
         }
 
         if draining && sched.active() == 0 {
@@ -191,20 +200,23 @@ fn leader_loop(cfg: ServiceConfig, rx: Receiver<Msg>) -> ServiceStats {
         match rx.recv_timeout(timeout) {
             Ok(Msg::Submit { size, est, weight, done_tx }) => {
                 let now = sim_now(t0);
-                advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
+                advance_through(sched.as_mut(), &mut last_sim, now, &store, &mut done_buf);
                 let id = next_id;
                 next_id += 1;
                 let job = Job { id, arrival: now, size, est, weight };
                 pending.insert(id, Pending { done_tx, submitted: Instant::now(), size });
-                sched.on_arrival(now, &job);
+                store.push(&job);
+                sched.on_arrival(now, id, &store);
             }
             Ok(Msg::Kill { id, ack }) => {
                 let now = sim_now(t0);
-                advance_through(sched.as_mut(), &mut last_sim, now, &mut done_buf);
+                advance_through(sched.as_mut(), &mut last_sim, now, &store, &mut done_buf);
                 let was_pending = pending.contains_key(&id);
                 let killed = was_pending && sched.cancel(last_sim, id);
                 if killed {
                     pending.remove(&id);
+                    store.mark_cancelled(id);
+                    store.retire();
                     stats.killed += 1;
                 } else if was_pending {
                     // The discipline refused a kill for a job it still
@@ -241,19 +253,20 @@ fn advance_through(
     sched: &mut dyn Scheduler,
     last: &mut f64,
     target: f64,
+    store: &JobStore,
     done: &mut Vec<Completion>,
 ) {
     let target = target.max(*last);
     loop {
         match sched.next_event(*last) {
             Some(ev) if ev <= target => {
-                sched.advance(*last, ev.max(*last), done);
+                sched.advance(*last, ev.max(*last), store, done);
                 *last = ev.max(*last);
             }
             _ => break,
         }
     }
-    sched.advance(*last, target, done);
+    sched.advance(*last, target, store, done);
     *last = target;
 }
 

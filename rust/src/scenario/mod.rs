@@ -55,7 +55,8 @@ pub mod spec;
 
 pub use planner::{
     eval_cells, fault_rep_seeded, fault_value_seeded, group_cells, mst_of, mst_of_seeded,
-    slowdowns_of, slowdowns_of_seeded, stream_rep_seeded,
+    slowdowns_of, slowdowns_of_seeded, stream_mst_seeded, stream_reference_mst,
+    stream_rep_seeded,
 };
 pub use spec::{BasePolicy, Estimated, EstimatorSpec, PolicySpec};
 
@@ -387,17 +388,44 @@ impl SweepCell {
         let max = if p.converge { p.reps * 10 } else { p.reps };
         for r in 0..max {
             let rep_seed = self.workload.rep_seed(p.seed, r);
-            let jobs = self.workload.synthesize(rep_seed);
-            let a = self.rep_value(&jobs, rep_seed);
-            reps.push(match self.reference {
-                None => a,
-                Some(reference) => a / reference.mst(&jobs),
-            });
+            let v = if self.streams() {
+                // Fault-free synthetic mean cells never materialize
+                // the repetition: arrivals flow from the workload's
+                // stream source straight into the engine, for the
+                // policy and the reference alike.  Bit-identical to
+                // the materialized branch below (pinned in
+                // `planner::tests`), so the planner's shared path can
+                // keep materializing without the two paths drifting.
+                let a = stream_mst_seeded(&self.policy, &self.workload, rep_seed);
+                match self.reference {
+                    None => a,
+                    Some(reference) => {
+                        a / stream_reference_mst(reference, &self.workload, rep_seed)
+                    }
+                }
+            } else {
+                let jobs = self.workload.synthesize(rep_seed);
+                let a = self.rep_value(&jobs, rep_seed);
+                match self.reference {
+                    None => a,
+                    Some(reference) => a / reference.mst(&jobs),
+                }
+            };
+            reps.push(v);
             if r + 1 >= p.reps && (!p.converge || reps.converged(p.reps as usize)) {
                 break;
             }
         }
         reps.mean()
+    }
+
+    /// Whether [`SweepCell::eval`] can use the streaming path: fault
+    /// injection needs the drain-mode engine over a materialized
+    /// workload (lost jobs keep NaN completions), and trace replays
+    /// materialize their rows anyway — synthetic fault-free mean cells
+    /// are the ones that pay for per-rep job vectors.
+    fn streams(&self) -> bool {
+        self.faults.is_none() && matches!(self.workload, WorkloadSpec::Synth(_))
     }
 }
 

@@ -29,10 +29,10 @@
 //! to [`SweepCell::eval`] per cell — the `share` flag exists precisely
 //! so tests can assert that.
 
-use super::{FaultOutput, PolicySpec, Reference, SweepCell, SweepParams, WorkloadSpec};
+use super::{BasePolicy, FaultOutput, PolicySpec, Reference, SweepCell, SweepParams, WorkloadSpec};
 use crate::coordinator::{FaultConfig, FaultStats};
 use crate::metrics::OnlineMetrics;
-use crate::sim::{self, Job, JobSource};
+use crate::sim::{self, Completion, CompletionSink, Job, JobSource};
 use crate::stats::Repetitions;
 use crate::util::pool;
 use std::collections::HashMap;
@@ -44,9 +44,12 @@ pub fn mst_of(spec: &PolicySpec, jobs: &[Job]) -> f64 {
 }
 
 /// MST with an explicit build seed (cluster random dispatch, estimator
-/// noise); the planner passes the cell's repetition seed.
+/// noise); the planner passes the cell's repetition seed.  Builds via
+/// [`PolicySpec::build_sweep`]: sweep cells never cancel jobs, so the
+/// dense heaps skip their seq→slot index (pure accelerator — results
+/// are bit-identical to the indexed build, pinned per discipline).
 pub fn mst_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> f64 {
-    let mut s = spec.build_seeded(seed);
+    let mut s = spec.build_sweep(seed);
     sim::run(s.as_mut(), jobs).mst(jobs)
 }
 
@@ -61,7 +64,7 @@ pub fn slowdowns_of(spec: &PolicySpec, jobs: &[Job]) -> Vec<f64> {
 /// (cluster random dispatch, estimator noise) draw independent streams
 /// per repetition.  Base disciplines ignore the seed.
 pub fn slowdowns_of_seeded(spec: &PolicySpec, jobs: &[Job], seed: u64) -> Vec<f64> {
-    let mut s = spec.build_seeded(seed);
+    let mut s = spec.build_sweep(seed);
     sim::run(s.as_mut(), jobs).slowdowns(jobs)
 }
 
@@ -77,8 +80,87 @@ pub fn stream_rep_seeded(
     seed: u64,
     m: &mut OnlineMetrics,
 ) {
-    let mut s = spec.build_seeded(seed);
+    let mut s = spec.build_sweep(seed);
     sim::run_streaming(s.as_mut(), source, m);
+}
+
+/// Sink behind [`stream_mst_seeded`]: folds arrivals and completions
+/// into a per-id sojourn buffer, then sums it **in id order** — the
+/// exact (plain left-to-right f64) fold `SimResult::mst` performs, so
+/// the streamed value is bit-identical to the materialized one.  The
+/// buffer is one f64 per job — the only O(n) state the streamed path
+/// keeps (a materialized rep holds the jobs *and* a completion vector).
+#[derive(Default)]
+struct MstSink {
+    /// arrival time until completion, then sojourn (c.time - arrival).
+    sojourn: Vec<f64>,
+}
+
+impl CompletionSink for MstSink {
+    fn on_arrival(&mut self, _now: f64, job: &Job) {
+        debug_assert_eq!(job.id as usize, self.sojourn.len(), "stream sources yield dense ids");
+        self.sojourn.push(job.arrival);
+    }
+    fn on_completion(&mut self, _time: f64, c: &Completion) {
+        let i = c.id as usize;
+        self.sojourn[i] = c.time - self.sojourn[i];
+    }
+}
+
+impl MstSink {
+    fn mst(&self) -> f64 {
+        self.sojourn.iter().sum::<f64>() / self.sojourn.len().max(1) as f64
+    }
+}
+
+/// Streaming counterpart of [`mst_of_seeded`]: arrivals flow straight
+/// from the workload's stream source into the engine — the repetition's
+/// job vector is never materialized.  Bit-identical to the
+/// materialized path (same engine loop, same id-order summation);
+/// `SweepCell::eval` uses it for fault-free synthetic mean cells.
+pub fn stream_mst_seeded(spec: &PolicySpec, w: &WorkloadSpec, seed: u64) -> f64 {
+    stream_mst_seeded_at(spec, w, seed, seed)
+}
+
+/// Presents every job of a wrapped source with `est = size` — the
+/// streaming analogue of [`super::exact_copy`], feeding clairvoyant
+/// reference runs without materializing the copied workload.
+struct ExactView<'a>(&'a mut dyn JobSource);
+
+impl JobSource for ExactView<'_> {
+    fn peek_arrival(&mut self) -> Option<f64> {
+        self.0.peek_arrival()
+    }
+    fn next_job(&mut self) -> Option<Job> {
+        self.0.next_job().map(|j| Job { est: j.size, ..j })
+    }
+}
+
+/// Streamed reference MST (the denominator of ratio cells), built at
+/// seed 0 exactly like [`Reference::mst`]: PS over the same arrival
+/// stream, or clairvoyant SRPT over an `est = size` view of it.
+pub fn stream_reference_mst(r: Reference, w: &WorkloadSpec, rep_seed: u64) -> f64 {
+    match r {
+        Reference::Ps => stream_mst_seeded_at(&PolicySpec::Base(BasePolicy::Ps), w, rep_seed, 0),
+        Reference::OptSrpt => {
+            let mut s = PolicySpec::Base(BasePolicy::Srpt).build_sweep(0);
+            let mut src = w.stream_source(rep_seed);
+            let mut exact = ExactView(src.as_mut());
+            let mut sink = MstSink::default();
+            sim::run_streaming(s.as_mut(), &mut exact, &mut sink);
+            sink.mst()
+        }
+    }
+}
+
+/// [`stream_mst_seeded`] with the workload seed and the policy build
+/// seed decoupled (references are always seed-0 builds).
+fn stream_mst_seeded_at(spec: &PolicySpec, w: &WorkloadSpec, rep_seed: u64, build: u64) -> f64 {
+    let mut s = spec.build_sweep(build);
+    let mut src = w.stream_source(rep_seed);
+    let mut sink = MstSink::default();
+    sim::run_streaming(s.as_mut(), src.as_mut(), &mut sink);
+    sink.mst()
 }
 
 /// One fault-injected repetition: build the policy through
@@ -447,6 +529,41 @@ mod tests {
         assert_eq!(m.count(), jobs.len() as u64);
         let got = m.mst().unwrap();
         assert!((got - want).abs() <= 1e-9 * want.abs().max(1.0), "got {got} want {want}");
+    }
+
+    /// Satellite pin: the streamed mean path never materializes the
+    /// repetition's jobs yet is **bit-identical** to the materialized
+    /// one — across disciplines (including a seeded estimator overlay
+    /// and a hybrid) and repetition seeds.
+    #[test]
+    fn streamed_mst_is_bit_identical_to_materialized() {
+        let w: WorkloadSpec = SynthConfig::default().with_njobs(250).into();
+        for policy in ["psbs", "srpte+ps", "fspe", "las", "mlfq", "est(sigma=0.7,inner=srpt)"] {
+            let spec: PolicySpec = policy.into();
+            for r in 0..3u64 {
+                let seed = w.rep_seed(11, r);
+                let jobs = w.synthesize(seed);
+                let want = mst_of_seeded(&spec, &jobs, seed);
+                let got = stream_mst_seeded(&spec, &w, seed);
+                assert_eq!(want.to_bits(), got.to_bits(), "{policy} rep {r}");
+            }
+        }
+    }
+
+    /// The streamed references match [`Reference::mst`] bitwise: PS on
+    /// the raw stream, clairvoyant SRPT on the `est = size` view.
+    #[test]
+    fn streamed_references_are_bit_identical() {
+        let w: WorkloadSpec = SynthConfig::default().with_njobs(250).into();
+        for r in 0..3u64 {
+            let seed = w.rep_seed(5, r);
+            let jobs = w.synthesize(seed);
+            for reference in [Reference::Ps, Reference::OptSrpt] {
+                let want = reference.mst(&jobs);
+                let got = stream_reference_mst(reference, &w, seed);
+                assert_eq!(want.to_bits(), got.to_bits(), "{reference:?} rep {r}");
+            }
+        }
     }
 
     #[test]

@@ -36,7 +36,7 @@
 use crate::coordinator::{Cluster, Dispatch};
 use crate::estimate::{self, Estimator};
 use crate::sched;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, Job, JobId, JobStore, Scheduler};
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -139,6 +139,35 @@ impl BasePolicy {
         match self {
             BasePolicy::FspNaive => 100.0,
             _ => 1.0,
+        }
+    }
+
+    /// [`BasePolicy::build`] with the dense seq→slot heap index made
+    /// opt-in: `indexed = false` builds the disciplines that maintain
+    /// one (DPS, the FSP family, the SRPTE hybrids) without it.  The
+    /// index only accelerates `cancel`; with no kill path in the
+    /// deployment it is pure overhead, and dropping it cannot change
+    /// results (`remove_by_seq` falls back to an O(n) scan — pinned
+    /// bitwise by the per-discipline `unindexed_matches_indexed` tests).
+    pub fn build_with(self, indexed: bool) -> Box<dyn Scheduler> {
+        if indexed {
+            return self.build();
+        }
+        match self {
+            BasePolicy::Ps => Box::new(sched::ps::Dps::ps().unindexed()),
+            BasePolicy::Dps => Box::new(sched::ps::Dps::new().unindexed()),
+            BasePolicy::Fsp | BasePolicy::Fspe => {
+                Box::new(sched::fsp_family::FspFamily::fspe().unindexed())
+            }
+            BasePolicy::FspePs => Box::new(sched::fsp_family::FspFamily::fspe_ps().unindexed()),
+            BasePolicy::FspeLas => Box::new(sched::fsp_family::FspFamily::fspe_las().unindexed()),
+            BasePolicy::Psbs => Box::new(sched::fsp_family::Psbs::new().unindexed()),
+            BasePolicy::PsbsPaperlit => {
+                Box::new(sched::fsp_family::FspFamily::psbs_paper_literal().unindexed())
+            }
+            BasePolicy::SrptePs => Box::new(sched::srpte_hybrid::SrpteHybrid::ps().unindexed()),
+            BasePolicy::SrpteLas => Box::new(sched::srpte_hybrid::SrpteHybrid::las().unindexed()),
+            other => other.build(),
         }
     }
 }
@@ -440,6 +469,24 @@ impl PolicySpec {
         self.build_seeded(0)
     }
 
+    /// Sweep-deployment build: like [`PolicySpec::build_seeded`] but
+    /// with the dense seq→slot heap index left off wherever no kill
+    /// path can reach it — bare disciplines and estimator inners.
+    /// Cluster and speculate layers keep the index: their crash and
+    /// backup-kill machinery cancels through it.  The index is a pure
+    /// accelerator, so results are bit-identical either way.
+    pub fn build_sweep(&self, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            PolicySpec::Base(b) => b.build_with(false),
+            PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
+                est.build(),
+                inner.build_sweep(seed.wrapping_add(*s0)),
+                seed.wrapping_add(*s0),
+            )),
+            _ => self.build_seeded(seed),
+        }
+    }
+
     /// Relative cost of simulating one workload under this policy —
     /// the planner's chunking weight (largest-first dispatch keeps a
     /// stray fsp-naive cell from serializing the tail of a sweep).
@@ -624,11 +671,17 @@ pub struct Estimated {
     est: Box<dyn Estimator>,
     inner: Box<dyn Scheduler>,
     rng: Rng,
+    /// Shadow store with the estimator-rewritten `est` column: the
+    /// inner discipline reads job fields from this overlay instead of
+    /// the caller's store.  Sparse-overlay discipline (see the store
+    /// module docs): rows are written by `upsert` and only completed
+    /// prefixes retire, so crash re-dispatch re-arrivals stay legal.
+    overlay: JobStore,
 }
 
 impl Estimated {
     pub fn new(est: Box<dyn Estimator>, inner: Box<dyn Scheduler>, seed: u64) -> Estimated {
-        Estimated { est, inner, rng: Rng::new(seed ^ 0xE57) }
+        Estimated { est, inner, rng: Rng::new(seed ^ 0xE57), overlay: JobStore::new() }
     }
 }
 
@@ -637,17 +690,25 @@ impl Scheduler for Estimated {
         "estimated"
     }
 
-    fn on_arrival(&mut self, now: f64, job: &Job) {
-        let est = self.est.estimate(job.size, &mut self.rng).max(1e-12);
-        self.inner.on_arrival(now, &Job { est, ..*job });
+    fn on_arrival(&mut self, now: f64, id: JobId, store: &JobStore) {
+        let est = self.est.estimate(store.size(id), &mut self.rng).max(1e-12);
+        self.overlay.upsert(&Job { est, ..store.job(id) });
+        self.inner.on_arrival(now, id, &self.overlay);
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
         self.inner.next_event(now)
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
-        self.inner.advance(now, t, done)
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
+        let before = done.len();
+        self.inner.advance(now, t, &self.overlay, done);
+        if done.len() > before {
+            for c in &done[before..] {
+                self.overlay.mark_completed(c.id);
+            }
+            self.overlay.retire_completed();
+        }
     }
 
     fn active(&self) -> usize {
@@ -655,7 +716,11 @@ impl Scheduler for Estimated {
     }
 
     fn cancel(&mut self, now: f64, id: u32) -> bool {
-        self.inner.cancel(now, id)
+        let ok = self.inner.cancel(now, id);
+        if ok {
+            self.overlay.mark_cancelled(id);
+        }
+        ok
     }
 
     fn fault_stats(&self) -> Option<crate::coordinator::FaultStats> {

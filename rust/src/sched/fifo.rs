@@ -4,7 +4,7 @@
 //! limit case of a size-based scheduler whose estimates carry no
 //! information (§7.3).
 
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 use std::collections::VecDeque;
 
@@ -26,15 +26,15 @@ impl Scheduler for Fifo {
         "fifo"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
-        self.queue.push_back((job.id, job.size));
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        self.queue.push_back((id, store.size(id)));
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
         self.queue.front().map(|&(_, rem)| now + rem)
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let mut budget = t - now;
         while let Some((id, rem)) = self.queue.front_mut() {
             if *rem <= budget + EPS {
@@ -72,7 +72,7 @@ impl Scheduler for Fifo {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn serial_in_arrival_order() {
@@ -106,18 +106,19 @@ mod tests {
     #[test]
     fn cancel_head_and_waiter() {
         let mut s = Fifo::new();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 5.0));
-        s.on_arrival(0.0, &Job::exact(1, 0.0, 1.0));
-        s.on_arrival(0.0, &Job::exact(2, 0.0, 1.0));
-        s.advance(0.0, 2.0, &mut done); // head J0 has 3 left
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 5.0));
+        st.deliver(&mut s, 0.0, &Job::exact(1, 0.0, 1.0));
+        st.deliver(&mut s, 0.0, &Job::exact(2, 0.0, 1.0));
+        s.advance(0.0, 2.0, &st, &mut done); // head J0 has 3 left
         assert!(s.cancel(2.0, 0), "kill the served head");
         assert!(s.cancel(2.0, 2), "kill a waiter");
         assert!(!s.cancel(2.0, 0), "double kill must fail");
         // J1 is now the head with its full size: done at 3.
         let ev = s.next_event(2.0).unwrap();
         assert!((ev - 3.0).abs() < 1e-9, "promoted head event at {ev}");
-        s.advance(2.0, ev, &mut done);
+        s.advance(2.0, ev, &st, &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
         assert_eq!(s.active(), 0);

@@ -43,7 +43,7 @@
 
 use super::late_set::{CompensatedSum, LateSet};
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 pub use super::late_set::LateMode;
@@ -150,12 +150,20 @@ impl FspFamily {
         self.o.len() + self.e.len()
     }
 
-    fn weight_of(&self, job: &Job) -> f64 {
+    fn weight_of(&self, weight: f64) -> f64 {
         if self.use_weights {
-            job.weight
+            weight
         } else {
             1.0
         }
+    }
+
+    /// Rebuild with a plain (unindexed) `O` heap — the opt-in escape
+    /// hatch for sweep deployments with no kill path (see
+    /// `PolicySpec::build_sweep`).  Only valid on a fresh instance.
+    pub fn unindexed(self) -> Self {
+        debug_assert_eq!(self.o.len(), 0, "unindexed() only on fresh instances");
+        FspFamily { o: MinHeap::new(), ..self }
     }
 
     /// `NextVirtualCompletionTime` (Algorithm 1): when `g` reaches the
@@ -257,13 +265,28 @@ impl Scheduler for FspFamily {
 
     /// `JobArrival` (Algorithm 1): O(1) amortized — one heap push, no
     /// updates to other jobs.
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
         // The engine has already advanced state (UpdateVirtualTime) to
         // `now`.
-        let w = self.weight_of(job);
-        let g_i = self.g + job.est / w;
-        self.o.push(g_i, job.id as u64, OJob { weight: w, true_rem: job.size, size: job.size });
+        let size = store.size(id);
+        let w = self.weight_of(store.weight(id));
+        let g_i = self.g + store.est(id) / w;
+        self.o.push(g_i, id as u64, OJob { weight: w, true_rem: size, size });
         self.w_v.add(w);
+    }
+
+    /// Explicit batch-admission hook for the FSP family: today the
+    /// body is the same per-id loop as the trait default (delivery
+    /// order and every fp operation identical, so results stay
+    /// bit-identical to per-job delivery); it exists so a future bulk
+    /// admission — e.g. building the burst's O-heap entries with one
+    /// heapify instead of per-push sifts — lands here without touching
+    /// the trait.  `inline(always)` on `on_arrival` is not needed: the
+    /// loop monomorphizes against `Self`, so the calls are static.
+    fn on_arrival_batch(&mut self, now: f64, ids: std::ops::Range<JobId>, store: &JobStore) {
+        for id in ids {
+            self.on_arrival(now, id, store);
+        }
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
@@ -291,7 +314,7 @@ impl Scheduler for FspFamily {
         }
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
 
         // ---- real progress over [now, t) (rates constant inside) ----
@@ -345,7 +368,7 @@ impl Scheduler for FspFamily {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     /// The paper's Fig. 2 worked example, end to end.
     #[test]
@@ -357,17 +380,18 @@ mod tests {
             Job::exact(2, 5.0, 2.0),
         ];
         let mut s = Psbs::new();
+        let mut st = crate::sim::JobStore::new();
         // Drive arrivals manually to inspect the lag values the paper
         // quotes: g1 = 10, g2 = 3 + 5 = 8, g3 = 4 + 2 = 6.
         let mut done = Vec::new();
-        s.on_arrival(0.0, &jobs[0]);
+        st.deliver(&mut s, 0.0, &jobs[0]);
         assert!((head_g(&s.o) - 10.0).abs() < 1e-12);
-        s.advance(0.0, 3.0, &mut done);
+        s.advance(0.0, 3.0, &st, &mut done);
         assert!((s.g - 3.0).abs() < 1e-12);
-        s.on_arrival(3.0, &jobs[1]);
-        s.advance(3.0, 5.0, &mut done);
+        st.deliver(&mut s, 3.0, &jobs[1]);
+        s.advance(3.0, 5.0, &st, &mut done);
         assert!((s.g - 4.0).abs() < 1e-12, "g={} (paper: 4)", s.g);
-        s.on_arrival(5.0, &jobs[2]);
+        st.deliver(&mut s, 5.0, &jobs[2]);
         // g3 = 4 + 2/1 = 6 and J3 is now the virtual-order head.
         assert!((head_g(&s.o) - 6.0).abs() < 1e-12);
 
@@ -493,10 +517,11 @@ mod tests {
     fn cancel_late_job_every_mode() {
         for mk in [FspFamily::fspe, FspFamily::fspe_ps, FspFamily::fspe_las, FspFamily::new] {
             let mut s = mk();
+            let mut st = crate::sim::JobStore::new();
             // Underestimated: goes late at t=1 while really pending.
-            s.on_arrival(0.0, &Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 });
+            st.deliver(&mut s, 0.0, &Job { id: 0, arrival: 0.0, size: 4.0, est: 1.0, weight: 1.0 });
             let mut done = Vec::new();
-            s.advance(0.0, 1.5, &mut done);
+            s.advance(0.0, 1.5, &st, &mut done);
             assert!(done.is_empty(), "{}: nothing really completes by 1.5", s.name());
             assert_eq!(s.late.len(), 1, "{}: job must be late", s.name());
             assert!(s.cancel(1.5, 0), "{}", s.name());

@@ -8,7 +8,7 @@
 //! virtual-lag trick removes).  Real side is identical to plain FSPE:
 //! serve the earliest virtual completer; late jobs run serially.
 
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 #[derive(Debug, Clone, Copy)]
@@ -67,13 +67,13 @@ impl Scheduler for FspNaive {
         "fsp-naive"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
         // O(n) by construction: nothing to update here, but every
         // `advance` touches all virtually-pending jobs.
         self.jobs.push(NJob {
-            id: job.id,
-            virt_rem: job.est,
-            true_rem: job.size,
+            id,
+            virt_rem: store.est(id),
+            true_rem: store.size(id),
             virt_order: usize::MAX,
         });
     }
@@ -101,7 +101,7 @@ impl Scheduler for FspNaive {
         }
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
         // Real progress.
         if let Some(i) = self.serving() {
@@ -166,7 +166,7 @@ impl Scheduler for FspNaive {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn fig2_example_matches_fsp() {

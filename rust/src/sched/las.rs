@@ -32,7 +32,7 @@
 //! considered for the other.
 
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 use std::collections::{HashMap, VecDeque};
 
@@ -86,22 +86,23 @@ impl Scheduler for Las {
         "las"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let size = store.size(id);
         self.active += 1;
         // Attained service of a new job is 0 — it belongs to the front
         // level iff that level has attained 0 (never served).
         match self.levels.front_mut() {
             Some(front) if front.attained <= EPS => {
-                front.jobs.push(job.size, job.id as u64, ());
-                self.where_is.insert(job.id, front.tag);
+                front.jobs.push(size, id as u64, ());
+                self.where_is.insert(id, front.tag);
             }
             _ => {
                 let tag = self.next_tag;
                 self.next_tag = self.next_tag.wrapping_add(1);
                 let mut jobs = MinHeap::new();
-                jobs.push(job.size, job.id as u64, ());
+                jobs.push(size, id as u64, ());
                 self.levels.push_front(Level { tag, attained: 0.0, jobs });
-                self.where_is.insert(job.id, tag);
+                self.where_is.insert(id, tag);
             }
         }
     }
@@ -110,7 +111,7 @@ impl Scheduler for Las {
         self.next_dt().map(|dt| now + dt.max(0.0))
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let Some(front) = self.levels.front_mut() else { return };
         let k = front.jobs.len() as f64;
         if k > 0.0 {
@@ -188,7 +189,7 @@ impl Scheduler for Las {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn newcomer_preempts_older_job() {
@@ -271,24 +272,25 @@ mod tests {
     #[test]
     fn cascading_catch_up_merges_every_level() {
         let mut s = Las::new();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
         // Three levels with attained 0 (J2), 3 (J1), 5 (J0).
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 10.0));
-        s.advance(0.0, 5.0, &mut done); // J0 attained 5
-        s.on_arrival(5.0, &Job::exact(1, 5.0, 10.0));
-        s.advance(5.0, 8.0, &mut done); // J1 attained 3
-        s.on_arrival(8.0, &Job::exact(2, 8.0, 10.0));
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 10.0));
+        s.advance(0.0, 5.0, &st, &mut done); // J0 attained 5
+        st.deliver(&mut s, 5.0, &Job::exact(1, 5.0, 10.0));
+        s.advance(5.0, 8.0, &st, &mut done); // J1 attained 3
+        st.deliver(&mut s, 8.0, &Job::exact(2, 8.0, 10.0));
         assert_eq!(s.levels.len(), 3);
         assert!(done.is_empty());
         // J2 (alone, rate 1) attains 5 + a rounding hair: it catches J1
         // *and* the fused pair catches J0 — a cascade in one call.
-        s.advance(8.0, 13.0 + 1e-10, &mut done);
+        s.advance(8.0, 13.0 + 1e-10, &st, &mut done);
         assert!(done.is_empty());
         assert_eq!(s.levels.len(), 1, "cascade must merge every caught level");
         assert_eq!(s.levels[0].jobs.len(), 3);
         // The fused group drains normally.
         let dt = s.next_dt().unwrap();
-        s.advance(13.0, 13.0 + dt, &mut done);
+        s.advance(13.0, 13.0 + dt, &st, &mut done);
         assert_eq!(done.len(), 3, "all three share and finish together");
         assert_eq!(s.active(), 0);
     }
@@ -298,11 +300,12 @@ mod tests {
     #[test]
     fn cancel_any_level() {
         let mut s = Las::new();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 6.0));
-        s.advance(0.0, 2.0, &mut done); // J0 attained 2
-        s.on_arrival(2.0, &Job::exact(1, 2.0, 6.0));
-        s.on_arrival(2.0, &Job::exact(2, 2.0, 6.0));
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 6.0));
+        s.advance(0.0, 2.0, &st, &mut done); // J0 attained 2
+        st.deliver(&mut s, 2.0, &Job::exact(1, 2.0, 6.0));
+        st.deliver(&mut s, 2.0, &Job::exact(2, 2.0, 6.0));
         assert_eq!(s.levels.len(), 2);
         // Kill the deep (already-served) job, then a front job.
         assert!(s.cancel(2.0, 0), "deep-level kill");
@@ -312,7 +315,7 @@ mod tests {
         assert_eq!(s.active(), 1);
         // The survivor completes alone.
         let r_dt = s.next_dt().unwrap();
-        s.advance(2.0, 2.0 + r_dt, &mut done);
+        s.advance(2.0, 2.0 + r_dt, &st, &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
         assert_eq!(s.active(), 0);
@@ -323,13 +326,14 @@ mod tests {
     #[test]
     fn cancel_after_merge_keeps_map_consistent() {
         let mut s = Las::new();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 8.0));
-        s.advance(0.0, 1.0, &mut done); // J0 attained 1
-        s.on_arrival(1.0, &Job::exact(1, 1.0, 8.0));
-        s.on_arrival(1.0, &Job::exact(2, 1.0, 8.0));
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 8.0));
+        s.advance(0.0, 1.0, &st, &mut done); // J0 attained 1
+        st.deliver(&mut s, 1.0, &Job::exact(1, 1.0, 8.0));
+        st.deliver(&mut s, 1.0, &Job::exact(2, 1.0, 8.0));
         // Front {J1,J2} catches J0 at attained 1 (t = 1 + 2).
-        s.advance(1.0, 3.0, &mut done);
+        s.advance(1.0, 3.0, &st, &mut done);
         assert_eq!(s.levels.len(), 1, "catch-up merged");
         for id in [0u32, 1, 2] {
             assert!(s.cancel(3.0, id), "job {id} findable after merge");

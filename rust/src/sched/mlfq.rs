@@ -22,7 +22,7 @@
 //! operation stays O(log n) amortized via the heaps.
 
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 /// One feedback level: jobs PS-share; each job is keyed by the service
@@ -98,13 +98,14 @@ impl Scheduler for Mlfq {
         "mlfq"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let size = store.size(id);
         self.active += 1;
         let l = &mut self.levels[0];
         // Exit point in fluid-progress coordinates: the job leaves
         // level 0 after min(size, ceiling) service; it has had 0.
-        let exit = job.size.min(l.ceiling);
-        l.jobs.push(l.p + exit, job.id as u64, job.size);
+        let exit = size.min(l.ceiling);
+        l.jobs.push(l.p + exit, id as u64, size);
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
@@ -116,7 +117,7 @@ impl Scheduler for Mlfq {
         Some(now + ((key - l.p) * k).max(0.0))
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let Some(lvl) = self.served() else { return };
         let entry = self.entry_of(lvl);
         let next_entry_p = if lvl + 1 < self.levels.len() {
@@ -183,7 +184,7 @@ impl Scheduler for Mlfq {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn single_level_is_ps() {
@@ -244,13 +245,14 @@ mod tests {
     #[test]
     fn cancel_across_levels() {
         let mut s = Mlfq::default_zoo();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 10.0));
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 10.0));
         // Serve long enough that the elephant sinks below level 0
         // (level-0 ceiling is 0.05 in the default zoo).
-        s.advance(0.0, s.next_event(0.0).unwrap(), &mut done);
-        s.on_arrival(1.0, &Job::exact(1, 1.0, 0.04));
-        s.on_arrival(1.0, &Job::exact(2, 1.0, 0.04));
+        s.advance(0.0, s.next_event(0.0).unwrap(), &st, &mut done);
+        st.deliver(&mut s, 1.0, &Job::exact(1, 1.0, 0.04));
+        st.deliver(&mut s, 1.0, &Job::exact(2, 1.0, 0.04));
         assert!(done.is_empty());
         assert!(s.cancel(1.0, 0), "kill the demoted elephant");
         assert!(s.cancel(1.0, 1), "kill a level-0 job");
@@ -258,7 +260,7 @@ mod tests {
         assert!(!s.cancel(1.0, 7), "unknown id must fail");
         assert_eq!(s.active(), 1);
         let ev = s.next_event(1.0).unwrap();
-        s.advance(1.0, ev, &mut done);
+        s.advance(1.0, ev, &st, &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 2);
         assert_eq!(s.active(), 0);

@@ -31,6 +31,25 @@
 //!
 //! All implement [`crate::sim::Scheduler`] and are cross-validated
 //! against the independent small-step oracle in `rust/tests/crossval.rs`.
+//!
+//! ### The store-aware trait contract
+//! Arrivals are delivered as `on_arrival(now, id, store: &JobStore)`:
+//! the job's `arrival`/`size`/`est`/`weight` live once, as columns of
+//! the engine-owned struct-of-arrays [`crate::sim::JobStore`], and a
+//! discipline reads the fields it keys on (`store.size(id)`,
+//! `store.est(id)`, …) instead of receiving a `Job` copy.  A
+//! discipline may read any column of any id it has been delivered and
+//! not yet completed/cancelled, and must copy whatever it needs beyond
+//! that window — the engine retires completed prefix rows to keep
+//! streaming memory O(active).  `advance(now, t, store, done)` borrows
+//! the store too (composite schedulers read job fields mid-step).
+//! Same-instant arrival bursts arrive as one
+//! `on_arrival_batch(now, ids, store)` call whose default body is the
+//! per-id loop: batching is an engine-side dispatch optimization
+//! (one virtual call per burst), never a semantic change — overriders
+//! must deliver in id order, and none of the zoo's disciplines
+//! override it (the bit-identity pins across PRs 1–8 rely on the
+//! one-by-one fp operation order).
 
 pub mod fifo;
 pub mod fsp_family;

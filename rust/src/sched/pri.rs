@@ -9,7 +9,7 @@
 //! `rust/tests/dominance.rs` exercise this scheduler directly.
 
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 /// Serve jobs serially in a fixed priority order.
@@ -58,16 +58,16 @@ impl Scheduler for Pri {
         "pri"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
-        let rank = self.position[job.id as usize];
-        self.pending.push(rank as f64, job.id as u64, job.size);
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let rank = self.position[id as usize];
+        self.pending.push(rank as f64, id as u64, store.size(id));
     }
 
     fn next_event(&self, now: f64) -> Option<f64> {
         self.pending.peek().map(|(_, _, rem)| now + rem)
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
         let completed = match self.pending.head_mut() {
             Some(rem) => {
@@ -96,7 +96,7 @@ impl Scheduler for Pri {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn serves_in_sequence_order() {
@@ -151,18 +151,19 @@ mod tests {
     #[test]
     fn cancel_served_job_promotes_next_in_sequence() {
         let mut s = Pri::new(&[0, 1, 2]);
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
         for i in 0..3u32 {
-            s.on_arrival(0.0, &Job::exact(i, 0.0, 2.0));
+            st.deliver(&mut s, 0.0, &Job::exact(i, 0.0, 2.0));
         }
-        s.advance(0.0, 1.0, &mut done); // J0 served, 1 left
+        s.advance(0.0, 1.0, &st, &mut done); // J0 served, 1 left
         assert!(s.cancel(1.0, 0));
         assert!(s.cancel(1.0, 2), "waiting job killable too");
         assert!(!s.cancel(1.0, 0), "double kill must fail");
         assert_eq!(s.active(), 1);
         let ev = s.next_event(1.0).unwrap();
         assert!((ev - 3.0).abs() < 1e-9, "J1 (full size 2) from t=1: {ev}");
-        s.advance(1.0, ev, &mut done);
+        s.advance(1.0, ev, &st, &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
     }

@@ -9,7 +9,7 @@
 //! uses for its *virtual* system; here it runs the *real* one.)
 
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 /// Discriminatory processor sharing (PS when `use_weights` is false or
@@ -40,12 +40,20 @@ impl Dps {
         Dps { use_weights: false, ..Dps::new() }
     }
 
-    fn weight_of(&self, job: &Job) -> f64 {
+    fn weight_of(&self, weight: f64) -> f64 {
         if self.use_weights {
-            job.weight
+            weight
         } else {
             1.0
         }
+    }
+
+    /// Rebuild with plain (unindexed) heaps — the opt-in escape hatch
+    /// for sweep deployments where no kill path exists (see
+    /// `PolicySpec::build_sweep`).  Only valid on a fresh instance.
+    pub fn unindexed(self) -> Self {
+        debug_assert_eq!(self.heap.len(), 0, "unindexed() only on fresh instances");
+        Dps { heap: MinHeap::new(), ..self }
     }
 }
 
@@ -64,11 +72,11 @@ impl Scheduler for Dps {
         }
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
-        let w = self.weight_of(job);
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let w = self.weight_of(store.weight(id));
         // True size: PS is size-oblivious; a job leaves when it has
         // *received* its true service demand.
-        self.heap.push(self.g + job.size / w, job.id as u64, w);
+        self.heap.push(self.g + store.size(id) / w, id as u64, w);
         self.wsum += w;
     }
 
@@ -77,7 +85,7 @@ impl Scheduler for Dps {
         Some(now + (g_min - self.g).max(0.0) * self.wsum)
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         if self.wsum > 0.0 {
             self.g += (t - now) / self.wsum;
         }
@@ -121,7 +129,7 @@ impl Scheduler for Dps {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn two_equal_jobs_share() {
@@ -189,17 +197,18 @@ mod tests {
     #[test]
     fn cancel_releases_the_share() {
         let mut s = Dps::ps();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 4.0));
-        s.on_arrival(0.0, &Job::exact(1, 0.0, 4.0));
-        s.advance(0.0, 2.0, &mut done); // each has 3 remaining
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 4.0));
+        st.deliver(&mut s, 0.0, &Job::exact(1, 0.0, 4.0));
+        s.advance(0.0, 2.0, &st, &mut done); // each has 3 remaining
         assert!(s.cancel(2.0, 0));
         assert!(!s.cancel(2.0, 0), "double kill must fail");
         assert_eq!(s.active(), 1);
         // Survivor now runs at rate 1: done at 2 + 3 = 5.
         let ev = s.next_event(2.0).unwrap();
         assert!((ev - 5.0).abs() < 1e-9, "survivor event at {ev}");
-        s.advance(2.0, ev, &mut done);
+        s.advance(2.0, ev, &st, &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
         assert_eq!(s.active(), 0);
@@ -209,17 +218,33 @@ mod tests {
     #[test]
     fn dps_cancel_reweights() {
         let mut s = Dps::new();
+        let mut st = crate::sim::JobStore::new();
         let mut done = Vec::new();
-        s.on_arrival(0.0, &Job { id: 0, arrival: 0.0, size: 10.0, est: 10.0, weight: 3.0 });
-        s.on_arrival(0.0, &Job { id: 1, arrival: 0.0, size: 2.0, est: 2.0, weight: 1.0 });
+        st.deliver(&mut s, 0.0, &Job { id: 0, arrival: 0.0, size: 10.0, est: 10.0, weight: 3.0 });
+        st.deliver(&mut s, 0.0, &Job { id: 1, arrival: 0.0, size: 2.0, est: 2.0, weight: 1.0 });
         // Rates 3/4, 1/4. At t=1: J0 rem 9.25, J1 rem 1.75.
-        s.advance(0.0, 1.0, &mut done);
+        s.advance(0.0, 1.0, &st, &mut done);
         assert!(s.cancel(1.0, 0));
         // J1 alone at rate 1: done at 1 + 1.75 = 2.75.
         let ev = s.next_event(1.0).unwrap();
         assert!((ev - 2.75).abs() < 1e-9, "survivor event at {ev}");
-        s.advance(1.0, ev, &mut done);
+        s.advance(1.0, ev, &st, &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(s.active(), 0);
+    }
+
+    /// The seq→slot index is a pure accelerator: an unindexed build
+    /// produces bitwise-identical results on a plain sweep workload.
+    #[test]
+    fn unindexed_matches_indexed_bitwise() {
+        let jobs: Vec<Job> = (0..60)
+            .map(|i| Job { id: i, arrival: i as f64 * 0.3, size: 1.0 + (i % 7) as f64, est: 1.0, weight: 1.0 + (i % 3) as f64 })
+            .collect();
+        let a = run(&mut Dps::new(), &jobs);
+        let b = run(&mut Dps::new().unindexed(), &jobs);
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.completion.iter().zip(&b.completion) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

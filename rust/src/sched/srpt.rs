@@ -15,7 +15,7 @@
 //! not served), so a plain min-heap suffices: O(log n) per event.
 
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 #[derive(Debug, Clone, Copy)]
@@ -51,21 +51,20 @@ impl Scheduler for Srpte {
         "srpte"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let (est, size) = (store.est(id), store.size(id));
         match self.serving {
             None => {
-                self.serving =
-                    Some(Serving { id: job.id, est_rem: job.est, true_rem: job.size });
+                self.serving = Some(Serving { id, est_rem: est, true_rem: size });
             }
-            Some(cur) if cur.est_rem > 0.0 && job.est < cur.est_rem => {
+            Some(cur) if cur.est_rem > 0.0 && est < cur.est_rem => {
                 // Preempt: push the current job back with its updated
                 // estimated remainder (still positive).
                 self.waiting.push(cur.est_rem, cur.id as u64, cur.true_rem);
-                self.serving =
-                    Some(Serving { id: job.id, est_rem: job.est, true_rem: job.size });
+                self.serving = Some(Serving { id, est_rem: est, true_rem: size });
             }
             Some(_) => {
-                self.waiting.push(job.est, job.id as u64, job.size);
+                self.waiting.push(est, id as u64, size);
             }
         }
     }
@@ -74,7 +73,7 @@ impl Scheduler for Srpte {
         self.serving.map(|s| now + s.true_rem)
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
         if let Some(s) = self.serving.as_mut() {
             s.true_rem -= dt;
@@ -106,7 +105,7 @@ impl Scheduler for Srpte {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     #[test]
     fn exact_srpt_prefers_short_jobs() {

@@ -24,7 +24,7 @@
 
 use super::late_set::{LateMode, LateSet, Share};
 use super::MinHeap;
-use crate::sim::{Completion, Job, Scheduler};
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
 use crate::util::EPS;
 
 /// How eligible jobs share the server.
@@ -78,6 +78,14 @@ impl SrpteHybrid {
 
     pub fn las() -> Self {
         Self::new(ShareMode::Las)
+    }
+
+    /// Rebuild with a plain (unindexed) waiting heap — the opt-in
+    /// escape hatch for sweep deployments with no kill path (see
+    /// `PolicySpec::build_sweep`).  Only valid on a fresh instance.
+    pub fn unindexed(self) -> Self {
+        debug_assert_eq!(self.waiting.len(), 0, "unindexed() only on fresh instances");
+        SrpteHybrid { waiting: MinHeap::new(), ..self }
     }
 
     fn pull_slot(&mut self) {
@@ -159,18 +167,19 @@ impl Scheduler for SrpteHybrid {
         }
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
-        let fresh = Elig { id: job.id, est_rem: job.est, true_rem: job.size, size: job.size };
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let (est, size) = (store.est(id), store.size(id));
+        let fresh = Elig { id, est_rem: est, true_rem: size, size };
         match self.slot {
             None => self.slot = Some(fresh),
-            Some(cur) if job.est < cur.est_rem => {
+            Some(cur) if est < cur.est_rem => {
                 // The slot job is non-late by construction (it would
                 // have moved to the late set otherwise), so preemption
                 // is purely priority-based.
                 self.waiting.push(cur.est_rem, cur.id as u64, (cur.true_rem, cur.size));
                 self.slot = Some(fresh);
             }
-            Some(_) => self.waiting.push(job.est, job.id as u64, (job.size, job.size)),
+            Some(_) => self.waiting.push(est, id as u64, (size, size)),
         }
     }
 
@@ -210,7 +219,7 @@ impl Scheduler for SrpteHybrid {
         }
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
         let ctx = self.rate_ctx();
         // Late-side progress + completions (rates are step-start, as
@@ -257,7 +266,7 @@ impl Scheduler for SrpteHybrid {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run;
+    use crate::sim::{run, Job};
 
     /// §5.1's motivating example: a late job no longer blocks.
     #[test]
@@ -353,13 +362,14 @@ mod tests {
     fn cancel_from_every_home() {
         for mk in [SrpteHybrid::ps, SrpteHybrid::las] {
             let mut s = mk();
+            let mut st = crate::sim::JobStore::new();
             // J0 underestimated -> will go late; J1 next priority;
             // J2 parks in waiting.
-            s.on_arrival(0.0, &Job { id: 0, arrival: 0.0, size: 5.0, est: 1.0, weight: 1.0 });
-            s.on_arrival(0.0, &Job { id: 1, arrival: 0.0, size: 3.0, est: 3.0, weight: 1.0 });
-            s.on_arrival(0.0, &Job { id: 2, arrival: 0.0, size: 4.0, est: 4.0, weight: 1.0 });
+            st.deliver(&mut s, 0.0, &Job { id: 0, arrival: 0.0, size: 5.0, est: 1.0, weight: 1.0 });
+            st.deliver(&mut s, 0.0, &Job { id: 1, arrival: 0.0, size: 3.0, est: 3.0, weight: 1.0 });
+            st.deliver(&mut s, 0.0, &Job { id: 2, arrival: 0.0, size: 4.0, est: 4.0, weight: 1.0 });
             let mut done = Vec::new();
-            s.advance(0.0, 1.5, &mut done);
+            s.advance(0.0, 1.5, &st, &mut done);
             assert!(done.is_empty(), "{}", s.name());
             assert_eq!(s.late.len(), 1, "{}: J0 must be late", s.name());
             assert!(s.cancel(0.0, 0), "{}: late kill", s.name());

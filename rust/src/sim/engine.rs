@@ -8,10 +8,16 @@
 //!   before arrivals, matching the paper's simulator semantics (a job
 //!   finishing exactly when another arrives does not see it);
 //! * the loop terminates: every internal event either completes a job
-//!   or strictly reduces pending internal work.
+//!   or strictly reduces pending internal work;
+//! * every arrival at one timestamp is delivered as a single
+//!   [`Scheduler::on_arrival_batch`] burst (default body: the per-id
+//!   loop), so the dynamic-dispatch cost is per burst, not per job —
+//!   and each job's fields live once, in the engine-owned [`JobStore`],
+//!   whose completed prefix is retired to keep memory O(active).
 
 use super::job::{Completion, Job};
-use super::source::{CompletionSink, JobSource, SliceSource};
+use super::source::{CompletionSink, JobSource, NullSink, SliceSource};
+use super::store::JobStore;
 use super::Scheduler;
 
 /// Outcome of one simulation run.
@@ -64,7 +70,7 @@ impl SimResult {
 
 /// Run `sched` over `jobs` (sorted by arrival; see `job::validate`).
 pub fn run(sched: &mut dyn Scheduler, jobs: &[Job]) -> SimResult {
-    run_inner(sched, jobs, |_, _| {}, true)
+    run_inner(sched, jobs, &mut NullSink, true)
 }
 
 /// Like [`run`], but tolerant of jobs that never complete: fault
@@ -73,16 +79,19 @@ pub fn run(sched: &mut dyn Scheduler, jobs: &[Job]) -> SimResult {
 /// completion times.  Fault-free schedulers behave exactly as under
 /// [`run`] — the stepping code is shared.
 pub fn run_to_drain(sched: &mut dyn Scheduler, jobs: &[Job]) -> SimResult {
-    run_inner(sched, jobs, |_, _| {}, false)
+    run_inner(sched, jobs, &mut NullSink, false)
 }
 
-/// Like [`run`], invoking `observe(time, &completion)` on every real
-/// completion — used by the online service and the progress meters.
-pub fn run_with_observer<F>(sched: &mut dyn Scheduler, jobs: &[Job], observe: F) -> SimResult
-where
-    F: FnMut(f64, &Completion),
-{
-    run_inner(sched, jobs, observe, true)
+/// Like [`run`], forwarding every arrival and completion to `sink` as
+/// it happens — [`CompletionSink`] is the single completion-consumption
+/// API (the former closure-observer adapter folded into it).  The
+/// returned [`SimResult`] is bit-identical to [`run`]'s.
+pub fn run_with_sink(
+    sched: &mut dyn Scheduler,
+    jobs: &[Job],
+    sink: &mut dyn CompletionSink,
+) -> SimResult {
+    run_inner(sched, jobs, sink, true)
 }
 
 /// Counters from one streaming run (there is no per-job `completion`
@@ -101,11 +110,11 @@ pub struct StreamStats {
 
 /// Run `sched` over a streaming arrival `source`, pushing every
 /// completion into `sink`.  Memory is O(active + late) plus whatever
-/// the sink keeps: nothing per-total-job is retained here.  On a
-/// materialized workload this loop is *the same loop* as [`run`] —
-/// `run`/`run_to_drain`/`run_with_observer` are thin adapters over it
-/// (a [`SliceSource`] plus a completion-recording sink), so the two
-/// paths cannot drift apart.
+/// the sink keeps: the engine-owned [`JobStore`] retires its completed
+/// prefix as the run progresses.  On a materialized workload this loop
+/// is *the same loop* as [`run`] — `run`/`run_to_drain`/
+/// [`run_with_sink`] are thin adapters over it (a [`SliceSource`] plus
+/// a completion-recording sink), so the two paths cannot drift apart.
 pub fn run_streaming(
     sched: &mut dyn Scheduler,
     source: &mut dyn JobSource,
@@ -128,6 +137,12 @@ pub fn run_streaming_to_drain(
 /// the materialized adapters monomorphize to exactly the direct code
 /// they replaced; the public streaming entry points instantiate it
 /// with trait objects.
+///
+/// The loop owns the [`JobStore`]: jobs are pushed as the source
+/// yields them, every arrival at one timestamp is handed to the
+/// scheduler as a single `on_arrival_batch` burst, completions flip
+/// the store's state ledger, and the completed prefix is retired so a
+/// 10^6-job streaming run holds O(active) rows.
 fn stream_inner<S, K>(
     sched: &mut dyn Scheduler,
     source: &mut S,
@@ -138,6 +153,7 @@ where
     S: JobSource + ?Sized,
     K: CompletionSink + ?Sized,
 {
+    let mut store = JobStore::new();
     let mut done: Vec<Completion> = Vec::with_capacity(16);
     let mut now = 0.0_f64;
     let mut events: u64 = 0;
@@ -166,9 +182,10 @@ where
         let t = t.max(now);
 
         done.clear();
-        sched.advance(now, t, &mut done);
+        sched.advance(now, t, &store, &mut done);
         for c in &done {
             completed += 1;
+            store.mark_completed(c.id);
             // The completion's own time, not the event-merge time `t`:
             // schedulers may report completions that landed strictly
             // inside [now, t] (chained sub-EPS completions, composite
@@ -176,16 +193,22 @@ where
             // must see the same instant the recorded results use.
             sink.on_completion(c.time, c);
         }
+        if !done.is_empty() {
+            store.retire();
+        }
 
         now = t;
         if is_arrival {
-            // Deliver every arrival at exactly this time.
+            // Pull every arrival at exactly this time into the store,
+            // then deliver the whole burst in ONE scheduler call.
+            let first = store.next_id();
             while matches!(source.peek_arrival(), Some(a) if a <= now) {
                 let job = source.next_job().expect("peeked an arrival but the source is empty");
                 sink.on_arrival(now, &job);
-                sched.on_arrival(now, &job);
+                store.push(&job);
                 delivered += 1;
             }
+            sched.on_arrival_batch(now, first..store.next_id(), &store);
         } else {
             events += 1;
             // An internal event with no completion must still make
@@ -220,24 +243,31 @@ where
 }
 
 /// Sink backing the materialized adapters: records each completion
-/// time into the dense per-id vector and forwards to the observer.
-struct Recorder<'a, F> {
+/// time into the dense per-id vector and forwards both callbacks to
+/// the caller's sink.
+struct Recorder<'a> {
     completion: &'a mut [f64],
-    observe: F,
+    inner: &'a mut dyn CompletionSink,
 }
 
-impl<F: FnMut(f64, &Completion)> CompletionSink for Recorder<'_, F> {
+impl CompletionSink for Recorder<'_> {
+    fn on_arrival(&mut self, now: f64, job: &Job) {
+        self.inner.on_arrival(now, job);
+    }
+
     fn on_completion(&mut self, time: f64, c: &Completion) {
         debug_assert!(self.completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
         self.completion[c.id as usize] = c.time;
-        (self.observe)(time, c);
+        self.inner.on_completion(time, c);
     }
 }
 
-fn run_inner<F>(sched: &mut dyn Scheduler, jobs: &[Job], observe: F, require_all: bool) -> SimResult
-where
-    F: FnMut(f64, &Completion),
-{
+fn run_inner(
+    sched: &mut dyn Scheduler,
+    jobs: &[Job],
+    sink: &mut dyn CompletionSink,
+    require_all: bool,
+) -> SimResult {
     // The recorder indexes `completion[c.id]` and the slice source
     // walks `jobs` as a time-ordered stream: ids that aren't the dense
     // indices 0..n or out-of-order arrivals would silently corrupt
@@ -249,8 +279,8 @@ where
 
     let mut completion = vec![f64::NAN; jobs.len()];
     let mut source = SliceSource::new(jobs);
-    let mut sink = Recorder { completion: &mut completion, observe };
-    let stats = stream_inner(sched, &mut source, &mut sink, require_all);
+    let mut rec = Recorder { completion: &mut completion, inner: sink };
+    let stats = stream_inner(sched, &mut source, &mut rec, require_all);
     if require_all {
         debug_assert_eq!(stats.completed as usize, jobs.len(), "not all jobs completed");
     }
@@ -260,6 +290,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::store::JobId;
 
     /// Trivial serial FIFO used to test the engine contract itself.
     struct SerialFifo {
@@ -270,13 +301,13 @@ mod tests {
         fn name(&self) -> &'static str {
             "test-fifo"
         }
-        fn on_arrival(&mut self, _now: f64, job: &Job) {
-            self.queue.push_back((job.id, job.size));
+        fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+            self.queue.push_back((id, store.size(id)));
         }
         fn next_event(&self, now: f64) -> Option<f64> {
             self.queue.front().map(|(_, rem)| now + rem)
         }
-        fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
             let mut dt = t - now;
             while let Some((id, rem)) = self.queue.front_mut() {
                 if *rem <= dt + crate::util::EPS {
@@ -350,13 +381,45 @@ mod tests {
         run(&mut s, &jobs);
     }
 
+    /// Counting sink for the sink-forwarding adapters.
+    struct CountSink {
+        arrivals: usize,
+        completions: usize,
+    }
+
+    impl CompletionSink for CountSink {
+        fn on_arrival(&mut self, _now: f64, _job: &Job) {
+            self.arrivals += 1;
+        }
+        fn on_completion(&mut self, _time: f64, _c: &Completion) {
+            self.completions += 1;
+        }
+    }
+
     #[test]
-    fn observer_sees_every_completion() {
+    fn sink_sees_every_arrival_and_completion() {
         let jobs: Vec<Job> = (0..10).map(|i| Job::exact(i, i as f64 * 0.1, 0.5)).collect();
         let mut s = SerialFifo { queue: Default::default() };
-        let mut seen = 0;
-        run_with_observer(&mut s, &jobs, |_, _| seen += 1);
-        assert_eq!(seen, 10);
+        let mut sink = CountSink { arrivals: 0, completions: 0 };
+        let r = run_with_sink(&mut s, &jobs, &mut sink);
+        assert_eq!(sink.arrivals, 10);
+        assert_eq!(sink.completions, 10);
+        assert_eq!(r.completed(), 10);
+    }
+
+    /// `run_with_sink` is `run` plus a tap: identical results, bitwise.
+    #[test]
+    fn run_with_sink_matches_run_bitwise() {
+        let jobs: Vec<Job> = (0..50).map(|i| Job::exact(i, i as f64 * 0.3, 1.7)).collect();
+        let mut a = SerialFifo { queue: Default::default() };
+        let want = run(&mut a, &jobs);
+        let mut b = SerialFifo { queue: Default::default() };
+        let mut sink = CountSink { arrivals: 0, completions: 0 };
+        let got = run_with_sink(&mut b, &jobs, &mut sink);
+        assert_eq!(want.events, got.events);
+        let wb: Vec<u64> = want.completion.iter().map(|c| c.to_bits()).collect();
+        let gb: Vec<u64> = got.completion.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(wb, gb);
     }
 
     /// A FIFO that batches: `next_event` reports only the time its
@@ -372,8 +435,8 @@ mod tests {
         fn name(&self) -> &'static str {
             "test-batching-fifo"
         }
-        fn on_arrival(&mut self, _now: f64, job: &Job) {
-            self.queue.push_back((job.id, job.size));
+        fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+            self.queue.push_back((id, store.size(id)));
         }
         fn next_event(&self, now: f64) -> Option<f64> {
             if self.queue.is_empty() {
@@ -381,7 +444,7 @@ mod tests {
             }
             Some(now + self.queue.iter().map(|(_, r)| r).sum::<f64>())
         }
-        fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+        fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
             let mut dt = t - now;
             let mut at = now;
             while let Some((id, rem)) = self.queue.front_mut() {
@@ -402,26 +465,37 @@ mod tests {
         }
     }
 
-    /// The observer must receive each completion's own `c.time`, not
-    /// the event-merge time `t` — they differ when a completion lands
-    /// mid-interval (this pins the PR's engine bugfix).
+    /// Recording sink used by the completion-time pin below.
+    struct TimesSink {
+        observed: Vec<(f64, u32, f64)>,
+    }
+
+    impl CompletionSink for TimesSink {
+        fn on_completion(&mut self, time: f64, c: &Completion) {
+            self.observed.push((time, c.id, c.time));
+        }
+    }
+
+    /// The sink must receive each completion's own `c.time`, not the
+    /// event-merge time `t` — they differ when a completion lands
+    /// mid-interval (this pins the PR-6 engine bugfix).
     #[test]
-    fn observer_gets_completion_time_not_merge_time() {
+    fn sink_gets_completion_time_not_merge_time() {
         let jobs = vec![
             Job::exact(0, 0.0, 1.0),
             Job::exact(1, 0.0, 2.0),
             Job::exact(2, 0.0, 3.0),
         ];
         let mut s = BatchingFifo { queue: Default::default() };
-        let mut observed: Vec<(f64, u32, f64)> = Vec::new();
-        let r = run_with_observer(&mut s, &jobs, |time, c| observed.push((time, c.id, c.time)));
+        let mut sink = TimesSink { observed: Vec::new() };
+        let r = run_with_sink(&mut s, &jobs, &mut sink);
         // Completions land at 1, 3, 6 inside ONE engine step ending at 6.
         assert_eq!(r.completion, vec![1.0, 3.0, 6.0]);
-        assert_eq!(observed.len(), 3);
-        for (time, id, ctime) in observed {
+        assert_eq!(sink.observed.len(), 3);
+        for (time, id, ctime) in sink.observed {
             assert_eq!(
                 time, ctime,
-                "observer for job {id} got merge time {time}, completion time {ctime}"
+                "sink for job {id} got merge time {time}, completion time {ctime}"
             );
         }
     }
@@ -461,5 +535,63 @@ mod tests {
         for (id, time) in sink.seen {
             assert_eq!(r.completion[id as usize].to_bits(), time.to_bits());
         }
+    }
+
+    /// A discipline that *counts* how it is called: the engine must
+    /// coalesce every same-instant arrival group into exactly one
+    /// batch call, and the default batch body must deliver per id in
+    /// order.
+    struct BatchProbe {
+        inner: SerialFifo,
+        batches: Vec<usize>,
+        per_id: Vec<u32>,
+    }
+
+    impl Scheduler for BatchProbe {
+        fn name(&self) -> &'static str {
+            "batch-probe"
+        }
+        fn on_arrival(&mut self, now: f64, id: JobId, store: &JobStore) {
+            self.per_id.push(id);
+            self.inner.on_arrival(now, id, store);
+        }
+        fn on_arrival_batch(&mut self, now: f64, ids: std::ops::Range<JobId>, store: &JobStore) {
+            self.batches.push(ids.len());
+            for id in ids {
+                self.on_arrival(now, id, store);
+            }
+        }
+        fn next_event(&self, now: f64) -> Option<f64> {
+            self.inner.next_event(now)
+        }
+        fn advance(&mut self, now: f64, t: f64, store: &JobStore, done: &mut Vec<Completion>) {
+            self.inner.advance(now, t, store, done)
+        }
+        fn active(&self) -> usize {
+            self.inner.active()
+        }
+    }
+
+    #[test]
+    fn same_instant_arrivals_coalesce_into_one_batch() {
+        // Bursts of 3 at t=0, 2 at t=5 (while work is still pending),
+        // 1 at t=100 (after an idle gap).
+        let jobs = vec![
+            Job::exact(0, 0.0, 4.0),
+            Job::exact(1, 0.0, 4.0),
+            Job::exact(2, 0.0, 4.0),
+            Job::exact(3, 5.0, 1.0),
+            Job::exact(4, 5.0, 1.0),
+            Job::exact(5, 100.0, 1.0),
+        ];
+        let mut s = BatchProbe {
+            inner: SerialFifo { queue: Default::default() },
+            batches: Vec::new(),
+            per_id: Vec::new(),
+        };
+        let r = run(&mut s, &jobs);
+        assert_eq!(s.batches, vec![3, 2, 1], "one batch call per same-instant group");
+        assert_eq!(s.per_id, vec![0, 1, 2, 3, 4, 5], "default body delivers in id order");
+        assert_eq!(r.completed(), 6);
     }
 }

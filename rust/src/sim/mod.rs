@@ -1,10 +1,17 @@
 //! Discrete-event simulation core.
 //!
 //! * [`Job`] / [`Completion`] — the workload unit and its outcome.
+//! * [`JobStore`] — the struct-of-arrays job table (dense ids →
+//!   parallel `arrival`/`size`/`est`/`weight` columns plus the
+//!   engine-owned `attained`/`state` ledger) shared by the engine,
+//!   every scheduler and the coordinator layer.
 //! * [`Scheduler`] — the event-driven discipline interface implemented
-//!   by every policy in [`crate::sched`].
+//!   by every policy in [`crate::sched`]; arrivals are delivered as
+//!   `(id, &JobStore)` so disciplines key their heaps straight off the
+//!   SoA columns instead of copying `Job`s.
 //! * [`engine`] — the event loop merging the arrival stream with each
-//!   scheduler's internal event stream.
+//!   scheduler's internal event stream; same-timestamp arrival bursts
+//!   are coalesced into one [`Scheduler::on_arrival_batch`] call.
 //! * [`smallstep`] — an independent fixed-step integrator over
 //!   allocation functions ω(i,t), used purely as a cross-validation
 //!   oracle for the event-driven implementations.
@@ -13,36 +20,61 @@ pub mod engine;
 pub mod job;
 pub mod smallstep;
 pub mod source;
+pub mod store;
 
 pub use engine::{
-    run, run_streaming, run_streaming_to_drain, run_to_drain, run_with_observer, SimResult,
+    run, run_streaming, run_streaming_to_drain, run_to_drain, run_with_sink, SimResult,
     StreamStats,
 };
 pub use job::{Completion, Job};
 pub use source::{CompletionSink, JobSource, NullSink, SliceSource, VecSource};
+pub use store::{JobId, JobState, JobStore};
 
 /// An event-driven scheduling discipline.
 ///
 /// The engine drives implementations through three calls:
 ///
-/// 1. [`Scheduler::on_arrival`] — a job is released at time `now`
-///    (the engine has already advanced state to `now`).
+/// 1. [`Scheduler::on_arrival`] — job `id` is released at time `now`
+///    (the engine has already advanced state to `now`); the job's
+///    fields live in the borrowed [`JobStore`].  Same-instant arrival
+///    bursts arrive as one [`Scheduler::on_arrival_batch`] call whose
+///    default body is the per-id loop, so batching is an engine-side
+///    optimization no discipline is forced to implement.
 /// 2. [`Scheduler::next_event`] — earliest *future* time (> `now`) at
 ///    which the scheduler's internal state changes discontinuously
 ///    (a real completion, a virtual completion, a service-group
 ///    regroup, a late transition), assuming no further arrivals.
 /// 3. [`Scheduler::advance`] — integrate state forward from `now` to
 ///    `t` (with `t` no later than `next_event`), appending any real
-///    completions that occur exactly at `t`.
+///    completions that occur in `(now, t]`.  The store is borrowed
+///    here too: composite schedulers (cluster re-dispatch, speculative
+///    copies) read job fields for decisions made mid-advance.
 ///
-/// Work conservation, preemption rules and tie-breaking are entirely
-/// the implementation's business; the engine only merges event streams.
+/// Store contract: a discipline may read any column of any id it has
+/// been delivered and not yet completed/cancelled; it must copy what
+/// it needs to outlive that window (the engine retires completed rows
+/// to keep streaming memory O(active)).  Work conservation, preemption
+/// rules and tie-breaking are entirely the implementation's business;
+/// the engine only merges event streams.
 pub trait Scheduler {
     /// Discipline name (used in reports and CSV headers).
     fn name(&self) -> &'static str;
 
-    /// A job arrives. State has already been advanced to `now`.
-    fn on_arrival(&mut self, now: f64, job: &Job);
+    /// Job `id` arrives; its fields are `store` columns.  State has
+    /// already been advanced to `now`.
+    fn on_arrival(&mut self, now: f64, id: JobId, store: &JobStore);
+
+    /// A dense burst of same-instant arrivals, `ids` in arrival (= id)
+    /// order.  The engine coalesces every arrival at one timestamp
+    /// into a single call; the default body is the one-by-one loop
+    /// (monomorphized per discipline, so the per-job calls are static
+    /// dispatch — the virtual-dispatch cost is paid once per burst,
+    /// not once per job).  Overriders must deliver in the same order.
+    fn on_arrival_batch(&mut self, now: f64, ids: std::ops::Range<JobId>, store: &JobStore) {
+        for id in ids {
+            self.on_arrival(now, id, store);
+        }
+    }
 
     /// Earliest future internal event, or `None` if the scheduler is
     /// idle (no pending real work *and* no pending internal events).
@@ -50,7 +82,7 @@ pub trait Scheduler {
 
     /// Advance internal state from `now` to `t >= now`, pushing real
     /// completions (with their exact completion times) onto `done`.
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>);
+    fn advance(&mut self, now: f64, t: f64, store: &JobStore, done: &mut Vec<Completion>);
 
     /// Number of jobs released but not yet really completed.
     fn active(&self) -> usize;

@@ -1,0 +1,371 @@
+//! Struct-of-arrays job store — the shared job-field memory behind the
+//! engine, every discipline in [`crate::sched`] and the coordinator
+//! layer.
+//!
+//! Job ids are already dense (the workload validator enforces it), so
+//! instead of copying five-field [`Job`] structs into every layer, the
+//! engine owns one [`JobStore`] of parallel columns (`arrival`, `size`,
+//! `est`, `weight` plus the engine-owned `attained`/`state` ledger) and
+//! schedulers borrow it: [`crate::sim::Scheduler::on_arrival`] receives
+//! `(id, &JobStore)` and reads exactly the fields it keys its heaps on,
+//! straight from the SoA slices.  Completed work leaves the store via
+//! prefix retirement + compaction, which is what keeps the streaming
+//! engine's memory O(active) on million-job runs.
+//!
+//! Two access disciplines share the type:
+//!
+//! * **Engine stores** (the event loop, `Service`) push ids densely
+//!   from 0 and retire any non-`Active` prefix ([`JobStore::retire`]) —
+//!   an id is never delivered twice, so a completed *or* cancelled row
+//!   can be reclaimed.
+//! * **Overlay stores** (the `est(...)` estimator wrapper) see an
+//!   arbitrary subsequence of the global id space (per-server inside a
+//!   cluster) and may legitimately see an id *again* (crash
+//!   re-dispatch).  They write through [`JobStore::upsert`] (gap rows
+//!   are inert `Cancelled` placeholders) and reclaim only completed
+//!   prefixes ([`JobStore::retire_completed`]) — a completed id can
+//!   never return, so compaction below `base` is always safe.
+
+use super::job::Job;
+use super::Scheduler;
+
+/// Dense job identifier: a row index into the [`JobStore`] columns
+/// (the same value as [`Job::id`]).
+pub type JobId = u32;
+
+/// Lifecycle of a stored job.  Owned by whoever owns the store (the
+/// engine, `Service`, an estimator overlay) — schedulers only read it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Delivered and not yet finished.
+    Active,
+    /// Really completed; `attained` is finalized to the full size.
+    Completed,
+    /// Killed/cancelled before completing (also the inert placeholder
+    /// state of overlay gap rows).
+    Cancelled,
+}
+
+/// The struct-of-arrays job table.  See the module docs for the two
+/// access disciplines (dense engine stores vs sparse overlays).
+#[derive(Debug, Default)]
+pub struct JobStore {
+    /// Id of column row 0; rows below `base` were compacted away.
+    base: u32,
+    /// Leading rows `< head` are retired but not yet compacted.
+    head: usize,
+    arrival: Vec<f64>,
+    size: Vec<f64>,
+    est: Vec<f64>,
+    weight: Vec<f64>,
+    /// Engine-owned attained-service ledger, finalized at completion
+    /// granularity (`mark_completed` sets it to the full size; the
+    /// fine-grained within-run attained lives in each discipline).
+    attained: Vec<f64>,
+    state: Vec<JobState>,
+}
+
+/// Compact once the retired prefix is both non-trivial and at least
+/// half the table — amortized O(1) per retired row.
+const COMPACT_MIN: usize = 32;
+
+impl JobStore {
+    pub fn new() -> JobStore {
+        JobStore::default()
+    }
+
+    /// Bulk-load a materialized workload (dense ids from 0, as
+    /// `job::validate` enforces).
+    pub fn of(jobs: &[Job]) -> JobStore {
+        let mut s = JobStore::new();
+        for j in jobs {
+            s.push(j);
+        }
+        s
+    }
+
+    /// The next dense id ([`JobStore::push`] requires exactly this id).
+    #[inline]
+    pub fn next_id(&self) -> JobId {
+        self.base + self.state.len() as u32
+    }
+
+    /// Rows currently held (retired-but-uncompacted included).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.state.len()
+    }
+
+    #[inline]
+    fn idx(&self, id: JobId) -> usize {
+        debug_assert!(
+            id >= self.base && id < self.next_id(),
+            "job {id} outside store rows {}..{}",
+            self.base,
+            self.next_id()
+        );
+        (id - self.base) as usize
+    }
+
+    /// Append the next dense row.  Panics if `job.id` is not the next
+    /// dense id — the same "job ids must be dense indices" contract the
+    /// workload validator enforces up front.
+    pub fn push(&mut self, job: &Job) -> JobId {
+        assert_eq!(
+            job.id,
+            self.next_id(),
+            "job ids must be dense indices (expected {}, got {})",
+            self.next_id(),
+            job.id
+        );
+        self.arrival.push(job.arrival);
+        self.size.push(job.size);
+        self.est.push(job.est);
+        self.weight.push(job.weight);
+        self.attained.push(0.0);
+        self.state.push(JobState::Active);
+        job.id
+    }
+
+    /// Insert or overwrite a row by id (overlay stores: sparse id
+    /// subsequences, crash re-dispatch re-arrivals).  Gap rows are
+    /// filled with inert `Cancelled` placeholders that are never
+    /// retired by [`JobStore::retire_completed`] and never read by an
+    /// inner scheduler (inners only see ids delivered through the
+    /// overlay).
+    pub fn upsert(&mut self, job: &Job) {
+        assert!(
+            job.id >= self.base,
+            "job {} re-arrived below store base {} (compacted row)",
+            job.id,
+            self.base
+        );
+        let i = (job.id - self.base) as usize;
+        while self.state.len() <= i {
+            self.arrival.push(0.0);
+            self.size.push(1.0);
+            self.est.push(1.0);
+            self.weight.push(1.0);
+            self.attained.push(0.0);
+            self.state.push(JobState::Cancelled);
+        }
+        self.arrival[i] = job.arrival;
+        self.size[i] = job.size;
+        self.est[i] = job.est;
+        self.weight[i] = job.weight;
+        self.attained[i] = 0.0;
+        self.state[i] = JobState::Active;
+    }
+
+    #[inline]
+    pub fn arrival(&self, id: JobId) -> f64 {
+        self.arrival[self.idx(id)]
+    }
+
+    #[inline]
+    pub fn size(&self, id: JobId) -> f64 {
+        self.size[self.idx(id)]
+    }
+
+    #[inline]
+    pub fn est(&self, id: JobId) -> f64 {
+        self.est[self.idx(id)]
+    }
+
+    #[inline]
+    pub fn weight(&self, id: JobId) -> f64 {
+        self.weight[self.idx(id)]
+    }
+
+    #[inline]
+    pub fn attained(&self, id: JobId) -> f64 {
+        self.attained[self.idx(id)]
+    }
+
+    #[inline]
+    pub fn state(&self, id: JobId) -> JobState {
+        self.state[self.idx(id)]
+    }
+
+    /// Reassemble the flat [`Job`] for one row (compatibility edges:
+    /// sinks, tests).
+    pub fn job(&self, id: JobId) -> Job {
+        let i = self.idx(id);
+        Job {
+            id,
+            arrival: self.arrival[i],
+            size: self.size[i],
+            est: self.est[i],
+            weight: self.weight[i],
+        }
+    }
+
+    /// Overwrite one row's size estimate (estimator overlays).
+    pub fn set_est(&mut self, id: JobId, est: f64) {
+        let i = self.idx(id);
+        self.est[i] = est;
+    }
+
+    /// Record a real completion: state `Completed`, attained finalized
+    /// to the full size.
+    pub fn mark_completed(&mut self, id: JobId) {
+        let i = self.idx(id);
+        debug_assert_eq!(self.state[i], JobState::Active, "job {id} completed twice");
+        self.attained[i] = self.size[i];
+        self.state[i] = JobState::Completed;
+    }
+
+    /// Record a kill/cancel (the job never completes).
+    pub fn mark_cancelled(&mut self, id: JobId) {
+        let i = self.idx(id);
+        debug_assert_ne!(self.state[i], JobState::Completed, "cancelling completed job {id}");
+        self.state[i] = JobState::Cancelled;
+    }
+
+    /// Engine-store retirement: reclaim every leading non-`Active` row
+    /// (ids are never delivered twice, so completed *and* cancelled
+    /// rows are both dead).  O(active) memory on streaming runs.
+    pub fn retire(&mut self) {
+        while self.head < self.state.len() && self.state[self.head] != JobState::Active {
+            self.head += 1;
+        }
+        self.maybe_compact();
+    }
+
+    /// Overlay-store retirement: reclaim only leading `Completed` rows.
+    /// A completed id can never re-arrive, so compacting below `base`
+    /// stays safe even under crash re-dispatch; cancelled rows (and gap
+    /// placeholders) conservatively pin the prefix.
+    pub fn retire_completed(&mut self) {
+        while self.head < self.state.len() && self.state[self.head] == JobState::Completed {
+            self.head += 1;
+        }
+        self.maybe_compact();
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.head > COMPACT_MIN && self.head * 2 >= self.state.len() {
+            self.arrival.drain(..self.head);
+            self.size.drain(..self.head);
+            self.est.drain(..self.head);
+            self.weight.drain(..self.head);
+            self.attained.drain(..self.head);
+            self.state.drain(..self.head);
+            self.base += self.head as u32;
+            self.head = 0;
+        }
+    }
+
+    /// Push `job` and deliver it to `sched` in one call — the
+    /// unit-test/bench convenience mirroring the old
+    /// `on_arrival(now, &job)` shape.
+    pub fn deliver(&mut self, sched: &mut dyn Scheduler, now: f64, job: &Job) {
+        let id = self.push(job);
+        sched.on_arrival(now, id, self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_reads_back_all_columns() {
+        let jobs = vec![
+            Job { id: 0, arrival: 0.0, size: 2.0, est: 1.5, weight: 2.0 },
+            Job { id: 1, arrival: 1.0, size: 3.0, est: 3.0, weight: 1.0 },
+        ];
+        let st = JobStore::of(&jobs);
+        assert_eq!(st.next_id(), 2);
+        for j in &jobs {
+            assert_eq!(st.arrival(j.id).to_bits(), j.arrival.to_bits());
+            assert_eq!(st.size(j.id).to_bits(), j.size.to_bits());
+            assert_eq!(st.est(j.id).to_bits(), j.est.to_bits());
+            assert_eq!(st.weight(j.id).to_bits(), j.weight.to_bits());
+            assert_eq!(st.state(j.id), JobState::Active);
+            assert_eq!(st.attained(j.id), 0.0);
+            assert_eq!(st.job(j.id), *j);
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "dense indices")]
+    fn push_rejects_non_dense_ids() {
+        let mut st = JobStore::new();
+        st.push(&Job::exact(0, 0.0, 1.0));
+        st.push(&Job::exact(5, 1.0, 1.0));
+    }
+
+    #[test]
+    fn completion_finalizes_attained() {
+        let mut st = JobStore::of(&[Job::exact(0, 0.0, 4.0)]);
+        st.mark_completed(0);
+        assert_eq!(st.state(0), JobState::Completed);
+        assert_eq!(st.attained(0), 4.0);
+    }
+
+    /// Retirement compacts completed prefixes away and keeps reads on
+    /// the surviving rows valid (the O(active) streaming claim at the
+    /// store level).
+    #[test]
+    fn retire_compacts_completed_prefix() {
+        let mut st = JobStore::new();
+        for i in 0..200u32 {
+            st.push(&Job::exact(i, i as f64, 1.0));
+        }
+        for i in 0..150u32 {
+            st.mark_completed(i);
+        }
+        st.retire();
+        assert!(st.rows() <= 50, "prefix must compact: {} rows", st.rows());
+        assert_eq!(st.next_id(), 200, "ids keep counting past compaction");
+        assert_eq!(st.size(180), 1.0);
+        assert_eq!(st.arrival(199), 199.0);
+        // New pushes continue densely.
+        st.push(&Job::exact(200, 300.0, 2.0));
+        assert_eq!(st.size(200), 2.0);
+    }
+
+    #[test]
+    fn retire_stops_at_first_active_row() {
+        let mut st = JobStore::of(&[
+            Job::exact(0, 0.0, 1.0),
+            Job::exact(1, 0.0, 1.0),
+            Job::exact(2, 0.0, 1.0),
+        ]);
+        st.mark_completed(0);
+        st.mark_cancelled(2); // non-prefix: must not retire
+        st.retire();
+        assert_eq!(st.state(1), JobState::Active);
+        assert_eq!(st.state(2), JobState::Cancelled);
+        assert_eq!(st.rows(), 3, "small prefixes stay uncompacted");
+    }
+
+    /// Overlay discipline: sparse upserts gap-fill, re-upsert of a
+    /// cancelled (crash re-dispatch) row reactivates it, and
+    /// `retire_completed` never reclaims past a non-completed row.
+    #[test]
+    fn upsert_gap_fills_and_reactivates() {
+        let mut st = JobStore::new();
+        st.upsert(&Job { id: 3, arrival: 1.0, size: 5.0, est: 4.0, weight: 1.0 });
+        assert_eq!(st.state(0), JobState::Cancelled, "gap rows are inert");
+        assert_eq!(st.state(3), JobState::Active);
+        assert_eq!(st.est(3), 4.0);
+        st.mark_cancelled(3);
+        st.upsert(&Job { id: 3, arrival: 2.0, size: 5.0, est: 6.5, weight: 1.0 });
+        assert_eq!(st.state(3), JobState::Active, "re-dispatch reactivates");
+        assert_eq!(st.est(3), 6.5, "re-dispatch overwrites the estimate");
+        st.retire_completed();
+        assert_eq!(st.rows(), 4, "gap rows pin the prefix");
+    }
+
+    #[test]
+    fn set_est_only_touches_the_estimate() {
+        let mut st = JobStore::of(&[Job { id: 0, arrival: 0.0, size: 2.0, est: 2.0, weight: 3.0 }]);
+        st.set_est(0, 9.0);
+        assert_eq!(st.est(0), 9.0);
+        assert_eq!(st.size(0), 2.0);
+        assert_eq!(st.weight(0), 3.0);
+    }
+}

@@ -31,7 +31,7 @@ pub struct Bench {
     pub warmup: Duration,
     /// Collected results (also printed as they complete).
     pub samples: Vec<Sample>,
-    filter: Option<String>,
+    filter: Vec<String>,
 }
 
 impl Default for Bench {
@@ -42,8 +42,17 @@ impl Default for Bench {
 
 impl Bench {
     pub fn new() -> Self {
-        // `cargo bench -- <filter>` narrows which benchmarks run.
-        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        // `cargo bench -- <filter>` narrows which benchmarks run.  The
+        // filter is a comma-separated list of substrings; a benchmark
+        // matching ANY of them runs (e.g. `event/,batch/,soa/` — one
+        // bench process, several families), so filtered smoke runs
+        // that REWRITE the JSON report can still cover every gated key
+        // at once.
+        let filter: Vec<String> = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .map(|a| a.split(',').filter(|p| !p.is_empty()).map(str::to_string).collect())
+            .unwrap_or_default();
         Bench {
             budget: Duration::from_millis(
                 std::env::var("BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(700),
@@ -61,10 +70,8 @@ impl Bench {
 
     /// Time `f` and report throughput as `items` per iteration.
     pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) {
-        if let Some(filt) = &self.filter {
-            if !name.contains(filt.as_str()) {
-                return;
-            }
+        if !filter_matches(&self.filter, name) {
+            return;
         }
         // Warmup and batch-size calibration.
         let t0 = Instant::now();
@@ -106,6 +113,12 @@ impl Bench {
         println!("{}", render(&s));
         self.samples.push(s);
     }
+}
+
+/// An empty filter runs everything; otherwise any comma-part matching
+/// as a substring selects the benchmark.
+fn filter_matches(filter: &[String], name: &str) -> bool {
+    filter.is_empty() || filter.iter().any(|f| name.contains(f.as_str()))
 }
 
 /// Human-readable one-line rendering.
@@ -237,6 +250,16 @@ mod tests {
         assert_eq!(b.samples.len(), 1);
         assert!(b.samples[0].mean_ns >= 0.0);
         assert!(b.samples[0].iters > 0);
+    }
+
+    #[test]
+    fn comma_filter_matches_any_part() {
+        let f: Vec<String> = "event/,batch/,soa/".split(',').map(str::to_string).collect();
+        assert!(filter_matches(&f, "event/psbs/n10000"));
+        assert!(filter_matches(&f, "batch/grouped/psbs/burst64"));
+        assert!(filter_matches(&f, "soa/event/psbs/n10k"));
+        assert!(!filter_matches(&f, "sim/10k_default/psbs"));
+        assert!(filter_matches(&[], "anything"), "empty filter runs everything");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use psbs::coordinator::{Service, ServiceConfig};
 use psbs::sched;
-use psbs::sim::{self, Job, Scheduler};
+use psbs::sim::{self, Job, JobStore, Scheduler};
 use psbs::util::check::{property, Config};
 use psbs::util::rng::Rng;
 use psbs::workload::dists::{Dist, LogNormal, Weibull};
@@ -37,6 +37,9 @@ fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
 /// twice, and `active()` drains to 0.  Returns (completion, killed).
 fn run_with_kills(policy: &str, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>, Vec<bool>) {
     let mut s = sched::by_name(policy).unwrap();
+    // The driver owns a store like the engine does; rows are kept (no
+    // retirement) so assertions can index any id at any time.
+    let mut store = JobStore::new();
     let mut completion = vec![f64::NAN; jobs.len()];
     let mut killed = vec![false; jobs.len()];
     let mut done = Vec::new();
@@ -57,7 +60,7 @@ fn run_with_kills(policy: &str, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>
         }
         let t = t.max(now);
         done.clear();
-        s.advance(now, t, &mut done);
+        s.advance(now, t, &store, &mut done);
         for c in &done {
             assert!(
                 completion[c.id as usize].is_nan(),
@@ -86,7 +89,8 @@ fn run_with_kills(policy: &str, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>
             next_kill += 1;
         }
         while next < jobs.len() && jobs[next].arrival <= now {
-            s.on_arrival(now, &jobs[next]);
+            let id = store.push(&jobs[next]);
+            s.on_arrival(now, id, &store);
             next += 1;
         }
         if next == jobs.len() && next_kill == kills.len() && s.next_event(now).is_none() {
@@ -190,7 +194,8 @@ fn cancellation_never_hurts_survivors_in_psbs() {
 fn cancel_of_unknown_id_is_noop() {
     for policy in sched::ALL_POLICIES {
         let mut s = sched::by_name(policy).unwrap();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
+        let mut st = JobStore::new();
+        st.deliver(s.as_mut(), 0.0, &Job::exact(0, 0.0, 1.0));
         assert!(!s.cancel(0.0, 99), "{policy}: unknown id");
         assert!(s.cancel(0.0, 0), "{policy}: pending job");
         assert!(!s.cancel(0.0, 0), "{policy}: double cancel must fail");
@@ -205,7 +210,8 @@ fn cancel_of_unknown_id_is_noop() {
 fn formerly_unsupported_policies_now_cancel() {
     for policy in ["fifo", "ps", "dps", "las", "mlfq", "srpte+ps", "srpte+las"] {
         let mut s = sched::by_name(policy).unwrap();
-        s.on_arrival(0.0, &Job::exact(0, 0.0, 1.0));
+        let mut st = JobStore::new();
+        st.deliver(s.as_mut(), 0.0, &Job::exact(0, 0.0, 1.0));
         assert!(s.cancel(0.0, 0), "{policy} must support cancellation");
         assert_eq!(s.active(), 0, "{policy} must drop the killed job");
     }

@@ -9,7 +9,7 @@
 use psbs::coordinator::{Cluster, Dispatch, FaultConfig, FaultSpec, RetryPolicy};
 use psbs::scenario::{PolicySpec, Scenario, SweepParams};
 use psbs::sched;
-use psbs::sim::{Job, Scheduler};
+use psbs::sim::{Job, JobStore, Scheduler};
 use psbs::util::check::{property, Config};
 use psbs::util::rng::Rng;
 use psbs::workload::dists::{Dist, LogNormal, Weibull};
@@ -51,6 +51,7 @@ fn run_faulty_with_kills(
 ) -> Result<(), String> {
     let spec = PolicySpec::from(policy);
     let mut s = Cluster::from_spec_full(&spec, k, dispatch, &[], 11, Some(cfg), spec_after);
+    let mut store = JobStore::new();
     let mut completion = vec![f64::NAN; jobs.len()];
     let mut killed = vec![false; jobs.len()];
     let mut done = Vec::new();
@@ -72,7 +73,7 @@ fn run_faulty_with_kills(
         }
         let t = t.max(now);
         done.clear();
-        s.advance(now, t, &mut done);
+        s.advance(now, t, &store, &mut done);
         for c in &done {
             if !completion[c.id as usize].is_nan() {
                 return Err(format!("{policy}: job {} completed twice", c.id));
@@ -97,7 +98,8 @@ fn run_faulty_with_kills(
             next_kill += 1;
         }
         while next < jobs.len() && jobs[next].arrival <= now {
-            s.on_arrival(now, &jobs[next]);
+            let id = store.push(&jobs[next]);
+            s.on_arrival(now, id, &store);
             next += 1;
         }
         if next == jobs.len() && next_kill == kills.len() && s.next_event(now).is_none() {

@@ -15,7 +15,7 @@
 //! the oracle's O(dt) tolerance.
 
 use psbs::sched::{self, MinHeap};
-use psbs::sim::{self, Completion, Job, Scheduler};
+use psbs::sim::{self, Completion, Job, JobId, JobStore, Scheduler};
 use psbs::util::rng::Rng;
 use psbs::util::EPS;
 use psbs::workload::dists::{Dist, LogNormal, Weibull};
@@ -183,11 +183,12 @@ impl Scheduler for RefFspFamily {
         "ref-fsp-family"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
-        let w = self.weight_of(job);
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let job = store.job(id);
+        let w = self.weight_of(&job);
         let g_i = self.g + job.est / w;
         self.o
-            .push(g_i, job.id as u64, RefOJob { weight: w, true_rem: job.size, size: job.size });
+            .push(g_i, id as u64, RefOJob { weight: w, true_rem: job.size, size: job.size });
         self.w_v += w;
     }
 
@@ -228,7 +229,7 @@ impl Scheduler for RefFspFamily {
         }
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
         if self.late.is_empty() {
             let completed = match self.o.head_mut() {
@@ -377,16 +378,20 @@ impl Scheduler for RefSrpteHybrid {
         "ref-srpte-hybrid"
     }
 
-    fn on_arrival(&mut self, _now: f64, job: &Job) {
-        let fresh =
-            RefElig { id: job.id, est_rem: job.est, true_rem: job.size, size: job.size };
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let fresh = RefElig {
+            id,
+            est_rem: store.est(id),
+            true_rem: store.size(id),
+            size: store.size(id),
+        };
         match self.slot {
             None => self.slot = Some(fresh),
-            Some(cur) if job.est < cur.est_rem => {
+            Some(cur) if fresh.est_rem < cur.est_rem => {
                 self.waiting.push(cur.est_rem, cur.id as u64, (cur.true_rem, cur.size));
                 self.slot = Some(fresh);
             }
-            Some(_) => self.waiting.push(job.est, job.id as u64, (job.size, job.size)),
+            Some(_) => self.waiting.push(fresh.est_rem, id as u64, (fresh.size, fresh.size)),
         }
     }
 
@@ -426,7 +431,7 @@ impl Scheduler for RefSrpteHybrid {
         }
     }
 
-    fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
         let dt = t - now;
         let ctx = self.rate_ctx();
         for e in self.late.iter_mut() {
@@ -581,14 +586,14 @@ fn cancellation_matches_old_flat_path() {
         fn name(&self) -> &'static str {
             "ref+cancel"
         }
-        fn on_arrival(&mut self, now: f64, job: &Job) {
-            self.0.on_arrival(now, job)
+        fn on_arrival(&mut self, now: f64, id: JobId, store: &JobStore) {
+            self.0.on_arrival(now, id, store)
         }
         fn next_event(&self, now: f64) -> Option<f64> {
             self.0.next_event(now)
         }
-        fn advance(&mut self, now: f64, t: f64, done: &mut Vec<Completion>) {
-            self.0.advance(now, t, done)
+        fn advance(&mut self, now: f64, t: f64, store: &JobStore, done: &mut Vec<Completion>) {
+            self.0.advance(now, t, store, done)
         }
         fn active(&self) -> usize {
             self.0.active()
@@ -622,6 +627,7 @@ fn cancellation_matches_old_flat_path() {
         sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
         let run_killing = |s: &mut dyn Scheduler| -> Vec<f64> {
+            let mut store = JobStore::new();
             let mut completion = vec![f64::NAN; jobs.len()];
             let mut done = Vec::new();
             let mut now = 0.0;
@@ -642,7 +648,7 @@ fn cancellation_matches_old_flat_path() {
                 }
                 let t = t.max(now);
                 done.clear();
-                s.advance(now, t, &mut done);
+                s.advance(now, t, &store, &mut done);
                 for c in &done {
                     completion[c.id as usize] = c.time;
                 }
@@ -652,7 +658,8 @@ fn cancellation_matches_old_flat_path() {
                     next_kill += 1;
                 }
                 while next < jobs.len() && jobs[next].arrival <= now {
-                    s.on_arrival(now, &jobs[next]);
+                    let id = store.push(&jobs[next]);
+                    s.on_arrival(now, id, &store);
                     next += 1;
                 }
                 if next == jobs.len() && next_kill == sorted.len() && s.next_event(now).is_none()

@@ -1,0 +1,237 @@
+//! Store/batch refactor differential pin: the engine's batched
+//! [`JobStore`] event loop against a per-job-delivery reference driver
+//! that replicates the pre-batching loop verbatim (one `on_arrival`
+//! per job, no `on_arrival_batch` coalescing, no prefix retirement).
+//! Together with the kept pre-refactor oracles in
+//! `rust/tests/late_set_equiv.rs`, this pins the whole refactor:
+//! completions bitwise identical, internal event counters equal, and
+//! `active()` drains to 0 — across the full policy zoo, under random
+//! same-instant arrival bursts, cancel churn, and fault churn.
+
+use psbs::coordinator::{FaultConfig, FaultSpec, RetryPolicy};
+use psbs::scenario::PolicySpec;
+use psbs::sched;
+use psbs::sim::{self, Job, JobStore, Scheduler};
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, LogNormal, Weibull};
+
+/// Random workload with deliberate same-instant bursts (~1/3 of
+/// arrivals share the previous job's timestamp exactly), so the
+/// engine's one-batch-per-instant coalescing really fires.
+fn random_jobs(rng: &mut Rng, n: u32, sigma: f64) -> Vec<Job> {
+    let w = Weibull::unit_mean(0.5 + rng.u01());
+    let err = LogNormal::error_model(sigma);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            if rng.below(3) > 0 {
+                t += rng.u01();
+            }
+            let s = w.sample(rng).max(1e-6);
+            Job {
+                id: i,
+                arrival: t,
+                size: s,
+                est: (s * err.sample(rng)).max(1e-9),
+                weight: 1.0 / (1.0 + rng.below(3) as f64),
+            }
+        })
+        .collect()
+}
+
+/// The pre-batching event loop, replicated exactly: completions before
+/// arrivals at ties (`e <= a`), `t.max(now)` clamp, one internal-event
+/// count per non-arrival step — but every job delivered through a
+/// separate `on_arrival` call and the store never retired.  Tolerates
+/// lost jobs (fault drain): ends when both event streams dry up.
+fn run_per_job(s: &mut dyn Scheduler, jobs: &[Job]) -> (Vec<f64>, u64) {
+    let mut store = JobStore::new();
+    let mut completion = vec![f64::NAN; jobs.len()];
+    let mut done = Vec::new();
+    let mut now = 0.0_f64;
+    let mut events = 0u64;
+    let mut next = 0usize;
+    let mut completed = 0usize;
+    loop {
+        let next_arrival = jobs.get(next).map(|j| j.arrival);
+        let next_internal = s.next_event(now);
+        let (t, is_arrival) = match (next_arrival, next_internal) {
+            (None, None) => break,
+            (Some(a), None) => (a, true),
+            (None, Some(e)) => (e, false),
+            (Some(a), Some(e)) => {
+                if e <= a {
+                    (e, false)
+                } else {
+                    (a, true)
+                }
+            }
+        };
+        let t = t.max(now);
+        done.clear();
+        s.advance(now, t, &store, &mut done);
+        for c in &done {
+            completed += 1;
+            completion[c.id as usize] = c.time;
+        }
+        now = t;
+        if is_arrival {
+            while next < jobs.len() && jobs[next].arrival <= now {
+                let id = store.push(&jobs[next]);
+                s.on_arrival(now, id, &store);
+                next += 1;
+            }
+        } else {
+            events += 1;
+        }
+        if completed == jobs.len() && next == jobs.len() {
+            break;
+        }
+    }
+    (completion, events)
+}
+
+fn assert_bitwise(name: &str, reference: &[f64], engine: &[f64]) {
+    for (i, (x, y)) in reference.iter().zip(engine).enumerate() {
+        let same = (x.is_nan() && y.is_nan()) || x.to_bits() == y.to_bits();
+        assert!(same, "{name}: job {i} diverged: per-job {x} vs batched {y}");
+    }
+}
+
+/// Fault-free churn: batched `sim::run` vs the per-job reference for
+/// every discipline in the zoo.
+#[test]
+fn batched_engine_matches_per_job_reference_all_policies() {
+    let mut rng = Rng::new(0x50A);
+    for trial in 0..6u64 {
+        let jobs = random_jobs(&mut rng, 120, 1.0 + (trial % 3) as f64 * 0.5);
+        for policy in sched::ALL_POLICIES {
+            let mut a = sched::by_name(policy).unwrap();
+            let (want, ref_events) = run_per_job(a.as_mut(), &jobs);
+            assert_eq!(a.active(), 0, "{policy} trial {trial}: per-job path leaked jobs");
+
+            let mut b = sched::by_name(policy).unwrap();
+            let r = sim::run(b.as_mut(), &jobs);
+            assert_eq!(b.active(), 0, "{policy} trial {trial}: batched path leaked jobs");
+            assert_eq!(r.events, ref_events, "{policy} trial {trial}: event counters");
+            assert_bitwise(&format!("{policy} trial {trial}"), &want, &r.completion);
+        }
+    }
+}
+
+/// Drive a scheduler through arrivals plus a kill schedule, delivering
+/// arrivals either per job or as one same-instant batch (the engine
+/// shape).  Kills land after state is advanced, before same-instant
+/// arrivals — the leader-loop order both real call sites use.
+fn drive_kills(
+    s: &mut dyn Scheduler,
+    jobs: &[Job],
+    kills: &[(f64, u32)],
+    batched: bool,
+) -> (Vec<f64>, Vec<bool>) {
+    let mut store = JobStore::new();
+    let mut completion = vec![f64::NAN; jobs.len()];
+    let mut killed = vec![false; jobs.len()];
+    let mut done = Vec::new();
+    let mut now = 0.0_f64;
+    let mut next = 0usize;
+    let mut next_kill = 0usize;
+    loop {
+        let mut t = f64::INFINITY;
+        for cand in [
+            jobs.get(next).map(|j| j.arrival),
+            s.next_event(now),
+            kills.get(next_kill).map(|&(k, _)| k),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            t = t.min(cand);
+        }
+        if !t.is_finite() {
+            break;
+        }
+        let t = t.max(now);
+        done.clear();
+        s.advance(now, t, &store, &mut done);
+        for c in &done {
+            completion[c.id as usize] = c.time;
+        }
+        now = t;
+        while next_kill < kills.len() && kills[next_kill].0 <= now {
+            let victim = kills[next_kill].1;
+            if s.cancel(now, victim) {
+                killed[victim as usize] = true;
+            }
+            next_kill += 1;
+        }
+        let first = store.next_id();
+        while next < jobs.len() && jobs[next].arrival <= now {
+            let id = store.push(&jobs[next]);
+            if !batched {
+                s.on_arrival(now, id, &store);
+            }
+            next += 1;
+        }
+        if batched && first < store.next_id() {
+            s.on_arrival_batch(now, first..store.next_id(), &store);
+        }
+        if next == jobs.len() && next_kill == kills.len() && s.next_event(now).is_none() {
+            break;
+        }
+    }
+    assert_eq!(s.active(), 0, "active() must drain to 0");
+    (completion, killed)
+}
+
+/// Cancel churn: same random kill schedule through both delivery
+/// shapes, all policies — identical survivors, identical kill sets.
+#[test]
+fn batched_delivery_matches_per_job_under_cancel_churn() {
+    let mut rng = Rng::new(0xC4A1);
+    for trial in 0..5u64 {
+        let jobs = random_jobs(&mut rng, 90, 1.3);
+        let span = jobs.last().unwrap().arrival + 4.0;
+        let mut kills: Vec<(f64, u32)> = (0..10)
+            .map(|_| (rng.u01() * span, rng.below(jobs.len() as u64) as u32))
+            .collect();
+        kills.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for policy in sched::ALL_POLICIES {
+            let mut a = sched::by_name(policy).unwrap();
+            let (want, killed_a) = drive_kills(a.as_mut(), &jobs, &kills, false);
+            let mut b = sched::by_name(policy).unwrap();
+            let (got, killed_b) = drive_kills(b.as_mut(), &jobs, &kills, true);
+            assert_eq!(killed_a, killed_b, "{policy} trial {trial}: kill sets differ");
+            assert_bitwise(&format!("{policy} trial {trial} (kills)"), &want, &got);
+        }
+    }
+}
+
+/// Fault churn: drain-mode engine vs the per-job reference with
+/// crash/recover/retry schedules live, for every policy (wrapped in
+/// the standard faulty cluster build).  Lost jobs keep NaN on both
+/// sides; event counters include every crash/recovery/retry event.
+#[test]
+fn faulty_drain_matches_per_job_reference_all_policies() {
+    let cfg = FaultConfig {
+        spec: FaultSpec { mtbf: 8.0, mttr: 1.0, slowdown: 0.5 },
+        retry: RetryPolicy { max_attempts: 2, backoff: 0.25 },
+        seed: 11,
+    };
+    let mut rng = Rng::new(0xFA07);
+    for trial in 0..3u64 {
+        let jobs = random_jobs(&mut rng, 70, 1.2);
+        for policy in sched::ALL_POLICIES {
+            let spec = PolicySpec::from(*policy);
+            let mut a = spec.build_faulty(5 + trial, &cfg);
+            let (want, ref_events) = run_per_job(a.as_mut(), &jobs);
+            assert_eq!(a.active(), 0, "{policy} trial {trial}: per-job path leaked jobs");
+
+            let mut b = spec.build_faulty(5 + trial, &cfg);
+            let r = sim::run_to_drain(b.as_mut(), &jobs);
+            assert_eq!(b.active(), 0, "{policy} trial {trial}: batched path leaked jobs");
+            assert_eq!(r.events, ref_events, "{policy} trial {trial}: event counters");
+            assert_bitwise(&format!("{policy} trial {trial} (faulty)"), &want, &r.completion);
+        }
+    }
+}

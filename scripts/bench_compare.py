@@ -15,8 +15,11 @@ wins), so a REGRESSION is `current < baseline * (1 - threshold)`.
 
 Only keys matching one of the --keys prefixes AND present in BOTH
 files gate the exit code (default prefixes: the ROADMAP-tracked
-`planner_speedup_*`, `dense_vs_map_*` and the streaming engine's
-`stream_throughput_*` jobs/s).  Everything else — other derived keys
+`planner_speedup_*`, `dense_vs_map_*`, the streaming engine's
+`stream_throughput_*` jobs/s, and the batched event loop's
+`batch_event_speedup` — one coalesced `on_arrival_batch` call per
+same-instant burst vs per-job dispatch, where a drop below ~1 means
+batching started losing to the loop it replaced).  Everything else — other derived keys
 (e.g. `trace_parse_throughput`, the late-set engine's
 `late_set_*_scaling` population ratios, `fault_replay_overhead` and
 `stream_vs_vec_overhead`, where ~1 is good and the "higher is better"
@@ -32,7 +35,7 @@ import argparse
 import json
 import sys
 
-DEFAULT_KEY_PREFIXES = "planner_speedup_,dense_vs_map_,stream_throughput_"
+DEFAULT_KEY_PREFIXES = "planner_speedup_,dense_vs_map_,stream_throughput_,batch_event_speedup"
 
 
 def load(path):

@@ -5,8 +5,8 @@ tested independently of the rust build).
 
 Covers the contract the CI bench-compare step relies on:
   * a >threshold drop on a gated derived key (planner_speedup_*,
-    dense_vs_map_*, stream_throughput_*) exits 1 and is labelled
-    REGRESSED;
+    dense_vs_map_*, stream_throughput_*, batch_event_speedup) exits 1
+    and is labelled REGRESSED;
   * drops within the threshold, drops on non-gated keys (e.g.
     trace_parse_throughput), and improvements exit 0;
   * keys missing from either file never gate;
@@ -181,6 +181,35 @@ class BenchCompareTest(unittest.TestCase):
         self.assertIn("stream_vs_vec_overhead", r.stdout)
         self.assertIn("trace_cache_speedup", r.stdout)
         self.assertNotIn("REGRESSED", r.stdout)
+
+    def test_batch_event_speedup_drop_gates(self):
+        # The batched event loop's coalescing win is a first-class
+        # gated key: dropping from 1.5x to 1.0x (-33%) fails the
+        # compare, while staying within the threshold passes — so a
+        # refactor that quietly degrades `on_arrival_batch` back to
+        # per-job dispatch cost is caught in CI.
+        base = self.write(
+            "base.json",
+            report({"batch_event_speedup": 1.5, "soa_event_ns": 400.0}),
+        )
+        cur = self.write(
+            "cur.json",
+            report({"batch_event_speedup": 1.0, "soa_event_ns": 900.0}),  # -33%
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("batch_event_speedup", r.stdout)
+        self.assertIn("REGRESSED", r.stdout)
+        # soa_event_ns is informational (absolute ns, lower is better —
+        # the ratio gate's framing does not apply): reported, not gated.
+        self.assertNotIn("1 gated regression(s): soa_event_ns", r.stdout)
+        self.assertIn("1 gated regression(s): batch_event_speedup", r.stdout)
+        # Within threshold: passes.
+        cur_ok = self.write(
+            "cur_ok.json",
+            report({"batch_event_speedup": 1.35, "soa_event_ns": 400.0}),  # -10%
+        )
+        self.assertEqual(self.run_compare(base, cur_ok).returncode, 0)
 
     def test_keys_missing_from_either_side_never_gate(self):
         base = self.write("base.json", report({"planner_speedup_t4": 2.0}))

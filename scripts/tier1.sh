@@ -114,10 +114,17 @@ if [[ "${1:-}" != "--no-bench" && "$BUILD" == ok ]]; then
   # (sched/late_set.rs) on the perf radar from day one: the smoke's
   # BENCH_psbs_ops.json carries the late_set/* samples and the derived
   # late_set_*_scaling keys (informational in bench-compare).
-  if BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/ &&
+  # schedulers gets the comma filter (any-substring match) so ONE
+  # invocation covers the per-event probes AND the batch/soa families:
+  # a filtered run rewrites BENCH_sched.json whole, so splitting this
+  # into two runs would drop the first run's gated derived key
+  # (batch_event_speedup) from the report bench-compare reads.
+  if BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench schedulers -- event/,batch/,soa/ &&
      BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench psbs_ops -- late_set/ &&
      BENCH_OUT_DIR=bench-smoke BENCH_MS=150 cargo bench --bench figures -- sweep/; then
     BENCH=ok
+    echo "--- bench-smoke/BENCH_sched.json derived (batch_event_speedup + soa_event_ns) ---"
+    grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sched.json || true
     echo "--- bench-smoke/BENCH_sweeps.json derived (speedups + trace_parse_throughput) ---"
     grep -o '"derived": {[^}]*}' bench-smoke/BENCH_sweeps.json || true
     echo "--- bench-smoke/BENCH_psbs_ops.json derived (late_set_* scaling) ---"
