@@ -1,0 +1,239 @@
+//! One public error type for the library surface.
+//!
+//! Until PR 9 every fallible boundary in the crate returned
+//! `Result<_, String>` — cheap to write, but callers could not tell a
+//! malformed trace row from a corrupt binary cache from a scenario
+//! typo without string-sniffing, and the CLI could only ever exit 1.
+//! [`Error`] replaces that plumbing with one enum whose variants carry
+//! structured context (path, 1-based line number) and whose
+//! [`Display`](std::fmt::Display) impl reproduces the pre-enum message
+//! text **byte-identically** — every test that pinned an error string
+//! still passes against `err.to_string()`.
+//!
+//! Interop with the old plumbing is deliberate: `From<String>` /
+//! `From<&str>` lift legacy errors into [`Error::Msg`] (so `?` keeps
+//! working in code that still formats ad-hoc strings), and
+//! `From<Error> for String` renders back down (so crate-internal
+//! helpers that still pass `Result<_, String>` can call converted
+//! APIs with `?` unchanged).
+//!
+//! The CLI maps variants to distinct exit codes via
+//! [`Error::exit_code`]; exit 2 stays reserved for argument-parse /
+//! usage errors (see `main.rs`).
+
+use std::fmt;
+
+/// The crate-wide error type.  See the module docs for the Display
+/// and exit-code contracts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// A CSV trace could not be parsed ([`crate::workload::trace_file`]).
+    Trace {
+        /// Source path, when the trace came from a file (streamed
+        /// chunked reads and in-memory `parse` leave it `None`).
+        path: Option<String>,
+        /// 1-based line number of the offending row, when known.
+        line: Option<u64>,
+        /// The message body (everything after the `path:`/`line N:`
+        /// prefixes that `Display` re-attaches).
+        msg: String,
+    },
+    /// A binary trace cache (`.psbt`) failed validation
+    /// ([`crate::workload::cache`]).
+    Cache {
+        /// Cache path, when the message is path-prefixed.
+        path: Option<String>,
+        msg: String,
+    },
+    /// A scenario file failed to parse or validate
+    /// ([`crate::scenario`]).
+    Scenario {
+        path: Option<String>,
+        /// 1-based line number in the scenario TOML, when known.
+        line: Option<u64>,
+        msg: String,
+    },
+    /// A `psbs serve` wire-protocol request was malformed
+    /// ([`crate::serve`]).
+    Protocol {
+        /// 1-based input line number on the session stream, when known.
+        line: Option<u64>,
+        msg: String,
+    },
+    /// Uncategorized error (legacy `String` plumbing lifts to this).
+    Msg(String),
+}
+
+impl Error {
+    /// Trace error with no location context.
+    pub fn trace(msg: impl Into<String>) -> Error {
+        Error::Trace { path: None, line: None, msg: msg.into() }
+    }
+
+    /// Trace error pinned to a 1-based line number.
+    pub fn trace_line(line: u64, msg: impl Into<String>) -> Error {
+        Error::Trace { path: None, line: Some(line), msg: msg.into() }
+    }
+
+    /// Cache error with no path context.
+    pub fn cache(msg: impl Into<String>) -> Error {
+        Error::Cache { path: None, msg: msg.into() }
+    }
+
+    /// Cache error prefixed with its path.
+    pub fn cache_at(path: impl Into<String>, msg: impl Into<String>) -> Error {
+        Error::Cache { path: Some(path.into()), msg: msg.into() }
+    }
+
+    /// Scenario error with no location context.
+    pub fn scenario(msg: impl Into<String>) -> Error {
+        Error::Scenario { path: None, line: None, msg: msg.into() }
+    }
+
+    /// Protocol error pinned to a 1-based session input line.
+    pub fn protocol_line(line: u64, msg: impl Into<String>) -> Error {
+        Error::Protocol { line: Some(line), msg: msg.into() }
+    }
+
+    /// Uncategorized error.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error::Msg(msg.into())
+    }
+
+    /// Attach a source path to an error that does not carry one yet.
+    ///
+    /// Structured variants whose `path` is `None` gain it (so Display
+    /// grows the `"{path}: "` prefix the old `format!("{path}: {e}")`
+    /// wraps produced); variants that already carry a path are
+    /// returned unchanged (the old wraps double-prefixed here — not a
+    /// pinned behavior, so the enum fixes it).  [`Error::Msg`] is
+    /// prefixed textually, exactly like the legacy wrap.
+    #[must_use]
+    pub fn with_path(self, path: &str) -> Error {
+        match self {
+            Error::Trace { path: None, line, msg } => {
+                Error::Trace { path: Some(path.to_string()), line, msg }
+            }
+            Error::Cache { path: None, msg } => Error::Cache { path: Some(path.to_string()), msg },
+            Error::Scenario { path: None, line, msg } => {
+                Error::Scenario { path: Some(path.to_string()), line, msg }
+            }
+            Error::Msg(m) => Error::Msg(format!("{path}: {m}")),
+            other => other,
+        }
+    }
+
+    /// Process exit code for the CLI: 1 for uncategorized errors, a
+    /// distinct code per structured variant.  2 is *not* produced here
+    /// — it stays reserved for argument-parse/usage errors.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Error::Msg(_) => 1,
+            Error::Trace { .. } => 3,
+            Error::Cache { .. } => 4,
+            Error::Scenario { .. } => 5,
+            Error::Protocol { .. } => 6,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Trace { path, line, msg } | Error::Scenario { path, line, msg } => {
+                if let Some(p) = path {
+                    write!(f, "{p}: ")?;
+                }
+                if let Some(ln) = line {
+                    write!(f, "line {ln}: ")?;
+                }
+                f.write_str(msg)
+            }
+            Error::Cache { path, msg } => {
+                if let Some(p) = path {
+                    write!(f, "{p}: ")?;
+                }
+                f.write_str(msg)
+            }
+            Error::Protocol { line, msg } => {
+                if let Some(ln) = line {
+                    write!(f, "line {ln}: ")?;
+                }
+                f.write_str(msg)
+            }
+            Error::Msg(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::Msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::Msg(s.to_string())
+    }
+}
+
+impl From<Error> for String {
+    fn from(e: Error) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_reassembles_prefixes() {
+        let e = Error::trace_line(4, "job size must be positive, got 0");
+        assert_eq!(e.to_string(), "line 4: job size must be positive, got 0");
+        let e = e.with_path("t.csv");
+        assert_eq!(e.to_string(), "t.csv: line 4: job size must be positive, got 0");
+        // A second with_path is a no-op on structured variants.
+        assert_eq!(e.clone().with_path("other"), e);
+    }
+
+    #[test]
+    fn msg_round_trips_through_string() {
+        let e: Error = format!("ad hoc {}", 7).into();
+        assert_eq!(e, Error::Msg("ad hoc 7".to_string()));
+        let s: String = e.into();
+        assert_eq!(s, "ad hoc 7");
+    }
+
+    #[test]
+    fn with_path_on_msg_matches_legacy_wrap() {
+        let e = Error::msg("trace replays zero rows").with_path("mem");
+        assert_eq!(e.to_string(), "mem: trace replays zero rows");
+    }
+
+    #[test]
+    fn exit_codes_are_distinct_and_skip_2() {
+        let codes = [
+            Error::msg("x").exit_code(),
+            Error::trace("x").exit_code(),
+            Error::cache("x").exit_code(),
+            Error::scenario("x").exit_code(),
+            Error::protocol_line(1, "x").exit_code(),
+        ];
+        for (i, a) in codes.iter().enumerate() {
+            assert_ne!(*a, 2, "2 is reserved for usage errors");
+            for b in &codes[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_display_is_path_colon_msg() {
+        let e = Error::cache_at("/tmp/x.psbt", "truncated trace cache: 10 records promised, 3 present");
+        assert_eq!(e.to_string(), "/tmp/x.psbt: truncated trace cache: 10 records promised, 3 present");
+    }
+}

@@ -28,13 +28,55 @@
 //! ```
 
 pub mod coordinator;
+pub mod error;
 pub mod estimate;
 pub mod figures;
 pub mod metrics;
 pub mod runtime;
 pub mod scenario;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod util;
 pub mod workload;
+
+pub use error::Error;
+
+/// The stable library surface — what `psbs serve` (and any embedder)
+/// builds on.
+///
+/// The crate is organized as a scheduling *library* with two
+/// frontends: the offline simulator (`psbs sweep`/`replay`) and the
+/// live service (`psbs serve`).  Both drive the same engine through
+/// the names re-exported here:
+///
+/// * [`Scheduler`](crate::sim::Scheduler) + the policy zoo behind
+///   [`PolicySpec`](crate::scenario::PolicySpec) /
+///   [`by_name`](crate::sched::by_name);
+/// * [`JobSource`](crate::sim::JobSource) /
+///   [`CompletionSink`](crate::sim::CompletionSink) feeding
+///   [`run_streaming`](crate::sim::run_streaming) (virtual time) or
+///   [`run_streaming_clocked`](crate::sim::run_streaming_clocked)
+///   (any [`Clock`](crate::sim::Clock));
+/// * [`OnlineMetrics`](crate::metrics::OnlineMetrics) for O(1)-memory
+///   result aggregation.
+///
+/// **Bit-identity invariant:** the simulation entry points are pinned
+/// bit-identical across refactors — `run_streaming` monomorphized
+/// over [`VirtualClock`](crate::sim::VirtualClock) reproduces the
+/// pre-clock engine exactly (`rust/tests/streaming.rs`, all 16
+/// policies, fault churn included), so results obtained through this
+/// prelude are reproducible across crate versions to the last ulp.
+/// Anything *not* re-exported here (planner internals, figure
+/// plumbing) is subject to change without notice.
+pub mod prelude {
+    pub use crate::error::Error;
+    pub use crate::metrics::OnlineMetrics;
+    pub use crate::scenario::PolicySpec;
+    pub use crate::sched::by_name;
+    pub use crate::sim::{
+        run_streaming, run_streaming_clocked, run_streaming_to_drain, Clock, Completion,
+        CompletionSink, Job, JobSource, JobStore, Scheduler, StreamStats, VirtualClock, WallClock,
+    };
+}

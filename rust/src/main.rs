@@ -8,8 +8,9 @@
 //! * `replay`    — replay a trace file (SWIM TSV, squid log, or the
 //!   CSV-like `arrival,size[,weight][,estimate]` format) through a
 //!   policy at a normalized load;
-//! * `serve`     — start the online scheduling service and drive it with
-//!   a synthetic open-loop client, reporting latency/throughput;
+//! * `serve`     — run the scheduler as a live service: jobs arrive over
+//!   a line protocol (stdin or TCP), dispatch is wall-clock paced, and
+//!   online metrics stream out (see `psbs::serve`);
 //! * `gen-trace` — write a synthetic stand-in trace (Facebook/IRCache
 //!   statistics) in SWIM TSV form;
 //! * `scenario`  — export the built-in figure scenarios as `.toml`
@@ -20,13 +21,11 @@
 //! * `dominance` — empirical check of the §3 theorem on random
 //!   workloads (Pri_S vs PS/DPS, PSBS vs DPS).
 
-use psbs::coordinator::{Service, ServiceConfig};
 use psbs::figures::{self, Ctx};
 use psbs::scenario::{AxisParam, PolicySpec, Reference, Scenario};
 use psbs::sched;
 use psbs::sim::{self, Job};
 use psbs::util::cli::Args;
-use psbs::util::rng::Rng;
 use psbs::workload::{self, traces, SizeDist, SynthConfig};
 
 fn main() {
@@ -39,26 +38,31 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let code = match parsed.subcommand.as_deref() {
-        Some("simulate") => cmd_simulate(&parsed),
+    // Structured errors exit with a per-variant code (see
+    // `psbs::Error::exit_code`); 2 stays reserved for usage errors.
+    let code: Result<(), psbs::Error> = match parsed.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&parsed).map_err(Into::into),
         Some("sweep") => cmd_sweep(&parsed),
         Some("replay") => cmd_replay(&parsed),
         Some("serve") => cmd_serve(&parsed),
-        Some("gen-trace") => cmd_gen_trace(&parsed),
-        Some("scenario") => cmd_scenario(&parsed),
-        Some("dominance") => cmd_dominance(&parsed),
-        Some("estimate") => cmd_estimate(&parsed),
-        Some("policies") => parsed.check_unknown().map(|()| {
-            for p in sched::ALL_POLICIES {
-                println!("{p}");
-            }
-        }),
-        Some(other) => Err(format!("unknown subcommand: {other}\n{USAGE}")),
-        None => Err(USAGE.to_string()),
+        Some("gen-trace") => cmd_gen_trace(&parsed).map_err(Into::into),
+        Some("scenario") => cmd_scenario(&parsed).map_err(Into::into),
+        Some("dominance") => cmd_dominance(&parsed).map_err(Into::into),
+        Some("estimate") => cmd_estimate(&parsed).map_err(Into::into),
+        Some("policies") => parsed
+            .check_unknown()
+            .map(|()| {
+                for p in sched::ALL_POLICIES {
+                    println!("{p}");
+                }
+            })
+            .map_err(Into::into),
+        Some(other) => Err(psbs::Error::msg(format!("unknown subcommand: {other}\n{USAGE}"))),
+        None => Err(psbs::Error::msg(USAGE)),
     };
     if let Err(e) = code {
         eprintln!("error: {e}");
-        std::process::exit(1);
+        std::process::exit(e.exit_code());
     }
 }
 
@@ -78,7 +82,11 @@ usage: psbs <subcommand> [options]
              (csv = the scenario-layer trace format: arrival,size[,weight][,estimate] — see scenarios/README.md;
               bin = a .psbt binary trace cache (write one with gen-trace --format bin) — replayed through the
               streaming engine with O(active)-memory online metrics, sized for million-job runs)
-  serve      [--policy P] [--speed U] [--jobs N] [--rate R] [--shape S] [--sigma E] [--seed K]
+  serve      (--stdin | --listen ADDR:PORT) [--policy P] [--speedup X] [--queue N] [--stats-every N]
+             (live service: submit rows `arrival,size[,weight][,estimate]` plus `kill <id>` / `stats` / `drain` /
+              `shutdown` verbs arrive on stdin or one TCP connection; dispatch is wall-clock paced at X simulated
+              seconds per wall second (inf = as fast as possible); responses are `done`/`stats`/`killed`/`err`
+              lines — see scenarios/README.md for the protocol grammar and backpressure rules)
   gen-trace  --stats facebook|ircache --out FILE [--seed K] [--format swim|csv|bin] [--njobs N]
              (csv = the scenario-layer arrival,size format; bin = the .psbt binary trace cache; --njobs scales
               the synthetic trace, stretching its duration so the arrival rate stays at the published level)
@@ -180,7 +188,7 @@ fn parse_axis_arg(s: &str) -> Result<(String, AxisParam, Vec<f64>), String> {
     Ok((name.to_string(), param, values))
 }
 
-fn cmd_sweep(a: &Args) -> Result<(), String> {
+fn cmd_sweep(a: &Args) -> Result<(), psbs::Error> {
     let fig = a.get_opt("fig").map(|f| f.parse::<u64>().map_err(|_| "--fig: integer")).transpose()?;
     let svg = a.get_bool("svg")?;
     let scenario_path = a.get_opt("scenario");
@@ -265,7 +273,7 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
             "opt" => sc = sc.vs(Reference::OptSrpt),
             "ps" => sc = sc.vs(Reference::Ps),
             "none" => {}
-            other => return Err(format!("unknown --reference {other} (opt|ps|none)")),
+            other => return Err(format!("unknown --reference {other} (opt|ps|none)").into()),
         }
         sc.validate()?;
         let t0 = std::time::Instant::now();
@@ -462,8 +470,25 @@ fn warn_on_dropped_kills(t: &figures::Table) {
     }
 }
 
+/// What `emit_table` prints for a table — `None` for a
+/// `{name}_fault_counters` companion whose counters are all zero
+/// (column 0 is the policy index, not a counter).  A fault-free sweep
+/// used to dump an all-zero counter table per scenario; the CSV is
+/// still written either way, so nothing is lost from `results/`.
+fn table_stdout(t: &figures::Table) -> Option<String> {
+    let all_zero = t.name.ends_with("_fault_counters")
+        && t.rows.iter().all(|r| r.iter().skip(1).all(|v| *v == 0.0));
+    if all_zero {
+        None
+    } else {
+        Some(t.render())
+    }
+}
+
 fn emit_table(t: &figures::Table, ctx: &Ctx, svg: bool) -> Result<(), String> {
-    println!("{}", t.render());
+    if let Some(text) = table_stdout(t) {
+        println!("{text}");
+    }
     let path = t.write_csv(&ctx.out_dir).map_err(|e| e.to_string())?;
     println!("wrote {path}");
     if svg {
@@ -474,7 +499,7 @@ fn emit_table(t: &figures::Table, ctx: &Ctx, svg: bool) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_replay(a: &Args) -> Result<(), String> {
+fn cmd_replay(a: &Args) -> Result<(), psbs::Error> {
     let trace = a.get_opt("trace").ok_or("missing --trace FILE")?;
     let format = a.get("format", "swim");
     let policy = a.get("policy", "psbs");
@@ -540,14 +565,14 @@ fn replay_streaming(
     load: f64,
     sigma: f64,
     seed: u64,
-) -> Result<(), String> {
+) -> Result<(), psbs::Error> {
     use psbs::metrics::OnlineMetrics;
     use psbs::workload::cache::CacheReader;
     use psbs::workload::trace_file::TraceJobSource;
 
     let reader = CacheReader::open(trace)?;
-    let mut source = TraceJobSource::new(reader, njobs, load, sigma, seed)
-        .map_err(|e| format!("{trace}: {e}"))?;
+    let mut source =
+        TraceJobSource::new(reader, njobs, load, sigma, seed).map_err(|e| e.with_path(trace))?;
     let mut s = sched::by_name(policy).ok_or_else(|| format!("unknown policy {policy}"))?;
     let mut m = OnlineMetrics::new().with_quantiles(&[0.5, 0.99]);
     let t0 = std::time::Instant::now();
@@ -571,63 +596,37 @@ fn replay_streaming(
     Ok(())
 }
 
-fn cmd_serve(a: &Args) -> Result<(), String> {
+/// `psbs serve` — one live session over stdin or one TCP connection;
+/// protocol, pacing and backpressure live in [`psbs::serve`].
+fn cmd_serve(a: &Args) -> Result<(), psbs::Error> {
     let policy = a.get("policy", "psbs");
-    let speed = a.get_f64("speed", 10_000.0)?;
-    let njobs = a.get_u64("jobs", 200)? as usize;
-    let rate = a.get_f64("rate", 0.0)?; // jobs/s; 0 => closed-loop-ish burst
-    let shape = a.get_f64("shape", 0.25)?;
-    let sigma = a.get_f64("sigma", 0.5)?;
-    let seed = a.get_u64("seed", 42)?;
+    let use_stdin = a.get_bool("stdin")?;
+    let listen = a.get_opt("listen");
+    // f64::from_str accepts "inf", so `--speedup inf` just works.
+    let speedup = a.get_f64("speedup", 1.0)?;
+    let queue = a.get_u64("queue", 1024)? as usize;
+    let stats_every = a.get_u64("stats-every", 0)?;
     a.check_unknown()?;
 
-    use psbs::workload::dists::{Dist, LogNormal, Weibull};
-    let spec = PolicySpec::parse(&policy)?;
-    let svc = Service::start(ServiceConfig { policy: spec, speed });
-    let size_dist = Weibull::with_mean(shape, speed * 0.01); // ~10ms mean service
-    let err = LogNormal::error_model(sigma);
-    let mut rng = Rng::new(seed);
-    let mut rxs = Vec::with_capacity(njobs);
-    for _ in 0..njobs {
-        let size = size_dist.sample(&mut rng).max(1e-3);
-        let est = (size * err.sample(&mut rng)).max(1e-3);
-        rxs.push(svc.submit(size, est, 1.0));
-        if rate > 0.0 {
-            let gap = -rng.u01_open_left().ln() / rate;
-            std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.1)));
+    let cfg = psbs::serve::ServeConfig { policy, speedup, queue, stats_every };
+    let summary = match (use_stdin, listen) {
+        (true, None) => psbs::serve::serve_stdin(&cfg)?,
+        (false, Some(addr)) => psbs::serve::serve_listen(&addr, &cfg)?,
+        _ => {
+            return Err(psbs::Error::msg(format!(
+                "serve: exactly one of --stdin or --listen ADDR:PORT is required\n{USAGE}"
+            )))
         }
-    }
-    let mut done = 0;
-    for rx in rxs {
-        if rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok() {
-            done += 1;
-        }
-    }
-    let stats = svc.shutdown();
-    println!("policy={policy} speed={speed} submitted={njobs} completed={done}");
-    println!("throughput       {:.1} jobs/s", stats.throughput());
-    println!("mean latency     {:.4} s", stats.mean_latency_s);
-    println!("p50 latency      {:.4} s", stats.p50_latency_s);
-    println!("p99 latency      {:.4} s", stats.p99_latency_s);
-    println!("mean slowdown    {:.3}", stats.mean_slowdown);
-    println!("max slowdown     {:.3}", stats.max_slowdown);
-    println!(
-        "kills            {} ({} rejected, {} unsupported)",
-        stats.killed, stats.kills_rejected, stats.kills_unsupported
+    };
+    // Protocol lines went to the transport; the operator summary goes
+    // to stderr so piping stdout stays machine-clean.
+    eprintln!(
+        "psbs serve: session over: delivered={} completed={} killed={}{}",
+        summary.delivered,
+        summary.completed,
+        summary.killed,
+        if summary.aborted { " (shutdown)" } else { "" }
     );
-    if let Some(f) = stats.fault_stats {
-        println!(
-            "cluster faults   {} crash(es), {} restart(s), {} speculation(s), {} lost",
-            f.crashes, f.restarts, f.speculations, f.lost
-        );
-    }
-    if stats.kills_unsupported > 0 {
-        eprintln!(
-            "warning: {} kill(s) were dropped by the discipline (kills_unsupported) — \
-             those jobs ran to completion anyway",
-            stats.kills_unsupported
-        );
-    }
     Ok(())
 }
 
@@ -783,4 +782,39 @@ fn cmd_estimate(a: &Args) -> Result<(), String> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters(name: &str, rows: &[Vec<f64>]) -> figures::Table {
+        let mut t = figures::Table::new(
+            name,
+            vec!["policy".into(), "crashes".into(), "restarts".into(), "lost".into()],
+        );
+        for r in rows {
+            t.push(r.clone());
+        }
+        t
+    }
+
+    #[test]
+    fn all_zero_fault_counter_tables_are_suppressed_on_stdout() {
+        // Column 0 is the policy index, not a counter — a nonzero
+        // index alone must not force the table out.
+        let quiet = counters("fig6_fault_counters", &[vec![0.0, 0.0, 0.0, 0.0], vec![3.0, 0.0, 0.0, 0.0]]);
+        assert_eq!(table_stdout(&quiet), None);
+
+        let noisy = counters("fig6_fault_counters", &[vec![0.0, 0.0, 0.0, 0.0], vec![1.0, 0.0, 2.0, 0.0]]);
+        assert_eq!(table_stdout(&noisy), Some(noisy.render()));
+
+        // Non-counter tables always print, even when all-zero.
+        let plain = counters("fig6_mst", &[vec![0.0, 0.0, 0.0, 0.0]]);
+        assert_eq!(table_stdout(&plain), Some(plain.render()));
+
+        // An empty counter table is vacuously all-zero: suppressed.
+        let empty = counters("fig2_fault_counters", &[]);
+        assert_eq!(table_stdout(&empty), None);
+    }
 }

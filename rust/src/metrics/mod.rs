@@ -10,7 +10,7 @@
 use crate::sim::{Job, SimResult};
 
 pub mod online;
-pub use online::{OnlineMetrics, WindowSnapshot};
+pub use online::{OnlineMetrics, StatsSnapshot, WindowSnapshot};
 
 /// Number of equal-count size classes for conditional slowdown (§7.5:
 /// "binning them into 100 job classes having similar size and

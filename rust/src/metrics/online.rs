@@ -39,6 +39,36 @@ pub struct WindowSnapshot {
     pub mean_slowdown: f64,
 }
 
+/// Point-in-time digest of an [`OnlineMetrics`] accumulator — the
+/// payload of the `psbs serve` `stats` protocol line.
+///
+/// The [`std::fmt::Display`] form is the wire format:
+/// `completed=N active=N mst=X mean_slowdown=X`, with the floats in
+/// Rust's shortest-roundtrip `{}` rendering so a client (or a test)
+/// can parse them back bit-exactly.  Before the first completion the
+/// means are `NaN` (which `f64::from_str` accepts back).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StatsSnapshot {
+    /// Completions folded in so far.
+    pub completed: u64,
+    /// Jobs in flight (arrived, not yet completed or cancelled).
+    pub active: u64,
+    /// Mean sojourn time; `NaN` before the first completion.
+    pub mst: f64,
+    /// Mean slowdown; `NaN` before the first completion.
+    pub mean_slowdown: f64,
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "completed={} active={} mst={} mean_slowdown={}",
+            self.completed, self.active, self.mst, self.mean_slowdown
+        )
+    }
+}
+
 /// Streaming MST / slowdown accumulator with bounded memory:
 /// O(active jobs) for the in-flight map plus O(1) per tracked
 /// quantile, regardless of how many jobs flow through.
@@ -152,6 +182,31 @@ impl OnlineMetrics {
     /// or fewer than `window` jobs completed).
     pub fn snapshots(&self) -> &[WindowSnapshot] {
         &self.snapshots
+    }
+
+    /// Arrival time and true size of an in-flight job, if any — what
+    /// `psbs serve` needs to render a `done` line without keeping a
+    /// second copy of the in-flight map.
+    pub fn in_flight(&self, id: u32) -> Option<(f64, f64)> {
+        self.active.get(&id).copied()
+    }
+
+    /// Forget an in-flight job without completing it (a cancelled /
+    /// killed job): it stops counting as active and never contributes
+    /// to the means.
+    pub fn discard(&mut self, id: u32) {
+        self.active.remove(&id);
+    }
+
+    /// Current [`StatsSnapshot`] — `NaN` means before the first
+    /// completion, mirroring the `Option` accessors.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            completed: self.count,
+            active: self.active.len() as u64,
+            mst: self.mst().unwrap_or(f64::NAN),
+            mean_slowdown: self.mean_slowdown().unwrap_or(f64::NAN),
+        }
     }
 }
 

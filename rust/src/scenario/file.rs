@@ -67,6 +67,7 @@ use super::{
     TraceSpec, WorkloadSpec,
 };
 use crate::coordinator::{FaultConfig, FaultSpec, RetryPolicy};
+use crate::error::Error;
 use crate::workload::trace_file::TraceFile;
 use crate::workload::traces::TraceName;
 use crate::workload::{SizeDist, SynthConfig};
@@ -174,7 +175,7 @@ impl Scenario {
     /// Parse a scenario file.  Errors carry the offending line number.
     /// Relative trace-file `path`s resolve against the working
     /// directory; use [`Scenario::parse_toml_in`] to anchor them.
-    pub fn parse_toml(text: &str) -> Result<Scenario, String> {
+    pub fn parse_toml(text: &str) -> Result<Scenario, Error> {
         Scenario::parse_toml_in(text, None)
     }
 
@@ -182,17 +183,32 @@ impl Scenario {
     /// (the scenario file's own directory, for [`Scenario::load`] and
     /// `psbs scenario validate` — a committed scenario must work from
     /// any working directory).
-    pub fn parse_toml_in(text: &str, base: Option<&Path>) -> Result<Scenario, String> {
-        let doc = Doc::parse(text)?;
-        doc.into_scenario(base)
+    pub fn parse_toml_in(text: &str, base: Option<&Path>) -> Result<Scenario, Error> {
+        let doc = Doc::parse(text).map_err(scenario_error)?;
+        doc.into_scenario(base).map_err(scenario_error)
     }
 
     /// Load a scenario from a file path.
-    pub fn load(path: &str) -> Result<Scenario, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    pub fn load(path: &str) -> Result<Scenario, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::scenario(format!("reading {path}: {e}")))?;
         let base = Path::new(path).parent().filter(|p| !p.as_os_str().is_empty());
-        Scenario::parse_toml_in(&text, base).map_err(|e| format!("{path}: {e}"))
+        Scenario::parse_toml_in(&text, base).map_err(|e| e.with_path(path))
     }
+}
+
+/// Lift an internal parse-error string into [`Error::Scenario`],
+/// extracting the `line {N}: ` prefix the section parser emits into
+/// the structured payload (Display re-attaches it byte-identically).
+fn scenario_error(e: String) -> Error {
+    if let Some(rest) = e.strip_prefix("line ") {
+        if let Some((num, msg)) = rest.split_once(": ") {
+            if let Ok(ln) = num.parse::<u64>() {
+                return Error::Scenario { path: None, line: Some(ln), msg: msg.to_string() };
+            }
+        }
+    }
+    Error::scenario(e)
 }
 
 /// The canonical rendering — `format!("{sc}")` is a scenario file.
@@ -714,7 +730,8 @@ mod tests {
             &rendered.replace("t.csv", "missing.csv"),
             Some(dir.as_path()),
         )
-        .unwrap_err();
+        .unwrap_err()
+        .to_string();
         assert!(err.contains("reading trace file"), "{err}");
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -118,6 +118,10 @@ impl MstSink {
 /// job vector is never materialized.  Bit-identical to the
 /// materialized path (same engine loop, same id-order summation);
 /// `SweepCell::eval` uses it for fault-free synthetic mean cells.
+///
+/// Planner plumbing, not library surface (see [`crate::prelude`]):
+/// hidden from docs, subject to change without notice.
+#[doc(hidden)]
 pub fn stream_mst_seeded(spec: &PolicySpec, w: &WorkloadSpec, seed: u64) -> f64 {
     stream_mst_seeded_at(spec, w, seed, seed)
 }
@@ -169,6 +173,9 @@ fn stream_mst_seeded_at(spec: &PolicySpec, w: &WorkloadSpec, rep_seed: u64, buil
 /// repetition seed is folded into the fault plan's own seed so every
 /// repetition sees an independent (but fully deterministic) fault
 /// schedule, mirroring how it feeds the policy build.
+///
+/// Planner plumbing, not library surface: hidden from docs.
+#[doc(hidden)]
 pub fn fault_value_seeded(
     spec: &PolicySpec,
     jobs: &[Job],
@@ -182,6 +189,9 @@ pub fn fault_value_seeded(
 /// [`fault_value_seeded`] plus the run's raw [`FaultStats`] — the sweep
 /// layer absorbs the stats into per-policy counter tables so non-zero
 /// `kills_rejected`/`kills_unsupported` counts cannot vanish silently.
+///
+/// Planner plumbing, not library surface: hidden from docs.
+#[doc(hidden)]
 pub fn fault_rep_seeded(
     spec: &PolicySpec,
     jobs: &[Job],

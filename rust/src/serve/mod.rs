@@ -1,0 +1,201 @@
+//! `psbs serve` — the scheduler as a live service.
+//!
+//! The same streaming engine that replays million-job traces
+//! ([`crate::sim::engine`]) runs here against the wall clock: jobs
+//! arrive over a line protocol (stdin or one TCP connection), are
+//! dispatched in real time by any policy from the zoo, and metrics
+//! stream back as they happen.  Nothing is simulated twice — the
+//! engine is identical, only the [`crate::sim::Clock`] differs.
+//!
+//! # Protocol
+//!
+//! One request per input line:
+//!
+//! * **data rows** — `arrival,size[,weight][,estimate]`, exactly the
+//!   trace-file grammar ([`crate::workload::trace_file::RowParser`]):
+//!   optional header, `#` comments, blank lines ignored, arrivals
+//!   non-decreasing.  Each accepted row becomes job `0, 1, 2, ...` in
+//!   submission order.
+//! * **`kill <id>`** — cancel a pending job (the PR 5
+//!   [`crate::sim::Scheduler::cancel`] path).  Acked with
+//!   `killed <id>`, nacked with a distinct `err kill <id>: ...`.
+//! * **`stats`** — write a `stats completed=.. active=.. mst=..
+//!   mean_slowdown=..` snapshot line on demand.
+//! * **`drain`** — stop intake, let everything in flight finish, then
+//!   end the session (end-of-input is an implicit `drain`).
+//! * **`shutdown`** — end the session immediately, abandoning
+//!   in-flight jobs.
+//!
+//! Responses: `ok ...` greeting, `done id=.. t=.. sojourn=..
+//! slowdown=..` per completion, `stats ...` (on demand and every
+//! `stats_every` completions), `killed <id>` / `err ...`, and a final
+//! `stats ...` + `bye delivered=.. completed=.. killed=.. aborted=..`
+//! pair when the session ends.  Floats use Rust's shortest-roundtrip
+//! `{}` rendering, so clients can parse them back bit-exactly.
+//!
+//! # Pacing
+//!
+//! `speedup` maps simulation seconds onto wall seconds (10 = run the
+//! trace ten times faster than its timestamps; `f64::INFINITY` =
+//! free-run, no pacing).  At `--speedup inf` a served session is
+//! **bit-identical** to an offline replay of the same rows — pinned by
+//! `rust/tests/serve.rs` — because the session adapters only reorder
+//! *when* the engine waits, never *what* it computes.
+//!
+//! # Backpressure
+//!
+//! The ingress queue is bounded (`queue` requests).  When it fills,
+//! the reader thread parks until the engine admits work — the client
+//! sees an unread pipe/socket; no request is ever dropped silently.
+
+mod session;
+
+use std::io::{BufRead, Write};
+use std::sync::Mutex;
+
+use crate::error::Error;
+use crate::metrics::{OnlineMetrics, StatsSnapshot};
+use crate::scenario::PolicySpec;
+use crate::sim::{run_streaming_clocked, Job, WallClock};
+use crate::workload::trace_file::TraceRow;
+
+use session::{read_requests, LiveClock, LiveSource, ServeSink, Shared};
+
+/// Knobs of one serve session — CLI flags map onto this 1:1.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Policy spec (anything [`PolicySpec::parse`] accepts:
+    /// `psbs`, `cluster(k=4,dispatch=leastwork,inner=psbs)`, ...).
+    pub policy: String,
+    /// Simulated seconds per wall second; `f64::INFINITY` = free-run.
+    pub speedup: f64,
+    /// Ingress queue capacity in requests (≥ 1).
+    pub queue: usize,
+    /// Emit a `stats` line every this many completions (0 = only on
+    /// demand).
+    pub stats_every: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { policy: "psbs".to_string(), speedup: 1.0, queue: 1024, stats_every: 0 }
+    }
+}
+
+/// What a finished session did — the programmatic counterpart of the
+/// final `stats` + `bye` protocol lines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionSummary {
+    /// Jobs admitted into the scheduler.
+    pub delivered: u64,
+    /// Jobs that ran to completion.
+    pub completed: u64,
+    /// Jobs cancelled via `kill`.
+    pub killed: u64,
+    /// The session ended by `shutdown` rather than a graceful drain.
+    pub aborted: bool,
+    /// Final metrics snapshot.
+    pub snapshot: StatsSnapshot,
+}
+
+/// A protocol row as a schedulable [`Job`]: 1:1 field mapping, no
+/// load/speed rescaling (unlike trace *replay*, which rescales sizes
+/// to hit a target load — a live client means its numbers literally).
+/// A row without an estimate gets a perfect one (`est = size`).
+pub fn job_from_row(id: u32, row: &TraceRow) -> Job {
+    Job {
+        id,
+        arrival: row.arrival,
+        size: row.size,
+        est: row.est.unwrap_or(row.size),
+        weight: row.weight,
+    }
+}
+
+/// Run one serve session over arbitrary line-oriented transports:
+/// requests in from `input` (read on a dedicated thread), responses
+/// out through `output` (shared, line-buffered under a mutex).
+/// Returns when the session drains or is shut down.
+///
+/// This is the in-process entry point the round-trip tests drive with
+/// `Cursor`/`Vec<u8>`; [`serve_stdin`] and [`serve_listen`] are thin
+/// transport frontends over it.
+pub fn serve_session<R, W>(input: R, output: W, cfg: &ServeConfig) -> Result<SessionSummary, Error>
+where
+    R: BufRead + Send,
+    W: Write + Send,
+{
+    let spec = PolicySpec::parse(&cfg.policy).map_err(Error::msg)?;
+    if !(cfg.speedup > 0.0) {
+        return Err(Error::msg(format!("--speedup must be positive, got {}", cfg.speedup)));
+    }
+    if cfg.queue == 0 {
+        return Err(Error::msg("--queue must be >= 1"));
+    }
+    let mut sched = spec.build();
+
+    let shared = Shared::new(cfg.queue);
+    let out = Mutex::new(output);
+    let metrics = Mutex::new(OnlineMetrics::new());
+    let _ = writeln!(
+        out.lock().unwrap(),
+        "ok psbs serve policy={} speedup={} queue={}",
+        cfg.policy,
+        cfg.speedup,
+        cfg.queue
+    );
+
+    // Two threads: the scoped reader parses lines into the shared
+    // queue; this thread runs the engine.  The scope joins the reader
+    // before returning — every session end state (drain, EOF,
+    // shutdown) implies the reader already broke out of its loop.
+    let (stats, killed, aborted) = std::thread::scope(|s| {
+        s.spawn(|| read_requests(input, &shared, &out));
+        let mut source = LiveSource::new(&shared, !cfg.speedup.is_finite());
+        let mut clock = LiveClock::new(&shared, WallClock::new(cfg.speedup), &out, &metrics);
+        let mut sink = ServeSink::new(&out, &metrics, cfg.stats_every);
+        let stats = run_streaming_clocked(sched.as_mut(), &mut source, &mut sink, &mut clock, false);
+        (stats, clock.killed, clock.aborted)
+    });
+
+    let snapshot = metrics.into_inner().unwrap().snapshot();
+    let mut w = out.into_inner().unwrap();
+    let _ = writeln!(w, "stats {snapshot}");
+    let _ = writeln!(
+        w,
+        "bye delivered={} completed={} killed={} aborted={}",
+        stats.delivered, stats.completed, killed, aborted
+    );
+    let _ = w.flush();
+    Ok(SessionSummary {
+        delivered: stats.delivered,
+        completed: stats.completed,
+        killed,
+        aborted,
+        snapshot,
+    })
+}
+
+/// Serve one session over stdin/stdout (`psbs serve --stdin`).
+pub fn serve_stdin(cfg: &ServeConfig) -> Result<SessionSummary, Error> {
+    serve_session(std::io::BufReader::new(std::io::stdin()), std::io::stdout(), cfg)
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7070`), accept **one** connection,
+/// serve it to completion, and return (`psbs serve --listen ADDR`).
+/// One connection is one session is one scheduler — multi-tenant
+/// serving is a matter of running more processes.
+pub fn serve_listen(addr: &str, cfg: &ServeConfig) -> Result<SessionSummary, Error> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| Error::msg(format!("binding {addr}: {e}")))?;
+    if let Ok(local) = listener.local_addr() {
+        eprintln!("psbs serve: listening on {local} (one connection)");
+    }
+    let (stream, peer) =
+        listener.accept().map_err(|e| Error::msg(format!("accepting on {addr}: {e}")))?;
+    eprintln!("psbs serve: client {peer}");
+    let reader = std::io::BufReader::new(
+        stream.try_clone().map_err(|e| Error::msg(format!("cloning connection: {e}")))?,
+    );
+    serve_session(reader, stream, cfg)
+}

@@ -1,0 +1,505 @@
+//! Session internals for [`crate::serve`]: the bounded ingress queue
+//! the reader thread and the engine share, and the three engine-side
+//! adapters that turn the streaming event loop into a live service —
+//! [`LiveSource`] (arrivals off the wire), [`LiveClock`] (wall pacing,
+//! interruptible waits, control verbs) and [`ServeSink`] (protocol
+//! output + shared [`OnlineMetrics`]).
+//!
+//! Threading model: exactly two threads touch the session — the reader
+//! (parses lines, pushes [`Request`]s) and the engine (everything
+//! else).  They meet only at [`Shared`]: one mutex-protected FIFO with
+//! two condvars.  `can_pop` wakes the engine when a request lands;
+//! `can_push` wakes the reader when the engine frees a slot.  The
+//! queue is bounded (`--queue`): when it fills, the *reader parks* —
+//! backpressure propagates to the client through an unread socket /
+//! pipe, and no request is ever dropped silently.
+//!
+//! Deadlock freedom: the reader only ever waits on `can_push` (queue
+//! full) and the engine only ever waits on `can_pop` (queue empty or,
+//! paced, on a timeout).  With capacity ≥ 1 the queue cannot be full
+//! and empty at once, so one of the two always makes progress.
+//!
+//! Ordering: requests take effect strictly in protocol order.  A
+//! control verb behind a submitted row is a *barrier* — it is applied
+//! only after every earlier row has been admitted into the scheduler
+//! (under pacing, that means after the row's arrival time has come
+//! due).  This is what makes a served session deterministic and, at
+//! `--speedup inf`, bit-identical to an offline replay of the same
+//! rows.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::sync::{Condvar, Mutex};
+
+use crate::error::Error;
+use crate::metrics::OnlineMetrics;
+use crate::sim::{
+    Clock, Completion, CompletionSink, Job, JobSource, JobStore, Scheduler, Wait, WallClock,
+};
+use crate::workload::trace_file::{RowParser, TraceRow};
+
+/// One parsed protocol request, queued in protocol order.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Request {
+    /// A data row (`arrival,size[,weight][,estimate]`): run this job.
+    Submit(TraceRow),
+    /// `kill <id>` — cancel a pending job.
+    Kill(u32),
+    /// `stats` — write a metrics snapshot line.
+    Stats,
+    /// `drain` (or end of input) — stop intake, finish what's in
+    /// flight, then end the session gracefully.
+    Drain,
+    /// `shutdown` — end the session now, abandoning in-flight jobs.
+    Shutdown,
+}
+
+/// The mutex-protected half of [`Shared`].
+pub(crate) struct Ingress {
+    pub queue: VecDeque<Request>,
+    /// The reader is done (EOF, `drain` or `shutdown` seen): nothing
+    /// will ever be pushed again.
+    pub closed: bool,
+    cap: usize,
+}
+
+/// Everything the reader thread and the engine share.
+pub(crate) struct Shared {
+    pub ing: Mutex<Ingress>,
+    /// Signalled after every push and on close: the engine may have
+    /// something to pop (or a reason to stop waiting).
+    pub can_pop: Condvar,
+    /// Signalled after every pop: the reader may have room to push.
+    pub can_push: Condvar,
+}
+
+impl Shared {
+    pub fn new(cap: usize) -> Shared {
+        assert!(cap >= 1, "ingress queue capacity must be >= 1");
+        Shared {
+            ing: Mutex::new(Ingress { queue: VecDeque::new(), closed: false, cap }),
+            can_pop: Condvar::new(),
+            can_push: Condvar::new(),
+        }
+    }
+
+    /// Blocking bounded push — the backpressure point.
+    fn push(&self, req: Request) {
+        let mut ing = self.ing.lock().unwrap();
+        while ing.queue.len() >= ing.cap {
+            ing = self.can_push.wait(ing).unwrap();
+        }
+        ing.queue.push_back(req);
+        self.can_pop.notify_all();
+    }
+
+    /// Mark the request stream closed and wake the engine.
+    fn close(&self) {
+        let mut ing = self.ing.lock().unwrap();
+        ing.closed = true;
+        self.can_pop.notify_all();
+    }
+}
+
+/// The reader loop: one protocol request per input line.
+///
+/// Control verbs are recognized by the line's first whitespace token
+/// (`kill`, `stats`, `drain`, `shutdown` — data rows are
+/// comma-separated, so the token space cannot collide); every other
+/// non-empty line goes through the trace-file [`RowParser`] — same
+/// grammar as on-disk traces, including the optional header, `#`
+/// comments and the non-decreasing-arrival check.  Malformed lines
+/// are answered with an `err line N: ...` line and the session
+/// continues; `drain`/`shutdown`/EOF end the loop and close intake
+/// (EOF is an implicit `drain`).
+pub(crate) fn read_requests<R: BufRead, W: Write>(input: R, shared: &Shared, out: &Mutex<W>) {
+    let mut parser = RowParser::new();
+    let mut ln = 0usize;
+    for line in input.lines() {
+        ln += 1;
+        let Ok(raw) = line else { break };
+        let mut words = raw.split_whitespace();
+        match words.next() {
+            Some("kill") => match words.next().map(str::parse::<u32>) {
+                Some(Ok(id)) if words.next().is_none() => shared.push(Request::Kill(id)),
+                _ => {
+                    let e = Error::protocol_line(
+                        ln as u64,
+                        format!("kill: expected one job id, got `{}`", raw.trim()),
+                    );
+                    let _ = writeln!(out.lock().unwrap(), "err {e}");
+                }
+            },
+            Some("stats") => shared.push(Request::Stats),
+            Some("drain") => {
+                shared.push(Request::Drain);
+                break;
+            }
+            Some("shutdown") => {
+                shared.push(Request::Shutdown);
+                break;
+            }
+            _ => match parser.line(ln, &raw) {
+                Ok(Some(row)) => shared.push(Request::Submit(row)),
+                Ok(None) => {} // blank, comment, or header
+                Err(e) => {
+                    let _ = writeln!(out.lock().unwrap(), "err {e}");
+                }
+            },
+        }
+    }
+    shared.close();
+}
+
+/// Engine-facing job stream over the ingress queue.
+///
+/// `peek_arrival` exposes the front `Submit`'s arrival time; a control
+/// request at the front is a barrier (`None` — the engine falls
+/// through to `wait_idle`, comes back around, and [`LiveClock::on_step`]
+/// applies it), which keeps requests strictly in protocol order.
+///
+/// Free-run mode (`--speedup inf`): an *empty, open* queue **blocks**
+/// until the reader pushes or closes.  The engine then always knows
+/// the next arrival before advancing — the event merge, and therefore
+/// every completion time, is bit-identical to an offline replay of
+/// the same rows.  Under finite pacing an empty queue just reads as
+/// "nothing yet" (`None`) and the clock's timed waits take over.
+///
+/// Ids are assigned densely (0, 1, 2, ...) in submission order — the
+/// ids `done`/`killed` protocol lines refer to.
+pub(crate) struct LiveSource<'a> {
+    shared: &'a Shared,
+    free_run: bool,
+    next_id: u32,
+}
+
+impl<'a> LiveSource<'a> {
+    pub fn new(shared: &'a Shared, free_run: bool) -> LiveSource<'a> {
+        LiveSource { shared, free_run, next_id: 0 }
+    }
+}
+
+impl JobSource for LiveSource<'_> {
+    fn peek_arrival(&mut self) -> Option<f64> {
+        let mut ing = self.shared.ing.lock().unwrap();
+        loop {
+            match ing.queue.front() {
+                Some(Request::Submit(row)) => return Some(row.arrival),
+                Some(_) => return None, // control barrier
+                None if ing.closed || !self.free_run => return None,
+                None => ing = self.shared.can_pop.wait(ing).unwrap(),
+            }
+        }
+    }
+
+    fn next_job(&mut self) -> Option<Job> {
+        let mut ing = self.shared.ing.lock().unwrap();
+        if !matches!(ing.queue.front(), Some(Request::Submit(_))) {
+            return None;
+        }
+        let Some(Request::Submit(row)) = ing.queue.pop_front() else { unreachable!() };
+        self.shared.can_push.notify_all();
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(super::job_from_row(id, &row))
+    }
+}
+
+/// The serve session clock: [`WallClock`] pacing plus interruptible
+/// waits and the control-verb hook — the live half of the [`Clock`]
+/// contract.
+pub(crate) struct LiveClock<'a, W: Write> {
+    shared: &'a Shared,
+    pace: WallClock,
+    out: &'a Mutex<W>,
+    metrics: &'a Mutex<OnlineMetrics>,
+    /// Jobs successfully cancelled via `kill`.
+    pub killed: u64,
+    /// The session ended by `shutdown` (vs a graceful drain).
+    pub aborted: bool,
+}
+
+impl<'a, W: Write> LiveClock<'a, W> {
+    pub fn new(
+        shared: &'a Shared,
+        pace: WallClock,
+        out: &'a Mutex<W>,
+        metrics: &'a Mutex<OnlineMetrics>,
+    ) -> LiveClock<'a, W> {
+        LiveClock { shared, pace, out, metrics, killed: 0, aborted: false }
+    }
+
+    /// The PR 5 kill path, live: route through [`Scheduler::cancel`]
+    /// and the store's state ledger, ack with `killed <id>` or nack
+    /// with a distinct `err kill <id>: ...` reason.
+    fn kill(&mut self, now: f64, id: u32, sched: &mut dyn Scheduler, store: &mut JobStore) {
+        if !store.is_active(id) {
+            let why = if id >= store.next_id() { "unknown id" } else { "not pending" };
+            let _ = writeln!(self.out.lock().unwrap(), "err kill {id}: {why}");
+        } else if sched.cancel(now, id) {
+            store.mark_cancelled(id);
+            store.retire();
+            self.metrics.lock().unwrap().discard(id);
+            self.killed += 1;
+            let _ = writeln!(self.out.lock().unwrap(), "killed {id}");
+        } else {
+            let _ = writeln!(
+                self.out.lock().unwrap(),
+                "err kill {id}: policy does not support cancellation"
+            );
+        }
+    }
+}
+
+impl<W: Write> Clock for LiveClock<'_, W> {
+    fn wait_until(&mut self, t: f64) -> Wait {
+        let mut ing = self.shared.ing.lock().unwrap();
+        loop {
+            // A control verb at the front outranks the planned event:
+            // re-plan so `on_step` applies it first.  (The front of a
+            // non-empty queue is stable under us — pushes append, and
+            // all pops happen on this thread.)
+            if matches!(ing.queue.front(), Some(r) if !matches!(r, Request::Submit(_))) {
+                return Wait::Interrupted;
+            }
+            let Some(dur) = self.pace.remaining(t) else { return Wait::Elapsed };
+            let was_empty = ing.queue.is_empty();
+            let (guard, timeout) = self.shared.can_pop.wait_timeout(ing, dur).unwrap();
+            ing = guard;
+            if was_empty && !ing.queue.is_empty() {
+                // First request after an empty stretch: it may predate
+                // the event we were sleeping toward — re-merge.
+                return Wait::Interrupted;
+            }
+            if timeout.timed_out() {
+                return Wait::Elapsed;
+            }
+        }
+    }
+
+    fn wait_idle(&mut self) -> bool {
+        let mut ing = self.shared.ing.lock().unwrap();
+        loop {
+            if !ing.queue.is_empty() {
+                return true;
+            }
+            if ing.closed {
+                return false; // graceful drain: nothing left anywhere
+            }
+            ing = self.shared.can_pop.wait(ing).unwrap();
+        }
+    }
+
+    fn live(&self) -> bool {
+        true
+    }
+
+    fn on_step(&mut self, now: f64, sched: &mut dyn Scheduler, store: &mut JobStore) -> bool {
+        loop {
+            let req = {
+                let mut ing = self.shared.ing.lock().unwrap();
+                match ing.queue.front() {
+                    // Submits belong to the source; an empty queue
+                    // means nothing to apply.
+                    Some(Request::Submit(_)) | None => return true,
+                    Some(_) => {
+                        let req = ing.queue.pop_front().unwrap();
+                        self.shared.can_push.notify_all();
+                        req
+                    }
+                }
+            };
+            match req {
+                Request::Kill(id) => self.kill(now, id, sched, store),
+                Request::Stats => {
+                    let snap = self.metrics.lock().unwrap().snapshot();
+                    let _ = writeln!(self.out.lock().unwrap(), "stats {snap}");
+                }
+                // Intake is already closed (the reader pushed Drain as
+                // its last act); the engine drains naturally.
+                Request::Drain => {}
+                Request::Shutdown => {
+                    self.aborted = true;
+                    return false;
+                }
+                Request::Submit(_) => unreachable!("matched above"),
+            }
+        }
+    }
+}
+
+/// Protocol-side completion sink: one `done` line per completion and a
+/// `stats` line every `stats_every` completions (0 = off).  All metric
+/// state lives in the shared [`OnlineMetrics`] so the `stats` verb
+/// (answered by the clock) and the cadence lines report from the same
+/// accumulator.
+pub(crate) struct ServeSink<'a, W: Write> {
+    out: &'a Mutex<W>,
+    metrics: &'a Mutex<OnlineMetrics>,
+    stats_every: u64,
+}
+
+impl<'a, W: Write> ServeSink<'a, W> {
+    pub fn new(
+        out: &'a Mutex<W>,
+        metrics: &'a Mutex<OnlineMetrics>,
+        stats_every: u64,
+    ) -> ServeSink<'a, W> {
+        ServeSink { out, metrics, stats_every }
+    }
+}
+
+impl<W: Write> CompletionSink for ServeSink<'_, W> {
+    fn on_arrival(&mut self, now: f64, job: &Job) {
+        self.metrics.lock().unwrap().on_arrival(now, job);
+    }
+
+    fn on_completion(&mut self, time: f64, c: &Completion) {
+        let mut m = self.metrics.lock().unwrap();
+        let (arrival, size) = m.in_flight(c.id).unwrap_or((f64::NAN, f64::NAN));
+        m.on_completion(time, c);
+        let sojourn = time - arrival;
+        let mut out = self.out.lock().unwrap();
+        let _ = writeln!(
+            out,
+            "done id={} t={} sojourn={} slowdown={}",
+            c.id,
+            time,
+            sojourn,
+            sojourn / size
+        );
+        if self.stats_every > 0 && m.count() % self.stats_every == 0 {
+            let _ = writeln!(out, "stats {}", m.snapshot());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn drained(shared: &Shared) -> Vec<Request> {
+        let mut ing = shared.ing.lock().unwrap();
+        assert!(ing.closed, "reader must close intake");
+        ing.queue.drain(..).collect()
+    }
+
+    #[test]
+    fn reader_parses_verbs_rows_and_reports_errors() {
+        let input = Cursor::new(
+            "arrival,size,weight\n\
+             # comment\n\
+             0.5,2,1\n\
+             kill 3\n\
+             stats\n\
+             0.5,oops,1\n\
+             kill seven\n\
+             1.5,4,2\n\
+             drain\n\
+             9.9,9,9\n",
+        );
+        let shared = Shared::new(64);
+        let out = Mutex::new(Vec::new());
+        read_requests(input, &shared, &out);
+
+        let reqs = drained(&shared);
+        assert_eq!(reqs.len(), 5, "header/comment/bad lines produce no requests: {reqs:?}");
+        assert!(matches!(reqs[0], Request::Submit(TraceRow { arrival, .. }) if arrival == 0.5));
+        assert_eq!(reqs[1], Request::Kill(3));
+        assert_eq!(reqs[2], Request::Stats);
+        assert!(matches!(reqs[3], Request::Submit(TraceRow { weight, .. }) if weight == 2.0));
+        // `drain` stops the reader: the trailing row is never read.
+        assert_eq!(reqs[4], Request::Drain);
+
+        let errs = String::from_utf8(out.into_inner().unwrap()).unwrap();
+        let lines: Vec<&str> = errs.lines().collect();
+        assert_eq!(lines.len(), 2, "one err line per bad input line: {lines:?}");
+        assert!(lines[0].starts_with("err line 6: "), "{}", lines[0]);
+        assert!(lines[0].contains("not a number"), "{}", lines[0]);
+        assert_eq!(lines[1], "err line 7: kill: expected one job id, got `kill seven`");
+    }
+
+    #[test]
+    fn bounded_push_parks_the_reader_until_the_engine_pops() {
+        let shared = Shared::new(1);
+        let got = std::thread::scope(|s| {
+            s.spawn(|| {
+                for id in 0..3 {
+                    shared.push(Request::Kill(id));
+                }
+                shared.close();
+            });
+            // Pop slowly; the pusher must park at the full queue each
+            // time rather than dropping or reordering.
+            let mut got = Vec::new();
+            loop {
+                let mut ing = shared.ing.lock().unwrap();
+                while ing.queue.is_empty() && !ing.closed {
+                    ing = shared.can_pop.wait(ing).unwrap();
+                }
+                assert!(ing.queue.len() <= 1, "capacity respected");
+                match ing.queue.pop_front() {
+                    Some(r) => {
+                        shared.can_push.notify_all();
+                        got.push(r);
+                    }
+                    None => break,
+                }
+            }
+            got
+        });
+        assert_eq!(got, vec![Request::Kill(0), Request::Kill(1), Request::Kill(2)]);
+    }
+
+    /// A discipline that leaves [`Scheduler::cancel`] at its default
+    /// (`false`): the kill path must nack with the "unsupported"
+    /// reason, not pretend the job died.
+    struct NoCancel {
+        pending: Vec<u32>,
+    }
+
+    impl Scheduler for NoCancel {
+        fn name(&self) -> &'static str {
+            "nocancel"
+        }
+        fn on_arrival(&mut self, _now: f64, id: u32, _store: &JobStore) {
+            self.pending.push(id);
+        }
+        fn next_event(&self, _now: f64) -> Option<f64> {
+            None
+        }
+        fn advance(&mut self, _now: f64, _t: f64, _store: &JobStore, _done: &mut Vec<Completion>) {}
+        fn active(&self) -> usize {
+            self.pending.len()
+        }
+    }
+
+    #[test]
+    fn kill_nacks_are_distinct_per_reason() {
+        let shared = Shared::new(8);
+        let out = Mutex::new(Vec::new());
+        let metrics = Mutex::new(OnlineMetrics::new());
+        let mut clock = LiveClock::new(&shared, WallClock::new(1.0), &out, &metrics);
+        let mut sched = NoCancel { pending: Vec::new() };
+        let mut store = JobStore::new();
+        let job = Job { id: 0, arrival: 0.0, size: 1.0, est: 1.0, weight: 1.0 };
+        store.deliver(&mut sched, 0.0, &job);
+
+        clock.kill(0.0, 7, &mut sched, &mut store); // never submitted
+        clock.kill(0.0, 0, &mut sched, &mut store); // pending, unsupported
+        store.mark_cancelled(0);
+        clock.kill(0.0, 0, &mut sched, &mut store); // no longer pending
+
+        assert_eq!(clock.killed, 0);
+        let text = String::from_utf8(out.into_inner().unwrap()).unwrap();
+        assert_eq!(
+            text.lines().collect::<Vec<_>>(),
+            vec![
+                "err kill 7: unknown id",
+                "err kill 0: policy does not support cancellation",
+                "err kill 0: not pending",
+            ]
+        );
+    }
+}

@@ -1,0 +1,192 @@
+//! Clock abstraction: what the event loop does *between* events.
+//!
+//! The streaming engine (`engine::stream_inner`) merges two event
+//! streams — arrivals and scheduler-internal events — and advances
+//! simulation state from one timestamp to the next.  In a simulation
+//! that advance is free: virtual time jumps.  In a live service
+//! (`psbs serve`) the same loop must *wait* for the wall clock to
+//! reach each event, stay alive while both streams are momentarily
+//! dry (more work may still arrive over the wire), and give the
+//! service layer a hook to apply control requests (kills, stats,
+//! shutdown) between steps.
+//!
+//! [`Clock`] captures exactly those four degrees of freedom, each with
+//! a default that is the simulation behavior:
+//!
+//! * [`Clock::wait_until`] — block until it is time to process the
+//!   event at `t` (default: don't — virtual time is free).  A live
+//!   clock may return [`Wait::Interrupted`] to tell the engine to
+//!   re-plan because the world changed while it slept (a new arrival
+//!   or control request landed).
+//! * [`Clock::wait_idle`] — both streams are dry; park until there is
+//!   a reason to continue, or report that the run is over (default:
+//!   it is over).
+//! * [`Clock::live`] — whether the arrival source is open-ended
+//!   (default: no).  A live engine must not stop just because
+//!   everything delivered so far has completed.
+//! * [`Clock::on_step`] — a between-steps hook with mutable access to
+//!   the scheduler and the engine's [`JobStore`], where a service
+//!   applies control requests (the kill path routes through
+//!   [`Scheduler::cancel`] here); returning `false` aborts the run
+//!   (default: keep going, touch nothing).
+//!
+//! [`VirtualClock`] implements the trait with *only* the defaults and
+//! the engine is generic over the clock type, so the classic
+//! simulation entry points monomorphize to exactly the pre-clock loop
+//! — bit-identically, pinned by `rust/tests/streaming.rs` across the
+//! whole policy zoo.  [`WallClock`] adds real-time pacing (with a
+//! `--speedup` fast-forward factor) and is the pacing core of the
+//! `psbs serve` session clock.
+
+use super::store::JobStore;
+use super::Scheduler;
+use std::time::{Duration, Instant};
+
+/// Outcome of a [`Clock::wait_until`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wait {
+    /// The wait ran to completion: process the event as planned.
+    Elapsed,
+    /// The world changed while waiting (new arrival, control request):
+    /// the engine must re-merge the event streams before advancing.
+    Interrupted,
+}
+
+/// What the event loop does between events — see the module docs.
+/// Every method defaults to the virtual-time behavior; implement only
+/// what a live deployment needs.
+pub trait Clock {
+    /// Block until the event at simulation time `t` should be
+    /// processed.  Return [`Wait::Interrupted`] if the merge inputs
+    /// may have changed (the engine loops back to re-plan instead of
+    /// advancing).
+    fn wait_until(&mut self, _t: f64) -> Wait {
+        Wait::Elapsed
+    }
+
+    /// Both event streams are dry.  Return `true` to re-check (more
+    /// work arrived or may still arrive), `false` to end the run.
+    fn wait_idle(&mut self) -> bool {
+        false
+    }
+
+    /// `true` when the arrival source is open-ended: the engine then
+    /// keeps running after all delivered jobs complete instead of
+    /// treating a momentarily-dry source as the end of the workload.
+    fn live(&self) -> bool {
+        false
+    }
+
+    /// Between-steps service hook, called once per loop iteration
+    /// before the event streams are merged.  `now` is the engine's
+    /// current simulation time; a live clock applies control requests
+    /// here (kills via [`Scheduler::cancel`] + the store's state
+    /// ledger).  Return `false` to abort the run immediately.
+    fn on_step(&mut self, _now: f64, _sched: &mut dyn Scheduler, _store: &mut JobStore) -> bool {
+        true
+    }
+}
+
+/// Virtual time: all defaults, zero behavior — the simulation clock.
+/// The engine monomorphized over `VirtualClock` is bit-identical to
+/// the pre-clock engine (there is nothing to diverge: every hook
+/// compiles to a constant).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct VirtualClock;
+
+impl Clock for VirtualClock {}
+
+/// Wall-clock pacing: simulation time mapped affinely onto real time,
+/// `speedup` simulated seconds per wall second (`f64::INFINITY` = no
+/// pacing, run as fast as possible).
+///
+/// The origin is lazy: the first [`WallClock::remaining`] call pins
+/// (wall now ↔ that event's simulation time), so a trace whose first
+/// arrival is at t=10⁶ starts immediately instead of sleeping for
+/// eleven virtual days.  Used directly as a [`Clock`] it paces a
+/// closed workload (replay in real time); the `psbs serve` session
+/// clock embeds one for pacing and layers interruptible waiting and
+/// control handling on top.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    speedup: f64,
+    /// (wall origin, simulation origin), pinned at the first wait.
+    origin: Option<(Instant, f64)>,
+}
+
+impl WallClock {
+    /// `speedup` must be positive (`INFINITY` allowed: no pacing).
+    pub fn new(speedup: f64) -> WallClock {
+        assert!(speedup > 0.0, "speedup must be positive, got {speedup}");
+        WallClock { speedup, origin: None }
+    }
+
+    /// How much longer the wall clock says to wait before processing
+    /// the event at simulation time `t` — `None` when it is already
+    /// due (or pacing is off).  Pins the pacing origin on first call.
+    pub fn remaining(&mut self, t: f64) -> Option<Duration> {
+        if !self.speedup.is_finite() {
+            return None;
+        }
+        let (wall0, sim0) = *self.origin.get_or_insert_with(|| (Instant::now(), t));
+        let dt = (t - sim0) / self.speedup;
+        if !(dt > 0.0) || !dt.is_finite() {
+            return None; // first event, past-due event, or degenerate dt
+        }
+        let due = wall0 + Duration::from_secs_f64(dt);
+        due.checked_duration_since(Instant::now()).filter(|d| !d.is_zero())
+    }
+}
+
+impl Clock for WallClock {
+    fn wait_until(&mut self, t: f64) -> Wait {
+        if let Some(d) = self.remaining(t) {
+            std::thread::sleep(d);
+        }
+        Wait::Elapsed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_all_defaults() {
+        let mut c = VirtualClock;
+        assert_eq!(c.wait_until(123.0), Wait::Elapsed);
+        assert!(!c.wait_idle());
+        assert!(!c.live());
+    }
+
+    #[test]
+    fn wall_clock_first_event_is_immediate() {
+        let mut c = WallClock::new(1.0);
+        // Even a huge first timestamp: the origin pins to it.
+        assert_eq!(c.remaining(1.0e6), None);
+        // And past-due events after the origin never wait.
+        assert_eq!(c.remaining(1.0e6), None);
+    }
+
+    #[test]
+    fn wall_clock_paces_relative_to_origin() {
+        let mut c = WallClock::new(1000.0); // 1000 sim-seconds per wall-second
+        assert_eq!(c.remaining(0.0), None);
+        let d = c.remaining(100.0).expect("future event must wait");
+        assert!(d <= Duration::from_millis(100), "100 sim-s at 1000x is <= 0.1 wall-s, got {d:?}");
+    }
+
+    #[test]
+    fn infinite_speedup_never_waits() {
+        let mut c = WallClock::new(f64::INFINITY);
+        assert_eq!(c.remaining(0.0), None);
+        assert_eq!(c.remaining(1.0e9), None);
+        assert_eq!(c.wait_until(1.0e9), Wait::Elapsed);
+    }
+
+    #[test]
+    #[should_panic(expected = "speedup must be positive")]
+    fn zero_speedup_rejected() {
+        WallClock::new(0.0);
+    }
+}

@@ -15,6 +15,7 @@
 //!   and each job's fields live once, in the engine-owned [`JobStore`],
 //!   whose completed prefix is retired to keep memory O(active).
 
+use super::clock::{Clock, VirtualClock, Wait};
 use super::job::{Completion, Job};
 use super::source::{CompletionSink, JobSource, NullSink, SliceSource};
 use super::store::JobStore;
@@ -120,7 +121,7 @@ pub fn run_streaming(
     source: &mut dyn JobSource,
     sink: &mut dyn CompletionSink,
 ) -> StreamStats {
-    stream_inner(sched, source, sink, true)
+    stream_inner(sched, source, sink, &mut VirtualClock, true)
 }
 
 /// Streaming analogue of [`run_to_drain`]: tolerates jobs that never
@@ -130,28 +131,50 @@ pub fn run_streaming_to_drain(
     source: &mut dyn JobSource,
     sink: &mut dyn CompletionSink,
 ) -> StreamStats {
-    stream_inner(sched, source, sink, false)
+    stream_inner(sched, source, sink, &mut VirtualClock, false)
 }
 
-/// The one event loop.  Generic (not `dyn`) over source and sink so
-/// the materialized adapters monomorphize to exactly the direct code
-/// they replaced; the public streaming entry points instantiate it
-/// with trait objects.
+/// The clock-generic streaming entry point: [`run_streaming_to_drain`]
+/// with an explicit [`Clock`] deciding what happens *between* events —
+/// real-time pacing, idle parking, control handling (see
+/// [`crate::sim::clock`]).  With a [`VirtualClock`] this is exactly
+/// `run_streaming` (`require_all = true`) / `run_streaming_to_drain`
+/// (`require_all = false`), bit for bit — pinned across the policy zoo
+/// by `rust/tests/streaming.rs`.  `psbs serve` drives this with a
+/// live, wall-paced clock.
+pub fn run_streaming_clocked(
+    sched: &mut dyn Scheduler,
+    source: &mut dyn JobSource,
+    sink: &mut dyn CompletionSink,
+    clock: &mut dyn Clock,
+    require_all: bool,
+) -> StreamStats {
+    stream_inner(sched, source, sink, clock, require_all)
+}
+
+/// The one event loop.  Generic (not `dyn`) over source, sink and
+/// clock so the materialized adapters monomorphize to exactly the
+/// direct code they replaced ([`VirtualClock`]'s hooks are constants,
+/// so the classic paths compile to the pre-clock loop bit-identically);
+/// the public streaming entry points instantiate it with trait
+/// objects.
 ///
 /// The loop owns the [`JobStore`]: jobs are pushed as the source
 /// yields them, every arrival at one timestamp is handed to the
 /// scheduler as a single `on_arrival_batch` burst, completions flip
 /// the store's state ledger, and the completed prefix is retired so a
 /// 10^6-job streaming run holds O(active) rows.
-fn stream_inner<S, K>(
+fn stream_inner<S, K, C>(
     sched: &mut dyn Scheduler,
     source: &mut S,
     sink: &mut K,
+    clock: &mut C,
     require_all: bool,
 ) -> StreamStats
 where
     S: JobSource + ?Sized,
     K: CompletionSink + ?Sized,
+    C: Clock + ?Sized,
 {
     let mut store = JobStore::new();
     let mut done: Vec<Completion> = Vec::with_capacity(16);
@@ -161,11 +184,25 @@ where
     let mut completed: u64 = 0;
 
     loop {
+        // Service hook: a live clock applies control requests (kills,
+        // stats, shutdown) here, between steps, with the scheduler and
+        // store coherent at `now`.
+        if !clock.on_step(now, sched, &mut store) {
+            break;
+        }
         let next_arrival = source.peek_arrival();
         let next_internal = sched.next_event(now);
 
         let (t, is_arrival) = match (next_arrival, next_internal) {
-            (None, None) => break,
+            // Both streams dry: over for a closed workload; a live
+            // clock parks here until more work arrives over the wire.
+            (None, None) => {
+                if clock.wait_idle() {
+                    continue;
+                } else {
+                    break;
+                }
+            }
             (Some(a), None) => (a, true),
             (None, Some(e)) => (e, false),
             // Completions first at ties.
@@ -180,6 +217,14 @@ where
         // Guard against schedulers that report a past event (would
         // otherwise livelock): clamp to `now`.
         let t = t.max(now);
+
+        // Pacing point: a wall clock blocks here until the event is
+        // due.  An interrupted wait means the merge inputs changed
+        // (new arrival or control request landed while sleeping) —
+        // re-plan from the top instead of advancing to a stale `t`.
+        if let Wait::Interrupted = clock.wait_until(t) {
+            continue;
+        }
 
         done.clear();
         sched.advance(now, t, &store, &mut done);
@@ -230,8 +275,10 @@ where
         // Equivalent to the classic `completed == jobs.len() &&
         // next_job == jobs.len()`: the source is dry exactly when all
         // n jobs were delivered, and then completed == delivered ⟺
-        // completed == n.
-        if completed == delivered && source.peek_arrival().is_none() {
+        // completed == n.  A live source is never "dry", only
+        // momentarily empty — the `live()` check both keeps the run
+        // going and short-circuits ahead of a peek that may block.
+        if completed == delivered && !clock.live() && source.peek_arrival().is_none() {
             break;
         }
     }
@@ -280,7 +327,7 @@ fn run_inner(
     let mut completion = vec![f64::NAN; jobs.len()];
     let mut source = SliceSource::new(jobs);
     let mut rec = Recorder { completion: &mut completion, inner: sink };
-    let stats = stream_inner(sched, &mut source, &mut rec, require_all);
+    let stats = stream_inner(sched, &mut source, &mut rec, &mut VirtualClock, require_all);
     if require_all {
         debug_assert_eq!(stats.completed as usize, jobs.len(), "not all jobs completed");
     }

@@ -12,19 +12,25 @@
 //! * [`engine`] — the event loop merging the arrival stream with each
 //!   scheduler's internal event stream; same-timestamp arrival bursts
 //!   are coalesced into one [`Scheduler::on_arrival_batch`] call.
+//! * [`clock`] — what the loop does *between* events: [`VirtualClock`]
+//!   (free virtual time — the simulation, bit-identical to the
+//!   pre-clock engine) vs [`WallClock`]-paced live deployments
+//!   (`psbs serve`), via [`engine::run_streaming_clocked`].
 //! * [`smallstep`] — an independent fixed-step integrator over
 //!   allocation functions ω(i,t), used purely as a cross-validation
 //!   oracle for the event-driven implementations.
 
+pub mod clock;
 pub mod engine;
 pub mod job;
 pub mod smallstep;
 pub mod source;
 pub mod store;
 
+pub use clock::{Clock, VirtualClock, Wait, WallClock};
 pub use engine::{
-    run, run_streaming, run_streaming_to_drain, run_to_drain, run_with_sink, SimResult,
-    StreamStats,
+    run, run_streaming, run_streaming_clocked, run_streaming_to_drain, run_to_drain,
+    run_with_sink, SimResult, StreamStats,
 };
 pub use job::{Completion, Job};
 pub use source::{CompletionSink, JobSource, NullSink, SliceSource, VecSource};
@@ -56,6 +62,25 @@ pub use store::{JobId, JobState, JobStore};
 /// to keep streaming memory O(active)).  Work conservation, preemption
 /// rules and tie-breaking are entirely the implementation's business;
 /// the engine only merges event streams.
+///
+/// Real-time contract (`psbs serve`): the same three calls drive a
+/// *live* deployment through [`engine::run_streaming_clocked`], where
+/// `now` advances under wall-clock pacing and arrivals come off a
+/// socket instead of a trace.  Nothing changes semantically for a
+/// discipline, but two latent assumptions become load-bearing:
+///
+/// * a job may be delivered with `store.arrival(id) < now` (it crossed
+///   the wire late) — disciplines must key off `now` and the store
+///   columns, never assume `on_arrival`'s `now` equals the stamped
+///   arrival time (none of the zoo does; the engine has always clamped
+///   past-due events to `now`);
+/// * [`Scheduler::cancel`] may be called between any two engine steps
+///   (a live kill request), not just at arrival instants — state must
+///   be coherent whenever `advance` returns, which the PR 5 cancel
+///   churn tests already pin.
+///
+/// All calls stay on one thread: the engine never shares a scheduler
+/// across threads, so implementations need no synchronization.
 pub trait Scheduler {
     /// Discipline name (used in reports and CSV headers).
     fn name(&self) -> &'static str;

@@ -187,6 +187,17 @@ impl JobStore {
         self.state[self.idx(id)]
     }
 
+    /// Whether `id` names a live (delivered, not yet completed or
+    /// cancelled) row.  Unlike [`JobStore::state`], this is total over
+    /// the whole id space: ids below `base` (compacted away — they
+    /// were necessarily non-`Active`) and ids not yet pushed are
+    /// simply `false`, never a panic.  The `psbs serve` kill path
+    /// validates untrusted wire ids with this before touching the row.
+    #[inline]
+    pub fn is_active(&self, id: JobId) -> bool {
+        id >= self.base && id < self.next_id() && self.state[(id - self.base) as usize] == JobState::Active
+    }
+
     /// Reassemble the flat [`Job`] for one row (compatibility edges:
     /// sinks, tests).
     pub fn job(&self, id: JobId) -> Job {
@@ -358,6 +369,28 @@ mod tests {
         assert_eq!(st.est(3), 6.5, "re-dispatch overwrites the estimate");
         st.retire_completed();
         assert_eq!(st.rows(), 4, "gap rows pin the prefix");
+    }
+
+    /// `is_active` must stay total (no panic, no wrap) across the whole
+    /// id space — compacted, live, finished and never-seen ids alike.
+    #[test]
+    fn is_active_is_total_over_the_id_space() {
+        let mut st = JobStore::new();
+        for i in 0..200u32 {
+            st.push(&Job::exact(i, i as f64, 1.0));
+        }
+        for i in 0..150u32 {
+            st.mark_completed(i);
+        }
+        st.retire(); // compacts: base moves past the completed prefix
+        assert!(!st.is_active(0), "compacted id");
+        assert!(!st.is_active(149), "compacted id");
+        assert!(st.is_active(150), "live row");
+        assert!(st.is_active(199), "live row");
+        assert!(!st.is_active(200), "not yet pushed");
+        assert!(!st.is_active(u32::MAX), "way out of range");
+        st.mark_cancelled(150);
+        assert!(!st.is_active(150), "cancelled row");
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! that checksums but was written by a buggy tool still fails hard.
 
 use super::trace_file::{RowStream, TraceRow};
+use crate::error::Error;
 use crate::util::rng::splitmix64;
 use std::io::{Read, Seek, SeekFrom, Write};
 
@@ -71,16 +72,16 @@ pub struct CacheWriter {
 }
 
 impl CacheWriter {
-    pub fn create(path: &str) -> Result<CacheWriter, String> {
+    pub fn create(path: &str) -> Result<CacheWriter, Error> {
         let mut file = std::fs::File::create(path)
-            .map_err(|e| format!("writing trace cache {path}: {e}"))
+            .map_err(|e| Error::cache(format!("writing trace cache {path}: {e}")))
             .map(std::io::BufWriter::new)?;
         // Placeholder header; finish() rewrites count + checksum.
         file.write_all(&MAGIC)
             .and_then(|_| file.write_all(&VERSION.to_le_bytes()))
             .and_then(|_| file.write_all(&0u64.to_le_bytes()))
             .and_then(|_| file.write_all(&0u64.to_le_bytes()))
-            .map_err(|e| format!("writing trace cache {path}: {e}"))?;
+            .map_err(|e| Error::cache(format!("writing trace cache {path}: {e}")))?;
         Ok(CacheWriter {
             file,
             path: path.to_string(),
@@ -92,26 +93,37 @@ impl CacheWriter {
 
     /// Append one record; rejects rows the CSV parser would reject
     /// (record numbers are 1-based, mirroring its line numbers).
-    pub fn push(&mut self, r: &TraceRow) -> Result<(), String> {
+    pub fn push(&mut self, r: &TraceRow) -> Result<(), Error> {
         let n = self.count + 1;
         if !r.arrival.is_finite() || r.arrival < 0.0 {
-            return Err(format!("record {n}: arrival must be non-negative, got {}", r.arrival));
+            return Err(Error::cache(format!(
+                "record {n}: arrival must be non-negative, got {}",
+                r.arrival
+            )));
         }
         if r.arrival < self.prev_arrival {
-            return Err(format!(
+            return Err(Error::cache(format!(
                 "record {n}: arrivals must be non-decreasing ({} after {})",
                 r.arrival, self.prev_arrival
-            ));
+            )));
         }
         if !r.size.is_finite() || r.size <= 0.0 {
-            return Err(format!("record {n}: job size must be positive, got {}", r.size));
+            return Err(Error::cache(format!(
+                "record {n}: job size must be positive, got {}",
+                r.size
+            )));
         }
         if !r.weight.is_finite() || r.weight <= 0.0 {
-            return Err(format!("record {n}: weight must be positive, got {}", r.weight));
+            return Err(Error::cache(format!(
+                "record {n}: weight must be positive, got {}",
+                r.weight
+            )));
         }
         if let Some(e) = r.est {
             if !e.is_finite() || e <= 0.0 {
-                return Err(format!("record {n}: size estimate must be positive, got {e}"));
+                return Err(Error::cache(format!(
+                    "record {n}: size estimate must be positive, got {e}"
+                )));
             }
         }
         self.prev_arrival = r.arrival;
@@ -122,7 +134,7 @@ impl CacheWriter {
         buf[24..32].copy_from_slice(&r.est.unwrap_or(f64::NAN).to_le_bytes());
         self.file
             .write_all(&buf)
-            .map_err(|e| format!("writing trace cache {}: {e}", self.path))?;
+            .map_err(|e| Error::cache(format!("writing trace cache {}: {e}", self.path)))?;
         self.sum.fold_row(r);
         self.count += 1;
         Ok(())
@@ -131,14 +143,14 @@ impl CacheWriter {
     /// Patch the header (count + checksum) and flush.  Returns the
     /// record count.  An empty cache is an error — it could never be
     /// replayed.
-    pub fn finish(mut self) -> Result<u64, String> {
+    pub fn finish(mut self) -> Result<u64, Error> {
         if self.count == 0 {
-            return Err(format!("trace cache {}: no records written", self.path));
+            return Err(Error::cache(format!("trace cache {}: no records written", self.path)));
         }
-        let err = |e| format!("writing trace cache {}: {e}", self.path);
+        let err = |e| Error::cache(format!("writing trace cache {}: {e}", self.path));
         self.file.flush().map_err(err)?;
         let mut inner = self.file.into_inner().map_err(|e| {
-            format!("writing trace cache {}: {e}", self.path)
+            Error::cache(format!("writing trace cache {}: {e}", self.path))
         })?;
         inner.seek(SeekFrom::Start(8)).map_err(err)?;
         inner.write_all(&self.count.to_le_bytes()).map_err(err)?;
@@ -149,7 +161,7 @@ impl CacheWriter {
 }
 
 /// Write an entire row stream into a cache file; returns the count.
-pub fn write_cache<I>(path: &str, rows: I) -> Result<u64, String>
+pub fn write_cache<I>(path: &str, rows: I) -> Result<u64, Error>
 where
     I: IntoIterator<Item = TraceRow>,
 {
@@ -175,40 +187,49 @@ impl CacheReader {
     /// Open and fully verify a cache: magic, version, length and
     /// checksum are all checked *before* the first row is served, each
     /// with its own distinct hard error.
-    pub fn open(path: &str) -> Result<CacheReader, String> {
+    pub fn open(path: &str) -> Result<CacheReader, Error> {
         let file = std::fs::File::open(path)
-            .map_err(|e| format!("reading trace cache {path}: {e}"))?;
-        let actual_len =
-            file.metadata().map_err(|e| format!("reading trace cache {path}: {e}"))?.len();
+            .map_err(|e| Error::cache(format!("reading trace cache {path}: {e}")))?;
+        let actual_len = file
+            .metadata()
+            .map_err(|e| Error::cache(format!("reading trace cache {path}: {e}")))?
+            .len();
         let mut file = std::io::BufReader::with_capacity(64 * 1024, file);
-        let err = |e| format!("reading trace cache {path}: {e}");
+        let err = |e| Error::cache(format!("reading trace cache {path}: {e}"));
         let mut header = [0u8; HEADER_LEN as usize];
         if actual_len < HEADER_LEN {
-            return Err(format!(
-                "{path}: truncated trace cache: {actual_len} bytes is shorter than the \
-                 {HEADER_LEN}-byte header"
+            return Err(Error::cache_at(
+                path,
+                format!(
+                    "truncated trace cache: {actual_len} bytes is shorter than the \
+                     {HEADER_LEN}-byte header"
+                ),
             ));
         }
         file.read_exact(&mut header).map_err(err)?;
         if header[0..4] != MAGIC {
-            return Err(format!("{path}: not a PSBT trace cache (bad magic)"));
+            return Err(Error::cache_at(path, "not a PSBT trace cache (bad magic)"));
         }
         let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
         if version != VERSION {
-            return Err(format!(
-                "{path}: unsupported trace cache version {version} (expected {VERSION})"
+            return Err(Error::cache_at(
+                path,
+                format!("unsupported trace cache version {version} (expected {VERSION})"),
             ));
         }
         let count = u64::from_le_bytes(header[8..16].try_into().unwrap());
         if count == 0 {
-            return Err(format!("{path}: trace cache has no records"));
+            return Err(Error::cache_at(path, "trace cache has no records"));
         }
         let want_sum = u64::from_le_bytes(header[16..24].try_into().unwrap());
         let expect_len = HEADER_LEN + count * RECORD_LEN;
         if actual_len != expect_len {
-            return Err(format!(
-                "{path}: truncated trace cache: header says {count} records \
-                 ({expect_len} bytes), file has {actual_len} bytes"
+            return Err(Error::cache_at(
+                path,
+                format!(
+                    "truncated trace cache: header says {count} records \
+                     ({expect_len} bytes), file has {actual_len} bytes"
+                ),
             ));
         }
         // Checksum pass over every record word, then rewind.
@@ -219,7 +240,7 @@ impl CacheReader {
             sum.fold(u64::from_le_bytes(word));
         }
         if sum.value() != want_sum {
-            return Err(format!("{path}: trace cache checksum mismatch (file corrupt)"));
+            return Err(Error::cache_at(path, "trace cache checksum mismatch (file corrupt)"));
         }
         file.seek(SeekFrom::Start(HEADER_LEN)).map_err(err)?;
         Ok(CacheReader {
@@ -242,43 +263,52 @@ impl CacheReader {
 }
 
 impl RowStream for CacheReader {
-    fn next_row(&mut self) -> Result<Option<TraceRow>, String> {
+    fn next_row(&mut self) -> Result<Option<TraceRow>, Error> {
         if self.read >= self.count {
             return Ok(None);
         }
         let mut buf = [0u8; RECORD_LEN as usize];
         self.file
             .read_exact(&mut buf)
-            .map_err(|e| format!("reading trace cache {}: {e}", self.path))?;
+            .map_err(|e| Error::cache(format!("reading trace cache {}: {e}", self.path)))?;
         let n = self.read + 1;
         let f = |i: usize| f64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap());
         let (arrival, size, weight, est_raw) = (f(0), f(1), f(2), f(3));
         // The writer refuses these, so a record failing here was
         // produced by something else — fail as hard as the CSV path.
         if !arrival.is_finite() || arrival < 0.0 {
-            return Err(format!(
-                "{}: record {n}: arrival must be non-negative, got {arrival}",
-                self.path
+            return Err(Error::cache_at(
+                &self.path,
+                format!("record {n}: arrival must be non-negative, got {arrival}"),
             ));
         }
         if arrival < self.prev_arrival {
-            return Err(format!(
-                "{}: record {n}: arrivals must be non-decreasing ({arrival} after {})",
-                self.path, self.prev_arrival
+            return Err(Error::cache_at(
+                &self.path,
+                format!(
+                    "record {n}: arrivals must be non-decreasing ({arrival} after {})",
+                    self.prev_arrival
+                ),
             ));
         }
         if !size.is_finite() || size <= 0.0 {
-            return Err(format!("{}: record {n}: job size must be positive, got {size}", self.path));
+            return Err(Error::cache_at(
+                &self.path,
+                format!("record {n}: job size must be positive, got {size}"),
+            ));
         }
         if !weight.is_finite() || weight <= 0.0 {
-            return Err(format!("{}: record {n}: weight must be positive, got {weight}", self.path));
+            return Err(Error::cache_at(
+                &self.path,
+                format!("record {n}: weight must be positive, got {weight}"),
+            ));
         }
         let est = if est_raw.is_nan() { None } else { Some(est_raw) };
         if let Some(e) = est {
             if !e.is_finite() || e <= 0.0 {
-                return Err(format!(
-                    "{}: record {n}: size estimate must be positive, got {e}",
-                    self.path
+                return Err(Error::cache_at(
+                    &self.path,
+                    format!("record {n}: size estimate must be positive, got {e}"),
                 ));
             }
         }
@@ -287,10 +317,10 @@ impl RowStream for CacheReader {
         Ok(Some(TraceRow { arrival, size, weight, est }))
     }
 
-    fn rewind(&mut self) -> Result<(), String> {
+    fn rewind(&mut self) -> Result<(), Error> {
         self.file
             .seek(SeekFrom::Start(HEADER_LEN))
-            .map_err(|e| format!("reading trace cache {}: {e}", self.path))?;
+            .map_err(|e| Error::cache(format!("reading trace cache {}: {e}", self.path)))?;
         self.read = 0;
         self.prev_arrival = f64::NEG_INFINITY;
         Ok(())
@@ -358,32 +388,36 @@ mod tests {
         let mut bytes = good.clone();
         bytes[0] = b'X';
         std::fs::write(&path, &bytes).unwrap();
-        assert!(CacheReader::open(p).unwrap_err().contains("bad magic"));
+        assert!(CacheReader::open(p).unwrap_err().to_string().contains("bad magic"));
 
         // Unsupported version.
         let mut bytes = good.clone();
         bytes[4] = 9;
         std::fs::write(&path, &bytes).unwrap();
-        assert!(CacheReader::open(p).unwrap_err().contains("unsupported trace cache version"));
+        assert!(CacheReader::open(p)
+            .unwrap_err()
+            .to_string()
+            .contains("unsupported trace cache version"));
 
         // Truncated mid-record.
         std::fs::write(&path, &good[..good.len() - 7]).unwrap();
-        assert!(CacheReader::open(p).unwrap_err().contains("truncated trace cache"));
+        assert!(CacheReader::open(p).unwrap_err().to_string().contains("truncated trace cache"));
 
         // Shorter than the header.
         std::fs::write(&path, &good[..10]).unwrap();
-        assert!(CacheReader::open(p).unwrap_err().contains("shorter than the"));
+        assert!(CacheReader::open(p).unwrap_err().to_string().contains("shorter than the"));
 
         // A flipped payload byte fails the checksum.
         let mut bytes = good.clone();
         let last = bytes.len() - 1;
         bytes[last] ^= 0x40;
         std::fs::write(&path, &bytes).unwrap();
-        assert!(CacheReader::open(p).unwrap_err().contains("checksum mismatch"));
+        assert!(CacheReader::open(p).unwrap_err().to_string().contains("checksum mismatch"));
 
         // Missing file.
         assert!(CacheReader::open("/nonexistent/x.psbt")
             .unwrap_err()
+            .to_string()
             .contains("reading trace cache"));
     }
 
@@ -393,14 +427,14 @@ mod tests {
         let p = path.to_str().unwrap();
         let mut w = CacheWriter::create(p).unwrap();
         let bad = TraceRow { arrival: 1.0, size: -2.0, weight: 1.0, est: None };
-        assert!(w.push(&bad).unwrap_err().contains("job size must be positive"));
+        assert!(w.push(&bad).unwrap_err().to_string().contains("job size must be positive"));
         let ok = TraceRow { arrival: 1.0, size: 2.0, weight: 1.0, est: None };
         w.push(&ok).unwrap();
         let regress = TraceRow { arrival: 0.5, size: 2.0, weight: 1.0, est: None };
-        assert!(w.push(&regress).unwrap_err().contains("non-decreasing"));
+        assert!(w.push(&regress).unwrap_err().to_string().contains("non-decreasing"));
         assert_eq!(w.finish().unwrap(), 1);
 
         let empty = CacheWriter::create(p).unwrap();
-        assert!(empty.finish().unwrap_err().contains("no records written"));
+        assert!(empty.finish().unwrap_err().to_string().contains("no records written"));
     }
 }

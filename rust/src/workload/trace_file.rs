@@ -43,6 +43,7 @@
 
 use super::dists::{Dist, LogNormal};
 use super::synthetic::MIN_SIZE;
+use crate::error::Error;
 use crate::sim::{job, Job, JobSource};
 use crate::util::rng::Rng;
 use std::io::BufRead;
@@ -106,9 +107,11 @@ impl RowParser {
 
     /// Parse one raw line (`ln` is 1-based).  `Ok(None)` for blanks,
     /// comments and the header; `Ok(Some(row))` for a data row; errors
-    /// carry the offending line number and are distinct per failure
-    /// mode (the CLI and the scenario loader surface them verbatim).
-    pub fn line(&mut self, ln: usize, raw: &str) -> Result<Option<TraceRow>, String> {
+    /// are [`Error::Trace`] carrying the offending line number and are
+    /// distinct per failure mode (the CLI and the scenario loader
+    /// surface them verbatim).
+    pub fn line(&mut self, ln: usize, raw: &str) -> Result<Option<TraceRow>, Error> {
+        let at = ln as u64;
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
             return Ok(None);
@@ -121,9 +124,12 @@ impl RowParser {
             let is_header = (2..=COLUMNS.len()).contains(&fields.len())
                 && fields.iter().zip(COLUMNS).all(|(f, c)| *f == c);
             if !is_header {
-                return Err(format!(
-                    "line {ln}: malformed row `{line}`: expected \
-                     `arrival,size[,weight][,estimate]` (numbers) or a matching header"
+                return Err(Error::trace_line(
+                    at,
+                    format!(
+                        "malformed row `{line}`: expected \
+                         `arrival,size[,weight][,estimate]` (numbers) or a matching header"
+                    ),
                 ));
             }
             self.ncols = Some(fields.len());
@@ -131,48 +137,54 @@ impl RowParser {
         }
         let expect = *self.ncols.get_or_insert(fields.len().clamp(2, 4));
         if fields.len() != expect {
-            return Err(format!(
-                "line {ln}: malformed row `{line}`: expected {expect} comma-separated \
-                 fields ({}), got {}",
-                COLUMNS[..expect].join(","),
-                fields.len()
+            return Err(Error::trace_line(
+                at,
+                format!(
+                    "malformed row `{line}`: expected {expect} comma-separated \
+                     fields ({}), got {}",
+                    COLUMNS[..expect].join(","),
+                    fields.len()
+                ),
             ));
         }
         let mut nums = [0.0f64; 4];
         for (i, f) in fields.iter().enumerate() {
             nums[i] = f.parse::<f64>().map_err(|_| {
-                format!("line {ln}: malformed row: `{f}` is not a number (column `{}`)", COLUMNS[i])
+                Error::trace_line(
+                    at,
+                    format!("malformed row: `{f}` is not a number (column `{}`)", COLUMNS[i]),
+                )
             })?;
             if !nums[i].is_finite() {
-                return Err(format!(
-                    "line {ln}: malformed row: `{f}` is not finite (column `{}`)",
-                    COLUMNS[i]
+                return Err(Error::trace_line(
+                    at,
+                    format!("malformed row: `{f}` is not finite (column `{}`)", COLUMNS[i]),
                 ));
             }
         }
         let arrival = nums[0];
         if arrival < 0.0 {
-            return Err(format!("line {ln}: arrival must be non-negative, got {arrival}"));
+            return Err(Error::trace_line(at, format!("arrival must be non-negative, got {arrival}")));
         }
         if arrival < self.prev_arrival {
-            return Err(format!(
-                "line {ln}: arrivals must be non-decreasing ({arrival} after {})",
-                self.prev_arrival
+            return Err(Error::trace_line(
+                at,
+                format!("arrivals must be non-decreasing ({arrival} after {})", self.prev_arrival),
             ));
         }
         self.prev_arrival = arrival;
         let size = nums[1];
         if size <= 0.0 {
-            return Err(format!("line {ln}: job size must be positive, got {size}"));
+            return Err(Error::trace_line(at, format!("job size must be positive, got {size}")));
         }
         let weight = if expect >= 3 { nums[2] } else { 1.0 };
         if weight <= 0.0 {
-            return Err(format!("line {ln}: weight must be positive, got {weight}"));
+            return Err(Error::trace_line(at, format!("weight must be positive, got {weight}")));
         }
         let est = (expect >= 4).then_some(nums[3]);
         if let Some(e) = est {
             if e <= 0.0 {
-                return Err(format!("line {ln}: size estimate must be positive, got {e}"));
+                return Err(Error::trace_line(at, format!("size estimate must be positive, got {e}")));
             }
         }
         self.rows += 1;
@@ -180,9 +192,9 @@ impl RowParser {
     }
 
     /// End-of-input check: a trace with no data rows is an error.
-    pub fn finish(&self) -> Result<(), String> {
+    pub fn finish(&self) -> Result<(), Error> {
         if self.rows == 0 {
-            return Err("trace has no data rows".to_string());
+            return Err(Error::trace("trace has no data rows"));
         }
         Ok(())
     }
@@ -190,7 +202,7 @@ impl RowParser {
 
 /// Parse trace text (fully materialized).  Errors carry the offending
 /// 1-based line number — see [`RowParser::line`].
-pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
+pub fn parse(text: &str) -> Result<Vec<TraceRow>, Error> {
     let mut rows: Vec<TraceRow> = Vec::new();
     let mut p = RowParser::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -209,9 +221,9 @@ pub fn parse(text: &str) -> Result<Vec<TraceRow>, String> {
 /// ([`SliceRows`]).
 pub trait RowStream {
     /// Next validated row, or `Ok(None)` at end of stream.
-    fn next_row(&mut self) -> Result<Option<TraceRow>, String>;
+    fn next_row(&mut self) -> Result<Option<TraceRow>, Error>;
     /// Reset to the first row (the normalization pre-pass rewinds once).
-    fn rewind(&mut self) -> Result<(), String>;
+    fn rewind(&mut self) -> Result<(), Error>;
 }
 
 /// Chunked CSV trace reader: a fixed-size read buffer over the file,
@@ -234,9 +246,9 @@ const CSV_CHUNK: usize = 64 * 1024;
 impl ChunkedCsvReader {
     /// Open a trace file for streaming.  A missing or unreadable file
     /// is the same distinct error [`TraceFile::load`] produces.
-    pub fn open(path: &str) -> Result<Self, String> {
+    pub fn open(path: &str) -> Result<Self, Error> {
         let file = std::fs::File::open(path)
-            .map_err(|e| format!("reading trace file {path}: {e}"))?;
+            .map_err(|e| Error::trace(format!("reading trace file {path}: {e}")))?;
         Ok(ChunkedCsvReader {
             reader: std::io::BufReader::with_capacity(CSV_CHUNK, file),
             parser: RowParser::new(),
@@ -249,7 +261,7 @@ impl ChunkedCsvReader {
 }
 
 impl RowStream for ChunkedCsvReader {
-    fn next_row(&mut self) -> Result<Option<TraceRow>, String> {
+    fn next_row(&mut self) -> Result<Option<TraceRow>, Error> {
         loop {
             if self.eof {
                 return Ok(None);
@@ -258,26 +270,26 @@ impl RowStream for ChunkedCsvReader {
             let n = self
                 .reader
                 .read_line(&mut self.line)
-                .map_err(|e| format!("reading trace file {}: {e}", self.path))?;
+                .map_err(|e| Error::trace(format!("reading trace file {}: {e}", self.path)))?;
             if n == 0 {
                 self.eof = true;
-                self.parser.finish().map_err(|e| format!("{}: {e}", self.path))?;
+                self.parser.finish().map_err(|e| e.with_path(&self.path))?;
                 return Ok(None);
             }
             self.ln += 1;
             match self.parser.line(self.ln, &self.line) {
                 Ok(Some(row)) => return Ok(Some(row)),
                 Ok(None) => continue,
-                Err(e) => return Err(format!("{}: {e}", self.path)),
+                Err(e) => return Err(e.with_path(&self.path)),
             }
         }
     }
 
-    fn rewind(&mut self) -> Result<(), String> {
+    fn rewind(&mut self) -> Result<(), Error> {
         use std::io::Seek;
         self.reader
             .seek(std::io::SeekFrom::Start(0))
-            .map_err(|e| format!("reading trace file {}: {e}", self.path))?;
+            .map_err(|e| Error::trace(format!("reading trace file {}: {e}", self.path)))?;
         self.parser = RowParser::new();
         self.ln = 0;
         self.eof = false;
@@ -298,14 +310,14 @@ impl SliceRows {
 }
 
 impl RowStream for SliceRows {
-    fn next_row(&mut self) -> Result<Option<TraceRow>, String> {
+    fn next_row(&mut self) -> Result<Option<TraceRow>, Error> {
         let r = self.rows.get(self.next).copied();
         if r.is_some() {
             self.next += 1;
         }
         Ok(r)
     }
-    fn rewind(&mut self) -> Result<(), String> {
+    fn rewind(&mut self) -> Result<(), Error> {
         self.next = 0;
         Ok(())
     }
@@ -337,7 +349,7 @@ impl<R: RowStream> TraceJobSource<R> {
         load: f64,
         sigma: f64,
         seed: u64,
-    ) -> Result<Self, String> {
+    ) -> Result<Self, Error> {
         assert!(load > 0.0, "trace load normalization requires load > 0, got {load}");
         // Aggregation pre-pass, in row order (f64 summation order is
         // part of the bit-identity contract with `to_jobs`).
@@ -359,7 +371,7 @@ impl<R: RowStream> TraceJobSource<R> {
             }
         }
         if rows == 0 {
-            return Err("trace replays zero rows".to_string());
+            return Err(Error::trace("trace replays zero rows"));
         }
         let span = (last - t0).max(1e-9);
         // load = total_work / (speed * span)  =>  speed = total / (span*load)
@@ -433,7 +445,7 @@ impl<R: RowStream> JobSource for TraceJobSource<R> {
 impl TraceFile {
     /// Load and parse a trace file.  A missing or unreadable file is
     /// its own error (distinct from every parse error).
-    pub fn load(path: &str) -> Result<TraceFile, String> {
+    pub fn load(path: &str) -> Result<TraceFile, Error> {
         TraceFile::load_relative(path, None)
     }
 
@@ -442,14 +454,14 @@ impl TraceFile {
     /// committed scenario works from any working directory).  `path`
     /// is stored as written — rendering a scenario back to TOML must
     /// not bake the load-time working directory into the file.
-    pub fn load_relative(path: &str, base: Option<&Path>) -> Result<TraceFile, String> {
+    pub fn load_relative(path: &str, base: Option<&Path>) -> Result<TraceFile, Error> {
         let resolved = match base {
             Some(dir) if !Path::new(path).is_absolute() => dir.join(path),
             _ => PathBuf::from(path),
         };
         let text = std::fs::read_to_string(&resolved)
-            .map_err(|e| format!("reading trace file {}: {e}", resolved.display()))?;
-        let rows = parse(&text).map_err(|e| format!("{}: {e}", resolved.display()))?;
+            .map_err(|e| Error::trace(format!("reading trace file {}: {e}", resolved.display())))?;
+        let rows = parse(&text).map_err(|e| e.with_path(&resolved.display().to_string()))?;
         Ok(TraceFile { path: path.to_string(), rows: Arc::new(rows) })
     }
 
@@ -505,9 +517,9 @@ impl TraceFile {
         load: f64,
         sigma: f64,
         seed: u64,
-    ) -> Result<TraceJobSource<SliceRows>, String> {
+    ) -> Result<TraceJobSource<SliceRows>, Error> {
         TraceJobSource::new(SliceRows::new(self.rows.clone()), njobs, load, sigma, seed)
-            .map_err(|e| format!("{}: {e}", self.path))
+            .map_err(|e| e.with_path(&self.path))
     }
 }
 
@@ -574,20 +586,20 @@ arrival,size,weight\n\
             ("", "no data rows"),
             ("# only comments\n\n", "no data rows"),
         ] {
-            let err = parse(text).unwrap_err();
+            let err = parse(text).unwrap_err().to_string();
             assert!(err.contains(needle), "for {text:?}: got `{err}`, wanted `{needle}`");
         }
     }
 
     #[test]
     fn error_lines_are_one_based_and_skip_decorations() {
-        let err = parse("# c\narrival,size\n0,10\n0,-1\n").unwrap_err();
+        let err = parse("# c\narrival,size\n0,10\n0,-1\n").unwrap_err().to_string();
         assert!(err.starts_with("line 4:"), "{err}");
     }
 
     #[test]
     fn missing_file_is_a_distinct_error() {
-        let err = TraceFile::load("/nonexistent/psbs_no_such_trace.csv").unwrap_err();
+        let err = TraceFile::load("/nonexistent/psbs_no_such_trace.csv").unwrap_err().to_string();
         assert!(err.contains("reading trace file"), "{err}");
     }
 
@@ -688,9 +700,9 @@ arrival,size,weight\n\
                     Err(e) => break e,
                 }
             };
-            assert_eq!(got, format!("{}: {want}", path.display()));
+            assert_eq!(got.to_string(), format!("{}: {want}", path.display()));
         }
-        let err = ChunkedCsvReader::open("/nonexistent/psbs_no_such.csv").unwrap_err();
+        let err = ChunkedCsvReader::open("/nonexistent/psbs_no_such.csv").unwrap_err().to_string();
         assert!(err.contains("reading trace file"), "{err}");
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -1,0 +1,253 @@
+//! `psbs serve` round-trip tests — the PR 9 headline invariant: a live
+//! session at `--speedup inf` is *bit-identical* to an offline replay
+//! of the same rows (completion times, sojourns, and the final metrics
+//! snapshot), across policies and ingress-queue capacities (so
+//! backpressure provably never changes results, only timing).  Plus
+//! the protocol edges: kill acks and distinct nacks, the `stats` verb
+//! and cadence, malformed lines that do not kill the session,
+//! `shutdown` aborts, and a paced (finite-speedup) smoke run.
+
+use psbs::metrics::OnlineMetrics;
+use psbs::sched;
+use psbs::serve::{job_from_row, serve_session, ServeConfig, SessionSummary};
+use psbs::sim::{self, Completion, CompletionSink, Job, SliceSource};
+use psbs::workload::trace_file::parse;
+use std::io::Cursor;
+
+/// Offline baseline sink: dense completion times + the same
+/// [`OnlineMetrics`] accumulation a served session performs.
+struct Baseline {
+    completion: Vec<f64>,
+    metrics: OnlineMetrics,
+}
+
+impl CompletionSink for Baseline {
+    fn on_arrival(&mut self, now: f64, job: &Job) {
+        self.metrics.on_arrival(now, job);
+    }
+    fn on_completion(&mut self, time: f64, c: &Completion) {
+        self.completion[c.id as usize] = c.time;
+        self.metrics.on_completion(time, c);
+    }
+}
+
+/// Deterministic protocol trace: all four columns, arrival ties every
+/// third row (exercising burst coalescing), varied weights and
+/// deliberately wrong estimates.
+fn sample_csv() -> String {
+    let mut text = String::from("arrival,size,weight,estimate\n");
+    let mut t = 0.0f64;
+    for i in 0..300u32 {
+        if i % 3 != 0 {
+            t += 0.37 + (i % 7) as f64 * 0.11;
+        }
+        let size = 1.0 + ((i as u64 * 7919) % 97) as f64;
+        let w = 1 + i % 3;
+        let est = size * (0.5 + (i % 11) as f64 * 0.1);
+        text.push_str(&format!("{t},{size},{w},{est}\n"));
+    }
+    text
+}
+
+/// Run one in-process session over `Cursor`/`Vec<u8>` transports.
+fn serve_lines(input: &str, cfg: &ServeConfig) -> (SessionSummary, Vec<String>) {
+    let mut out: Vec<u8> = Vec::new();
+    let summary = serve_session(Cursor::new(input.to_string()), &mut out, cfg).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    (summary, text.lines().map(str::to_string).collect())
+}
+
+fn free_run(policy: &str) -> ServeConfig {
+    ServeConfig { policy: policy.to_string(), speedup: f64::INFINITY, ..ServeConfig::default() }
+}
+
+/// `key=value` field of a protocol line, parsed as f64.
+fn field(line: &str, key: &str) -> f64 {
+    let pat = format!("{key}=");
+    line.split_whitespace()
+        .find_map(|w| w.strip_prefix(pat.as_str()))
+        .unwrap_or_else(|| panic!("no `{pat}` in `{line}`"))
+        .parse()
+        .unwrap_or_else(|_| panic!("unparseable `{pat}` in `{line}`"))
+}
+
+/// The headline: serve the sample rows at `--speedup inf` and compare
+/// every completion (bitwise) and the final stats line (byte for
+/// byte) against the offline streaming replay of the same rows —
+/// across policies, and across queue capacities down to 1, where the
+/// reader parks on every single row.
+#[test]
+fn free_run_session_is_bit_identical_to_offline_replay() {
+    let csv = sample_csv();
+    let rows = parse(&csv).unwrap();
+    let jobs: Vec<Job> =
+        rows.iter().enumerate().map(|(i, r)| job_from_row(i as u32, r)).collect();
+    let input = format!("{csv}drain\n");
+
+    for policy in ["psbs", "srpte", "las", "fifo", "ps"] {
+        let mut s = sched::by_name(policy).unwrap();
+        let mut src = SliceSource::new(&jobs);
+        let mut base =
+            Baseline { completion: vec![f64::NAN; jobs.len()], metrics: OnlineMetrics::new() };
+        sim::run_streaming(s.as_mut(), &mut src, &mut base);
+
+        for queue in [1usize, 7, 1024] {
+            let cfg = ServeConfig { queue, ..free_run(policy) };
+            let (summary, lines) = serve_lines(&input, &cfg);
+            assert_eq!(summary.delivered, jobs.len() as u64, "{policy} q={queue}");
+            assert_eq!(summary.completed, jobs.len() as u64, "{policy} q={queue}");
+            assert_eq!(summary.killed, 0);
+            assert!(!summary.aborted);
+            assert!(
+                !lines.iter().any(|l| l.starts_with("err")),
+                "{policy} q={queue}: unexpected err lines"
+            );
+
+            let done: Vec<&String> = lines.iter().filter(|l| l.starts_with("done ")).collect();
+            assert_eq!(done.len(), jobs.len(), "{policy} q={queue}");
+            for l in &done {
+                let id = field(l, "id") as usize;
+                let t = field(l, "t");
+                assert_eq!(
+                    t.to_bits(),
+                    base.completion[id].to_bits(),
+                    "{policy} q={queue}: job {id} completion drifted: {l}"
+                );
+                let sojourn = field(l, "sojourn");
+                assert_eq!(
+                    sojourn.to_bits(),
+                    (base.completion[id] - jobs[id].arrival).to_bits(),
+                    "{policy} q={queue}: job {id} sojourn drifted: {l}"
+                );
+            }
+
+            // Final stats line == the offline accumulator's snapshot,
+            // byte for byte (same completions folded in the same
+            // order → bitwise-equal compensated sums).
+            assert_eq!(
+                lines[lines.len() - 2],
+                format!("stats {}", base.metrics.snapshot()),
+                "{policy} q={queue}"
+            );
+            assert_eq!(
+                lines[lines.len() - 1],
+                format!("bye delivered={n} completed={n} killed=0 aborted=false", n = jobs.len()),
+                "{policy} q={queue}"
+            );
+        }
+    }
+}
+
+/// Kill path, live: a pending job is cancelled and acked (`killed 1`),
+/// an id never submitted is nacked distinctly, and the freed processor
+/// serves the survivor to its exact completion.
+#[test]
+fn kill_acks_and_unknown_id_nacks() {
+    let input = "0,100\n0,50\nkill 1\nkill 7\ndrain\n";
+    let (summary, lines) = serve_lines(input, &free_run("psbs"));
+    assert_eq!(
+        lines,
+        vec![
+            "ok psbs serve policy=psbs speedup=inf queue=1024",
+            "killed 1",
+            "err kill 7: unknown id",
+            "done id=0 t=100 sojourn=100 slowdown=1",
+            "stats completed=1 active=0 mst=100 mean_slowdown=1",
+            "bye delivered=2 completed=1 killed=1 aborted=false",
+        ]
+    );
+    assert_eq!((summary.delivered, summary.completed, summary.killed), (2, 1, 1));
+}
+
+/// Killing a job that already completed nacks `not pending` — and the
+/// protocol-order barrier means the kill is applied only after every
+/// earlier row has been admitted.
+#[test]
+fn kill_after_completion_nacks_not_pending() {
+    let input = "0,1\n10,1\nkill 0\ndrain\n";
+    let (summary, lines) = serve_lines(input, &free_run("psbs"));
+    assert_eq!(
+        lines,
+        vec![
+            "ok psbs serve policy=psbs speedup=inf queue=1024",
+            "done id=0 t=1 sojourn=1 slowdown=1",
+            "err kill 0: not pending",
+            "done id=1 t=11 sojourn=1 slowdown=1",
+            "stats completed=2 active=0 mst=1 mean_slowdown=1",
+            "bye delivered=2 completed=2 killed=0 aborted=false",
+        ]
+    );
+    assert_eq!(summary.killed, 0);
+}
+
+/// The `stats` verb answers on demand (here: one job in flight,
+/// nothing completed — NaN means, exactly as the snapshot renders
+/// them), and `stats_every` adds a cadence line every N completions.
+#[test]
+fn stats_on_demand_and_on_cadence() {
+    let input = "0,1\nstats\ndrain\n";
+    let (_, lines) = serve_lines(input, &free_run("psbs"));
+    assert_eq!(
+        lines,
+        vec![
+            "ok psbs serve policy=psbs speedup=inf queue=1024",
+            "stats completed=0 active=1 mst=NaN mean_slowdown=NaN",
+            "done id=0 t=1 sojourn=1 slowdown=1",
+            "stats completed=1 active=0 mst=1 mean_slowdown=1",
+            "bye delivered=1 completed=1 killed=0 aborted=false",
+        ]
+    );
+
+    let cfg = ServeConfig { stats_every: 2, ..free_run("fifo") };
+    let input = "0,1\n2,1\n4,1\n6,1\ndrain\n";
+    let (_, lines) = serve_lines(input, &cfg);
+    let stats: Vec<&String> = lines.iter().filter(|l| l.starts_with("stats ")).collect();
+    // Cadence lines after completions 2 and 4, plus the final one.
+    assert_eq!(stats.len(), 3, "{lines:?}");
+    assert_eq!(stats[0], "stats completed=2 active=0 mst=1 mean_slowdown=1");
+    assert_eq!(stats[1], "stats completed=4 active=0 mst=1 mean_slowdown=1");
+    assert_eq!(stats[2], stats[1]);
+}
+
+/// A malformed row is answered with an `err line N: ...` and the
+/// session keeps going — later rows still run.
+#[test]
+fn malformed_rows_do_not_kill_the_session() {
+    let input = "0,1\nbogus,row\n2,1\ndrain\n";
+    let (summary, lines) = serve_lines(input, &free_run("fifo"));
+    assert_eq!(summary.delivered, 2);
+    assert_eq!(summary.completed, 2);
+    let errs: Vec<&String> = lines.iter().filter(|l| l.starts_with("err ")).collect();
+    assert_eq!(errs.len(), 1);
+    assert_eq!(errs[0], "err line 2: malformed row: `bogus` is not a number (column `arrival`)");
+    assert_eq!(lines.iter().filter(|l| l.starts_with("done ")).count(), 2);
+}
+
+/// `shutdown` ends the session immediately: admitted work is
+/// abandoned, and the summary says so.
+#[test]
+fn shutdown_aborts_in_flight_work() {
+    let input = "0,1000\nshutdown\n";
+    let (summary, lines) = serve_lines(input, &free_run("psbs"));
+    assert!(summary.aborted);
+    assert_eq!((summary.delivered, summary.completed), (1, 0));
+    assert_eq!(lines.last().unwrap(), "bye delivered=1 completed=0 killed=0 aborted=true");
+    assert_eq!(lines[lines.len() - 2], "stats completed=0 active=1 mst=NaN mean_slowdown=NaN");
+}
+
+/// Finite-speedup smoke: the paced clock (timed condvar waits, lazy
+/// wall origin) drives the same session to the same completions —
+/// 20 simulated seconds compressed to ~20 µs of wall pacing.
+#[test]
+fn paced_session_completes_everything() {
+    let mut input = String::from("arrival,size\n");
+    for i in 0..20 {
+        input.push_str(&format!("{i},0.5\n"));
+    }
+    input.push_str("drain\n");
+    let cfg = ServeConfig { speedup: 1.0e6, ..free_run("fifo") };
+    let (summary, lines) = serve_lines(&input, &cfg);
+    assert_eq!((summary.delivered, summary.completed), (20, 20));
+    assert_eq!(lines.iter().filter(|l| l.starts_with("done ")).count(), 20);
+    assert!(!lines.iter().any(|l| l.starts_with("err")));
+}

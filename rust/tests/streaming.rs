@@ -11,7 +11,7 @@
 use psbs::coordinator::{FaultConfig, FaultSpec, RetryPolicy};
 use psbs::scenario::PolicySpec;
 use psbs::sched;
-use psbs::sim::{self, Completion, CompletionSink, Job, SliceSource};
+use psbs::sim::{self, Completion, CompletionSink, Job, SliceSource, VirtualClock};
 use psbs::util::check::{property, Config};
 use psbs::util::rng::Rng;
 use psbs::workload::cache::{write_cache, CacheReader};
@@ -106,6 +106,29 @@ fn run_streaming_is_bit_identical_to_run_all_policies() {
                 {
                     return Err(format!("{policy}: delivery accounting drifted: {stats:?}"));
                 }
+
+                // The PR 9 clock abstraction: the clock-generic entry
+                // point driven by a VirtualClock must be the same loop
+                // — completion bits and event counts included.
+                let mut c = sched::by_name(policy).unwrap();
+                let mut src = SliceSource::new(jobs);
+                let mut sink = CollectSink::new(jobs.len());
+                let stats = sim::run_streaming_clocked(
+                    c.as_mut(),
+                    &mut src,
+                    &mut sink,
+                    &mut VirtualClock,
+                    true,
+                );
+                if bits(&sink.completion) != bits(&want.completion) {
+                    return Err(format!("{policy}: clocked completion times drifted"));
+                }
+                if stats.events != want.events {
+                    return Err(format!(
+                        "{policy}: clocked events {} != {}",
+                        stats.events, want.events
+                    ));
+                }
             }
             Ok(())
         },
@@ -171,6 +194,32 @@ fn streaming_drain_matches_run_to_drain_under_fault_churn() {
                     return Err(format!(
                         "{spec_str}: fault stats drifted: {want_stats:?} vs {got_stats:?}"
                     ));
+                }
+
+                // Clock-generic drain path under the same fault/kill
+                // churn: VirtualClock must reproduce the pre-clock
+                // drain engine bitwise, fault counters included.
+                let mut c = spec.build_faulty(*seed, cfg);
+                let mut src = SliceSource::new(jobs);
+                let mut sink = CollectSink::new(jobs.len());
+                let stats = sim::run_streaming_clocked(
+                    c.as_mut(),
+                    &mut src,
+                    &mut sink,
+                    &mut VirtualClock,
+                    false,
+                );
+                if bits(&sink.completion) != bits(&want.completion) {
+                    return Err(format!("{spec_str}: clocked drain completions drifted"));
+                }
+                if stats.events != want.events {
+                    return Err(format!(
+                        "{spec_str}: clocked drain events {} != {}",
+                        stats.events, want.events
+                    ));
+                }
+                if c.fault_stats().unwrap_or_default() != want_stats {
+                    return Err(format!("{spec_str}: clocked drain fault stats drifted"));
                 }
             }
             Ok(())
@@ -256,7 +305,7 @@ fn corrupted_caches_fail_hard_and_distinctly() {
 
     let open_err = |bytes: &[u8]| -> String {
         std::fs::write(&path, bytes).unwrap();
-        CacheReader::open(path_str).expect_err("corrupt cache must not open")
+        CacheReader::open(path_str).expect_err("corrupt cache must not open").to_string()
     };
 
     let mut bad_magic = good.clone();
@@ -279,7 +328,8 @@ fn corrupted_caches_fail_hard_and_distinctly() {
     assert!(open_err(&flipped).contains("checksum mismatch"));
 
     std::fs::remove_file(&path).ok();
-    assert!(
-        CacheReader::open(path_str).expect_err("missing file").contains("reading trace cache")
-    );
+    assert!(CacheReader::open(path_str)
+        .expect_err("missing file")
+        .to_string()
+        .contains("reading trace cache"));
 }

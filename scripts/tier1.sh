@@ -29,11 +29,11 @@ cd "$(dirname "$0")/.."
 # output.  The JSON summary still prints so machines see WHY.
 if ! command -v cargo >/dev/null 2>&1; then
   echo "tier1: cargo not found — cannot build, test or bench" >&2
-  echo '{"tier1": "fail", "toolchain": "absent", "build": "skipped", "test": "skipped", "fmt": "skipped", "clippy": "skipped", "bench": "skipped", "streaming_smoke": "skipped"}'
+  echo '{"tier1": "fail", "toolchain": "absent", "build": "skipped", "test": "skipped", "fmt": "skipped", "clippy": "skipped", "bench": "skipped", "streaming_smoke": "skipped", "serve_smoke": "skipped"}'
   exit 1
 fi
 
-BUILD=fail TEST=skipped FMT=skipped CLIPPY=skipped BENCH=skipped STREAM=skipped
+BUILD=fail TEST=skipped FMT=skipped CLIPPY=skipped BENCH=skipped STREAM=skipped SERVE=skipped
 
 if cargo build --release; then BUILD=ok; fi
 
@@ -98,6 +98,33 @@ if [[ "$BUILD" == ok ]]; then
   rm -rf "$STREAM_DIR"
 fi
 
+# Serve smoke (BLOCKING, runs even with --no-bench): pipe a 10k-row
+# CSV trace plus a final `drain` verb through one live
+# `psbs serve --stdin` session in free-run mode and require every row
+# to come back as a `done` line with a clean `bye` summary — the serve
+# frontend (reader thread, bounded ingress queue, live clock) is
+# exercised end-to-end on every verify, not just in-process tests.
+if [[ "$BUILD" == ok ]]; then
+  SERVE=fail
+  SERVE_DIR=$(mktemp -d)
+  SERVE_TRACE="$SERVE_DIR/trace.csv"
+  SERVE_OUT="$SERVE_DIR/serve.out"
+  if ./target/release/psbs gen-trace --stats facebook --njobs 10000 \
+       --format csv --seed 11 --out "$SERVE_TRACE"; then
+    if { cat "$SERVE_TRACE"; echo drain; } | \
+         ./target/release/psbs serve --stdin --speedup inf > "$SERVE_OUT"; then
+      DONE_N=$(grep -c '^done ' "$SERVE_OUT")
+      ERR_N=$(grep -c '^err ' "$SERVE_OUT")
+      echo "tier1: serve-smoke $DONE_N done lines, $ERR_N err lines (want 10000, 0)"
+      if [[ "$DONE_N" -eq 10000 && "$ERR_N" -eq 0 ]] &&
+         grep -q '^bye delivered=10000 completed=10000 killed=0 aborted=false$' "$SERVE_OUT"; then
+        SERVE=ok
+      fi
+    fi
+  fi
+  rm -rf "$SERVE_DIR"
+fi
+
 if [[ "${1:-}" != "--no-bench" && "$BUILD" == ok ]]; then
   # BENCH_MS bounds each benchmark's measurement budget; the filters
   # restrict the run to the per-event scheduler numbers (psbs vs
@@ -133,9 +160,9 @@ if [[ "${1:-}" != "--no-bench" && "$BUILD" == ok ]]; then
 fi
 
 PASS=true
-for gate in "$BUILD" "$TEST" "$BENCH" "$STREAM"; do
+for gate in "$BUILD" "$TEST" "$BENCH" "$STREAM" "$SERVE"; do
   [[ "$gate" == fail ]] && PASS=false
 done
 
-echo "{\"tier1\": \"$([[ $PASS == true ]] && echo pass || echo fail)\", \"toolchain\": \"present\", \"build\": \"$BUILD\", \"test\": \"$TEST\", \"fmt\": \"$FMT\", \"clippy\": \"$CLIPPY\", \"bench\": \"$BENCH\", \"streaming_smoke\": \"$STREAM\"}"
+echo "{\"tier1\": \"$([[ $PASS == true ]] && echo pass || echo fail)\", \"toolchain\": \"present\", \"build\": \"$BUILD\", \"test\": \"$TEST\", \"fmt\": \"$FMT\", \"clippy\": \"$CLIPPY\", \"bench\": \"$BENCH\", \"streaming_smoke\": \"$STREAM\", \"serve_smoke\": \"$SERVE\"}"
 [[ "$PASS" == true ]]
