@@ -230,6 +230,68 @@ fn main() {
         });
     }
 
+    // Estimate-refinement costs (the `on_estimate_update` path): the
+    // native override vs the emulated trait default (cancel +
+    // re-admit) on the srpte hybrid.  Two shapes: `srpte` re-keys a
+    // standing waiter at varying heap depth — both paths pay the same
+    // two O(log n) sifts there, the override's value is semantics
+    // (attained-service reset, late-set boundary), not speed — and
+    // `srpte_slot` refreshes the *serving* job to an estimate that
+    // still beats every waiter, where the native fast path re-keys the
+    // slot in place (zero heap traffic) while the default pays a
+    // pop + push over the full waiting heap.  `derived` summarizes the
+    // slot-path win at n = 100k (`est_update_native_speedup`,
+    // informational in bench-compare, never gated).
+    for &n in &[1_000usize, 100_000] {
+        // Waiting-depth re-key through the native override.
+        {
+            let (mut s, mut store) = preload("srpte", n);
+            let mut seq = 0u64;
+            b.bench(&format!("est/update/native/srpte/n{n}"), move || {
+                seq += 1;
+                let id = (seq % n as u64) as u32;
+                store.update_est(id, 1e6 * (0.5 + (seq % 997) as f64 * 1e-3));
+                assert!(s.on_estimate_update(1.0, id, &store));
+            });
+        }
+        // The same churn through the trait default's body.
+        {
+            let (mut s, mut store) = preload("srpte", n);
+            let mut seq = 0u64;
+            b.bench(&format!("est/update/readmit/srpte/n{n}"), move || {
+                seq += 1;
+                let id = (seq % n as u64) as u32;
+                store.update_est(id, 1e6 * (0.5 + (seq % 997) as f64 * 1e-3));
+                assert!(s.cancel(1.0, id));
+                s.on_arrival(1.0, id, &store);
+            });
+        }
+        // Serving-job refresh: the update keeps the job ahead of every
+        // waiter (ests 500..1497 vs a standing 1e6+ population), so
+        // the native path never touches the heap.
+        for variant in ["native", "readmit"] {
+            let (mut s, mut store) = preload("srpte", n);
+            let pid = n as u32;
+            store.deliver(
+                s.as_mut(),
+                1.0,
+                &Job { id: pid, arrival: 1.0, size: 1e6, est: 1e3, weight: 1.0 },
+            );
+            let native = variant == "native";
+            let mut seq = 0u64;
+            b.bench(&format!("est/update/{variant}/srpte_slot/n{n}"), move || {
+                seq += 1;
+                store.update_est(pid, 500.0 + (seq % 997) as f64);
+                if native {
+                    assert!(s.on_estimate_update(1.0, pid, &store));
+                } else {
+                    assert!(s.cancel(1.0, pid));
+                    s.on_arrival(1.0, pid, &store);
+                }
+            });
+        }
+    }
+
     // Derived trade-off summary (n = 100k): what the event path pays
     // for each index backing, and what cancellation gains from it.
     let mean_of = |name: &str| b.samples.iter().find(|s| s.name == name).map(|s| s.mean_ns);
@@ -250,6 +312,14 @@ fn main() {
             "late_set/complete/dps/n1000",
         ),
         ("late_set_scan_scaling", "late_set/scan/las/n100000", "late_set/scan/las/n1000"),
+        // What the serving-slot fast path of the native
+        // `on_estimate_update` override saves over the cancel+readmit
+        // default.  Informational in bench-compare, never gated.
+        (
+            "est_update_native_speedup",
+            "est/update/readmit/srpte_slot/n100000",
+            "est/update/native/srpte_slot/n100000",
+        ),
     ];
     for (label, num, den) in pairs {
         if let (Some(a), Some(c)) = (mean_of(num), mean_of(den)) {

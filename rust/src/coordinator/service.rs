@@ -48,9 +48,11 @@ pub struct ServiceStats {
     /// completed, already killed) — benign races, but recorded.
     pub kills_rejected: u64,
     /// Kill requests for a *pending* job that the discipline's
-    /// `cancel` refused.  A § 5.2.2 bookkeeping gap: every in-tree
-    /// policy now supports cancellation, so a nonzero count means a
-    /// composed/custom scheduler silently dropped a kill.
+    /// `cancel` refused.  Either a §5.2.2 bookkeeping gap (a
+    /// composed/custom scheduler silently dropping a kill) or a
+    /// *designed* rejection: the nonpreemptive disciplines (`spt`,
+    /// `sjf`) refuse to kill a job once it has started service — it
+    /// runs to completion and its channel still fires.
     pub kills_unsupported: u64,
     pub mean_latency_s: f64,
     /// Streaming (P²) latency percentiles — no per-job retention.
@@ -344,7 +346,9 @@ mod tests {
 
     /// `Service::kill` works for EVERY entry in `ALL_POLICIES` — the
     /// §5.2.2 bookkeeping with no default-`false` gaps — and the
-    /// accounting distinguishes kills from benign rejections.
+    /// accounting distinguishes kills from benign rejections.  The
+    /// nonpreemptive disciplines kill *waiting* jobs; their started
+    /// job rejects the kill by design (`kills_unsupported`).
     #[test]
     fn every_policy_supports_kill() {
         for policy in crate::sched::ALL_POLICIES {
@@ -352,6 +356,32 @@ mod tests {
                 policy: (*policy).into(),
                 speed: 10_000.0,
             });
+            if matches!(*policy, "spt" | "sjf") {
+                // Occupy the server (~1 s of wall clock at this speed —
+                // ample margin for the kill to land while it serves),
+                // then kill the waiting victim behind it.
+                let serving_rx = svc.submit(1e4, 1e4, 1.0);
+                let victim_rx = svc.submit(1e9, 1e9, 1.0);
+                assert!(svc.kill(1), "policy {policy}: waiting job must be killable");
+                assert!(!svc.kill(1), "policy {policy}: double kill reports false");
+                assert!(!svc.kill(0), "policy {policy}: started job rejects the kill");
+                assert!(
+                    victim_rx.recv_timeout(Duration::from_millis(50)).is_err(),
+                    "policy {policy}: killed job's channel must never fire"
+                );
+                serving_rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("the unkillable started job runs to completion");
+                let stats = svc.shutdown();
+                assert_eq!(stats.completed, 1, "policy {policy}");
+                assert_eq!(stats.killed, 1, "policy {policy}");
+                assert_eq!(stats.kills_rejected, 1, "policy {policy} (the double kill)");
+                assert_eq!(
+                    stats.kills_unsupported, 1,
+                    "policy {policy}: the started-job rejection is recorded"
+                );
+                continue;
+            }
             // A job far too large to complete before the kill lands.
             let rx = svc.submit(1e9, 1e9, 1.0);
             assert!(svc.kill(0), "policy {policy}: kill must succeed");

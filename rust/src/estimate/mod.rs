@@ -18,6 +18,15 @@
 //! [`measure`] evaluates any estimator *a posteriori* (§2.2: "estimation
 //! error can always be evaluated a posteriori") — log-error moments and
 //! the size↔estimate correlation the paper uses to report σ quality.
+//!
+//! The estimators above are one-shot; [`online::OnlineRefiner`] is the
+//! *online* layer (arXiv:1403.5996) that re-draws a live job's estimate
+//! on a periodic grid with per-job decaying dispersion, clamped so a
+//! delivered estimate never falls below attained service.
+
+pub mod online;
+
+pub use online::OnlineRefiner;
 
 use crate::sim::Job;
 use crate::util::rng::Rng;

@@ -10,7 +10,7 @@
 //! ```text
 //! name = "fig6_mst_vs_sigma"      # top-level keys first
 //! metric = "mean"                 # "mean" | "ecdf" | "cond_slowdown"
-//!                                 # | "tail_quantile"
+//!                                 # | "tail_quantile" | "slo" | "dominance"
 //!                                 # | "goodput" | "wasted_work" | "restarts"
 //! reps = 30                       # optional per-scenario overrides;
 //! converge = true                 # an explicit CLI flag still wins
@@ -97,6 +97,11 @@ impl Scenario {
                 s.push_str("metric = \"tail_quantile\"\n");
                 s.push_str(&format!("p = {p}\n"));
             }
+            Metric::SloAttainment { deadline } => {
+                s.push_str("metric = \"slo\"\n");
+                s.push_str(&format!("deadline = {deadline}\n"));
+            }
+            Metric::DominanceVsRef => s.push_str("metric = \"dominance\"\n"),
             Metric::Fault { output } => {
                 s.push_str(&format!("metric = \"{}\"\n", output.name()));
             }
@@ -108,11 +113,7 @@ impl Scenario {
             s.push_str(&format!("converge = {c}\n"));
         }
         if let Some(r) = self.reference {
-            let r = match r {
-                Reference::OptSrpt => "opt",
-                Reference::Ps => "ps",
-            };
-            s.push_str(&format!("reference = \"{r}\"\n"));
+            s.push_str(&format!("reference = \"{}\"\n", r.name()));
         }
         if let Some(cfg) = &self.faults {
             s.push_str("\n[faults]\n");
@@ -378,8 +379,8 @@ impl Doc {
         self.top.check_keys(
             "top level",
             &[
-                "name", "metric", "points", "decades", "tail_above", "bins", "p", "reps",
-                "converge", "reference",
+                "name", "metric", "points", "decades", "tail_above", "bins", "p", "deadline",
+                "reps", "converge", "reference",
             ],
         )?;
         let name = self
@@ -399,11 +400,11 @@ impl Doc {
         };
         let metric = match self.top.str("metric")?.unwrap_or("mean") {
             "mean" => {
-                reject(&["points", "decades", "tail_above", "bins", "p"], "mean")?;
+                reject(&["points", "decades", "tail_above", "bins", "p", "deadline"], "mean")?;
                 Metric::Mean
             }
             "ecdf" => {
-                reject(&["bins", "p"], "ecdf")?;
+                reject(&["bins", "p", "deadline"], "ecdf")?;
                 Metric::PooledEcdf {
                     points: self.top.usize("points")?.unwrap_or(128),
                     decades: self.top.num("decades")?.unwrap_or(3.0),
@@ -411,15 +412,23 @@ impl Doc {
                 }
             }
             "cond_slowdown" => {
-                reject(&["points", "decades", "tail_above", "p"], "cond_slowdown")?;
+                reject(&["points", "decades", "tail_above", "p", "deadline"], "cond_slowdown")?;
                 Metric::CondSlowdown { bins: self.top.usize("bins")?.unwrap_or(100) }
             }
             "tail_quantile" => {
-                reject(&["points", "decades", "tail_above", "bins"], "tail_quantile")?;
+                reject(&["points", "decades", "tail_above", "bins", "deadline"], "tail_quantile")?;
                 Metric::TailQuantile { p: self.top.num("p")?.unwrap_or(0.99) }
             }
+            "slo" => {
+                reject(&["points", "decades", "tail_above", "bins", "p"], "slo")?;
+                Metric::SloAttainment { deadline: self.top.num("deadline")?.unwrap_or(10.0) }
+            }
+            "dominance" => {
+                reject(&["points", "decades", "tail_above", "bins", "p", "deadline"], "dominance")?;
+                Metric::DominanceVsRef
+            }
             name @ ("goodput" | "wasted_work" | "restarts") => {
-                reject(&["points", "decades", "tail_above", "bins", "p"], name)?;
+                reject(&["points", "decades", "tail_above", "bins", "p", "deadline"], name)?;
                 Metric::Fault {
                     output: FaultOutput::parse(name)
                         .expect("arm pattern and FaultOutput::parse agree"),
@@ -427,8 +436,8 @@ impl Doc {
             }
             other => {
                 return Err(format!(
-                    "unknown metric `{other}` \
-                     (mean|ecdf|cond_slowdown|tail_quantile|goodput|wasted_work|restarts)"
+                    "unknown metric `{other}` (mean|ecdf|cond_slowdown|tail_quantile|\
+                     slo|dominance|goodput|wasted_work|restarts)"
                 ))
             }
         };
@@ -693,6 +702,30 @@ mod tests {
         assert!(sc.to_toml().contains("reps = 30\nconverge = true\n"));
     }
 
+    #[test]
+    fn slo_and_dominance_scenarios_round_trip() {
+        let sc = Scenario::new("slo_like", SynthConfig::default())
+            .policies(&["psbs", "srpte", "ps"])
+            .metric(Metric::SloAttainment { deadline: 5.0 });
+        assert_round_trip(&sc);
+        assert!(sc.to_toml().contains("metric = \"slo\"\ndeadline = 5\n"));
+        // `deadline` defaults to 10 when omitted.
+        let text = "name = \"t\"\nmetric = \"slo\"\n\n[workload]\n\
+                    kind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n";
+        match Scenario::parse_toml(text).unwrap().metric {
+            Metric::SloAttainment { deadline } => assert_eq!(deadline, 10.0),
+            m => panic!("expected slo, got {m:?}"),
+        }
+
+        let sc = Scenario::new("dom_like", SynthConfig::default())
+            .split_axis("sigma", AxisParam::Sigma, &[0.5, 2.0])
+            .policies(&["psbs", "fspe"])
+            .vs(Reference::Ps)
+            .metric(Metric::DominanceVsRef);
+        assert_round_trip(&sc);
+        assert!(sc.to_toml().contains("metric = \"dominance\"\nreference = \"ps\"\n"));
+    }
+
     /// `kind = "trace"` + `path = ...`: loads eagerly, resolves the
     /// path against `base`, renders the path back verbatim, and
     /// round-trips.
@@ -841,10 +874,10 @@ mod tests {
             };
             let is_trace = matches!(workload, WorkloadSpec::Trace(_));
             // Metric: 0 = ecdf, 1 = cond_slowdown, 2 = tail_quantile,
-            // 3 = a fault output, else mean.  The pooled metrics
-            // restrict axes to split axes.
-            let metric_kind = rng.below(8);
-            let pooled = metric_kind < 3;
+            // 3 = a fault output, 4 = slo, 5 = dominance, else mean.
+            // The pooled metrics restrict axes to split axes.
+            let metric_kind = rng.below(10);
+            let pooled = matches!(metric_kind, 0..=2 | 4 | 5);
             let mut sc = Scenario::with_workload(format!("s{}", rng.below(1000)), workload);
             let axis_pool: &[AxisParam] = if is_trace {
                 &[AxisParam::Sigma, AxisParam::Load, AxisParam::Njobs]
@@ -907,6 +940,17 @@ mod tests {
                         FaultOutput::Restarts,
                     ][rng.below(3) as usize];
                     sc = sc.metric(Metric::Fault { output }).with_faults(gen_faults(rng));
+                }
+                4 => {
+                    sc = sc.metric(Metric::SloAttainment {
+                        deadline: 0.5 * (1 + rng.below(40)) as f64,
+                    });
+                }
+                5 => {
+                    // Dominance REQUIRES a reference.
+                    sc = sc
+                        .metric(Metric::DominanceVsRef)
+                        .vs(if rng.below(2) == 0 { Reference::OptSrpt } else { Reference::Ps });
                 }
                 _ if rng.below(3) > 0 => {
                     sc = sc.vs(if rng.below(2) == 0 { Reference::OptSrpt } else { Reference::Ps });
@@ -1000,6 +1044,15 @@ mod tests {
             ("tail_quantile with row axis", "name = \"t\"\nmetric = \"tail_quantile\"\n\n[workload]\nkind = \"synthetic\"\n\n[[axis]]\nparam = \"sigma\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
             ("ecdf points on tail_quantile", "name = \"t\"\nmetric = \"tail_quantile\"\npoints = 9\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("quantile p on mean", &format!("p = 0.5\n{base}")),
+            ("slo deadline on mean", &format!("deadline = 5\n{base}")),
+            ("slo deadline on ecdf", "name = \"t\"\nmetric = \"ecdf\"\ndeadline = 5\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("slo nonpositive deadline", "name = \"t\"\nmetric = \"slo\"\ndeadline = 0\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("slo with reference", "name = \"t\"\nmetric = \"slo\"\nreference = \"ps\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("slo with row axis", "name = \"t\"\nmetric = \"slo\"\n\n[workload]\nkind = \"synthetic\"\n\n[[axis]]\nparam = \"sigma\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("dominance without reference", "name = \"t\"\nmetric = \"dominance\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("dominance with deadline", "name = \"t\"\nmetric = \"dominance\"\ndeadline = 5\nreference = \"ps\"\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("dominance with row axis", "name = \"t\"\nmetric = \"dominance\"\nreference = \"ps\"\n\n[workload]\nkind = \"synthetic\"\n\n[[axis]]\nparam = \"sigma\"\nvalues = [1]\n\n[[policy]]\nspec = \"ps\"\n"),
+            ("faults with slo metric", "name = \"t\"\nmetric = \"slo\"\n\n[faults]\nmtbf = 10\n\n[workload]\nkind = \"synthetic\"\n\n[[policy]]\nspec = \"ps\"\n"),
             ("zero reps override", &format!("reps = 0\n{base}")),
             ("non-bool converge", &format!("converge = 3\n{base}")),
             ("trace with both trace and path", "name = \"t\"\n\n[workload]\nkind = \"trace\"\ntrace = \"facebook\"\npath = \"x.csv\"\n\n[[policy]]\nspec = \"ps\"\n"),

@@ -112,6 +112,26 @@ impl Reference {
             }
         }
     }
+
+    /// Per-job slowdowns of the reference discipline on `jobs` — the
+    /// [`Metric::DominanceVsRef`] pairing baseline, same policy
+    /// choices as [`Reference::mst`].
+    pub fn slowdowns(&self, jobs: &[Job]) -> Vec<f64> {
+        match self {
+            Reference::Ps => slowdowns_of(&PolicySpec::Base(BasePolicy::Ps), jobs),
+            Reference::OptSrpt => {
+                slowdowns_of(&PolicySpec::Base(BasePolicy::Srpt), &exact_copy(jobs))
+            }
+        }
+    }
+
+    /// Canonical short name (scenario files: `reference = "..."`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Reference::OptSrpt => "opt",
+            Reference::Ps => "ps",
+        }
+    }
 }
 
 /// The same workload with perfect size information.
@@ -568,6 +588,24 @@ pub enum Metric {
     /// repetitions (the sketch is order-sensitive, so reps run
     /// serially inside each policy — identical for any thread count).
     TailQuantile { p: f64 },
+    /// Pooled SLO attainment — the fairness/SLO suite's deadline lens:
+    /// the fraction of the pooled per-job slowdown population at or
+    /// under `deadline`, one row per policy.  The table takes the
+    /// shape of [`Metric::PooledEcdf`]'s `tail_above` companion
+    /// (`policy_idx` + fraction columns), named
+    /// `{name}_slo_within_{deadline}`.  Structurally a pooled metric:
+    /// split axes only, no reference, exactly `reps` repetitions pool.
+    SloAttainment { deadline: f64 },
+    /// Pooled per-job dominance against the [`Reference`]: the
+    /// fraction of pooled jobs whose slowdown is at most the reference
+    /// discipline's slowdown *for the same job on the same workload*
+    /// (the per-job pairing behind FSP-style dominance claims, turned
+    /// into a scalar).  Unique among the pooled metrics in REQUIRING a
+    /// reference — without the baseline there is nothing to pair
+    /// against.  Split axes only, exactly `reps` repetitions pool;
+    /// the table is the companion shape, named
+    /// `{name}_dominance_vs_{ref}`.
+    DominanceVsRef,
 }
 
 /// Which fault-side scalar a [`Metric::Fault`] scenario reports.
@@ -867,6 +905,16 @@ impl Scenario {
                 }
                 Some("tail_quantile")
             }
+            Metric::SloAttainment { deadline } => {
+                if !(deadline > 0.0) {
+                    return Err(format!(
+                        "scenario {}: slo metric needs deadline > 0, got {deadline}",
+                        self.name
+                    ));
+                }
+                Some("slo")
+            }
+            Metric::DominanceVsRef => Some("dominance"),
         };
         if let Some(kind) = pooled_kind {
             if self.axes.iter().any(|a| !a.split) {
@@ -875,7 +923,17 @@ impl Scenario {
                     self.name
                 ));
             }
-            if self.reference.is_some() {
+            // Dominance is the one pooled metric that REQUIRES a
+            // reference: the per-job pairing against the baseline IS
+            // the metric.  Every other pooled metric takes none.
+            if matches!(self.metric, Metric::DominanceVsRef) {
+                if self.reference.is_none() {
+                    return Err(format!(
+                        "scenario {}: dominance metric requires a reference (opt|ps)",
+                        self.name
+                    ));
+                }
+            } else if self.reference.is_some() {
                 return Err(format!(
                     "scenario {}: {kind} metric takes no reference",
                     self.name
@@ -982,6 +1040,12 @@ impl Scenario {
                 }
                 Metric::TailQuantile { p: q } => {
                     out.push(self.tail_quantile_table(name, w, p, threads, q))
+                }
+                Metric::SloAttainment { deadline } => {
+                    out.push(self.slo_table(name, w, p, threads, deadline))
+                }
+                Metric::DominanceVsRef => {
+                    out.push(self.dominance_table(name, w, p, threads))
                 }
             }
         }
@@ -1210,6 +1274,93 @@ impl Scenario {
         let mut row = vec![q];
         row.extend(vals);
         t.push(row);
+        t
+    }
+
+    /// The SLO-attainment path ([`Metric::SloAttainment`]): pool
+    /// per-job slowdowns per policy exactly like the ECDF path (same
+    /// rep seeds, repetitions in parallel one policy at a time) and
+    /// reduce each pool to one fraction — jobs with slowdown at most
+    /// `deadline` over jobs total.  Counts are exact integers, so the
+    /// table is bit-identical for any thread count; `share` is
+    /// structurally a no-op like every pooled path.
+    fn slo_table(
+        &self,
+        name: String,
+        w: WorkloadSpec,
+        p: SweepParams,
+        threads: usize,
+        deadline: f64,
+    ) -> Table {
+        let rep_items: Vec<u64> = (0..p.reps).collect();
+        let mut t = Table::new(
+            format!("{name}_slo_within_{deadline}"),
+            vec!["policy_idx".to_string(), format!("frac_within_{deadline}")],
+        );
+        for (pi, (_, spec)) in self.policies.iter().enumerate() {
+            let counts = pool::par_map(threads, &rep_items, |&r| {
+                let rep_seed = w.rep_seed(p.seed, r);
+                let jobs = w.synthesize(rep_seed);
+                let slow = slowdowns_of_seeded(spec, &jobs, rep_seed);
+                (slow.iter().filter(|&&s| s <= deadline).count(), slow.len())
+            });
+            let (mut within, mut total) = (0usize, 0usize);
+            for (hit, n) in counts {
+                within += hit;
+                total += n;
+            }
+            // An empty pooled population (reps = 0) reports NaN, not a
+            // fabricated zero — the ECDF path's convention.
+            let frac = if total == 0 { f64::NAN } else { within as f64 / total as f64 };
+            t.push(vec![pi as f64, frac]);
+        }
+        t
+    }
+
+    /// The per-job dominance path ([`Metric::DominanceVsRef`]): the
+    /// reference baseline is policy-independent, so each repetition's
+    /// reference slowdowns compute once up front (in parallel); each
+    /// policy then pairs its own per-job slowdowns against the stored
+    /// baseline index-by-index — both vectors come from the same
+    /// synthesized workload, so index i is the same job — and the
+    /// pooled dominant-job count reduces to one fraction per policy.
+    /// Exact integer counts: bit-identical for any thread count,
+    /// `share` structurally a no-op.
+    fn dominance_table(
+        &self,
+        name: String,
+        w: WorkloadSpec,
+        p: SweepParams,
+        threads: usize,
+    ) -> Table {
+        let r = self.reference.expect("validate(): dominance requires a reference");
+        let rep_items: Vec<u64> = (0..p.reps).collect();
+        let baseline: Vec<Vec<f64>> = pool::par_map(threads, &rep_items, |&rep| {
+            let rep_seed = w.rep_seed(p.seed, rep);
+            let jobs = w.synthesize(rep_seed);
+            r.slowdowns(&jobs)
+        });
+        let mut t = Table::new(
+            format!("{name}_dominance_vs_{}", r.name()),
+            vec!["policy_idx".to_string(), "frac_dominant".to_string()],
+        );
+        for (pi, (_, spec)) in self.policies.iter().enumerate() {
+            let counts = pool::par_map(threads, &rep_items, |&rep| {
+                let rep_seed = w.rep_seed(p.seed, rep);
+                let jobs = w.synthesize(rep_seed);
+                let slow = slowdowns_of_seeded(spec, &jobs, rep_seed);
+                let base = &baseline[rep as usize];
+                assert_eq!(slow.len(), base.len(), "per-job pairing needs equal lengths");
+                (slow.iter().zip(base).filter(|&(s, b)| s <= b).count(), slow.len())
+            });
+            let (mut dom, mut total) = (0usize, 0usize);
+            for (hit, n) in counts {
+                dom += hit;
+                total += n;
+            }
+            let frac = if total == 0 { f64::NAN } else { dom as f64 / total as f64 };
+            t.push(vec![pi as f64, frac]);
+        }
         t
     }
 }
@@ -1613,5 +1764,134 @@ mod tests {
         for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
             assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
         }
+    }
+
+    /// Metric::SloAttainment: companion-table shape, fraction range,
+    /// cross-check against the pooled population, bit-identity across
+    /// modes, and the structural rejections shared with the other
+    /// pooled metrics plus the deadline-range check.
+    #[test]
+    fn slo_attainment_scenario_shape_and_determinism() {
+        let sc = Scenario::new("t_slo", SynthConfig::default().with_njobs(200))
+            .policies(&["ps", "psbs"])
+            .metric(Metric::SloAttainment { deadline: 5.0 });
+        assert!(sc.validate().is_ok());
+        let p = SweepParams { reps: 2, seed: 13, converge: false };
+        let ts = sc.tables(p, 1, true);
+        assert_eq!(ts.len(), 1);
+        let t = &ts[0];
+        assert_eq!(t.name, "t_slo_slo_within_5");
+        assert_eq!(t.header, vec!["policy_idx", "frac_within_5"]);
+        assert_eq!(t.rows.len(), 2);
+        for (pi, row) in t.rows.iter().enumerate() {
+            assert_eq!(row[0], pi as f64);
+            assert!((0.0..=1.0).contains(&row[1]), "frac {}", row[1]);
+        }
+        // Cross-check policy 1 against the pooled population directly.
+        let spec: PolicySpec = "psbs".into();
+        let (mut within, mut total) = (0usize, 0usize);
+        for r in 0..p.reps {
+            let seed = sc.workload.rep_seed(p.seed, r);
+            let jobs = sc.workload.synthesize(seed);
+            let slow = slowdowns_of_seeded(&spec, &jobs, seed);
+            within += slow.iter().filter(|&&s| s <= 5.0).count();
+            total += slow.len();
+        }
+        assert_eq!(t.rows[1][1].to_bits(), (within as f64 / total as f64).to_bits());
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.tables(p, threads, share)[0].rows.iter().flatten().map(|v| v.to_bits()).collect()
+        };
+        let base = bits(false, 1);
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
+        // Nonpositive deadline / row axis / reference / converge=true.
+        for bad_d in [0.0, -1.0] {
+            let bad = Scenario::new("t", SynthConfig::default())
+                .policies(&["ps"])
+                .metric(Metric::SloAttainment { deadline: bad_d });
+            assert!(bad.validate().is_err(), "deadline={bad_d}");
+        }
+        let slo = Metric::SloAttainment { deadline: 5.0 };
+        let bad = Scenario::new("t", SynthConfig::default())
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"])
+            .metric(slo);
+        assert!(bad.validate().is_err());
+        let bad =
+            Scenario::new("t", SynthConfig::default()).policies(&["ps"]).vs(Reference::Ps).metric(slo);
+        assert!(bad.validate().is_err());
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .metric(slo)
+            .converge_override(true);
+        assert!(bad.validate().is_err());
+    }
+
+    /// Metric::DominanceVsRef: companion-table shape, the required
+    /// reference (rejected when missing — unique among pooled
+    /// metrics), self-dominance sanity (PS vs PS is exactly 1),
+    /// cross-check against a direct per-job pairing, and bit-identity
+    /// across modes.
+    #[test]
+    fn dominance_scenario_shape_and_determinism() {
+        let sc = Scenario::new("t_dom", SynthConfig::default().with_njobs(200))
+            .policies(&["ps", "psbs"])
+            .vs(Reference::Ps)
+            .metric(Metric::DominanceVsRef);
+        assert!(sc.validate().is_ok());
+        let p = SweepParams { reps: 2, seed: 13, converge: false };
+        let ts = sc.tables(p, 1, true);
+        assert_eq!(ts.len(), 1);
+        let t = &ts[0];
+        assert_eq!(t.name, "t_dom_dominance_vs_ps");
+        assert_eq!(t.header, vec!["policy_idx", "frac_dominant"]);
+        assert_eq!(t.rows.len(), 2);
+        // PS paired against the PS reference dominates on every job.
+        assert_eq!(t.rows[0][1], 1.0);
+        assert!((0.0..=1.0).contains(&t.rows[1][1]));
+        // Cross-check policy 1 against a direct per-job pairing.
+        let spec: PolicySpec = "psbs".into();
+        let (mut dom, mut total) = (0usize, 0usize);
+        for r in 0..p.reps {
+            let seed = sc.workload.rep_seed(p.seed, r);
+            let jobs = sc.workload.synthesize(seed);
+            let slow = slowdowns_of_seeded(&spec, &jobs, seed);
+            let base = Reference::Ps.slowdowns(&jobs);
+            dom += slow.iter().zip(&base).filter(|&(s, b)| s <= b).count();
+            total += slow.len();
+        }
+        assert_eq!(t.rows[1][1].to_bits(), (dom as f64 / total as f64).to_bits());
+        let bits = |share: bool, threads: usize| -> Vec<u64> {
+            sc.tables(p, threads, share)[0].rows.iter().flatten().map(|v| v.to_bits()).collect()
+        };
+        let base = bits(false, 1);
+        for (share, threads) in [(true, 1), (true, 3), (false, 3)] {
+            assert_eq!(base, bits(share, threads), "share={share} threads={threads}");
+        }
+        // The opt reference names the table accordingly.
+        let sc_opt = Scenario::new("t_dom", SynthConfig::default().with_njobs(120))
+            .policies(&["psbs"])
+            .vs(Reference::OptSrpt)
+            .metric(Metric::DominanceVsRef);
+        assert_eq!(sc_opt.tables(SweepParams { reps: 1, seed: 3, converge: false }, 1, true)[0]
+            .name, "t_dom_dominance_vs_opt");
+        // Missing reference / row axis / converge=true rejected.
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .metric(Metric::DominanceVsRef);
+        assert!(bad.validate().is_err(), "dominance without a reference");
+        let bad = Scenario::new("t", SynthConfig::default())
+            .axis("sigma", AxisParam::Sigma, &[0.5])
+            .policies(&["ps"])
+            .vs(Reference::Ps)
+            .metric(Metric::DominanceVsRef);
+        assert!(bad.validate().is_err());
+        let bad = Scenario::new("t", SynthConfig::default())
+            .policies(&["ps"])
+            .vs(Reference::Ps)
+            .metric(Metric::DominanceVsRef)
+            .converge_override(true);
+        assert!(bad.validate().is_err());
     }
 }

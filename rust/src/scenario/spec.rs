@@ -13,6 +13,8 @@
 //!                                               heterogeneous speeds
 //! est(model=sampling,fraction=0.05,sigma0=0.5,inner=psbs)
 //!                                               estimator-wrapped policy
+//! est(model=online,sigma0=2,period=5,decay=0.9,inner=psbs)
+//!                                               online estimate refinement
 //! speculate(after=4,inner=cluster(k=8,inner=psbs))
 //!                                               speculative execution
 //! cluster(k=4,dispatch=random,inner=est(model=lognormal,sigma=2,inner=srpte))
@@ -40,7 +42,7 @@ use crate::sim::{Completion, Job, JobId, JobStore, Scheduler};
 use crate::util::rng::Rng;
 use std::fmt;
 
-/// The sixteen single-server disciplines of the zoo, one variant per
+/// The eighteen single-server disciplines of the zoo, one variant per
 /// name in [`crate::sched::ALL_POLICIES`] (aliases like `srpt`/`srpte`
 /// stay distinct variants so parse/display round-trips exactly).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -61,6 +63,8 @@ pub enum BasePolicy {
     Psbs,
     PsbsPaperlit,
     FspNaive,
+    Spt,
+    Sjf,
 }
 
 impl BasePolicy {
@@ -83,6 +87,8 @@ impl BasePolicy {
             BasePolicy::Psbs => "psbs",
             BasePolicy::PsbsPaperlit => "psbs-paperlit",
             BasePolicy::FspNaive => "fsp-naive",
+            BasePolicy::Spt => "spt",
+            BasePolicy::Sjf => "sjf",
         }
     }
 
@@ -105,6 +111,8 @@ impl BasePolicy {
             "psbs" => BasePolicy::Psbs,
             "psbs-paperlit" => BasePolicy::PsbsPaperlit,
             "fsp-naive" => BasePolicy::FspNaive,
+            "spt" => BasePolicy::Spt,
+            "sjf" => BasePolicy::Sjf,
             _ => return None,
         })
     }
@@ -128,6 +136,8 @@ impl BasePolicy {
                 Box::new(sched::fsp_family::FspFamily::psbs_paper_literal())
             }
             BasePolicy::FspNaive => Box::new(sched::fsp_naive::FspNaive::new()),
+            BasePolicy::Spt => Box::new(sched::nonpreemptive::NonPreemptive::spt()),
+            BasePolicy::Sjf => Box::new(sched::nonpreemptive::NonPreemptive::sjf()),
         }
     }
 
@@ -167,6 +177,8 @@ impl BasePolicy {
             }
             BasePolicy::SrptePs => Box::new(sched::srpte_hybrid::SrpteHybrid::ps().unindexed()),
             BasePolicy::SrpteLas => Box::new(sched::srpte_hybrid::SrpteHybrid::las().unindexed()),
+            BasePolicy::Spt => Box::new(sched::nonpreemptive::NonPreemptive::spt().unindexed()),
+            BasePolicy::Sjf => Box::new(sched::nonpreemptive::NonPreemptive::sjf().unindexed()),
             other => other.build(),
         }
     }
@@ -187,9 +199,20 @@ pub enum EstimatorSpec {
     Class,
     /// Correlated proxy with multiplicative `bias` and dispersion.
     Proxy { bias: f64, sigma: f64 },
+    /// Online refinement (arXiv:1403.5996): initial draw at `sigma0`
+    /// (exactly the log-normal model), then every `period` time units
+    /// each live job is re-estimated at `sigma0 * decay^k` (k = its
+    /// refinement count), clamped ≥ attained service.  `period=inf`
+    /// never refines — bit-identical to the static log-normal path.
+    Online { sigma0: f64, period: f64, decay: f64 },
 }
 
 impl EstimatorSpec {
+    /// The one-shot estimator behind this spec.  For `Online` this is
+    /// the *initial-draw* model (log-normal at `sigma0`) — the
+    /// refinement machinery lives in the scheduler layer
+    /// ([`crate::estimate::OnlineRefiner`]), which the `PolicySpec`
+    /// builders construct directly.
     pub fn build(&self) -> Box<dyn Estimator> {
         match *self {
             EstimatorSpec::Oracle => Box::new(estimate::OracleEstimator),
@@ -201,6 +224,7 @@ impl EstimatorSpec {
             EstimatorSpec::Proxy { bias, sigma } => {
                 Box::new(estimate::ProxyEstimator::new(bias, sigma))
             }
+            EstimatorSpec::Online { sigma0, .. } => Box::new(estimate::LogNormalNoise::new(sigma0)),
         }
     }
 
@@ -211,6 +235,7 @@ impl EstimatorSpec {
             EstimatorSpec::Sampling { .. } => "sampling",
             EstimatorSpec::Class => "class",
             EstimatorSpec::Proxy { .. } => "proxy",
+            EstimatorSpec::Online { .. } => "online",
         }
     }
 }
@@ -336,7 +361,10 @@ impl PolicySpec {
                 Ok(PolicySpec::Speculate { after, inner: Box::new(inner) })
             }
             "est" => {
-                check_keys(&["model", "sigma", "fraction", "sigma0", "bias", "inner", "seed"])?;
+                check_keys(&[
+                    "model", "sigma", "fraction", "sigma0", "bias", "period", "decay", "inner",
+                    "seed",
+                ])?;
                 let est = match get("model").unwrap_or("lognormal") {
                     "oracle" => EstimatorSpec::Oracle,
                     "lognormal" => EstimatorSpec::LogNormal {
@@ -351,6 +379,11 @@ impl PolicySpec {
                         bias: parse_num::<f64>(get("bias"), "est: bias", 1.0)?,
                         sigma: parse_num::<f64>(get("sigma"), "est: sigma", 0.5)?,
                     },
+                    "online" => EstimatorSpec::Online {
+                        sigma0: parse_num::<f64>(get("sigma0"), "est: sigma0", 0.5)?,
+                        period: parse_num::<f64>(get("period"), "est: period", f64::INFINITY)?,
+                        decay: parse_num::<f64>(get("decay"), "est: decay", 1.0)?,
+                    },
                     other => return Err(format!("est: unknown model `{other}`")),
                 };
                 if let EstimatorSpec::Sampling { fraction, .. } = est {
@@ -362,6 +395,22 @@ impl PolicySpec {
                     if !(bias > 0.0) {
                         return Err("est: need bias > 0".into());
                     }
+                }
+                if let EstimatorSpec::Online { sigma0, period, decay } = est {
+                    if !(sigma0 >= 0.0) {
+                        return Err("est: need sigma0 >= 0".into());
+                    }
+                    if !(period > 0.0) {
+                        return Err("est: need period > 0".into());
+                    }
+                    if !(decay > 0.0 && decay <= 1.0) {
+                        return Err("est: need 0 < decay <= 1".into());
+                    }
+                } else if get("period").is_some() || get("decay").is_some() {
+                    return Err(format!(
+                        "est: period/decay only apply to model=online, not model={}",
+                        est.model_name()
+                    ));
                 }
                 let inner = PolicySpec::parse(get("inner").unwrap_or("psbs"))?;
                 let seed = parse_num::<u64>(get("seed"), "est: seed", 0)?;
@@ -396,11 +445,9 @@ impl PolicySpec {
                     ))
                 }
             }
-            PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
-                est.build(),
-                inner.build_seeded(seed.wrapping_add(*s0)),
-                seed.wrapping_add(*s0),
-            )),
+            PolicySpec::Estimated { est, inner, seed: s0 } => {
+                wrap_estimated(est, inner.build_seeded(seed.wrapping_add(*s0)), seed.wrapping_add(*s0))
+            }
             PolicySpec::Speculate { .. } => self.build_cluster_full(seed, None),
         }
     }
@@ -418,11 +465,11 @@ impl PolicySpec {
         cfg: &crate::coordinator::FaultConfig,
     ) -> Box<dyn Scheduler> {
         match self {
-            PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
-                est.build(),
+            PolicySpec::Estimated { est, inner, seed: s0 } => wrap_estimated(
+                est,
                 inner.build_faulty(seed.wrapping_add(*s0), cfg),
                 seed.wrapping_add(*s0),
-            )),
+            ),
             _ => self.build_cluster_full(seed, Some(cfg)),
         }
     }
@@ -478,11 +525,9 @@ impl PolicySpec {
     pub fn build_sweep(&self, seed: u64) -> Box<dyn Scheduler> {
         match self {
             PolicySpec::Base(b) => b.build_with(false),
-            PolicySpec::Estimated { est, inner, seed: s0 } => Box::new(Estimated::new(
-                est.build(),
-                inner.build_sweep(seed.wrapping_add(*s0)),
-                seed.wrapping_add(*s0),
-            )),
+            PolicySpec::Estimated { est, inner, seed: s0 } => {
+                wrap_estimated(est, inner.build_sweep(seed.wrapping_add(*s0)), seed.wrapping_add(*s0))
+            }
             _ => self.build_seeded(seed),
         }
     }
@@ -562,6 +607,9 @@ impl fmt::Display for PolicySpec {
                     }
                     EstimatorSpec::Proxy { bias, sigma } => {
                         write!(f, ",bias={bias},sigma={sigma}")?
+                    }
+                    EstimatorSpec::Online { sigma0, period, decay } => {
+                        write!(f, ",sigma0={sigma0},period={period},decay={decay}")?
                     }
                 }
                 write!(f, ",inner={inner}")?;
@@ -663,6 +711,27 @@ fn parse_num<T: std::str::FromStr>(v: Option<&str>, what: &str, default: T) -> R
     }
 }
 
+/// Lower an `est(...)` layer onto a built inner scheduler.  The
+/// `online` model gets the refinement-capable wrapper
+/// ([`estimate::OnlineRefiner`]); every other model keeps the static
+/// [`Estimated`] wrapper.  Both seed their rng identically
+/// (`seed ^ 0xE57`) and draw identically per arrival, which is what
+/// makes `model=online,period=inf` bit-identical to
+/// `model=lognormal,sigma=sigma0` — the pin in
+/// `rust/tests/online_est.rs`.
+fn wrap_estimated(
+    est: &EstimatorSpec,
+    inner: Box<dyn Scheduler>,
+    seed: u64,
+) -> Box<dyn Scheduler> {
+    match *est {
+        EstimatorSpec::Online { sigma0, period, decay } => {
+            Box::new(estimate::OnlineRefiner::new(sigma0, period, decay, inner, seed))
+        }
+        _ => Box::new(Estimated::new(est.build(), inner, seed)),
+    }
+}
+
 /// Estimator-wrapping scheduler: replaces each arriving job's `est`
 /// with the estimator's output (computed from the *true* size, like
 /// `estimate::apply`, but online — one draw per arrival in arrival
@@ -723,6 +792,18 @@ impl Scheduler for Estimated {
         ok
     }
 
+    /// An external estimate update (`psbs serve`'s `update` verb)
+    /// passes the caller's refreshed value through the overlay verbatim
+    /// — no estimator draw, so the arrival-order rng stream is not
+    /// perturbed — and re-keys the inner discipline off it.
+    fn on_estimate_update(&mut self, now: f64, id: JobId, store: &JobStore) -> bool {
+        if !self.overlay.is_active(id) {
+            return false;
+        }
+        self.overlay.update_est(id, store.est(id));
+        self.inner.on_estimate_update(now, id, &self.overlay)
+    }
+
     fn fault_stats(&self) -> Option<crate::coordinator::FaultStats> {
         self.inner.fault_stats()
     }
@@ -760,6 +841,9 @@ mod tests {
             "cluster(k=3,dispatch=leasttime,inner=psbs,speeds=4:2:1)",
             "speculate(after=4,inner=cluster(k=8,dispatch=leastwork,inner=psbs))",
             "speculate(after=2.5,inner=cluster(k=2,dispatch=jsq,inner=srpte))",
+            "est(model=online,sigma0=2,period=5,decay=0.9,inner=psbs)",
+            "est(model=online,sigma0=0.5,period=inf,decay=1,inner=srpte)",
+            "cluster(k=2,dispatch=jsq,inner=est(model=online,sigma0=1,period=10,decay=0.5,inner=spt))",
         ] {
             let spec = PolicySpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
             let rendered = spec.to_string();
@@ -813,7 +897,7 @@ mod tests {
                     inner: Box::new(gen_spec(rng, depth - 1)),
                 },
                 _ => PolicySpec::Estimated {
-                    est: match rng.below(5) {
+                    est: match rng.below(6) {
                         0 => EstimatorSpec::Oracle,
                         1 => EstimatorSpec::LogNormal { sigma: 0.25 * (1 + rng.below(8)) as f64 },
                         2 => EstimatorSpec::Sampling {
@@ -821,9 +905,18 @@ mod tests {
                             sigma0: 0.5,
                         },
                         3 => EstimatorSpec::Class,
-                        _ => EstimatorSpec::Proxy {
+                        4 => EstimatorSpec::Proxy {
                             bias: 0.5 * (1 + rng.below(4)) as f64,
                             sigma: 0.25 * (1 + rng.below(4)) as f64,
+                        },
+                        _ => EstimatorSpec::Online {
+                            sigma0: 0.25 * (1 + rng.below(8)) as f64,
+                            period: if rng.below(3) == 0 {
+                                f64::INFINITY
+                            } else {
+                                0.5 * (1 + rng.below(16)) as f64
+                            },
+                            decay: 0.125 * (1 + rng.below(8)) as f64,
                         },
                     },
                     inner: Box::new(gen_spec(rng, depth - 1)),
@@ -863,6 +956,12 @@ mod tests {
             "cluster(k=2,speeds=fast:1,inner=psbs)",
             "speculate(after=0,inner=cluster(k=2))",
             "speculate(after=2,inner=psbs,bogus=1)",
+            "est(model=online,period=0,inner=psbs)",
+            "est(model=online,decay=0,inner=psbs)",
+            "est(model=online,decay=1.5,inner=psbs)",
+            "est(model=online,sigma0=-1,inner=psbs)",
+            "est(model=online,rate=2,inner=psbs)",
+            "est(model=lognormal,period=5,inner=psbs)",
         ] {
             assert!(PolicySpec::parse(bad).is_err(), "`{bad}` should not parse");
         }

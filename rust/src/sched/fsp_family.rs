@@ -363,6 +363,35 @@ impl Scheduler for FspFamily {
         }
         self.late.cancel(id)
     }
+
+    /// Native virtual-schedule re-key, bitwise-equal to cancel +
+    /// re-admit (the trait default, pinned in `rust/tests/online_est.rs`)
+    /// — here the equivalence is exact by construction, because the
+    /// virtual-lag algebra leaves no cheaper sound shortcut: a job's
+    /// completion lag `g_i` is immutable once issued (that immutability
+    /// is what makes arrivals O(1) amortized), so re-keying *means*
+    /// retiring the old entry and issuing a new lag.  The two late-set
+    /// boundary directions are handled explicitly:
+    ///
+    /// * **O → E ghost**: a job still running virtually keeps its old
+    ///   `g_i` share until that virtual completion — exactly the
+    ///   §5.2.2 kill bookkeeping — while the refreshed job re-enters
+    ///   `O` below at `g + est_new / w` (so `w_v` counts both the
+    ///   ghost and the live entry until the ghost drains);
+    /// * **late → O**: a late job's refreshed estimate supersedes the
+    ///   "virtually complete" verdict — it leaves `L` and rejoins the
+    ///   virtual system as a fresh arrival (crossing back out of the
+    ///   late set; the inward crossing happens on the next virtual
+    ///   completion if the new estimate is still too small).
+    fn on_estimate_update(&mut self, now: f64, id: JobId, store: &JobStore) -> bool {
+        if let Some((g_old, seq, oj)) = self.o.remove_by_seq(id as u64) {
+            self.e.push(g_old, seq, oj.weight);
+        } else if !self.late.cancel(id) {
+            return false;
+        }
+        self.on_arrival(now, id, store);
+        true
+    }
 }
 
 #[cfg(test)]

@@ -1,16 +1,23 @@
 //! The scheduler zoo: every discipline evaluated in the paper.
 //!
-//! | module | disciplines | kill (`cancel`) semantics | paper § |
-//! |--------|-------------|---------------------------|---------|
-//! | [`fifo`] | FIFO | queue removal; killed head promotes the next job | §6.1 |
-//! | [`ps`] | PS, DPS (virtual-lag implementation) | lag-heap removal; survivors split the freed weight | §6.1 |
-//! | [`las`] | LAS (attained-service levels) | id → level map, heap removal, empty-level reclaim | §2.1, §6.1 |
-//! | [`mlfq`] | MLFQ (geometric quanta) | per-level probe + heap removal | §2.1 |
-//! | [`srpt`] | SRPT / SRPTE (late jobs block) | served slot cleared (next waiter pulled) or heap removal | §4 |
-//! | [`srpte_hybrid`] | SRPTE+PS, SRPTE+LAS | slot / [`late_set`] / waiting-heap removal, O(log n) | §5.1 |
-//! | [`fsp_family`] | FSPE, FSPE+PS, FSPE+LAS, **PSBS** (Algorithm 1) | `O` job keeps its virtual share (moves to `E`); late job leaves [`late_set`] | §4.2, §5 |
-//! | [`fsp_naive`] | FSP/FSPE with the classic O(n) virtual update | same semantics as `fsp_family`, O(n) | §3, §5.2.2 |
-//! | [`pri`] | Pri_S — the §3 dominance construction | rank-heap removal | §3 |
+//! | module | disciplines | kill (`cancel`) semantics | `on_estimate_update` strategy | paper § |
+//! |--------|-------------|---------------------------|-------------------------------|---------|
+//! | [`fifo`] | FIFO | queue removal; killed head promotes the next job | default (est-oblivious: cancel + re-admit legally moves the queue position) | §6.1 |
+//! | [`ps`] | PS, DPS (virtual-lag implementation) | lag-heap removal; survivors split the freed weight | default (est-oblivious: re-admit re-issues the lag) | §6.1 |
+//! | [`las`] | LAS (attained-service levels) | id → level map, heap removal, empty-level reclaim | default (est-oblivious: re-admit resets attained to level 0) | §2.1, §6.1 |
+//! | [`mlfq`] | MLFQ (geometric quanta) | per-level probe + heap removal | default (est-oblivious: re-admit restarts at the top queue) | §2.1 |
+//! | [`srpt`] | SRPT / SRPTE (late jobs block) | served slot cleared (next waiter pulled) or heap removal | **native**: in-place slot re-key fast path, waiting-heap re-sift | §4 |
+//! | [`srpte_hybrid`] | SRPTE+PS, SRPTE+LAS | slot / [`late_set`] / waiting-heap removal, O(log n) | **native**: slot fast path; late → eligible boundary crossing; heap re-sift | §5.1 |
+//! | [`fsp_family`] | FSPE, FSPE+PS, FSPE+LAS, **PSBS** (Algorithm 1) | `O` job keeps its virtual share (moves to `E`); late job leaves [`late_set`] | **native**: virtual re-key — O → `E` ghost + fresh lag, or late → O re-entry | §4.2, §5 |
+//! | [`fsp_naive`] | FSP/FSPE with the classic O(n) virtual update | same semantics as `fsp_family`, O(n) | default (cancel + re-admit already is the flat-path re-key) | §3, §5.2.2 |
+//! | [`pri`] | Pri_S — the §3 dominance construction | rank-heap removal | default (cancel + re-admit re-ranks) | §3 |
+//! | [`nonpreemptive`] | SPT (by estimate), SJF (by true size) | waiting-heap removal; a **started job rejects** the kill | default; started jobs report unsupported (cancel fails) | — |
+//!
+//! Every native `on_estimate_update` override is pinned **bitwise**
+//! against the trait default (cancel + re-admit) under refinement +
+//! kill churn in `rust/tests/online_est.rs`; est-oblivious disciplines
+//! keep the default, because for them a no-op would *not* equal cancel
+//! + re-admit (which legally resets queue position / lag / attained).
 //!
 //! Every discipline supports `cancel` — the §5.2.2 "additional
 //! bookkeeping … to handle jobs that complete even when they are not
@@ -57,6 +64,7 @@ pub mod fsp_naive;
 pub mod las;
 pub mod late_set;
 pub mod mlfq;
+pub mod nonpreemptive;
 pub mod pri;
 pub mod ps;
 pub mod srpt;
@@ -73,6 +81,7 @@ use crate::sim::Scheduler;
 pub const ALL_POLICIES: &[&str] = &[
     "fifo", "ps", "dps", "las", "mlfq", "srpt", "srpte", "srpte+ps", "srpte+las",
     "fsp", "fspe", "fspe+ps", "fspe+las", "psbs", "psbs-paperlit", "fsp-naive",
+    "spt", "sjf",
 ];
 
 /// Construct a scheduler by CLI name — a thin compatibility shim over

@@ -1,0 +1,227 @@
+//! Nonpreemptive SPT and SJF — the classic single-server comparison
+//! points (arXiv:1907.04824) the size-based preemptive zoo is measured
+//! against.
+//!
+//! Both serve one job at a time **to completion**: once a job starts it
+//! holds the server until it finishes, whatever arrives meanwhile.
+//! They differ only in the queueing key:
+//!
+//! * **SPT** (shortest *estimated* processing time) picks the waiting
+//!   job with the smallest size *estimate* — the nonpreemptive
+//!   counterpart of SRPTE, and like it degraded by estimate error;
+//! * **SJF** (shortest job first) picks by *true* size — the
+//!   clairvoyant nonpreemptive baseline.
+//!
+//! ### Kill semantics (§5.2.2 bookkeeping)
+//! A *waiting* job can be killed (O(log n) heap removal via the dense
+//! seq index).  A job that has **started service is rejected**
+//! (`cancel` returns `false`): nonpreemptive semantics mean the server
+//! cannot be reclaimed mid-job, mirroring real batch systems where a
+//! dispatched task is past the point of cheap revocation.  The same
+//! rule makes estimate updates on a started job report unsupported
+//! through the `on_estimate_update` default (cancel fails, so no
+//! re-key) — a started job's priority is spent, so a refreshed
+//! estimate can no longer change anything.  The cancellation property
+//! suite (`rust/tests/cancellation.rs`) covers both rules explicitly.
+
+use super::MinHeap;
+use crate::sim::{Completion, JobId, JobStore, Scheduler};
+use crate::util::EPS;
+
+/// Which column the queue is keyed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NpKey {
+    /// Size estimate (`store.est`) — SPT.
+    Est,
+    /// True size (`store.size`) — SJF.
+    Size,
+}
+
+/// Nonpreemptive shortest-first scheduler (SPT over estimates, SJF
+/// over true sizes).
+#[derive(Debug)]
+pub struct NonPreemptive {
+    key: NpKey,
+    /// The started job: `(id, true remaining)` — immune to arrivals,
+    /// kills and estimate updates until it completes.
+    serving: Option<(u32, f64)>,
+    /// Waiting jobs keyed by estimate (SPT) or size (SJF); payload:
+    /// true size.  Dense seq index: `remove_by_seq` (the kill path)
+    /// is O(log n).
+    waiting: MinHeap<f64>,
+}
+
+impl NonPreemptive {
+    pub fn new(key: NpKey) -> Self {
+        NonPreemptive { key, serving: None, waiting: MinHeap::with_dense_index() }
+    }
+
+    /// SPT: shortest estimated processing time.
+    pub fn spt() -> Self {
+        Self::new(NpKey::Est)
+    }
+
+    /// SJF: shortest (true-size) job first.
+    pub fn sjf() -> Self {
+        Self::new(NpKey::Size)
+    }
+
+    /// Rebuild with a plain (unindexed) waiting heap — the opt-in
+    /// escape hatch for sweep deployments with no kill path (see
+    /// `PolicySpec::build_sweep`).  Only valid on a fresh instance.
+    pub fn unindexed(self) -> Self {
+        debug_assert_eq!(self.waiting.len(), 0, "unindexed() only on fresh instances");
+        NonPreemptive { waiting: MinHeap::new(), ..self }
+    }
+
+    fn pull_next(&mut self) {
+        if self.serving.is_none() {
+            if let Some((_, id, size)) = self.waiting.pop() {
+                self.serving = Some((id as u32, size));
+            }
+        }
+    }
+}
+
+impl Scheduler for NonPreemptive {
+    fn name(&self) -> &'static str {
+        match self.key {
+            NpKey::Est => "spt",
+            NpKey::Size => "sjf",
+        }
+    }
+
+    fn on_arrival(&mut self, _now: f64, id: JobId, store: &JobStore) {
+        let size = store.size(id);
+        if self.serving.is_none() {
+            // Idle server: start immediately (the queue is necessarily
+            // empty — completions pull the next waiter synchronously).
+            self.serving = Some((id, size));
+        } else {
+            let key = match self.key {
+                NpKey::Est => store.est(id),
+                NpKey::Size => size,
+            };
+            self.waiting.push(key, id as u64, size);
+        }
+    }
+
+    fn next_event(&self, now: f64) -> Option<f64> {
+        self.serving.map(|(_, rem)| now + rem)
+    }
+
+    fn advance(&mut self, now: f64, t: f64, _store: &JobStore, done: &mut Vec<Completion>) {
+        let dt = t - now;
+        if let Some((id, rem)) = self.serving.as_mut() {
+            *rem -= dt;
+            if *rem <= EPS {
+                done.push(Completion { id: *id, time: t });
+                self.serving = None;
+                self.pull_next();
+            }
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.waiting.len() + usize::from(self.serving.is_some())
+    }
+
+    /// Waiting jobs are killable; the started job is not (see the
+    /// module docs) — `false` for it, exactly as for an unknown id.
+    fn cancel(&mut self, _now: f64, id: u32) -> bool {
+        if self.serving.map(|(sid, _)| sid) == Some(id) {
+            return false;
+        }
+        self.waiting.remove_by_seq(id as u64).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{run, Job};
+
+    #[test]
+    fn serves_to_completion_despite_shorter_arrival() {
+        // J0 (size 10) starts at 0; J1 (size 1) at t=1 must wait the
+        // full residue — the defining nonpreemptive behavior.
+        let jobs = vec![Job::exact(0, 0.0, 10.0), Job::exact(1, 1.0, 1.0)];
+        for mk in [NonPreemptive::spt, NonPreemptive::sjf] {
+            let r = run(&mut mk(), &jobs);
+            assert!((r.completion[0] - 10.0).abs() < 1e-9, "{:?}", r.completion);
+            assert!((r.completion[1] - 11.0).abs() < 1e-9, "{:?}", r.completion);
+        }
+    }
+
+    #[test]
+    fn queue_orders_by_key_at_each_completion() {
+        // While J0 runs, J1 (big) then J2 (small) queue; the small one
+        // goes next regardless of arrival order.
+        let jobs =
+            vec![Job::exact(0, 0.0, 4.0), Job::exact(1, 1.0, 5.0), Job::exact(2, 2.0, 1.0)];
+        for mk in [NonPreemptive::spt, NonPreemptive::sjf] {
+            let r = run(&mut mk(), &jobs);
+            assert!((r.completion[2] - 5.0).abs() < 1e-9, "{:?}", r.completion);
+            assert!((r.completion[1] - 10.0).abs() < 1e-9, "{:?}", r.completion);
+        }
+    }
+
+    #[test]
+    fn spt_keys_on_estimates_sjf_on_sizes() {
+        // J1 has a huge size but tiny estimate, J2 the reverse: SPT
+        // believes the estimates, SJF sees through them.
+        let jobs = vec![
+            Job::exact(0, 0.0, 4.0),
+            Job { id: 1, arrival: 1.0, size: 6.0, est: 0.5, weight: 1.0 },
+            Job { id: 2, arrival: 2.0, size: 1.0, est: 9.0, weight: 1.0 },
+        ];
+        let spt = run(&mut NonPreemptive::spt(), &jobs);
+        assert!((spt.completion[1] - 10.0).abs() < 1e-9, "{:?}", spt.completion);
+        assert!((spt.completion[2] - 11.0).abs() < 1e-9, "{:?}", spt.completion);
+        let sjf = run(&mut NonPreemptive::sjf(), &jobs);
+        assert!((sjf.completion[2] - 5.0).abs() < 1e-9, "{:?}", sjf.completion);
+        assert!((sjf.completion[1] - 11.0).abs() < 1e-9, "{:?}", sjf.completion);
+    }
+
+    /// Kill semantics: waiting jobs are killable, the started job is
+    /// rejected, and a rejected kill leaves the run unperturbed.
+    #[test]
+    fn cancel_rejects_started_job_accepts_waiting() {
+        for mk in [NonPreemptive::spt, NonPreemptive::sjf] {
+            let mut s = mk();
+            let mut st = crate::sim::JobStore::new();
+            st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 5.0));
+            st.deliver(&mut s, 0.0, &Job::exact(1, 0.0, 3.0));
+            assert!(!s.cancel(0.0, 0), "{}: started job must reject the kill", s.name());
+            assert!(s.cancel(0.0, 1), "{}: waiting job is killable", s.name());
+            assert!(!s.cancel(0.0, 1), "{}: double kill", s.name());
+            assert_eq!(s.active(), 1, "{}", s.name());
+            let mut done = Vec::new();
+            s.advance(0.0, 5.0, &st, &mut done);
+            assert_eq!(done.len(), 1, "{}: survivor completes", s.name());
+            assert_eq!(done[0].id, 0, "{}", s.name());
+        }
+    }
+
+    /// Estimate updates ride the trait default: a waiting job re-keys
+    /// (cancel + re-admit), the started job reports unsupported.
+    #[test]
+    fn estimate_update_rekeys_waiting_rejects_started() {
+        let mut s = NonPreemptive::spt();
+        let mut st = crate::sim::JobStore::new();
+        st.deliver(&mut s, 0.0, &Job::exact(0, 0.0, 5.0));
+        st.deliver(&mut s, 0.0, &Job { id: 1, arrival: 0.0, size: 3.0, est: 3.0, weight: 1.0 });
+        st.deliver(&mut s, 0.0, &Job { id: 2, arrival: 0.0, size: 4.0, est: 4.0, weight: 1.0 });
+        st.update_est(0, 1.0);
+        assert!(!s.on_estimate_update(0.0, 0, &st), "started job cannot re-key");
+        // Re-key J2 below J1: it must now be served before J1.
+        st.update_est(2, 2.0);
+        assert!(s.on_estimate_update(0.0, 2, &st));
+        let mut done = Vec::new();
+        s.advance(0.0, 5.0, &st, &mut done); // J0 completes
+        s.advance(5.0, 9.0, &st, &mut done); // J2 (size 4) jumped the queue
+        s.advance(9.0, 12.0, &st, &mut done); // J1 last
+        let order: Vec<u32> = done.iter().map(|c| c.id).collect();
+        assert_eq!(order, vec![0, 2, 1]);
+    }
+}

@@ -100,6 +100,40 @@ impl Scheduler for Srpte {
         }
         self.waiting.remove_by_seq(id as u64).is_some()
     }
+
+    /// Native estimate re-key, bitwise-equal to cancel + re-admit (the
+    /// trait default, pinned in `rust/tests/online_est.rs`): the job
+    /// restarts with `est_rem = est` and `true_rem = size`, exactly as
+    /// a fresh arrival would.  The win over the default is the served
+    /// job's fast path — when the refreshed estimate still beats every
+    /// waiter, the heap is left untouched instead of paying the
+    /// default's pop + push round trip (same entry multiset either
+    /// way, and pop order depends only on the `(key, seq)` multiset,
+    /// so the shortcut cannot change any later decision).
+    fn on_estimate_update(&mut self, now: f64, id: JobId, store: &JobStore) -> bool {
+        if self.serving.map(|s| s.id) == Some(id) {
+            let (est, size) = (store.est(id), store.size(id));
+            match self.waiting.peek() {
+                // A waiter wins (ties included — preemption in
+                // `on_arrival` is strict, and waiting keys are always
+                // positive): it takes the server, the refreshed job
+                // re-queues at its new estimate.
+                Some((wkey, _, _)) if est >= wkey => {
+                    let (wkey, wid, wtrue) = self.waiting.pop().unwrap();
+                    self.serving =
+                        Some(Serving { id: wid as u32, est_rem: wkey, true_rem: wtrue });
+                    self.waiting.push(est, id as u64, size);
+                }
+                _ => self.serving = Some(Serving { id, est_rem: est, true_rem: size }),
+            }
+            return true;
+        }
+        if self.waiting.remove_by_seq(id as u64).is_some() {
+            self.on_arrival(now, id, store);
+            return true;
+        }
+        false
+    }
 }
 
 #[cfg(test)]

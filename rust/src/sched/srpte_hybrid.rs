@@ -261,6 +261,48 @@ impl Scheduler for SrpteHybrid {
         }
         self.waiting.remove_by_seq(id as u64).is_some()
     }
+
+    /// Native estimate re-key, bitwise-equal to cancel + re-admit (the
+    /// trait default, pinned in `rust/tests/online_est.rs`).  Three
+    /// homes, like [`SrpteHybrid::cancel`]:
+    ///
+    /// * **slot** — when the refreshed estimate still beats every
+    ///   waiter the slot is re-keyed in place (heap untouched; the
+    ///   default pays a pop + push of the best waiter, which leaves
+    ///   the same entry multiset, and pop order depends only on the
+    ///   `(key, seq)` multiset);
+    /// * **late set** — the outward boundary crossing: a refreshed
+    ///   (positive) estimate means the job is no longer virtually
+    ///   complete, so it leaves `L` and re-enters on the non-late side
+    ///   as a fresh arrival;
+    /// * **waiting** — remove + re-admit re-keys the heap entry.
+    ///
+    /// In every home the job restarts with `true_rem = size` (attained
+    /// service resets), exactly as cancel + re-admit defines.
+    fn on_estimate_update(&mut self, now: f64, id: JobId, store: &JobStore) -> bool {
+        if self.slot.map(|s| s.id) == Some(id) {
+            let (est, size) = (store.est(id), store.size(id));
+            match self.waiting.peek() {
+                Some((wkey, _, _)) if est >= wkey => {
+                    let (wkey, wid, (wtrue, wsize)) = self.waiting.pop().unwrap();
+                    self.slot =
+                        Some(Elig { id: wid as u32, est_rem: wkey, true_rem: wtrue, size: wsize });
+                    self.waiting.push(est, id as u64, (size, size));
+                }
+                _ => self.slot = Some(Elig { id, est_rem: est, true_rem: size, size }),
+            }
+            return true;
+        }
+        if self.late.cancel(id) {
+            self.on_arrival(now, id, store);
+            return true;
+        }
+        if self.waiting.remove_by_seq(id as u64).is_some() {
+            self.on_arrival(now, id, store);
+            return true;
+        }
+        false
+    }
 }
 
 #[cfg(test)]

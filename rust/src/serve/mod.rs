@@ -19,6 +19,12 @@
 //! * **`kill <id>`** — cancel a pending job (the PR 5
 //!   [`crate::sim::Scheduler::cancel`] path).  Acked with
 //!   `killed <id>`, nacked with a distinct `err kill <id>: ...`.
+//! * **`update <id> <est>`** — revise a pending job's size estimate
+//!   (the live face of
+//!   [`crate::sim::Scheduler::on_estimate_update`]): the store ledger
+//!   clamps and records the value, then the scheduler re-keys.  Acked
+//!   with `updated <id> est=<stored>` (the post-clamp value), nacked
+//!   with a distinct `err update <id>: ...` mirroring the kill nacks.
 //! * **`stats`** — write a `stats completed=.. active=.. mst=..
 //!   mean_slowdown=..` snapshot line on demand.
 //! * **`drain`** — stop intake, let everything in flight finish, then
@@ -28,7 +34,8 @@
 //!
 //! Responses: `ok ...` greeting, `done id=.. t=.. sojourn=..
 //! slowdown=..` per completion, `stats ...` (on demand and every
-//! `stats_every` completions), `killed <id>` / `err ...`, and a final
+//! `stats_every` completions), `killed <id>` / `updated <id> est=..` /
+//! `err ...`, and a final
 //! `stats ...` + `bye delivered=.. completed=.. killed=.. aborted=..`
 //! pair when the session ends.  Floats use Rust's shortest-roundtrip
 //! `{}` rendering, so clients can parse them back bit-exactly.

@@ -45,6 +45,9 @@ pub(crate) enum Request {
     Submit(TraceRow),
     /// `kill <id>` — cancel a pending job.
     Kill(u32),
+    /// `update <id> <est>` — revise a pending job's size estimate
+    /// (the live face of [`Scheduler::on_estimate_update`]).
+    Update(u32, f64),
     /// `stats` — write a metrics snapshot line.
     Stats,
     /// `drain` (or end of input) — stop intake, finish what's in
@@ -104,7 +107,7 @@ impl Shared {
 /// The reader loop: one protocol request per input line.
 ///
 /// Control verbs are recognized by the line's first whitespace token
-/// (`kill`, `stats`, `drain`, `shutdown` — data rows are
+/// (`kill`, `update`, `stats`, `drain`, `shutdown` — data rows are
 /// comma-separated, so the token space cannot collide); every other
 /// non-empty line goes through the trace-file [`RowParser`] — same
 /// grammar as on-disk traces, including the optional header, `#`
@@ -130,6 +133,25 @@ pub(crate) fn read_requests<R: BufRead, W: Write>(input: R, shared: &Shared, out
                     let _ = writeln!(out.lock().unwrap(), "err {e}");
                 }
             },
+            Some("update") => {
+                let id = words.next().map(str::parse::<u32>);
+                let est = words.next().map(str::parse::<f64>);
+                match (id, est) {
+                    (Some(Ok(id)), Some(Ok(est))) if words.next().is_none() && est.is_finite() => {
+                        shared.push(Request::Update(id, est))
+                    }
+                    _ => {
+                        let e = Error::protocol_line(
+                            ln as u64,
+                            format!(
+                                "update: expected job id and finite estimate, got `{}`",
+                                raw.trim()
+                            ),
+                        );
+                        let _ = writeln!(out.lock().unwrap(), "err {e}");
+                    }
+                }
+            }
             Some("stats") => shared.push(Request::Stats),
             Some("drain") => {
                 shared.push(Request::Drain);
@@ -249,6 +271,39 @@ impl<'a, W: Write> LiveClock<'a, W> {
             );
         }
     }
+
+    /// The estimate-refinement path, live: write the (clamped) value
+    /// into the store ledger first, then let the scheduler re-key via
+    /// [`Scheduler::on_estimate_update`].  Acked with
+    /// `updated <id> est=<stored>` — `stored` is the post-clamp value,
+    /// so clients learn the effective estimate — and nacked with a
+    /// distinct `err update <id>: ...` mirroring the kill nacks.  A
+    /// scheduler that refuses (default path over an uncancellable job,
+    /// e.g. the serving job of a nonpreemptive discipline) leaves the
+    /// store's estimate revised but its own ordering untouched.
+    fn update(
+        &mut self,
+        now: f64,
+        id: u32,
+        est: f64,
+        sched: &mut dyn Scheduler,
+        store: &mut JobStore,
+    ) {
+        if !store.is_active(id) {
+            let why = if id >= store.next_id() { "unknown id" } else { "not pending" };
+            let _ = writeln!(self.out.lock().unwrap(), "err update {id}: {why}");
+        } else {
+            let stored = store.update_est(id, est);
+            if sched.on_estimate_update(now, id, store) {
+                let _ = writeln!(self.out.lock().unwrap(), "updated {id} est={stored}");
+            } else {
+                let _ = writeln!(
+                    self.out.lock().unwrap(),
+                    "err update {id}: policy does not support estimate updates"
+                );
+            }
+        }
+    }
 }
 
 impl<W: Write> Clock for LiveClock<'_, W> {
@@ -311,6 +366,7 @@ impl<W: Write> Clock for LiveClock<'_, W> {
             };
             match req {
                 Request::Kill(id) => self.kill(now, id, sched, store),
+                Request::Update(id, est) => self.update(now, id, est, sched, store),
                 Request::Stats => {
                     let snap = self.metrics.lock().unwrap().snapshot();
                     let _ = writeln!(self.out.lock().unwrap(), "stats {snap}");
@@ -393,8 +449,11 @@ mod tests {
              0.5,2,1\n\
              kill 3\n\
              stats\n\
+             update 1 7.5\n\
              0.5,oops,1\n\
              kill seven\n\
+             update 1\n\
+             update one 2\n\
              1.5,4,2\n\
              drain\n\
              9.9,9,9\n",
@@ -404,20 +463,29 @@ mod tests {
         read_requests(input, &shared, &out);
 
         let reqs = drained(&shared);
-        assert_eq!(reqs.len(), 5, "header/comment/bad lines produce no requests: {reqs:?}");
+        assert_eq!(reqs.len(), 6, "header/comment/bad lines produce no requests: {reqs:?}");
         assert!(matches!(reqs[0], Request::Submit(TraceRow { arrival, .. }) if arrival == 0.5));
         assert_eq!(reqs[1], Request::Kill(3));
         assert_eq!(reqs[2], Request::Stats);
-        assert!(matches!(reqs[3], Request::Submit(TraceRow { weight, .. }) if weight == 2.0));
+        assert_eq!(reqs[3], Request::Update(1, 7.5));
+        assert!(matches!(reqs[4], Request::Submit(TraceRow { weight, .. }) if weight == 2.0));
         // `drain` stops the reader: the trailing row is never read.
-        assert_eq!(reqs[4], Request::Drain);
+        assert_eq!(reqs[5], Request::Drain);
 
         let errs = String::from_utf8(out.into_inner().unwrap()).unwrap();
         let lines: Vec<&str> = errs.lines().collect();
-        assert_eq!(lines.len(), 2, "one err line per bad input line: {lines:?}");
-        assert!(lines[0].starts_with("err line 6: "), "{}", lines[0]);
+        assert_eq!(lines.len(), 4, "one err line per bad input line: {lines:?}");
+        assert!(lines[0].starts_with("err line 7: "), "{}", lines[0]);
         assert!(lines[0].contains("not a number"), "{}", lines[0]);
-        assert_eq!(lines[1], "err line 7: kill: expected one job id, got `kill seven`");
+        assert_eq!(lines[1], "err line 8: kill: expected one job id, got `kill seven`");
+        assert_eq!(
+            lines[2],
+            "err line 9: update: expected job id and finite estimate, got `update 1`"
+        );
+        assert_eq!(
+            lines[3],
+            "err line 10: update: expected job id and finite estimate, got `update one 2`"
+        );
     }
 
     #[test]
@@ -499,6 +567,40 @@ mod tests {
                 "err kill 7: unknown id",
                 "err kill 0: policy does not support cancellation",
                 "err kill 0: not pending",
+            ]
+        );
+    }
+
+    /// The update nacks mirror the kill nacks reason-for-reason: the
+    /// same NoCancel stand-in keeps the trait-default
+    /// `on_estimate_update` (cancel + re-admit), whose cancel refusal
+    /// surfaces as the "unsupported" nack — while the store's estimate
+    /// ledger is still revised (the contract: store first, scheduler
+    /// second).
+    #[test]
+    fn update_nacks_are_distinct_per_reason() {
+        let shared = Shared::new(8);
+        let out = Mutex::new(Vec::new());
+        let metrics = Mutex::new(OnlineMetrics::new());
+        let mut clock = LiveClock::new(&shared, WallClock::new(1.0), &out, &metrics);
+        let mut sched = NoCancel { pending: Vec::new() };
+        let mut store = JobStore::new();
+        let job = Job { id: 0, arrival: 0.0, size: 1.0, est: 1.0, weight: 1.0 };
+        store.deliver(&mut sched, 0.0, &job);
+
+        clock.update(0.0, 7, 5.0, &mut sched, &mut store); // never submitted
+        clock.update(0.0, 0, 5.0, &mut sched, &mut store); // pending, unsupported
+        assert_eq!(store.est(0), 5.0, "the ledger is revised even on scheduler refusal");
+        store.mark_cancelled(0);
+        clock.update(0.0, 0, 9.0, &mut sched, &mut store); // no longer pending
+
+        let text = String::from_utf8(out.into_inner().unwrap()).unwrap();
+        assert_eq!(
+            text.lines().collect::<Vec<_>>(),
+            vec![
+                "err update 7: unknown id",
+                "err update 0: policy does not support estimate updates",
+                "err update 0: not pending",
             ]
         );
     }

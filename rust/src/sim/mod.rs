@@ -122,6 +122,32 @@ pub trait Scheduler {
         false
     }
 
+    /// The store's estimate for live job `id` changed (online
+    /// refinement, a `psbs serve` `update` request).  The caller has
+    /// already written the new value through [`JobStore::update_est`]
+    /// (clamped ≥ attained service) *before* this call, so the store
+    /// column is the source of truth here.  Returns `true` if the
+    /// discipline re-keyed the job, `false` if it does not support
+    /// estimate updates.
+    ///
+    /// The default is the universally correct PR 5 path: cancel the job
+    /// (O(log n) for the whole zoo) and re-admit it at `now` as a fresh
+    /// arrival, which re-reads the est column.  Disciplines whose keys
+    /// depend on the estimate override this with a cheaper in-place
+    /// re-key **only when bitwise-equal to cancel + re-admit**
+    /// (pinned by `rust/tests/online_est.rs`); est-oblivious
+    /// disciplines (fifo, ps, las, ...) must keep this default — for
+    /// them a no-op would *not* match cancel + re-admit, which legally
+    /// moves the job's queue position / resets its attained ledger.
+    fn on_estimate_update(&mut self, now: f64, id: JobId, store: &JobStore) -> bool {
+        if self.cancel(now, id) {
+            self.on_arrival(now, id, store);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Fault-side accounting for composite schedulers that inject
     /// failures (crashes, retries, speculative copies — see
     /// [`crate::coordinator::faults`]); `None` for ordinary

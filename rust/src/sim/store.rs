@@ -217,6 +217,21 @@ impl JobStore {
         self.est[i] = est;
     }
 
+    /// Online estimate refinement entry point: overwrite one row's
+    /// estimate, clamped so a delivered estimate can never fall below
+    /// the attained service already recorded for that row (attained
+    /// service is a hard lower bound on true size — arXiv:1403.5996).
+    /// Returns the estimate actually stored.  Callers write the store
+    /// *before* notifying the scheduler via
+    /// [`Scheduler::on_estimate_update`], so the discipline re-keys off
+    /// the already-clamped column.
+    pub fn update_est(&mut self, id: JobId, est: f64) -> f64 {
+        let i = self.idx(id);
+        let clamped = est.max(self.attained[i]).max(1e-12);
+        self.est[i] = clamped;
+        clamped
+    }
+
     /// Record a real completion: state `Completed`, attained finalized
     /// to the full size.
     pub fn mark_completed(&mut self, id: JobId) {
@@ -400,5 +415,20 @@ mod tests {
         assert_eq!(st.est(0), 9.0);
         assert_eq!(st.size(0), 2.0);
         assert_eq!(st.weight(0), 3.0);
+    }
+
+    /// `update_est` clamps to attained service (the monotone lower
+    /// bound): before any service it only floors at 1e-12, after
+    /// completion (attained = size) no update can drop below the size.
+    #[test]
+    fn update_est_clamps_to_attained() {
+        let mut st = JobStore::of(&[Job::exact(0, 0.0, 4.0), Job::exact(1, 0.0, 2.0)]);
+        assert_eq!(st.update_est(0, 7.0), 7.0);
+        assert_eq!(st.est(0), 7.0);
+        assert_eq!(st.update_est(0, -3.0), 1e-12, "floor applies with zero attained");
+        st.mark_completed(1); // attained finalized to 2.0
+        assert_eq!(st.update_est(1, 0.5), 2.0, "attained is a hard lower bound");
+        assert_eq!(st.est(1), 2.0);
+        assert_eq!(st.update_est(1, 9.0), 9.0, "raising past attained is free");
     }
 }

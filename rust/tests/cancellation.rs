@@ -36,6 +36,11 @@ fn random_jobs(rng: &mut Rng, size: usize, sigma: f64) -> Vec<Job> {
 /// nor been killed, killed jobs never complete, nothing completes
 /// twice, and `active()` drains to 0.  Returns (completion, killed).
 fn run_with_kills(policy: &str, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>, Vec<bool>) {
+    // Nonpreemptive disciplines additionally reject kills of the job
+    // that has started service (documented in `sched::nonpreemptive`),
+    // so for them `cancel` may refuse where a preemptive policy would
+    // accept — but never the reverse.
+    let nonpreemptive = matches!(policy, "spt" | "sjf");
     let mut s = sched::by_name(policy).unwrap();
     // The driver owns a store like the engine does; rows are kept (no
     // retirement) so assertions can index any id at any time.
@@ -79,10 +84,17 @@ fn run_with_kills(policy: &str, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>
             let arrived = (victim as usize) < next;
             let expect =
                 arrived && completion[victim as usize].is_nan() && !killed[victim as usize];
-            assert_eq!(
-                did, expect,
-                "{policy}: cancel({victim}) at {now}: got {did}, expected {expect}"
-            );
+            if nonpreemptive {
+                assert!(
+                    expect || !did,
+                    "{policy}: cancel({victim}) at {now} succeeded on a dead job"
+                );
+            } else {
+                assert_eq!(
+                    did, expect,
+                    "{policy}: cancel({victim}) at {now}: got {did}, expected {expect}"
+                );
+            }
             if did {
                 killed[victim as usize] = true;
             }
@@ -197,9 +209,19 @@ fn cancel_of_unknown_id_is_noop() {
         let mut st = JobStore::new();
         st.deliver(s.as_mut(), 0.0, &Job::exact(0, 0.0, 1.0));
         assert!(!s.cancel(0.0, 99), "{policy}: unknown id");
-        assert!(s.cancel(0.0, 0), "{policy}: pending job");
-        assert!(!s.cancel(0.0, 0), "{policy}: double cancel must fail");
-        assert_eq!(s.active(), 0, "{policy}");
+        if matches!(*policy, "spt" | "sjf") {
+            // Nonpreemptive: the just-delivered job is already serving
+            // and rejects the kill; a waiting job cancels as usual.
+            assert!(!s.cancel(0.0, 0), "{policy}: started job rejects the kill");
+            st.deliver(s.as_mut(), 0.0, &Job::exact(1, 0.0, 1.0));
+            assert!(s.cancel(0.0, 1), "{policy}: waiting job");
+            assert!(!s.cancel(0.0, 1), "{policy}: double cancel must fail");
+            assert_eq!(s.active(), 1, "{policy}: the serving job remains");
+        } else {
+            assert!(s.cancel(0.0, 0), "{policy}: pending job");
+            assert!(!s.cancel(0.0, 0), "{policy}: double cancel must fail");
+            assert_eq!(s.active(), 0, "{policy}");
+        }
     }
 }
 

@@ -1,0 +1,274 @@
+//! Online estimate refinement — the differential pins.
+//!
+//! Three invariants anchor the `est(model=online,...)` layer:
+//!
+//! 1. **Frozen refinement is the static path, bit for bit.**
+//!    `est(model=online,period=inf,sigma0=S,inner=P)` never refines, so
+//!    it must reproduce `est(model=lognormal,sigma=S,inner=P)` exactly
+//!    — same rng seeding, same draw per arrival, same schedule — for
+//!    every discipline in the zoo.
+//! 2. **Native re-key overrides are the cancel + re-admit default,
+//!    bit for bit.**  `srpte`, the hybrid family and the FSP family
+//!    override [`Scheduler::on_estimate_update`] with O(log n) in-place
+//!    re-keys; forcing the trait-default body (cancel + re-admit)
+//!    through the same refinement + kill churn must give bitwise-equal
+//!    schedules.
+//! 3. **The clamp is monotone.**  `JobStore::update_est` never stores
+//!    an estimate below the row's attained service or the 1e-12 floor.
+
+use psbs::coordinator::faults::FaultStats;
+use psbs::scenario::PolicySpec;
+use psbs::sched::{self, ALL_POLICIES};
+use psbs::sim::{run, Completion, Job, JobId, JobStore, Scheduler};
+use psbs::util::check::{property, Config};
+use psbs::util::rng::Rng;
+use psbs::workload::dists::{Dist, Weibull};
+use psbs::workload::{synthesize, SynthConfig};
+
+fn assert_bitwise(what: &str, want: &[f64], got: &[f64]) {
+    assert_eq!(want.len(), got.len(), "{what}: length mismatch");
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            g.to_bits(),
+            "{what}: job {i} diverged ({w} vs {g})"
+        );
+    }
+}
+
+/// The headline pin: a never-refining online estimator is the static
+/// log-normal wrapper, bitwise, across the whole policy zoo.
+#[test]
+fn online_period_inf_is_bit_identical_to_static_lognormal() {
+    let jobs = synthesize(&SynthConfig::default().with_njobs(1_500), 11);
+    for name in ALL_POLICIES {
+        let frozen = PolicySpec::parse(&format!(
+            "est(model=online,sigma0=1.5,period=inf,inner={name})"
+        ))
+        .unwrap();
+        let static_ = PolicySpec::parse(&format!("est(model=lognormal,sigma=1.5,inner={name})"))
+            .unwrap();
+        let a = run(frozen.build_seeded(3).as_mut(), &jobs).completion;
+        let b = run(static_.build_seeded(3).as_mut(), &jobs).completion;
+        assert_bitwise(&format!("{name}: online(period=inf) vs static"), &b, &a);
+    }
+}
+
+/// Forwarding wrapper that erases a discipline's native
+/// `on_estimate_update` override and substitutes the trait-default
+/// body (cancel + re-admit).  Everything else forwards untouched, so
+/// any schedule difference against the bare discipline isolates the
+/// override.
+struct ForceReadmit(Box<dyn Scheduler>);
+
+impl Scheduler for ForceReadmit {
+    fn name(&self) -> &'static str {
+        "force-readmit"
+    }
+    fn on_arrival(&mut self, now: f64, id: JobId, store: &JobStore) {
+        self.0.on_arrival(now, id, store)
+    }
+    fn on_arrival_batch(&mut self, now: f64, ids: std::ops::Range<JobId>, store: &JobStore) {
+        self.0.on_arrival_batch(now, ids, store)
+    }
+    fn next_event(&self, now: f64) -> Option<f64> {
+        self.0.next_event(now)
+    }
+    fn advance(&mut self, now: f64, t: f64, store: &JobStore, done: &mut Vec<Completion>) {
+        self.0.advance(now, t, store, done)
+    }
+    fn active(&self) -> usize {
+        self.0.active()
+    }
+    fn cancel(&mut self, now: f64, id: u32) -> bool {
+        self.0.cancel(now, id)
+    }
+    fn on_estimate_update(&mut self, now: f64, id: JobId, store: &JobStore) -> bool {
+        // The trait-default body, forced even where the inner
+        // discipline has a native override.
+        if self.0.cancel(now, id) {
+            self.0.on_arrival(now, id, store);
+            true
+        } else {
+            false
+        }
+    }
+    fn fault_stats(&self) -> Option<FaultStats> {
+        self.0.fault_stats()
+    }
+}
+
+fn random_jobs(rng: &mut Rng, size: usize) -> Vec<Job> {
+    let n = 6 + size * 2;
+    let w = Weibull::unit_mean(0.4 + rng.u01());
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|i| {
+            t += rng.u01();
+            let s = w.sample(rng).max(1e-6);
+            // `est` is overwritten by the refiner's initial draw; the
+            // delivered value is irrelevant but kept realistic.
+            Job { id: i, arrival: t, size: s, est: s, weight: 1.0 / (1.0 + rng.below(3) as f64) }
+        })
+        .collect()
+}
+
+/// Drive a scheduler through arrivals + a kill schedule (the
+/// `tests/cancellation.rs` harness shape, policy-agnostic).  Returns
+/// (completion, killed).
+fn drive(s: &mut dyn Scheduler, jobs: &[Job], kills: &[(f64, u32)]) -> (Vec<f64>, Vec<bool>) {
+    let mut store = JobStore::new();
+    let mut completion = vec![f64::NAN; jobs.len()];
+    let mut killed = vec![false; jobs.len()];
+    let mut done = Vec::new();
+    let mut now = 0.0_f64;
+    let mut next = 0usize;
+    let mut next_kill = 0usize;
+    for _ in 0..200_000 {
+        let mut t = f64::INFINITY;
+        for cand in [
+            jobs.get(next).map(|j| j.arrival),
+            s.next_event(now),
+            kills.get(next_kill).map(|&(k, _)| k),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            t = t.min(cand);
+        }
+        if !t.is_finite() {
+            break;
+        }
+        let t = t.max(now);
+        done.clear();
+        s.advance(now, t, &store, &mut done);
+        for c in &done {
+            assert!(completion[c.id as usize].is_nan(), "job {} completed twice", c.id);
+            assert!(!killed[c.id as usize], "killed job {} completed", c.id);
+            completion[c.id as usize] = c.time;
+        }
+        now = t;
+        while next_kill < kills.len() && kills[next_kill].0 <= now {
+            let victim = kills[next_kill].1;
+            if s.cancel(now, victim) {
+                killed[victim as usize] = true;
+            }
+            next_kill += 1;
+        }
+        while next < jobs.len() && jobs[next].arrival <= now {
+            let id = store.push(&jobs[next]);
+            s.on_arrival(now, id, &store);
+            next += 1;
+        }
+        if next == jobs.len() && next_kill == kills.len() && s.next_event(now).is_none() {
+            break;
+        }
+    }
+    assert_eq!(s.active(), 0, "active() must drain to 0");
+    (completion, killed)
+}
+
+/// The override pin: for EVERY policy, refinement delivered through the
+/// native `on_estimate_update` override equals refinement delivered
+/// through the forced cancel + re-admit default — bitwise — under
+/// random kill churn.  (Disciplines without an override compare the
+/// default against itself; the heap-keyed and FSP-family natives are
+/// the real subjects.)
+#[test]
+fn native_overrides_match_forced_readmit_under_churn() {
+    property(
+        "on_estimate_update native vs readmit",
+        Config { cases: 12, max_size: 24, seed: 0x0E57 },
+        |rng, size| {
+            let jobs = random_jobs(rng, size);
+            let span = jobs.last().unwrap().arrival + 4.0;
+            let nkills = rng.below(1 + jobs.len() as u64 / 4) as usize;
+            let mut kills: Vec<(f64, u32)> = (0..nkills)
+                .map(|_| (rng.u01() * span, rng.below(jobs.len() as u64) as u32))
+                .collect();
+            kills.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let period = 0.25 + rng.u01() * 2.0;
+            let sigma0 = 0.5 + rng.u01() * 2.0;
+            let decay = 0.5 + rng.u01() * 0.5;
+            let seed = rng.below(1 << 20);
+            (jobs, kills, period, sigma0, decay, seed)
+        },
+        |(jobs, kills, period, sigma0, decay, seed)| {
+            for name in ALL_POLICIES {
+                let native = &mut psbs::estimate::OnlineRefiner::new(
+                    *sigma0,
+                    *period,
+                    *decay,
+                    sched::by_name(name).unwrap(),
+                    *seed,
+                );
+                let forced = &mut psbs::estimate::OnlineRefiner::new(
+                    *sigma0,
+                    *period,
+                    *decay,
+                    Box::new(ForceReadmit(sched::by_name(name).unwrap())),
+                    *seed,
+                );
+                let (want, killed_a) = drive(forced, jobs, kills);
+                let (got, killed_b) = drive(native, jobs, kills);
+                if killed_a != killed_b {
+                    return Err(format!("{name}: kill sets differ"));
+                }
+                for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                    if w.to_bits() != g.to_bits() {
+                        return Err(format!(
+                            "{name}: job {i} diverged: readmit {w} vs native {g} \
+                             (period={period}, sigma0={sigma0}, decay={decay})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The monotone-clamp property: whatever is written through
+/// `JobStore::update_est`, the stored estimate is exactly
+/// `max(value, attained, 1e-12)` — never below attained service, never
+/// below the floor, and faithfully returned.
+#[test]
+fn update_est_monotone_clamp_property() {
+    property(
+        "update_est clamp",
+        Config { cases: 48, max_size: 32, ..Default::default() },
+        |rng, size| {
+            let n = 2 + size;
+            let sizes: Vec<f64> = (0..n).map(|_| rng.u01() * 10.0).collect();
+            let ops: Vec<(u32, f64)> = (0..n * 3)
+                .map(|_| (rng.below(n as u64) as u32, rng.u01() * 12.0 - 2.0))
+                .collect();
+            let complete: Vec<u32> =
+                (0..n / 2).map(|_| rng.below(n as u64) as u32).collect();
+            (sizes, ops, complete)
+        },
+        |(sizes, ops, complete)| {
+            let mut store = JobStore::new();
+            for (i, &s) in sizes.iter().enumerate() {
+                store.push(&Job::exact(i as u32, 0.0, s.max(1e-9)));
+            }
+            for &id in complete {
+                if store.is_active(id) {
+                    store.mark_completed(id);
+                }
+            }
+            for &(id, v) in ops {
+                let attained = store.attained(id);
+                let ret = store.update_est(id, v);
+                let expect = v.max(attained).max(1e-12);
+                if ret.to_bits() != expect.to_bits() || store.est(id).to_bits() != ret.to_bits() {
+                    return Err(format!(
+                        "update_est({id}, {v}) stored {ret}, expected {expect} \
+                         (attained {attained})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

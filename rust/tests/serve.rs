@@ -3,9 +3,10 @@
 //! of the same rows (completion times, sojourns, and the final metrics
 //! snapshot), across policies and ingress-queue capacities (so
 //! backpressure provably never changes results, only timing).  Plus
-//! the protocol edges: kill acks and distinct nacks, the `stats` verb
-//! and cadence, malformed lines that do not kill the session,
-//! `shutdown` aborts, and a paced (finite-speedup) smoke run.
+//! the protocol edges: kill acks and distinct nacks, the `update`
+//! verb (estimate refinement acks, reordering, and its three nacks),
+//! the `stats` verb and cadence, malformed lines that do not kill the
+//! session, `shutdown` aborts, and a paced (finite-speedup) smoke run.
 
 use psbs::metrics::OnlineMetrics;
 use psbs::sched;
@@ -178,6 +179,73 @@ fn kill_after_completion_nacks_not_pending() {
         ]
     );
     assert_eq!(summary.killed, 0);
+}
+
+/// The `update` verb, live: a revised estimate re-keys srpte's order
+/// (the natively-overridden [`psbs::sim::Scheduler::on_estimate_update`]
+/// path), acked with the stored value, and the reordered schedule
+/// completes at exact times.  Both jobs arrive at t=0; the update is a
+/// protocol-order barrier applied before any service, flipping job 1
+/// (est 200 -> 1) ahead of job 0 (est 100).
+#[test]
+fn update_acks_and_reorders_srpte() {
+    let input = "0,64,1,100\n0,8,1,200\nupdate 1 1\ndrain\n";
+    let (summary, lines) = serve_lines(input, &free_run("srpte"));
+    assert_eq!(
+        lines,
+        vec![
+            "ok psbs serve policy=srpte speedup=inf queue=1024",
+            "updated 1 est=1",
+            "done id=1 t=8 sojourn=8 slowdown=1",
+            "done id=0 t=72 sojourn=72 slowdown=1.125",
+            "stats completed=2 active=0 mst=40 mean_slowdown=1.0625",
+            "bye delivered=2 completed=2 killed=0 aborted=false",
+        ]
+    );
+    assert_eq!((summary.delivered, summary.completed, summary.killed), (2, 2, 0));
+}
+
+/// The update nacks, live and in protocol order: an id never submitted
+/// nacks `unknown id`; a completed job nacks `not pending` (the
+/// barrier applies only after the preceding row was admitted, well
+/// past job 0's completion).
+#[test]
+fn update_unknown_and_completed_nacks() {
+    let input = "0,1\nupdate 7 2\n10,4\nupdate 0 5\ndrain\n";
+    let (summary, lines) = serve_lines(input, &free_run("psbs"));
+    assert_eq!(
+        lines,
+        vec![
+            "ok psbs serve policy=psbs speedup=inf queue=1024",
+            "err update 7: unknown id",
+            "done id=0 t=1 sojourn=1 slowdown=1",
+            "err update 0: not pending",
+            "done id=1 t=14 sojourn=4 slowdown=1",
+            "stats completed=2 active=0 mst=2.5 mean_slowdown=1",
+            "bye delivered=2 completed=2 killed=0 aborted=false",
+        ]
+    );
+    assert_eq!(summary.killed, 0);
+}
+
+/// The third nack: a nonpreemptive discipline's serving job rides the
+/// trait-default cancel + re-admit path, whose cancel refusal surfaces
+/// as the "unsupported" nack — the job still runs to completion.
+#[test]
+fn update_of_a_started_nonpreemptive_job_nacks_unsupported() {
+    let input = "0,8\nupdate 0 2\ndrain\n";
+    let (summary, lines) = serve_lines(input, &free_run("spt"));
+    assert_eq!(
+        lines,
+        vec![
+            "ok psbs serve policy=spt speedup=inf queue=1024",
+            "err update 0: policy does not support estimate updates",
+            "done id=0 t=8 sojourn=8 slowdown=1",
+            "stats completed=1 active=0 mst=8 mean_slowdown=1",
+            "bye delivered=1 completed=1 killed=0 aborted=false",
+        ]
+    );
+    assert_eq!((summary.delivered, summary.completed), (1, 1));
 }
 
 /// The `stats` verb answers on demand (here: one job in flight,

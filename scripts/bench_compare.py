@@ -23,8 +23,11 @@ batching started losing to the loop it replaced).  Everything else — other der
 (e.g. `trace_parse_throughput`, the late-set engine's
 `late_set_*_scaling` population ratios, `fault_replay_overhead` and
 `stream_vs_vec_overhead`, where ~1 is good and the "higher is better"
-framing does not apply, and `trace_cache_speedup`, tracked but not
-gated) and per-sample mean_ns deltas — is reported informationally.
+framing does not apply, `trace_cache_speedup`, and
+`est_update_native_speedup` — the serving-slot win of the native
+`on_estimate_update` override over its cancel+readmit default —
+tracked but not gated) and per-sample mean_ns deltas — is reported
+informationally.
 Exits 1 on any gated regression, 0 otherwise; missing baselines are
 not failures (first run on a branch has nothing to compare against).
 

@@ -134,6 +134,30 @@ class BenchCompareTest(unittest.TestCase):
         self.assertIn("late_set/scan/las/n100000", r.stdout)
         self.assertNotIn("REGRESSED", r.stdout)
 
+    def test_est_update_key_is_informational(self):
+        # est_update_native_speedup (the native on_estimate_update
+        # override's serving-slot win over the cancel+readmit default)
+        # is tracked but never gates, in either direction.
+        base = self.write(
+            "base.json",
+            report(
+                {"est_update_native_speedup": 8.0, "planner_speedup_t4": 2.0},
+                samples=[("est/update/native/srpte_slot/n100000", 30.0)],
+            ),
+        )
+        cur = self.write(
+            "cur.json",
+            report(
+                {"est_update_native_speedup": 1.1, "planner_speedup_t4": 2.0},
+                samples=[("est/update/native/srpte_slot/n100000", 240.0)],
+            ),
+        )
+        r = self.run_compare(base, cur)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("est_update_native_speedup", r.stdout)
+        self.assertIn("est/update/native/srpte_slot/n100000", r.stdout)
+        self.assertNotIn("REGRESSED", r.stdout)
+
     def test_stream_throughput_drop_gates(self):
         # The streaming engine's jobs/s is a first-class gated key: a
         # >20% drop fails the compare like a planner_speedup_* drop.
